@@ -1,0 +1,150 @@
+//! Micro-benchmarks of the request-path hot spots (cargo bench).
+//!
+//! Covers: Bloom encode (on-the-fly vs hash-matrix), Eq. 3 decode,
+//! top-N selection, CBE construction, ECOC/PMI/CCA build, and the raw
+//! PJRT train/predict step of a mid-size artifact. These are the numbers
+//! EXPERIMENTS.md §Perf tracks before/after optimization.
+
+use bloomrec::bloom::{decode_scores, encode_on_the_fly_into, BloomEncoder,
+                      HashMatrix};
+use bloomrec::linalg::knn::top_k;
+use bloomrec::util::benchkit::{sink, Bench};
+use bloomrec::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::default();
+    let mut rng = Rng::new(99);
+
+    // representative serving shape: ML-analog at m/d = 0.2
+    let d = 768;
+    let m = 152;
+    let k = 4;
+    let hm = HashMatrix::random(d, m, k, &mut rng);
+    let items: Vec<u32> = rng.sample_distinct(d, 18)
+        .into_iter().map(|i| i as u32).collect();
+
+    println!("== bloom hot paths (d={d} m={m} k={k} c={}) ==", items.len());
+
+    let enc = BloomEncoder::new(&hm);
+    let mut u = vec![0.0f32; m];
+    bench.run("encode/hash-matrix", items.len(), || {
+        sink(enc.encode_into(&items, &mut u));
+    });
+
+    bench.run("encode/on-the-fly-double-hash", items.len(), || {
+        sink(encode_on_the_fly_into(&items, m, k, 7, &mut u));
+    });
+
+    // decode input: a softmax-ish vector
+    let mut probs: Vec<f32> = (0..m).map(|_| rng.f32() + 1e-3).collect();
+    let total: f32 = probs.iter().sum();
+    probs.iter_mut().for_each(|p| *p /= total);
+
+    bench.run("decode/eq3-scores (d items)", d, || {
+        sink(decode_scores(&probs, &hm));
+    });
+
+    let scores = decode_scores(&probs, &hm);
+    bench.run("decode/top-10 of d", d, || {
+        sink(top_k(&scores, 10));
+    });
+    bench.run("decode/full-argsort of d", d, || {
+        sink(bloomrec::linalg::knn::argsort_desc(&scores));
+    });
+
+    // larger catalogue (MSD-analog full size)
+    let d2 = 2048;
+    let m2 = 408;
+    let hm2 = HashMatrix::random(d2, m2, k, &mut rng);
+    let mut probs2: Vec<f32> = (0..m2).map(|_| rng.f32() + 1e-3).collect();
+    let t2: f32 = probs2.iter().sum();
+    probs2.iter_mut().for_each(|p| *p /= t2);
+    bench.run("decode/eq3-scores d=2048", d2, || {
+        sink(decode_scores(&probs2, &hm2));
+    });
+
+    println!("\n== embedding construction (one-off costs) ==");
+    let quick = Bench::quick();
+    quick.run("build/hash-matrix d=2048", d2, || {
+        let mut r = Rng::new(1);
+        sink(HashMatrix::random(d2, m2, k, &mut r));
+    });
+
+    {
+        use bloomrec::data::{generate, Scale};
+        let ds = generate("bench", "profiles_sparse", 512, 4, 2000, 10, 0,
+                          0, Scale::Small, 5);
+        let x = ds.train_input_csr();
+        quick.run("build/cbe-rewrite d=512", 1, || {
+            let mut r = Rng::new(2);
+            let mut hm = HashMatrix::random(512, 104, 4, &mut r);
+            sink(bloomrec::bloom::cbe_rewrite(&mut hm, &x, &mut r));
+        });
+        quick.run("build/pmi d=512 e=104", 1, || {
+            let mut r = Rng::new(3);
+            sink(bloomrec::baselines::build_pmi(&x, 104, &mut r));
+        });
+        let y = ds.train_target_csr();
+        quick.run("build/cca d=512 e=104", 1, || {
+            let mut r = Rng::new(4);
+            sink(bloomrec::baselines::build_cca(&x, &y, 104, &mut r));
+        });
+        quick.run("build/ecoc d=512 m=104", 1, || {
+            let mut r = Rng::new(5);
+            let cfg = bloomrec::baselines::EcocConfig {
+                iters: 1000, ..Default::default()
+            };
+            sink(bloomrec::baselines::build_ecoc(512, 104, &cfg, &mut r));
+        });
+    }
+
+    // PJRT step benches need artifacts
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("\n== PJRT execute (ml_ff m=152) ==");
+        let rt = bloomrec::runtime::Runtime::new(dir).unwrap();
+        let train_spec = rt.manifest
+            .find("ml", "train", "softmax_ce", 152).unwrap().clone();
+        let predict_spec = rt.manifest
+            .find("ml", "predict", "softmax_ce", 152).unwrap().clone();
+        let exe_t = rt.load(&train_spec.name).unwrap();
+        let exe_p = rt.load(&predict_spec.name).unwrap();
+        let mut r = Rng::new(6);
+        let state = bloomrec::model::ModelState::init(&train_spec, &mut r);
+        let mut x = bloomrec::runtime::HostTensor::zeros(
+            &train_spec.x_shape());
+        let y = bloomrec::runtime::HostTensor::zeros(
+            &train_spec.y_shape());
+        for v in x.data.iter_mut() {
+            if r.bool(0.02) {
+                *v = 1.0;
+            }
+        }
+
+        let batch = train_spec.batch;
+        let mut st = state.clone();
+        bench.run("pjrt/train-step (batch=64)", batch, || {
+            let mut inputs: Vec<&bloomrec::runtime::HostTensor> =
+                Vec::new();
+            inputs.extend(st.params.iter());
+            inputs.extend(st.opt_state.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            let mut out = exe_t.run(&inputs, &[]).unwrap();
+            out.pop();
+            let opt = out.split_off(st.params.len());
+            st.params = out;
+            st.opt_state = opt;
+        });
+
+        bench.run("pjrt/predict-step (batch=64)", batch, || {
+            let mut inputs: Vec<&bloomrec::runtime::HostTensor> =
+                Vec::new();
+            inputs.extend(state.params.iter());
+            inputs.push(&x);
+            sink(exe_p.run(&inputs, &[]).unwrap());
+        });
+    } else {
+        println!("\n(artifacts not built; skipping PJRT step benches)");
+    }
+}

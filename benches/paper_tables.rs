@@ -1,0 +1,55 @@
+//! End-to-end regeneration of every paper table and figure at bench scale
+//! (`cargo bench --bench paper_tables`). Tiny datasets + one seed: the
+//! point is exercising the full pipeline and tracking its wall-clock, not
+//! final numbers — `bloomrec experiment all --scale small` produces those
+//! (recorded in EXPERIMENTS.md).
+//!
+//! Run a subset: cargo bench --bench paper_tables -- fig1 table3
+
+use bloomrec::config::Options;
+use bloomrec::experiments::{self, Ctx};
+use bloomrec::runtime::Runtime;
+use bloomrec::util::Stopwatch;
+
+fn main() {
+    let filter: Vec<String> = std::env::args().skip(1)
+        .filter(|a| !a.starts_with('-')).collect();
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+
+    let mut opts = Options::default();
+    opts.scale = bloomrec::data::Scale::Tiny;
+    opts.seeds = vec![1];
+    opts.out_dir = std::path::PathBuf::from("results/bench");
+    // bench-default: two fast feed-forward tasks keep `cargo bench`
+    // minutes-scale on one core; the full 7-task regeneration is
+    // `bloomrec experiment all` (results recorded in EXPERIMENTS.md)
+    opts.tasks = Some(vec!["ml".into(), "bc".into()]);
+
+    let rt = Runtime::new(&opts.artifact_dir).expect("runtime");
+    let ctx = Ctx::new(&rt, &opts);
+
+    let mut total = 0.0;
+    for &id in experiments::ALL {
+        if !filter.is_empty() && !filter.iter().any(|f| f == id) {
+            continue;
+        }
+        let watch = Stopwatch::new();
+        match experiments::run_experiment(id, &ctx) {
+            Ok(table) => {
+                let secs = watch.elapsed_secs();
+                total += secs;
+                println!("{}", table.render());
+                println!("[bench] {id}: {secs:.1}s end-to-end\n");
+            }
+            Err(e) => {
+                eprintln!("[bench] {id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("[bench] total: {total:.1}s");
+}

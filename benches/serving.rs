@@ -1,0 +1,97 @@
+//! Serving-layer benchmark: throughput/latency across batching policies
+//! and replica counts (cargo bench --bench serving).
+//!
+//! The ablation DESIGN.md calls out: dynamic batching is the L3 knob that
+//! trades p50 latency for throughput; replicas scale until the PJRT CPU
+//! executor saturates the cores.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::data::Scale;
+use bloomrec::runtime::Runtime;
+use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let rt = Arc::new(Runtime::new(dir).expect("runtime"));
+    let cache = DatasetCache::new();
+    let task = rt.manifest.task("ml").expect("ml").clone();
+    let ratio = 0.2;
+    let k = 4;
+    let m = bloomrec::runtime::round_m(task.d, ratio);
+
+    // train a model once (tiny — serving perf doesn't depend on quality)
+    let spec = RunSpec {
+        task: task.name.clone(),
+        method: Method::Be { k },
+        ratio,
+        seed: 1,
+        scale: Scale::Tiny,
+        epochs: Some(1),
+    };
+    let ds = cache.get(&task, Scale::Tiny, 1);
+    let emb: Arc<dyn bloomrec::embedding::Embedding> =
+        coordinator::build_embedding(spec.method, &ds, &task, m, 1)
+            .expect("embedding")
+            .into();
+    let train_spec = rt.manifest
+        .find(&task.name, "train", "softmax_ce", m).unwrap().clone();
+    let predict_spec = rt.manifest
+        .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
+    let (state, _) = coordinator::train(
+        &rt, &train_spec, &ds, emb.as_ref(),
+        &coordinator::TrainConfig { epochs: 1, seed: 1, verbose: false })
+        .expect("train");
+
+    println!("== serving bench: ml m/d={ratio} k={k} ==");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
+             "replicas", "max_batch", "wait_us", "req/s", "p50ms",
+             "p95ms", "fill");
+
+    let n_requests = 4000;
+    for replicas in [1usize, 2, 4] {
+        for (max_batch, wait_us) in
+            [(1usize, 1u64), (16, 500), (64, 2000)]
+        {
+            let server = Server::start(
+                Arc::clone(&rt), predict_spec.clone(), state.clone(),
+                Arc::clone(&emb),
+                ServeConfig {
+                    replicas,
+                    batcher: BatcherConfig {
+                        max_batch,
+                        max_wait: Duration::from_micros(wait_us),
+                    },
+                })
+                .expect("server");
+            let mut pending = Vec::new();
+            for i in 0..n_requests {
+                let ex = &ds.test[i % ds.test.len()];
+                pending.push(server.submit(RecRequest {
+                    user_items: ex.input_items().to_vec(),
+                    top_n: 10,
+                }));
+                if pending.len() >= 512 {
+                    for rx in pending.drain(..256) {
+                        let _ = rx.recv();
+                    }
+                }
+            }
+            for rx in pending {
+                let _ = rx.recv();
+            }
+            let s = server.metrics.snapshot();
+            println!("{:>8} {:>10} {:>10} {:>10.0} {:>9.2} {:>9.2} \
+                      {:>9.2}",
+                     replicas, max_batch, wait_us, s.throughput_rps,
+                     s.p50_ms, s.p95_ms, s.mean_batch_fill);
+            server.shutdown();
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Compression sweep (a single-task slice of Fig. 1 + Fig. 3): score and
+//! time ratios across m/d for one task.
+//!
+//!   cargo run --release --example compression_sweep [-- --tasks bc]
+
+use bloomrec::config::Options;
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    bloomrec::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1)
+        .filter(|a| a != "--").collect();
+    let (opts, _) = Options::parse(&args)?;
+    let task_name = opts
+        .tasks
+        .as_ref()
+        .and_then(|t| t.first().cloned())
+        .unwrap_or_else(|| "bc".to_string());
+
+    let rt = Runtime::new(&opts.artifact_dir)?;
+    let cache = DatasetCache::new();
+    let task = rt.manifest.task(&task_name)?.clone();
+
+    let base = coordinator::run(&rt, &cache, &RunSpec {
+        task: task.name.clone(),
+        method: Method::Baseline,
+        ratio: 1.0,
+        seed: opts.seeds[0],
+        scale: opts.scale,
+        epochs: opts.epochs,
+    })?;
+    println!("task={} d={} baseline score={:.4} train={:.1}s",
+             task.name, task.d, base.score, base.train.train_secs);
+    println!("\n{:>6} {:>6} {:>9} {:>9} {:>12} {:>11}",
+             "m/d", "m", "S_i/S_0", "T_i/T_0", "eval ratio", "weights");
+
+    for &ratio in &task.ratios {
+        let r = coordinator::run(&rt, &cache, &RunSpec {
+            task: task.name.clone(),
+            method: Method::Be { k: 4 },
+            ratio,
+            seed: opts.seeds[0],
+            scale: opts.scale,
+            epochs: opts.epochs,
+        })?;
+        println!("{:>6.2} {:>6} {:>9.3} {:>9.3} {:>12.3} {:>11}",
+                 ratio, r.m,
+                 r.score / base.score.max(1e-12),
+                 r.train.train_secs / base.train.train_secs.max(1e-9),
+                 r.eval.eval_secs / base.eval.eval_secs.max(1e-9),
+                 r.n_weights);
+    }
+    Ok(())
+}

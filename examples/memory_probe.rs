@@ -1,0 +1,69 @@
+//! Memory-regression diagnostic: run thousands of PJRT train steps and
+//! assert RSS stays flat.
+//!
+//!   cargo run --release --example memory_probe
+//!
+//! Guards against the upstream `xla` 0.1.6 bug this repo works around:
+//! the crate's literal-based `execute` leaks every input device buffer
+//! (`buffer.release()` with no free in the C++ shim), which OOM-killed
+//! multi-hour experiment sweeps. `runtime::Executable::run` therefore
+//! uploads Rust-owned buffers and calls `execute_b`; this probe fails
+//! loudly if that regresses.
+
+use bloomrec::model::ModelState;
+use bloomrec::runtime::{HostTensor, Runtime};
+use bloomrec::util::rng::Rng;
+
+fn rss_gb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in s.lines() {
+        if let Some(kb) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = kb.trim().trim_end_matches(" kB").trim()
+                .parse().unwrap_or(0.0);
+            return kb / 1048576.0;
+        }
+    }
+    0.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let spec = rt.manifest
+        .find("ml", "train", "softmax_ce", 152)?.clone();
+    let exe = rt.load(&spec.name)?;
+    let mut rng = Rng::new(1);
+    let mut st = ModelState::init(&spec, &mut rng);
+    let x = HostTensor::zeros(&spec.x_shape());
+    let y = HostTensor::zeros(&spec.y_shape());
+
+    let mut baseline = 0.0;
+    let steps = 2000;
+    for i in 0..steps {
+        let mut inputs: Vec<&HostTensor> = Vec::new();
+        inputs.extend(st.params.iter());
+        inputs.extend(st.opt_state.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        let mut out = exe.run(&inputs, &[])?;
+        out.pop();
+        let opt = out.split_off(st.params.len());
+        st.params = out;
+        st.opt_state = opt;
+        if i == 100 {
+            baseline = rss_gb(); // after warmup/arena growth
+        }
+        if i % 400 == 0 {
+            println!("step {i:5}: rss={:.3} GB", rss_gb());
+        }
+    }
+    let end = rss_gb();
+    println!("end:        rss={end:.3} GB (post-warmup baseline {baseline:.3})");
+    let grown = end - baseline;
+    if grown > 0.2 {
+        anyhow::bail!(
+            "memory leak detected: RSS grew {grown:.2} GB over \
+             {steps} steps — did Executable::run regress to execute()?");
+    }
+    println!("OK: no per-step leak ({grown:+.3} GB over {steps} steps)");
+    Ok(())
+}

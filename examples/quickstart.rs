@@ -1,0 +1,59 @@
+//! Quickstart: the Bloom-embedding public API in five minutes.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Build a hash matrix and encode a sparse item set (paper Eq. 1).
+//! 2. Recover a ranking from an (artificial) softmax output (Eqs. 2-3).
+//! 3. Train a real (tiny) recommender through the AOT artifact and ask it
+//!    for recommendations.
+
+use bloomrec::bloom::{decode_top_n, BloomEncoder, HashMatrix};
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::data::Scale;
+use bloomrec::runtime::Runtime;
+use bloomrec::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. compress a 10,000-item space into 256 bits -----------------
+    let d = 10_000;
+    let (m, k) = (256, 4);
+    let mut rng = Rng::new(42);
+    let hm = HashMatrix::random(d, m, k, &mut rng);
+    println!("hash matrix: {} items -> {m} bits via {k} hashes \
+              ({} KiB of RAM, no GPU memory)",
+             d, hm.bytes() / 1024);
+
+    let enc = BloomEncoder::new(&hm);
+    let user_items: Vec<u32> = vec![7, 4242, 9001];
+    let mut u = vec![0.0f32; m];
+    let active = enc.encode_into(&user_items, &mut u);
+    println!("encoded {:?} -> {active} active bits of {m}", user_items);
+
+    // --- 2. decode a model output back to items ------------------------
+    // fake a "softmax output" that loves exactly those bits
+    let sum: f32 = u.iter().sum();
+    let probs: Vec<f32> =
+        u.iter().map(|&v| (v + 1e-4) / (sum + m as f32 * 1e-4)).collect();
+    let top = decode_top_n(&probs, &hm, 3);
+    println!("decoded top-3: {top:?} (the encoded items, recovered)");
+
+    // --- 3. end-to-end with a real artifact -----------------------------
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let spec = RunSpec {
+        task: "bc".into(),
+        method: Method::Be { k: 4 },
+        ratio: 0.2,
+        seed: 1,
+        scale: Scale::Tiny,
+        epochs: Some(4),
+    };
+    let cache = DatasetCache::new();
+    let res = coordinator::run(&rt, &cache, &spec)?;
+    println!(
+        "\ntrained {} with BE k=4 at m/d=0.2: MAP={:.4} (random={:.4})\n\
+         epoch losses: {:?}",
+        res.task, res.score, res.random_score,
+        res.train.epoch_losses,
+    );
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Serving example: train a compressed recommender, then serve batched
+//! recommendation requests through the dynamic batcher and report
+//! latency/throughput — the deployment scenario the paper's introduction
+//! motivates (limited-hardware serving).
+//!
+//!   cargo run --release --example serve_recommendations
+
+use std::sync::Arc;
+
+use bloomrec::config::Options;
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::runtime::Runtime;
+use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    bloomrec::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1)
+        .filter(|a| a != "--").collect();
+    let (opts, _) = Options::parse(&args)?;
+
+    let rt = Arc::new(Runtime::new(&opts.artifact_dir)?);
+    let cache = DatasetCache::new();
+    let task = rt.manifest.task("ml")?.clone();
+    let (ratio, k) = (0.2, 4);
+    let m = bloomrec::runtime::round_m(task.d, ratio);
+
+    // train
+    println!("training ml recommender (m/d={ratio}, k={k})...");
+    let spec = RunSpec {
+        task: task.name.clone(),
+        method: Method::Be { k },
+        ratio,
+        seed: opts.seeds[0],
+        scale: opts.scale,
+        epochs: opts.epochs,
+    };
+    let ds = cache.get(&task, opts.scale, opts.seeds[0]);
+    let emb: Arc<dyn bloomrec::embedding::Embedding> =
+        coordinator::build_embedding(spec.method, &ds, &task, m, spec.seed)?
+            .into();
+    let train_spec =
+        rt.manifest.find(&task.name, "train", "softmax_ce", m)?.clone();
+    let predict_spec =
+        rt.manifest.find(&task.name, "predict", "softmax_ce", m)?.clone();
+    let (state, report) = coordinator::train(
+        &rt, &train_spec, &ds, emb.as_ref(),
+        &coordinator::TrainConfig {
+            epochs: opts.epochs.unwrap_or(task.epochs),
+            seed: spec.seed,
+            verbose: true,
+        })?;
+    println!("trained: {} steps in {:.1}s", report.steps,
+             report.train_secs);
+
+    // serve under three batching policies to show the trade-off
+    for (label, batcher) in [
+        ("batch=1 (no batching)", BatcherConfig {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_micros(1),
+        }),
+        ("batch<=16, wait<=1ms", BatcherConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_millis(1),
+        }),
+        ("batch<=64, wait<=2ms", BatcherConfig {
+            max_batch: 64,
+            max_wait: std::time::Duration::from_millis(2),
+        }),
+    ] {
+        let server = Server::start(
+            Arc::clone(&rt), predict_spec.clone(), state.clone(),
+            Arc::clone(&emb),
+            ServeConfig { replicas: 2, batcher })?;
+
+        let n_requests = 3000;
+        let mut pending = Vec::new();
+        for i in 0..n_requests {
+            let ex = &ds.test[i % ds.test.len()];
+            pending.push(server.submit(RecRequest {
+                user_items: ex.input_items().to_vec(),
+                top_n: opts.top_n,
+            }));
+            // a little client-side pipelining
+            if pending.len() >= 512 {
+                for rx in pending.drain(..256) {
+                    rx.recv()?;
+                }
+            }
+        }
+        for rx in pending {
+            rx.recv()?;
+        }
+        let s = server.metrics.snapshot();
+        println!(
+            "[{label:22}] {:>6.0} req/s  fill={:.2}  \
+             p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            s.throughput_rps, s.mean_batch_fill, s.p50_ms, s.p95_ms,
+            s.p99_ms
+        );
+        server.shutdown();
+    }
+
+    // show one actual recommendation
+    let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
+                               ServeConfig::default())?;
+    let ex = &ds.test[0];
+    let resp = server.recommend(RecRequest {
+        user_items: ex.input_items().to_vec(),
+        top_n: 5,
+    });
+    println!("\nsample request items={:?}", ex.input_items());
+    println!("recommended: {:?}", resp.items);
+    println!("ground-truth future items: {:?}", ex.target_items());
+    server.shutdown();
+    Ok(())
+}

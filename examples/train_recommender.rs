@@ -1,0 +1,102 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): train the MSD-analog song
+//! recommender with Bloom embeddings through the full three-layer stack —
+//! Rust coordinator -> AOT HLO artifact (JAX model + Pallas fused-dense
+//! kernel) -> PJRT CPU — and compare against the uncompressed baseline.
+//!
+//!   cargo run --release --example train_recommender [-- --scale small]
+//!
+//! Logs the loss curve, reports MAP for BE (m/d = 0.2, k = 4) vs the
+//! m = d baseline, and prints the parameter/memory savings.
+
+use bloomrec::config::Options;
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    bloomrec::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1)
+        .filter(|a| a != "--").collect();
+    let (opts, _) = Options::parse(&args)?;
+
+    let rt = Runtime::new(&opts.artifact_dir)?;
+    let cache = DatasetCache::new();
+    let task = "msd";
+
+    println!("=== end-to-end: {task} recommender ===");
+    println!("scale={:?} seed={}", opts.scale, opts.seeds[0]);
+
+    // --- baseline: m = d ------------------------------------------------
+    let base = coordinator::run(&rt, &cache, &RunSpec {
+        task: task.into(),
+        method: Method::Baseline,
+        ratio: 1.0,
+        seed: opts.seeds[0],
+        scale: opts.scale,
+        epochs: opts.epochs,
+    })?;
+    println!("\n[baseline m=d={}] weights={}  train={:.1}s",
+             base.d, base.n_weights, base.train.train_secs);
+    print_loss_curve("baseline", &base.train.first_epoch_curve);
+    println!("epoch losses: {:?}", rounded(&base.train.epoch_losses));
+    println!("MAP = {:.4}   (random = {:.4})", base.score,
+             base.random_score);
+
+    // --- Bloom embedding at 5x compression -------------------------------
+    let be = coordinator::run(&rt, &cache, &RunSpec {
+        task: task.into(),
+        method: Method::Be { k: 4 },
+        ratio: 0.2,
+        seed: opts.seeds[0],
+        scale: opts.scale,
+        epochs: opts.epochs,
+    })?;
+    println!("\n[BE k=4 m/d=0.2 m={}] weights={}  train={:.1}s",
+             be.m, be.n_weights, be.train.train_secs);
+    print_loss_curve("bloom", &be.train.first_epoch_curve);
+    println!("epoch losses: {:?}", rounded(&be.train.epoch_losses));
+    println!("MAP = {:.4}   (random = {:.4})", be.score, be.random_score);
+
+    // --- the paper's headline numbers ------------------------------------
+    println!("\n=== summary ===");
+    println!("score ratio   S_be/S_0 = {:.3}",
+             be.score / base.score.max(1e-12));
+    println!("param ratio   {:.3} ({} -> {} weights)",
+             be.n_weights as f64 / base.n_weights as f64,
+             base.n_weights, be.n_weights);
+    println!("train ratio   T_be/T_0 = {:.3} ({:.1}s -> {:.1}s)",
+             be.train.train_secs / base.train.train_secs.max(1e-9),
+             base.train.train_secs, be.train.train_secs);
+    println!("eval  ratio   {:.3} ({:.2}s -> {:.2}s; includes decode)",
+             be.eval.eval_secs / base.eval.eval_secs.max(1e-9),
+             base.eval.eval_secs, be.eval.eval_secs);
+    Ok(())
+}
+
+fn rounded(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| (x * 1000.0).round() / 1000.0).collect()
+}
+
+/// ASCII loss curve over the first epoch (bucketed to 60 columns).
+fn print_loss_curve(label: &str, curve: &[f32]) {
+    if curve.is_empty() {
+        return;
+    }
+    let cols = 60usize.min(curve.len());
+    let bucket = curve.len().div_ceil(cols);
+    let buckets: Vec<f32> = curve
+        .chunks(bucket)
+        .map(|c| c.iter().sum::<f32>() / c.len() as f32)
+        .collect();
+    let max = buckets.iter().cloned().fold(f32::MIN, f32::max);
+    let min = buckets.iter().cloned().fold(f32::MAX, f32::min);
+    let rows = 8;
+    println!("first-epoch loss curve ({label}): {min:.3}..{max:.3}");
+    for r in (0..rows).rev() {
+        let lo = min + (max - min) * r as f32 / rows as f32;
+        let line: String = buckets
+            .iter()
+            .map(|&b| if b >= lo { '█' } else { ' ' })
+            .collect();
+        println!("  {line}");
+    }
+}

@@ -1,0 +1,124 @@
+"""AOT pipeline: lower every manifest artifact to HLO *text* + emit
+``artifacts/manifest.json``.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 rust crate binds) rejects (``proto.id() <= INT_MAX``). The
+text parser on the rust side reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/load_hlo/.
+
+Incremental: an artifact is re-lowered only if its config hash changed or
+the file is missing (``--force`` overrides). ``--report`` prints an HLO
+op-count/fusion audit used by the L2 perf pass.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+from collections import Counter
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import manifest as mf
+from . import model as mdl
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_fingerprint(spec_json: dict) -> str:
+    blob = json.dumps(spec_json, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def lower_spec(spec) -> str:
+    fn, example = mdl.make_fn(spec)
+    lowered = jax.jit(fn).lower(*example)
+    return to_hlo_text(lowered)
+
+
+def hlo_report(text: str) -> dict:
+    """Crude HLO audit: op histogram + parameter/byte stats."""
+    ops = Counter()
+    for line in text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([a-z\-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return {
+        "total_ops": sum(ops.values()),
+        "dots": ops.get("dot", 0),
+        "fusions": ops.get("fusion", 0),
+        "while_loops": ops.get("while", 0),
+        "top": ops.most_common(8),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--only", default="", help="regex filter on names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report", action="store_true",
+                    help="print per-artifact HLO audit")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    specs = mf.build_artifacts()
+    if args.only:
+        rx = re.compile(args.only)
+        specs = [s for s in specs if rx.search(s.name)]
+
+    man = mf.manifest_json()
+    stamp_path = os.path.join(args.out, ".stamps.json")
+    stamps = {}
+    if os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            stamps = json.load(f)
+
+    t0 = time.time()
+    built = skipped = 0
+    by_name = {a["name"]: a for a in man["artifacts"]}
+    for i, spec in enumerate(specs):
+        sj = by_name[spec.name]
+        fp = spec_fingerprint(sj)
+        path = os.path.join(args.out, sj["file"])
+        if (not args.force and os.path.exists(path)
+                and stamps.get(spec.name) == fp):
+            skipped += 1
+            continue
+        t1 = time.time()
+        text = lower_spec(spec)
+        with open(path, "w") as f:
+            f.write(text)
+        stamps[spec.name] = fp
+        built += 1
+        msg = f"[{i + 1}/{len(specs)}] {spec.name}: {len(text) // 1024} KiB in {time.time() - t1:.1f}s"
+        if args.report:
+            msg += f"  {hlo_report(text)}"
+        print(msg, flush=True)
+
+    with open(stamp_path, "w") as f:
+        json.dump(stamps, f, indent=0, sort_keys=True)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1, sort_keys=True)
+    print(f"done: {built} built, {skipped} up-to-date, "
+          f"{time.time() - t0:.1f}s total")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels run under ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); TPU efficiency is argued analytically in
+DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf.
+"""
+
+from .bloom_decode import bloom_decode
+from .bloom_encode import bloom_encode
+from .fused_dense import fused_dense
+from . import ref
+
+__all__ = ["bloom_decode", "bloom_encode", "fused_dense", "ref"]

@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+These are the ground truth the Pallas kernels are tested against (pytest +
+hypothesis sweeps in ``python/tests``). They are also what the Rust-side
+CPU implementations of encode/decode must agree with — the wire semantics
+of the paper's Eqs. 1-3.
+"""
+
+import jax.numpy as jnp
+
+LOG_EPS = 1e-12  # numeric floor inside log(); matches rust bloom::decode
+
+
+def bloom_decode_ref(probs: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 likelihood ranking scores.
+
+    probs:  [B, m] float32 — softmax output over the embedded space.
+    hashes: [d, k] int32   — precomputed hash matrix H, entries in [0, m).
+    returns [B, d] float32 — scores[b, i] = sum_j log(probs[b, H[i, j]]).
+
+    Larger is more likely (this is the *negated* Eq. 3, so ranking is
+    descending like Eq. 2 but numerically stable).
+    """
+    gathered = probs[:, hashes]  # [B, d, k]
+    return jnp.sum(jnp.log(gathered + LOG_EPS), axis=-1)
+
+
+def fused_dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    relu: bool = True) -> jnp.ndarray:
+    """Dense layer y = act(x @ w + b). x: [B, n], w: [n, h], b: [h]."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def bloom_encode_ref(idx: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Multi-hot Bloom encoding from pre-hashed positions.
+
+    idx: [B, L] int32 — hash positions per row (already H_j(p_i) flattened
+         over items x hash functions), padded with -1.
+    returns [B, m] float32 — u with u[b, p] = 1 for every valid p.
+    """
+    valid = (idx >= 0)[..., None]  # [B, L, 1]
+    onehot = (idx[..., None] == jnp.arange(m)[None, None, :]) & valid
+    return jnp.clip(jnp.sum(onehot.astype(jnp.float32), axis=1), 0.0, 1.0)

@@ -1,0 +1,315 @@
+"""Manifest: the single source of truth for tasks, artifact grids and shapes.
+
+Consumed twice:
+  * by ``aot.py`` to decide which HLO artifacts to lower and with what
+    static shapes;
+  * by the Rust coordinator (via ``artifacts/manifest.json``) to know the
+    dataset parameters of each task, the tensor layout of each artifact
+    (parameter slots, optimizer slots, minibatch inputs, outputs) and which
+    artifact serves which (task, m/d ratio, loss) combination.
+
+Paper mapping (Serrà & Karatzoglou, RecSys'17, Tables 1-2): each TaskSpec
+is the synthetic analog of one of the paper's 7 tasks, with ``d`` scaled to
+CPU size but the relative density ordering of Table 1 preserved.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+BATCH = 64  # fixed minibatch for every artifact
+SEQ_LEN = 10  # sequence length for recurrent tasks (paper: PTB windows of 10)
+
+
+def round_m(d: int, ratio: float) -> int:
+    """Embedded dimension for a given ratio, rounded to a multiple of 8."""
+    m = int(round(ratio * d / 8.0)) * 8
+    return max(8, min(m, d))
+
+
+@dataclass
+class TaskSpec:
+    """One of the 7 experimental tasks (paper Sec. 4.2)."""
+
+    name: str  # paper's short name (lowercased)
+    generator: str  # rust-side synthetic generator kind
+    d: int  # item/vocab dimensionality (scaled from Table 1)
+    c_median: int  # median active components per instance (Table 1)
+    n_train: int  # training instances at scale=small
+    n_test: int  # test split at scale=small
+    family: str  # model family: ff | gru | lstm | classifier
+    hidden: List[int]  # hidden layer sizes (Table 2)
+    optimizer: str  # adam | sgd | rmsprop | adagrad
+    opt_params: dict
+    metric: str  # map | rr | acc
+    ratios: List[float]  # m/d grid for fig1/fig3
+    test_points: List[float]  # the two m/d test points of Table 3
+    epochs: int = 3  # default training epochs at scale=small
+    n_classes: int = 0  # only for classifier tasks
+
+
+TASKS: List[TaskSpec] = [
+    TaskSpec(
+        name="ml",
+        generator="profiles_dense",
+        d=768,
+        c_median=18,
+        n_train=8000,
+        n_test=1000,
+        family="ff",
+        hidden=[150, 150],
+        optimizer="adam",
+        opt_params={"lr": 0.001, "b1": 0.9, "b2": 0.999},
+        metric="map",
+        ratios=[0.1, 0.2, 0.3, 0.5, 0.75, 1.0],
+        test_points=[0.2, 0.3],
+    ),
+    TaskSpec(
+        name="ptb",
+        generator="markov_text",
+        d=1000,
+        c_median=1,
+        n_train=10000,
+        n_test=1500,
+        family="lstm",
+        hidden=[250],
+        optimizer="sgd",
+        opt_params={"lr": 0.25, "momentum": 0.99, "clip_norm": 1.0},
+        metric="rr",
+        ratios=[0.1, 0.2, 0.3, 0.4, 0.5, 0.75, 1.0],
+        test_points=[0.2, 0.4],
+    ),
+    TaskSpec(
+        name="cade",
+        generator="topic_docs",
+        d=4096,
+        c_median=17,
+        n_train=4100,
+        n_test=1366,
+        family="classifier",
+        hidden=[400, 200, 100],
+        optimizer="rmsprop",
+        opt_params={"lr": 0.0002, "decay": 0.9},
+        metric="acc",
+        ratios=[0.01, 0.03, 0.1, 0.2, 0.3, 0.5, 1.0],
+        test_points=[0.01, 0.03],
+        n_classes=12,
+        epochs=6,
+    ),
+    TaskSpec(
+        name="msd",
+        generator="profiles_sparse",
+        d=2048,
+        c_median=5,
+        n_train=10000,
+        n_test=1200,
+        family="ff",
+        hidden=[300, 300],
+        optimizer="adam",
+        opt_params={"lr": 0.001, "b1": 0.9, "b2": 0.999},
+        metric="map",
+        ratios=[0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0],
+        test_points=[0.05, 0.1],
+    ),
+    TaskSpec(
+        name="amz",
+        generator="profiles_sparse",
+        d=1120,
+        c_median=2,
+        n_train=10000,
+        n_test=1200,
+        family="ff",
+        hidden=[300, 300, 300],
+        optimizer="adam",
+        opt_params={"lr": 0.001, "b1": 0.9, "b2": 0.999},
+        metric="map",
+        ratios=[0.1, 0.2, 0.3, 0.5, 0.75, 1.0],
+        test_points=[0.1, 0.2],
+    ),
+    TaskSpec(
+        name="bc",
+        generator="profiles_sparse",
+        d=1536,
+        c_median=2,
+        n_train=2400,
+        n_test=250,
+        family="ff",
+        hidden=[250, 250],
+        optimizer="adam",
+        opt_params={"lr": 0.001, "b1": 0.9, "b2": 0.999},
+        metric="map",
+        ratios=[0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0],
+        test_points=[0.05, 0.1],
+        epochs=8,
+    ),
+    TaskSpec(
+        name="yc",
+        generator="sessions",
+        d=1024,
+        c_median=1,
+        n_train=10000,
+        n_test=1500,
+        family="gru",
+        hidden=[100],
+        optimizer="adagrad",
+        opt_params={"lr": 0.01},
+        metric="rr",
+        ratios=[0.03, 0.05, 0.1, 0.2, 0.3, 0.5, 1.0],
+        test_points=[0.03, 0.05],
+    ),
+]
+
+
+@dataclass
+class ArtifactSpec:
+    """One AOT-lowered HLO module with fully static shapes."""
+
+    name: str  # unique id; file is artifacts/{name}.hlo.txt
+    task: str
+    family: str  # ff | gru | lstm | classifier
+    kind: str  # train | predict | predict_decode
+    loss: str  # softmax_ce | cosine
+    m_in: int
+    m_out: int
+    hidden: List[int] = field(default_factory=list)
+    batch: int = BATCH
+    seq_len: int = 0  # >0 for recurrent families
+    optimizer: str = ""
+    opt_params: dict = field(default_factory=dict)
+    ratio: float = 0.0  # m/d this artifact realises
+    use_pallas: bool = True  # hidden layers via the fused Pallas kernel
+    # predict_decode only: static decode dims
+    decode_d: int = 0
+    decode_k: int = 0
+
+
+def task_by_name(name: str) -> TaskSpec:
+    for t in TASKS:
+        if t.name == name:
+            return t
+    raise KeyError(name)
+
+
+def _mk(task: TaskSpec, kind: str, loss: str, ratio: float, **kw) -> ArtifactSpec:
+    m = round_m(task.d, ratio)
+    m_in = m
+    # classifier: output layer is the fixed class count, only input embedded
+    m_out = task.n_classes if task.family == "classifier" else m
+    seq = SEQ_LEN if task.family in ("gru", "lstm") else 0
+    tag = {"softmax_ce": "ce", "cosine": "cos"}[loss]
+    name = f"{task.name}_{task.family}_{tag}_m{m}_{kind}"
+    return ArtifactSpec(
+        name=name,
+        task=task.name,
+        family=task.family,
+        kind=kind,
+        loss=loss,
+        m_in=m_in,
+        m_out=m_out,
+        hidden=list(task.hidden),
+        seq_len=seq,
+        optimizer=task.optimizer,
+        opt_params=dict(task.opt_params),
+        ratio=ratio,
+        **kw,
+    )
+
+
+# headline serving configs: fused predict+bloom_decode (static d, k)
+DECODE_FUSED: List[Tuple[str, float, int]] = [
+    ("ml", 0.2, 4),
+    ("msd", 0.1, 4),
+    ("amz", 0.2, 4),
+]
+
+
+def build_artifacts() -> List[ArtifactSpec]:
+    specs: List[ArtifactSpec] = []
+    seen = set()
+
+    def add(spec: ArtifactSpec):
+        if spec.name not in seen:
+            seen.add(spec.name)
+            specs.append(spec)
+
+    for task in TASKS:
+        # BE / HT / ECOC / Baseline(m=d) all train softmax-CE over the
+        # embedded multi-hot: one train+predict pair per grid ratio.
+        for ratio in sorted(set(task.ratios + task.test_points)):
+            add(_mk(task, "train", "softmax_ce", ratio))
+            add(_mk(task, "predict", "softmax_ce", ratio))
+        # PMI / CCA train the same trunk with a cosine loss on dense
+        # targets; only needed at the Table-3 test points.
+        for ratio in task.test_points:
+            add(_mk(task, "train", "cosine", ratio))
+            add(_mk(task, "predict", "cosine", ratio))
+
+    for task_name, ratio, k in DECODE_FUSED:
+        task = task_by_name(task_name)
+        spec = _mk(task, "predict_decode", "softmax_ce", ratio)
+        spec.decode_d = task.d
+        spec.decode_k = k
+        spec.name += f"_d{task.d}_k{k}"
+        add(spec)
+
+    return specs
+
+
+def param_shapes(spec: ArtifactSpec) -> List[Tuple[str, List[int]]]:
+    """Canonical (name, shape) list for the artifact's parameters.
+
+    The order here is the wire order: Rust initialises/feeds parameters as a
+    flat list in exactly this order.
+    """
+    shapes: List[Tuple[str, List[int]]] = []
+    if spec.family == "ff" or spec.family == "classifier":
+        dims = [spec.m_in] + spec.hidden + [spec.m_out]
+        for i in range(len(dims) - 1):
+            shapes.append((f"w{i}", [dims[i], dims[i + 1]]))
+            shapes.append((f"b{i}", [dims[i + 1]]))
+    elif spec.family in ("gru", "lstm"):
+        h = spec.hidden[0]
+        gates = 3 if spec.family == "gru" else 4
+        shapes.append(("wx", [spec.m_in, gates * h]))
+        shapes.append(("wh", [h, gates * h]))
+        shapes.append(("bg", [gates * h]))
+        shapes.append(("wo", [h, spec.m_out]))
+        shapes.append(("bo", [spec.m_out]))
+    else:
+        raise ValueError(spec.family)
+    return shapes
+
+
+def opt_slot_count(optimizer: str) -> int:
+    """Number of per-parameter state tensors, excluding the scalar step."""
+    return {"sgd": 1, "adam": 2, "rmsprop": 1, "adagrad": 1}[optimizer]
+
+
+def spec_to_json(spec: ArtifactSpec) -> dict:
+    d = dict(spec.__dict__)
+    d["params"] = [{"name": n, "shape": s} for n, s in param_shapes(spec)]
+    d["opt_slots"] = opt_slot_count(spec.optimizer) if spec.kind == "train" else 0
+    d["file"] = f"{spec.name}.hlo.txt"
+    return d
+
+
+def task_to_json(task: TaskSpec) -> dict:
+    return dict(task.__dict__)
+
+
+def manifest_json() -> dict:
+    return {
+        "version": 2,
+        "batch": BATCH,
+        "seq_len": SEQ_LEN,
+        "tasks": [task_to_json(t) for t in TASKS],
+        "artifacts": [spec_to_json(s) for s in build_artifacts()],
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    m = manifest_json()
+    print(f"{len(m['artifacts'])} artifacts over {len(m['tasks'])} tasks")
+    for a in m["artifacts"]:
+        print(" ", a["name"])

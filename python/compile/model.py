@@ -1,0 +1,150 @@
+"""L2 façade: build per-artifact train/predict callables from an
+``ArtifactSpec`` with a flat, wire-visible calling convention.
+
+Flat conventions (see DESIGN.md "Artifact/shape strategy"):
+  train:          (p_0..p_{P-1}, s_0..s_{S-1}, x, y) -> (p'..., s'..., loss)
+  predict:        (p_0..p_{P-1}, x)                  -> (out,)
+  predict_decode: (p_0..p_{P-1}, x, H)               -> (scores,)
+
+where P parameters follow ``manifest.param_shapes`` order and
+S = 1 + P * opt_slots (scalar step first).
+
+The losses are exactly the paper's: categorical cross-entropy on a softmax
+over the embedded output (all BE/HT/ECOC runs and the baseline m = d), and
+cosine-proximity for the dense PMI/CCA embedding baselines (Sec. 4.3).
+"""
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .kernels import bloom_decode
+from .manifest import ArtifactSpec, param_shapes
+from .models import ff_forward, rnn_forward
+
+
+def forward(spec: ArtifactSpec, params: List[jnp.ndarray],
+            x: jnp.ndarray) -> jnp.ndarray:
+    """Trunk output (pre-activation logits / dense embedding)."""
+    if spec.family in ("ff", "classifier"):
+        return ff_forward(params, x, use_pallas=spec.use_pallas)
+    if spec.family in ("gru", "lstm"):
+        return rnn_forward(params, x, cell=spec.family)
+    raise ValueError(spec.family)
+
+
+def loss_fn(spec: ArtifactSpec, params: List[jnp.ndarray],
+            x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    out = forward(spec, params, x)
+    if spec.loss == "softmax_ce":
+        # multi-hot target normalised to a distribution (k ones per item)
+        denom = jnp.maximum(jnp.sum(y, axis=-1, keepdims=True), 1.0)
+        target = y / denom
+        logp = jax.nn.log_softmax(out, axis=-1)
+        return -jnp.mean(jnp.sum(target * logp, axis=-1))
+    if spec.loss == "cosine":
+        eps = 1e-8
+        num = jnp.sum(out * y, axis=-1)
+        den = jnp.linalg.norm(out, axis=-1) * jnp.linalg.norm(y, axis=-1)
+        return jnp.mean(1.0 - num / (den + eps))
+    raise ValueError(spec.loss)
+
+
+def predict_out(spec: ArtifactSpec, params: List[jnp.ndarray],
+                x: jnp.ndarray) -> jnp.ndarray:
+    out = forward(spec, params, x)
+    if spec.loss == "softmax_ce":
+        return jax.nn.softmax(out, axis=-1)
+    return out  # dense embedding: decoded by KNN on the Rust side
+
+
+def _x_shape(spec: ArtifactSpec) -> Tuple[int, ...]:
+    if spec.seq_len > 0:
+        return (spec.batch, spec.seq_len, spec.m_in)
+    return (spec.batch, spec.m_in)
+
+
+def n_params(spec: ArtifactSpec) -> int:
+    return len(param_shapes(spec))
+
+
+def _slots(spec: ArtifactSpec) -> int:
+    from .manifest import opt_slot_count
+    return 1 + n_params(spec) * opt_slot_count(spec.optimizer)
+
+
+def make_train_fn(spec: ArtifactSpec) -> Tuple[Callable, List]:
+    """Returns (flat_fn, example_args) ready for jax.jit(...).lower()."""
+    P = n_params(spec)
+    S = _slots(spec)
+    update = optim.make_update(spec.optimizer, spec.opt_params)
+
+    def flat_fn(*args):
+        params = list(args[:P])
+        state = list(args[P:P + S])
+        x, y = args[P + S], args[P + S + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(spec, ps, x, y)
+        )(params)
+        new_params, new_state = update(params, grads, state)
+        return tuple(new_params) + tuple(new_state) + (loss,)
+
+    example = _example_params(spec)
+    example += [jax.ShapeDtypeStruct((), jnp.float32)]  # step scalar
+    from .manifest import opt_slot_count
+    for _ in range(opt_slot_count(spec.optimizer)):
+        example += _example_params(spec)
+    example.append(jax.ShapeDtypeStruct(_x_shape(spec), jnp.float32))
+    example.append(
+        jax.ShapeDtypeStruct((spec.batch, spec.m_out), jnp.float32))
+    return flat_fn, example
+
+
+def make_predict_fn(spec: ArtifactSpec) -> Tuple[Callable, List]:
+    P = n_params(spec)
+
+    def flat_fn(*args):
+        params = list(args[:P])
+        x = args[P]
+        return (predict_out(spec, params, x),)
+
+    example = _example_params(spec)
+    example.append(jax.ShapeDtypeStruct(_x_shape(spec), jnp.float32))
+    return flat_fn, example
+
+
+def make_predict_decode_fn(spec: ArtifactSpec) -> Tuple[Callable, List]:
+    """Predict fused with the Pallas bloom_decode kernel (static d, k)."""
+    P = n_params(spec)
+    assert spec.decode_d > 0 and spec.decode_k > 0
+
+    def flat_fn(*args):
+        params = list(args[:P])
+        x, hashes = args[P], args[P + 1]
+        probs = predict_out(spec, params, x)
+        return (bloom_decode(probs, hashes),)
+
+    example = _example_params(spec)
+    example.append(jax.ShapeDtypeStruct(_x_shape(spec), jnp.float32))
+    example.append(
+        jax.ShapeDtypeStruct((spec.decode_d, spec.decode_k), jnp.int32))
+    return flat_fn, example
+
+
+def make_fn(spec: ArtifactSpec) -> Tuple[Callable, List]:
+    if spec.kind == "train":
+        return make_train_fn(spec)
+    if spec.kind == "predict":
+        return make_predict_fn(spec)
+    if spec.kind == "predict_decode":
+        return make_predict_decode_fn(spec)
+    raise ValueError(spec.kind)
+
+
+def _example_params(spec: ArtifactSpec) -> List:
+    return [
+        jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+        for _, shape in param_shapes(spec)
+    ]

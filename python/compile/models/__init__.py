@@ -1,0 +1,6 @@
+"""L2 model zoo: the paper's Table-2 architectures in plain JAX."""
+
+from .ff import ff_forward
+from .rnn import rnn_forward
+
+__all__ = ["ff_forward", "rnn_forward"]

@@ -1,0 +1,35 @@
+"""Feed-forward (autoencoder-like) recommender trunk (paper Sec. 4.2).
+
+"3-layer feed-forward network with 150 ReLU units in the hidden layers"
+is read as 3 weight layers / 2 hidden activations (the Wu et al. [49]
+lineage); AMZ's "4-layer" has 3 hidden activations, CADE's pyramid is
+400-200-100-12. Parameters arrive as the flat wire-order list defined by
+``manifest.param_shapes``: [w0, b0, w1, b1, ...].
+
+Hidden layers run through the fused Pallas dense kernel when
+``use_pallas`` (the L1 hot path lowers into the same HLO artifact); the
+final projection stays a plain matmul so XLA may fuse it with the loss.
+"""
+
+from typing import List
+
+import jax.numpy as jnp
+
+from ..kernels.fused_dense import fused_dense_ad
+
+
+def ff_forward(params: List[jnp.ndarray], x: jnp.ndarray,
+               use_pallas: bool = True) -> jnp.ndarray:
+    """Returns pre-activation logits [B, m_out]."""
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        last = i == n_layers - 1
+        if use_pallas and not last:
+            h = fused_dense_ad(h, w, b, True)
+        else:
+            h = h @ w + b
+            if not last:
+                h = jnp.maximum(h, 0.0)
+    return h

@@ -1,0 +1,73 @@
+"""Recurrent trunks: GRU (YC session task) and LSTM (PTB task).
+
+Paper Sec. 4.2: YC uses a GRU with inner dimensionality 100 trained with
+Adagrad (the Hidasi et al. session-rec setup); PTB uses an LSTM with inner
+dimensionality 250 trained with SGD + momentum + gradient clipping (the
+Graves setup). Inputs are sequences of Bloom-encoded one-hot vectors
+[B, T, m_in]; the prediction target is the next item, read from the last
+hidden state.
+
+Wire-order parameters (``manifest.param_shapes``):
+    wx [m_in, G*h], wh [h, G*h], bg [G*h], wo [h, m_out], bo [m_out]
+with G = 3 (GRU: r, z, n) or 4 (LSTM: i, f, g, o).
+
+``jax.lax.scan`` (not unrolling) keeps the lowered HLO size and compile
+time independent of T — an L2 perf requirement in DESIGN.md §Perf.
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _gru_cell(h, xg, hg, hidden):
+    r = jax.nn.sigmoid(xg[:, :hidden] + hg[:, :hidden])
+    z = jax.nn.sigmoid(xg[:, hidden:2 * hidden] + hg[:, hidden:2 * hidden])
+    n = jnp.tanh(xg[:, 2 * hidden:] + r * hg[:, 2 * hidden:])
+    return (1.0 - z) * h + z * n
+
+
+def _lstm_cell(h, c, xg, hg, hidden):
+    g = xg + hg
+    i = jax.nn.sigmoid(g[:, :hidden])
+    f = jax.nn.sigmoid(g[:, hidden:2 * hidden] + 1.0)  # forget-gate bias +1
+    gg = jnp.tanh(g[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(g[:, 3 * hidden:])
+    c_new = f * c + i * gg
+    return o * jnp.tanh(c_new), c_new
+
+
+def rnn_forward(params: List[jnp.ndarray], x: jnp.ndarray,
+                cell: str) -> jnp.ndarray:
+    """x [B, T, m_in] -> logits [B, m_out]; cell in {"gru", "lstm"}."""
+    wx, wh, bg, wo, bo = params
+    bsz = x.shape[0]
+    gates = 3 if cell == "gru" else 4
+    hidden = wh.shape[0]
+    assert wx.shape[1] == gates * hidden
+
+    xs = jnp.swapaxes(x, 0, 1)  # [T, B, m_in]
+    h0 = jnp.zeros((bsz, hidden), jnp.float32)
+
+    if cell == "gru":
+        def step(h, x_t):
+            xg = x_t @ wx + bg
+            hg = h @ wh
+            h_new = _gru_cell(h, xg, hg, hidden)
+            return h_new, None
+
+        h_last, _ = jax.lax.scan(step, h0, xs)
+    else:
+        c0 = jnp.zeros((bsz, hidden), jnp.float32)
+
+        def step(carry, x_t):
+            h, c = carry
+            xg = x_t @ wx + bg
+            hg = h @ wh
+            h_new, c_new = _lstm_cell(h, c, xg, hg, hidden)
+            return (h_new, c_new), None
+
+        (h_last, _), _ = jax.lax.scan(step, (h0, c0), xs)
+
+    return h_last @ wo + bo

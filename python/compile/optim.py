@@ -1,0 +1,128 @@
+"""Own mini-optimizer module (no optax in this image).
+
+Covers exactly the four optimizers of the paper's Table 2:
+  * Adam (ML/MSD/AMZ/BC tasks)             [Kingma & Ba 2015]
+  * SGD + momentum + gradient-norm clipping (PTB)  [Graves 2013 setup]
+  * RMSprop with exponential decay (CADE)   [Tieleman & Hinton 2012]
+  * Adagrad (YC)                            [Duchi et al. 2011]
+
+State layout is wire-visible (the Rust coordinator allocates and threads it
+through the AOT train-step artifact), so it is deliberately flat:
+
+    state = [step_scalar] + slot0_per_param... (+ slot1_per_param...)
+
+``step_scalar`` is a single f32 (bias-correction counter for Adam; unused
+but still carried by the others so every family has the same layout rule).
+Slot counts per optimizer are exported via ``manifest.opt_slot_count``.
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = List[jnp.ndarray]
+State = List[jnp.ndarray]  # [step] + slots
+UpdateFn = Callable[[Params, Params, State], Tuple[Params, State]]
+
+
+def _global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in tree) + 1e-12)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Params:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return [g * scale for g in grads]
+
+
+def init_state(optimizer: str, params: Params) -> State:
+    """Zero-initialised optimizer state in wire order."""
+    n_slots = {"sgd": 1, "adam": 2, "rmsprop": 1, "adagrad": 1}[optimizer]
+    state: State = [jnp.zeros((), jnp.float32)]
+    for _ in range(n_slots):
+        state.extend(jnp.zeros_like(p) for p in params)
+    return state
+
+
+def make_update(optimizer: str, opt_params: Dict) -> UpdateFn:
+    if optimizer == "sgd":
+        return _make_sgd(**opt_params)
+    if optimizer == "adam":
+        return _make_adam(**opt_params)
+    if optimizer == "rmsprop":
+        return _make_rmsprop(**opt_params)
+    if optimizer == "adagrad":
+        return _make_adagrad(**opt_params)
+    raise ValueError(f"unknown optimizer {optimizer!r}")
+
+
+def _split(state: State, n_params: int, n_slots: int):
+    step = state[0]
+    slots = []
+    for s in range(n_slots):
+        lo = 1 + s * n_params
+        slots.append(state[lo:lo + n_params])
+    return step, slots
+
+
+def _make_sgd(lr: float, momentum: float = 0.0,
+              clip_norm: float = 0.0) -> UpdateFn:
+    def update(params, grads, state):
+        n = len(params)
+        step, (vel,) = _split(state, n, 1)
+        if clip_norm > 0:
+            grads = clip_by_global_norm(grads, clip_norm)
+        new_vel = [momentum * v + g for v, g in zip(vel, grads)]
+        new_params = [p - lr * v for p, v in zip(params, new_vel)]
+        return new_params, [step + 1.0] + new_vel
+
+    return update
+
+
+def _make_adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+               eps: float = 1e-8) -> UpdateFn:
+    def update(params, grads, state):
+        n = len(params)
+        step, (mu, nu) = _split(state, n, 2)
+        t = step + 1.0
+        new_mu = [b1 * m + (1 - b1) * g for m, g in zip(mu, grads)]
+        new_nu = [b2 * v + (1 - b2) * g * g for v, g in zip(nu, grads)]
+        # bias-corrected step size (scalar, folds into one op)
+        alpha = lr * jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+        new_params = [
+            p - alpha * m / (jnp.sqrt(v) + eps)
+            for p, m, v in zip(params, new_mu, new_nu)
+        ]
+        return new_params, [t] + new_mu + new_nu
+
+    return update
+
+
+def _make_rmsprop(lr: float, decay: float = 0.9,
+                  eps: float = 1e-8) -> UpdateFn:
+    def update(params, grads, state):
+        n = len(params)
+        step, (avg,) = _split(state, n, 1)
+        new_avg = [decay * a + (1 - decay) * g * g for a, g in zip(avg, grads)]
+        new_params = [
+            p - lr * g / (jnp.sqrt(a) + eps)
+            for p, g, a in zip(params, grads, new_avg)
+        ]
+        return new_params, [step + 1.0] + new_avg
+
+    return update
+
+
+def _make_adagrad(lr: float, eps: float = 1e-8) -> UpdateFn:
+    def update(params, grads, state):
+        n = len(params)
+        step, (acc,) = _split(state, n, 1)
+        new_acc = [a + g * g for a, g in zip(acc, grads)]
+        new_params = [
+            p - lr * g / (jnp.sqrt(a) + eps)
+            for p, g, a in zip(params, grads, new_acc)
+        ]
+        return new_params, [step + 1.0] + new_acc
+
+    return update

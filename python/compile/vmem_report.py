@@ -1,0 +1,94 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization *estimates* for the
+Pallas kernels across the manifest configs (DESIGN.md §Perf).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+optimization signal for kernel structure is analytic: does each program
+instance fit VMEM (~16 MiB/core budget), and what fraction of its work
+lands on the 128x128 MXU vs the VPU?
+
+Usage (from python/):  python -m compile.vmem_report
+"""
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core (v4-ish)
+MXU = 128  # systolic array edge
+
+import sys
+
+from . import manifest as mf
+from . import kernels as _k  # noqa: F401 — ensures submodules are loaded
+
+# the package re-exports the kernel *functions* under the module names,
+# so fetch the actual submodules for their block-size constants
+bd = sys.modules["compile.kernels.bloom_decode"]
+be = sys.modules["compile.kernels.bloom_encode"]
+fd = sys.modules["compile.kernels.fused_dense"]
+
+
+def fused_dense_report(bsz, n, h):
+    bb = fd._largest_divisor(bsz, fd.DEFAULT_BLOCK_B)
+    bh = fd._largest_divisor(h, fd.DEFAULT_BLOCK_H)
+    bn = fd._largest_divisor(n, fd.DEFAULT_BLOCK_N)
+    vmem = 4 * (bb * bn + bn * bh + bh + bb * bh)  # x, w, b, acc tiles
+    # MXU tiles are 128x128: utilization ~ how full the (bb, bh, bn)
+    # tile is relative to MXU-aligned padding
+    util = (min(bb, MXU) / MXU if bb < MXU else 1.0) \
+        * (bh / ((bh + MXU - 1) // MXU * MXU)) \
+        * (bn / ((bn + MXU - 1) // MXU * MXU))
+    flops = 2 * bsz * n * h
+    return dict(block=(bb, bn, bh), vmem=vmem, mxu_util=util, flops=flops)
+
+
+def bloom_decode_report(bsz, m, d, k):
+    bb = min(bd.DEFAULT_BLOCK_B, bsz)
+    bdd = min(bd.DEFAULT_BLOCK_D, d)
+    while d % bdd:
+        bdd //= 2
+    vmem = 4 * (bb * m + bdd * k + bb * bdd) + 4 * bb * bdd * k
+    return dict(block=(bb, bdd), vmem=vmem,
+                gathers=bsz * d * k, mxu_util=0.0)  # VPU-only kernel
+
+
+def bloom_encode_report(bsz, l, m):
+    bb = be._largest_divisor(bsz, be.DEFAULT_BLOCK_B)
+    bm = be._largest_divisor(m, be.DEFAULT_BLOCK_M)
+    vmem = 4 * (bb * l) + 1 * (bb * l * bm) + 4 * (bb * bm)
+    return dict(block=(bb, bm), vmem=vmem, mxu_util=0.0)
+
+
+def main():
+    print(f"VMEM budget/core: {VMEM_BUDGET // (1 << 20)} MiB\n")
+    print("== fused_dense (per hidden layer, worst configs) ==")
+    rows = []
+    for t in mf.TASKS:
+        m_max = t.d  # baseline m = d is the worst case
+        h = max(t.hidden)
+        rows.append((t.name, mf.BATCH, m_max, h))
+    for name, bsz, n, h in rows:
+        r = fused_dense_report(bsz, n, h)
+        ok = "OK " if r["vmem"] <= VMEM_BUDGET else "OVER"
+        print(f"  {name:5} x[{bsz},{n}] w[{n},{h}]: blocks={r['block']} "
+              f"vmem={r['vmem'] / 1024:.0f} KiB [{ok}] "
+              f"mxu_util~{r['mxu_util']:.2f}")
+
+    print("\n== bloom_decode (fused predict_decode artifacts) ==")
+    for task_name, ratio, k in mf.DECODE_FUSED:
+        t = mf.task_by_name(task_name)
+        m = mf.round_m(t.d, ratio)
+        r = bloom_decode_report(mf.BATCH, m, t.d, k)
+        ok = "OK " if r["vmem"] <= VMEM_BUDGET else "OVER"
+        print(f"  {task_name:5} probs[{mf.BATCH},{m}] H[{t.d},{k}]: "
+              f"blocks={r['block']} vmem={r['vmem'] / 1024:.0f} KiB [{ok}] "
+              f"({r['gathers']} gathers, VPU-bound)")
+
+    print("\n== bloom_encode (serving path, L = c_max * k) ==")
+    for t in mf.TASKS:
+        l = 4 * max(t.c_median, 1) * 4  # generous c_max x k
+        m = mf.round_m(t.d, 0.2)
+        r = bloom_encode_report(mf.BATCH, l, m)
+        ok = "OK " if r["vmem"] <= VMEM_BUDGET else "OVER"
+        print(f"  {t.name:5} idx[{mf.BATCH},{l}] m={m}: "
+              f"blocks={r['block']} vmem={r['vmem'] / 1024:.0f} KiB [{ok}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""AOT pipeline tests: HLO text emission, manifest integrity, reports."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import manifest as mf
+
+
+def test_manifest_json_schema():
+    man = mf.manifest_json()
+    assert man["batch"] == mf.BATCH
+    assert len(man["tasks"]) == 7
+    names = {t["name"] for t in man["tasks"]}
+    assert names == {"ml", "ptb", "cade", "msd", "amz", "bc", "yc"}
+    for a in man["artifacts"]:
+        assert a["kind"] in ("train", "predict", "predict_decode")
+        assert a["file"].endswith(".hlo.txt")
+        assert a["params"], a["name"]
+        if a["kind"] == "train":
+            assert a["opt_slots"] >= 1
+        else:
+            assert a["opt_slots"] == 0
+
+
+def test_every_task_has_test_point_artifacts():
+    man = mf.manifest_json()
+    by_task = {}
+    for a in man["artifacts"]:
+        by_task.setdefault(a["task"], []).append(a)
+    for t in man["tasks"]:
+        arts = by_task[t["name"]]
+        for tp in t["test_points"]:
+            m = mf.round_m(t["d"], tp)
+            ce_train = [a for a in arts if a["m_in"] == m
+                        and a["kind"] == "train" and a["loss"] == "softmax_ce"]
+            cos_train = [a for a in arts if a["m_in"] == m
+                         and a["kind"] == "train" and a["loss"] == "cosine"]
+            assert ce_train, (t["name"], tp)
+            assert cos_train, (t["name"], tp)
+
+
+def test_lower_tiny_spec_to_hlo_text():
+    spec = mf.ArtifactSpec(
+        name="t", task="t", family="ff", kind="train", loss="softmax_ce",
+        m_in=16, m_out=16, hidden=[8], batch=4,
+        optimizer="adam", opt_params={"lr": 0.01}, ratio=1.0)
+    text = aot.lower_spec(spec)
+    assert "ENTRY" in text and "HloModule" in text
+    # the train artifact must thread params + state through:
+    # 4 params + (1 + 4*2) state + x + y = 15 inputs.
+    # Count only the ENTRY computation (fused subcomputations also
+    # declare parameters).
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == 15
+
+
+def test_hlo_report_counts_ops():
+    spec = mf.ArtifactSpec(
+        name="t2", task="t", family="ff", kind="predict", loss="softmax_ce",
+        m_in=16, m_out=16, hidden=[8], batch=4,
+        optimizer="adam", opt_params={"lr": 0.01}, ratio=1.0)
+    rep = aot.hlo_report(aot.lower_spec(spec))
+    assert rep["total_ops"] > 5
+    assert rep["dots"] >= 1  # at least the two dense layers
+
+
+def test_fingerprint_stable_and_sensitive():
+    man = mf.manifest_json()
+    a = man["artifacts"][0]
+    f1 = aot.spec_fingerprint(a)
+    f2 = aot.spec_fingerprint(json.loads(json.dumps(a)))
+    assert f1 == f2
+    b = dict(a)
+    b["m_in"] = a["m_in"] + 8
+    assert aot.spec_fingerprint(b) != f1
+
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not built")
+def test_built_artifacts_match_manifest():
+    with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    missing = [a["name"] for a in man["artifacts"]
+               if not os.path.exists(os.path.join(ARTIFACT_DIR, a["file"]))]
+    assert not missing, f"{len(missing)} artifacts missing: {missing[:5]}"

@@ -1,0 +1,92 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/value space.
+
+Complements the parametrised cases in test_kernel.py with randomised
+shapes (including awkward non-power-of-two sizes) and adversarial values
+(zeros, saturated probabilities, duplicate hash positions).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bloom_decode, bloom_encode, fused_dense, ref
+
+COMMON = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def decode_case(draw):
+    b = draw(st.integers(1, 16))
+    m = draw(st.integers(2, 128))
+    d = draw(st.integers(1, 300))
+    k = draw(st.integers(1, 10))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, m, d, k, seed
+
+
+@given(decode_case())
+@settings(**COMMON)
+def test_decode_sweep(case):
+    b, m, d, k, seed = case
+    rng = np.random.default_rng(seed)
+    probs = rng.dirichlet(np.ones(m), size=b).astype(np.float32)
+    # adversarial: zero out a random slice of the probability mass
+    if m > 4:
+        probs[:, rng.integers(0, m)] = 0.0
+    hashes = rng.integers(0, m, size=(d, k)).astype(np.int32)
+    got = np.asarray(bloom_decode(jnp.asarray(probs), jnp.asarray(hashes)))
+    want = np.asarray(
+        ref.bloom_decode_ref(jnp.asarray(probs), jnp.asarray(hashes)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def dense_case(draw):
+    b = draw(st.integers(1, 32))
+    n = draw(st.integers(1, 200))
+    h = draw(st.integers(1, 200))
+    relu = draw(st.booleans())
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, n, h, relu, seed
+
+
+@given(dense_case())
+@settings(**COMMON)
+def test_dense_sweep(case):
+    b, n, h, relu, seed = case
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, n)).astype(np.float32)
+    w = (rng.normal(size=(n, h)) * 0.1).astype(np.float32)
+    bias = rng.normal(size=(h,)).astype(np.float32)
+    got = np.asarray(
+        fused_dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                    relu=relu))
+    want = np.asarray(
+        ref.fused_dense_ref(jnp.asarray(x), jnp.asarray(w),
+                            jnp.asarray(bias), relu=relu))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@st.composite
+def encode_case(draw):
+    b = draw(st.integers(1, 16))
+    l = draw(st.integers(1, 64))
+    m = draw(st.integers(1, 128))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, l, m, seed
+
+
+@given(encode_case())
+@settings(**COMMON)
+def test_encode_sweep(case):
+    b, l, m, seed = case
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(-1, m, size=(b, l)).astype(np.int32)
+    got = np.asarray(bloom_encode(jnp.asarray(idx), m))
+    want = np.asarray(ref.bloom_encode_ref(jnp.asarray(idx), m))
+    np.testing.assert_allclose(got, want)
+    # invariant: output is binary and covers exactly the valid positions
+    assert set(np.unique(got)) <= {0.0, 1.0}
+    for bi in range(b):
+        valid = set(int(p) for p in idx[bi] if p >= 0)
+        assert set(np.flatnonzero(got[bi])) == valid

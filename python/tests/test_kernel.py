@@ -1,0 +1,122 @@
+"""Kernel vs pure-jnp oracle — the CORE correctness signal for L1."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import bloom_decode, bloom_encode, fused_dense, ref
+from compile.kernels.fused_dense import fused_dense_ad
+
+RNG = np.random.default_rng(1234)
+
+
+def _probs(b, m):
+    return jnp.asarray(RNG.dirichlet(np.ones(m), size=b), jnp.float32)
+
+
+class TestBloomDecode:
+    @pytest.mark.parametrize("b,m,d,k", [
+        (1, 8, 16, 1),
+        (4, 32, 100, 2),
+        (16, 96, 300, 4),
+        (64, 128, 512, 5),
+        (64, 256, 1000, 10),
+        (3, 40, 77, 3),  # ragged: forces block shrinking
+    ])
+    def test_matches_ref(self, b, m, d, k):
+        probs = _probs(b, m)
+        hashes = jnp.asarray(RNG.integers(0, m, size=(d, k)), jnp.int32)
+        got = bloom_decode(probs, hashes)
+        want = ref.bloom_decode_ref(probs, hashes)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_scores_are_log_products(self):
+        # Eq. 2 <-> Eq. 3: exp(score) equals the product of probed probs.
+        probs = _probs(2, 16)
+        hashes = jnp.asarray(RNG.integers(0, 16, size=(10, 3)), jnp.int32)
+        scores = np.asarray(bloom_decode(probs, hashes))
+        p = np.asarray(probs)
+        h = np.asarray(hashes)
+        for bi in range(2):
+            for i in range(10):
+                want = np.sum(np.log(p[bi, h[i]] + ref.LOG_EPS))
+                assert scores[bi, i] == pytest.approx(want, rel=1e-5)
+
+    def test_zero_prob_vetoes_item(self):
+        # Bloom guarantee: a zeroed position means "definitely not in set".
+        m, d, k = 16, 32, 3
+        probs = np.full((1, m), 1.0 / m, np.float32)
+        probs[0, 5] = 0.0
+        hashes = RNG.integers(0, m, size=(d, k)).astype(np.int32)
+        hashes[7, 1] = 5  # item 7 probes the zeroed bit
+        scores = np.asarray(
+            bloom_decode(jnp.asarray(probs), jnp.asarray(hashes)))
+        assert scores[0, 7] == np.min(scores)
+
+    def test_ranking_invariant_under_block_size(self):
+        probs = _probs(8, 64)
+        hashes = jnp.asarray(RNG.integers(0, 64, size=(200, 4)), jnp.int32)
+        a = bloom_decode(probs, hashes, block_b=8, block_d=8)
+        b = bloom_decode(probs, hashes, block_b=2, block_d=200)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+class TestFusedDense:
+    @pytest.mark.parametrize("b,n,h", [
+        (1, 8, 8),
+        (16, 200, 150),
+        (64, 512, 128),
+        (64, 768, 300),
+        (5, 33, 13),  # ragged
+    ])
+    @pytest.mark.parametrize("relu", [True, False])
+    def test_matches_ref(self, b, n, h, relu):
+        x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(n, h)) * 0.1, jnp.float32)
+        bias = jnp.asarray(RNG.normal(size=(h,)), jnp.float32)
+        got = fused_dense(x, w, bias, relu=relu)
+        want = ref.fused_dense_ref(x, w, bias, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_custom_vjp_matches_jnp_grads(self):
+        import jax
+        x = jnp.asarray(RNG.normal(size=(8, 20)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(20, 12)) * 0.2, jnp.float32)
+        bias = jnp.asarray(RNG.normal(size=(12,)), jnp.float32)
+
+        def loss_pallas(x, w, b):
+            return jnp.sum(fused_dense_ad(x, w, b, True) ** 2)
+
+        def loss_ref(x, w, b):
+            return jnp.sum(ref.fused_dense_ref(x, w, b, relu=True) ** 2)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, bias)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, bias)
+        for a, b_ in zip(gp, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+class TestBloomEncode:
+    @pytest.mark.parametrize("b,l,m", [
+        (1, 4, 8),
+        (8, 40, 96),
+        (64, 72, 512),
+        (3, 7, 33),  # ragged
+    ])
+    def test_matches_ref(self, b, l, m):
+        idx = jnp.asarray(RNG.integers(-1, m, size=(b, l)), jnp.int32)
+        got = bloom_encode(idx, m)
+        want = ref.bloom_encode_ref(idx, m)
+        np.testing.assert_allclose(got, want)
+
+    def test_all_padding_gives_zeros(self):
+        idx = jnp.full((4, 10), -1, jnp.int32)
+        assert np.asarray(bloom_encode(idx, 32)).sum() == 0.0
+
+    def test_binary_and_saturating(self):
+        # duplicate positions must still produce exactly 1.0
+        idx = jnp.asarray([[3, 3, 3, 7]], jnp.int32)
+        u = np.asarray(bloom_encode(idx, 16))
+        assert u[0, 3] == 1.0 and u[0, 7] == 1.0
+        assert u.sum() == 2.0
+        assert set(np.unique(u)) <= {0.0, 1.0}

@@ -1,0 +1,143 @@
+"""Model-level tests: shapes, loss behaviour, train-step wire convention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as mdl
+from compile.manifest import (ArtifactSpec, build_artifacts, param_shapes,
+                              round_m, opt_slot_count)
+
+
+def tiny_spec(family="ff", kind="train", loss="softmax_ce",
+              optimizer="adam", **kw) -> ArtifactSpec:
+    defaults = dict(
+        name="tiny", task="tiny", family=family, kind=kind, loss=loss,
+        m_in=24, m_out=24, hidden=[16, 16], batch=8,
+        seq_len=5 if family in ("gru", "lstm") else 0,
+        optimizer=optimizer,
+        opt_params={"lr": 0.05} if optimizer != "sgd" else {"lr": 0.05,
+                                                            "momentum": 0.9},
+        ratio=0.5,
+    )
+    defaults.update(kw)
+    return ArtifactSpec(**defaults)
+
+
+def init_params(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _name, shape in param_shapes(spec):
+        fan_in = shape[0] if len(shape) > 1 else 1
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        out.append(jnp.asarray(
+            rng.normal(0, scale, size=shape), jnp.float32))
+    return out
+
+
+def _batch(spec, seed=1):
+    rng = np.random.default_rng(seed)
+    if spec.seq_len > 0:
+        x = rng.integers(0, 2, size=(spec.batch, spec.seq_len, spec.m_in))
+    else:
+        x = rng.integers(0, 2, size=(spec.batch, spec.m_in))
+    y = np.zeros((spec.batch, spec.m_out), np.float32)
+    for b in range(spec.batch):
+        y[b, rng.integers(0, spec.m_out, size=3)] = 1.0
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("family", ["ff", "gru", "lstm"])
+def test_forward_shapes(family):
+    spec = tiny_spec(family=family)
+    params = init_params(spec)
+    x, _ = _batch(spec)
+    out = mdl.forward(spec, params, x)
+    assert out.shape == (spec.batch, spec.m_out)
+
+
+@pytest.mark.parametrize("family,optimizer", [
+    ("ff", "adam"), ("ff", "rmsprop"), ("gru", "adagrad"), ("lstm", "sgd"),
+])
+def test_train_step_reduces_loss(family, optimizer):
+    spec = tiny_spec(family=family, optimizer=optimizer)
+    fn, example = mdl.make_train_fn(spec)
+    P = len(param_shapes(spec))
+    S = 1 + P * opt_slot_count(spec.optimizer)
+    assert len(example) == P + S + 2
+
+    params = init_params(spec)
+    state = [jnp.zeros(e.shape, e.dtype) for e in example[P:P + S]]
+    x, y = _batch(spec)
+    jfn = jax.jit(fn)
+
+    losses = []
+    args = params + state + [x, y]
+    for _ in range(30):
+        out = jfn(*args)
+        losses.append(float(out[-1]))
+        args = list(out[:-1]) + [x, y]
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_cosine_loss_range_and_descent():
+    spec = tiny_spec(loss="cosine")
+    params = init_params(spec)
+    x, _ = _batch(spec)
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.normal(size=(spec.batch, spec.m_out)), jnp.float32)
+    l0 = float(mdl.loss_fn(spec, params, x, y))
+    assert 0.0 <= l0 <= 2.0 + 1e-5
+
+
+def test_predict_softmax_is_distribution():
+    spec = tiny_spec(kind="predict")
+    params = init_params(spec)
+    x, _ = _batch(spec)
+    probs = mdl.predict_out(spec, params, x)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(probs, axis=-1)), np.ones(spec.batch), rtol=1e-5)
+    assert float(jnp.min(probs)) >= 0.0
+
+
+def test_predict_decode_matches_two_stage():
+    from compile.kernels import ref
+    spec = tiny_spec(kind="predict_decode")
+    spec.decode_d, spec.decode_k = 100, 4
+    params = init_params(spec)
+    x, _ = _batch(spec)
+    rng = np.random.default_rng(7)
+    hashes = jnp.asarray(
+        rng.integers(0, spec.m_out, size=(100, 4)), jnp.int32)
+    fn, _ = mdl.make_predict_decode_fn(spec)
+    fused = fn(*params, x, hashes)[0]
+    probs = mdl.predict_out(spec, params, x)
+    want = ref.bloom_decode_ref(probs, hashes)
+    np.testing.assert_allclose(fused, want, rtol=1e-4, atol=1e-4)
+
+
+def test_manifest_artifacts_are_consistent():
+    specs = build_artifacts()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for s in specs:
+        assert s.m_in == round_m(s.m_in, 1.0) or s.m_in % 8 == 0
+        if s.family == "classifier":
+            assert s.m_out == 12
+        if s.kind == "predict_decode":
+            assert s.decode_d > 0 and s.decode_k > 0
+        for _n, shape in param_shapes(s):
+            assert all(dim > 0 for dim in shape)
+
+
+def test_pallas_and_plain_ff_agree():
+    spec_p = tiny_spec()
+    spec_j = tiny_spec()
+    spec_j.use_pallas = False
+    params = init_params(spec_p)
+    x, _ = _batch(spec_p)
+    a = mdl.forward(spec_p, params, x)
+    b = mdl.forward(spec_j, params, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)

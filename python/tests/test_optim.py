@@ -1,0 +1,95 @@
+"""Optimizer unit tests: wire layout, convergence, clipping, bias correction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim
+
+
+def _quadratic_params():
+    return [jnp.asarray([3.0, -2.0], jnp.float32),
+            jnp.asarray([[1.5]], jnp.float32)]
+
+
+def _grads(params):
+    # grad of 0.5*||p||^2 is p itself
+    return params
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgd", {"lr": 0.1, "momentum": 0.0}),
+    ("sgd", {"lr": 0.05, "momentum": 0.9}),
+    ("adam", {"lr": 0.2}),
+    ("rmsprop", {"lr": 0.05}),
+    ("adagrad", {"lr": 0.9}),
+])
+def test_converges_on_quadratic(name, kw):
+    params = _quadratic_params()
+    state = optim.init_state(name, params)
+    update = optim.make_update(name, kw)
+    for _ in range(200):
+        params, state = update(params, _grads(params), state)
+    total = sum(float(jnp.sum(jnp.abs(p))) for p in params)
+    assert total < 0.3, f"{name} failed to converge: {total}"
+
+
+def test_state_layout_matches_manifest():
+    from compile.manifest import opt_slot_count
+    params = _quadratic_params()
+    for name in ("sgd", "adam", "rmsprop", "adagrad"):
+        state = optim.init_state(name, params)
+        assert len(state) == 1 + opt_slot_count(name) * len(params)
+        assert state[0].shape == ()
+        for s, p in zip(state[1:], params * opt_slot_count(name)):
+            assert s.shape == p.shape
+
+
+def test_step_counter_increments():
+    params = _quadratic_params()
+    update = optim.make_update("adam", {"lr": 0.01})
+    state = optim.init_state("adam", params)
+    for i in range(3):
+        params, state = update(params, _grads(params), state)
+        assert float(state[0]) == i + 1
+
+
+def test_clip_by_global_norm():
+    grads = [jnp.asarray([3.0, 4.0], jnp.float32)]  # norm 5
+    clipped = optim.clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(clipped[0]), [0.6, 0.8], rtol=1e-5)
+    # under the cap: unchanged
+    small = optim.clip_by_global_norm(grads, 10.0)
+    np.testing.assert_allclose(np.asarray(small[0]), [3.0, 4.0], rtol=1e-5)
+
+
+def test_sgd_clip_limits_update_size():
+    update = optim.make_update(
+        "sgd", {"lr": 1.0, "momentum": 0.0, "clip_norm": 1.0})
+    params = [jnp.asarray([0.0], jnp.float32)]
+    state = optim.init_state("sgd", params)
+    huge = [jnp.asarray([1e6], jnp.float32)]
+    new_params, _ = update(params, huge, state)
+    assert abs(float(new_params[0][0])) <= 1.0 + 1e-5
+
+
+def test_adam_bias_correction_first_step():
+    # after one step from zero state, update must be ~lr*sign(g)
+    update = optim.make_update("adam", {"lr": 0.1})
+    params = [jnp.asarray([1.0], jnp.float32)]
+    state = optim.init_state("adam", params)
+    grads = [jnp.asarray([0.5], jnp.float32)]
+    new_params, _ = update(params, grads, state)
+    assert float(new_params[0][0]) == pytest.approx(1.0 - 0.1, abs=1e-3)
+
+
+def test_updates_are_jittable():
+    for name, kw in [("adam", {"lr": 0.01}), ("sgd", {"lr": 0.1}),
+                     ("rmsprop", {"lr": 0.01}), ("adagrad", {"lr": 0.1})]:
+        params = _quadratic_params()
+        state = optim.init_state(name, params)
+        update = jax.jit(optim.make_update(name, kw))
+        p2, s2 = update(params, _grads(params), state)
+        assert len(p2) == len(params) and len(s2) == len(state)

@@ -1,0 +1,157 @@
+//! CCA embedding baseline (paper Sec. 4.3(4)).
+//!
+//! Canonical correlation analysis between the input view X [n, d] and the
+//! output view Y [n, d] of the training split, computed SVD-style
+//! (Hotelling 1936; diagonal whitening + randomized SVD of the cross-
+//! correlation operator, never materialising the d x d matrix). Items are
+//! embedded by the mean of their input- and output-side canonical
+//! directions; loss and KNN metric are correlation, per the paper.
+
+use crate::embedding::DenseTable;
+use crate::linalg::dense::Mat;
+use crate::linalg::knn::Metric;
+use crate::linalg::sparse::Csr;
+use crate::linalg::svd::{randomized_svd, LinOp};
+use crate::util::rng::Rng;
+
+/// Implicit operator R = Dx^{-1/2} (X^T Y / n) Dy^{-1/2}.
+struct CrossCorr<'a> {
+    x: &'a Csr,
+    y: &'a Csr,
+    inv_sx: Vec<f32>, // Dx^{-1/2} diagonal
+    inv_sy: Vec<f32>, // Dy^{-1/2} diagonal
+    inv_n: f32,
+}
+
+impl<'a> CrossCorr<'a> {
+    fn new(x: &'a Csr, y: &'a Csr) -> Self {
+        let eps = 1e-6f32;
+        // binary columns: var ~ freq/n (1 - freq/n); whiten by sqrt(freq)
+        let inv_sx = x.col_sums().iter()
+            .map(|&f| 1.0 / (f + eps).sqrt())
+            .collect();
+        let inv_sy = y.col_sums().iter()
+            .map(|&f| 1.0 / (f + eps).sqrt())
+            .collect();
+        Self { x, y, inv_sx, inv_sy, inv_n: 1.0 / x.rows as f32 }
+    }
+
+    fn scale_rows(mat: &mut Mat, diag: &[f32]) {
+        for r in 0..mat.rows {
+            let s = diag[r];
+            for v in mat.row_mut(r) {
+                *v *= s;
+            }
+        }
+    }
+}
+
+impl LinOp for CrossCorr<'_> {
+    fn rows(&self) -> usize {
+        self.x.cols
+    }
+    fn cols(&self) -> usize {
+        self.y.cols
+    }
+    // R * B = Dx^{-1/2} X^T (Y (Dy^{-1/2} B)) / n
+    fn apply(&self, b: &Mat) -> Mat {
+        let mut b2 = b.clone();
+        CrossCorr::scale_rows(&mut b2, &self.inv_sy);
+        let yb = self.y.matmul_dense(&b2); // [n, k]
+        let mut out = self.x.t_matmul_dense(&yb); // [d, k]
+        CrossCorr::scale_rows(&mut out, &self.inv_sx);
+        out.scale(self.inv_n);
+        out
+    }
+    // R^T * B
+    fn apply_t(&self, b: &Mat) -> Mat {
+        let mut b2 = b.clone();
+        CrossCorr::scale_rows(&mut b2, &self.inv_sx);
+        let xb = self.x.matmul_dense(&b2);
+        let mut out = self.y.t_matmul_dense(&xb);
+        CrossCorr::scale_rows(&mut out, &self.inv_sy);
+        out.scale(self.inv_n);
+        out
+    }
+}
+
+/// Build the d x e CCA item table from paired views X, Y (same item space).
+pub fn build_cca(x: &Csr, y: &Csr, e: usize, rng: &mut Rng) -> DenseTable {
+    assert_eq!(x.rows, y.rows, "views must pair by instance");
+    assert_eq!(x.cols, y.cols, "views must share the item space");
+    let d = x.cols;
+    let op = CrossCorr::new(x, y);
+    let svd = randomized_svd(&op, e, 2, 8.min(e), rng);
+
+    // canonical directions: a_j = Dx^{-1/2} u_j, b_j = Dy^{-1/2} v_j;
+    // item i's embedding = mean of its input/output loadings
+    let mut table = Mat::zeros(d, e);
+    for j in 0..e.min(svd.s.len()) {
+        for i in 0..d {
+            let a = svd.u.at(i, j) * op.inv_sx[i];
+            let b = svd.vt.at(j, i) * op.inv_sy[i];
+            *table.at_mut(i, j) = 0.5 * (a + b);
+        }
+    }
+    table.normalize_rows();
+    DenseTable::new(table, Metric::Correlation, "cca")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::Embedding;
+    use crate::linalg::dense::cosine;
+
+    /// inputs {0,1} predict outputs {2,3}; inputs {4,5} predict {0,1}... no:
+    /// keep it simple — same-clique input/output halves.
+    fn paired_views() -> (Csr, Csr) {
+        let mut xr = Vec::new();
+        let mut yr = Vec::new();
+        for _ in 0..30 {
+            xr.push(vec![0u32, 1]);
+            yr.push(vec![2u32]);
+            xr.push(vec![3u32, 4]);
+            yr.push(vec![5u32]);
+        }
+        (Csr::from_row_sets(6, &xr), Csr::from_row_sets(6, &yr))
+    }
+
+    #[test]
+    fn correlated_items_align() {
+        let (x, y) = paired_views();
+        let mut rng = Rng::new(1);
+        let dt = build_cca(&x, &y, 2, &mut rng);
+        let t = &dt.table;
+        // input items 0,1 and their output 2 should align; 5 should not
+        let same = cosine(t.row(0), t.row(2)).abs();
+        let cross = cosine(t.row(0), t.row(5)).abs();
+        assert!(same > cross, "same={same} cross={cross}");
+    }
+
+    #[test]
+    fn decode_prefers_the_paired_output_item() {
+        // e >= 3: Pearson correlation is degenerate (sign-only) in 2 dims
+        let (x, y) = paired_views();
+        let mut rng = Rng::new(2);
+        let dt = build_cca(&x, &y, 3, &mut rng);
+        let mut q = vec![0.0; 3];
+        dt.encode_input(&[0, 1], &mut q);
+        let scores = dt.decode(&q);
+        // item 2 (their constant consequent) must outrank item 5
+        assert!(scores[2] > scores[5],
+                "scores: {scores:?}");
+    }
+
+    #[test]
+    fn table_is_row_normalised() {
+        let (x, y) = paired_views();
+        let mut rng = Rng::new(3);
+        let dt = build_cca(&x, &y, 3, &mut rng);
+        for i in 0..6 {
+            let n = crate::linalg::dense::dot(dt.table.row(i),
+                                              dt.table.row(i)).sqrt();
+            assert!(n < 1.0 + 1e-4, "row {i} norm {n}");
+        }
+    }
+}

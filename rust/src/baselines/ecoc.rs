@@ -1,0 +1,142 @@
+//! Error-correcting output codes baseline (paper Sec. 4.3(2)).
+//!
+//! Builds a binary d x m code matrix with the randomized hill-climbing
+//! method of Dietterich & Bakiri (1995): start from random codewords,
+//! repeatedly find poorly-separated row pairs (small Hamming distance) and
+//! flip bits that improve both row separation and column balance. Trained
+//! with cross-entropy like the paper (their pre-analysis found Hamming
+//! loss "significantly inferior").
+
+use crate::embedding::CodeMatrix;
+use crate::util::rng::Rng;
+
+pub struct EcocConfig {
+    /// hill-climbing iterations (pair fixups)
+    pub iters: usize,
+    /// row pairs sampled per iteration when scanning for the worst pair
+    pub pair_sample: usize,
+    /// target codeword weight fraction (0.5 = balanced)
+    pub density: f64,
+}
+
+impl Default for EcocConfig {
+    fn default() -> Self {
+        Self { iters: 4000, pair_sample: 64, density: 0.5 }
+    }
+}
+
+/// Build an ECOC code matrix for d items with m-bit codewords.
+pub fn build_ecoc(d: usize, m: usize, cfg: &EcocConfig,
+                  rng: &mut Rng) -> CodeMatrix {
+    // random init at the target density
+    let mut rows: Vec<Vec<bool>> = (0..d)
+        .map(|_| (0..m).map(|_| rng.bool(cfg.density)).collect())
+        .collect();
+    // guarantee no all-zero codeword (undecodable)
+    for row in rows.iter_mut() {
+        if !row.iter().any(|&b| b) {
+            let j = rng.below(m);
+            row[j] = true;
+        }
+    }
+
+    let dist = |a: &Vec<bool>, b: &Vec<bool>| -> usize {
+        a.iter().zip(b).filter(|(x, y)| x != y).count()
+    };
+
+    for _ in 0..cfg.iters {
+        // sample pairs, pick the closest (worst separated)
+        let mut worst: Option<(usize, usize, usize)> = None;
+        for _ in 0..cfg.pair_sample {
+            let i = rng.below(d);
+            let j = rng.below(d);
+            if i == j {
+                continue;
+            }
+            let h = dist(&rows[i], &rows[j]);
+            if worst.map_or(true, |(_, _, wh)| h < wh) {
+                worst = Some((i, j, h));
+            }
+        }
+        let Some((i, j, h)) = worst else { continue };
+        if h >= m / 2 {
+            continue; // already well separated
+        }
+        // flip a bit of row i where it agrees with row j
+        let agree: Vec<usize> = (0..m)
+            .filter(|&b| rows[i][b] == rows[j][b])
+            .collect();
+        if agree.is_empty() {
+            continue;
+        }
+        let b = agree[rng.below(agree.len())];
+        rows[i][b] = !rows[i][b];
+        // keep the row non-empty
+        if !rows[i].iter().any(|&x| x) {
+            rows[i][b] = true;
+        }
+    }
+
+    CodeMatrix::from_rows(d, m, &rows, "ecoc")
+}
+
+/// Minimum pairwise Hamming distance over a row sample (diagnostic).
+pub fn min_distance_sampled(cm: &CodeMatrix, samples: usize,
+                            rng: &mut Rng) -> u32 {
+    let mut min = u32::MAX;
+    for _ in 0..samples {
+        let i = rng.below(cm.d);
+        let j = rng.below(cm.d);
+        if i != j {
+            min = min.min(cm.hamming(i, j));
+        }
+    }
+    min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codewords_nonzero_and_sized() {
+        let mut rng = Rng::new(1);
+        let cm = build_ecoc(100, 24,
+                            &EcocConfig { iters: 500, ..Default::default() },
+                            &mut rng);
+        assert_eq!(cm.d, 100);
+        assert_eq!(cm.m, 24);
+        for i in 0..100 {
+            assert!(cm.popcount(i) > 0, "row {i} is all-zero");
+        }
+    }
+
+    #[test]
+    fn hill_climbing_improves_min_distance() {
+        let mut rng_a = Rng::new(7);
+        let no_opt = build_ecoc(
+            60, 16, &EcocConfig { iters: 0, ..Default::default() },
+            &mut rng_a);
+        let mut rng_b = Rng::new(7);
+        let opt = build_ecoc(
+            60, 16, &EcocConfig { iters: 3000, ..Default::default() },
+            &mut rng_b);
+        let mut rng_c = Rng::new(9);
+        let d0 = min_distance_sampled(&no_opt, 2000, &mut rng_c);
+        let mut rng_d = Rng::new(9);
+        let d1 = min_distance_sampled(&opt, 2000, &mut rng_d);
+        assert!(d1 >= d0, "optimized {d1} < random {d0}");
+    }
+
+    #[test]
+    fn density_is_respected() {
+        let mut rng = Rng::new(3);
+        let cm = build_ecoc(200, 32,
+                            &EcocConfig { iters: 0, density: 0.5,
+                                          ..Default::default() },
+                            &mut rng);
+        let total: u32 = (0..200).map(|i| cm.popcount(i)).sum();
+        let frac = total as f64 / (200.0 * 32.0);
+        assert!((frac - 0.5).abs() < 0.05, "density {frac}");
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's four comparison methods (Sec. 4.3): HT is realised as
+//! `bloom::HashMatrix` with k = 1; ECOC / PMI / CCA live here.
+
+pub mod cca;
+pub mod ecoc;
+pub mod pmi;
+
+pub use cca::build_cca;
+pub use ecoc::{build_ecoc, EcocConfig};
+pub use pmi::build_pmi;

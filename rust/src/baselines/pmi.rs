@@ -1,0 +1,106 @@
+//! PMI embedding baseline (paper Sec. 4.3(3), after Chollet 2016).
+//!
+//! Embed items by the truncated SVD of the positive pointwise-mutual-
+//! information matrix of item co-occurrences; train with cosine loss;
+//! decode with cosine KNN over the item table.
+
+use crate::embedding::DenseTable;
+use crate::linalg::dense::Mat;
+use crate::linalg::knn::Metric;
+use crate::linalg::sparse::Csr;
+use crate::linalg::svd::randomized_svd;
+use crate::util::rng::Rng;
+
+/// Build the d x e PMI item table from a binary instance matrix X [n, d].
+pub fn build_pmi(x: &Csr, e: usize, rng: &mut Rng) -> DenseTable {
+    let d = x.cols;
+    let n = x.rows as f64;
+    let counts = x.cooccurrence_pairs();
+    let freq = x.col_sums();
+
+    // sparse positive-PMI matrix (symmetric, stored both triangles)
+    let mut triplets: Vec<(usize, usize, f32)> =
+        Vec::with_capacity(counts.len() * 2 + d);
+    for (&(a, b), &cnt) in &counts {
+        let (fa, fb) = (freq[a as usize] as f64, freq[b as usize] as f64);
+        if fa <= 0.0 || fb <= 0.0 {
+            continue;
+        }
+        let pmi = ((cnt as f64 * n) / (fa * fb)).ln();
+        if pmi > 0.0 {
+            triplets.push((a as usize, b as usize, pmi as f32));
+            triplets.push((b as usize, a as usize, pmi as f32));
+        }
+    }
+    // self-information on the diagonal keeps rare items representable
+    for i in 0..d {
+        let fi = freq[i] as f64;
+        if fi > 0.0 {
+            let pmi = (n / fi).ln().max(0.0);
+            triplets.push((i, i, pmi as f32));
+        }
+    }
+    let ppmi = Csr::from_triplets(d, d, triplets);
+
+    // item table = U_e * sqrt(S): symmetric factorisation of PPMI
+    let svd = randomized_svd(&ppmi, e, 2, 8.min(e), rng);
+    let mut table = Mat::zeros(d, e);
+    for j in 0..e.min(svd.s.len()) {
+        let scale = svd.s[j].max(0.0).sqrt();
+        for i in 0..d {
+            *table.at_mut(i, j) = svd.u.at(i, j) * scale;
+        }
+    }
+    DenseTable::new(table, Metric::Cosine, "pmi")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::Embedding;
+    use crate::linalg::dense::cosine;
+
+    fn block_data() -> Csr {
+        // two disjoint item cliques: {0,1,2} and {3,4,5}
+        let mut rows = Vec::new();
+        for _ in 0..20 {
+            rows.push(vec![0u32, 1, 2]);
+            rows.push(vec![3u32, 4, 5]);
+        }
+        Csr::from_row_sets(6, &rows)
+    }
+
+    #[test]
+    fn clique_items_embed_together() {
+        let mut rng = Rng::new(1);
+        let dt = build_pmi(&block_data(), 3, &mut rng);
+        let t = &dt.table;
+        let within = cosine(t.row(0), t.row(1));
+        let across = cosine(t.row(0), t.row(4));
+        assert!(within > across + 0.3,
+                "within={within} across={across}");
+    }
+
+    #[test]
+    fn decode_recovers_cooccurring_items() {
+        let mut rng = Rng::new(2);
+        let dt = build_pmi(&block_data(), 3, &mut rng);
+        // query = embedding of item 0's clique -> items 0..3 rank first
+        let mut q = vec![0.0; 3];
+        dt.encode_input(&[0, 1], &mut q);
+        let scores = dt.decode(&q);
+        let ranking = crate::linalg::knn::argsort_desc(&scores);
+        let top3: std::collections::HashSet<usize> =
+            ranking[..3].iter().copied().collect();
+        assert_eq!(top3, [0usize, 1, 2].into_iter().collect());
+    }
+
+    #[test]
+    fn table_shape_matches_request() {
+        let mut rng = Rng::new(3);
+        let dt = build_pmi(&block_data(), 2, &mut rng);
+        assert_eq!(dt.table.rows, 6);
+        assert_eq!(dt.table.cols, 2);
+        assert_eq!(dt.m_in(), 2);
+    }
+}

@@ -1,0 +1,175 @@
+//! Co-occurrence-based Bloom embedding — CBE, paper Sec. 6, Algorithm 1.
+//!
+//! Redirect the collisions that must happen anyway (m < d) so that the
+//! most co-occurring item pairs collide with *each other*: walking pairs
+//! in increasing co-occurrence order, each pair (a, b) gets one shared
+//! random bit r (not currently used by either row), overwriting one
+//! randomly chosen projection in each row. Later (higher co-occurrence)
+//! pairs overwrite earlier ones, giving them priority — exactly the
+//! paper's line-4 ordering argument.
+
+use super::hashing::HashMatrix;
+use crate::linalg::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Statistics of the co-occurrence structure (paper Table 4).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoocStats {
+    /// percent of all possible item pairs with co-occurrence > 0
+    pub pct_pairs: f64,
+    /// average co-occurrence count of co-occurring pairs / n instances
+    pub rho: f64,
+    /// number of co-occurring pairs
+    pub n_pairs: usize,
+}
+
+/// Count co-occurrences and summarise them (Table 4 columns).
+pub fn cooccurrence_stats(x: &Csr) -> CoocStats {
+    let pairs = x.cooccurrence_pairs();
+    let d = x.cols as f64;
+    let possible = d * (d - 1.0) / 2.0;
+    if pairs.is_empty() || possible <= 0.0 {
+        return CoocStats::default();
+    }
+    let total: f64 = pairs.values().map(|&v| v as f64).sum();
+    CoocStats {
+        pct_pairs: 100.0 * pairs.len() as f64 / possible,
+        rho: total / pairs.len() as f64 / x.rows as f64,
+        n_pairs: pairs.len(),
+    }
+}
+
+/// Algorithm 1: rewrite `hm` in place using co-occurrence information
+/// from the instance matrix `x` (n x d binary CSR over the SAME item
+/// space as `hm`). Returns the number of redirected pairs.
+pub fn cbe_rewrite(hm: &mut HashMatrix, x: &Csr, rng: &mut Rng) -> usize {
+    assert_eq!(x.cols, hm.d, "instance columns must match hash-matrix d");
+    assert!(hm.m > 2 * hm.k,
+            "CBE needs m > 2k to find a free shared bit (m={}, k={})",
+            hm.m, hm.k);
+
+    // line 1: C <- X^T X (upper-triangular sparse counts)
+    let counts = x.cooccurrence_pairs();
+    if counts.is_empty() {
+        return 0;
+    }
+
+    // line 2: threshold by the average item frequency:
+    // C <- C .* sgn(C - avgfreq). Pairs above the average frequency keep
+    // their (positive) count; the rest flip negative, so they sort first
+    // and get overwritten by the heavy pairs later in the loop.
+    let col_sums = x.col_sums();
+    let avg_freq: f32 =
+        col_sums.iter().sum::<f32>() / col_sums.len().max(1) as f32;
+
+    // line 3: coordinates of Lowtri(C) — we iterate (value, a, b)
+    let mut entries: Vec<(f32, u32, u32)> = counts
+        .into_iter()
+        .map(|((a, b), v)| {
+            let signed = v * (v - avg_freq).signum();
+            (signed, a, b)
+        })
+        .collect();
+
+    // line 4: increasing order of (signed) value; ties broken by item ids
+    // for determinism
+    entries.sort_unstable_by(|x, y| {
+        x.0.partial_cmp(&y.0)
+            .unwrap()
+            .then_with(|| (x.1, x.2).cmp(&(y.1, y.2)))
+    });
+
+    let k = hm.k;
+    let m = hm.m;
+    let mut scratch: Vec<usize> = Vec::with_capacity(2 * k);
+    for &(_v, a, b) in &entries {
+        let (a, b) = (a as usize, b as usize);
+        // line 6: r <- URND(1, m, h_a U h_b)
+        scratch.clear();
+        scratch.extend(hm.row(a).iter().map(|&p| p as usize));
+        scratch.extend(hm.row(b).iter().map(|&p| p as usize));
+        let r = rng.below_excluding(m, &scratch) as u32;
+        // lines 7-9: overwrite one random projection of each row with r
+        let ja = rng.below(k);
+        let jb = rng.below(k);
+        hm.row_mut(a)[ja] = r;
+        hm.row_mut(b)[jb] = r;
+    }
+    entries.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_data(d: usize) -> Csr {
+        // items 0 and 1 co-occur in most rows; 2 and 3 rarely
+        let rows: Vec<Vec<u32>> = vec![
+            vec![0, 1], vec![0, 1], vec![0, 1], vec![0, 1], vec![0, 1],
+            vec![2, 3],
+            vec![4], vec![5], vec![0, 1, 6],
+        ];
+        Csr::from_row_sets(d, &rows)
+    }
+
+    #[test]
+    fn rows_keep_distinct_positions_after_rewrite() {
+        let mut rng = Rng::new(1);
+        let mut hm = HashMatrix::random(16, 12, 3, &mut rng);
+        let x = toy_data(16);
+        cbe_rewrite(&mut hm, &x, &mut rng);
+        for i in 0..hm.d {
+            let set: std::collections::HashSet<_> = hm.row(i).iter().collect();
+            assert_eq!(set.len(), hm.k, "row {i} lost distinctness");
+            assert!(hm.row(i).iter().all(|&p| (p as usize) < hm.m));
+        }
+    }
+
+    #[test]
+    fn heaviest_pair_shares_a_bit() {
+        let mut rng = Rng::new(2);
+        let mut hm = HashMatrix::random(16, 12, 3, &mut rng);
+        let x = toy_data(16);
+        cbe_rewrite(&mut hm, &x, &mut rng);
+        // items 0 and 1 (highest co-occurrence, processed last) must share
+        // at least one position
+        let s0: std::collections::HashSet<_> = hm.row(0).iter().collect();
+        let shared = hm.row(1).iter().filter(|p| s0.contains(p)).count();
+        assert!(shared >= 1, "rows 0/1 share no bit: {:?} {:?}",
+                hm.row(0), hm.row(1));
+    }
+
+    #[test]
+    fn no_cooccurrence_is_a_noop() {
+        let mut rng = Rng::new(3);
+        let mut hm = HashMatrix::random(8, 12, 3, &mut rng);
+        let before = hm.h.clone();
+        let x = Csr::from_row_sets(8, &[vec![0], vec![1], vec![2]]);
+        let n = cbe_rewrite(&mut hm, &x, &mut rng);
+        assert_eq!(n, 0);
+        assert_eq!(hm.h, before);
+    }
+
+    #[test]
+    fn stats_match_hand_counts() {
+        let x = Csr::from_row_sets(4, &[vec![0, 1], vec![0, 1], vec![2, 3]]);
+        let st = cooccurrence_stats(&x);
+        // 2 distinct co-occurring pairs out of C(4,2)=6 -> 33.3%
+        assert!((st.pct_pairs - 100.0 * 2.0 / 6.0).abs() < 1e-9);
+        // counts: (0,1)->2, (2,3)->1; avg 1.5 over n=3 rows -> rho=0.5
+        assert!((st.rho - 0.5).abs() < 1e-9);
+        assert_eq!(st.n_pairs, 2);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let x = toy_data(16);
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            let mut hm = HashMatrix::random(16, 12, 3, &mut rng);
+            cbe_rewrite(&mut hm, &x, &mut rng);
+            hm.h
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

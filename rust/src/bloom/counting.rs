@@ -1,0 +1,142 @@
+//! Counting Bloom embeddings — the paper's Sec. 7 extension ("counting
+//! Bloom filters [9] ... could provide a more compact representation by
+//! breaking the binary nature of the embedding").
+//!
+//! Encode accumulates +1 per probe instead of saturating at 1, so the
+//! embedded vector carries multiplicity information: two items colliding
+//! on a bit yield 2.0 there, and the softmax-CE target distribution
+//! weights heavier bits more. Decode stays Eq. 3 — the likelihood gather
+//! is unchanged, which is exactly why this extension "does not require
+//! the modification of the loss function or the mapping process" when the
+//! counts are kept on the *target* side only.
+
+use super::hashing::HashMatrix;
+
+/// Counting encode: out[H_j(p_i)] += 1 for all i, j. Returns the number
+/// of probes written (c * k).
+pub fn encode_counting_into(hm: &HashMatrix, items: &[u32],
+                            out: &mut [f32]) -> usize {
+    assert_eq!(out.len(), hm.m);
+    out.fill(0.0);
+    let mut probes = 0;
+    for &it in items {
+        for &p in hm.row(it as usize) {
+            out[p as usize] += 1.0;
+            probes += 1;
+        }
+    }
+    probes
+}
+
+/// Estimated multiplicity of an item in a counting embedding: the
+/// minimum count over its probes (the counting-Bloom-filter estimate,
+/// Bonomi et al. 2006). 0 means definitely absent.
+pub fn estimate_count(hm: &HashMatrix, u: &[f32], item: u32) -> f32 {
+    hm.row(item as usize)
+        .iter()
+        .map(|&p| u[p as usize])
+        .fold(f32::INFINITY, f32::min)
+}
+
+/// Counting Bloom embedding: binary input encode (the network input stays
+/// binary, matching the paper's instances), counting *target* encode, and
+/// the standard Eq. 3 decode.
+pub struct CountingBloom {
+    pub hm_in: HashMatrix,
+    pub hm_out: Option<HashMatrix>,
+}
+
+impl CountingBloom {
+    pub fn new(hm_in: HashMatrix, hm_out: Option<HashMatrix>) -> Self {
+        Self { hm_in, hm_out }
+    }
+
+    fn out_matrix(&self) -> &HashMatrix {
+        self.hm_out.as_ref().unwrap_or(&self.hm_in)
+    }
+}
+
+impl crate::embedding::Embedding for CountingBloom {
+    fn m_in(&self) -> usize {
+        self.hm_in.m
+    }
+    fn m_out(&self) -> usize {
+        self.out_matrix().m
+    }
+    fn loss(&self) -> crate::embedding::LossKind {
+        crate::embedding::LossKind::SoftmaxCe
+    }
+    fn encode_input(&self, items: &[u32], out: &mut [f32]) {
+        super::encode::BloomEncoder::new(&self.hm_in)
+            .encode_into(items, out);
+    }
+    fn encode_target(&self, items: &[u32], out: &mut [f32]) {
+        encode_counting_into(self.out_matrix(), items, out);
+    }
+    fn decode(&self, output: &[f32]) -> Vec<f32> {
+        super::decode::decode_scores(output, self.out_matrix())
+    }
+    fn name(&self) -> &'static str {
+        "cnt_be"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::Embedding;
+    use crate::util::rng::Rng;
+
+    fn hm() -> HashMatrix {
+        let mut rng = Rng::new(5);
+        HashMatrix::random(64, 24, 3, &mut rng)
+    }
+
+    #[test]
+    fn counting_accumulates_collisions() {
+        let hm = hm();
+        let mut u = vec![0.0; 24];
+        let probes = encode_counting_into(&hm, &[1, 2, 3], &mut u);
+        assert_eq!(probes, 9);
+        // total mass equals total probes (nothing saturates)
+        assert_eq!(u.iter().sum::<f32>(), 9.0);
+    }
+
+    #[test]
+    fn count_estimate_lower_bounds_truth() {
+        let hm = hm();
+        let mut u = vec![0.0; 24];
+        // item 7 inserted twice
+        encode_counting_into(&hm, &[7, 7, 9], &mut u);
+        let est = estimate_count(&hm, &u, 7);
+        assert!(est >= 2.0, "estimate {est} < true count 2");
+        // absent item with a free probe position estimates 0
+        let mut zeroed = 0;
+        for item in 0..64u32 {
+            if estimate_count(&hm, &u, item) == 0.0 {
+                zeroed += 1;
+            }
+        }
+        assert!(zeroed > 32, "too many false positives: {zeroed}");
+    }
+
+    #[test]
+    fn embedding_trait_binary_in_counting_out() {
+        let cb = CountingBloom::new(hm(), None);
+        let mut x = vec![0.0; 24];
+        cb.encode_input(&[1, 2, 3, 4], &mut x);
+        assert!(x.iter().all(|&v| v == 0.0 || v == 1.0), "input not binary");
+        let mut y = vec![0.0; 24];
+        cb.encode_target(&[1, 2, 3, 4], &mut y);
+        assert_eq!(y.iter().sum::<f32>(), 12.0);
+    }
+
+    #[test]
+    fn decode_matches_plain_bloom() {
+        use crate::bloom::decode_scores;
+        let cb = CountingBloom::new(hm(), None);
+        let mut rng = Rng::new(9);
+        let probs: Vec<f32> = (0..24).map(|_| rng.f32() + 0.01).collect();
+        assert_eq!(cb.decode(&probs), decode_scores(&probs, &cb.hm_in));
+    }
+}

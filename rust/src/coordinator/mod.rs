@@ -1,0 +1,13 @@
+//! L3 coordination: batching, the training loop over AOT artifacts,
+//! ranking evaluation, and the experiment pipeline that every paper
+//! table/figure harness drives.
+
+pub mod batcher;
+pub mod evaluate;
+pub mod experiment;
+pub mod train;
+
+pub use evaluate::{evaluate, random_score, EvalReport};
+pub use experiment::{build_embedding, run, DatasetCache, Method, RunResult,
+                     RunSpec};
+pub use train::{train, TrainConfig, TrainReport};

@@ -1,0 +1,98 @@
+//! Training orchestration: drive the AOT train-step artifact over the
+//! dataset — shuffle, encode, execute, thread state; record per-epoch loss
+//! and wall-clock (the T_i of Fig. 3).
+
+use anyhow::Result;
+
+use super::batcher::{batch_ranges, encode_inputs, encode_targets};
+use crate::data::Dataset;
+use crate::embedding::Embedding;
+use crate::model::ModelState;
+use crate::runtime::{ArtifactSpec, HostTensor, Runtime};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub seed: u64,
+    /// log epoch losses at info level
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { epochs: 3, seed: 0, verbose: false }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub epoch_losses: Vec<f64>,
+    pub steps: usize,
+    pub train_secs: f64,
+    /// per-step losses of the first epoch (loss-curve logging)
+    pub first_epoch_curve: Vec<f32>,
+}
+
+/// Train the artifact on the dataset's training split.
+pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
+             emb: &dyn Embedding, cfg: &TrainConfig)
+    -> Result<(ModelState, TrainReport)> {
+    let exe = rt.load(&spec.name)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x7EA1_0001);
+    let mut state = ModelState::init(spec, &mut rng);
+    let mut report = TrainReport {
+        epoch_losses: Vec::with_capacity(cfg.epochs),
+        steps: 0,
+        train_secs: 0.0,
+        first_epoch_curve: Vec::new(),
+    };
+
+    let mut x = HostTensor::zeros(&spec.x_shape());
+    let mut y = HostTensor::zeros(&spec.y_shape());
+    let mut order: Vec<usize> = (0..ds.train.len()).collect();
+    let p = spec.params.len();
+    let s = spec.n_state();
+    let watch = Stopwatch::new();
+
+    for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0f64;
+        let mut n_batches = 0usize;
+        for (lo, hi) in batch_ranges(order.len(), spec.batch) {
+            let batch: Vec<&crate::data::Example> =
+                order[lo..hi].iter().map(|&i| &ds.train[i]).collect();
+            encode_inputs(spec, emb, &batch, &mut x);
+            encode_targets(spec, emb, &batch, &mut y);
+
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(p + s + 2);
+            inputs.extend(state.params.iter());
+            inputs.extend(state.opt_state.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            let mut outputs = exe.run(&inputs, &[])?;
+            debug_assert_eq!(outputs.len(), p + s + 1);
+
+            let loss = outputs.pop().unwrap().data[0];
+            let new_opt = outputs.split_off(p);
+            state.params = outputs;
+            state.opt_state = new_opt;
+
+            epoch_loss += loss as f64;
+            n_batches += 1;
+            report.steps += 1;
+            if epoch == 0 {
+                report.first_epoch_curve.push(loss);
+            }
+        }
+        let avg = epoch_loss / n_batches.max(1) as f64;
+        report.epoch_losses.push(avg);
+        if cfg.verbose {
+            crate::info!("epoch {epoch}: loss {avg:.4} ({n_batches} steps)");
+        }
+    }
+    report.train_secs = watch.elapsed_secs();
+    Ok((state, report))
+}

@@ -1,0 +1,124 @@
+//! Document-classification generator: the CADE analog (12 web-page
+//! categories, bag-of-words features, only the *input* is embedded).
+
+use super::zipf::TopicModel;
+use super::{Dataset, Example, Input, Target};
+use crate::util::rng::Rng;
+
+pub fn generate(name: &str, d: usize, c_median: usize, n_classes: usize,
+                n_train: usize, n_test: usize, rng: &mut Rng) -> Dataset {
+    assert!(n_classes >= 2);
+    // one topic per class plus shared background vocabulary
+    let tm = TopicModel::new(d, n_classes, 1.2, rng);
+    let n = n_train + n_test;
+    let mut examples = Vec::with_capacity(n);
+    // imbalanced class priors, like real web directories
+    let priors: Vec<f64> = (0..n_classes)
+        .map(|c| 1.0 / (c + 1) as f64)
+        .collect();
+    for _ in 0..n {
+        let class = rng.weighted(&priors);
+        let len = rng.lognormal_clamped(c_median as f64, 0.5, 3,
+                                        (d / 4).max(8));
+        // 70% class-topical words, 30% background
+        let items = tm.sample_set(len, 1, 0.30, rng);
+        let mut items = items;
+        // force topical draws to the class topic: resample via class topic
+        for it in items.iter_mut() {
+            if rng.bool(0.7) {
+                *it = tm.sample_item(class, rng);
+            }
+        }
+        items.sort_unstable();
+        items.dedup();
+        examples.push(Example {
+            input: Input::Items(items),
+            target: Target::Class(class as u16),
+        });
+    }
+    let test = examples.split_off(n_train);
+    Dataset {
+        name: name.to_string(),
+        d,
+        n_classes,
+        seq_len: 0,
+        train: examples,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> Dataset {
+        let mut rng = Rng::new(21);
+        generate("cade", 2048, 17, 12, 800, 200, &mut rng)
+    }
+
+    #[test]
+    fn labels_cover_and_stay_in_range() {
+        let ds = gen();
+        let mut seen = vec![false; 12];
+        for e in ds.train.iter().chain(&ds.test) {
+            match e.target {
+                Target::Class(c) => {
+                    assert!((c as usize) < 12);
+                    seen[c as usize] = true;
+                }
+                _ => panic!("not a class target"),
+            }
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8,
+                "class coverage too sparse");
+    }
+
+    #[test]
+    fn classes_are_imbalanced() {
+        let ds = gen();
+        let mut counts = vec![0usize; 12];
+        for e in &ds.train {
+            if let Target::Class(c) = e.target {
+                counts[c as usize] += 1;
+            }
+        }
+        assert!(counts[0] > counts[11] * 2,
+                "expected head class to dominate: {counts:?}");
+    }
+
+    #[test]
+    fn documents_are_separable_by_class_vocab() {
+        // same-class docs should share vocabulary far more than
+        // cross-class docs — otherwise the task is unlearnable
+        let ds = gen();
+        let mut same = 0.0f64;
+        let mut same_n = 0usize;
+        let mut diff = 0.0f64;
+        let mut diff_n = 0usize;
+        let docs: Vec<(&Example, u16)> = ds.train.iter().take(200)
+            .map(|e| match e.target {
+                Target::Class(c) => (e, c),
+                _ => unreachable!(),
+            })
+            .collect();
+        for i in 0..docs.len() {
+            for j in (i + 1)..docs.len().min(i + 30) {
+                let a: std::collections::HashSet<_> =
+                    docs[i].0.input_items().iter().collect();
+                let overlap = docs[j].0.input_items().iter()
+                    .filter(|w| a.contains(w)).count() as f64;
+                if docs[i].1 == docs[j].1 {
+                    same += overlap;
+                    same_n += 1;
+                } else {
+                    diff += overlap;
+                    diff_n += 1;
+                }
+            }
+        }
+        let same_avg = same / same_n.max(1) as f64;
+        let diff_avg = diff / diff_n.max(1) as f64;
+        assert!(same_avg > diff_avg * 1.5,
+                "same={same_avg:.2} diff={diff_avg:.2}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Synthetic dataset suite — the Table 1 analogs (see DESIGN.md
+//! "Substitutions"). Seven generators parameterised to preserve what BE's
+//! behaviour depends on: dimensionality d, per-instance cardinality c,
+//! Zipfian popularity, and latent-topic co-occurrence structure.
+
+pub mod docs;
+pub mod profiles;
+pub mod sequences;
+pub mod zipf;
+
+use crate::linalg::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// One supervised example. Items are original-space positions (< d).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub input: Input,
+    pub target: Target,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Input {
+    /// unordered active-item set (profile / bag-of-words tasks)
+    Items(Vec<u32>),
+    /// ordered item sequence, oldest first (PTB / YC); always exactly
+    /// `seq_len` long with `PAD` for missing leading steps
+    Sequence(Vec<u32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Target {
+    /// future/held-out items to rank (profile tasks) or the single next
+    /// item (sequence tasks)
+    Items(Vec<u32>),
+    /// class id (CADE classification)
+    Class(u16),
+}
+
+/// Sequence padding sentinel (encodes to an all-zero step vector).
+pub const PAD: u32 = u32::MAX;
+
+impl Example {
+    pub fn input_items(&self) -> &[u32] {
+        match &self.input {
+            Input::Items(v) => v,
+            Input::Sequence(v) => v,
+        }
+    }
+
+    pub fn target_items(&self) -> &[u32] {
+        match &self.target {
+            Target::Items(v) => v,
+            Target::Class(_) => &[],
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub d: usize,
+    /// 0 unless a classification task
+    pub n_classes: usize,
+    /// 0 unless a sequence task
+    pub seq_len: usize,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// Table 1 row: dataset statistics after generation/splitting.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub n: usize,
+    pub split: usize,
+    pub d: usize,
+    pub c_median: f64,
+    pub density_median: f64,
+}
+
+impl Dataset {
+    pub fn stats(&self) -> DatasetStats {
+        let mut cs: Vec<f64> = self
+            .train
+            .iter()
+            .chain(self.test.iter())
+            .map(|e| match &e.input {
+                Input::Items(v) => v.len() as f64,
+                Input::Sequence(v) =>
+                    v.iter().filter(|&&i| i != PAD).count() as f64,
+            })
+            .collect();
+        cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let c_median = crate::util::stats::median(&cs);
+        DatasetStats {
+            n: self.train.len() + self.test.len(),
+            split: self.test.len(),
+            d: self.d,
+            c_median,
+            density_median: c_median / self.d as f64,
+        }
+    }
+
+    /// Sparse binary instance matrix over the *input* sets of the training
+    /// split — what CBE Algorithm 1 and PMI/CCA count co-occurrences on.
+    pub fn train_input_csr(&self) -> Csr {
+        let rows: Vec<Vec<u32>> = self
+            .train
+            .iter()
+            .map(|e| {
+                self.real_items(e.input_items())
+            })
+            .collect();
+        Csr::from_row_sets(self.d, &rows)
+    }
+
+    /// Sparse binary matrix over training *targets* (item targets only).
+    pub fn train_target_csr(&self) -> Csr {
+        let rows: Vec<Vec<u32>> = self
+            .train
+            .iter()
+            .map(|e| e.target_items().to_vec())
+            .collect();
+        Csr::from_row_sets(self.d, &rows)
+    }
+
+    fn real_items(&self, items: &[u32]) -> Vec<u32> {
+        items.iter().copied().filter(|&i| i != PAD).collect()
+    }
+}
+
+/// Scale multiplier for experiment sizing (`--scale`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// cargo-bench sized: ~1/8 of instances, 1 epoch-ish workloads
+    Tiny,
+    /// default experiment size (DESIGN.md task table)
+    Small,
+    /// full synthetic size (longer, closer to paper n)
+    Full,
+}
+
+impl Scale {
+    pub fn factor(self) -> f64 {
+        match self {
+            Scale::Tiny => 0.125,
+            Scale::Small => 1.0,
+            Scale::Full => 4.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "tiny" => Some(Scale::Tiny),
+            "small" => Some(Scale::Small),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the synthetic analog for a manifest task.
+///
+/// `generator` matches `python/compile/manifest.py` TaskSpec.generator.
+pub fn generate(name: &str, generator: &str, d: usize, c_median: usize,
+                n_train: usize, n_test: usize, n_classes: usize,
+                seq_len: usize, scale: Scale, seed: u64) -> Dataset {
+    let f = scale.factor();
+    let n_train = ((n_train as f64 * f) as usize).max(64);
+    let n_test = ((n_test as f64 * f) as usize).max(32);
+    let mut rng = Rng::new(seed ^ 0xB100_F17E);
+    match generator {
+        "profiles_dense" => profiles::generate(
+            name, d, c_median, n_train, n_test, 1.8, &mut rng),
+        "profiles_sparse" => profiles::generate(
+            name, d, c_median, n_train, n_test, 1.1, &mut rng),
+        "markov_text" => sequences::generate_text(
+            name, d, seq_len, n_train, n_test, &mut rng),
+        "sessions" => sequences::generate_sessions(
+            name, d, seq_len, n_train, n_test, &mut rng),
+        "topic_docs" => docs::generate(
+            name, d, c_median, n_classes, n_train, n_test, &mut rng),
+        other => panic!("unknown generator kind '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_dispatches_all_kinds() {
+        for (gen, d, classes, seq) in [
+            ("profiles_dense", 256, 0, 0),
+            ("profiles_sparse", 256, 0, 0),
+            ("markov_text", 200, 0, 10),
+            ("sessions", 200, 0, 10),
+            ("topic_docs", 512, 12, 0),
+        ] {
+            let ds = generate("t", gen, d, 5, 200, 50, classes, seq,
+                              Scale::Tiny, 1);
+            assert!(!ds.train.is_empty());
+            assert!(!ds.test.is_empty());
+            assert_eq!(ds.d, d);
+            assert_eq!(ds.n_classes, classes);
+            assert_eq!(ds.seq_len, seq);
+        }
+    }
+
+    #[test]
+    fn stats_have_sane_shape() {
+        let ds = generate("t", "profiles_sparse", 512, 5, 400, 100, 0, 0,
+                          Scale::Tiny, 2);
+        let st = ds.stats();
+        assert_eq!(st.d, 512);
+        assert!(st.c_median >= 1.0);
+        assert!(st.density_median < 0.2);
+        assert_eq!(st.n, ds.train.len() + ds.test.len());
+    }
+
+    #[test]
+    fn scale_factors_order() {
+        assert!(Scale::Tiny.factor() < Scale::Small.factor());
+        assert!(Scale::Small.factor() < Scale::Full.factor());
+        assert_eq!(Scale::parse("small"), Some(Scale::Small));
+        assert_eq!(Scale::parse("nope"), None);
+    }
+
+    #[test]
+    fn train_input_csr_filters_padding() {
+        let ds = Dataset {
+            name: "x".into(),
+            d: 10,
+            n_classes: 0,
+            seq_len: 3,
+            train: vec![Example {
+                input: Input::Sequence(vec![PAD, 1, 2]),
+                target: Target::Items(vec![3]),
+            }],
+            test: vec![],
+        };
+        let csr = ds.train_input_csr();
+        assert_eq!(csr.row(0).0, &[1, 2]);
+    }
+}

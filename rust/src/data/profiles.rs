@@ -1,0 +1,105 @@
+//! User-profile generators: the ML / MSD / AMZ / BC analogs.
+//!
+//! Paper Sec. 4.2: profiles are one-hot-encoded item sets, split at a
+//! uniformly random point into an input half and an output half ("ensuring
+//! a minimum of one movie in both input and output"). The generator draws
+//! profile lengths from a lognormal around the target median and items
+//! from a latent-topic Zipf mixture (dense survey-like data uses more
+//! topics per user and lower skew; sparse logs use fewer, skewier topics).
+
+use super::zipf::TopicModel;
+use super::{Dataset, Example, Input, Target};
+use crate::util::rng::Rng;
+
+pub fn generate(name: &str, d: usize, c_median: usize, n_train: usize,
+                n_test: usize, zipf_s: f64, rng: &mut Rng) -> Dataset {
+    let n_topics = (d / 48).clamp(8, 48);
+    let tm = TopicModel::new(d, n_topics, zipf_s, rng);
+    let n = n_train + n_test;
+    let mut examples = Vec::with_capacity(n);
+    // profile length: input + output halves; median total = 2 * c_median
+    let median_len = (2 * c_median).max(2) as f64;
+    for _ in 0..n {
+        let len = rng.lognormal_clamped(median_len, 0.6, 2, (d / 2).max(4));
+        let topics = 1 + rng.below(3);
+        let mut items = tm.sample_set(len, topics, 0.15, rng);
+        rng.shuffle(&mut items);
+        // split at a uniform point, both sides non-empty (paper Sec. 4.2)
+        let cut = 1 + rng.below(items.len() - 1);
+        let (input, output) = items.split_at(cut);
+        examples.push(Example {
+            input: Input::Items(input.to_vec()),
+            target: Target::Items(output.to_vec()),
+        });
+    }
+    let test = examples.split_off(n_train);
+    Dataset {
+        name: name.to_string(),
+        d,
+        n_classes: 0,
+        seq_len: 0,
+        train: examples,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> Dataset {
+        let mut rng = Rng::new(11);
+        generate("ml", 512, 9, 600, 100, 1.3, &mut rng)
+    }
+
+    #[test]
+    fn sizes_and_split() {
+        let ds = gen();
+        assert_eq!(ds.train.len(), 600);
+        assert_eq!(ds.test.len(), 100);
+    }
+
+    #[test]
+    fn both_halves_nonempty_and_disjoint() {
+        let ds = gen();
+        for e in ds.train.iter().chain(&ds.test) {
+            let (inp, out) = (e.input_items(), e.target_items());
+            assert!(!inp.is_empty() && !out.is_empty());
+            let si: std::collections::HashSet<_> = inp.iter().collect();
+            assert!(out.iter().all(|i| !si.contains(i)),
+                    "input/output overlap");
+        }
+    }
+
+    #[test]
+    fn median_profile_length_near_target() {
+        let ds = gen();
+        let mut lens: Vec<f64> = ds.train.iter()
+            .map(|e| (e.input_items().len() + e.target_items().len()) as f64)
+            .collect();
+        lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = crate::util::stats::median(&lens);
+        assert!((med - 18.0).abs() <= 6.0, "median={med}");
+    }
+
+    #[test]
+    fn items_within_catalogue() {
+        let ds = gen();
+        for e in &ds.train {
+            assert!(e.input_items().iter().all(|&i| (i as usize) < ds.d));
+            assert!(e.target_items().iter().all(|&i| (i as usize) < ds.d));
+        }
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let ds = gen();
+        let csr = ds.train_input_csr();
+        let mut sums = csr.col_sums();
+        sums.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top10: f32 = sums[..51].iter().sum();
+        let total: f32 = sums.iter().sum();
+        // top ~10% of items should hold well over 10% of interactions
+        assert!(top10 / total > 0.25, "{}", top10 / total);
+    }
+}

@@ -1,0 +1,388 @@
+//! The pluggable input/output embedding abstraction.
+//!
+//! Everything the paper compares — Baseline (identity), BE, CBE, HT
+//! (= BE with k = 1), ECOC, PMI, CCA — implements [`Embedding`], so the
+//! training coordinator and evaluator are embedding-agnostic: they encode
+//! instances into the m-dim space the AOT artifact expects, train with the
+//! embedding's loss family, and decode model outputs back into rankings
+//! over the original d items.
+
+use crate::bloom::{decode_scores, BloomEncoder, HashMatrix};
+use crate::linalg::dense::Mat;
+use crate::linalg::knn::{score_all, Metric};
+
+/// Which loss family (and hence artifact family) an embedding trains with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// softmax + categorical cross-entropy over the embedded multi-hot
+    SoftmaxCe,
+    /// cosine proximity against a dense target embedding
+    Cosine,
+}
+
+impl LossKind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            LossKind::SoftmaxCe => "softmax_ce",
+            LossKind::Cosine => "cosine",
+        }
+    }
+}
+
+/// Input/output embedding: original d-dim sparse binary <-> m-dim vectors.
+pub trait Embedding: Send + Sync {
+    /// embedded input dimensionality
+    fn m_in(&self) -> usize;
+    /// embedded output dimensionality
+    fn m_out(&self) -> usize;
+    fn loss(&self) -> LossKind;
+
+    /// Encode an active-item set into `out` (len `m_in`).
+    fn encode_input(&self, items: &[u32], out: &mut [f32]);
+
+    /// Encode a ground-truth item set into `out` (len `m_out`).
+    fn encode_target(&self, items: &[u32], out: &mut [f32]);
+
+    /// Map a model output (len `m_out`) to scores over the d original
+    /// items (descending = better).
+    fn decode(&self, output: &[f32]) -> Vec<f32>;
+
+    /// Human-readable method tag for result tables.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Identity "embedding": m = d, the paper's Baseline (S_0).
+pub struct Identity {
+    pub d: usize,
+}
+
+impl Embedding for Identity {
+    fn m_in(&self) -> usize {
+        self.d
+    }
+    fn m_out(&self) -> usize {
+        self.d
+    }
+    fn loss(&self) -> LossKind {
+        LossKind::SoftmaxCe
+    }
+    fn encode_input(&self, items: &[u32], out: &mut [f32]) {
+        out.fill(0.0);
+        for &i in items {
+            out[i as usize] = 1.0;
+        }
+    }
+    fn encode_target(&self, items: &[u32], out: &mut [f32]) {
+        self.encode_input(items, out);
+    }
+    fn decode(&self, output: &[f32]) -> Vec<f32> {
+        output.to_vec()
+    }
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Bloom embedding (paper Sec. 3): separate hash matrices for input and
+/// output (they may share m and k but hash independently, and the CADE
+/// task has no output matrix at all). HT is `k = 1`; CBE is a rewritten
+/// output/input matrix.
+pub struct Bloom {
+    pub hm_in: HashMatrix,
+    pub hm_out: Option<HashMatrix>,
+    tag: &'static str,
+}
+
+impl Bloom {
+    pub fn new(hm_in: HashMatrix, hm_out: Option<HashMatrix>) -> Self {
+        let tag = if hm_in.k == 1 { "ht" } else { "be" };
+        Self { hm_in, hm_out, tag }
+    }
+
+    pub fn new_tagged(hm_in: HashMatrix, hm_out: Option<HashMatrix>,
+                      tag: &'static str) -> Self {
+        Self { hm_in, hm_out, tag }
+    }
+
+    fn out_matrix(&self) -> &HashMatrix {
+        self.hm_out.as_ref().unwrap_or(&self.hm_in)
+    }
+}
+
+impl Embedding for Bloom {
+    fn m_in(&self) -> usize {
+        self.hm_in.m
+    }
+    fn m_out(&self) -> usize {
+        self.out_matrix().m
+    }
+    fn loss(&self) -> LossKind {
+        LossKind::SoftmaxCe
+    }
+    fn encode_input(&self, items: &[u32], out: &mut [f32]) {
+        BloomEncoder::new(&self.hm_in).encode_into(items, out);
+    }
+    fn encode_target(&self, items: &[u32], out: &mut [f32]) {
+        BloomEncoder::new(self.out_matrix()).encode_into(items, out);
+    }
+    fn decode(&self, output: &[f32]) -> Vec<f32> {
+        decode_scores(output, self.out_matrix())
+    }
+    fn name(&self) -> &'static str {
+        self.tag
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Code-matrix embedding (ECOC): an arbitrary binary d x m code table.
+/// Encode = OR of the codewords of the active items; decode = mean
+/// log-probability over each item's active code bits (the BE likelihood
+/// generalised to variable-weight codewords).
+pub struct CodeMatrix {
+    pub m: usize,
+    pub d: usize,
+    /// bit-packed rows, `words_per_row` u64 words each
+    bits: Vec<u64>,
+    words_per_row: usize,
+    tag: &'static str,
+}
+
+impl CodeMatrix {
+    pub fn from_rows(d: usize, m: usize, rows: &[Vec<bool>],
+                     tag: &'static str) -> Self {
+        assert_eq!(rows.len(), d);
+        let wpr = m.div_ceil(64);
+        let mut bits = vec![0u64; d * wpr];
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), m);
+            for (j, &b) in row.iter().enumerate() {
+                if b {
+                    bits[i * wpr + j / 64] |= 1u64 << (j % 64);
+                }
+            }
+        }
+        Self { m, d, bits, words_per_row: wpr, tag }
+    }
+
+    #[inline]
+    pub fn bit(&self, item: usize, j: usize) -> bool {
+        self.bits[item * self.words_per_row + j / 64] >> (j % 64) & 1 == 1
+    }
+
+    pub fn row_words(&self, item: usize) -> &[u64] {
+        &self.bits[item * self.words_per_row
+            ..(item + 1) * self.words_per_row]
+    }
+
+    /// Hamming distance between two codewords.
+    pub fn hamming(&self, a: usize, b: usize) -> u32 {
+        self.row_words(a)
+            .iter()
+            .zip(self.row_words(b))
+            .map(|(x, y)| (x ^ y).count_ones())
+            .sum()
+    }
+
+    pub fn popcount(&self, item: usize) -> u32 {
+        self.row_words(item).iter().map(|w| w.count_ones()).sum()
+    }
+}
+
+impl Embedding for CodeMatrix {
+    fn m_in(&self) -> usize {
+        self.m
+    }
+    fn m_out(&self) -> usize {
+        self.m
+    }
+    fn loss(&self) -> LossKind {
+        LossKind::SoftmaxCe
+    }
+    fn encode_input(&self, items: &[u32], out: &mut [f32]) {
+        out.fill(0.0);
+        for &it in items {
+            for j in 0..self.m {
+                if self.bit(it as usize, j) {
+                    out[j] = 1.0;
+                }
+            }
+        }
+    }
+    fn encode_target(&self, items: &[u32], out: &mut [f32]) {
+        self.encode_input(items, out);
+    }
+    fn decode(&self, output: &[f32]) -> Vec<f32> {
+        let logs: Vec<f32> = output
+            .iter()
+            .map(|&p| (p + crate::bloom::LOG_EPS).ln())
+            .collect();
+        (0..self.d)
+            .map(|i| {
+                let mut acc = 0.0f32;
+                let mut ones = 0u32;
+                for j in 0..self.m {
+                    if self.bit(i, j) {
+                        acc += logs[j];
+                        ones += 1;
+                    }
+                }
+                if ones == 0 {
+                    f32::NEG_INFINITY
+                } else {
+                    acc / ones as f32
+                }
+            })
+            .collect()
+    }
+    fn name(&self) -> &'static str {
+        self.tag
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Dense real-valued item-embedding table (PMI, CCA): encode = mean of
+/// active items' embedding rows; decode = similarity of the model output
+/// against every item's row (the "KNN trick", paper Sec. 4.3).
+pub struct DenseTable {
+    /// d x e table
+    pub table: Mat,
+    pub metric: Metric,
+    tag: &'static str,
+}
+
+impl DenseTable {
+    pub fn new(table: Mat, metric: Metric, tag: &'static str) -> Self {
+        Self { table, metric, tag }
+    }
+}
+
+impl Embedding for DenseTable {
+    fn m_in(&self) -> usize {
+        self.table.cols
+    }
+    fn m_out(&self) -> usize {
+        self.table.cols
+    }
+    fn loss(&self) -> LossKind {
+        LossKind::Cosine
+    }
+    fn encode_input(&self, items: &[u32], out: &mut [f32]) {
+        out.fill(0.0);
+        if items.is_empty() {
+            return;
+        }
+        for &it in items {
+            for (o, &v) in out.iter_mut().zip(self.table.row(it as usize)) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / items.len() as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+    fn encode_target(&self, items: &[u32], out: &mut [f32]) {
+        self.encode_input(items, out);
+    }
+    fn decode(&self, output: &[f32]) -> Vec<f32> {
+        score_all(output, &self.table, self.metric)
+    }
+    fn name(&self) -> &'static str {
+        self.tag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_round_trips() {
+        let e = Identity { d: 8 };
+        let mut u = vec![0.0; 8];
+        e.encode_input(&[2, 5], &mut u);
+        assert_eq!(u, vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let scores = e.decode(&u);
+        assert_eq!(scores, u);
+    }
+
+    #[test]
+    fn bloom_names_by_k() {
+        let mut rng = Rng::new(1);
+        let be = Bloom::new(HashMatrix::random(10, 8, 4, &mut rng), None);
+        assert_eq!(be.name(), "be");
+        let ht = Bloom::new(HashMatrix::random(10, 8, 1, &mut rng), None);
+        assert_eq!(ht.name(), "ht");
+    }
+
+    #[test]
+    fn bloom_without_output_matrix_reuses_input() {
+        let mut rng = Rng::new(2);
+        let be = Bloom::new(HashMatrix::random(10, 8, 2, &mut rng), None);
+        assert_eq!(be.m_out(), 8);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        be.encode_input(&[3], &mut a);
+        be.encode_target(&[3], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn code_matrix_bits_and_hamming() {
+        let rows = vec![
+            vec![true, false, true, false],
+            vec![true, true, false, false],
+            vec![false, false, false, true],
+        ];
+        let cm = CodeMatrix::from_rows(3, 4, &rows, "ecoc");
+        assert!(cm.bit(0, 0) && !cm.bit(0, 1));
+        assert_eq!(cm.hamming(0, 1), 2);
+        assert_eq!(cm.hamming(0, 2), 3);
+        assert_eq!(cm.popcount(1), 2);
+    }
+
+    #[test]
+    fn code_matrix_encode_is_or() {
+        let rows = vec![
+            vec![true, false, false],
+            vec![false, true, false],
+        ];
+        let cm = CodeMatrix::from_rows(2, 3, &rows, "ecoc");
+        let mut u = vec![0.0; 3];
+        cm.encode_input(&[0, 1], &mut u);
+        assert_eq!(u, vec![1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn code_matrix_decode_ranks_matching_codeword_first() {
+        let rows = vec![
+            vec![true, true, false, false],
+            vec![false, false, true, true],
+        ];
+        let cm = CodeMatrix::from_rows(2, 4, &rows, "ecoc");
+        let probs = vec![0.4, 0.4, 0.1, 0.1];
+        let scores = cm.decode(&probs);
+        assert!(scores[0] > scores[1]);
+    }
+
+    #[test]
+    fn dense_table_decode_prefers_aligned_item() {
+        let table = Mat::from_rows(vec![
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+        ]);
+        let dt = DenseTable::new(table, Metric::Cosine, "pmi");
+        let scores = dt.decode(&[0.9, 0.1]);
+        assert!(scores[0] > scores[1]);
+        let mut enc = vec![0.0; 2];
+        dt.encode_input(&[0, 1], &mut enc);
+        assert_eq!(enc, vec![0.5, 0.5]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Evaluation measures (paper Sec. 4.1 / Table 2): mean average precision
+//! (MAP), reciprocal rank (RR), and classification accuracy (Acc) —
+//! computed over decoded rankings in the *original* d-dim item space.
+
+use std::collections::HashSet;
+
+/// Average precision of a ranking against a relevant-item set.
+/// `ranking` is a descending list of item ids; `relevant` the ground
+/// truth. Input items already consumed by the user should be excluded
+/// from `ranking` by the caller (see `Evaluator` in the coordinator).
+pub fn average_precision(ranking: &[usize], relevant: &HashSet<usize>) -> f64 {
+    if relevant.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    let mut acc = 0.0f64;
+    for (rank0, item) in ranking.iter().enumerate() {
+        if relevant.contains(item) {
+            hits += 1;
+            acc += hits as f64 / (rank0 + 1) as f64;
+            if hits == relevant.len() {
+                break;
+            }
+        }
+    }
+    acc / relevant.len() as f64
+}
+
+/// Average precision from the 1-based ranks of the relevant items in the
+/// full descending ranking (the O(d * r) hot path — equivalent to
+/// [`average_precision`] over a complete ranking).
+pub fn average_precision_from_ranks(ranks: &mut [usize]) -> f64 {
+    if ranks.is_empty() {
+        return 0.0;
+    }
+    ranks.sort_unstable();
+    ranks
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| (i + 1) as f64 / r as f64)
+        .sum::<f64>()
+        / ranks.len() as f64
+}
+
+/// Reciprocal rank of the single target item (0 if absent).
+pub fn reciprocal_rank(ranking: &[usize], target: usize) -> f64 {
+    ranking
+        .iter()
+        .position(|&i| i == target)
+        .map(|r| 1.0 / (r + 1) as f64)
+        .unwrap_or(0.0)
+}
+
+/// Top-1 accuracy over (predicted, truth) label pairs, in percent
+/// (the paper reports CADE accuracy as a percentage).
+pub fn accuracy_pct(pred: &[u16], truth: &[u16]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    100.0 * correct as f64 / pred.len() as f64
+}
+
+/// Which measure a task reports (manifest `metric` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Measure {
+    Map,
+    Rr,
+    Acc,
+}
+
+impl Measure {
+    pub fn parse(s: &str) -> Option<Measure> {
+        match s {
+            "map" => Some(Measure::Map),
+            "rr" => Some(Measure::Rr),
+            "acc" => Some(Measure::Acc),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Measure::Map => "MAP",
+            Measure::Rr => "RR",
+            Measure::Acc => "Acc",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(items: &[usize]) -> HashSet<usize> {
+        items.iter().copied().collect()
+    }
+
+    #[test]
+    fn ap_perfect_ranking_is_one() {
+        let ranking = [3, 7, 1, 0, 2];
+        assert_eq!(average_precision(&ranking, &set(&[3, 7])), 1.0);
+    }
+
+    #[test]
+    fn ap_hand_computed_case() {
+        // relevant at ranks 1 and 3: AP = (1/1 + 2/3) / 2 = 5/6
+        let ranking = [9, 5, 4, 8];
+        let ap = average_precision(&ranking, &set(&[9, 4]));
+        assert!((ap - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_missing_items_penalised() {
+        // one of two relevant items never appears
+        let ranking = [9, 5];
+        let ap = average_precision(&ranking, &set(&[9, 1000]));
+        assert!((ap - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_empty_relevant_is_zero() {
+        assert_eq!(average_precision(&[1, 2], &set(&[])), 0.0);
+    }
+
+    #[test]
+    fn ap_from_ranks_matches_ap_from_ranking() {
+        // ranking [9, 5, 4, 8], relevant {9, 4} -> ranks {1, 3}
+        let ranking = [9usize, 5, 4, 8];
+        let want = average_precision(&ranking, &set(&[9, 4]));
+        let mut ranks = vec![3usize, 1];
+        assert!((average_precision_from_ranks(&mut ranks) - want).abs()
+                < 1e-12);
+        assert_eq!(average_precision_from_ranks(&mut []), 0.0);
+    }
+
+    #[test]
+    fn rr_basic_positions() {
+        assert_eq!(reciprocal_rank(&[5, 3, 1], 5), 1.0);
+        assert_eq!(reciprocal_rank(&[5, 3, 1], 3), 0.5);
+        assert!((reciprocal_rank(&[5, 3, 1], 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(reciprocal_rank(&[5, 3, 1], 99), 0.0);
+    }
+
+    #[test]
+    fn accuracy_pct_counts() {
+        assert_eq!(accuracy_pct(&[1, 2, 3, 4], &[1, 2, 0, 4]), 75.0);
+        assert_eq!(accuracy_pct(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn measure_parsing() {
+        assert_eq!(Measure::parse("map"), Some(Measure::Map));
+        assert_eq!(Measure::parse("rr"), Some(Measure::Rr));
+        assert_eq!(Measure::parse("acc"), Some(Measure::Acc));
+        assert_eq!(Measure::parse("auc"), None);
+    }
+}

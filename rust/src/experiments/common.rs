@@ -1,0 +1,256 @@
+//! Shared experiment machinery: grid execution, S_0 baseline caching,
+//! table rendering, TSV output.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::Options;
+use crate::coordinator::{run, DatasetCache, Method, RunResult, RunSpec};
+use crate::runtime::Runtime;
+use crate::util::stats::mean;
+
+/// Execution context threaded through every experiment.
+pub struct Ctx<'a> {
+    pub rt: &'a Runtime,
+    pub opts: &'a Options,
+    pub data: DatasetCache,
+    /// memoised results keyed by (task, method, ratio, seed)
+    results: Mutex<HashMap<String, RunResult>>,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(rt: &'a Runtime, opts: &'a Options) -> Self {
+        Self {
+            rt,
+            opts,
+            data: DatasetCache::new(),
+            results: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn key(spec: &RunSpec) -> String {
+        format!("{}|{}|{:.4}|{}|{:?}",
+                spec.task, spec.method.name(), spec.ratio, spec.seed,
+                spec.scale)
+    }
+
+    /// Run one point (memoised — baselines are shared across figures).
+    pub fn point(&self, task: &str, method: Method, ratio: f64, seed: u64)
+        -> Result<RunResult> {
+        let spec = RunSpec {
+            task: task.into(),
+            method,
+            ratio,
+            seed,
+            scale: self.opts.scale,
+            epochs: self.opts.epochs,
+        };
+        let key = Self::key(&spec);
+        if let Some(r) = self.results.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        crate::info!("run {} {} m/d={:.3} seed={}", spec.task,
+                     spec.method.name(), ratio, seed);
+        let result = run(self.rt, &self.data, &spec)?;
+        self.results.lock().unwrap().insert(key, result.clone());
+        Ok(result)
+    }
+
+    /// Baseline score S_0 for a task (mean over the option seeds).
+    pub fn s0(&self, task: &str) -> Result<f64> {
+        let scores: Result<Vec<f64>> = self
+            .opts
+            .seeds
+            .iter()
+            .map(|&s| Ok(self.point(task, Method::Baseline, 1.0, s)?.score))
+            .collect();
+        Ok(mean(&scores?))
+    }
+
+    /// Baseline result of the FIRST seed (timing reference T_0 in Fig. 3).
+    pub fn baseline_run(&self, task: &str) -> Result<RunResult> {
+        self.point(task, Method::Baseline, 1.0, self.opts.seeds[0])
+    }
+
+    /// Mean of `score` over all seeds for a point.
+    pub fn score_over_seeds(&self, task: &str, method: Method, ratio: f64)
+        -> Result<Vec<f64>> {
+        self.opts
+            .seeds
+            .iter()
+            .map(|&s| Ok(self.point(task, method, ratio, s)?.score))
+            .collect()
+    }
+
+    pub fn tasks(&self) -> Vec<crate::runtime::TaskSpec> {
+        self.rt
+            .manifest
+            .tasks
+            .iter()
+            .filter(|t| self.opts.task_enabled(&t.name))
+            .cloned()
+            .collect()
+    }
+}
+
+/// A rendered experiment artifact: a title, column headers and rows.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    /// Aligned plain-text rendering (also valid Markdown).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = format!("## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (cell, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {cell:w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Tab-separated dump for plotting tools.
+    pub fn write_tsv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.columns.join("\t"))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join("\t"))?;
+        }
+        Ok(())
+    }
+}
+
+pub fn fmt3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn fmt2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Mark the best value in a row of (label, samples) with significance:
+/// values statistically indistinguishable from the max are all bold —
+/// mirroring the paper's Table 3 convention (Mann-Whitney U, p > 0.05).
+///
+/// MWU has no power below n = 4 per side (its smallest attainable
+/// two-sided p at 3 vs 3 is 0.1), so for fewer seeds we fall back to a
+/// one-pooled-sigma overlap rule; EXPERIMENTS.md documents which rule a
+/// table used.
+pub fn bold_best(samples: &[(String, Vec<f64>)]) -> Vec<(String, String)> {
+    let best_idx = samples
+        .iter()
+        .enumerate()
+        .max_by(|a, b| {
+            mean(&a.1 .1).partial_cmp(&mean(&b.1 .1)).unwrap()
+        })
+        .map(|(i, _)| i);
+    let Some(bi) = best_idx else { return Vec::new() };
+    let best = &samples[bi].1;
+    let best_mean = mean(best);
+    samples
+        .iter()
+        .enumerate()
+        .map(|(i, (label, vals))| {
+            let m = mean(vals);
+            let is_best = if i == bi {
+                true
+            } else if vals.len() >= 4 && best.len() >= 4 {
+                crate::util::stats::mann_whitney_u(vals, best).p_value
+                    > 0.05
+            } else {
+                let sigma = crate::util::stats::std_dev(vals)
+                    .max(crate::util::stats::std_dev(best));
+                (best_mean - m) <= sigma
+            };
+            let cell = if is_best {
+                format!("**{m:.3}**")
+            } else {
+                format!("{m:.3}")
+            };
+            (label.clone(), cell)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["a", "long_column"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| a | long_column |"));
+        assert!(s.contains("| 1 | 2           |"));
+    }
+
+    #[test]
+    fn tsv_round_trip() {
+        let mut t = Table::new("x", &["c1", "c2"]);
+        t.row(vec!["a".into(), "b".into()]);
+        let p = std::env::temp_dir().join("bloomrec_tsv_test.tsv");
+        t.write_tsv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "c1\tc2\na\tb\n");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn bold_best_marks_ties() {
+        let rows = vec![
+            ("lo".to_string(), vec![0.1, 0.11, 0.09, 0.1, 0.12]),
+            ("hi_a".to_string(), vec![0.9, 0.91, 0.89, 0.9, 0.88]),
+            ("hi_b".to_string(), vec![0.9, 0.9, 0.9, 0.91, 0.89]),
+        ];
+        let cells = bold_best(&rows);
+        assert!(!cells[0].1.starts_with("**"));
+        assert!(cells[1].1.starts_with("**"));
+        assert!(cells[2].1.starts_with("**"));
+    }
+}

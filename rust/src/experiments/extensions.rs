@@ -1,0 +1,83 @@
+//! Extension experiments beyond the paper's published evaluation —
+//! the two concrete items its Sec. 7 leaves open:
+//!
+//! * `ext_fp`:      the pending "detailed, comparative analysis of false
+//!                  positives and false negatives" — theory vs measured
+//!                  FP rate across the (m/d, k) grid, FN rate (always 0),
+//!                  and the phantom-item rate at the ranking level.
+//! * `ext_counting`: counting Bloom embeddings — BE vs counting-BE score
+//!                  ratios at the Table-3 test points.
+
+use anyhow::Result;
+
+use super::common::{fmt2, fmt3, Ctx, Table};
+use crate::bloom::{measure_fp, HashMatrix};
+use crate::coordinator::Method;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+
+/// FP/FN analysis across the compression grid (no training needed).
+pub fn ext_fp(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Ext. A — Bloom false-positive/negative analysis \
+         (theory vs measured)",
+        &["task", "m/d", "m", "k", "c", "fp theory", "fp measured",
+          "fn", "phantom trials"]);
+    let trials = 25;
+    for task in ctx.tasks() {
+        // measure at the task's median cardinality, over its m/d grid
+        let c = task.c_median.max(1);
+        for &ratio in &task.ratios {
+            let m = crate::runtime::round_m(task.d, ratio);
+            for k in [2usize, 4, 8] {
+                if k > m {
+                    continue;
+                }
+                let mut rng =
+                    Rng::new(ctx.opts.seeds[0] ^ (m as u64) << 4 ^ k as u64);
+                let hm = HashMatrix::random(task.d, m, k, &mut rng);
+                let rep = measure_fp(&hm, c, trials, &mut rng);
+                table.row(vec![
+                    task.name.clone(),
+                    fmt2(ratio),
+                    m.to_string(),
+                    k.to_string(),
+                    c.to_string(),
+                    format!("{:.2e}", rep.theory),
+                    format!("{:.2e}", rep.observed_fp),
+                    format!("{:.0e}", rep.observed_fn),
+                    fmt2(rep.phantom_outrank),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Counting-BE vs binary BE at the Table-3 test points.
+pub fn ext_counting(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Ext. B — counting Bloom embeddings vs binary BE \
+         (score ratios S_i/S_0, k=4)",
+        &["task", "m/d", "BE", "counting BE", "delta"]);
+    for task in ctx.tasks() {
+        if task.family == "classifier" {
+            continue; // outputs are classes; counting targets are moot
+        }
+        let s0 = ctx.s0(&task.name)?.max(1e-12);
+        for &tp in &task.test_points {
+            let be = mean(&ctx.score_over_seeds(
+                &task.name, Method::Be { k: 4 }, tp)?) / s0;
+            let cnt = mean(&ctx.score_over_seeds(
+                &task.name, Method::CntBe { k: 4 }, tp)?) / s0;
+            table.row(vec![
+                task.name.clone(),
+                fmt2(tp),
+                fmt3(be),
+                fmt3(cnt),
+                format!("{:+.3}", cnt - be),
+            ]);
+        }
+    }
+    Ok(table)
+}

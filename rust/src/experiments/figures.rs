@@ -1,0 +1,130 @@
+//! Figure reproductions (paper Sec. 5-6): score/time curves as TSV series
+//! plus rendered tables.
+
+use anyhow::Result;
+
+use super::common::{fmt2, fmt3, Ctx, Table};
+use crate::coordinator::Method;
+use crate::util::stats::mean;
+
+/// Figure 1: S_i/S_0 vs m/d at k = 4, one series per task.
+pub fn fig1(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 1 — score ratio S_i/S_0 vs dimensionality ratio m/d (BE, k=4)",
+        &["task", "m/d", "S_i", "S_0", "S_i/S_0"]);
+    for task in ctx.tasks() {
+        let s0 = ctx.s0(&task.name)?;
+        for &ratio in &task.ratios {
+            let scores =
+                ctx.score_over_seeds(&task.name, Method::Be { k: 4 }, ratio)?;
+            let si = mean(&scores);
+            table.row(vec![
+                task.name.clone(),
+                fmt2(ratio),
+                fmt3(si),
+                fmt3(s0),
+                fmt3(si / s0.max(1e-12)),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// Figure 2: S_i/S_0 vs the number of hash functions k, at m/d = 0.3
+/// (left panel) and m/d = 1.0 (right panel).
+pub fn fig2(ctx: &Ctx) -> Result<Table> {
+    let ks = [1usize, 2, 3, 4, 5, 7, 10];
+    let mut table = Table::new(
+        "Figure 2 — score ratio S_i/S_0 vs number of hash functions k",
+        &["task", "m/d", "k", "S_i/S_0"]);
+    for task in ctx.tasks() {
+        let s0 = ctx.s0(&task.name)?;
+        for &ratio in &[0.3f64, 1.0] {
+            // CADE's grid has no 0.3 by default; clamp to nearest ratio
+            let ratio = nearest(&task.ratios, ratio);
+            for &k in &ks {
+                let method = if k == 1 { Method::Ht } else { Method::Be { k } };
+                let scores =
+                    ctx.score_over_seeds(&task.name, method, ratio)?;
+                table.row(vec![
+                    task.name.clone(),
+                    fmt2(ratio),
+                    k.to_string(),
+                    fmt3(mean(&scores) / s0.max(1e-12)),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Figure 3: training-time and evaluation-time ratios T_i/T_0 vs m/d
+/// (k = 4). Uses the first seed only — timing, not score, is the payload.
+pub fn fig3(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 3 — time ratios T_i/T_0 vs m/d (BE, k=4)",
+        &["task", "m/d", "train_s", "eval_s", "train_ratio", "eval_ratio"]);
+    for task in ctx.tasks() {
+        let base = ctx.baseline_run(&task.name)?;
+        let t0_train = base.train.train_secs.max(1e-9);
+        let t0_eval = base.eval.eval_secs.max(1e-9);
+        for &ratio in &task.ratios {
+            let r = ctx.point(&task.name, Method::Be { k: 4 }, ratio,
+                              ctx.opts.seeds[0])?;
+            table.row(vec![
+                task.name.clone(),
+                fmt2(ratio),
+                fmt3(r.train.train_secs),
+                fmt3(r.eval.eval_secs),
+                fmt3(r.train.train_secs / t0_train),
+                fmt3(r.eval.eval_secs / t0_eval),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// Figure 4: CBE vs BE score-ratio curves at k = 4.
+pub fn fig4(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 4 — CBE vs BE score ratios (k=4)",
+        &["task", "m/d", "BE", "CBE", "CBE-BE"]);
+    for task in ctx.tasks() {
+        let s0 = ctx.s0(&task.name)?.max(1e-12);
+        for &ratio in &task.ratios {
+            let be = mean(&ctx.score_over_seeds(
+                &task.name, Method::Be { k: 4 }, ratio)?) / s0;
+            let cbe = mean(&ctx.score_over_seeds(
+                &task.name, Method::Cbe { k: 4 }, ratio)?) / s0;
+            table.row(vec![
+                task.name.clone(),
+                fmt2(ratio),
+                fmt3(be),
+                fmt3(cbe),
+                fmt3(cbe - be),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+fn nearest(grid: &[f64], target: f64) -> f64 {
+    grid.iter()
+        .copied()
+        .min_by(|a, b| {
+            (a - target).abs().partial_cmp(&(b - target).abs()).unwrap()
+        })
+        .unwrap_or(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_picks_closest() {
+        assert_eq!(nearest(&[0.1, 0.3, 1.0], 0.3), 0.3);
+        assert_eq!(nearest(&[0.01, 0.03, 0.1], 0.3), 0.1);
+        assert_eq!(nearest(&[], 0.5), 0.5);
+    }
+}

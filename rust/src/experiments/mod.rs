@@ -1,0 +1,44 @@
+//! Experiment registry: one entry per paper table/figure (DESIGN.md
+//! "Experiment index"). Each regenerates its artifact as a rendered table
+//! + a TSV in the results directory.
+
+pub mod common;
+pub mod extensions;
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+pub use common::{Ctx, Table};
+
+/// The paper's own tables and figures.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "fig1", "fig2", "fig3", "table3", "fig4",
+    "table4", "table5",
+];
+
+/// Extension experiments from the paper's future-work section.
+pub const EXTENDED: &[&str] = &["ext_fp", "ext_counting"];
+
+/// Run one experiment by id; writes `<out>/<id>.tsv` and returns the
+/// rendered table.
+pub fn run_experiment(id: &str, ctx: &Ctx) -> Result<Table> {
+    let table = match id {
+        "table1" => tables::table1(ctx)?,
+        "table2" => tables::table2(ctx)?,
+        "table3" => tables::table3(ctx)?,
+        "table4" => tables::table4(ctx)?,
+        "table5" => tables::table5(ctx)?,
+        "fig1" => figures::fig1(ctx)?,
+        "fig2" => figures::fig2(ctx)?,
+        "fig3" => figures::fig3(ctx)?,
+        "fig4" => figures::fig4(ctx)?,
+        "ext_fp" => extensions::ext_fp(ctx)?,
+        "ext_counting" => extensions::ext_counting(ctx)?,
+        other => bail!(
+            "unknown experiment '{other}' (try: {ALL:?} or {EXTENDED:?})"),
+    };
+    let path = ctx.opts.out_dir.join(format!("{id}.tsv"));
+    table.write_tsv(&path)?;
+    Ok(table)
+}

@@ -1,0 +1,185 @@
+//! Table reproductions (paper Tables 1-5).
+
+use anyhow::Result;
+
+use super::common::{bold_best, fmt2, fmt3, Ctx, Table};
+use crate::bloom::cooccurrence_stats;
+use crate::coordinator::{random_score, Method};
+use crate::eval::Measure;
+use crate::util::stats::mean;
+
+/// Table 1: dataset statistics after generation and splitting.
+pub fn table1(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Table 1 — dataset statistics (synthetic analogs)",
+        &["dataset", "n", "split", "d", "c", "c/d"]);
+    for task in ctx.tasks() {
+        let ds = ctx.data.get(&task, ctx.opts.scale, ctx.opts.seeds[0]);
+        let st = ds.stats();
+        table.row(vec![
+            task.name.clone(),
+            st.n.to_string(),
+            st.split.to_string(),
+            st.d.to_string(),
+            format!("{:.0}", st.c_median),
+            format!("{:.1e}", st.density_median),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 2: setups + random score S_R + baseline score S_0.
+pub fn table2(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Table 2 — setups and baseline scores",
+        &["dataset", "architecture", "optimizer", "measure", "S_R", "S_0"]);
+    for task in ctx.tasks() {
+        let ds = ctx.data.get(&task, ctx.opts.scale, ctx.opts.seeds[0]);
+        let measure = Measure::parse(&task.metric).unwrap();
+        let s_r = random_score(&ds, measure, ctx.opts.seeds[0]);
+        let s0 = ctx.s0(&task.name)?;
+        let arch = match task.family.as_str() {
+            "ff" => format!("FF {:?}", task.hidden),
+            "classifier" => format!("FF {:?}+{}", task.hidden,
+                                    task.n_classes),
+            other => format!("{} {:?}", other.to_uppercase(), task.hidden),
+        };
+        table.row(vec![
+            task.name.clone(),
+            arch,
+            task.optimizer.clone(),
+            measure.name().into(),
+            fmt3(s_r),
+            fmt3(s0),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 3: BE (k = 3, 4, 5) vs HT / ECOC / PMI / CCA at the two test
+/// points per task; bold = best up to Mann-Whitney U significance.
+pub fn table3(ctx: &Ctx) -> Result<Table> {
+    let methods: Vec<(&str, Method)> = vec![
+        ("HT", Method::Ht),
+        ("ECOC", Method::Ecoc),
+        ("PMI", Method::Pmi),
+        ("CCA", Method::Cca),
+        ("BE k=3", Method::Be { k: 3 }),
+        ("BE k=4", Method::Be { k: 4 }),
+        ("BE k=5", Method::Be { k: 5 }),
+    ];
+    let mut cols = vec!["dataset".to_string(), "m/d".to_string()];
+    cols.extend(methods.iter().map(|(n, _)| n.to_string()));
+    let mut table = Table::new(
+        "Table 3 — BE vs alternatives (score ratios S_i/S_0)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    for task in ctx.tasks() {
+        let s0 = ctx.s0(&task.name)?.max(1e-12);
+        for &tp in &task.test_points {
+            let mut samples: Vec<(String, Vec<f64>)> = Vec::new();
+            for (label, method) in &methods {
+                let scores =
+                    ctx.score_over_seeds(&task.name, *method, tp)?;
+                let ratios: Vec<f64> =
+                    scores.iter().map(|s| s / s0).collect();
+                samples.push((label.to_string(), ratios));
+            }
+            let cells = bold_best(&samples);
+            let mut row = vec![task.name.clone(), fmt2(tp)];
+            row.extend(cells.into_iter().map(|(_, c)| c));
+            table.row(row);
+        }
+    }
+    Ok(table)
+}
+
+/// Table 4: co-occurrence statistics + average CBE-over-BE score gain.
+pub fn table4(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Table 4 — co-occurrence statistics and CBE score increase",
+        &["dataset", "in %", "in rho", "out %", "out rho",
+          "gain k=3 (%)", "gain k=4 (%)"]);
+    for task in ctx.tasks() {
+        let ds = ctx.data.get(&task, ctx.opts.scale, ctx.opts.seeds[0]);
+        let in_stats = cooccurrence_stats(&ds.train_input_csr());
+        let (out_pct, out_rho) = if task.family == "classifier" {
+            ("N/A".to_string(), "N/A".to_string())
+        } else {
+            let st = cooccurrence_stats(&ds.train_target_csr());
+            (fmt2(st.pct_pairs), format!("{:.1e}", st.rho))
+        };
+
+        let s0 = ctx.s0(&task.name)?.max(1e-12);
+        let mut gains = Vec::new();
+        for k in [3usize, 4] {
+            // paper: average of 100*(S_cbe - S_be)/S_0 over all m/d points
+            let mut diffs = Vec::new();
+            for &ratio in &task.ratios {
+                let be = mean(&ctx.score_over_seeds(
+                    &task.name, Method::Be { k }, ratio)?);
+                let cbe = mean(&ctx.score_over_seeds(
+                    &task.name, Method::Cbe { k }, ratio)?);
+                diffs.push(100.0 * (cbe - be) / s0);
+            }
+            gains.push(mean(&diffs));
+        }
+
+        table.row(vec![
+            task.name.clone(),
+            fmt2(in_stats.pct_pairs),
+            format!("{:.1e}", in_stats.rho),
+            out_pct,
+            out_rho,
+            format!("{:+.1}", gains[0]),
+            format!("{:+.1}", gains[1]),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 5: CBE (k = 3, 4) against the best method from Table 3 at each
+/// test point.
+pub fn table5(ctx: &Ctx) -> Result<Table> {
+    let alternatives: Vec<(&str, Method)> = vec![
+        ("HT", Method::Ht),
+        ("ECOC", Method::Ecoc),
+        ("PMI", Method::Pmi),
+        ("CCA", Method::Cca),
+        ("BE k=3", Method::Be { k: 3 }),
+        ("BE k=4", Method::Be { k: 4 }),
+        ("BE k=5", Method::Be { k: 5 }),
+    ];
+    let mut table = Table::new(
+        "Table 5 — CBE vs best-so-far (score ratios S_i/S_0)",
+        &["dataset", "m/d", "best method", "best", "CBE k=3", "CBE k=4"]);
+
+    for task in ctx.tasks() {
+        let s0 = ctx.s0(&task.name)?.max(1e-12);
+        for &tp in &task.test_points {
+            // best-so-far among Table 3's contenders
+            let mut best: Option<(String, f64)> = None;
+            for (label, method) in &alternatives {
+                let si = mean(&ctx.score_over_seeds(
+                    &task.name, *method, tp)?) / s0;
+                if best.as_ref().map_or(true, |(_, b)| si > *b) {
+                    best = Some((label.to_string(), si));
+                }
+            }
+            let (best_label, best_score) = best.unwrap();
+            let cbe3 = mean(&ctx.score_over_seeds(
+                &task.name, Method::Cbe { k: 3 }, tp)?) / s0;
+            let cbe4 = mean(&ctx.score_over_seeds(
+                &task.name, Method::Cbe { k: 4 }, tp)?) / s0;
+            table.row(vec![
+                task.name.clone(),
+                fmt2(tp),
+                best_label,
+                fmt3(best_score),
+                fmt3(cbe3),
+                fmt3(cbe4),
+            ]);
+        }
+    }
+    Ok(table)
+}

@@ -1,0 +1,30 @@
+//! # bloomrec
+//!
+//! Production-quality reproduction of **"Getting Deep Recommenders Fit:
+//! Bloom Embeddings for Sparse Binary Input/Output Networks"**
+//! (Serrà & Karatzoglou, RecSys 2017).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * Layer 3 (this crate): coordinator — datasets, Bloom/CBE encode +
+//!   decode, baselines, training orchestration, evaluation, serving.
+//! * Layer 2: JAX models, AOT-lowered to HLO text (`python/compile/`).
+//! * Layer 1: Pallas kernels inside those artifacts.
+//!
+//! Python never runs on the request path; the `runtime` module drives the
+//! AOT artifacts through the PJRT CPU client of the `xla` crate.
+
+pub mod bloom;
+pub mod linalg;
+pub mod util;
+
+// modules added as the build proceeds bottom-up
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod runtime;
+pub mod serve;

@@ -1,0 +1,290 @@
+//! Row-major dense f32 matrix with the operations the baselines need:
+//! matmul, transpose, QR (modified Gram-Schmidt), norms.
+//!
+//! Deliberately simple — the heavy numeric work in this repo runs in the
+//! AOT-compiled XLA artifacts; this dense kernel set only powers the
+//! embedding *construction* phase (PMI/CCA SVD, ECOC search), which is
+//! off the request path.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Gaussian random matrix (for randomized SVD test sketches).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// self [m,k] * other [k,n] -> [m,n], blocked i-k-j loop order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows,
+                   "matmul dims {}x{} * {}x{}", self.rows, self.cols,
+                   other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // sparse-ish inputs are common here
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// In-place column L2 normalisation (zero columns left untouched).
+    pub fn normalize_columns(&mut self) {
+        for c in 0..self.cols {
+            let mut norm = 0.0f32;
+            for r in 0..self.rows {
+                let v = self.at(r, c);
+                norm += v * v;
+            }
+            let norm = norm.sqrt();
+            if norm > 1e-12 {
+                for r in 0..self.rows {
+                    *self.at_mut(r, c) /= norm;
+                }
+            }
+        }
+    }
+
+    /// In-place row L2 normalisation.
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if norm > 1e-12 {
+                for v in row {
+                    *v /= norm;
+                }
+            }
+        }
+    }
+}
+
+/// Thin QR via modified Gram-Schmidt; returns Q [m,k] with orthonormal
+/// columns (rank-deficient columns re-randomised would be overkill here —
+/// they are zeroed).
+pub fn qr_q(a: &Mat) -> Mat {
+    let (m, k) = (a.rows, a.cols);
+    let mut q = a.clone();
+    for j in 0..k {
+        // subtract projections on previous columns (twice for stability)
+        for _ in 0..2 {
+            for p in 0..j {
+                let mut dot = 0.0f32;
+                for i in 0..m {
+                    dot += q.at(i, p) * q.at(i, j);
+                }
+                for i in 0..m {
+                    let v = q.at(i, p);
+                    *q.at_mut(i, j) -= dot * v;
+                }
+            }
+        }
+        let mut norm = 0.0f32;
+        for i in 0..m {
+            let v = q.at(i, j);
+            norm += v * v;
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-10 {
+            for i in 0..m {
+                *q.at_mut(i, j) /= norm;
+            }
+        } else {
+            for i in 0..m {
+                *q.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    q
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Cosine similarity (0 when either vector is ~zero).
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = dot(a, a).sqrt();
+    let nb = dot(b, b).sqrt();
+    if na < 1e-12 || nb < 1e-12 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// Pearson correlation of two slices.
+pub fn correlation(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len() as f32;
+    if n < 1.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f32>() / n;
+    let mb = b.iter().sum::<f32>() / n;
+    let mut num = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va < 1e-12 || vb < 1e-12 {
+        0.0
+    } else {
+        num / (va.sqrt() * vb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0, 3.0]]);
+        let b = Mat::from_rows(vec![vec![4.0], vec![5.0], vec![6.0]]);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (1, 1));
+        assert_eq!(c.at(0, 0), 32.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(7, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn qr_columns_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(50, 8, &mut rng);
+        let q = qr_q(&a);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut d = 0.0f32;
+                for r in 0..50 {
+                    d += q.at(r, i) * q.at(r, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j})={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn correlation_basics() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((correlation(&a, &b) - 1.0).abs() < 1e-5);
+        let c = [4.0, 3.0, 2.0, 1.0];
+        assert!((correlation(&a, &c) + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut a = Mat::from_rows(vec![vec![3.0, 4.0], vec![0.0, 0.0]]);
+        a.normalize_rows();
+        assert!((dot(a.row(0), a.row(0)) - 1.0).abs() < 1e-6);
+        assert_eq!(a.row(1), &[0.0, 0.0]);
+    }
+}

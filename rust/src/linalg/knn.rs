@@ -1,0 +1,167 @@
+//! Top-k retrieval over item embedding tables (the PMI/CCA "KNN trick",
+//! paper Sec. 4.3: rank original items by similarity between the model's
+//! output vector and each item's embedding).
+
+use crate::linalg::dense::{cosine, correlation, Mat};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Cosine,
+    Correlation,
+}
+
+/// Score every row of `table` [d, e] against `query` [e].
+pub fn score_all(query: &[f32], table: &Mat, metric: Metric) -> Vec<f32> {
+    assert_eq!(query.len(), table.cols);
+    (0..table.rows)
+        .map(|i| match metric {
+            Metric::Cosine => cosine(query, table.row(i)),
+            Metric::Correlation => correlation(query, table.row(i)),
+        })
+        .collect()
+}
+
+/// Indices of the top-k scores, descending, deterministic tie-break by
+/// index. Uses a partial selection (O(d log k)) — the serving hot path.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // min-heap of (score, Reverse(idx)) with fixed capacity k
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Entry(f32, Reverse<usize>);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // NaN-free by construction (scores come from our math)
+            self.0
+                .partial_cmp(&other.0)
+                .unwrap()
+                .then_with(|| self.1.cmp(&other.1))
+        }
+    }
+
+    let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(k);
+    for (i, &s) in scores.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Reverse(Entry(s, Reverse(i))));
+        } else if let Some(Reverse(min)) = heap.peek() {
+            if s > min.0 || (s == min.0 && i < min.1 .0) {
+                heap.pop();
+                heap.push(Reverse(Entry(s, Reverse(i))));
+            }
+        }
+    }
+    let mut out: Vec<(f32, usize)> =
+        heap.into_iter().map(|Reverse(Entry(s, Reverse(i)))| (s, i)).collect();
+    out.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap()
+        .then_with(|| a.1.cmp(&b.1)));
+    out.into_iter().map(|(_, i)| i).collect()
+}
+
+/// 1-based rank of `item` in the descending ranking of `scores`, with
+/// the same deterministic tie-break as [`argsort_desc`] (ties order by
+/// index). O(d) — the evaluation hot path uses this instead of a full
+/// argsort (EXPERIMENTS.md §Perf: ~4x faster ranking metrics).
+pub fn rank_of(scores: &[f32], item: usize) -> usize {
+    let s = scores[item];
+    let mut rank = 1usize;
+    for (i, &v) in scores.iter().enumerate() {
+        if v > s || (v == s && i < item) {
+            rank += 1;
+        }
+    }
+    rank
+}
+
+/// 1-based ranks of several items in one O(d * r) pass (r = items.len()),
+/// consistent with [`rank_of`].
+pub fn ranks_of(scores: &[f32], items: &[usize]) -> Vec<usize> {
+    let mut ranks = vec![1usize; items.len()];
+    for (i, &v) in scores.iter().enumerate() {
+        for (j, &it) in items.iter().enumerate() {
+            let s = scores[it];
+            if v > s || (v == s && i < it) {
+                ranks[j] += 1;
+            }
+        }
+    }
+    ranks
+}
+
+/// Full descending argsort (used by evaluation where the whole ranking is
+/// needed); deterministic tie-break by index.
+pub fn argsort_desc(scores: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap()
+            .then_with(|| a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_matches_argsort_prefix() {
+        let scores = vec![0.1, 0.9, 0.5, 0.7, 0.3, 0.9, 0.0];
+        let full = argsort_desc(&scores);
+        for k in 1..=scores.len() {
+            assert_eq!(top_k(&scores, k), full[..k].to_vec(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn top_k_handles_edge_cases() {
+        assert_eq!(top_k(&[], 5), Vec::<usize>::new());
+        assert_eq!(top_k(&[1.0], 0), Vec::<usize>::new());
+        assert_eq!(top_k(&[1.0, 2.0], 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let scores = vec![0.5, 0.5, 0.5];
+        assert_eq!(top_k(&scores, 2), vec![0, 1]);
+        assert_eq!(argsort_desc(&scores), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rank_of_matches_argsort_position() {
+        let scores = vec![0.3f32, 0.9, 0.5, 0.9, 0.1, 0.5];
+        let full = argsort_desc(&scores);
+        for item in 0..scores.len() {
+            let pos = full.iter().position(|&i| i == item).unwrap() + 1;
+            assert_eq!(rank_of(&scores, item), pos, "item {item}");
+        }
+        let all: Vec<usize> = (0..scores.len()).collect();
+        let ranks = ranks_of(&scores, &all);
+        for (item, &r) in all.iter().zip(&ranks) {
+            assert_eq!(r, rank_of(&scores, *item));
+        }
+    }
+
+    #[test]
+    fn score_all_cosine_ranks_identical_first() {
+        let table = Mat::from_rows(vec![
+            vec![1.0, 0.0],
+            vec![0.7, 0.7],
+            vec![0.0, 1.0],
+        ]);
+        let scores = score_all(&[1.0, 0.0], &table, Metric::Cosine);
+        assert_eq!(argsort_desc(&scores)[0], 0);
+        assert_eq!(argsort_desc(&scores)[2], 2);
+    }
+}

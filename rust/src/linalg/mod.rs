@@ -1,0 +1,13 @@
+//! Linear algebra substrate: dense matrices, CSR sparse matrices,
+//! randomized SVD and top-k retrieval. Off the request path — this code
+//! constructs embeddings (PMI/CCA/ECOC); model compute runs in XLA.
+
+pub mod dense;
+pub mod knn;
+pub mod sparse;
+pub mod svd;
+
+pub use dense::{cosine, correlation, dot, Mat};
+pub use knn::{argsort_desc, top_k, Metric};
+pub use sparse::Csr;
+pub use svd::{randomized_svd, LinOp, Svd};

@@ -1,0 +1,253 @@
+//! CSR sparse matrix for instance data (n x d binary/count matrices).
+//!
+//! The datasets in this repo are extremely sparse (c/d down to 1e-5 in the
+//! paper's Table 1), so all co-occurrence work (CBE Algorithm 1 line 1:
+//! C = X^T X, PMI counting, CCA cross-covariance) runs on CSR.
+
+use crate::linalg::dense::Mat;
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,  // len rows+1
+    pub indices: Vec<u32>,   // len nnz, column ids
+    pub values: Vec<f32>,    // len nnz
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicate coordinates are
+    /// summed.
+    pub fn from_triplets(rows: usize, cols: usize,
+                         mut triplets: Vec<(usize, usize, f32)>) -> Self {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f32> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r + 1] += 1;
+                indices.push(c as u32);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Build a binary CSR from per-row active-position lists.
+    pub fn from_row_sets(cols: usize, rows: &[Vec<u32>]) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        for set in rows {
+            let mut sorted = set.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            indices.extend_from_slice(&sorted);
+            indptr.push(indices.len());
+        }
+        let values = vec![1.0; indices.len()];
+        Self { rows: rows.len(), cols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// y = self * x  (dense vector).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let mut acc = 0.0f32;
+            for (&c, &v) in idx.iter().zip(vals) {
+                acc += v * x[c as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// y = self^T * x (dense vector of len rows) -> len cols.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for (&c, &v) in idx.iter().zip(vals) {
+                y[c as usize] += v * xr;
+            }
+        }
+        y
+    }
+
+    /// Dense product self [n,d] * B [d,k] -> [n,k].
+    pub fn matmul_dense(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let k = b.cols;
+        let mut out = Mat::zeros(self.rows, k);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let out_row = out.row_mut(r);
+            for (&c, &v) in idx.iter().zip(vals) {
+                let b_row = b.row(c as usize);
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense product self^T [d,n] * B [n,k] -> [d,k].
+    pub fn t_matmul_dense(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let k = b.cols;
+        let mut out = Mat::zeros(self.cols, k);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let b_row = b.row(r);
+            for (&c, &v) in idx.iter().zip(vals) {
+                let out_row = out.row_mut(c as usize);
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Column sums (item frequencies for binary matrices).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut sums = vec![0.0f32; self.cols];
+        for (&c, &v) in self.indices.iter().zip(&self.values) {
+            sums[c as usize] += v;
+        }
+        sums
+    }
+
+    /// Upper-triangular co-occurrence counts (i < j) of the *columns* of a
+    /// binary matrix: for every row, count all active pairs. Returns a map
+    /// keyed by (i, j). This is the sparse realisation of C = X^T X
+    /// (Algorithm 1, line 1) that never materialises the d x d matrix.
+    pub fn cooccurrence_pairs(&self)
+        -> std::collections::HashMap<(u32, u32), f32> {
+        let mut counts = std::collections::HashMap::new();
+        for r in 0..self.rows {
+            let (idx, _) = self.row(r);
+            for i in 0..idx.len() {
+                for j in (i + 1)..idx.len() {
+                    let (a, b) = (idx[i].min(idx[j]), idx[i].max(idx[j]));
+                    *counts.entry((a, b)).or_insert(0.0) += 1.0;
+                }
+            }
+        }
+        counts
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            for (&c, &v) in idx.iter().zip(vals) {
+                *out.at_mut(r, c as usize) = v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 3, 0]]
+        Csr::from_triplets(2, 3,
+                           vec![(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)])
+    }
+
+    #[test]
+    fn triplets_build_and_dedup() {
+        let m = Csr::from_triplets(2, 2,
+                                   vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 1.0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row(0), (&[0u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = sample();
+        assert_eq!(m.matvec(&[1.0, 1.0, 1.0]), vec![3.0, 3.0]);
+        assert_eq!(m.matvec_t(&[1.0, 1.0]), vec![1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn matmul_dense_matches_dense() {
+        let m = sample();
+        let b = Mat::from_rows(vec![
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ]);
+        let got = m.matmul_dense(&b);
+        let want = m.to_dense().matmul(&b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn t_matmul_dense_matches_dense() {
+        let m = sample();
+        let b = Mat::from_rows(vec![vec![1.0, 0.5], vec![2.0, 0.25]]);
+        let got = m.t_matmul_dense(&b);
+        let want = m.to_dense().transpose().matmul(&b);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn from_row_sets_binary_sorted() {
+        let m = Csr::from_row_sets(5, &[vec![3, 1, 3], vec![], vec![4]]);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.row(0), (&[1u32, 3][..], &[1.0f32, 1.0][..]));
+        assert_eq!(m.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn cooccurrence_counts_pairs() {
+        // rows: {0,1,2}, {0,1}, {2}
+        let m = Csr::from_row_sets(3, &[vec![0, 1, 2], vec![0, 1], vec![2]]);
+        let co = m.cooccurrence_pairs();
+        assert_eq!(co[&(0, 1)], 2.0);
+        assert_eq!(co[&(0, 2)], 1.0);
+        assert_eq!(co[&(1, 2)], 1.0);
+        assert_eq!(co.len(), 3);
+    }
+
+    #[test]
+    fn col_sums_counts() {
+        let m = sample();
+        assert_eq!(m.col_sums(), vec![1.0, 3.0, 2.0]);
+    }
+}

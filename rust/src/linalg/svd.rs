@@ -1,0 +1,243 @@
+//! Randomized truncated SVD (Halko-Martinsson-Tropp) over linear operators.
+//!
+//! Powers the PMI and CCA baselines (paper Sec. 4.3), which need the top-k
+//! singular vectors of d x d similarity matrices. The operator abstraction
+//! lets us run the sketch over implicit matrices (e.g. X^T X scaled) that
+//! are never materialised.
+
+use crate::linalg::dense::{qr_q, Mat};
+use crate::util::rng::Rng;
+
+/// A (possibly implicit) real matrix seen through mat-mat products.
+pub trait LinOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// self * B, B [cols, k] -> [rows, k]
+    fn apply(&self, b: &Mat) -> Mat;
+    /// self^T * B, B [rows, k] -> [cols, k]
+    fn apply_t(&self, b: &Mat) -> Mat;
+}
+
+impl LinOp for Mat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.matmul(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.transpose().matmul(b)
+    }
+}
+
+impl LinOp for crate::linalg::sparse::Csr {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, b: &Mat) -> Mat {
+        self.matmul_dense(b)
+    }
+    fn apply_t(&self, b: &Mat) -> Mat {
+        self.t_matmul_dense(b)
+    }
+}
+
+/// Truncated SVD result: A ~ U diag(S) V^T.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,      // [rows, k]
+    pub s: Vec<f32>, // [k]
+    pub vt: Mat,     // [k, cols]
+}
+
+/// Randomized SVD with `n_iter` power iterations and oversampling `p`.
+pub fn randomized_svd<A: LinOp>(a: &A, k: usize, n_iter: usize,
+                                oversample: usize, rng: &mut Rng) -> Svd {
+    let k_eff = k.min(a.rows().min(a.cols()));
+    let l = (k_eff + oversample).min(a.cols()).min(a.rows());
+
+    // range sketch: Y = A Omega, then power iterations with re-orth
+    let omega = Mat::randn(a.cols(), l, rng);
+    let mut q = qr_q(&a.apply(&omega));
+    for _ in 0..n_iter {
+        let z = qr_q(&a.apply_t(&q));
+        q = qr_q(&a.apply(&z));
+    }
+
+    // small matrix B = Q^T A  (l x cols), SVD via eigendecomp of B B^T
+    let b = a.apply_t(&q).transpose(); // [l, cols]
+    let bbt = b.matmul(&b.transpose()); // [l, l]
+    let (evals, evecs) = symmetric_eig(&bbt); // descending
+
+    // singular values and left vectors of B
+    let mut s = Vec::with_capacity(k_eff);
+    let mut u_small = Mat::zeros(l, k_eff);
+    for j in 0..k_eff {
+        let lam = evals[j].max(0.0);
+        s.push(lam.sqrt());
+        for i in 0..l {
+            *u_small.at_mut(i, j) = evecs.at(i, j);
+        }
+    }
+
+    // U = Q * U_small;  V^T = diag(1/s) U_small^T B
+    let u = q.matmul(&u_small);
+    let mut vt = u_small.transpose().matmul(&b); // [k, cols]
+    for j in 0..k_eff {
+        let inv = if s[j] > 1e-8 { 1.0 / s[j] } else { 0.0 };
+        for c in 0..vt.cols {
+            *vt.at_mut(j, c) *= inv;
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Symmetric eigendecomposition via cyclic Jacobi rotations.
+/// Returns (eigenvalues desc, eigenvector matrix with columns matching).
+pub fn symmetric_eig(a: &Mat) -> (Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::zeros(n, n);
+    for i in 0..n {
+        *v.at_mut(i, i) = 1.0;
+    }
+
+    for _sweep in 0..60 {
+        let mut off = 0.0f32;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() < 1e-9 * (1.0 + m.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q
+                for i in 0..n {
+                    let mip = m.at(i, p);
+                    let miq = m.at(i, q);
+                    *m.at_mut(i, p) = c * mip - s * miq;
+                    *m.at_mut(i, q) = s * mip + c * miq;
+                }
+                for i in 0..n {
+                    let mpi = m.at(p, i);
+                    let mqi = m.at(q, i);
+                    *m.at_mut(p, i) = c * mpi - s * mqi;
+                    *m.at_mut(q, i) = s * mpi + c * mqi;
+                }
+                for i in 0..n {
+                    let vip = v.at(i, p);
+                    let viq = v.at(i, q);
+                    *v.at_mut(i, p) = c * vip - s * viq;
+                    *v.at_mut(i, q) = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    // sort descending by eigenvalue
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| {
+        m.at(j, j).partial_cmp(&m.at(i, i)).unwrap()
+    });
+    let evals: Vec<f32> = order.iter().map(|&i| m.at(i, i)).collect();
+    let mut evecs = Mat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            *evecs.at_mut(i, new_j) = v.at(i, old_j);
+        }
+    }
+    (evals, evecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_eig_known_matrix() {
+        // eigenvalues of [[2,1],[1,2]] are 3 and 1
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (evals, evecs) = symmetric_eig(&a);
+        assert!((evals[0] - 3.0).abs() < 1e-5);
+        assert!((evals[1] - 1.0).abs() < 1e-5);
+        // A v = lambda v for the top vector
+        let v0: Vec<f32> = (0..2).map(|i| evecs.at(i, 0)).collect();
+        let av0 = [
+            2.0 * v0[0] + v0[1],
+            v0[0] + 2.0 * v0[1],
+        ];
+        for i in 0..2 {
+            assert!((av0[i] - 3.0 * v0[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rsvd_reconstructs_low_rank() {
+        let mut rng = Rng::new(5);
+        // build an exactly rank-3 60x40 matrix
+        let u = Mat::randn(60, 3, &mut rng);
+        let v = Mat::randn(3, 40, &mut rng);
+        let a = u.matmul(&v);
+        let svd = randomized_svd(&a, 3, 3, 6, &mut rng);
+        // reconstruct and compare
+        let mut us = svd.u.clone();
+        for j in 0..3 {
+            for i in 0..us.rows {
+                *us.at_mut(i, j) *= svd.s[j];
+            }
+        }
+        let recon = us.matmul(&svd.vt);
+        let mut err = 0.0f32;
+        for (x, y) in recon.data.iter().zip(&a.data) {
+            err += (x - y) * (x - y);
+        }
+        let rel = err.sqrt() / a.frobenius_norm();
+        assert!(rel < 1e-2, "relative error {rel}");
+    }
+
+    #[test]
+    fn rsvd_singular_values_descending() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(30, 30, &mut rng);
+        let svd = randomized_svd(&a, 5, 2, 5, &mut rng);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4, "{:?}", svd.s);
+        }
+    }
+
+    #[test]
+    fn rsvd_on_sparse_operator() {
+        use crate::linalg::sparse::Csr;
+        let m = Csr::from_row_sets(6, &[
+            vec![0, 1], vec![0, 1], vec![2, 3],
+            vec![2, 3], vec![4, 5], vec![4, 5],
+        ]);
+        let mut rng = Rng::new(3);
+        let svd = randomized_svd(&m, 3, 3, 3, &mut rng);
+        // three identical-pair blocks -> three equal singular values = 2
+        for j in 0..3 {
+            assert!((svd.s[j] - 2.0).abs() < 0.05, "{:?}", svd.s);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! bloomrec CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   experiment <id|all>   regenerate a paper table/figure (see DESIGN.md)
+//!   train <task>          train one configuration and report the score
+//!   serve <task>          start the recommendation server + load test
+//!   inspect               print manifest/artifact inventory
+//!
+//! Common flags: --artifacts DIR --out DIR --scale tiny|small|full
+//!               --seeds 1,2,3 --epochs N --tasks ml,bc --top-n N
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use bloomrec::config::Options;
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::experiments::{self, Ctx};
+use bloomrec::runtime::Runtime;
+use bloomrec::{info, util};
+
+fn main() {
+    util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let (opts, positional) = Options::parse(args)?;
+    let Some(cmd) = positional.first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(&opts, &positional[1..]),
+        "train" => cmd_train(&opts, &positional[1..]),
+        "serve" => cmd_serve(&opts, &positional[1..]),
+        "inspect" => cmd_inspect(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "bloomrec — Bloom embeddings for sparse binary I/O networks \
+         (RecSys'17 reproduction)\n\n\
+         USAGE: bloomrec <command> [flags]\n\n\
+         COMMANDS:\n  \
+         experiment <id|all>  regenerate paper artifacts: {:?}\n  \
+         train <task> [method] [ratio]       one training run\n  \
+         serve <task> [ratio] [k] [requests] serving demo + load test\n  \
+         inspect              artifact inventory\n\n\
+         FLAGS: --artifacts DIR --out DIR --scale tiny|small|full\n       \
+         --seeds 1,2,3 --epochs N --tasks ml,msd --top-n N",
+        experiments::ALL
+    );
+}
+
+fn cmd_experiment(opts: &Options, rest: &[String]) -> Result<()> {
+    let rt = Runtime::new(&opts.artifact_dir)?;
+    let ctx = Ctx::new(&rt, opts);
+    let ids: Vec<&str> = if rest.is_empty()
+        || rest.iter().any(|r| r == "all")
+    {
+        experiments::ALL.to_vec()
+    } else {
+        rest.iter().map(String::as_str).collect()
+    };
+    for id in ids {
+        let watch = util::Stopwatch::new();
+        let table = experiments::run_experiment(id, &ctx)?;
+        println!("{}", table.render());
+        info!("{id} done in {:.1}s -> {}/{id}.tsv", watch.elapsed_secs(),
+              opts.out_dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_train(opts: &Options, rest: &[String]) -> Result<()> {
+    let task = rest
+        .first()
+        .ok_or_else(|| anyhow!("usage: train <task> [method] [ratio]"))?;
+    let method = rest
+        .get(1)
+        .map(|s| Method::parse(s).ok_or_else(|| anyhow!("bad method {s}")))
+        .transpose()?
+        .unwrap_or(Method::Be { k: 4 });
+    let ratio: f64 = rest.get(2).map(|s| s.parse()).transpose()?
+        .unwrap_or(0.2);
+
+    let rt = Runtime::new(&opts.artifact_dir)?;
+    let cache = DatasetCache::new();
+    let spec = RunSpec {
+        task: task.clone(),
+        method,
+        ratio,
+        seed: opts.seeds[0],
+        scale: opts.scale,
+        epochs: opts.epochs,
+    };
+    let res = coordinator::run(&rt, &cache, &spec)?;
+    println!(
+        "task={} method={} m/d={:.2} (m={} d={})\n\
+         score={:.4} random={:.4}\n\
+         train: {:.1}s over {} steps, epoch losses {:?}\n\
+         eval:  {:.2}s over {} examples\n\
+         model: {} weights",
+        res.task, res.method, res.ratio, res.m, res.d,
+        res.score, res.random_score,
+        res.train.train_secs, res.train.steps,
+        res.train.epoch_losses.iter().map(|l| (l * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>(),
+        res.eval.eval_secs, res.eval.n_examples,
+        res.n_weights,
+    );
+    Ok(())
+}
+
+fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
+    use bloomrec::serve::{RecRequest, ServeConfig, Server};
+
+    let task_name = rest
+        .first()
+        .ok_or_else(|| anyhow!("usage: serve <task> [ratio] [k] [requests]"))?;
+    let ratio: f64 = rest.get(1).map(|s| s.parse()).transpose()?
+        .unwrap_or(0.2);
+    let k: usize = rest.get(2).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let n_requests: usize =
+        rest.get(3).map(|s| s.parse()).transpose()?.unwrap_or(2000);
+
+    let rt = Arc::new(Runtime::new(&opts.artifact_dir)?);
+    let cache = DatasetCache::new();
+    let task = rt.manifest.task(task_name)?.clone();
+    if task.family != "ff" {
+        bail!("serve demo supports the feed-forward tasks");
+    }
+
+    // train the model to serve
+    info!("training {} (m/d={ratio}, k={k}) before serving...", task.name);
+    let spec = RunSpec {
+        task: task.name.clone(),
+        method: Method::Be { k },
+        ratio,
+        seed: opts.seeds[0],
+        scale: opts.scale,
+        epochs: opts.epochs,
+    };
+    let m = bloomrec::runtime::round_m(task.d, ratio);
+    let ds = cache.get(&task, opts.scale, opts.seeds[0]);
+    let emb: Arc<dyn bloomrec::embedding::Embedding> =
+        coordinator::build_embedding(spec.method, &ds, &task, m,
+                                     spec.seed)?
+        .into();
+    let train_spec = rt.manifest
+        .find(&task.name, "train", "softmax_ce", m)?.clone();
+    let predict_spec = rt.manifest
+        .find(&task.name, "predict", "softmax_ce", m)?.clone();
+    let cfg = coordinator::TrainConfig {
+        epochs: opts.epochs.unwrap_or(task.epochs),
+        seed: spec.seed,
+        verbose: true,
+    };
+    let (state, _) =
+        coordinator::train(&rt, &train_spec, &ds, emb.as_ref(), &cfg)?;
+
+    // serve a synthetic workload from test-split user profiles
+    let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
+                               ServeConfig::default())?;
+    info!("serving {n_requests} requests...");
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let ex = &ds.test[i % ds.test.len()];
+        pending.push(server.submit(RecRequest {
+            user_items: ex.input_items().to_vec(),
+            top_n: opts.top_n,
+        }));
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in pending.drain(..) {
+        let _ = rx.recv();
+    }
+    let snap = server.metrics.snapshot();
+    println!(
+        "served {} requests in {} batches\n\
+         throughput: {:.0} req/s   batch fill: {:.2}\n\
+         latency ms: p50={:.2} p95={:.2} p99={:.2}",
+        snap.requests, snap.batches, snap.throughput_rps,
+        snap.mean_batch_fill, snap.p50_ms, snap.p95_ms, snap.p99_ms,
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_inspect(opts: &Options) -> Result<()> {
+    let manifest =
+        bloomrec::runtime::Manifest::load(&opts.artifact_dir)?;
+    println!("manifest: {} tasks, {} artifacts, batch={}",
+             manifest.tasks.len(), manifest.artifacts.len(),
+             manifest.batch);
+    for t in &manifest.tasks {
+        let arts = manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.task == t.name)
+            .count();
+        println!(
+            "  {:6} d={:5} c~{:3} {:10} {:9} metric={:4} ratios={:?} \
+             artifacts={arts}",
+            t.name, t.d, t.c_median, t.family, t.optimizer, t.metric,
+            t.ratios
+        );
+    }
+    Ok(())
+}

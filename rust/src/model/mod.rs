@@ -1,0 +1,155 @@
+//! Model state: parameter initialisation and optimizer-state allocation on
+//! the Rust side, matching the wire order the AOT train-step artifact
+//! expects (`manifest.param_shapes` in Python).
+
+use crate::runtime::{ArtifactSpec, HostTensor};
+use crate::util::rng::Rng;
+
+/// Parameters + optimizer state as host tensors, threaded through the
+/// train-step artifact each step.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub params: Vec<HostTensor>,
+    pub opt_state: Vec<HostTensor>,
+}
+
+impl ModelState {
+    /// Glorot-uniform initialisation for matrices, zeros for biases;
+    /// optimizer slots zeroed, scalar step = 0.
+    pub fn init(spec: &ArtifactSpec, rng: &mut Rng) -> ModelState {
+        let params: Vec<HostTensor> = spec
+            .params
+            .iter()
+            .map(|p| {
+                if p.shape.len() >= 2 {
+                    let fan_in = p.shape[0] as f64;
+                    let fan_out = p.shape[1] as f64;
+                    let limit = (6.0 / (fan_in + fan_out)).sqrt() as f32;
+                    let data = (0..p.elements())
+                        .map(|_| (rng.f32() * 2.0 - 1.0) * limit)
+                        .collect();
+                    HostTensor::from_vec(&p.shape, data)
+                } else {
+                    HostTensor::zeros(&p.shape)
+                }
+            })
+            .collect();
+        let mut opt_state = Vec::with_capacity(spec.n_state());
+        if spec.kind == "train" {
+            opt_state.push(HostTensor::scalar(0.0)); // step counter
+            for _ in 0..spec.opt_slots {
+                for p in &spec.params {
+                    opt_state.push(HostTensor::zeros(&p.shape));
+                }
+            }
+        }
+        ModelState { params, opt_state }
+    }
+
+    /// Total number of weights (reporting model size, paper Sec. 1).
+    pub fn n_weights(&self) -> usize {
+        self.params.iter().map(|p| p.data.len()).sum()
+    }
+
+    /// Save parameters to a flat little-endian f32 binary file with a
+    /// small header (checkpointing for the serving path).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        let shapes: Vec<Vec<usize>> =
+            self.params.iter().map(|p| p.shape.clone()).collect();
+        let header = format!("{shapes:?}\n");
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for p in &self.params {
+            for v in &p.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load parameters saved by [`ModelState::save`] into a state whose
+    /// shapes must already match (opt state untouched).
+    pub fn load_params(&mut self, path: &std::path::Path)
+        -> std::io::Result<()> {
+        use std::io::Read;
+        let mut f = std::fs::File::open(path)?;
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut header = vec![0u8; hlen];
+        f.read_exact(&mut header)?;
+        for p in &mut self.params {
+            let mut buf = vec![0u8; p.data.len() * 4];
+            f.read_exact(&mut buf)?;
+            for (i, chunk) in buf.chunks_exact(4).enumerate() {
+                p.data[i] =
+                    f32::from_le_bytes([chunk[0], chunk[1], chunk[2],
+                                        chunk[3]]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ArtifactSpec, TensorSpec};
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(), task: "t".into(), family: "ff".into(),
+            kind: "train".into(), loss: "softmax_ce".into(),
+            m_in: 16, m_out: 16, hidden: vec![8], batch: 4, seq_len: 0,
+            optimizer: "adam".into(), ratio: 1.0, file: "t.hlo.txt".into(),
+            params: vec![
+                TensorSpec { name: "w0".into(), shape: vec![16, 8] },
+                TensorSpec { name: "b0".into(), shape: vec![8] },
+                TensorSpec { name: "w1".into(), shape: vec![8, 16] },
+                TensorSpec { name: "b1".into(), shape: vec![16] },
+            ],
+            opt_slots: 2, decode_d: 0, decode_k: 0,
+        }
+    }
+
+    #[test]
+    fn init_layout_matches_spec() {
+        let mut rng = Rng::new(1);
+        let st = ModelState::init(&spec(), &mut rng);
+        assert_eq!(st.params.len(), 4);
+        assert_eq!(st.opt_state.len(), 1 + 2 * 4);
+        assert_eq!(st.opt_state[0].shape, Vec::<usize>::new());
+        assert_eq!(st.n_weights(), 16 * 8 + 8 + 8 * 16 + 16);
+        // biases zero, weights bounded by the glorot limit
+        assert!(st.params[1].data.iter().all(|&v| v == 0.0));
+        let limit = (6.0f32 / 24.0).sqrt();
+        assert!(st.params[0].data.iter().all(|&v| v.abs() <= limit));
+        assert!(st.params[0].data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut rng = Rng::new(2);
+        let st = ModelState::init(&spec(), &mut rng);
+        let dir = std::env::temp_dir().join("bloomrec_test_ckpt.bin");
+        st.save(&dir).unwrap();
+        let mut st2 = ModelState::init(&spec(), &mut rng);
+        assert_ne!(st2.params[0].data, st.params[0].data);
+        st2.load_params(&dir).unwrap();
+        assert_eq!(st2.params[0].data, st.params[0].data);
+        assert_eq!(st2.params[3].data, st.params[3].data);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn predict_spec_has_no_state() {
+        let mut s = spec();
+        s.kind = "predict".into();
+        s.opt_slots = 0;
+        let mut rng = Rng::new(3);
+        let st = ModelState::init(&s, &mut rng);
+        assert!(st.opt_state.is_empty());
+    }
+}

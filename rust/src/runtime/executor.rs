@@ -1,0 +1,252 @@
+//! PJRT execution: load HLO text artifacts, compile once, run many.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* in, compile on the
+//! CPU PJRT client, execute with `Literal` inputs, decompose the tuple
+//! output. Compiled executables are cached per artifact name — compile is
+//! O(seconds), execute is the hot path.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Host-side tensor (f32, row-major) used at the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+/// An i32 host tensor (hash matrices for predict_decode artifacts).
+#[derive(Clone, Debug)]
+pub struct HostTensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl HostTensorI32 {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Compiled artifact + its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: PJRT clients and loaded executables are thread-safe by the PJRT
+// C API contract (XLA's PjRtClient/PjRtLoadedExecutable are documented as
+// thread-safe); the `xla` crate just doesn't declare it. All Rust-side
+// mutable state (the compile cache) is behind a Mutex.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with f32 inputs (+ optional trailing i32 inputs), returning
+    /// the decomposed output tuple as host tensors.
+    ///
+    /// Inputs are uploaded as Rust-owned `PjRtBuffer`s and executed via
+    /// `execute_b`. The crate's literal-based `execute` is avoided: its
+    /// C++ shim `release()`s the input device buffers without ever
+    /// freeing them (~1 MiB leaked per train step at our sizes — found
+    /// the hard way when experiment sweeps hit the OOM killer).
+    pub fn run(&self, inputs: &[&HostTensor],
+               i32_inputs: &[&HostTensorI32]) -> Result<Vec<HostTensor>> {
+        let client = self.exe.client();
+        // literals must outlive execution: BufferFromHostLiteral's H2D
+        // transfer is async and reads the host literal lazily
+        let mut lits = Vec::with_capacity(inputs.len() + i32_inputs.len());
+        for t in inputs {
+            lits.push(t.to_literal()?);
+        }
+        for t in i32_inputs {
+            lits.push(t.to_literal()?);
+        }
+        let mut bufs = Vec::with_capacity(lits.len());
+        for l in &lits {
+            bufs.push(client.buffer_from_host_literal(None, l)?);
+        }
+        let result = self.exe.execute_b(&bufs)?;
+        // output sync also fences the input transfers: the computation
+        // has consumed them by the time the result literal is ready
+        let tuple = result[0][0].to_literal_sync()?;
+        drop(bufs); // free input device buffers promptly
+        drop(lits);
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<ExeCache>,
+}
+
+/// LRU cache of compiled executables. XLA CPU executables hold large
+/// compile arenas; unbounded caching OOMs a long experiment sweep, so we
+/// cap residency and recompile on miss (~0.1-1 s, off the hot path).
+struct ExeCache {
+    map: HashMap<String, (Arc<Executable>, u64)>,
+    clock: u64,
+    capacity: usize,
+}
+
+impl ExeCache {
+    fn new(capacity: usize) -> Self {
+        Self { map: HashMap::new(), clock: 0, capacity }
+    }
+
+    fn get(&mut self, name: &str) -> Option<Arc<Executable>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(name).map(|(exe, stamp)| {
+            *stamp = clock;
+            Arc::clone(exe)
+        })
+    }
+
+    fn insert(&mut self, name: String, exe: Arc<Executable>) {
+        self.clock += 1;
+        while self.map.len() >= self.capacity {
+            // evict least-recently-used
+            let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            crate::debug!("evicting compiled artifact {victim}");
+            self.map.remove(&victim);
+        }
+        self.map.insert(name, (exe, self.clock));
+    }
+}
+
+// SAFETY: see the note on `Executable`.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "pjrt client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let capacity = std::env::var("BLOOMREC_EXE_CACHE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(16);
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(ExeCache::new(capacity)),
+        })
+    }
+
+    /// Load + compile an artifact (LRU-cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe);
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::debug!("compiled {} in {:.2}s", name,
+                      t0.elapsed().as_secs_f64());
+        let exe = Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.data.len(), 6);
+        let s = HostTensor::scalar(4.0);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.data, vec![4.0]);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_round_trip() {
+        let t = HostTensor::scalar(7.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![7.5]);
+    }
+}

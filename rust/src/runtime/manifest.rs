@@ -1,0 +1,328 @@
+//! Typed view of `artifacts/manifest.json` (written by python aot.py).
+//!
+//! The manifest is the contract between the build-time Python layer and
+//! the Rust request path: which HLO artifact realises which (task, m/d,
+//! loss, kind) combination, and the exact wire order/shape of parameters
+//! and optimizer state.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub task: String,
+    pub family: String,
+    pub kind: String,
+    pub loss: String,
+    pub m_in: usize,
+    pub m_out: usize,
+    pub hidden: Vec<usize>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub optimizer: String,
+    pub ratio: f64,
+    pub file: String,
+    pub params: Vec<TensorSpec>,
+    pub opt_slots: usize,
+    pub decode_d: usize,
+    pub decode_k: usize,
+}
+
+impl ArtifactSpec {
+    /// Number of optimizer-state tensors: scalar step + slots * params.
+    pub fn n_state(&self) -> usize {
+        if self.kind == "train" {
+            1 + self.opt_slots * self.params.len()
+        } else {
+            0
+        }
+    }
+
+    /// Total parameter count (for model-size reporting).
+    pub fn n_weights(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    /// Shape of the minibatch input tensor.
+    pub fn x_shape(&self) -> Vec<usize> {
+        if self.seq_len > 0 {
+            vec![self.batch, self.seq_len, self.m_in]
+        } else {
+            vec![self.batch, self.m_in]
+        }
+    }
+
+    pub fn y_shape(&self) -> Vec<usize> {
+        vec![self.batch, self.m_out]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub generator: String,
+    pub d: usize,
+    pub c_median: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub family: String,
+    pub hidden: Vec<usize>,
+    pub optimizer: String,
+    pub metric: String,
+    pub ratios: Vec<f64>,
+    pub test_points: Vec<f64>,
+    pub epochs: usize,
+    pub n_classes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tasks: Vec<TaskSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+    by_name: BTreeMap<String, usize>,
+}
+
+/// Embedded dimension for a ratio — must mirror manifest.py round_m,
+/// including Python's round-half-to-even behaviour (e.g. d=1000,
+/// ratio=0.5 -> 62.5 -> 62 -> m=496, not 504).
+pub fn round_m(d: usize, ratio: f64) -> usize {
+    let q = ratio * d as f64 / 8.0;
+    let m = round_half_even(q) * 8;
+    m.clamp(8, d)
+}
+
+fn round_half_even(q: f64) -> usize {
+    let floor = q.floor();
+    let frac = q - floor;
+    let f = floor as usize;
+    if (frac - 0.5).abs() < 1e-9 {
+        if f % 2 == 0 { f } else { f + 1 }
+    } else if frac > 0.5 {
+        f + 1
+    } else {
+        f
+    }
+}
+
+fn usizes(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+fn f64s(j: &Json) -> Vec<f64> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let get = |j: &Json, k: &str| -> Result<Json> {
+            Ok(j.req(k).map_err(|e| anyhow!("{e}"))?.clone())
+        };
+
+        let mut tasks = Vec::new();
+        for t in get(&root, "tasks")?.as_arr().unwrap_or_default() {
+            tasks.push(TaskSpec {
+                name: get(t, "name")?.as_str().unwrap_or("").into(),
+                generator: get(t, "generator")?.as_str().unwrap_or("").into(),
+                d: get(t, "d")?.as_usize().unwrap_or(0),
+                c_median: get(t, "c_median")?.as_usize().unwrap_or(0),
+                n_train: get(t, "n_train")?.as_usize().unwrap_or(0),
+                n_test: get(t, "n_test")?.as_usize().unwrap_or(0),
+                family: get(t, "family")?.as_str().unwrap_or("").into(),
+                hidden: usizes(&get(t, "hidden")?),
+                optimizer: get(t, "optimizer")?.as_str().unwrap_or("").into(),
+                metric: get(t, "metric")?.as_str().unwrap_or("").into(),
+                ratios: f64s(&get(t, "ratios")?),
+                test_points: f64s(&get(t, "test_points")?),
+                epochs: get(t, "epochs")?.as_usize().unwrap_or(3),
+                n_classes: get(t, "n_classes")?.as_usize().unwrap_or(0),
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for a in get(&root, "artifacts")?.as_arr().unwrap_or_default() {
+            let mut params = Vec::new();
+            for p in get(a, "params")?.as_arr().unwrap_or_default() {
+                params.push(TensorSpec {
+                    name: get(p, "name")?.as_str().unwrap_or("").into(),
+                    shape: usizes(&get(p, "shape")?),
+                });
+            }
+            artifacts.push(ArtifactSpec {
+                name: get(a, "name")?.as_str().unwrap_or("").into(),
+                task: get(a, "task")?.as_str().unwrap_or("").into(),
+                family: get(a, "family")?.as_str().unwrap_or("").into(),
+                kind: get(a, "kind")?.as_str().unwrap_or("").into(),
+                loss: get(a, "loss")?.as_str().unwrap_or("").into(),
+                m_in: get(a, "m_in")?.as_usize().unwrap_or(0),
+                m_out: get(a, "m_out")?.as_usize().unwrap_or(0),
+                hidden: usizes(&get(a, "hidden")?),
+                batch: get(a, "batch")?.as_usize().unwrap_or(0),
+                seq_len: get(a, "seq_len")?.as_usize().unwrap_or(0),
+                optimizer: get(a, "optimizer")?.as_str().unwrap_or("").into(),
+                ratio: get(a, "ratio")?.as_f64().unwrap_or(0.0),
+                file: get(a, "file")?.as_str().unwrap_or("").into(),
+                opt_slots: get(a, "opt_slots")?.as_usize().unwrap_or(0),
+                decode_d: get(a, "decode_d")?.as_usize().unwrap_or(0),
+                decode_k: get(a, "decode_k")?.as_usize().unwrap_or(0),
+                params,
+            });
+        }
+
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch: get(&root, "batch")?.as_usize().unwrap_or(64),
+            seq_len: get(&root, "seq_len")?.as_usize().unwrap_or(10),
+            tasks,
+            artifacts,
+            by_name,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskSpec> {
+        self.tasks
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("unknown task '{name}'"))
+    }
+
+    /// Find the artifact for (task, kind, loss) at embedded dim `m`.
+    pub fn find(&self, task: &str, kind: &str, loss: &str, m: usize)
+        -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.task == task && a.kind == kind && a.loss == loss
+                    && a.m_in == m
+            })
+            .ok_or_else(|| anyhow!(
+                "no artifact for task={task} kind={kind} loss={loss} m={m}"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 64, "seq_len": 10,
+      "tasks": [{"name": "ml", "generator": "profiles_dense", "d": 768,
+                 "c_median": 18, "n_train": 12000, "n_test": 1000,
+                 "family": "ff", "hidden": [150, 150], "optimizer": "adam",
+                 "opt_params": {"lr": 0.001}, "metric": "map",
+                 "ratios": [0.1, 0.2], "test_points": [0.2, 0.3],
+                 "epochs": 3, "n_classes": 0}],
+      "artifacts": [{"name": "ml_ff_ce_m152_train", "task": "ml",
+                     "family": "ff", "kind": "train", "loss": "softmax_ce",
+                     "m_in": 152, "m_out": 152, "hidden": [150, 150],
+                     "batch": 64, "seq_len": 0, "optimizer": "adam",
+                     "ratio": 0.2, "file": "ml_ff_ce_m152_train.hlo.txt",
+                     "opt_slots": 2, "decode_d": 0, "decode_k": 0,
+                     "params": [{"name": "w0", "shape": [152, 150]},
+                                {"name": "b0", "shape": [150]}]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.tasks.len(), 1);
+        assert_eq!(m.task("ml").unwrap().d, 768);
+        let a = m.artifact("ml_ff_ce_m152_train").unwrap();
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.n_state(), 1 + 2 * 2);
+        assert_eq!(a.n_weights(), 152 * 150 + 150);
+        assert_eq!(a.x_shape(), vec![64, 152]);
+    }
+
+    #[test]
+    fn find_matches_m() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.find("ml", "train", "softmax_ce", 152).is_ok());
+        assert!(m.find("ml", "train", "softmax_ce", 80).is_err());
+        assert!(m.find("ml", "predict", "softmax_ce", 152).is_err());
+    }
+
+    #[test]
+    fn round_m_mirrors_python() {
+        // python: max(8, min(round(ratio*d/8)*8, d))
+        assert_eq!(round_m(768, 0.2), 152);
+        assert_eq!(round_m(768, 1.0), 768);
+        assert_eq!(round_m(1000, 0.001), 8);
+        assert_eq!(round_m(4096, 0.01), 40);
+        assert_eq!(round_m(1024, 0.3), 304);
+    }
+
+    #[test]
+    fn round_m_agrees_with_python_dump() {
+        // /tmp/round_m_cases.txt is regenerated by the Makefile test flow;
+        // when absent (fresh checkout) the hardcoded cases above cover it
+        if let Ok(text) = std::fs::read_to_string("/tmp/round_m_cases.txt") {
+            for line in text.lines() {
+                let mut it = line.split_whitespace();
+                let d: usize = it.next().unwrap().parse().unwrap();
+                let r: f64 = it.next().unwrap().parse().unwrap();
+                let m: usize = it.next().unwrap().parse().unwrap();
+                assert_eq!(round_m(d, r), m, "d={d} ratio={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.tasks.len(), 7);
+            assert!(m.artifacts.len() > 100);
+            // every artifact's file must exist
+            for a in &m.artifacts {
+                assert!(m.hlo_path(a).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

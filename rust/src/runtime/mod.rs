@@ -1,0 +1,9 @@
+//! Runtime layer: the PJRT bridge between the Rust coordinator and the
+//! AOT-compiled XLA artifacts. HLO text -> `HloModuleProto::from_text_file`
+//! -> `client.compile` -> `execute` (see /opt/xla-example and DESIGN.md).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Executable, HostTensor, HostTensorI32, Runtime};
+pub use manifest::{round_m, ArtifactSpec, Manifest, TaskSpec, TensorSpec};

@@ -1,0 +1,107 @@
+//! Dynamic batcher: collect requests until the batch is full or the
+//! deadline passes. The core latency/throughput trade-off knob of the
+//! serving layer.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// max requests per batch (the artifact's static batch dim)
+    pub max_batch: usize,
+    /// max time the first request in a batch may wait
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls from an mpsc receiver and forms batches.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    pub cfg: BatcherConfig,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
+        Self { rx, cfg }
+    }
+
+    /// Block for the next batch. Returns `None` once the channel is
+    /// closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first element
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut batch = Vec::with_capacity(self.cfg.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn full_batch_returns_immediately() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(rx, BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(15), "{waited:?}");
+        drop(tx);
+        assert_eq!(b.next_batch(), None);
+    }
+
+    #[test]
+    fn closed_channel_drains_then_ends() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, BatcherConfig::default());
+        assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
+        assert_eq!(b.next_batch(), None);
+    }
+}

@@ -1,0 +1,85 @@
+//! Serving metrics: lock-protected latency reservoir + counters, reported
+//! as throughput and p50/p95/p99 latency.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+#[derive(Debug)]
+pub struct ServeMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    requests: u64,
+    batches: u64,
+    batch_fill: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_fill: f64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+
+    pub fn record_batch(&self, latencies_us: &[f64], fill: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.latencies_us.extend_from_slice(latencies_us);
+        inner.requests += latencies_us.len() as u64;
+        inner.batches += 1;
+        inner.batch_fill += fill;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            requests: inner.requests,
+            batches: inner.batches,
+            throughput_rps: inner.requests as f64 / elapsed,
+            p50_ms: percentile(&inner.latencies_us, 50.0) / 1000.0,
+            p95_ms: percentile(&inner.latencies_us, 95.0) / 1000.0,
+            p99_ms: percentile(&inner.latencies_us, 99.0) / 1000.0,
+            mean_batch_fill: inner.batch_fill
+                / inner.batches.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = ServeMetrics::new();
+        m.record_batch(&[1000.0, 2000.0, 3000.0], 0.75);
+        m.record_batch(&[4000.0], 0.25);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert!((s.p50_ms - 2.5).abs() < 0.01, "{}", s.p50_ms);
+        assert!((s.mean_batch_fill - 0.5).abs() < 1e-12);
+        assert!(s.throughput_rps > 0.0);
+    }
+}

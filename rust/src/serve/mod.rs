@@ -1,0 +1,20 @@
+//! Serving stack: the deployment story the paper motivates (Sec. 1 —
+//! compressed models fit on limited hardware and serve cheaply).
+//!
+//! Thread-based (no tokio in the offline vendor set):
+//!   clients -> request queue -> [DynamicBatcher] -> worker replicas
+//!             (encode -> predict artifact -> Bloom decode -> top-N)
+//!
+//! The batcher collects up to `batch` requests or `max_wait`, whichever
+//! first — classic dynamic batching. Workers share the compiled
+//! executable (PJRT executables are thread-safe); a router fans the queue
+//! out to replicas. Latency percentiles and throughput are recorded per
+//! request.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::ServeMetrics;
+pub use server::{RecRequest, RecResponse, ServeConfig, Server};

@@ -1,0 +1,204 @@
+//! The recommendation server: router + worker replicas over a trained
+//! model artifact. Requests carry a user's item set; responses carry the
+//! top-N recommended original items with scores.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::ServeMetrics;
+use crate::bloom::HashMatrix;
+use crate::embedding::Embedding;
+use crate::linalg::knn::top_k;
+use crate::model::ModelState;
+use crate::runtime::{ArtifactSpec, HostTensor, Runtime};
+
+#[derive(Clone, Debug)]
+pub struct RecRequest {
+    pub user_items: Vec<u32>,
+    pub top_n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct RecResponse {
+    /// (item, score), descending
+    pub items: Vec<(usize, f32)>,
+    pub latency: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub replicas: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { replicas: 2, batcher: BatcherConfig::default() }
+    }
+}
+
+struct Job {
+    request: RecRequest,
+    enqueued: Instant,
+    respond: Sender<RecResponse>,
+}
+
+/// Handle to a running server; dropping it shuts the workers down.
+pub struct Server {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<ServeMetrics>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Spin up worker replicas around a trained model.
+    ///
+    /// `emb` decodes model outputs to original items (Bloom hash matrix on
+    /// the serving path); the predict artifact is compiled once and shared.
+    pub fn start(rt: Arc<Runtime>, spec: ArtifactSpec, state: ModelState,
+                 emb: Arc<dyn Embedding>, cfg: ServeConfig) -> Result<Server> {
+        let exe = rt.load(&spec.name)?;
+        let metrics = Arc::new(ServeMetrics::new());
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(state);
+
+        // single injector queue; the OS scheduler is the router across
+        // replica threads (work-stealing at the queue head)
+        let (tx, rx) = mpsc::channel::<Job>();
+        let batcher = Arc::new(std::sync::Mutex::new(
+            DynamicBatcher::new(rx, cfg.batcher)));
+
+        let mut workers = Vec::with_capacity(cfg.replicas.max(1));
+        for w in 0..cfg.replicas.max(1) {
+            let exe = Arc::clone(&exe);
+            let state = Arc::clone(&state);
+            let emb = Arc::clone(&emb);
+            let metrics = Arc::clone(&metrics);
+            let in_flight = Arc::clone(&in_flight);
+            let batcher = Arc::clone(&batcher);
+            let spec = spec.clone();
+            workers.push(std::thread::Builder::new()
+                .name(format!("bloomrec-serve-{w}"))
+                .spawn(move || {
+                    let mut x = HostTensor::zeros(&spec.x_shape());
+                    loop {
+                        // batch under the shared receiver lock
+                        let batch = {
+                            let guard = batcher.lock().unwrap();
+                            guard.next_batch()
+                        };
+                        let Some(jobs) = batch else { break };
+                        if let Err(e) = Self::serve_batch(
+                            &exe, &spec, &state, emb.as_ref(), &jobs,
+                            &mut x, &metrics)
+                        {
+                            crate::error!("serve batch failed: {e}");
+                        }
+                        in_flight.fetch_sub(jobs.len(), Ordering::SeqCst);
+                    }
+                })
+                .expect("spawn worker"));
+        }
+        Ok(Server { tx: Some(tx), workers, metrics, in_flight })
+    }
+
+    fn serve_batch(exe: &crate::runtime::Executable, spec: &ArtifactSpec,
+                   state: &ModelState, emb: &dyn Embedding, jobs: &[Job],
+                   x: &mut HostTensor, metrics: &ServeMetrics) -> Result<()> {
+        let m_in = spec.m_in;
+        x.data.fill(0.0);
+        for (row, job) in jobs.iter().enumerate() {
+            emb.encode_input(&job.request.user_items,
+                             &mut x.data[row * m_in..(row + 1) * m_in]);
+        }
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(state.params.len() + 1);
+        inputs.extend(state.params.iter());
+        inputs.push(x);
+        let outputs = exe.run(&inputs, &[])?;
+        let probs = &outputs[0];
+        let m_out = spec.m_out;
+
+        let mut responses = Vec::with_capacity(jobs.len());
+        let mut lats = Vec::with_capacity(jobs.len());
+        for (row, job) in jobs.iter().enumerate() {
+            let out_row = &probs.data[row * m_out..(row + 1) * m_out];
+            let mut scores = emb.decode(out_row);
+            // exclude the user's own items (top-N protocol)
+            for &it in &job.request.user_items {
+                if (it as usize) < scores.len() {
+                    scores[it as usize] = f32::NEG_INFINITY;
+                }
+            }
+            let top = top_k(&scores, job.request.top_n);
+            let items: Vec<(usize, f32)> =
+                top.into_iter().map(|i| (i, scores[i])).collect();
+            let latency = job.enqueued.elapsed();
+            lats.push(latency.as_micros() as f64);
+            responses.push(RecResponse { items, latency });
+        }
+        // record BEFORE responding: clients may read the metrics as soon
+        // as their response arrives
+        metrics.record_batch(&lats,
+                             jobs.len() as f64 / spec.batch as f64);
+        for (job, resp) in jobs.iter().zip(responses) {
+            let _ = job.respond.send(resp);
+        }
+        Ok(())
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, request: RecRequest)
+        -> mpsc::Receiver<RecResponse> {
+        let (respond, rx) = mpsc::channel();
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Job { request, enqueued: Instant::now(), respond })
+            .expect("workers alive");
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn recommend(&self, request: RecRequest) -> RecResponse {
+        self.submit(request).recv().expect("response")
+    }
+
+    pub fn pending(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting requests and join the workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Build the standard serving embedding: a Bloom decode over a hash
+/// matrix (the zero-space deployment mode the paper advertises).
+pub fn bloom_serving_embedding(d: usize, m: usize, k: usize, seed: u64)
+    -> Arc<dyn Embedding> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let hm = HashMatrix::random(d, m, k, &mut rng);
+    Arc::new(crate::embedding::Bloom::new(hm, None))
+}

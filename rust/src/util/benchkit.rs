@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (no criterion in the offline vendor set).
+//!
+//! `Bench::run` warms up, then samples the closure until a time budget or
+//! sample cap is reached, and reports mean/p50/p95 with throughput. Used
+//! by every target in `benches/` (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_samples: 10_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    /// per-second rate of `items_per_iter` units
+    pub throughput: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>8} samples  mean {:>10.2}us  p50 {:>10.2}us  \
+             p95 {:>10.2}us  {:>12.0} items/s",
+            self.name, self.samples, self.mean_us, self.p50_us,
+            self.p95_us, self.throughput
+        )
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_samples: 2_000,
+        }
+    }
+
+    /// Benchmark `f`, which processes `items_per_iter` logical items per
+    /// call (for throughput reporting).
+    pub fn run<F: FnMut()>(&self, name: &str, items_per_iter: usize,
+                           mut f: F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // sample
+        let mut samples_us: Vec<f64> = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples_us.len() < self.max_samples
+        {
+            let t = Instant::now();
+            f();
+            samples_us.push(t.elapsed().as_nanos() as f64 / 1000.0);
+        }
+        let mean_us =
+            samples_us.iter().sum::<f64>() / samples_us.len().max(1) as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: samples_us.len(),
+            mean_us,
+            p50_us: percentile(&samples_us, 50.0),
+            p95_us: percentile(&samples_us, 95.0),
+            throughput: items_per_iter as f64 / (mean_us / 1e6),
+        };
+        println!("{}", result.report());
+        result
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept behind one name for the benches).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_samples: 100,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop", 1, || {
+            acc = sink(acc.wrapping_add(1));
+        });
+        assert!(r.samples > 0);
+        assert!(r.mean_us >= 0.0);
+        assert!(r.p95_us >= r.p50_us);
+    }
+}

@@ -1,0 +1,39 @@
+//! Shared substrates built from scratch for the offline environment:
+//! PRNG, JSON, statistics (incl. Mann-Whitney U), thread pool, logging,
+//! and a mini property-testing harness.
+
+pub mod benchkit;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Wall-clock stopwatch used by the Fig. 3 timing experiments.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let t = self.elapsed_secs();
+        self.start = std::time::Instant::now();
+        t
+    }
+}

@@ -1,0 +1,169 @@
+//! Mini property-testing harness (no proptest crate in the offline set).
+//!
+//! `check(name, seed, cases, gen, prop)` runs `prop` on `cases` random
+//! inputs; on failure it performs greedy shrinking via the input's
+//! `Shrink` implementation and panics with the seed + minimal counter-
+//! example so the failure is reproducible.
+
+use super::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.abs() > 1e-9 {
+            out.push(self / 2.0);
+            out.push(0.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            let mut one_less = self.clone();
+            one_less.pop();
+            out.push(one_less);
+            // shrink the first element
+            for smaller in self[0].shrink() {
+                let mut v = self.clone();
+                v[0] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter()
+            .map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter()
+            .map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter()
+            .map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs with shrinking on failure.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Shrink,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  \
+                 minimal input: {min_input:?}\n  reason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut input: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // up to 200 shrink steps, greedy first-failure descent
+    for _ in 0..200 {
+        let mut advanced = false;
+        for candidate in input.shrink() {
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 1, 50,
+              |rng| (rng.below(100), rng.below(100)),
+              |&(a, b)| {
+                  if a + b == b + a { Ok(()) } else { Err("!".into()) }
+              });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn failing_property_shrinks() {
+        check("always-lt-10", 2, 200,
+              |rng| rng.below(1000),
+              |&x| if x < 10 { Ok(()) } else { Err(format!("{x} >= 10")) });
+    }
+
+    #[test]
+    fn shrink_vec_reduces_length() {
+        let v = vec![5usize, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+}

@@ -1,0 +1,257 @@
+//! Statistics substrate: descriptive stats, percentiles, and the
+//! Mann-Whitney U test the paper uses for Table 3 / Table 5 significance
+//! ("Mann-Whitney U, p > 0.05").
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Median (averaging the middle pair for even lengths).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Result of a two-sided Mann-Whitney U test.
+#[derive(Clone, Copy, Debug)]
+pub struct MannWhitney {
+    pub u: f64,
+    /// two-sided p-value from the normal approximation with tie correction
+    pub p_value: f64,
+}
+
+/// Two-sided Mann-Whitney U (a.k.a. Wilcoxon rank-sum) test.
+///
+/// Uses the normal approximation with tie correction — adequate for the
+/// paper's use (comparing handfuls of repeated runs); for n < 3 returns
+/// p = 1.0 (no power).
+pub fn mann_whitney_u(a: &[f64], b: &[f64]) -> MannWhitney {
+    let (n1, n2) = (a.len(), b.len());
+    if n1 < 2 || n2 < 2 {
+        return MannWhitney { u: 0.0, p_value: 1.0 };
+    }
+    // rank the pooled sample with average ranks for ties
+    let mut pooled: Vec<(f64, usize)> = a
+        .iter().map(|&x| (x, 0usize))
+        .chain(b.iter().map(|&x| (x, 1usize)))
+        .collect();
+    pooled.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+
+    let n = pooled.len();
+    let mut ranks = vec![0.0f64; n];
+    let mut tie_term = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && pooled[j + 1].0 == pooled[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for r in ranks.iter_mut().take(j + 1).skip(i) {
+            *r = avg_rank;
+        }
+        let t = (j - i + 1) as f64;
+        tie_term += t * t * t - t;
+        i = j + 1;
+    }
+
+    let r1: f64 = pooled
+        .iter()
+        .zip(ranks.iter())
+        .filter(|((_, grp), _)| *grp == 0)
+        .map(|(_, r)| r)
+        .sum();
+    let n1f = n1 as f64;
+    let n2f = n2 as f64;
+    let u1 = r1 - n1f * (n1f + 1.0) / 2.0;
+    let u2 = n1f * n2f - u1;
+    let u = u1.min(u2);
+
+    let mu = n1f * n2f / 2.0;
+    let nf = n as f64;
+    let sigma2 = n1f * n2f / 12.0
+        * ((nf + 1.0) - tie_term / (nf * (nf - 1.0)));
+    if sigma2 <= 0.0 {
+        return MannWhitney { u, p_value: 1.0 };
+    }
+    // continuity correction
+    let z = (u - mu + 0.5) / sigma2.sqrt();
+    let p = (2.0 * normal_cdf(z)).min(1.0);
+    MannWhitney { u, p_value: p }
+}
+
+/// Standard normal CDF via erfc (Abramowitz-Stegun 7.1.26 rational fit).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / std::f64::consts::SQRT_2)
+}
+
+fn erfc(x: f64) -> f64 {
+    // Numerical Recipes erfc approximation, |error| < 1.2e-7
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223
+                                            + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Welford online accumulator for streaming metrics (serving latencies).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY,
+               max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptive_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn normal_cdf_reference_points() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.9750021).abs() < 1e-4);
+        assert!((normal_cdf(-1.96) - 0.0249979).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mwu_identical_samples_not_significant() {
+        let a = [0.5, 0.6, 0.55, 0.58, 0.61];
+        let r = mann_whitney_u(&a, &a);
+        assert!(r.p_value > 0.9, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn mwu_separated_samples_significant() {
+        let a = [0.1, 0.12, 0.11, 0.13, 0.09, 0.1, 0.12];
+        let b = [0.9, 0.92, 0.91, 0.88, 0.93, 0.9, 0.89];
+        let r = mann_whitney_u(&a, &b);
+        assert!(r.p_value < 0.01, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn mwu_scipy_reference() {
+        // hand-computed with average ranks:
+        // R1 = 1 + 2 + 3.5 + 5.5 + 7.5 = 19.5, U1 = 4.5, U = min = 4.5
+        // sigma^2 = 25/12 * (11 - 18/90) = 22.5, z = (4.5-12.5+0.5)/4.743
+        //         = -1.581 -> p ~ 0.1138 (scipy asymptotic+cc: ~0.117)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [3.0, 4.0, 5.0, 6.0, 7.0];
+        let r = mann_whitney_u(&a, &b);
+        assert!((r.u - 4.5).abs() < 1e-9, "u={}", r.u);
+        assert!((r.p_value - 0.114).abs() < 0.02, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn mwu_tiny_samples_are_powerless() {
+        assert_eq!(mann_whitney_u(&[1.0], &[2.0, 3.0]).p_value, 1.0);
+    }
+
+    #[test]
+    fn running_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((r.std_dev() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 9.0);
+    }
+}

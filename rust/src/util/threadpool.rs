@@ -1,0 +1,134 @@
+//! Minimal scoped thread pool (no rayon/tokio in the offline vendor set).
+//!
+//! Used by the serving stack's workers and by embarrassingly-parallel
+//! experiment sweeps. Work items are `FnOnce` closures; `scope_map` offers
+//! a convenient parallel map over an input slice with deterministic output
+//! ordering.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived pool with a shared injector queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_threads.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("bloomrec-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map with output order matching input order.
+///
+/// Spawns up to `n_threads` scoped threads over chunks of `items`.
+pub fn par_map<T, R, F>(items: &[T], n_threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let n_threads = n_threads.max(1).min(items.len());
+    let chunk = items.len().div_ceil(n_threads);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+
+    thread::scope(|s| {
+        for (slot_chunk, item_chunk) in
+            out.chunks_mut(chunk).zip(items.chunks(chunk))
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Suggested worker count: physical parallelism minus one for the driver.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop waits for drain
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = par_map(&xs, 8, |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_thread_and_empty() {
+        assert_eq!(par_map::<usize, usize, _>(&[], 4, |&x| x), vec![]);
+        assert_eq!(par_map(&[5], 4, |&x| x + 1), vec![6]);
+    }
+}

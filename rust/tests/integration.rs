@@ -1,0 +1,211 @@
+//! Integration tests over the full stack: PJRT runtime + AOT artifacts +
+//! coordinator. These require `make artifacts` to have run (they are
+//! skipped with a message otherwise, so plain `cargo test` stays green in
+//! a fresh checkout).
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::data::Scale;
+use bloomrec::eval::Measure;
+use bloomrec::runtime::Runtime;
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping integration tests: run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::new(&dir).expect("runtime"))
+    })
+    .as_ref()
+}
+
+fn cache() -> &'static DatasetCache {
+    static C: OnceLock<DatasetCache> = OnceLock::new();
+    C.get_or_init(DatasetCache::new)
+}
+
+#[test]
+fn manifest_covers_all_seven_tasks() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest.tasks.len(), 7);
+    for t in &rt.manifest.tasks {
+        for &tp in &t.test_points {
+            let m = bloomrec::runtime::round_m(t.d, tp);
+            assert!(rt.manifest.find(&t.name, "train", "softmax_ce", m)
+                .is_ok(), "{}@{tp}", t.name);
+            assert!(rt.manifest.find(&t.name, "predict", "softmax_ce", m)
+                .is_ok(), "{}@{tp}", t.name);
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_ff() {
+    let Some(rt) = runtime() else { return };
+    let spec = RunSpec {
+        task: "bc".into(),
+        method: Method::Be { k: 4 },
+        ratio: 0.3,
+        seed: 7,
+        scale: Scale::Tiny,
+        epochs: Some(4),
+    };
+    let res = coordinator::run(rt, cache(), &spec).expect("run");
+    let first = res.train.epoch_losses[0];
+    let last = *res.train.epoch_losses.last().unwrap();
+    assert!(last < first,
+            "loss did not decrease: {:?}", res.train.epoch_losses);
+    assert!(res.score > res.random_score,
+            "score {} <= random {}", res.score, res.random_score);
+}
+
+#[test]
+fn train_step_reduces_loss_recurrent() {
+    let Some(rt) = runtime() else { return };
+    for task in ["yc", "ptb"] {
+        let spec = RunSpec {
+            task: task.into(),
+            method: Method::Be { k: 4 },
+            ratio: 0.5,
+            seed: 3,
+            scale: Scale::Tiny,
+            epochs: Some(2),
+        };
+        let res = coordinator::run(rt, cache(), &spec).expect(task);
+        let first = res.train.epoch_losses[0];
+        let last = *res.train.epoch_losses.last().unwrap();
+        assert!(last <= first * 1.05,
+                "{task} loss exploded: {:?}", res.train.epoch_losses);
+    }
+}
+
+#[test]
+fn classifier_beats_random_with_input_only_embedding() {
+    let Some(rt) = runtime() else { return };
+    let spec = RunSpec {
+        task: "cade".into(),
+        method: Method::Be { k: 4 },
+        ratio: 0.1,
+        seed: 5,
+        scale: Scale::Tiny,
+        epochs: Some(6),
+    };
+    let res = coordinator::run(rt, cache(), &spec).expect("cade");
+    assert!(res.score > 2.0 * res.random_score,
+            "acc {} vs random {}", res.score, res.random_score);
+}
+
+#[test]
+fn baseline_runs_at_m_equals_d() {
+    let Some(rt) = runtime() else { return };
+    let spec = RunSpec {
+        task: "bc".into(),
+        method: Method::Baseline,
+        ratio: 0.1, // ignored for Baseline
+        seed: 2,
+        scale: Scale::Tiny,
+        epochs: Some(2),
+    };
+    let res = coordinator::run(rt, cache(), &spec).expect("baseline");
+    assert_eq!(res.m, res.d);
+    assert!(res.score.is_finite());
+}
+
+#[test]
+fn dense_methods_run_with_cosine_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for method in [Method::Pmi, Method::Cca] {
+        let spec = RunSpec {
+            task: "bc".into(),
+            method,
+            ratio: 0.1, // a bc test point: cosine artifacts exist there
+            seed: 11,
+            scale: Scale::Tiny,
+            epochs: Some(2),
+        };
+        let res = coordinator::run(rt, cache(), &spec)
+            .unwrap_or_else(|e| panic!("{method:?}: {e}"));
+        assert!(res.score.is_finite());
+        assert!(res.score >= 0.0);
+    }
+}
+
+#[test]
+fn predict_decode_artifact_matches_two_stage_decode() {
+    let Some(rt) = runtime() else { return };
+    // the fused artifact (predict + pallas bloom_decode) must agree with
+    // rust-side decode over the plain predict artifact
+    use bloomrec::bloom::HashMatrix;
+    use bloomrec::model::ModelState;
+    use bloomrec::runtime::{HostTensor, HostTensorI32};
+    use bloomrec::util::rng::Rng;
+
+    let fused_name = "ml_ff_ce_m152_predict_decode_d768_k4";
+    let Some(fused_spec) = rt.manifest.artifact(fused_name).cloned()
+    else {
+        eprintln!("fused artifact missing, skipping");
+        return;
+    };
+    let plain_spec = rt.manifest
+        .find("ml", "predict", "softmax_ce", fused_spec.m_in)
+        .expect("plain predict")
+        .clone();
+
+    let mut rng = Rng::new(13);
+    let state = ModelState::init(&plain_spec, &mut rng);
+    let hm = HashMatrix::random(fused_spec.decode_d, fused_spec.m_out,
+                                fused_spec.decode_k, &mut rng);
+
+    // random binary input batch
+    let mut x = HostTensor::zeros(&plain_spec.x_shape());
+    for v in x.data.iter_mut() {
+        if rng.bool(0.03) {
+            *v = 1.0;
+        }
+    }
+
+    let plain = rt.load(&plain_spec.name).expect("load plain");
+    let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
+    inputs.push(&x);
+    let probs = plain.run(&inputs, &[]).expect("plain run")[0].clone();
+
+    let fused = rt.load(fused_name).expect("load fused");
+    let h = HostTensorI32 {
+        shape: vec![fused_spec.decode_d, fused_spec.decode_k],
+        data: hm.to_i32(),
+    };
+    let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
+    inputs.push(&x);
+    let fused_scores = fused.run(&inputs, &[&h]).expect("fused run")[0]
+        .clone();
+
+    // rust-side decode of row 0
+    let m = plain_spec.m_out;
+    let d = fused_spec.decode_d;
+    for row in [0usize, 5, 63] {
+        let rust_scores = bloomrec::bloom::decode_scores(
+            &probs.data[row * m..(row + 1) * m], &hm);
+        let fused_row = &fused_scores.data[row * d..(row + 1) * d];
+        for (i, (a, b)) in rust_scores.iter().zip(fused_row).enumerate() {
+            assert!((a - b).abs() < 1e-3 * a.abs().max(1.0),
+                    "row {row} item {i}: rust={a} fused={b}");
+        }
+    }
+}
+
+#[test]
+fn evaluator_measures_agree_with_manifest_metric() {
+    let Some(rt) = runtime() else { return };
+    for t in &rt.manifest.tasks {
+        assert!(Measure::parse(&t.metric).is_some(), "{}", t.metric);
+    }
+}

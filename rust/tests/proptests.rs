@@ -1,0 +1,291 @@
+//! Property-based tests over the library's core invariants, using the
+//! in-repo shrinking harness (`util::proptest`). Seeds are fixed so
+//! failures are reproducible; every property prints its minimal
+//! counter-example on failure.
+
+use bloomrec::bloom::{cbe_rewrite, decode_scores, BloomEncoder, HashMatrix};
+use bloomrec::linalg::knn::{argsort_desc, top_k};
+use bloomrec::linalg::sparse::Csr;
+use bloomrec::util::proptest::check;
+use bloomrec::util::rng::Rng;
+use bloomrec::util::stats::mann_whitney_u;
+
+#[test]
+fn prop_hash_matrix_rows_always_distinct() {
+    check("hash-rows-distinct", 0xA1, 40,
+          |rng| {
+              let m = 2 + rng.below(64);
+              let k = 1 + rng.below(m.min(10));
+              let d = 1 + rng.below(200);
+              (d, m, k)
+          },
+          |&(d, m, k)| {
+              let mut rng = Rng::new(d as u64 * 31 + m as u64);
+              let hm = HashMatrix::random(d, m, k, &mut rng);
+              for i in 0..d {
+                  let set: std::collections::HashSet<_> =
+                      hm.row(i).iter().collect();
+                  if set.len() != k {
+                      return Err(format!("row {i} has dup: {:?}",
+                                         hm.row(i)));
+                  }
+                  if hm.row(i).iter().any(|&p| p as usize >= m) {
+                      return Err(format!("row {i} out of range"));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_encode_has_no_false_negatives() {
+    check("no-false-negatives", 0xA2, 40,
+          |rng| {
+              let m = 8 + rng.below(64);
+              let k = 1 + rng.below(6.min(m));
+              let d = 20 + rng.below(300);
+              let c = 1 + rng.below(15);
+              let seed = rng.next_u64();
+              (vec![d, m, k, c], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              let (d, m, k, c) = (dims[0], dims[1], dims[2], dims[3]);
+              if k > m || c > d {
+                  return Ok(());
+              }
+              let mut rng = Rng::new(*seed);
+              let hm = HashMatrix::random(d, m, k, &mut rng);
+              let enc = BloomEncoder::new(&hm);
+              let items: Vec<u32> = rng.sample_distinct(d, c)
+                  .into_iter().map(|i| i as u32).collect();
+              let mut u = vec![0.0; m];
+              enc.encode_into(&items, &mut u);
+              for &it in &items {
+                  if !enc.contains(&u, it) {
+                      return Err(format!("false negative for {it}"));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_decode_ranks_encoded_set_first_when_superset_distinct() {
+    // for any encoded set, items whose probes are all inside the active
+    // bit set must outrank items probing at least one zero bit
+    check("decode-veto-order", 0xA3, 30,
+          |rng| rng.next_u64(),
+          |&seed| {
+              let mut rng = Rng::new(seed);
+              let d = 50 + rng.below(200);
+              let m = 24 + rng.below(64);
+              let k = 2 + rng.below(4);
+              let hm = HashMatrix::random(d, m, k, &mut rng);
+              let enc = BloomEncoder::new(&hm);
+              let c = 1 + rng.below(4);
+              let items: Vec<u32> = rng.sample_distinct(d, c)
+                  .into_iter().map(|i| i as u32).collect();
+              let mut u = vec![0.0f32; m];
+              enc.encode_into(&items, &mut u);
+              let total: f32 = u.iter().sum();
+              let probs: Vec<f32> = u.iter()
+                  .map(|&v| (v + 1e-9) / (total + m as f32 * 1e-9))
+                  .collect();
+              let scores = decode_scores(&probs, &hm);
+              let member_min = items.iter()
+                  .map(|&i| scores[i as usize])
+                  .fold(f32::INFINITY, f32::min);
+              for i in 0..d {
+                  let is_member = enc.contains(&u, i as u32);
+                  if !is_member && scores[i] >= member_min {
+                      return Err(format!(
+                          "non-member {i} ({}) outranks a member ({})",
+                          scores[i], member_min));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_cbe_preserves_row_distinctness() {
+    check("cbe-distinct", 0xA4, 25,
+          |rng| rng.next_u64(),
+          |&seed| {
+              let mut rng = Rng::new(seed);
+              let d = 16 + rng.below(64);
+              let k = 2 + rng.below(3);
+              let m = (2 * k + 2) + rng.below(32);
+              let hm0 = HashMatrix::random(d, m, k, &mut rng);
+              // random sparse instance matrix
+              let n = 30 + rng.below(100);
+              let rows: Vec<Vec<u32>> = (0..n)
+                  .map(|_| {
+                      let c = 1 + rng.below(4);
+                      rng.sample_distinct(d, c.min(d))
+                          .into_iter().map(|i| i as u32).collect()
+                  })
+                  .collect();
+              let x = Csr::from_row_sets(d, &rows);
+              let mut hm = hm0;
+              cbe_rewrite(&mut hm, &x, &mut rng);
+              for i in 0..d {
+                  let set: std::collections::HashSet<_> =
+                      hm.row(i).iter().collect();
+                  if set.len() != k {
+                      return Err(format!("row {i}: {:?}", hm.row(i)));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_top_k_is_argsort_prefix() {
+    check("topk-prefix", 0xA5, 60,
+          |rng| {
+              let n = 1 + rng.below(300);
+              let scores: Vec<f64> = (0..n)
+                  .map(|_| (rng.below(50) as f64) / 10.0) // many ties
+                  .collect();
+              let k = rng.below(n + 5);
+              (scores, k)
+          },
+          |(scores, k)| {
+              let scores_f32: Vec<f32> =
+                  scores.iter().map(|&v| v as f32).collect();
+              let full = argsort_desc(&scores_f32);
+              let got = top_k(&scores_f32, *k);
+              let want = &full[..(*k).min(full.len())];
+              if got != want {
+                  return Err(format!("k={k}: {got:?} != {want:?}"));
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_csr_matvec_matches_dense() {
+    check("csr-matvec", 0xA6, 40,
+          |rng| rng.next_u64(),
+          |&seed| {
+              let mut rng = Rng::new(seed);
+              let rows = 1 + rng.below(20);
+              let cols = 1 + rng.below(20);
+              let mut triplets = Vec::new();
+              for r in 0..rows {
+                  for c in 0..cols {
+                      if rng.bool(0.3) {
+                          triplets.push((r, c,
+                                         (rng.f32() * 4.0) - 2.0));
+                      }
+                  }
+              }
+              let m = Csr::from_triplets(rows, cols, triplets);
+              let x: Vec<f32> = (0..cols).map(|_| rng.f32()).collect();
+              let got = m.matvec(&x);
+              let dense = m.to_dense();
+              for r in 0..rows {
+                  let want: f32 = (0..cols)
+                      .map(|c| dense.at(r, c) * x[c])
+                      .sum();
+                  if (got[r] - want).abs() > 1e-4 {
+                      return Err(format!("row {r}: {} vs {want}", got[r]));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_mwu_p_value_in_unit_range_and_symmetric() {
+    check("mwu-sane", 0xA7, 60,
+          |rng| {
+              let n1 = 2 + rng.below(12);
+              let n2 = 2 + rng.below(12);
+              let a: Vec<f64> = (0..n1)
+                  .map(|_| (rng.below(8) as f64) * 0.5).collect();
+              let b: Vec<f64> = (0..n2)
+                  .map(|_| (rng.below(8) as f64) * 0.5).collect();
+              (a, b)
+          },
+          |(a, b)| {
+              let r1 = mann_whitney_u(a, b);
+              let r2 = mann_whitney_u(b, a);
+              if !(0.0..=1.0).contains(&r1.p_value) {
+                  return Err(format!("p out of range: {}", r1.p_value));
+              }
+              if (r1.p_value - r2.p_value).abs() > 1e-9 {
+                  return Err(format!("asymmetric: {} vs {}",
+                                     r1.p_value, r2.p_value));
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_json_round_trips_random_values() {
+    use bloomrec::util::json::Json;
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.below(2000) as f64 - 1000.0) / 8.0),
+            3 => {
+                let n = rng.below(8);
+                Json::Str((0..n).map(|_| {
+                    let chars = ['a', 'ß', '"', '\\', '\n', '7', 'é'];
+                    chars[rng.below(chars.len())]
+                }).collect())
+            }
+            4 => Json::Arr((0..rng.below(4))
+                .map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj((0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                .collect()),
+        }
+    }
+    check("json-roundtrip", 0xA8, 80,
+          |rng| rng.next_u64(),
+          |&seed| {
+              let mut rng = Rng::new(seed);
+              let v = random_json(&mut rng, 0);
+              let text = v.to_string_pretty();
+              match Json::parse(&text) {
+                  Ok(back) if back == v => Ok(()),
+                  Ok(back) => Err(format!("{v:?} -> {back:?}")),
+                  Err(e) => Err(format!("parse failed: {e} on {text}")),
+              }
+          });
+}
+
+#[test]
+fn prop_identity_embedding_decode_is_inverse() {
+    use bloomrec::embedding::{Embedding, Identity};
+    check("identity-inverse", 0xA9, 40,
+          |rng| {
+              let d = 4 + rng.below(100);
+              let c = 1 + rng.below(d.min(10));
+              let seed = rng.next_u64();
+              (d, c, seed)
+          },
+          |&(d, c, seed)| {
+              let mut rng = Rng::new(seed);
+              let e = Identity { d };
+              let items: Vec<u32> = rng.sample_distinct(d, c)
+                  .into_iter().map(|i| i as u32).collect();
+              let mut u = vec![0.0; d];
+              e.encode_input(&items, &mut u);
+              let scores = e.decode(&u);
+              let top = top_k(&scores, c);
+              let got: std::collections::HashSet<u32> =
+                  top.into_iter().map(|i| i as u32).collect();
+              let want: std::collections::HashSet<u32> =
+                  items.iter().copied().collect();
+              if got != want {
+                  return Err(format!("{got:?} != {want:?}"));
+              }
+              Ok(())
+          });
+}

@@ -1,0 +1,158 @@
+//! Serving-stack integration tests: correctness under concurrency, the
+//! batching policy, and graceful shutdown. Requires built artifacts.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
+use bloomrec::data::Scale;
+use bloomrec::runtime::{HostTensor, Runtime};
+use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
+
+struct Fixture {
+    rt: Arc<Runtime>,
+    predict: bloomrec::runtime::ArtifactSpec,
+    state: bloomrec::model::ModelState,
+    emb: Arc<dyn bloomrec::embedding::Embedding>,
+    ds: Arc<bloomrec::data::Dataset>,
+}
+
+fn fixture() -> Option<Fixture> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping serve tests: run `make artifacts`");
+        return None;
+    }
+    let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
+    let cache = DatasetCache::new();
+    let task = rt.manifest.task("bc").expect("task").clone();
+    let spec = RunSpec {
+        task: task.name.clone(),
+        method: Method::Be { k: 4 },
+        ratio: 0.2,
+        seed: 1,
+        scale: Scale::Tiny,
+        epochs: Some(1),
+    };
+    let m = bloomrec::runtime::round_m(task.d, spec.ratio);
+    let ds = cache.get(&task, spec.scale, spec.seed);
+    let emb: Arc<dyn bloomrec::embedding::Embedding> =
+        coordinator::build_embedding(spec.method, &ds, &task, m, spec.seed)
+            .expect("embedding")
+            .into();
+    let train_spec = rt.manifest
+        .find(&task.name, "train", "softmax_ce", m).unwrap().clone();
+    let predict = rt.manifest
+        .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
+    let (state, _) = coordinator::train(
+        &rt, &train_spec, &ds, emb.as_ref(),
+        &coordinator::TrainConfig { epochs: 1, seed: 1, verbose: false })
+        .expect("train");
+    Some(Fixture { rt, predict, state, emb, ds })
+}
+
+/// Ground-truth top-N computed directly (no server, batch of 1).
+fn direct_top_n(f: &Fixture, items: &[u32], n: usize) -> Vec<usize> {
+    let exe = f.rt.load(&f.predict.name).unwrap();
+    let mut x = HostTensor::zeros(&f.predict.x_shape());
+    f.emb.encode_input(items, &mut x.data[..f.predict.m_in]);
+    let mut inputs: Vec<&HostTensor> = f.state.params.iter().collect();
+    inputs.push(&x);
+    let out = exe.run(&inputs, &[]).unwrap();
+    let mut scores =
+        f.emb.decode(&out[0].data[..f.predict.m_out]);
+    for &it in items {
+        scores[it as usize] = f32::NEG_INFINITY;
+    }
+    bloomrec::linalg::knn::top_k(&scores, n)
+}
+
+#[test]
+fn concurrent_requests_match_direct_computation() {
+    let Some(f) = fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 3,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+            },
+        }).expect("server");
+
+    // submit a wave of concurrent requests over distinct profiles
+    let queries: Vec<Vec<u32>> = f.ds.test.iter().take(40)
+        .map(|e| e.input_items().to_vec())
+        .collect();
+    let rxs: Vec<_> = queries.iter()
+        .map(|q| server.submit(RecRequest {
+            user_items: q.clone(),
+            top_n: 5,
+        }))
+        .collect();
+    for (q, rx) in queries.iter().zip(rxs) {
+        let resp = rx.recv().expect("response");
+        let got: Vec<usize> = resp.items.iter().map(|&(i, _)| i).collect();
+        let want = direct_top_n(&f, q, 5);
+        assert_eq!(got, want, "mismatch for query {q:?}");
+        // scores must be descending
+        for w in resp.items.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        // the user's own items are never recommended
+        for (i, _) in &resp.items {
+            assert!(!q.contains(&(*i as u32)));
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, queries.len() as u64);
+    server.shutdown();
+}
+
+#[test]
+fn batching_actually_batches_under_load() {
+    let Some(f) = fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 1,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(5),
+            },
+        }).expect("server");
+    let rxs: Vec<_> = (0..200)
+        .map(|i| {
+            let ex = &f.ds.test[i % f.ds.test.len()];
+            server.submit(RecRequest {
+                user_items: ex.input_items().to_vec(),
+                top_n: 3,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 200);
+    assert!(snap.batches < 200,
+            "no batching happened: {} batches", snap.batches);
+    assert!(snap.mean_batch_fill > 1.0 / 32.0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_and_joins() {
+    let Some(f) = fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig::default()).expect("server");
+    let ex = &f.ds.test[0];
+    let rx = server.submit(RecRequest {
+        user_items: ex.input_items().to_vec(),
+        top_n: 3,
+    });
+    rx.recv().expect("response before shutdown");
+    server.shutdown(); // must not hang or panic
+}
