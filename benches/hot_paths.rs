@@ -2,7 +2,8 @@
 //!
 //! Covers: Bloom encode (on-the-fly vs hash-matrix), Eq. 3 decode,
 //! top-N selection, CBE construction, ECOC/PMI/CCA build, and the raw
-//! PJRT train/predict step of a mid-size artifact. These are the numbers
+//! backend train/predict step of a mid-size artifact (native by default,
+//! PJRT with --features xla + built artifacts). These are the numbers
 //! EXPERIMENTS.md §Perf tracks before/after optimization.
 
 use bloomrec::bloom::{decode_scores, encode_on_the_fly_into, BloomEncoder,
@@ -98,11 +99,13 @@ fn main() {
         });
     }
 
-    // PJRT step benches need artifacts
-    let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
-        println!("\n== PJRT execute (ml_ff m=152) ==");
+    // backend execute benches (native from the synthetic manifest, or
+    // PJRT when artifacts are built with --features xla)
+    {
+        use bloomrec::runtime::Execution;
+        let dir = std::path::Path::new("artifacts");
         let rt = bloomrec::runtime::Runtime::new(dir).unwrap();
+        println!("\n== {} execute (ml_ff m=152) ==", rt.backend_name());
         let train_spec = rt.manifest
             .find("ml", "train", "softmax_ce", 152).unwrap().clone();
         let predict_spec = rt.manifest
@@ -123,7 +126,7 @@ fn main() {
 
         let batch = train_spec.batch;
         let mut st = state.clone();
-        bench.run("pjrt/train-step (batch=64)", batch, || {
+        bench.run("exec/train-step (batch=64)", batch, || {
             let mut inputs: Vec<&bloomrec::runtime::HostTensor> =
                 Vec::new();
             inputs.extend(st.params.iter());
@@ -137,14 +140,12 @@ fn main() {
             st.opt_state = opt;
         });
 
-        bench.run("pjrt/predict-step (batch=64)", batch, || {
+        bench.run("exec/predict-step (batch=64)", batch, || {
             let mut inputs: Vec<&bloomrec::runtime::HostTensor> =
                 Vec::new();
             inputs.extend(state.params.iter());
             inputs.push(&x);
             sink(exe_p.run(&inputs, &[]).unwrap());
         });
-    } else {
-        println!("\n(artifacts not built; skipping PJRT step benches)");
     }
 }

@@ -14,11 +14,6 @@ use bloomrec::util::Stopwatch;
 fn main() {
     let filter: Vec<String> = std::env::args().skip(1)
         .filter(|a| !a.starts_with('-')).collect();
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        return;
-    }
 
     let mut opts = Options::default();
     opts.scale = bloomrec::data::Scale::Tiny;
@@ -30,6 +25,7 @@ fn main() {
     opts.tasks = Some(vec!["ml".into(), "bc".into()]);
 
     let rt = Runtime::new(&opts.artifact_dir).expect("runtime");
+    println!("[bench] backend: {}", rt.backend_name());
     let ctx = Ctx::new(&rt, &opts);
 
     let mut total = 0.0;

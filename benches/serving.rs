@@ -1,25 +1,30 @@
-//! Serving-layer benchmark: throughput/latency across batching policies
-//! and replica counts (cargo bench --bench serving).
+//! Serving-layer benchmark (cargo bench --bench serving):
 //!
-//! The ablation DESIGN.md calls out: dynamic batching is the L3 knob that
-//! trades p50 latency for throughput; replicas scale until the PJRT CPU
-//! executor saturates the cores.
+//! 1. sparse-vs-dense encode+forward on the native backend — the hot-path
+//!    claim of this repo: feeding the model O(c*k) active positions beats
+//!    materializing and multiplying the O(m) multi-hot row;
+//! 2. throughput/latency across batching policies and replica counts.
+//!
+//! Results are printed and written to BENCH_serving.json at the repo
+//! root (overwritten per run; the PR-over-PR trajectory lives in git
+//! history of that file).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::Scale;
-use bloomrec::runtime::Runtime;
+use bloomrec::embedding::Embedding;
+use bloomrec::model::ModelState;
+use bloomrec::runtime::{BatchInput, Execution, HostTensor, Runtime,
+                        SparseBatch};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
+use bloomrec::util::benchkit::Bench;
 
 fn main() {
     let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        return;
-    }
     let rt = Arc::new(Runtime::new(dir).expect("runtime"));
+    println!("== serving bench (backend: {}) ==", rt.backend_name());
     let cache = DatasetCache::new();
     let task = rt.manifest.task("ml").expect("ml").clone();
     let ratio = 0.2;
@@ -49,19 +54,124 @@ fn main() {
         &coordinator::TrainConfig { epochs: 1, seed: 1, verbose: false })
         .expect("train");
 
-    println!("== serving bench: ml m/d={ratio} k={k} ==");
+    let mut json_sections: Vec<String> = Vec::new();
+
+    sparse_vs_dense(&predict_spec.name, &state, emb.as_ref(), &ds,
+                    &mut json_sections);
+    server_sweep(&rt, &predict_spec, &state, &emb, &ds, ratio, k,
+                 &mut json_sections);
+
+    write_json(&json_sections);
+}
+
+/// The acceptance check + measurement: on a sparse-capable backend the
+/// encode+forward hot path runs from active positions only; compare
+/// against the dense encode+forward doing identical math.
+fn sparse_vs_dense(predict_name: &str, state: &ModelState,
+                   emb: &dyn Embedding, ds: &bloomrec::data::Dataset,
+                   json: &mut Vec<String>) {
+    // force the native backend so both paths run the same interpreter
+    // and only the batch representation differs
+    let rt = Runtime::native(std::path::Path::new("artifacts"))
+        .expect("native runtime");
+    let exe = rt.load(predict_name).expect("load predict");
+    assert!(exe.supports_sparse_input(),
+            "native backend must support sparse input");
+    let spec = exe.spec().clone();
+    let (batch, m_in) = (spec.batch, spec.m_in);
+
+    // a realistic request batch from test-split profiles
+    let queries: Vec<&[u32]> = (0..batch)
+        .map(|i| ds.test[i % ds.test.len()].input_items())
+        .collect();
+    let nnz: usize = {
+        let mut sb = SparseBatch::new(m_in);
+        let mut scratch = Vec::new();
+        for q in &queries {
+            assert!(emb.encode_input_sparse(q, &mut scratch));
+            sb.push_row(&scratch);
+        }
+        sb.nnz()
+    };
+    println!("\n-- sparse vs dense encode+forward (batch={batch}, \
+              m={m_in}, nnz={nnz}, fill={:.3}) --",
+             nnz as f64 / (batch * m_in) as f64);
+
+    let bench = Bench::default();
+    let dense_result = bench.run("encode+forward/dense", batch, || {
+        let mut x = HostTensor::zeros(&spec.x_shape());
+        for (row, q) in queries.iter().enumerate() {
+            emb.encode_input(q, &mut x.data[row * m_in..(row + 1) * m_in]);
+        }
+        let out = exe
+            .predict(&state.params, &BatchInput::Dense(x))
+            .expect("dense predict");
+        std::hint::black_box(out);
+    });
+    let sparse_result = bench.run("encode+forward/sparse", batch, || {
+        let mut sb = SparseBatch::new(m_in);
+        let mut scratch = Vec::new();
+        for q in &queries {
+            emb.encode_input_sparse(q, &mut scratch);
+            sb.push_row(&scratch);
+        }
+        let out = exe
+            .predict(&state.params, &BatchInput::Sparse(sb))
+            .expect("sparse predict");
+        std::hint::black_box(out);
+    });
+
+    // correctness: both paths produce identical outputs
+    {
+        let mut x = HostTensor::zeros(&spec.x_shape());
+        let mut sb = SparseBatch::new(m_in);
+        let mut scratch = Vec::new();
+        for (row, q) in queries.iter().enumerate() {
+            emb.encode_input(q, &mut x.data[row * m_in..(row + 1) * m_in]);
+            emb.encode_input_sparse(q, &mut scratch);
+            sb.push_row(&scratch);
+        }
+        let dense_out = exe
+            .predict(&state.params, &BatchInput::Dense(x))
+            .unwrap();
+        let sparse_out = exe
+            .predict(&state.params, &BatchInput::Sparse(sb))
+            .unwrap();
+        assert_eq!(dense_out, sparse_out,
+                   "sparse and dense forwards must agree bit-for-bit");
+    }
+
+    let speedup = dense_result.mean_us / sparse_result.mean_us;
+    println!("   sparse speedup over dense: {speedup:.2}x");
+    json.push(format!(
+        "  \"sparse_vs_dense\": {{\"task\": \"ml\", \"m\": {m_in}, \
+         \"batch\": {batch}, \"nnz\": {nnz}, \
+         \"dense_us\": {:.2}, \"sparse_us\": {:.2}, \
+         \"speedup\": {speedup:.3}}}",
+        dense_result.mean_us, sparse_result.mean_us));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn server_sweep(rt: &Arc<Runtime>,
+                predict_spec: &bloomrec::runtime::ArtifactSpec,
+                state: &ModelState,
+                emb: &Arc<dyn bloomrec::embedding::Embedding>,
+                ds: &bloomrec::data::Dataset, ratio: f64, k: usize,
+                json: &mut Vec<String>) {
+    println!("\n-- server throughput/latency: ml m/d={ratio} k={k} --");
     println!("{:>8} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
              "replicas", "max_batch", "wait_us", "req/s", "p50ms",
              "p95ms", "fill");
 
+    let mut rows: Vec<String> = Vec::new();
     let n_requests = 4000;
     for replicas in [1usize, 2, 4] {
         for (max_batch, wait_us) in
             [(1usize, 1u64), (16, 500), (64, 2000)]
         {
             let server = Server::start(
-                Arc::clone(&rt), predict_spec.clone(), state.clone(),
-                Arc::clone(&emb),
+                Arc::clone(rt), predict_spec.clone(), state.clone(),
+                Arc::clone(emb),
                 ServeConfig {
                     replicas,
                     batcher: BatcherConfig {
@@ -91,7 +201,29 @@ fn main() {
                       {:>9.2}",
                      replicas, max_batch, wait_us, s.throughput_rps,
                      s.p50_ms, s.p95_ms, s.mean_batch_fill);
+            rows.push(format!(
+                "    {{\"replicas\": {replicas}, \"max_batch\": \
+                 {max_batch}, \"wait_us\": {wait_us}, \"rps\": {:.0}, \
+                 \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"fill\": {:.3}}}",
+                s.throughput_rps, s.p50_ms, s.p95_ms,
+                s.mean_batch_fill));
             server.shutdown();
         }
+    }
+    json.push(format!("  \"server\": [\n{}\n  ]", rows.join(",\n")));
+}
+
+fn write_json(sections: &[String]) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_serving.json");
+    let body = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"source\": \"cargo bench \
+         --bench serving\",\n{}\n}}\n",
+        sections.join(",\n"));
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -11,7 +11,7 @@
 //! loudly if that regresses.
 
 use bloomrec::model::ModelState;
-use bloomrec::runtime::{HostTensor, Runtime};
+use bloomrec::runtime::{Execution, HostTensor, Runtime};
 use bloomrec::util::rng::Rng;
 
 fn rss_gb() -> f64 {

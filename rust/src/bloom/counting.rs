@@ -70,6 +70,14 @@ impl crate::embedding::Embedding for CountingBloom {
         super::encode::BloomEncoder::new(&self.hm_in)
             .encode_into(items, out);
     }
+    fn encode_input_sparse(&self, items: &[u32],
+                           out: &mut Vec<(u32, f32)>) -> bool {
+        // the network *input* stays binary (counts live on the target
+        // side only), so the sparse row is the plain Bloom row
+        super::encode::BloomEncoder::new(&self.hm_in)
+            .encode_sparse_row(items, out);
+        true
+    }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         encode_counting_into(self.out_matrix(), items, out);
     }

@@ -35,6 +35,21 @@ impl<'a> BloomEncoder<'a> {
         active
     }
 
+    /// Sparse row encode: clear `out` and fill it with the (position,
+    /// 1.0) pairs of the embedded multi-hot, sorted and deduped — the
+    /// active-position form the sparse batch pipeline consumes.
+    pub fn encode_sparse_row(&self, items: &[u32],
+                             out: &mut Vec<(u32, f32)>) {
+        out.clear();
+        for &it in items {
+            for &p in self.hm.row(it as usize) {
+                out.push((p, 1.0));
+            }
+        }
+        out.sort_unstable_by_key(|e| e.0);
+        out.dedup_by_key(|e| e.0);
+    }
+
     /// Embedded positions as a set list (sorted, deduped).
     pub fn encode_positions(&self, items: &[u32]) -> Vec<u32> {
         let mut pos: Vec<u32> = items
@@ -73,21 +88,21 @@ pub fn encode_on_the_fly_into(items: &[u32], m: usize, k: usize, seed: u64,
 }
 
 /// Batch encode into a row-major [batch, m] buffer. Rows beyond
-/// `instances.len()` are zero-padded (static-batch artifacts).
+/// `instances.len()` are zero-padded (static-batch artifacts). Returns
+/// the total number of distinct active embedded positions across the
+/// batch (collision accounting, same contract as [`BloomEncoder::encode_into`]).
 pub fn encode_batch(enc: &BloomEncoder<'_>, instances: &[&[u32]],
-                    batch: usize, out: &mut [f32]) {
+                    batch: usize, out: &mut [f32]) -> usize {
     let m = enc.hm.m;
     assert!(instances.len() <= batch);
     assert_eq!(out.len(), batch * m);
-    out.fill(0.0);
+    // encode_into clears each live row; only the padded tail needs zeroing
+    out[instances.len() * m..].fill(0.0);
+    let mut active = 0;
     for (row, items) in instances.iter().enumerate() {
-        let dst = &mut out[row * m..(row + 1) * m];
-        for &it in *items {
-            for &p in enc.hm.row(it as usize) {
-                dst[p as usize] = 1.0;
-            }
-        }
+        active += enc.encode_into(items, &mut out[row * m..(row + 1) * m]);
     }
+    active
 }
 
 #[cfg(test)]
@@ -164,10 +179,29 @@ mod tests {
         let hm = hm();
         let enc = BloomEncoder::new(&hm);
         let a: &[u32] = &[1, 2];
-        let mut out = vec![0.0; 4 * 32];
-        encode_batch(&enc, &[a], 4, &mut out);
+        let mut out = vec![1.0; 4 * 32]; // stale garbage must be cleared
+        let active = encode_batch(&enc, &[a], 4, &mut out);
         assert!(out[..32].iter().any(|&v| v > 0.0));
         assert!(out[32..].iter().all(|&v| v == 0.0));
+        // collision accounting flows through from encode_into
+        let mut single = vec![0.0; 32];
+        assert_eq!(active, enc.encode_into(a, &mut single));
+    }
+
+    #[test]
+    fn batch_encode_rows_match_single_row_encodes() {
+        let hm = hm();
+        let enc = BloomEncoder::new(&hm);
+        let rows: [&[u32]; 3] = [&[1, 2], &[7], &[3, 17, 55]];
+        let mut out = vec![0.5; 4 * 32];
+        let active = encode_batch(&enc, &rows, 4, &mut out);
+        let mut expect_active = 0;
+        for (r, items) in rows.iter().enumerate() {
+            let mut single = vec![0.0; 32];
+            expect_active += enc.encode_into(items, &mut single);
+            assert_eq!(&out[r * 32..(r + 1) * 32], &single[..], "row {r}");
+        }
+        assert_eq!(active, expect_active);
     }
 
     #[test]

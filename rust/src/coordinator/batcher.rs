@@ -1,9 +1,66 @@
 //! Minibatch assembly: encode examples through an [`Embedding`] into the
-//! fixed-shape tensors the AOT artifacts expect (zero-padded final batch).
+//! batch representation the backend consumes — sparse active-position
+//! rows first (the paper's O(c*k) encoding), dense zero-padded tensors
+//! only for sequence artifacts and dense-only embeddings.
 
 use crate::data::{Example, Input, Target, PAD};
 use crate::embedding::Embedding;
-use crate::runtime::{ArtifactSpec, HostTensor};
+use crate::runtime::{ArtifactSpec, BatchInput, HostTensor, SparseBatch};
+
+/// Encode example inputs sparse-first: per-row active embedded positions
+/// when the backend consumes them (`sparse`, from
+/// [`crate::runtime::Execution::supports_sparse_input`]) and the
+/// embedding produces them (Bloom/HT/CBE, identity, code matrices); a
+/// dense `x` tensor otherwise (dense-only backends, PMI/CCA tables,
+/// sequence artifacts). The dense `[batch, m_in]` multi-hot is never
+/// materialized on the sparse path.
+pub fn encode_input_batch(spec: &ArtifactSpec, emb: &dyn Embedding,
+                          examples: &[&Example], sparse: bool)
+    -> BatchInput {
+    if spec.seq_len > 0 {
+        let mut x = HostTensor::zeros(&spec.x_shape());
+        encode_inputs(spec, emb, examples, &mut x);
+        return BatchInput::Dense(x);
+    }
+    let rows: Vec<&[u32]> = examples
+        .iter()
+        .map(|ex| match &ex.input {
+            Input::Items(v) => v.as_slice(),
+            Input::Sequence(_) => panic!("ff artifact, sequence input"),
+        })
+        .collect();
+    encode_item_rows(spec, emb, &rows, sparse)
+}
+
+/// Shared batch assembly over raw item rows (training examples and
+/// serving requests both reduce to this): try the sparse path, fall back
+/// to a dense tensor. Flat FF inputs only — sequence artifacts go
+/// through [`encode_inputs`].
+pub fn encode_item_rows(spec: &ArtifactSpec, emb: &dyn Embedding,
+                        rows: &[&[u32]], sparse: bool) -> BatchInput {
+    debug_assert_eq!(spec.seq_len, 0, "flat ff inputs only");
+    if sparse {
+        let mut sb = SparseBatch::new(spec.m_in);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        let mut sparse_ok = true;
+        for items in rows {
+            if !emb.encode_input_sparse(items, &mut scratch) {
+                sparse_ok = false;
+                break;
+            }
+            sb.push_row(&scratch);
+        }
+        if sparse_ok {
+            return BatchInput::Sparse(sb);
+        }
+    }
+    let m = spec.m_in;
+    let mut x = HostTensor::zeros(&spec.x_shape());
+    for (row, items) in rows.iter().enumerate() {
+        emb.encode_input(items, &mut x.data[row * m..(row + 1) * m]);
+    }
+    BatchInput::Dense(x)
+}
 
 /// Encode a slice of examples (<= spec.batch) into the x tensor.
 pub fn encode_inputs(spec: &ArtifactSpec, emb: &dyn Embedding,
@@ -83,7 +140,8 @@ mod tests {
             name: "t".into(), task: "t".into(), family: "ff".into(),
             kind: "train".into(), loss: "softmax_ce".into(),
             m_in: m, m_out: m, hidden: vec![8], batch, seq_len: 0,
-            optimizer: "adam".into(), ratio: 1.0, file: "t".into(),
+            optimizer: "adam".into(), opt_params: Default::default(),
+            ratio: 1.0, file: "t".into(),
             params: vec![TensorSpec { name: "w".into(), shape: vec![m, m] }],
             opt_slots: 2, decode_d: 0, decode_k: 0,
         }
@@ -152,6 +210,44 @@ mod tests {
         let mut y = HostTensor::zeros(&spec.y_shape());
         encode_targets(&spec, &emb, &[&e], &mut y);
         assert_eq!(y.data.iter().filter(|&&v| v > 0.0).count(), 3);
+    }
+
+    #[test]
+    fn encode_input_batch_is_sparse_for_bloom() {
+        let mut rng = Rng::new(4);
+        let spec = ff_spec(16, 4);
+        let emb = Bloom::new(HashMatrix::random(32, 16, 3, &mut rng), None);
+        let e1 = Example { input: Input::Items(vec![1, 9]),
+                           target: Target::Items(vec![2]) };
+        let e2 = Example { input: Input::Items(vec![30]),
+                           target: Target::Items(vec![0]) };
+        let x = encode_input_batch(&spec, &emb, &[&e1, &e2], true);
+        let BatchInput::Sparse(sb) = &x else {
+            panic!("bloom encodes sparse");
+        };
+        assert_eq!(sb.rows(), 2);
+        // the sparse rows densify to exactly what encode_inputs builds
+        let mut dense = HostTensor::zeros(&spec.x_shape());
+        encode_inputs(&spec, &emb, &[&e1, &e2], &mut dense);
+        assert_eq!(sb.to_dense(spec.batch), dense);
+    }
+
+    #[test]
+    fn encode_input_batch_falls_back_dense_for_tables() {
+        use crate::embedding::DenseTable;
+        use crate::linalg::dense::Mat;
+        use crate::linalg::knn::Metric;
+        let spec = ff_spec(2, 2);
+        let table = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.5, 0.5]]);
+        let dt = DenseTable::new(table, Metric::Cosine, "pmi");
+        let e = Example { input: Input::Items(vec![0, 1]),
+                          target: Target::Items(vec![0]) };
+        let x = encode_input_batch(&spec, &dt, &[&e], true);
+        assert!(matches!(x, BatchInput::Dense(_)));
+        // a dense-only backend short-circuits straight to dense
+        let emb = Identity { d: 2 };
+        let x = encode_input_batch(&spec, &emb, &[&e], false);
+        assert!(matches!(x, BatchInput::Dense(_)));
     }
 
     #[test]

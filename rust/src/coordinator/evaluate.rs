@@ -8,14 +8,14 @@ use std::collections::HashSet;
 
 use anyhow::Result;
 
-use super::batcher::{batch_ranges, encode_inputs};
+use super::batcher::{batch_ranges, encode_input_batch};
 use crate::data::{Dataset, Example, Target};
 use crate::embedding::Embedding;
 use crate::eval::{accuracy_pct, average_precision,
                   average_precision_from_ranks, Measure};
 use crate::linalg::knn::{rank_of, ranks_of};
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, HostTensor, Runtime};
+use crate::runtime::{ArtifactSpec, Execution, Runtime};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -34,7 +34,6 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
                 ds: &Dataset, emb: &dyn Embedding, measure: Measure)
     -> Result<EvalReport> {
     let exe = rt.load(&spec.name)?;
-    let mut x = HostTensor::zeros(&spec.x_shape());
     let watch = Stopwatch::new();
     let mut scores_sum = 0.0f64;
     let mut n = 0usize;
@@ -43,13 +42,9 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
 
     for (lo, hi) in batch_ranges(ds.test.len(), spec.batch) {
         let batch: Vec<&Example> = ds.test[lo..hi].iter().collect();
-        encode_inputs(spec, emb, &batch, &mut x);
-        let mut inputs: Vec<&HostTensor> =
-            Vec::with_capacity(state.params.len() + 1);
-        inputs.extend(state.params.iter());
-        inputs.push(&x);
-        let outputs = exe.run(&inputs, &[])?;
-        let probs = &outputs[0]; // [batch, m_out]
+        let x = encode_input_batch(spec, emb, &batch,
+                                   exe.supports_sparse_input());
+        let probs = exe.predict(&state.params, &x)?; // [batch, m_out]
         let m = spec.m_out;
 
         for (row, ex) in batch.iter().enumerate() {

@@ -4,11 +4,11 @@
 
 use anyhow::Result;
 
-use super::batcher::{batch_ranges, encode_inputs, encode_targets};
+use super::batcher::{batch_ranges, encode_input_batch, encode_targets};
 use crate::data::Dataset;
 use crate::embedding::Embedding;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, HostTensor, Runtime};
+use crate::runtime::{ArtifactSpec, Execution, HostTensor, Runtime};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -49,11 +49,8 @@ pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
         first_epoch_curve: Vec::new(),
     };
 
-    let mut x = HostTensor::zeros(&spec.x_shape());
     let mut y = HostTensor::zeros(&spec.y_shape());
     let mut order: Vec<usize> = (0..ds.train.len()).collect();
-    let p = spec.params.len();
-    let s = spec.n_state();
     let watch = Stopwatch::new();
 
     for epoch in 0..cfg.epochs {
@@ -63,22 +60,12 @@ pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
         for (lo, hi) in batch_ranges(order.len(), spec.batch) {
             let batch: Vec<&crate::data::Example> =
                 order[lo..hi].iter().map(|&i| &ds.train[i]).collect();
-            encode_inputs(spec, emb, &batch, &mut x);
+            // sparse active-position rows when both the backend and the
+            // embedding support them; dense otherwise
+            let x = encode_input_batch(spec, emb, &batch,
+                                       exe.supports_sparse_input());
             encode_targets(spec, emb, &batch, &mut y);
-
-            let mut inputs: Vec<&HostTensor> =
-                Vec::with_capacity(p + s + 2);
-            inputs.extend(state.params.iter());
-            inputs.extend(state.opt_state.iter());
-            inputs.push(&x);
-            inputs.push(&y);
-            let mut outputs = exe.run(&inputs, &[])?;
-            debug_assert_eq!(outputs.len(), p + s + 1);
-
-            let loss = outputs.pop().unwrap().data[0];
-            let new_opt = outputs.split_off(p);
-            state.params = outputs;
-            state.opt_state = new_opt;
+            let loss = exe.train_step(&mut state, &x, &y)?;
 
             epoch_loss += loss as f64;
             n_batches += 1;

@@ -40,6 +40,19 @@ pub trait Embedding: Send + Sync {
     /// Encode an active-item set into `out` (len `m_in`).
     fn encode_input(&self, items: &[u32], out: &mut [f32]);
 
+    /// Sparse encode: clear `out` and fill it with exactly the (embedded
+    /// position, value) pairs [`Embedding::encode_input`] would write as
+    /// nonzeros — each position at most once, ascending. Returns `false`
+    /// for dense-only embeddings (PMI/CCA real-valued tables); callers
+    /// then fall back to the dense encode. This is the paper's O(c*k)
+    /// on-the-fly path: the `[batch, m]` multi-hot never materializes on
+    /// backends that gather sparse rows directly.
+    fn encode_input_sparse(&self, items: &[u32],
+                           out: &mut Vec<(u32, f32)>) -> bool {
+        let _ = (items, out);
+        false
+    }
+
     /// Encode a ground-truth item set into `out` (len `m_out`).
     fn encode_target(&self, items: &[u32], out: &mut [f32]);
 
@@ -73,6 +86,14 @@ impl Embedding for Identity {
         for &i in items {
             out[i as usize] = 1.0;
         }
+    }
+    fn encode_input_sparse(&self, items: &[u32],
+                           out: &mut Vec<(u32, f32)>) -> bool {
+        out.clear();
+        out.extend(items.iter().map(|&i| (i, 1.0f32)));
+        out.sort_unstable_by_key(|e| e.0);
+        out.dedup_by_key(|e| e.0);
+        true
     }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         self.encode_input(items, out);
@@ -125,6 +146,11 @@ impl Embedding for Bloom {
     }
     fn encode_input(&self, items: &[u32], out: &mut [f32]) {
         BloomEncoder::new(&self.hm_in).encode_into(items, out);
+    }
+    fn encode_input_sparse(&self, items: &[u32],
+                           out: &mut Vec<(u32, f32)>) -> bool {
+        BloomEncoder::new(&self.hm_in).encode_sparse_row(items, out);
+        true
     }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         BloomEncoder::new(self.out_matrix()).encode_into(items, out);
@@ -212,6 +238,28 @@ impl Embedding for CodeMatrix {
                 }
             }
         }
+    }
+    fn encode_input_sparse(&self, items: &[u32],
+                           out: &mut Vec<(u32, f32)>) -> bool {
+        out.clear();
+        // OR the codewords word-wise, then emit the set bits ascending
+        let mut acc = vec![0u64; self.words_per_row];
+        for &it in items {
+            for (a, &w) in acc.iter_mut().zip(self.row_words(it as usize)) {
+                *a |= w;
+            }
+        }
+        for (wi, &word) in acc.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let j = wi * 64 + bits.trailing_zeros() as usize;
+                if j < self.m {
+                    out.push((j as u32, 1.0));
+                }
+                bits &= bits - 1;
+            }
+        }
+        true
     }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         self.encode_input(items, out);
@@ -370,6 +418,47 @@ mod tests {
         let probs = vec![0.4, 0.4, 0.1, 0.1];
         let scores = cm.decode(&probs);
         assert!(scores[0] > scores[1]);
+    }
+
+    #[test]
+    fn sparse_encode_matches_dense_nonzeros() {
+        let mut rng = Rng::new(9);
+        let embs: Vec<Box<dyn Embedding>> = vec![
+            Box::new(Identity { d: 40 }),
+            Box::new(Bloom::new(HashMatrix::random(40, 16, 3, &mut rng),
+                                None)),
+            Box::new(CodeMatrix::from_rows(
+                4,
+                70,
+                &(0..4)
+                    .map(|i| (0..70).map(|j| (i + j) % 3 == 0).collect())
+                    .collect::<Vec<_>>(),
+                "ecoc",
+            )),
+        ];
+        for emb in &embs {
+            let items: &[u32] = &[0, 3, 3, 1];
+            let mut dense = vec![0.0f32; emb.m_in()];
+            emb.encode_input(items, &mut dense);
+            let mut sparse = Vec::new();
+            assert!(emb.encode_input_sparse(items, &mut sparse),
+                    "{} should encode sparsely", emb.name());
+            let expected: Vec<(u32, f32)> = dense
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, &v)| (i as u32, v))
+                .collect();
+            assert_eq!(sparse, expected, "{}", emb.name());
+        }
+    }
+
+    #[test]
+    fn dense_table_has_no_sparse_encode() {
+        let table = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let dt = DenseTable::new(table, Metric::Cosine, "pmi");
+        let mut sparse = Vec::new();
+        assert!(!dt.encode_input_sparse(&[0], &mut sparse));
     }
 
     #[test]

@@ -91,7 +91,19 @@ impl<'a> Ctx<'a> {
             .manifest
             .tasks
             .iter()
-            .filter(|t| self.opts.task_enabled(&t.name))
+            .filter(|t| {
+                if !self.opts.task_enabled(&t.name) {
+                    return false;
+                }
+                if !self.rt.supports_task(t) {
+                    crate::info!(
+                        "skipping task {}: family '{}' needs a backend \
+                         beyond '{}' (build with --features xla)",
+                        t.name, t.family, self.rt.backend_name());
+                    return false;
+                }
+                true
+            })
             .cloned()
             .collect()
     }

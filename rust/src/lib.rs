@@ -10,8 +10,13 @@
 //! * Layer 2: JAX models, AOT-lowered to HLO text (`python/compile/`).
 //! * Layer 1: Pallas kernels inside those artifacts.
 //!
-//! Python never runs on the request path; the `runtime` module drives the
-//! AOT artifacts through the PJRT CPU client of the `xla` crate.
+//! Model execution is pluggable (`runtime::Backend`): the default build
+//! runs the pure-Rust native backend (sparse-gather FF interpreter, zero
+//! native dependencies), while `--features xla` adds the PJRT CPU bridge
+//! that drives the AOT artifacts — Python never runs on the request path
+//! either way. Minibatches flow to the backend as sparse active-position
+//! rows (`runtime::SparseBatch`, the paper's O(c*k) encoding); dense
+//! `[batch, m]` tensors materialize only inside backends that need them.
 
 pub mod bloom;
 pub mod linalg;

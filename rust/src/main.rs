@@ -143,7 +143,8 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     }
 
     // train the model to serve
-    info!("training {} (m/d={ratio}, k={k}) before serving...", task.name);
+    info!("training {} (m/d={ratio}, k={k}) on the {} backend before \
+           serving...", task.name, rt.backend_name());
     let spec = RunSpec {
         task: task.name.clone(),
         method: Method::Be { k },
@@ -203,8 +204,9 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
 }
 
 fn cmd_inspect(opts: &Options) -> Result<()> {
-    let manifest =
-        bloomrec::runtime::Manifest::load(&opts.artifact_dir)?;
+    let rt = Runtime::new(&opts.artifact_dir)?;
+    let manifest = &rt.manifest;
+    println!("backend: {}", rt.backend_name());
     println!("manifest: {} tasks, {} artifacts, batch={}",
              manifest.tasks.len(), manifest.artifacts.len(),
              manifest.batch);
@@ -214,9 +216,10 @@ fn cmd_inspect(opts: &Options) -> Result<()> {
             .iter()
             .filter(|a| a.task == t.name)
             .count();
+        let runnable = if rt.supports_task(t) { "" } else { " [xla-only]" };
         println!(
             "  {:6} d={:5} c~{:3} {:10} {:9} metric={:4} ratios={:?} \
-             artifacts={arts}",
+             artifacts={arts}{runnable}",
             t.name, t.d, t.c_median, t.family, t.optimizer, t.metric,
             t.ratios
         );

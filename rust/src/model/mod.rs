@@ -103,7 +103,8 @@ mod tests {
             name: "t".into(), task: "t".into(), family: "ff".into(),
             kind: "train".into(), loss: "softmax_ce".into(),
             m_in: 16, m_out: 16, hidden: vec![8], batch: 4, seq_len: 0,
-            optimizer: "adam".into(), ratio: 1.0, file: "t.hlo.txt".into(),
+            optimizer: "adam".into(), opt_params: Default::default(),
+            ratio: 1.0, file: "t.hlo.txt".into(),
             params: vec![
                 TensorSpec { name: "w0".into(), shape: vec![16, 8] },
                 TensorSpec { name: "b0".into(), shape: vec![8] },

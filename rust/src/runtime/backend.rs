@@ -1,0 +1,397 @@
+//! The pluggable compute-backend boundary.
+//!
+//! Everything above this line (coordinator, serving, experiments) talks to
+//! model execution through [`Runtime`] -> [`Execution`]; everything below
+//! it is a [`Backend`]: the pure-Rust [`super::native::NativeBackend`]
+//! that interprets FF artifact specs directly, or (behind the `xla` cargo
+//! feature) the PJRT executor driving AOT-compiled HLO artifacts.
+//!
+//! Batches cross the boundary as [`BatchInput`]: sparse active-position
+//! rows ([`SparseBatch`], the paper's O(c*k) encoding) by default, dense
+//! tensors only where unavoidable (sequence inputs, dense PMI/CCA
+//! embeddings). Backends that cannot consume sparse input materialize a
+//! dense tensor *inside* the boundary — the coordinator and server never
+//! build a `[batch, m_in]` buffer themselves when the backend supports
+//! sparse input.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, TaskSpec};
+use super::native::NativeBackend;
+use super::tensor::{HostTensor, HostTensorI32};
+use crate::model::ModelState;
+
+/// CSR-style batch of sparse input rows: per row, the active embedded
+/// positions and their values (1.0 for binary encodings). Rows hold each
+/// position at most once — encoders dedup before pushing.
+#[derive(Clone, Debug)]
+pub struct SparseBatch {
+    pub m_in: usize,
+    /// row offsets into `indices`/`weights`; `rows() + 1` entries
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub weights: Vec<f32>,
+}
+
+impl SparseBatch {
+    pub fn new(m_in: usize) -> Self {
+        Self {
+            m_in,
+            indptr: vec![0],
+            indices: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.indptr.truncate(1);
+        self.indices.clear();
+        self.weights.clear();
+    }
+
+    /// Append one row of (position, value) entries (positions unique).
+    pub fn push_row(&mut self, entries: &[(u32, f32)]) {
+        for &(i, w) in entries {
+            debug_assert!((i as usize) < self.m_in,
+                          "position {i} out of range m_in={}", self.m_in);
+            self.indices.push(i);
+            self.weights.push(w);
+        }
+        self.indptr.push(self.indices.len());
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Materialize a dense `[batch, m_in]` tensor (rows past `rows()`
+    /// zero-padded) — for backends without sparse input support.
+    pub fn to_dense(&self, batch: usize) -> HostTensor {
+        assert!(self.rows() <= batch,
+                "{} rows exceed batch {batch}", self.rows());
+        let mut t = HostTensor::zeros(&[batch, self.m_in]);
+        for r in 0..self.rows() {
+            let (idx, wgt) = self.row(r);
+            let dst = &mut t.data[r * self.m_in..(r + 1) * self.m_in];
+            for (&i, &v) in idx.iter().zip(wgt) {
+                dst[i as usize] = v;
+            }
+        }
+        t
+    }
+}
+
+/// A minibatch input at the backend boundary.
+#[derive(Clone, Debug)]
+pub enum BatchInput {
+    /// Active-position rows (flat FF inputs only).
+    Sparse(SparseBatch),
+    /// Fully materialized `x` tensor (`spec.x_shape()`).
+    Dense(HostTensor),
+}
+
+impl BatchInput {
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, BatchInput::Sparse(_))
+    }
+
+    /// Dense view of the batch — borrowed when already dense, materialized
+    /// (inside the backend boundary) when sparse.
+    pub fn dense_view(&self, spec: &ArtifactSpec)
+        -> Result<Cow<'_, HostTensor>> {
+        match self {
+            BatchInput::Dense(t) => Ok(Cow::Borrowed(t)),
+            BatchInput::Sparse(sb) => {
+                if spec.seq_len > 0 {
+                    bail!("sparse batches carry flat ff inputs; sequence \
+                           artifact '{}' needs a dense batch", spec.name);
+                }
+                if sb.m_in != spec.m_in {
+                    bail!("sparse batch m_in {} != artifact m_in {}",
+                          sb.m_in, spec.m_in);
+                }
+                Ok(Cow::Owned(sb.to_dense(spec.batch)))
+            }
+        }
+    }
+}
+
+/// A loaded/compiled artifact, ready to execute.
+///
+/// `run` is the raw artifact-wire call (flat dense tensors, the layout
+/// python/compile/model.py documents); `train_step`/`predict` are the
+/// typed entry points the coordinator and server use, with batch inputs
+/// that may stay sparse all the way into the backend.
+pub trait Execution: Send + Sync {
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Raw wire call:
+    ///   train:          (params.., state.., x, y) -> (params'.., state'.., loss)
+    ///   predict:        (params.., x)             -> (out,)
+    ///   predict_decode: (params.., x | H)         -> (scores,)
+    fn run(&self, inputs: &[&HostTensor], i32_inputs: &[&HostTensorI32])
+        -> Result<Vec<HostTensor>>;
+
+    /// Whether this executable consumes [`BatchInput::Sparse`] natively
+    /// (no dense `[batch, m_in]` materialization anywhere).
+    fn supports_sparse_input(&self) -> bool {
+        false
+    }
+
+    /// One optimizer step on `state`; returns the batch loss.
+    fn train_step(&self, state: &mut ModelState, x: &BatchInput,
+                  y: &HostTensor) -> Result<f32> {
+        let x_dense = x.dense_view(self.spec())?;
+        let p = state.params.len();
+        let s = state.opt_state.len();
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(p + s + 2);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.opt_state.iter());
+        inputs.push(x_dense.as_ref());
+        inputs.push(y);
+        let mut outputs = self.run(&inputs, &[])?;
+        if outputs.len() != p + s + 1 {
+            bail!("train artifact '{}' returned {} outputs, expected {}",
+                  self.spec().name, outputs.len(), p + s + 1);
+        }
+        let loss = outputs.pop().expect("loss output").data[0];
+        let new_opt = outputs.split_off(p);
+        state.params = outputs;
+        state.opt_state = new_opt;
+        Ok(loss)
+    }
+
+    /// Forward pass; returns the `[batch, m_out]` output tensor.
+    fn predict(&self, params: &[HostTensor], x: &BatchInput)
+        -> Result<HostTensor> {
+        let x_dense = x.dense_view(self.spec())?;
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(params.len() + 1);
+        inputs.extend(params.iter());
+        inputs.push(x_dense.as_ref());
+        let mut outputs = self.run(&inputs, &[])?;
+        if outputs.is_empty() {
+            bail!("predict artifact '{}' returned no outputs",
+                  self.spec().name);
+        }
+        Ok(outputs.remove(0))
+    }
+}
+
+/// A model-execution backend: turns artifact specs into [`Execution`]s.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Which model families this backend can execute.
+    fn supports_family(&self, family: &str) -> bool {
+        let _ = family;
+        true
+    }
+
+    fn load(&self, manifest: &Manifest, spec: &ArtifactSpec)
+        -> Result<Arc<dyn Execution>>;
+}
+
+/// LRU cache of loaded executions. XLA CPU executables hold large compile
+/// arenas; unbounded caching OOMs a long experiment sweep, so residency is
+/// capped and misses reload (~0.1-1 s for PJRT, trivial for native).
+struct ExeCache {
+    map: HashMap<String, (Arc<dyn Execution>, u64)>,
+    clock: u64,
+    capacity: usize,
+}
+
+impl ExeCache {
+    fn new(capacity: usize) -> Self {
+        Self { map: HashMap::new(), clock: 0, capacity }
+    }
+
+    fn get(&mut self, name: &str) -> Option<Arc<dyn Execution>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(name).map(|(exe, stamp)| {
+            *stamp = clock;
+            Arc::clone(exe)
+        })
+    }
+
+    fn insert(&mut self, name: String, exe: Arc<dyn Execution>) {
+        self.clock += 1;
+        while self.map.len() >= self.capacity {
+            let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            crate::debug!("evicting loaded artifact {victim}");
+            self.map.remove(&victim);
+        }
+        self.map.insert(name, (exe, self.clock));
+    }
+}
+
+/// Manifest + backend + execution cache: the façade every layer above the
+/// runtime talks to.
+pub struct Runtime {
+    pub manifest: Manifest,
+    backend: Arc<dyn Backend>,
+    cache: Mutex<ExeCache>,
+}
+
+impl Runtime {
+    /// Open a runtime over an artifact directory, auto-selecting the
+    /// backend:
+    /// * with the `xla` feature, AOT artifacts present and
+    ///   `BLOOMREC_BACKEND` != "native": the PJRT executor;
+    /// * otherwise the pure-Rust native backend, over the on-disk
+    ///   manifest when present or the built-in synthetic manifest (the
+    ///   Rust mirror of python/compile/manifest.py) when not.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let has_artifacts = artifact_dir.join("manifest.json").exists();
+        let force_native =
+            std::env::var("BLOOMREC_BACKEND").as_deref() == Ok("native");
+        #[cfg(feature = "xla")]
+        if has_artifacts && !force_native {
+            let manifest = Manifest::load(artifact_dir)?;
+            let backend: Arc<dyn Backend> =
+                Arc::new(super::xla::XlaBackend::new()?);
+            return Ok(Self::with_backend(manifest, backend));
+        }
+        let _ = force_native;
+        Self::native_at(artifact_dir, has_artifacts)
+    }
+
+    /// Force the native backend (used by benches for apples-to-apples
+    /// sparse-vs-dense measurements).
+    pub fn native(artifact_dir: &Path) -> Result<Runtime> {
+        let has_artifacts = artifact_dir.join("manifest.json").exists();
+        Self::native_at(artifact_dir, has_artifacts)
+    }
+
+    fn native_at(artifact_dir: &Path, has_artifacts: bool)
+        -> Result<Runtime> {
+        let manifest = if has_artifacts {
+            Manifest::load(artifact_dir)?
+        } else {
+            crate::debug!(
+                "no manifest.json under {}; using the synthetic manifest",
+                artifact_dir.display());
+            Manifest::synthetic(artifact_dir)
+        };
+        Ok(Self::with_backend(manifest, Arc::new(NativeBackend)))
+    }
+
+    /// Assemble a runtime from parts (tests, custom backends).
+    pub fn with_backend(manifest: Manifest, backend: Arc<dyn Backend>)
+        -> Runtime {
+        let capacity = std::env::var("BLOOMREC_EXE_CACHE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(16);
+        Runtime {
+            manifest,
+            backend,
+            cache: Mutex::new(ExeCache::new(capacity)),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Whether the active backend can run a task's model family.
+    pub fn supports_task(&self, task: &TaskSpec) -> bool {
+        self.backend.supports_family(&task.family)
+    }
+
+    /// Load an artifact (LRU-cached).
+    pub fn load(&self, name: &str) -> Result<Arc<dyn Execution>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe);
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let exe = self.backend.load(&self.manifest, &spec)?;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of loaded executions held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_batch_round_trips_to_dense() {
+        let mut sb = SparseBatch::new(6);
+        sb.push_row(&[(1, 1.0), (4, 1.0)]);
+        sb.push_row(&[]);
+        sb.push_row(&[(0, 2.0)]);
+        assert_eq!(sb.rows(), 3);
+        assert_eq!(sb.nnz(), 3);
+        assert_eq!(sb.row(0), (&[1u32, 4][..], &[1.0f32, 1.0][..]));
+        assert_eq!(sb.row(1).0.len(), 0);
+        let t = sb.to_dense(4);
+        assert_eq!(t.shape, vec![4, 6]);
+        assert_eq!(t.data[1], 1.0);
+        assert_eq!(t.data[4], 1.0);
+        assert_eq!(t.data[2 * 6], 2.0);
+        // padded row 3 all zero
+        assert!(t.data[3 * 6..].iter().all(|&v| v == 0.0));
+        sb.clear();
+        assert_eq!(sb.rows(), 0);
+        assert_eq!(sb.nnz(), 0);
+    }
+
+    #[test]
+    fn dense_view_borrows_dense_and_materializes_sparse() {
+        let spec = crate::runtime::manifest::test_ff_spec(4, &[3], 4, 2);
+        let dense = BatchInput::Dense(HostTensor::zeros(&[2, 4]));
+        let v = dense.dense_view(&spec).unwrap();
+        assert!(matches!(v, Cow::Borrowed(_)));
+        let mut sb = SparseBatch::new(4);
+        sb.push_row(&[(2, 1.0)]);
+        let sparse = BatchInput::Sparse(sb);
+        assert!(sparse.is_sparse());
+        let v = sparse.dense_view(&spec).unwrap();
+        assert!(matches!(v, Cow::Owned(_)));
+        assert_eq!(v.shape, vec![2, 4]);
+        assert_eq!(v.data[2], 1.0);
+    }
+
+    #[test]
+    fn sparse_view_rejects_sequence_specs() {
+        let mut spec = crate::runtime::manifest::test_ff_spec(4, &[3], 4, 2);
+        spec.seq_len = 5;
+        let sparse = BatchInput::Sparse(SparseBatch::new(4));
+        assert!(sparse.dense_view(&spec).is_err());
+    }
+}

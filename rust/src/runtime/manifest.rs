@@ -24,6 +24,64 @@ impl TensorSpec {
     }
 }
 
+/// Optimizer hyper-parameters (python optim.py keyword args, flattened).
+/// Fields irrelevant to an optimizer are simply unused by it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OptParams {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+    pub momentum: f64,
+    pub clip_norm: f64,
+    pub decay: f64,
+}
+
+impl Default for OptParams {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            momentum: 0.0,
+            clip_norm: 0.0,
+            decay: 0.9,
+        }
+    }
+}
+
+impl OptParams {
+    fn from_json(j: &Json) -> OptParams {
+        let mut p = OptParams::default();
+        if let Some(o) = j.as_obj() {
+            let f = |k: &str| o.get(k).and_then(Json::as_f64);
+            if let Some(v) = f("lr") {
+                p.lr = v;
+            }
+            if let Some(v) = f("b1") {
+                p.b1 = v;
+            }
+            if let Some(v) = f("b2") {
+                p.b2 = v;
+            }
+            if let Some(v) = f("eps") {
+                p.eps = v;
+            }
+            if let Some(v) = f("momentum") {
+                p.momentum = v;
+            }
+            if let Some(v) = f("clip_norm") {
+                p.clip_norm = v;
+            }
+            if let Some(v) = f("decay") {
+                p.decay = v;
+            }
+        }
+        p
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
     pub name: String,
@@ -37,6 +95,7 @@ pub struct ArtifactSpec {
     pub batch: usize,
     pub seq_len: usize,
     pub optimizer: String,
+    pub opt_params: OptParams,
     pub ratio: f64,
     pub file: String,
     pub params: Vec<TensorSpec>,
@@ -46,6 +105,38 @@ pub struct ArtifactSpec {
 }
 
 impl ArtifactSpec {
+    /// Build a standalone feed-forward artifact spec (wire order
+    /// `[w0, b0, w1, b1, ...]`) — for the native backend, tests and
+    /// benches that run without a manifest file.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ff(name: &str, task: &str, kind: &str, loss: &str, m_in: usize,
+              hidden: &[usize], m_out: usize, batch: usize,
+              optimizer: &str, opt_params: OptParams) -> ArtifactSpec {
+        ArtifactSpec {
+            name: name.into(),
+            task: task.into(),
+            family: "ff".into(),
+            kind: kind.into(),
+            loss: loss.into(),
+            m_in,
+            m_out,
+            hidden: hidden.to_vec(),
+            batch,
+            seq_len: 0,
+            optimizer: optimizer.into(),
+            opt_params,
+            ratio: 0.0,
+            file: format!("{name}.hlo.txt"),
+            params: ff_param_specs(m_in, hidden, m_out),
+            opt_slots: if kind == "train" {
+                opt_slot_count(optimizer)
+            } else {
+                0
+            },
+            decode_d: 0,
+            decode_k: 0,
+        }
+    }
     /// Number of optimizer-state tensors: scalar step + slots * params.
     pub fn n_state(&self) -> usize {
         if self.kind == "train" {
@@ -191,6 +282,10 @@ impl Manifest {
                 batch: get(a, "batch")?.as_usize().unwrap_or(0),
                 seq_len: get(a, "seq_len")?.as_usize().unwrap_or(0),
                 optimizer: get(a, "optimizer")?.as_str().unwrap_or("").into(),
+                opt_params: a
+                    .get("opt_params")
+                    .map(OptParams::from_json)
+                    .unwrap_or_default(),
                 ratio: get(a, "ratio")?.as_f64().unwrap_or(0.0),
                 file: get(a, "file")?.as_str().unwrap_or("").into(),
                 opt_slots: get(a, "opt_slots")?.as_usize().unwrap_or(0),
@@ -242,6 +337,237 @@ impl Manifest {
     pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
         self.dir.join(&spec.file)
     }
+
+    /// The built-in manifest: a Rust mirror of python/compile/manifest.py
+    /// (same 7 tasks, same artifact grid, same names and wire shapes).
+    /// This is what the native backend runs from when no AOT artifact
+    /// directory has been built — it needs the specs, not the HLO files.
+    pub fn synthetic(dir: &Path) -> Manifest {
+        let tasks = synthetic_tasks();
+        let mut artifacts: Vec<ArtifactSpec> = Vec::new();
+        let add = |spec: ArtifactSpec,
+                   artifacts: &mut Vec<ArtifactSpec>| {
+            if !artifacts.iter().any(|a| a.name == spec.name) {
+                artifacts.push(spec);
+            }
+        };
+        for task in &tasks {
+            let mut ratios: Vec<f64> =
+                [task.ratios.clone(), task.test_points.clone()].concat();
+            ratios.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            ratios.dedup();
+            for &ratio in &ratios {
+                for kind in ["train", "predict"] {
+                    add(synthetic_artifact(task, kind, "softmax_ce",
+                                           ratio),
+                        &mut artifacts);
+                }
+            }
+            for &ratio in &task.test_points {
+                for kind in ["train", "predict"] {
+                    add(synthetic_artifact(task, kind, "cosine", ratio),
+                        &mut artifacts);
+                }
+            }
+        }
+        // headline fused predict+decode configs (manifest.py DECODE_FUSED)
+        for (name, ratio, k) in
+            [("ml", 0.2, 4usize), ("msd", 0.1, 4), ("amz", 0.2, 4)]
+        {
+            let task = tasks.iter().find(|t| t.name == name).unwrap();
+            let mut spec = synthetic_artifact(task, "predict_decode",
+                                              "softmax_ce", ratio);
+            spec.decode_d = task.d;
+            spec.decode_k = k;
+            spec.name = format!("{}_d{}_k{}", spec.name, task.d, k);
+            spec.file = format!("{}.hlo.txt", spec.name);
+            add(spec, &mut artifacts);
+        }
+
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Manifest {
+            dir: dir.to_path_buf(),
+            batch: 64,
+            seq_len: 10,
+            tasks,
+            artifacts,
+            by_name,
+        }
+    }
+}
+
+/// Per-parameter optimizer slot count (python manifest.opt_slot_count).
+pub fn opt_slot_count(optimizer: &str) -> usize {
+    match optimizer {
+        "adam" => 2,
+        _ => 1, // sgd | rmsprop | adagrad
+    }
+}
+
+/// FF wire-order parameter shapes `[w0, b0, w1, b1, ...]`.
+fn ff_param_specs(m_in: usize, hidden: &[usize], m_out: usize)
+    -> Vec<TensorSpec> {
+    let mut dims = Vec::with_capacity(hidden.len() + 2);
+    dims.push(m_in);
+    dims.extend_from_slice(hidden);
+    dims.push(m_out);
+    let mut out = Vec::with_capacity(2 * (dims.len() - 1));
+    for i in 0..dims.len() - 1 {
+        out.push(TensorSpec {
+            name: format!("w{i}"),
+            shape: vec![dims[i], dims[i + 1]],
+        });
+        out.push(TensorSpec {
+            name: format!("b{i}"),
+            shape: vec![dims[i + 1]],
+        });
+    }
+    out
+}
+
+/// Recurrent wire-order parameter shapes (manifest.py param_shapes).
+fn rnn_param_specs(family: &str, m_in: usize, h: usize, m_out: usize)
+    -> Vec<TensorSpec> {
+    let gates = if family == "gru" { 3 } else { 4 };
+    vec![
+        TensorSpec { name: "wx".into(), shape: vec![m_in, gates * h] },
+        TensorSpec { name: "wh".into(), shape: vec![h, gates * h] },
+        TensorSpec { name: "bg".into(), shape: vec![gates * h] },
+        TensorSpec { name: "wo".into(), shape: vec![h, m_out] },
+        TensorSpec { name: "bo".into(), shape: vec![m_out] },
+    ]
+}
+
+fn synthetic_artifact(task: &TaskSpec, kind: &str, loss: &str, ratio: f64)
+    -> ArtifactSpec {
+    let m = round_m(task.d, ratio);
+    let m_out = if task.family == "classifier" {
+        task.n_classes
+    } else {
+        m
+    };
+    let seq = if matches!(task.family.as_str(), "gru" | "lstm") {
+        10
+    } else {
+        0
+    };
+    let tag = if loss == "softmax_ce" { "ce" } else { "cos" };
+    let name = format!("{}_{}_{}_m{}_{}", task.name, task.family, tag, m,
+                       kind);
+    let params = if matches!(task.family.as_str(), "gru" | "lstm") {
+        rnn_param_specs(&task.family, m, task.hidden[0], m_out)
+    } else {
+        ff_param_specs(m, &task.hidden, m_out)
+    };
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        task: task.name.clone(),
+        family: task.family.clone(),
+        kind: kind.into(),
+        loss: loss.into(),
+        m_in: m,
+        m_out,
+        hidden: task.hidden.clone(),
+        batch: 64,
+        seq_len: seq,
+        optimizer: task.optimizer.clone(),
+        opt_params: synthetic_opt_params(&task.name),
+        ratio,
+        params,
+        opt_slots: if kind == "train" {
+            opt_slot_count(&task.optimizer)
+        } else {
+            0
+        },
+        decode_d: 0,
+        decode_k: 0,
+    }
+}
+
+/// Task -> optimizer hyper-parameters, matching manifest.py TASKS.
+fn synthetic_opt_params(task: &str) -> OptParams {
+    let mut p = OptParams::default();
+    match task {
+        "ptb" => {
+            p.lr = 0.25;
+            p.momentum = 0.99;
+            p.clip_norm = 1.0;
+        }
+        "cade" => {
+            p.lr = 0.0002;
+            p.decay = 0.9;
+        }
+        "yc" => {
+            p.lr = 0.01;
+        }
+        _ => {} // adam tasks: lr 0.001, b1 0.9, b2 0.999
+    }
+    p
+}
+
+/// One synthetic task row (mirrors a manifest.py TaskSpec literal).
+#[allow(clippy::too_many_arguments)]
+fn t(name: &str, generator: &str, d: usize, c_median: usize,
+     n_train: usize, n_test: usize, family: &str, hidden: &[usize],
+     optimizer: &str, metric: &str, ratios: &[f64], test_points: &[f64],
+     epochs: usize, n_classes: usize) -> TaskSpec {
+    TaskSpec {
+        name: name.into(),
+        generator: generator.into(),
+        d,
+        c_median,
+        n_train,
+        n_test,
+        family: family.into(),
+        hidden: hidden.to_vec(),
+        optimizer: optimizer.into(),
+        metric: metric.into(),
+        ratios: ratios.to_vec(),
+        test_points: test_points.to_vec(),
+        epochs,
+        n_classes,
+    }
+}
+
+/// The 7 experimental tasks of manifest.py TASKS (paper Sec. 4.2 analogs).
+fn synthetic_tasks() -> Vec<TaskSpec> {
+    vec![
+        t("ml", "profiles_dense", 768, 18, 8000, 1000, "ff", &[150, 150],
+          "adam", "map", &[0.1, 0.2, 0.3, 0.5, 0.75, 1.0], &[0.2, 0.3],
+          3, 0),
+        t("ptb", "markov_text", 1000, 1, 10000, 1500, "lstm", &[250],
+          "sgd", "rr", &[0.1, 0.2, 0.3, 0.4, 0.5, 0.75, 1.0], &[0.2, 0.4],
+          3, 0),
+        t("cade", "topic_docs", 4096, 17, 4100, 1366, "classifier",
+          &[400, 200, 100], "rmsprop", "acc",
+          &[0.01, 0.03, 0.1, 0.2, 0.3, 0.5, 1.0], &[0.01, 0.03], 6, 12),
+        t("msd", "profiles_sparse", 2048, 5, 10000, 1200, "ff",
+          &[300, 300], "adam", "map",
+          &[0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0], &[0.05, 0.1], 3, 0),
+        t("amz", "profiles_sparse", 1120, 2, 10000, 1200, "ff",
+          &[300, 300, 300], "adam", "map",
+          &[0.1, 0.2, 0.3, 0.5, 0.75, 1.0], &[0.1, 0.2], 3, 0),
+        t("bc", "profiles_sparse", 1536, 2, 2400, 250, "ff", &[250, 250],
+          "adam", "map", &[0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0],
+          &[0.05, 0.1], 8, 0),
+        t("yc", "sessions", 1024, 1, 10000, 1500, "gru", &[100],
+          "adagrad", "rr", &[0.03, 0.05, 0.1, 0.2, 0.3, 0.5, 1.0],
+          &[0.03, 0.05], 3, 0),
+    ]
+}
+
+/// Small standalone FF spec for tests and benches: softmax-CE over adam
+/// with default hyper-parameters, kind "train" (clone + set kind for a
+/// predict variant).
+pub fn test_ff_spec(m_in: usize, hidden: &[usize], m_out: usize,
+                    batch: usize) -> ArtifactSpec {
+    ArtifactSpec::ff("test_ff", "test", "train", "softmax_ce", m_in,
+                     hidden, m_out, batch, "adam", OptParams::default())
 }
 
 #[cfg(test)]
@@ -310,6 +636,66 @@ mod tests {
                 assert_eq!(round_m(d, r), m, "d={d} ratio={r}");
             }
         }
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_python_grid() {
+        let m = Manifest::synthetic(Path::new("/tmp/none"));
+        assert_eq!(m.tasks.len(), 7);
+        assert_eq!(m.batch, 64);
+        // the ml FF pair at ratio 0.2 (m = 152) with the known wire shapes
+        let a = m.artifact("ml_ff_ce_m152_train").expect("ml train");
+        assert_eq!(a.params.len(), 6); // w0,b0,w1,b1,w2,b2
+        assert_eq!(a.params[0].shape, vec![152, 150]);
+        assert_eq!(a.params[4].shape, vec![150, 152]);
+        assert_eq!(a.opt_slots, 2);
+        assert!((a.opt_params.lr - 1e-3).abs() < 1e-12);
+        assert!(m.artifact("ml_ff_ce_m152_predict").is_some());
+        // classifier head: input embedded, output fixed at n_classes
+        let c = m
+            .artifact("cade_classifier_ce_m408_predict")
+            .expect("cade predict");
+        assert_eq!(c.m_out, 12);
+        assert_eq!(c.opt_slots, 0);
+        // recurrent artifact exists with the gated shapes
+        let y = m.artifact("yc_gru_ce_m104_train").expect("yc train");
+        assert_eq!(y.seq_len, 10);
+        assert_eq!(y.params[0].shape, vec![104, 300]);
+        assert!((y.opt_params.lr - 0.01).abs() < 1e-12);
+        // fused decode spec carries the static decode dims
+        let f = m
+            .artifact("ml_ff_ce_m152_predict_decode_d768_k4")
+            .expect("fused");
+        assert_eq!((f.decode_d, f.decode_k), (768, 4));
+        // cosine artifacts exist at the test points only
+        assert!(m.find("ml", "train", "cosine", 152).is_ok());
+        assert!(m.find("ml", "train", "cosine", 768).is_err());
+        // every test point of every task resolves for softmax-CE
+        for t in &m.tasks {
+            for &tp in &t.test_points {
+                let mm = round_m(t.d, tp);
+                assert!(m.find(&t.name, "train", "softmax_ce", mm).is_ok(),
+                        "{}@{tp}", t.name);
+                assert!(m.find(&t.name, "predict", "softmax_ce", mm)
+                            .is_ok(),
+                        "{}@{tp}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn opt_params_parse_and_default() {
+        let j = Json::parse(r#"{"lr": 0.25, "momentum": 0.99,
+                                "clip_norm": 1.0}"#).unwrap();
+        let p = OptParams::from_json(&j);
+        assert!((p.lr - 0.25).abs() < 1e-12);
+        assert!((p.momentum - 0.99).abs() < 1e-12);
+        assert!((p.clip_norm - 1.0).abs() < 1e-12);
+        assert!((p.b1 - 0.9).abs() < 1e-12); // untouched default
+        // SAMPLE has no opt_params -> defaults
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.artifact("ml_ff_ce_m152_train").unwrap();
+        assert_eq!(a.opt_params, OptParams::default());
     }
 
     #[test]

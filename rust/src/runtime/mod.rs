@@ -1,9 +1,29 @@
-//! Runtime layer: the PJRT bridge between the Rust coordinator and the
-//! AOT-compiled XLA artifacts. HLO text -> `HloModuleProto::from_text_file`
-//! -> `client.compile` -> `execute` (see /opt/xla-example and DESIGN.md).
+//! Runtime layer: the pluggable compute-backend boundary between the Rust
+//! coordinator and model execution.
+//!
+//! * [`backend`]: the [`Backend`]/[`Execution`] traits, the sparse-first
+//!   [`BatchInput`]/[`SparseBatch`] minibatch representation, and the
+//!   [`Runtime`] façade (manifest + backend + execution cache).
+//! * [`native`]: pure-Rust interpreter for the FF artifact specs —
+//!   sparse-gather input layer, analytic backward pass, the four paper
+//!   optimizers. The default backend; zero native dependencies.
+//! * [`xla`] (feature `xla`): the PJRT bridge driving AOT-compiled HLO
+//!   artifacts (`HloModuleProto::from_text_file` -> `client.compile` ->
+//!   `execute`), needed for the recurrent families and the Pallas-fused
+//!   kernels.
+//! * [`manifest`]: the typed artifact/task contract, loaded from
+//!   `artifacts/manifest.json` or synthesized in-process (the Rust mirror
+//!   of python/compile/manifest.py) when no artifacts are built.
 
-pub mod executor;
+pub mod backend;
 pub mod manifest;
+pub mod native;
+pub mod tensor;
+#[cfg(feature = "xla")]
+pub mod xla;
 
-pub use executor::{Executable, HostTensor, HostTensorI32, Runtime};
-pub use manifest::{round_m, ArtifactSpec, Manifest, TaskSpec, TensorSpec};
+pub use backend::{Backend, BatchInput, Execution, Runtime, SparseBatch};
+pub use manifest::{round_m, test_ff_spec, ArtifactSpec, Manifest,
+                   OptParams, TaskSpec, TensorSpec};
+pub use native::{NativeBackend, NativeExecution};
+pub use tensor::{HostTensor, HostTensorI32};

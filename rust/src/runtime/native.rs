@@ -1,0 +1,776 @@
+//! Pure-Rust backend: interprets the manifest's feed-forward artifact
+//! specs directly — sparse-gather first layer, dense hidden layers,
+//! softmax-CE / cosine losses with an analytic backward pass, and the four
+//! optimizers of python/compile/optim.py. The default build therefore
+//! trains, evaluates and serves with zero native dependencies; the PJRT
+//! path (and the recurrent families) stays behind the `xla` feature.
+//!
+//! Math mirrors python/compile/model.py exactly:
+//! * forward: `h @ w + b`, ReLU between layers, none on the final
+//!   projection; predict applies softmax for the CE family and returns
+//!   raw outputs for the cosine family;
+//! * softmax-CE loss over the target multi-hot normalised to a
+//!   distribution, mean over the static batch;
+//! * cosine loss `mean(1 - <o,y> / (|o||y| + 1e-8))`;
+//! * optimizer state layout `[step] + slot0_per_param (+ slot1...)`.
+//!
+//! The sparse input path turns the first-layer matmul into a
+//! gather-accumulate over each row's active positions — O(batch*c*k*h)
+//! instead of O(batch*m_in*h) — and the first-layer weight gradient into
+//! the matching scatter. Accumulation order equals the dense path's
+//! (positions ascending), so sparse and dense results agree bit-for-bit.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, BatchInput, Execution, SparseBatch};
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::{HostTensor, HostTensorI32};
+use crate::model::ModelState;
+
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_family(&self, family: &str) -> bool {
+        matches!(family, "ff" | "classifier")
+    }
+
+    fn load(&self, _manifest: &Manifest, spec: &ArtifactSpec)
+        -> Result<Arc<dyn Execution>> {
+        Ok(Arc::new(NativeExecution::new(spec.clone())?))
+    }
+}
+
+/// One interpretable FF artifact: weights arrive per call (the wire
+/// contract), so the execution itself is stateless and trivially shared
+/// across serving replicas.
+pub struct NativeExecution {
+    spec: ArtifactSpec,
+    /// layer widths: `[m_in, hidden.., m_out]`
+    dims: Vec<usize>,
+}
+
+impl NativeExecution {
+    pub fn new(spec: ArtifactSpec) -> Result<NativeExecution> {
+        if !matches!(spec.family.as_str(), "ff" | "classifier") {
+            bail!("native backend runs ff/classifier models only; \
+                   artifact '{}' is family '{}' (build with --features \
+                   xla for the recurrent families)",
+                  spec.name, spec.family);
+        }
+        if !matches!(spec.loss.as_str(), "softmax_ce" | "cosine") {
+            bail!("native backend: unknown loss '{}' in artifact '{}'",
+                  spec.loss, spec.name);
+        }
+        if spec.seq_len > 0 {
+            bail!("native backend: artifact '{}' has seq_len {} but ff \
+                   inputs are flat", spec.name, spec.seq_len);
+        }
+        let mut dims = Vec::with_capacity(spec.hidden.len() + 2);
+        dims.push(spec.m_in);
+        dims.extend_from_slice(&spec.hidden);
+        dims.push(spec.m_out);
+        let expect = 2 * (dims.len() - 1);
+        if spec.params.len() != expect {
+            bail!("artifact '{}' carries {} param tensors, expected {} \
+                   ([w0, b0, w1, b1, ...])",
+                  spec.name, spec.params.len(), expect);
+        }
+        for (i, p) in spec.params.iter().enumerate() {
+            let want: Vec<usize> = if i % 2 == 0 {
+                vec![dims[i / 2], dims[i / 2 + 1]]
+            } else {
+                vec![dims[i / 2 + 1]]
+            };
+            if p.shape != want {
+                bail!("artifact '{}': param {} ('{}') has shape {:?}, \
+                       expected {:?}", spec.name, i, p.name, p.shape, want);
+            }
+        }
+        Ok(NativeExecution { spec, dims })
+    }
+
+    fn check_params(&self, params: &[HostTensor]) -> Result<()> {
+        if params.len() != self.spec.params.len() {
+            bail!("artifact '{}': got {} param tensors, expected {}",
+                  self.spec.name, params.len(), self.spec.params.len());
+        }
+        for (t, s) in params.iter().zip(&self.spec.params) {
+            if t.data.len() != s.elements() {
+                bail!("artifact '{}': param '{}' has {} elements, \
+                       expected {}", self.spec.name, s.name,
+                      t.data.len(), s.elements());
+            }
+        }
+        Ok(())
+    }
+
+    /// `out[r] = relu?(h[r] @ w + b)` for `bsz` rows; `w` is `[n, p]`
+    /// row-major. Zero activations are skipped (post-ReLU activations and
+    /// multi-hot inputs are mostly zero).
+    fn dense_layer(h: &[f32], bsz: usize, n: usize, w: &[f32], b: &[f32],
+                   p: usize, relu: bool) -> Vec<f32> {
+        debug_assert_eq!(h.len(), bsz * n);
+        debug_assert_eq!(w.len(), n * p);
+        let mut out = vec![0.0f32; bsz * p];
+        for r in 0..bsz {
+            let row = &h[r * n..(r + 1) * n];
+            let dst = &mut out[r * p..(r + 1) * p];
+            dst.copy_from_slice(b);
+            for (kk, &a) in row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * p..(kk + 1) * p];
+                for (o, &wv) in dst.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+            if relu {
+                for o in dst.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// First layer from sparse rows: per-row gather-accumulate over the
+    /// active positions, O(nnz * p). Rows past `sb.rows()` are the
+    /// zero-input (bias-only) padding rows of the static batch.
+    fn sparse_first_layer(sb: &SparseBatch, bsz: usize, w: &[f32],
+                          b: &[f32], p: usize, relu: bool) -> Vec<f32> {
+        let mut out = vec![0.0f32; bsz * p];
+        for r in 0..bsz {
+            let dst = &mut out[r * p..(r + 1) * p];
+            dst.copy_from_slice(b);
+            if r < sb.rows() {
+                let (idx, wgt) = sb.row(r);
+                for (&i, &v) in idx.iter().zip(wgt) {
+                    let i = i as usize;
+                    let wrow = &w[i * p..(i + 1) * p];
+                    for (o, &wv) in dst.iter_mut().zip(wrow) {
+                        *o += v * wv;
+                    }
+                }
+            }
+            if relu {
+                for o in dst.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward pass over the first `rows` rows of the batch (sparse rows
+    /// past `sb.rows()` are the zero-input padding rows). Returns the
+    /// post-ReLU hidden activations (inputs to layers 1..) and the final
+    /// pre-activation logits, both `rows` tall.
+    fn forward_rows(&self, params: &[HostTensor], x: &BatchInput,
+                    rows: usize) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        self.check_params(params)?;
+        let nl = self.dims.len() - 1;
+        let relu0 = nl > 1;
+        let mut h = match x {
+            BatchInput::Sparse(sb) => {
+                if sb.m_in != self.dims[0] {
+                    bail!("sparse batch m_in {} != artifact m_in {}",
+                          sb.m_in, self.dims[0]);
+                }
+                if sb.rows() > self.spec.batch {
+                    bail!("sparse batch has {} rows, artifact batch is {}",
+                          sb.rows(), self.spec.batch);
+                }
+                Self::sparse_first_layer(sb, rows, &params[0].data,
+                                         &params[1].data, self.dims[1],
+                                         relu0)
+            }
+            BatchInput::Dense(t) => {
+                if t.data.len() != self.spec.batch * self.dims[0] {
+                    bail!("dense batch has {} elements, expected {}x{}",
+                          t.data.len(), self.spec.batch, self.dims[0]);
+                }
+                Self::dense_layer(&t.data[..rows * self.dims[0]], rows,
+                                  self.dims[0], &params[0].data,
+                                  &params[1].data, self.dims[1], relu0)
+            }
+        };
+        let mut hidden: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
+        for i in 1..nl {
+            let relu = i < nl - 1;
+            let next = Self::dense_layer(&h, rows, self.dims[i],
+                                         &params[2 * i].data,
+                                         &params[2 * i + 1].data,
+                                         self.dims[i + 1], relu);
+            hidden.push(h);
+            h = next;
+        }
+        Ok((hidden, h))
+    }
+
+    fn predict_impl(&self, params: &[HostTensor], x: &BatchInput)
+        -> Result<HostTensor> {
+        let bsz = self.spec.batch;
+        let m = self.spec.m_out;
+        // Partial sparse batches (the serving case) only pay for the live
+        // rows plus ONE shared padding row: every padded row sees the
+        // same zero input, so its output is computed once and replicated
+        // — bit-identical to computing each, O(rows/batch) of the cost.
+        let compute_rows = match x {
+            BatchInput::Sparse(sb) if sb.rows() < bsz => sb.rows() + 1,
+            _ => bsz,
+        };
+        let (_, mut out) = self.forward_rows(params, x, compute_rows)?;
+        if self.spec.loss == "softmax_ce" {
+            for r in 0..compute_rows {
+                softmax_in_place(&mut out[r * m..(r + 1) * m]);
+            }
+        }
+        if compute_rows < bsz {
+            let pad =
+                out[(compute_rows - 1) * m..compute_rows * m].to_vec();
+            out.reserve((bsz - compute_rows) * m);
+            for _ in compute_rows..bsz {
+                out.extend_from_slice(&pad);
+            }
+        }
+        Ok(HostTensor::from_vec(&[bsz, m], out))
+    }
+
+    fn train_step_impl(&self, state: &mut ModelState, x: &BatchInput,
+                       y: &HostTensor) -> Result<f32> {
+        let bsz = self.spec.batch;
+        let m_out = self.spec.m_out;
+        if y.data.len() != bsz * m_out {
+            bail!("target tensor has {} elements, expected {}x{}",
+                  y.data.len(), bsz, m_out);
+        }
+        let (hidden, logits) = self.forward_rows(&state.params, x, bsz)?;
+        let (loss, mut g) = match self.spec.loss.as_str() {
+            "softmax_ce" => ce_loss_grad(&logits, &y.data, bsz, m_out),
+            _ => cosine_loss_grad(&logits, &y.data, bsz, m_out),
+        };
+
+        // backprop through the layers, newest first
+        let nl = self.dims.len() - 1;
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); 2 * nl];
+        for layer in (0..nl).rev() {
+            let n = self.dims[layer];
+            let p = self.dims[layer + 1];
+            let mut db = vec![0.0f32; p];
+            for r in 0..bsz {
+                let grow = &g[r * p..(r + 1) * p];
+                for (d, &gv) in db.iter_mut().zip(grow) {
+                    *d += gv;
+                }
+            }
+            let mut dw = vec![0.0f32; n * p];
+            if layer == 0 {
+                match x {
+                    BatchInput::Sparse(sb) => {
+                        // scatter: dW0[i] += v * g_row, O(nnz * p)
+                        for r in 0..sb.rows() {
+                            let (idx, wgt) = sb.row(r);
+                            let grow = &g[r * p..(r + 1) * p];
+                            for (&i, &v) in idx.iter().zip(wgt) {
+                                let i = i as usize;
+                                let dst = &mut dw[i * p..(i + 1) * p];
+                                for (o, &gv) in dst.iter_mut().zip(grow) {
+                                    *o += v * gv;
+                                }
+                            }
+                        }
+                    }
+                    BatchInput::Dense(t) => {
+                        accumulate_outer(&t.data, &g, bsz, n, p, &mut dw);
+                    }
+                }
+            } else {
+                accumulate_outer(&hidden[layer - 1], &g, bsz, n, p,
+                                 &mut dw);
+            }
+            if layer > 0 {
+                // g_prev = (g @ W^T) * relu'(h): only where h > 0
+                let w = &state.params[2 * layer].data;
+                let h = &hidden[layer - 1];
+                let mut gp = vec![0.0f32; bsz * n];
+                for r in 0..bsz {
+                    let grow = &g[r * p..(r + 1) * p];
+                    let hrow = &h[r * n..(r + 1) * n];
+                    let dst = &mut gp[r * n..(r + 1) * n];
+                    for (kk, d) in dst.iter_mut().enumerate() {
+                        if hrow[kk] > 0.0 {
+                            let wrow = &w[kk * p..(kk + 1) * p];
+                            let mut acc = 0.0f32;
+                            for (&gv, &wv) in grow.iter().zip(wrow) {
+                                acc += gv * wv;
+                            }
+                            *d = acc;
+                        }
+                    }
+                }
+                g = gp;
+            }
+            grads[2 * layer] = dw;
+            grads[2 * layer + 1] = db;
+        }
+
+        self.apply_update(state, &grads)?;
+        Ok(loss)
+    }
+
+    /// Optimizer update, mirroring python/compile/optim.py: state layout
+    /// `[step] + slot0_per_param (+ slot1_per_param)`, step stored as t+1.
+    fn apply_update(&self, state: &mut ModelState, grads: &[Vec<f32>])
+        -> Result<()> {
+        let spec = &self.spec;
+        let op = &spec.opt_params;
+        let np = state.params.len();
+        if state.opt_state.len() != 1 + spec.opt_slots * np {
+            bail!("artifact '{}': optimizer state has {} tensors, \
+                   expected {}", spec.name, state.opt_state.len(),
+                  1 + spec.opt_slots * np);
+        }
+        let ModelState { params, opt_state } = state;
+        let (step, slots) = opt_state.split_at_mut(1);
+        let t = step[0].data[0] + 1.0;
+        let lr = op.lr as f32;
+        let eps = op.eps as f32;
+        match spec.optimizer.as_str() {
+            "adam" => {
+                let b1 = op.b1 as f32;
+                let b2 = op.b2 as f32;
+                let alpha =
+                    lr * (1.0 - b2.powf(t)).sqrt() / (1.0 - b1.powf(t));
+                let (mus, nus) = slots.split_at_mut(np);
+                for i in 0..np {
+                    let g = &grads[i];
+                    let mu = &mut mus[i].data;
+                    let nu = &mut nus[i].data;
+                    let pd = &mut params[i].data;
+                    for j in 0..g.len() {
+                        mu[j] = b1 * mu[j] + (1.0 - b1) * g[j];
+                        nu[j] = b2 * nu[j] + (1.0 - b2) * g[j] * g[j];
+                        pd[j] -= alpha * mu[j] / (nu[j].sqrt() + eps);
+                    }
+                }
+            }
+            "sgd" => {
+                let momentum = op.momentum as f32;
+                let clip = op.clip_norm as f32;
+                let scale = if clip > 0.0 {
+                    let mut sq = 0.0f32;
+                    for g in grads {
+                        for &v in g {
+                            sq += v * v;
+                        }
+                    }
+                    let norm = (sq + 1e-12).sqrt();
+                    (clip / norm).min(1.0)
+                } else {
+                    1.0
+                };
+                for i in 0..np {
+                    let g = &grads[i];
+                    let vel = &mut slots[i].data;
+                    let pd = &mut params[i].data;
+                    for j in 0..g.len() {
+                        vel[j] = momentum * vel[j] + g[j] * scale;
+                        pd[j] -= lr * vel[j];
+                    }
+                }
+            }
+            "rmsprop" => {
+                let decay = op.decay as f32;
+                for i in 0..np {
+                    let g = &grads[i];
+                    let avg = &mut slots[i].data;
+                    let pd = &mut params[i].data;
+                    for j in 0..g.len() {
+                        avg[j] = decay * avg[j]
+                            + (1.0 - decay) * g[j] * g[j];
+                        pd[j] -= lr * g[j] / (avg[j].sqrt() + eps);
+                    }
+                }
+            }
+            "adagrad" => {
+                for i in 0..np {
+                    let g = &grads[i];
+                    let acc = &mut slots[i].data;
+                    let pd = &mut params[i].data;
+                    for j in 0..g.len() {
+                        acc[j] += g[j] * g[j];
+                        pd[j] -= lr * g[j] / (acc[j].sqrt() + eps);
+                    }
+                }
+            }
+            other => bail!("native backend: unknown optimizer '{other}' \
+                            in artifact '{}'", spec.name),
+        }
+        step[0].data[0] = t;
+        Ok(())
+    }
+}
+
+impl Execution for NativeExecution {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn supports_sparse_input(&self) -> bool {
+        true
+    }
+
+    fn predict(&self, params: &[HostTensor], x: &BatchInput)
+        -> Result<HostTensor> {
+        self.predict_impl(params, x)
+    }
+
+    fn train_step(&self, state: &mut ModelState, x: &BatchInput,
+                  y: &HostTensor) -> Result<f32> {
+        self.train_step_impl(state, x, y)
+    }
+
+    fn run(&self, inputs: &[&HostTensor], i32_inputs: &[&HostTensorI32])
+        -> Result<Vec<HostTensor>> {
+        let p = self.spec.params.len();
+        match self.spec.kind.as_str() {
+            "train" => {
+                let s = 1 + self.spec.opt_slots * p;
+                if inputs.len() != p + s + 2 {
+                    bail!("train artifact '{}' takes {} inputs, got {}",
+                          self.spec.name, p + s + 2, inputs.len());
+                }
+                let mut state = ModelState {
+                    params: inputs[..p]
+                        .iter()
+                        .map(|t| (*t).clone())
+                        .collect(),
+                    opt_state: inputs[p..p + s]
+                        .iter()
+                        .map(|t| (*t).clone())
+                        .collect(),
+                };
+                let x = BatchInput::Dense(inputs[p + s].clone());
+                let loss =
+                    self.train_step_impl(&mut state, &x, inputs[p + s + 1])?;
+                let mut out = state.params;
+                out.append(&mut state.opt_state);
+                out.push(HostTensor::scalar(loss));
+                Ok(out)
+            }
+            "predict" => {
+                if inputs.len() != p + 1 {
+                    bail!("predict artifact '{}' takes {} inputs, got {}",
+                          self.spec.name, p + 1, inputs.len());
+                }
+                let params: Vec<HostTensor> =
+                    inputs[..p].iter().map(|t| (*t).clone()).collect();
+                let x = BatchInput::Dense(inputs[p].clone());
+                Ok(vec![self.predict_impl(&params, &x)?])
+            }
+            "predict_decode" => {
+                if inputs.len() != p + 1 || i32_inputs.len() != 1 {
+                    bail!("predict_decode artifact '{}' takes {}+1 \
+                           inputs, got {}+{}", self.spec.name, p + 1,
+                          inputs.len(), i32_inputs.len());
+                }
+                let params: Vec<HostTensor> =
+                    inputs[..p].iter().map(|t| (*t).clone()).collect();
+                let x = BatchInput::Dense(inputs[p].clone());
+                let probs = self.predict_impl(&params, &x)?;
+                let h = i32_inputs[0];
+                let d = self.spec.decode_d;
+                let k = self.spec.decode_k;
+                if h.data.len() != d * k {
+                    bail!("hash tensor has {} entries, expected {}x{}",
+                          h.data.len(), d, k);
+                }
+                let m = self.spec.m_out;
+                let bsz = self.spec.batch;
+                // Eq. 3 decode: scores[r, i] = sum_j log(v[H_j(i)] + eps)
+                let mut scores = vec![0.0f32; bsz * d];
+                let mut logs = vec![0.0f32; m];
+                for r in 0..bsz {
+                    let prow = &probs.data[r * m..(r + 1) * m];
+                    for (l, &v) in logs.iter_mut().zip(prow) {
+                        *l = (v + crate::bloom::LOG_EPS).ln();
+                    }
+                    let srow = &mut scores[r * d..(r + 1) * d];
+                    for (i, s) in srow.iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        for j in 0..k {
+                            acc += logs[h.data[i * k + j] as usize];
+                        }
+                        *s = acc;
+                    }
+                }
+                Ok(vec![HostTensor::from_vec(&[bsz, d], scores)])
+            }
+            other => bail!("unknown artifact kind '{other}'"),
+        }
+    }
+}
+
+/// Numerically stable in-place softmax.
+fn softmax_in_place(z: &mut [f32]) {
+    let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in z.iter_mut() {
+        *v = (*v - zmax).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in z.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Softmax-CE loss over targets normalised to a distribution, and its
+/// gradient wrt the logits:
+///   L = -mean_r sum_j (y/max(sum y, 1))_j * log_softmax(z)_j
+///   dL/dz = (T * softmax(z) - target) / batch, T = sum(target_row)
+/// (zero-padded rows have T = 0 and contribute neither loss nor grad).
+fn ce_loss_grad(logits: &[f32], y: &[f32], bsz: usize, m: usize)
+    -> (f32, Vec<f32>) {
+    let mut g = vec![0.0f32; bsz * m];
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / bsz as f32;
+    for r in 0..bsz {
+        let z = &logits[r * m..(r + 1) * m];
+        let yr = &y[r * m..(r + 1) * m];
+        let ysum: f32 = yr.iter().sum();
+        let denom = ysum.max(1.0);
+        let tsum = ysum / denom;
+        let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut esum = 0.0f32;
+        for &v in z {
+            esum += (v - zmax).exp();
+        }
+        let lse = zmax + esum.ln();
+        let grow = &mut g[r * m..(r + 1) * m];
+        for j in 0..m {
+            let pj = (z[j] - lse).exp();
+            let tj = yr[j] / denom;
+            grow[j] = (tsum * pj - tj) * inv_b;
+            if tj > 0.0 {
+                loss -= tj as f64 * (z[j] - lse) as f64;
+            }
+        }
+    }
+    ((loss / bsz as f64) as f32, g)
+}
+
+/// Cosine-proximity loss `mean(1 - <o,y>/(|o||y| + 1e-8))` and its
+/// gradient wrt the outputs.
+fn cosine_loss_grad(out: &[f32], y: &[f32], bsz: usize, m: usize)
+    -> (f32, Vec<f32>) {
+    const EPS: f32 = 1e-8;
+    let mut g = vec![0.0f32; bsz * m];
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / bsz as f32;
+    for r in 0..bsz {
+        let o = &out[r * m..(r + 1) * m];
+        let yr = &y[r * m..(r + 1) * m];
+        let mut n = 0.0f32;
+        let mut aa = 0.0f32;
+        let mut bb = 0.0f32;
+        for (&ov, &yv) in o.iter().zip(yr) {
+            n += ov * yv;
+            aa += ov * ov;
+            bb += yv * yv;
+        }
+        let a = aa.sqrt();
+        let b = bb.sqrt();
+        let den = a * b + EPS;
+        loss += (1.0 - n / den) as f64;
+        let a_safe = a.max(1e-12);
+        let grow = &mut g[r * m..(r + 1) * m];
+        for j in 0..m {
+            grow[j] =
+                -(yr[j] / den - n * b * o[j] / (a_safe * den * den)) * inv_b;
+        }
+    }
+    ((loss / bsz as f64) as f32, g)
+}
+
+/// `dw += h^T @ g` exploiting sparsity in `h`: for every nonzero h[r, kk],
+/// add `h[r, kk] * g[r, :]` into row kk of `dw`.
+fn accumulate_outer(h: &[f32], g: &[f32], bsz: usize, n: usize, p: usize,
+                    dw: &mut [f32]) {
+    debug_assert_eq!(h.len(), bsz * n);
+    debug_assert_eq!(g.len(), bsz * p);
+    debug_assert_eq!(dw.len(), n * p);
+    for r in 0..bsz {
+        let hrow = &h[r * n..(r + 1) * n];
+        let grow = &g[r * p..(r + 1) * p];
+        for (kk, &hv) in hrow.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let dst = &mut dw[kk * p..(kk + 1) * p];
+            for (o, &gv) in dst.iter_mut().zip(grow) {
+                *o += hv * gv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::test_ff_spec;
+    use crate::util::rng::Rng;
+
+    fn exec(m_in: usize, hidden: &[usize], m_out: usize, batch: usize)
+        -> NativeExecution {
+        NativeExecution::new(test_ff_spec(m_in, hidden, m_out, batch))
+            .unwrap()
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut z = vec![1.0f32, 2.0, 3.0];
+        softmax_in_place(&mut z);
+        let s: f32 = z.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(z[2] > z[1] && z[1] > z[0]);
+    }
+
+    #[test]
+    fn rejects_recurrent_and_malformed_specs() {
+        let mut spec = test_ff_spec(8, &[4], 8, 2);
+        spec.family = "gru".into();
+        assert!(NativeExecution::new(spec).is_err());
+        let mut spec = test_ff_spec(8, &[4], 8, 2);
+        spec.params.pop();
+        assert!(NativeExecution::new(spec).is_err());
+        let mut spec = test_ff_spec(8, &[4], 8, 2);
+        spec.seq_len = 10;
+        assert!(NativeExecution::new(spec).is_err());
+    }
+
+    #[test]
+    fn predict_rows_are_distributions() {
+        let ex = exec(10, &[6], 8, 3);
+        let mut rng = Rng::new(3);
+        let mut spec = ex.spec.clone();
+        spec.kind = "predict".into();
+        let state = ModelState::init(&spec, &mut rng);
+        let mut x = HostTensor::zeros(&[3, 10]);
+        for v in x.data.iter_mut() {
+            if rng.bool(0.3) {
+                *v = 1.0;
+            }
+        }
+        let out =
+            ex.predict(&state.params, &BatchInput::Dense(x)).unwrap();
+        assert_eq!(out.shape, vec![3, 8]);
+        for r in 0..3 {
+            let s: f32 = out.data[r * 8..(r + 1) * 8].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn train_wire_call_matches_typed_call() {
+        let ex = exec(6, &[5], 6, 2);
+        let mut rng = Rng::new(11);
+        let mut state = ModelState::init(&ex.spec, &mut rng);
+        let mut x = HostTensor::zeros(&[2, 6]);
+        let mut y = HostTensor::zeros(&[2, 6]);
+        for v in x.data.iter_mut() {
+            if rng.bool(0.4) {
+                *v = 1.0;
+            }
+        }
+        for v in y.data.iter_mut() {
+            if rng.bool(0.4) {
+                *v = 1.0;
+            }
+        }
+
+        // wire call
+        let mut inputs: Vec<&HostTensor> = Vec::new();
+        inputs.extend(state.params.iter());
+        inputs.extend(state.opt_state.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        let mut out = ex.run(&inputs, &[]).unwrap();
+        let wire_loss = out.pop().unwrap().data[0];
+        let wire_opt = out.split_off(state.params.len());
+        let wire_params = out;
+
+        // typed call on a fresh copy of the same state
+        let typed_loss = ex
+            .train_step(&mut state, &BatchInput::Dense(x.clone()), &y)
+            .unwrap();
+        assert_eq!(wire_loss, typed_loss);
+        assert_eq!(wire_params, state.params);
+        assert_eq!(wire_opt, state.opt_state);
+        // the step counter advanced
+        assert_eq!(state.opt_state[0].data[0], 1.0);
+    }
+
+    #[test]
+    fn adam_step_matches_reference_values() {
+        // drive apply_update directly and compare against the python
+        // optim.py first-step formulas:
+        //   lr=0.1, g=[0.5, -2.0], step 1:
+        //   mu = 0.1*g, nu = 0.001*g^2, alpha = 0.1*sqrt(0.001)/0.1
+        //   delta = alpha * mu / (sqrt(nu) + 1e-8)
+        let mut spec = test_ff_spec(2, &[], 2, 1); // one layer [2,2] + bias
+        spec.opt_params.lr = 0.1;
+        let ex = NativeExecution::new(spec).unwrap();
+        let mut rng = Rng::new(1);
+        let mut state = ModelState::init(&ex.spec, &mut rng);
+        let p0 = state.params[0].data.clone();
+        let grads = vec![
+            vec![0.5f32, -2.0, 0.0, 0.0],
+            vec![0.0f32, 0.0],
+        ];
+        ex.apply_update(&mut state, &grads).unwrap();
+        let alpha = 0.1f32 * (1.0f32 - 0.999).sqrt() / (1.0 - 0.9);
+        for (j, &g) in [0.5f32, -2.0].iter().enumerate() {
+            let mu = 0.1 * g;
+            let nu = 0.001 * g * g;
+            let want = p0[j] - alpha * mu / (nu.sqrt() + 1e-8);
+            let got = state.params[0].data[j];
+            assert!((want - got).abs() < 1e-6,
+                    "j={j}: want {want}, got {got}");
+        }
+        // zero-grad entries untouched
+        assert_eq!(state.params[0].data[2], p0[2]);
+        assert_eq!(state.opt_state[0].data[0], 1.0);
+    }
+
+    #[test]
+    fn sgd_clips_by_global_norm() {
+        let mut spec = test_ff_spec(2, &[], 2, 1);
+        spec.optimizer = "sgd".into();
+        spec.opt_slots = 1;
+        spec.opt_params.lr = 1.0;
+        spec.opt_params.momentum = 0.0;
+        spec.opt_params.clip_norm = 1.0;
+        let ex = NativeExecution::new(spec).unwrap();
+        let mut rng = Rng::new(2);
+        let mut state = ModelState::init(&ex.spec, &mut rng);
+        let p0 = state.params[0].data.clone();
+        // global norm = 5 (3-4-0-0 plus zero bias), scale = 1/5
+        let grads = vec![vec![3.0f32, 4.0, 0.0, 0.0], vec![0.0f32, 0.0]];
+        ex.apply_update(&mut state, &grads).unwrap();
+        assert!((p0[0] - state.params[0].data[0] - 0.6).abs() < 1e-5);
+        assert!((p0[1] - state.params[0].data[1] - 0.8).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,54 @@
+//! Host-side tensors: the plain row-major buffers that cross the backend
+//! boundary. Backend-specific conversions (e.g. PJRT literals) live with
+//! the backend that needs them.
+
+/// Host-side tensor (f32, row-major) used at the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+}
+
+/// An i32 host tensor (hash matrices for predict_decode artifacts).
+#[derive(Clone, Debug)]
+pub struct HostTensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.data.len(), 6);
+        let s = HostTensor::scalar(4.0);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.data, vec![4.0]);
+    }
+
+    #[test]
+    fn from_vec_checks_length() {
+        let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data[3], 4.0);
+    }
+}

@@ -3,13 +3,15 @@
 //!
 //! Thread-based (no tokio in the offline vendor set):
 //!   clients -> request queue -> [DynamicBatcher] -> worker replicas
-//!             (encode -> predict artifact -> Bloom decode -> top-N)
+//!             (sparse encode -> predict backend -> Bloom decode -> top-N)
 //!
 //! The batcher collects up to `batch` requests or `max_wait`, whichever
-//! first — classic dynamic batching. Workers share the compiled
-//! executable (PJRT executables are thread-safe); a router fans the queue
-//! out to replicas. Latency percentiles and throughput are recorded per
-//! request.
+//! first — classic dynamic batching. Workers share one loaded
+//! [`crate::runtime::Execution`] (backends are thread-safe); a router
+//! fans the queue out to replicas. On a sparse-capable backend requests
+//! are encoded straight to active positions — the dense `[batch, m]`
+//! multi-hot never materializes on the hot path. Latency percentiles and
+//! throughput are recorded per request.
 
 pub mod batcher;
 pub mod metrics;

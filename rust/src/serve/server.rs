@@ -13,10 +13,11 @@ use anyhow::Result;
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::ServeMetrics;
 use crate::bloom::HashMatrix;
+use crate::coordinator::batcher::encode_item_rows;
 use crate::embedding::Embedding;
 use crate::linalg::knn::top_k;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, HostTensor, Runtime};
+use crate::runtime::{ArtifactSpec, BatchInput, Execution, Runtime};
 
 #[derive(Clone, Debug)]
 pub struct RecRequest {
@@ -87,7 +88,6 @@ impl Server {
             workers.push(std::thread::Builder::new()
                 .name(format!("bloomrec-serve-{w}"))
                 .spawn(move || {
-                    let mut x = HostTensor::zeros(&spec.x_shape());
                     loop {
                         // batch under the shared receiver lock
                         let batch = {
@@ -96,8 +96,8 @@ impl Server {
                         };
                         let Some(jobs) = batch else { break };
                         if let Err(e) = Self::serve_batch(
-                            &exe, &spec, &state, emb.as_ref(), &jobs,
-                            &mut x, &metrics)
+                            exe.as_ref(), &spec, &state, emb.as_ref(),
+                            &jobs, &metrics)
                         {
                             crate::error!("serve batch failed: {e}");
                         }
@@ -109,21 +109,11 @@ impl Server {
         Ok(Server { tx: Some(tx), workers, metrics, in_flight })
     }
 
-    fn serve_batch(exe: &crate::runtime::Executable, spec: &ArtifactSpec,
+    fn serve_batch(exe: &dyn Execution, spec: &ArtifactSpec,
                    state: &ModelState, emb: &dyn Embedding, jobs: &[Job],
-                   x: &mut HostTensor, metrics: &ServeMetrics) -> Result<()> {
-        let m_in = spec.m_in;
-        x.data.fill(0.0);
-        for (row, job) in jobs.iter().enumerate() {
-            emb.encode_input(&job.request.user_items,
-                             &mut x.data[row * m_in..(row + 1) * m_in]);
-        }
-        let mut inputs: Vec<&HostTensor> =
-            Vec::with_capacity(state.params.len() + 1);
-        inputs.extend(state.params.iter());
-        inputs.push(x);
-        let outputs = exe.run(&inputs, &[])?;
-        let probs = &outputs[0];
+                   metrics: &ServeMetrics) -> Result<()> {
+        let x = Self::encode_jobs(exe, spec, emb, jobs);
+        let probs = exe.predict(&state.params, &x)?;
         let m_out = spec.m_out;
 
         let mut responses = Vec::with_capacity(jobs.len());
@@ -152,6 +142,18 @@ impl Server {
             let _ = job.respond.send(resp);
         }
         Ok(())
+    }
+
+    /// Encode a job batch for the backend: sparse active-position rows on
+    /// the hot path (never materializing the `[batch, m_in]` multi-hot)
+    /// whenever both the executable and the embedding support it.
+    fn encode_jobs(exe: &dyn Execution, spec: &ArtifactSpec,
+                   emb: &dyn Embedding, jobs: &[Job]) -> BatchInput {
+        let rows: Vec<&[u32]> = jobs
+            .iter()
+            .map(|job| job.request.user_items.as_slice())
+            .collect();
+        encode_item_rows(spec, emb, &rows, exe.supports_sparse_input())
     }
 
     /// Submit a request; returns a receiver for the response.

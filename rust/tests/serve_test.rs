@@ -1,5 +1,7 @@
 //! Serving-stack integration tests: correctness under concurrency, the
-//! batching policy, and graceful shutdown. Requires built artifacts.
+//! batching policy, and graceful shutdown. Runs on whichever backend
+//! `Runtime::new` selects — the native backend (sparse serving path) in a
+//! fresh checkout, PJRT when artifacts are built with the `xla` feature.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -7,7 +9,7 @@ use std::time::Duration;
 
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::Scale;
-use bloomrec::runtime::{HostTensor, Runtime};
+use bloomrec::runtime::{Execution, HostTensor, Runtime};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
 
 struct Fixture {
@@ -20,10 +22,6 @@ struct Fixture {
 
 fn fixture() -> Option<Fixture> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping serve tests: run `make artifacts`");
-        return None;
-    }
     let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
     let cache = DatasetCache::new();
     let task = rt.manifest.task("bc").expect("task").clone();
@@ -140,6 +138,23 @@ fn batching_actually_batches_under_load() {
             "no batching happened: {} batches", snap.batches);
     assert!(snap.mean_batch_fill > 1.0 / 32.0);
     server.shutdown();
+}
+
+#[test]
+fn native_serving_path_is_sparse() {
+    let Some(f) = fixture() else { return };
+    let exe = f.rt.load(&f.predict.name).expect("load");
+    // the native backend must expose sparse input support, so the server
+    // never materializes a dense [batch, m_in] tensor on its hot path;
+    // PJRT (when active) is allowed to densify behind the boundary
+    if f.rt.backend_name() == "native" {
+        assert!(exe.supports_sparse_input());
+    }
+    // ...and the Bloom serving embedding must produce sparse rows
+    let mut row = Vec::new();
+    assert!(f.emb.encode_input_sparse(&[1, 2, 3], &mut row));
+    assert!(!row.is_empty());
+    assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "sorted, unique");
 }
 
 #[test]

@@ -1,0 +1,10 @@
+// Placeholder so `cargo` can resolve the optional `xla` dependency with
+// no network access. The real PJRT bindings (the `xla` / xla-rs crate,
+// which links libxla) must be provided to actually build with
+// `--features xla`: replace the `xla` path dependency in rust/Cargo.toml
+// with a checkout of xla-rs (see README.md "Backend feature matrix").
+compile_error!(
+    "the `xla` feature needs the real xla-rs crate: point the `xla` path \
+     dependency in rust/Cargo.toml at an xla-rs checkout (this stub only \
+     exists so default builds resolve offline)"
+);
