@@ -12,14 +12,16 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use bloomrec::bloom::HashMatrix;
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::Scale;
-use bloomrec::embedding::Embedding;
+use bloomrec::embedding::{Bloom, Embedding};
 use bloomrec::model::ModelState;
 use bloomrec::runtime::{BatchInput, Execution, HostTensor, Runtime,
-                        SparseBatch};
+                        SparseBatch, SparseSeqBatch};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
 use bloomrec::util::benchkit::Bench;
+use bloomrec::util::rng::Rng;
 
 fn main() {
     let dir = std::path::Path::new("artifacts");
@@ -60,8 +62,77 @@ fn main() {
                     &mut json_sections);
     server_sweep(&rt, &predict_spec, &state, &emb, &ds, ratio, k,
                  &mut json_sections);
+    recurrent_bench(&mut json_sections);
 
     write_json(&json_sections);
+}
+
+/// Recurrent hot paths on the native backend (yc / GRU): the
+/// full-window sparse sequence forward (batch evaluation) versus the
+/// incremental step+readout a stateful serving session pays per click.
+fn recurrent_bench(json: &mut Vec<String>) {
+    let rt = Runtime::native(std::path::Path::new("artifacts"))
+        .expect("native runtime");
+    let task = rt.manifest.task("yc").expect("yc").clone();
+    let (ratio, k) = (0.1, 4);
+    let m = bloomrec::runtime::round_m(task.d, ratio);
+    let spec = rt.manifest
+        .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
+    let exe = rt.load(&spec.name).expect("load yc predict");
+    let mut rng = Rng::new(17);
+    let state = ModelState::init(&spec, &mut rng);
+    let emb = Bloom::new(HashMatrix::random(task.d, m, k, &mut rng), None);
+
+    // a batch of Bloom-encoded session windows (left-padded)
+    let sessions = bloomrec::data::sequences::generate_serve_sessions(
+        task.d, spec.batch, spec.seq_len, &mut rng);
+    let mut scratch = Vec::new();
+    let mut sb = SparseSeqBatch::new(spec.m_in, spec.seq_len);
+    for s in &sessions {
+        let tail = &s[s.len().saturating_sub(spec.seq_len)..];
+        for _ in 0..spec.seq_len - tail.len() {
+            sb.push_step(&[]);
+        }
+        for &item in tail {
+            assert!(emb.encode_input_sparse(&[item], &mut scratch));
+            sb.push_step(&scratch);
+        }
+    }
+    println!("\n-- recurrent forward/step (yc gru, m={m}, batch={}, \
+              T={}) --", spec.batch, spec.seq_len);
+
+    let bench = Bench::default();
+    let x = BatchInput::SparseSeq(sb);
+    let fwd = bench.run("gru/seq_forward_sparse", spec.batch, || {
+        let out = exe.predict(&state.params, &x).expect("predict");
+        std::hint::black_box(out);
+    });
+
+    // the incremental serving hot path: ONE click of a live session
+    let mut hs = exe.begin_state(1).expect("state");
+    emb.encode_input_sparse(&[sessions[0][0]], &mut scratch);
+    let click = scratch.clone();
+    let step = bench.run("gru/step_one_click", 1, || {
+        let mut one = SparseBatch::new(spec.m_in);
+        one.push_row(&click);
+        exe.step(&state.params, &mut hs, &BatchInput::Sparse(one))
+            .expect("step");
+    });
+    let read = bench.run("gru/readout", 1, || {
+        let out = exe.readout(&state.params, &hs).expect("readout");
+        std::hint::black_box(out);
+    });
+
+    let per_window = fwd.mean_us / spec.batch as f64;
+    let per_click = step.mean_us + read.mean_us;
+    println!("   full window per session vs step+readout per click: \
+              {per_window:.1}us vs {per_click:.1}us");
+    json.push(format!(
+        "  \"recurrent\": {{\"task\": \"yc\", \"m\": {m}, \
+         \"batch\": {}, \"seq_len\": {}, \"seq_forward_us\": {:.2}, \
+         \"step_us\": {:.2}, \"readout_us\": {:.2}}}",
+        spec.batch, spec.seq_len, fwd.mean_us, step.mean_us,
+        read.mean_us));
 }
 
 /// The acceptance check + measurement: on a sparse-capable backend the
@@ -183,10 +254,8 @@ fn server_sweep(rt: &Arc<Runtime>,
             let mut pending = Vec::new();
             for i in 0..n_requests {
                 let ex = &ds.test[i % ds.test.len()];
-                pending.push(server.submit(RecRequest {
-                    user_items: ex.input_items().to_vec(),
-                    top_n: 10,
-                }));
+                pending.push(server.submit(RecRequest::new(
+                    ex.input_items().to_vec(), 10)));
                 if pending.len() >= 512 {
                     for rx in pending.drain(..256) {
                         let _ = rx.recv();

@@ -76,10 +76,8 @@ fn main() -> anyhow::Result<()> {
         let mut pending = Vec::new();
         for i in 0..n_requests {
             let ex = &ds.test[i % ds.test.len()];
-            pending.push(server.submit(RecRequest {
-                user_items: ex.input_items().to_vec(),
-                top_n: opts.top_n,
-            }));
+            pending.push(server.submit(RecRequest::new(
+                ex.input_items().to_vec(), opts.top_n)));
             // a little client-side pipelining
             if pending.len() >= 512 {
                 for rx in pending.drain(..256) {
@@ -104,10 +102,8 @@ fn main() -> anyhow::Result<()> {
     let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
                                ServeConfig::default())?;
     let ex = &ds.test[0];
-    let resp = server.recommend(RecRequest {
-        user_items: ex.input_items().to_vec(),
-        top_n: 5,
-    });
+    let resp = server.recommend(RecRequest::new(
+        ex.input_items().to_vec(), 5));
     println!("\nsample request items={:?}", ex.input_items());
     println!("recommended: {:?}", resp.items);
     println!("ground-truth future items: {:?}", ex.target_items());

@@ -37,7 +37,26 @@ impl<'a> BloomEncoder<'a> {
 
     /// Sparse row encode: clear `out` and fill it with the (position,
     /// 1.0) pairs of the embedded multi-hot, sorted and deduped — the
-    /// active-position form the sparse batch pipeline consumes.
+    /// active-position form the sparse batch pipeline consumes
+    /// (`runtime::SparseBatch` rows, `runtime::SparseSeqBatch` steps).
+    /// O(c*k) per instance; the dense `[m]` vector never materializes.
+    ///
+    /// # Example
+    ///
+    /// Encode one user profile into its ≤ c·k active positions:
+    ///
+    /// ```
+    /// use bloomrec::bloom::{BloomEncoder, HashMatrix};
+    /// use bloomrec::util::rng::Rng;
+    ///
+    /// let hm = HashMatrix::random(1000, 64, 2, &mut Rng::new(7));
+    /// let enc = BloomEncoder::new(&hm);
+    /// let mut row = Vec::new();
+    /// enc.encode_sparse_row(&[3, 977], &mut row); // c=2 items, k=2
+    /// assert!(!row.is_empty() && row.len() <= 4);
+    /// assert!(row.windows(2).all(|w| w[0].0 < w[1].0)); // sorted, unique
+    /// assert!(row.iter().all(|&(p, v)| p < 64 && v == 1.0));
+    /// ```
     pub fn encode_sparse_row(&self, items: &[u32],
                              out: &mut Vec<(u32, f32)>) {
         out.clear();

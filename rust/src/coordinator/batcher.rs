@@ -1,23 +1,35 @@
 //! Minibatch assembly: encode examples through an [`Embedding`] into the
 //! batch representation the backend consumes — sparse active-position
-//! rows first (the paper's O(c*k) encoding), dense zero-padded tensors
-//! only for sequence artifacts and dense-only embeddings.
+//! rows first (the paper's O(c*k) encoding, flat [`SparseBatch`] rows
+//! for FF artifacts and per-timestep [`SparseSeqBatch`] steps for the
+//! recurrent ones), dense zero-padded tensors only for dense-only
+//! embeddings and backends without sparse support.
 
 use crate::data::{Example, Input, Target, PAD};
 use crate::embedding::Embedding;
-use crate::runtime::{ArtifactSpec, BatchInput, HostTensor, SparseBatch};
+use crate::runtime::{ArtifactSpec, BatchInput, HostTensor, SparseBatch,
+                     SparseSeqBatch};
 
 /// Encode example inputs sparse-first: per-row active embedded positions
 /// when the backend consumes them (`sparse`, from
 /// [`crate::runtime::Execution::supports_sparse_input`]) and the
 /// embedding produces them (Bloom/HT/CBE, identity, code matrices); a
-/// dense `x` tensor otherwise (dense-only backends, PMI/CCA tables,
-/// sequence artifacts). The dense `[batch, m_in]` multi-hot is never
+/// dense `x` tensor otherwise (dense-only backends, PMI/CCA tables).
+/// Sequence artifacts get one sparse step per (row, timestep) — each the
+/// Bloom bits of that step's single item, empty for left-padding. The
+/// dense `[batch, m_in]` / `[batch, seq_len, m_in]` multi-hot is never
 /// materialized on the sparse path.
 pub fn encode_input_batch(spec: &ArtifactSpec, emb: &dyn Embedding,
                           examples: &[&Example], sparse: bool)
     -> BatchInput {
     if spec.seq_len > 0 {
+        if sparse {
+            if let Some(sb) =
+                encode_sequence_rows_sparse(spec, emb, examples)
+            {
+                return BatchInput::SparseSeq(sb);
+            }
+        }
         let mut x = HostTensor::zeros(&spec.x_shape());
         encode_inputs(spec, emb, examples, &mut x);
         return BatchInput::Dense(x);
@@ -30,6 +42,34 @@ pub fn encode_input_batch(spec: &ArtifactSpec, emb: &dyn Embedding,
         })
         .collect();
     encode_item_rows(spec, emb, &rows, sparse)
+}
+
+/// Sparse sequence assembly: the O(c*k)-per-step path for recurrent
+/// artifacts. Returns `None` when the embedding is dense-only (PMI/CCA
+/// tables) so the caller falls back to the dense tensor.
+fn encode_sequence_rows_sparse(spec: &ArtifactSpec, emb: &dyn Embedding,
+                               examples: &[&Example])
+    -> Option<SparseSeqBatch> {
+    let mut sb = SparseSeqBatch::new(spec.m_in, spec.seq_len);
+    let mut scratch: Vec<(u32, f32)> = Vec::new();
+    for ex in examples {
+        let seq = match &ex.input {
+            Input::Sequence(s) => s,
+            Input::Items(_) => panic!("sequence artifact, set input"),
+        };
+        debug_assert_eq!(seq.len(), spec.seq_len);
+        for &item in seq {
+            if item == PAD {
+                sb.push_step(&[]);
+                continue;
+            }
+            if !emb.encode_input_sparse(&[item], &mut scratch) {
+                return None;
+            }
+            sb.push_step(&scratch);
+        }
+    }
+    Some(sb)
 }
 
 /// Shared batch assembly over raw item rows (training examples and
@@ -230,6 +270,32 @@ mod tests {
         let mut dense = HostTensor::zeros(&spec.x_shape());
         encode_inputs(&spec, &emb, &[&e1, &e2], &mut dense);
         assert_eq!(sb.to_dense(spec.batch), dense);
+    }
+
+    #[test]
+    fn encode_input_batch_is_sparse_for_sequences() {
+        let mut rng = Rng::new(8);
+        let spec = seq_spec(16, 3, 4);
+        let emb = Bloom::new(HashMatrix::random(32, 16, 3, &mut rng), None);
+        let e1 = Example { input: Input::Sequence(vec![PAD, 4, 9, 1]),
+                           target: Target::Items(vec![2]) };
+        let e2 = Example { input: Input::Sequence(vec![7, 7, 30, 12]),
+                           target: Target::Items(vec![0]) };
+        let x = encode_input_batch(&spec, &emb, &[&e1, &e2], true);
+        let BatchInput::SparseSeq(sb) = &x else {
+            panic!("bloom encodes sparse sequences");
+        };
+        assert_eq!(sb.rows(), 2);
+        // the PAD step is empty, every real step carries <= k positions
+        assert!(sb.step(0, 0).0.is_empty());
+        assert!(!sb.step(0, 1).0.is_empty());
+        // the sparse steps densify to exactly what encode_inputs builds
+        let mut dense = HostTensor::zeros(&spec.x_shape());
+        encode_inputs(&spec, &emb, &[&e1, &e2], &mut dense);
+        assert_eq!(sb.to_dense(spec.batch), dense);
+        // a dense-only backend short-circuits straight to dense
+        let x = encode_input_batch(&spec, &emb, &[&e1], false);
+        assert!(matches!(x, BatchInput::Dense(_)));
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! and compute the task measure (MAP / RR / Acc). Wall-clock is the
 //! evaluation-time T_i of Fig. 3 (right) — it deliberately *includes* the
 //! decode/mapping cost, which is the overhead the paper quantifies.
+//!
+//! Like training, evaluation is model-family agnostic: the same loop
+//! scores the FF rankers (MAP), the GRU session model and the LSTM
+//! next-word model (both RR over the decoded next-item scores), and the
+//! classifier (Acc), with batches encoded sparse whenever the backend
+//! accepts them.
 
 use std::collections::HashSet;
 

@@ -1,6 +1,11 @@
-//! Training orchestration: drive the AOT train-step artifact over the
+//! Training orchestration: drive the train-step execution over the
 //! dataset — shuffle, encode, execute, thread state; record per-epoch loss
 //! and wall-clock (the T_i of Fig. 3).
+//!
+//! The loop is model-family agnostic: FF minibatches reach the backend as
+//! flat sparse rows, recurrent ones (GRU/LSTM) as sparse per-timestep
+//! steps — see [`encode_input_batch`] — and both fall back to dense
+//! tensors when the backend or embedding cannot produce sparse input.
 
 use anyhow::Result;
 

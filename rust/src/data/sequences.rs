@@ -95,6 +95,37 @@ pub fn generate_sessions(name: &str, d: usize, seq_len: usize,
     }
 }
 
+/// Raw topical click streams for serving load tests: each session is an
+/// ordered item list (length 2..=max_len) that a live client would
+/// submit one click at a time with a stable session id — the workload
+/// the stateful recurrent serving path (per-session hidden-state cache)
+/// is measured on. Same topic model as [`generate_sessions`], without
+/// the windowing/target split.
+pub fn generate_serve_sessions(d: usize, n: usize, max_len: usize,
+                               rng: &mut Rng) -> Vec<Vec<u32>> {
+    assert!(max_len >= 2);
+    let n_topics = 32.min(d / 8).max(2);
+    let tm = TopicModel::new(d, n_topics, 1.25, rng);
+    (0..n)
+        .map(|_| {
+            let len = 2 + rng.below(max_len - 1);
+            let topic = rng.below(n_topics);
+            let mut session = Vec::with_capacity(len);
+            let mut last = tm.sample_item(topic, rng);
+            session.push(last);
+            for _ in 1..len {
+                last = if rng.bool(0.15) {
+                    last
+                } else {
+                    tm.sample_item(topic, rng)
+                };
+                session.push(last);
+            }
+            session
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +186,20 @@ mod tests {
         for e in ds.train.iter().chain(&ds.test) {
             assert!((e.target_items()[0] as usize) < 128);
         }
+    }
+
+    #[test]
+    fn serve_sessions_have_bounded_lengths_and_items() {
+        let mut rng = Rng::new(6);
+        let sessions = generate_serve_sessions(256, 200, 10, &mut rng);
+        assert_eq!(sessions.len(), 200);
+        for s in &sessions {
+            assert!(s.len() >= 2 && s.len() <= 10, "len {}", s.len());
+            assert!(s.iter().all(|&i| (i as usize) < 256));
+        }
+        // some length diversity
+        assert!(sessions.iter().any(|s| s.len() == 2));
+        assert!(sessions.iter().any(|s| s.len() > 5));
     }
 
     #[test]

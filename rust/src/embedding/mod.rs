@@ -3,9 +3,16 @@
 //! Everything the paper compares — Baseline (identity), BE, CBE, HT
 //! (= BE with k = 1), ECOC, PMI, CCA — implements [`Embedding`], so the
 //! training coordinator and evaluator are embedding-agnostic: they encode
-//! instances into the m-dim space the AOT artifact expects, train with the
+//! instances into the m-dim space the artifact expects, train with the
 //! embedding's loss family, and decode model outputs back into rankings
 //! over the original d items.
+//!
+//! Binary embeddings additionally expose the sparse encode
+//! ([`Embedding::encode_input_sparse`]): the (position, value) pairs of
+//! the would-be multi-hot, which the batch pipeline forwards to
+//! sparse-capable backends as `runtime::SparseBatch` rows (flat FF
+//! inputs) or `runtime::SparseSeqBatch` steps (recurrent inputs, one
+//! item per timestep) — the paper's O(c·k) encoding end to end.
 
 use crate::bloom::{decode_scores, BloomEncoder, HashMatrix};
 use crate::linalg::dense::Mat;

@@ -97,9 +97,9 @@ impl<'a> Ctx<'a> {
                 }
                 if !self.rt.supports_task(t) {
                     crate::info!(
-                        "skipping task {}: family '{}' needs a backend \
-                         beyond '{}' (build with --features xla)",
-                        t.name, t.family, self.rt.backend_name());
+                        "skipping task {}: the '{}' backend cannot run \
+                         family '{}'",
+                        t.name, self.rt.backend_name(), t.family);
                     return false;
                 }
                 true

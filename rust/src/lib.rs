@@ -11,12 +11,19 @@
 //! * Layer 1: Pallas kernels inside those artifacts.
 //!
 //! Model execution is pluggable (`runtime::Backend`): the default build
-//! runs the pure-Rust native backend (sparse-gather FF interpreter, zero
-//! native dependencies), while `--features xla` adds the PJRT CPU bridge
-//! that drives the AOT artifacts — Python never runs on the request path
-//! either way. Minibatches flow to the backend as sparse active-position
-//! rows (`runtime::SparseBatch`, the paper's O(c*k) encoding); dense
-//! `[batch, m]` tensors materialize only inside backends that need them.
+//! runs the pure-Rust native backend — the sparse-gather FF interpreter
+//! *and* the GRU/LSTM recurrent interpreter with truncated BPTT, zero
+//! native dependencies, covering the paper's whole 7-task grid — while
+//! `--features xla` adds the PJRT CPU bridge that drives the AOT
+//! artifacts; Python never runs on the request path either way.
+//! Minibatches flow to the backend as sparse active-position rows
+//! (`runtime::SparseBatch` for flat inputs, `runtime::SparseSeqBatch`
+//! for sequences — the paper's O(c*k) encoding); dense tensors
+//! materialize only inside backends that need them. Recurrent serving is
+//! stateful: the server keeps per-session hidden states and advances
+//! them one `runtime::Execution::step` per click.
+//!
+//! A reader's guide to the crate lives in `docs/ARCHITECTURE.md`.
 
 pub mod bloom;
 pub mod linalg;

@@ -138,9 +138,15 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     let rt = Arc::new(Runtime::new(&opts.artifact_dir)?);
     let cache = DatasetCache::new();
     let task = rt.manifest.task(task_name)?.clone();
-    if task.family != "ff" {
-        bail!("serve demo supports the feed-forward tasks");
+    if !rt.supports_task(&task) {
+        bail!("the '{}' backend cannot run family '{}'",
+              rt.backend_name(), task.family);
     }
+    if task.family == "classifier" {
+        bail!("serve demo supports the recommender tasks (ff: \
+               ml/msd/amz/bc, recurrent: yc/ptb), not the classifier");
+    }
+    let recurrent = matches!(task.family.as_str(), "gru" | "lstm");
 
     // train the model to serve
     info!("training {} (m/d={ratio}, k={k}) on the {} backend before \
@@ -171,20 +177,62 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     let (state, _) =
         coordinator::train(&rt, &train_spec, &ds, emb.as_ref(), &cfg)?;
 
-    // serve a synthetic workload from test-split user profiles
+    // serve a synthetic workload from test-split user profiles; for
+    // recurrent tasks, replay each test window as a live session —
+    // one request per click, threaded through the server's per-session
+    // hidden-state cache
     let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
                                ServeConfig::default())?;
     info!("serving {n_requests} requests...");
     let mut pending = Vec::new();
-    for i in 0..n_requests {
-        let ex = &ds.test[i % ds.test.len()];
-        pending.push(server.submit(RecRequest {
-            user_items: ex.input_items().to_vec(),
-            top_n: opts.top_n,
-        }));
-        if pending.len() >= 256 {
+    if recurrent {
+        // requests within one session must stay ordered (the hidden
+        // state is checked out per request), so submit in WAVES: click
+        // t of every live session concurrently, then a barrier before
+        // click t+1 — batching across sessions, ordering within each
+        let sessions: Vec<Vec<u32>> = ds
+            .test
+            .iter()
+            .map(|ex| {
+                ex.input_items()
+                    .iter()
+                    .copied()
+                    .filter(|&i| i != bloomrec::data::PAD)
+                    .collect::<Vec<u32>>()
+            })
+            .filter(|s| !s.is_empty())
+            .collect();
+        let max_len =
+            sessions.iter().map(Vec::len).max().unwrap_or(0);
+        let mut sent = 0usize;
+        'outer: for t in 0..max_len {
+            for (sid, s) in sessions.iter().enumerate() {
+                if t >= s.len() {
+                    continue;
+                }
+                pending.push(server.submit(RecRequest::session(
+                    sid as u64 + 1, vec![s[t]], opts.top_n)));
+                sent += 1;
+                if sent >= n_requests {
+                    break 'outer;
+                }
+            }
+            // wave barrier: every session's click t completes before
+            // any click t+1 is submitted
             for rx in pending.drain(..) {
                 let _ = rx.recv();
+            }
+        }
+        info!("live session states cached: {}", server.session_count());
+    } else {
+        for i in 0..n_requests {
+            let ex = &ds.test[i % ds.test.len()];
+            pending.push(server.submit(RecRequest::new(
+                ex.input_items().to_vec(), opts.top_n)));
+            if pending.len() >= 256 {
+                for rx in pending.drain(..) {
+                    let _ = rx.recv();
+                }
             }
         }
     }
@@ -216,7 +264,11 @@ fn cmd_inspect(opts: &Options) -> Result<()> {
             .iter()
             .filter(|a| a.task == t.name)
             .count();
-        let runnable = if rt.supports_task(t) { "" } else { " [xla-only]" };
+        let runnable = if rt.supports_task(t) {
+            ""
+        } else {
+            " [unsupported on this backend]"
+        };
         println!(
             "  {:6} d={:5} c~{:3} {:10} {:9} metric={:4} ratios={:?} \
              artifacts={arts}{runnable}",

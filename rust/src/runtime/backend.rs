@@ -3,16 +3,25 @@
 //! Everything above this line (coordinator, serving, experiments) talks to
 //! model execution through [`Runtime`] -> [`Execution`]; everything below
 //! it is a [`Backend`]: the pure-Rust [`super::native::NativeBackend`]
-//! that interprets FF artifact specs directly, or (behind the `xla` cargo
-//! feature) the PJRT executor driving AOT-compiled HLO artifacts.
+//! that interprets FF *and* recurrent (GRU/LSTM) artifact specs directly,
+//! or (behind the `xla` cargo feature) the PJRT executor driving
+//! AOT-compiled HLO artifacts.
 //!
 //! Batches cross the boundary as [`BatchInput`]: sparse active-position
-//! rows ([`SparseBatch`], the paper's O(c*k) encoding) by default, dense
-//! tensors only where unavoidable (sequence inputs, dense PMI/CCA
-//! embeddings). Backends that cannot consume sparse input materialize a
-//! dense tensor *inside* the boundary — the coordinator and server never
-//! build a `[batch, m_in]` buffer themselves when the backend supports
+//! rows ([`SparseBatch`] for flat inputs, [`SparseSeqBatch`] for
+//! `[batch, time]` sequences — both the paper's O(c*k) encoding) by
+//! default, dense tensors only where unavoidable (dense PMI/CCA
+//! embeddings, backends without sparse support). Backends that cannot
+//! consume sparse input materialize a dense tensor *inside* the boundary
+//! — the coordinator and server never build a `[batch, m_in]` (or
+//! `[batch, seq_len, m_in]`) buffer themselves when the backend supports
 //! sparse input.
+//!
+//! Recurrent executions additionally expose a stateful single-timestep
+//! interface ([`Execution::begin_state`] / [`Execution::step`] /
+//! [`Execution::readout`]) so the serving layer can keep one
+//! [`HiddenState`] per live user session instead of re-running the whole
+//! window on every click.
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -95,18 +104,135 @@ impl SparseBatch {
     }
 }
 
+/// CSR-style batch of sparse *sequence* inputs: for every (row, step)
+/// pair, the active embedded positions of that timestep — the Bloom
+/// encoding of the step's single item, or an empty step for left-padding.
+/// Step `(r, t)` occupies indptr slot `r * seq_len + t`; rows are
+/// appended one timestep at a time, oldest first. This is the sequence
+/// counterpart of [`SparseBatch`]: the dense `[batch, seq_len, m_in]`
+/// one-hot block never materializes on a sparse-capable backend.
+#[derive(Clone, Debug)]
+pub struct SparseSeqBatch {
+    pub m_in: usize,
+    pub seq_len: usize,
+    /// step offsets into `indices`/`weights`; `rows()*seq_len + 1` entries
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub weights: Vec<f32>,
+}
+
+impl SparseSeqBatch {
+    pub fn new(m_in: usize, seq_len: usize) -> Self {
+        assert!(seq_len > 0, "sequence batches need seq_len > 0");
+        Self {
+            m_in,
+            seq_len,
+            indptr: vec![0],
+            indices: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    /// Number of *complete* rows (sequences of `seq_len` pushed steps).
+    pub fn rows(&self) -> usize {
+        (self.indptr.len() - 1) / self.seq_len
+    }
+
+    /// Whether every pushed row is complete (`seq_len` steps each).
+    /// Consumers reject incomplete batches instead of silently dropping
+    /// the trailing partial row.
+    pub fn complete(&self) -> bool {
+        (self.indptr.len() - 1) % self.seq_len == 0
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.indptr.truncate(1);
+        self.indices.clear();
+        self.weights.clear();
+    }
+
+    /// Append one timestep of (position, value) entries (positions
+    /// unique, ascending); call `seq_len` times per row, oldest step
+    /// first. An empty slice is a padding step (all-zero input vector).
+    pub fn push_step(&mut self, entries: &[(u32, f32)]) {
+        for &(i, w) in entries {
+            debug_assert!((i as usize) < self.m_in,
+                          "position {i} out of range m_in={}", self.m_in);
+            self.indices.push(i);
+            self.weights.push(w);
+        }
+        self.indptr.push(self.indices.len());
+    }
+
+    /// Active positions of step `t` of row `r`.
+    pub fn step(&self, r: usize, t: usize) -> (&[u32], &[f32]) {
+        debug_assert!(t < self.seq_len);
+        let s = r * self.seq_len + t;
+        let (lo, hi) = (self.indptr[s], self.indptr[s + 1]);
+        (&self.indices[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Materialize a dense `[batch, seq_len, m_in]` tensor (rows past
+    /// `rows()` zero-padded) — for backends without sparse input support.
+    pub fn to_dense(&self, batch: usize) -> HostTensor {
+        assert!(self.rows() <= batch,
+                "{} rows exceed batch {batch}", self.rows());
+        let m = self.m_in;
+        let t_len = self.seq_len;
+        let mut t = HostTensor::zeros(&[batch, t_len, m]);
+        for r in 0..self.rows() {
+            for step in 0..t_len {
+                let (idx, wgt) = self.step(r, step);
+                let lo = (r * t_len + step) * m;
+                let dst = &mut t.data[lo..lo + m];
+                for (&i, &v) in idx.iter().zip(wgt) {
+                    dst[i as usize] = v;
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Recurrent hidden state for a batch of independent sequences — one row
+/// per live session. Produced by [`Execution::begin_state`], advanced in
+/// place by [`Execution::step`], projected to outputs by
+/// [`Execution::readout`]. The serving layer caches one of these per
+/// user session (see `serve::Server`).
+#[derive(Clone, Debug)]
+pub struct HiddenState {
+    /// `[rows, hidden]` hidden activations
+    pub h: HostTensor,
+    /// `[rows, hidden]` LSTM cell state; `None` for GRU
+    pub c: Option<HostTensor>,
+}
+
+impl HiddenState {
+    pub fn rows(&self) -> usize {
+        self.h.shape[0]
+    }
+}
+
 /// A minibatch input at the backend boundary.
 #[derive(Clone, Debug)]
 pub enum BatchInput {
-    /// Active-position rows (flat FF inputs only).
+    /// Active-position rows (flat FF inputs, or one timestep per row for
+    /// [`Execution::step`]).
     Sparse(SparseBatch),
+    /// Active-position sequence rows (recurrent artifacts).
+    SparseSeq(SparseSeqBatch),
     /// Fully materialized `x` tensor (`spec.x_shape()`).
     Dense(HostTensor),
 }
 
 impl BatchInput {
     pub fn is_sparse(&self) -> bool {
-        matches!(self, BatchInput::Sparse(_))
+        matches!(self,
+                 BatchInput::Sparse(_) | BatchInput::SparseSeq(_))
     }
 
     /// Dense view of the batch — borrowed when already dense, materialized
@@ -117,12 +243,30 @@ impl BatchInput {
             BatchInput::Dense(t) => Ok(Cow::Borrowed(t)),
             BatchInput::Sparse(sb) => {
                 if spec.seq_len > 0 {
-                    bail!("sparse batches carry flat ff inputs; sequence \
-                           artifact '{}' needs a dense batch", spec.name);
+                    bail!("flat sparse batches carry ff inputs; sequence \
+                           artifact '{}' needs a SparseSeq or dense batch",
+                          spec.name);
                 }
                 if sb.m_in != spec.m_in {
                     bail!("sparse batch m_in {} != artifact m_in {}",
                           sb.m_in, spec.m_in);
+                }
+                Ok(Cow::Owned(sb.to_dense(spec.batch)))
+            }
+            BatchInput::SparseSeq(sb) => {
+                if spec.seq_len != sb.seq_len {
+                    bail!("sparse sequence batch seq_len {} != artifact \
+                           seq_len {} ('{}')", sb.seq_len, spec.seq_len,
+                          spec.name);
+                }
+                if sb.m_in != spec.m_in {
+                    bail!("sparse batch m_in {} != artifact m_in {}",
+                          sb.m_in, spec.m_in);
+                }
+                if !sb.complete() {
+                    bail!("sparse sequence batch has a partial trailing \
+                           row ({} steps, seq_len {})",
+                          sb.indptr.len() - 1, sb.seq_len);
                 }
                 Ok(Cow::Owned(sb.to_dense(spec.batch)))
             }
@@ -173,6 +317,71 @@ pub trait Execution: Send + Sync {
         state.params = outputs;
         state.opt_state = new_opt;
         Ok(loss)
+    }
+
+    /// Whether this execution implements the stateful recurrent
+    /// interface ([`Execution::begin_state`] / [`Execution::step`] /
+    /// [`Execution::readout`]). Static per execution — the server
+    /// branches on this once, not per batch.
+    fn supports_stepping(&self) -> bool {
+        false
+    }
+
+    /// Fresh zero hidden state for `rows` parallel sessions. Errors on
+    /// non-recurrent executions.
+    fn begin_state(&self, rows: usize) -> Result<HiddenState> {
+        let _ = rows;
+        bail!("artifact '{}' (family '{}') has no recurrent state",
+              self.spec().name, self.spec().family)
+    }
+
+    /// Advance every session in `state` by ONE timestep. `x` carries one
+    /// flat input row per session — [`BatchInput::Sparse`] active
+    /// positions on the hot path (a clicked item's Bloom encoding), or a
+    /// dense `[rows, m_in]` tensor. Stepping `seq_len` encoded items from
+    /// [`Execution::begin_state`] and then calling
+    /// [`Execution::readout`] reproduces [`Execution::predict`] on the
+    /// full window bit-for-bit.
+    ///
+    /// # Example
+    ///
+    /// Drive a tiny GRU one click at a time (the stateful serving path):
+    ///
+    /// ```
+    /// use bloomrec::model::ModelState;
+    /// use bloomrec::runtime::{test_rnn_spec, BatchInput, Execution,
+    ///                         RecurrentExecution, SparseBatch};
+    /// use bloomrec::util::rng::Rng;
+    ///
+    /// let spec = test_rnn_spec("gru", 16, 8, 16, 1, 4);
+    /// let exe = RecurrentExecution::new(spec.clone()).unwrap();
+    /// let state = ModelState::init(&spec, &mut Rng::new(1));
+    ///
+    /// let mut session = exe.begin_state(1).unwrap();
+    /// let mut x = SparseBatch::new(16);
+    /// x.push_row(&[(3, 1.0), (9, 1.0)]); // one clicked item, Bloom bits
+    /// exe.step(&state.params, &mut session, &BatchInput::Sparse(x))
+    ///     .unwrap();
+    /// let probs = exe.readout(&state.params, &session).unwrap();
+    /// assert_eq!(probs.shape, vec![1, 16]);
+    /// let sum: f32 = probs.data.iter().sum();
+    /// assert!((sum - 1.0).abs() < 1e-4); // softmax-CE head
+    /// ```
+    fn step(&self, params: &[HostTensor], state: &mut HiddenState,
+            x: &BatchInput) -> Result<()> {
+        let _ = (params, state, x);
+        bail!("artifact '{}' (family '{}') has no recurrent state",
+              self.spec().name, self.spec().family)
+    }
+
+    /// Project the current hidden states through the output head —
+    /// `[rows, m_out]`, softmax-activated for the CE family (the same
+    /// post-processing as [`Execution::predict`]).
+    fn readout(&self, params: &[HostTensor], state: &HiddenState)
+        -> Result<HostTensor> {
+        let _ = (params, state);
+        bail!("artifact '{}' (family '{}') has no recurrent state",
+              self.spec().name, self.spec().family)
     }
 
     /// Forward pass; returns the `[batch, m_out]` output tensor.
@@ -393,5 +602,50 @@ mod tests {
         spec.seq_len = 5;
         let sparse = BatchInput::Sparse(SparseBatch::new(4));
         assert!(sparse.dense_view(&spec).is_err());
+    }
+
+    #[test]
+    fn sparse_seq_batch_round_trips_to_dense() {
+        let mut sb = SparseSeqBatch::new(6, 3);
+        // row 0: pad, item bits {1,4}, item bit {0}
+        sb.push_step(&[]);
+        sb.push_step(&[(1, 1.0), (4, 1.0)]);
+        sb.push_step(&[(0, 1.0)]);
+        // row 1: all pads
+        sb.push_step(&[]);
+        sb.push_step(&[]);
+        sb.push_step(&[]);
+        assert_eq!(sb.rows(), 2);
+        assert_eq!(sb.nnz(), 3);
+        assert_eq!(sb.step(0, 1), (&[1u32, 4][..], &[1.0f32, 1.0][..]));
+        assert!(sb.step(1, 2).0.is_empty());
+        let t = sb.to_dense(3);
+        assert_eq!(t.shape, vec![3, 3, 6]);
+        // step (0, 1) -> offset (0*3 + 1)*6
+        assert_eq!(t.data[6 + 1], 1.0);
+        assert_eq!(t.data[6 + 4], 1.0);
+        assert_eq!(t.data[2 * 6], 1.0);
+        // row 1 and padded row 2 all zero
+        assert!(t.data[3 * 6..].iter().all(|&v| v == 0.0));
+        sb.clear();
+        assert_eq!(sb.rows(), 0);
+        assert_eq!(sb.nnz(), 0);
+    }
+
+    #[test]
+    fn sparse_seq_view_materializes_and_checks_shape() {
+        let mut spec = crate::runtime::manifest::test_ff_spec(4, &[3], 4, 2);
+        spec.seq_len = 2;
+        let mut sb = SparseSeqBatch::new(4, 2);
+        sb.push_step(&[(2, 1.0)]);
+        sb.push_step(&[]);
+        let x = BatchInput::SparseSeq(sb);
+        assert!(x.is_sparse());
+        let v = x.dense_view(&spec).unwrap();
+        assert_eq!(v.shape, vec![2, 2, 4]);
+        assert_eq!(v.data[2], 1.0);
+        // seq_len mismatch is rejected
+        spec.seq_len = 3;
+        assert!(x.dense_view(&spec).is_err());
     }
 }

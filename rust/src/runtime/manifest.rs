@@ -137,6 +137,42 @@ impl ArtifactSpec {
             decode_k: 0,
         }
     }
+    /// Build a standalone recurrent artifact spec (wire order
+    /// `[wx, wh, bg, wo, bo]`, G = 3 gates for GRU / 4 for LSTM) — for
+    /// the native backend, tests and benches that run without a manifest
+    /// file.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rnn(name: &str, task: &str, kind: &str, loss: &str,
+               family: &str, m_in: usize, hidden: usize, m_out: usize,
+               batch: usize, seq_len: usize, optimizer: &str,
+               opt_params: OptParams) -> ArtifactSpec {
+        assert!(matches!(family, "gru" | "lstm"), "family {family}");
+        ArtifactSpec {
+            name: name.into(),
+            task: task.into(),
+            family: family.into(),
+            kind: kind.into(),
+            loss: loss.into(),
+            m_in,
+            m_out,
+            hidden: vec![hidden],
+            batch,
+            seq_len,
+            optimizer: optimizer.into(),
+            opt_params,
+            ratio: 0.0,
+            file: format!("{name}.hlo.txt"),
+            params: rnn_param_specs(family, m_in, hidden, m_out),
+            opt_slots: if kind == "train" {
+                opt_slot_count(optimizer)
+            } else {
+                0
+            },
+            decode_d: 0,
+            decode_k: 0,
+        }
+    }
+
     /// Number of optimizer-state tensors: scalar step + slots * params.
     pub fn n_state(&self) -> usize {
         if self.kind == "train" {
@@ -570,6 +606,17 @@ pub fn test_ff_spec(m_in: usize, hidden: &[usize], m_out: usize,
                      hidden, m_out, batch, "adam", OptParams::default())
 }
 
+/// Small standalone recurrent spec (`family` is "gru" or "lstm") for
+/// tests, benches and doc examples: softmax-CE over adam with default
+/// hyper-parameters, kind "train".
+pub fn test_rnn_spec(family: &str, m_in: usize, hidden: usize,
+                     m_out: usize, batch: usize, seq_len: usize)
+    -> ArtifactSpec {
+    ArtifactSpec::rnn("test_rnn", "test", "train", "softmax_ce", family,
+                      m_in, hidden, m_out, batch, seq_len, "adam",
+                      OptParams::default())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -681,6 +728,21 @@ mod tests {
                         "{}@{tp}", t.name);
             }
         }
+    }
+
+    #[test]
+    fn test_rnn_spec_has_gated_wire_shapes() {
+        let g = test_rnn_spec("gru", 24, 10, 24, 4, 6);
+        assert_eq!(g.params.len(), 5);
+        assert_eq!(g.params[0].shape, vec![24, 30]); // wx [m, 3h]
+        assert_eq!(g.params[1].shape, vec![10, 30]); // wh [h, 3h]
+        assert_eq!(g.params[2].shape, vec![30]);     // bg
+        assert_eq!(g.params[3].shape, vec![10, 24]); // wo
+        assert_eq!(g.params[4].shape, vec![24]);     // bo
+        assert_eq!(g.x_shape(), vec![4, 6, 24]);
+        let l = test_rnn_spec("lstm", 24, 10, 24, 4, 6);
+        assert_eq!(l.params[0].shape, vec![24, 40]); // 4 gates
+        assert_eq!(l.n_state(), 1 + 2 * 5);          // adam: 2 slots
     }
 
     #[test]

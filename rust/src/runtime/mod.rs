@@ -2,15 +2,17 @@
 //! coordinator and model execution.
 //!
 //! * [`backend`]: the [`Backend`]/[`Execution`] traits, the sparse-first
-//!   [`BatchInput`]/[`SparseBatch`] minibatch representation, and the
-//!   [`Runtime`] façade (manifest + backend + execution cache).
-//! * [`native`]: pure-Rust interpreter for the FF artifact specs —
-//!   sparse-gather input layer, analytic backward pass, the four paper
-//!   optimizers. The default backend; zero native dependencies.
-//! * [`xla`] (feature `xla`): the PJRT bridge driving AOT-compiled HLO
+//!   [`BatchInput`]/[`SparseBatch`]/[`SparseSeqBatch`] minibatch
+//!   representation, the stateful [`HiddenState`] serving interface, and
+//!   the [`Runtime`] façade (manifest + backend + execution cache).
+//! * [`native`]: pure-Rust interpreter covering the whole task grid —
+//!   sparse-gather FF layers ([`NativeExecution`]) and GRU/LSTM cells
+//!   with truncated BPTT ([`RecurrentExecution`]), the analytic losses,
+//!   the four paper optimizers. The default backend; zero native
+//!   dependencies.
+//! * `xla` (feature `xla`): the PJRT bridge driving AOT-compiled HLO
 //!   artifacts (`HloModuleProto::from_text_file` -> `client.compile` ->
-//!   `execute`), needed for the recurrent families and the Pallas-fused
-//!   kernels.
+//!   `execute`), for the Pallas-fused kernels and hardware baselines.
 //! * [`manifest`]: the typed artifact/task contract, loaded from
 //!   `artifacts/manifest.json` or synthesized in-process (the Rust mirror
 //!   of python/compile/manifest.py) when no artifacts are built.
@@ -22,8 +24,9 @@ pub mod tensor;
 #[cfg(feature = "xla")]
 pub mod xla;
 
-pub use backend::{Backend, BatchInput, Execution, Runtime, SparseBatch};
-pub use manifest::{round_m, test_ff_spec, ArtifactSpec, Manifest,
-                   OptParams, TaskSpec, TensorSpec};
-pub use native::{NativeBackend, NativeExecution};
+pub use backend::{Backend, BatchInput, Execution, HiddenState, Runtime,
+                  SparseBatch, SparseSeqBatch};
+pub use manifest::{round_m, test_ff_spec, test_rnn_spec, ArtifactSpec,
+                   Manifest, OptParams, TaskSpec, TensorSpec};
+pub use native::{NativeBackend, NativeExecution, RecurrentExecution};
 pub use tensor::{HostTensor, HostTensorI32};

@@ -1,18 +1,10 @@
-//! Pure-Rust backend: interprets the manifest's feed-forward artifact
-//! specs directly — sparse-gather first layer, dense hidden layers,
-//! softmax-CE / cosine losses with an analytic backward pass, and the four
-//! optimizers of python/compile/optim.py. The default build therefore
-//! trains, evaluates and serves with zero native dependencies; the PJRT
-//! path (and the recurrent families) stays behind the `xla` feature.
+//! Feed-forward interpreter: the paper's autoencoder-like recommender
+//! and classifier trunks (ml/msd/amz/bc/cade tasks).
 //!
-//! Math mirrors python/compile/model.py exactly:
+//! Math mirrors python/compile/models/ff.py exactly:
 //! * forward: `h @ w + b`, ReLU between layers, none on the final
 //!   projection; predict applies softmax for the CE family and returns
-//!   raw outputs for the cosine family;
-//! * softmax-CE loss over the target multi-hot normalised to a
-//!   distribution, mean over the static batch;
-//! * cosine loss `mean(1 - <o,y> / (|o||y| + 1e-8))`;
-//! * optimizer state layout `[step] + slot0_per_param (+ slot1...)`.
+//!   raw outputs for the cosine family.
 //!
 //! The sparse input path turns the first-layer matmul into a
 //! gather-accumulate over each row's active positions — O(batch*c*k*h)
@@ -20,31 +12,14 @@
 //! the matching scatter. Accumulation order equals the dense path's
 //! (positions ascending), so sparse and dense results agree bit-for-bit.
 
-use std::sync::Arc;
-
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, BatchInput, Execution, SparseBatch};
-use super::manifest::{ArtifactSpec, Manifest};
-use super::tensor::{HostTensor, HostTensorI32};
+use super::{accumulate_outer, ce_loss_grad, cosine_loss_grad,
+            optimizer_step, softmax_in_place};
 use crate::model::ModelState;
-
-pub struct NativeBackend;
-
-impl Backend for NativeBackend {
-    fn name(&self) -> &'static str {
-        "native"
-    }
-
-    fn supports_family(&self, family: &str) -> bool {
-        matches!(family, "ff" | "classifier")
-    }
-
-    fn load(&self, _manifest: &Manifest, spec: &ArtifactSpec)
-        -> Result<Arc<dyn Execution>> {
-        Ok(Arc::new(NativeExecution::new(spec.clone())?))
-    }
-}
+use crate::runtime::backend::{BatchInput, Execution, SparseBatch};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::{HostTensor, HostTensorI32};
 
 /// One interpretable FF artifact: weights arrive per call (the wire
 /// contract), so the execution itself is stateless and trivially shared
@@ -58,9 +33,9 @@ pub struct NativeExecution {
 impl NativeExecution {
     pub fn new(spec: ArtifactSpec) -> Result<NativeExecution> {
         if !matches!(spec.family.as_str(), "ff" | "classifier") {
-            bail!("native backend runs ff/classifier models only; \
-                   artifact '{}' is family '{}' (build with --features \
-                   xla for the recurrent families)",
+            bail!("ff interpreter runs ff/classifier models only; \
+                   artifact '{}' is family '{}' (recurrent families run \
+                   on RecurrentExecution)",
                   spec.name, spec.family);
         }
         if !matches!(spec.loss.as_str(), "softmax_ce" | "cosine") {
@@ -204,6 +179,10 @@ impl NativeExecution {
                                   self.dims[0], &params[0].data,
                                   &params[1].data, self.dims[1], relu0)
             }
+            BatchInput::SparseSeq(_) => {
+                bail!("ff artifact '{}' takes flat batches, got a sparse \
+                       sequence batch", self.spec.name);
+            }
         };
         let mut hidden: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
         for i in 1..nl {
@@ -294,6 +273,10 @@ impl NativeExecution {
                     BatchInput::Dense(t) => {
                         accumulate_outer(&t.data, &g, bsz, n, p, &mut dw);
                     }
+                    BatchInput::SparseSeq(_) => {
+                        bail!("ff artifact '{}' takes flat batches",
+                              self.spec.name);
+                    }
                 }
             } else {
                 accumulate_outer(&hidden[layer - 1], &g, bsz, n, p,
@@ -325,100 +308,8 @@ impl NativeExecution {
             grads[2 * layer + 1] = db;
         }
 
-        self.apply_update(state, &grads)?;
+        optimizer_step(&self.spec, state, &grads)?;
         Ok(loss)
-    }
-
-    /// Optimizer update, mirroring python/compile/optim.py: state layout
-    /// `[step] + slot0_per_param (+ slot1_per_param)`, step stored as t+1.
-    fn apply_update(&self, state: &mut ModelState, grads: &[Vec<f32>])
-        -> Result<()> {
-        let spec = &self.spec;
-        let op = &spec.opt_params;
-        let np = state.params.len();
-        if state.opt_state.len() != 1 + spec.opt_slots * np {
-            bail!("artifact '{}': optimizer state has {} tensors, \
-                   expected {}", spec.name, state.opt_state.len(),
-                  1 + spec.opt_slots * np);
-        }
-        let ModelState { params, opt_state } = state;
-        let (step, slots) = opt_state.split_at_mut(1);
-        let t = step[0].data[0] + 1.0;
-        let lr = op.lr as f32;
-        let eps = op.eps as f32;
-        match spec.optimizer.as_str() {
-            "adam" => {
-                let b1 = op.b1 as f32;
-                let b2 = op.b2 as f32;
-                let alpha =
-                    lr * (1.0 - b2.powf(t)).sqrt() / (1.0 - b1.powf(t));
-                let (mus, nus) = slots.split_at_mut(np);
-                for i in 0..np {
-                    let g = &grads[i];
-                    let mu = &mut mus[i].data;
-                    let nu = &mut nus[i].data;
-                    let pd = &mut params[i].data;
-                    for j in 0..g.len() {
-                        mu[j] = b1 * mu[j] + (1.0 - b1) * g[j];
-                        nu[j] = b2 * nu[j] + (1.0 - b2) * g[j] * g[j];
-                        pd[j] -= alpha * mu[j] / (nu[j].sqrt() + eps);
-                    }
-                }
-            }
-            "sgd" => {
-                let momentum = op.momentum as f32;
-                let clip = op.clip_norm as f32;
-                let scale = if clip > 0.0 {
-                    let mut sq = 0.0f32;
-                    for g in grads {
-                        for &v in g {
-                            sq += v * v;
-                        }
-                    }
-                    let norm = (sq + 1e-12).sqrt();
-                    (clip / norm).min(1.0)
-                } else {
-                    1.0
-                };
-                for i in 0..np {
-                    let g = &grads[i];
-                    let vel = &mut slots[i].data;
-                    let pd = &mut params[i].data;
-                    for j in 0..g.len() {
-                        vel[j] = momentum * vel[j] + g[j] * scale;
-                        pd[j] -= lr * vel[j];
-                    }
-                }
-            }
-            "rmsprop" => {
-                let decay = op.decay as f32;
-                for i in 0..np {
-                    let g = &grads[i];
-                    let avg = &mut slots[i].data;
-                    let pd = &mut params[i].data;
-                    for j in 0..g.len() {
-                        avg[j] = decay * avg[j]
-                            + (1.0 - decay) * g[j] * g[j];
-                        pd[j] -= lr * g[j] / (avg[j].sqrt() + eps);
-                    }
-                }
-            }
-            "adagrad" => {
-                for i in 0..np {
-                    let g = &grads[i];
-                    let acc = &mut slots[i].data;
-                    let pd = &mut params[i].data;
-                    for j in 0..g.len() {
-                        acc[j] += g[j] * g[j];
-                        pd[j] -= lr * g[j] / (acc[j].sqrt() + eps);
-                    }
-                }
-            }
-            other => bail!("native backend: unknown optimizer '{other}' \
-                            in artifact '{}'", spec.name),
-        }
-        step[0].data[0] = t;
-        Ok(())
     }
 }
 
@@ -522,111 +413,6 @@ impl Execution for NativeExecution {
     }
 }
 
-/// Numerically stable in-place softmax.
-fn softmax_in_place(z: &mut [f32]) {
-    let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
-    for v in z.iter_mut() {
-        *v = (*v - zmax).exp();
-        sum += *v;
-    }
-    if sum > 0.0 {
-        for v in z.iter_mut() {
-            *v /= sum;
-        }
-    }
-}
-
-/// Softmax-CE loss over targets normalised to a distribution, and its
-/// gradient wrt the logits:
-///   L = -mean_r sum_j (y/max(sum y, 1))_j * log_softmax(z)_j
-///   dL/dz = (T * softmax(z) - target) / batch, T = sum(target_row)
-/// (zero-padded rows have T = 0 and contribute neither loss nor grad).
-fn ce_loss_grad(logits: &[f32], y: &[f32], bsz: usize, m: usize)
-    -> (f32, Vec<f32>) {
-    let mut g = vec![0.0f32; bsz * m];
-    let mut loss = 0.0f64;
-    let inv_b = 1.0 / bsz as f32;
-    for r in 0..bsz {
-        let z = &logits[r * m..(r + 1) * m];
-        let yr = &y[r * m..(r + 1) * m];
-        let ysum: f32 = yr.iter().sum();
-        let denom = ysum.max(1.0);
-        let tsum = ysum / denom;
-        let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut esum = 0.0f32;
-        for &v in z {
-            esum += (v - zmax).exp();
-        }
-        let lse = zmax + esum.ln();
-        let grow = &mut g[r * m..(r + 1) * m];
-        for j in 0..m {
-            let pj = (z[j] - lse).exp();
-            let tj = yr[j] / denom;
-            grow[j] = (tsum * pj - tj) * inv_b;
-            if tj > 0.0 {
-                loss -= tj as f64 * (z[j] - lse) as f64;
-            }
-        }
-    }
-    ((loss / bsz as f64) as f32, g)
-}
-
-/// Cosine-proximity loss `mean(1 - <o,y>/(|o||y| + 1e-8))` and its
-/// gradient wrt the outputs.
-fn cosine_loss_grad(out: &[f32], y: &[f32], bsz: usize, m: usize)
-    -> (f32, Vec<f32>) {
-    const EPS: f32 = 1e-8;
-    let mut g = vec![0.0f32; bsz * m];
-    let mut loss = 0.0f64;
-    let inv_b = 1.0 / bsz as f32;
-    for r in 0..bsz {
-        let o = &out[r * m..(r + 1) * m];
-        let yr = &y[r * m..(r + 1) * m];
-        let mut n = 0.0f32;
-        let mut aa = 0.0f32;
-        let mut bb = 0.0f32;
-        for (&ov, &yv) in o.iter().zip(yr) {
-            n += ov * yv;
-            aa += ov * ov;
-            bb += yv * yv;
-        }
-        let a = aa.sqrt();
-        let b = bb.sqrt();
-        let den = a * b + EPS;
-        loss += (1.0 - n / den) as f64;
-        let a_safe = a.max(1e-12);
-        let grow = &mut g[r * m..(r + 1) * m];
-        for j in 0..m {
-            grow[j] =
-                -(yr[j] / den - n * b * o[j] / (a_safe * den * den)) * inv_b;
-        }
-    }
-    ((loss / bsz as f64) as f32, g)
-}
-
-/// `dw += h^T @ g` exploiting sparsity in `h`: for every nonzero h[r, kk],
-/// add `h[r, kk] * g[r, :]` into row kk of `dw`.
-fn accumulate_outer(h: &[f32], g: &[f32], bsz: usize, n: usize, p: usize,
-                    dw: &mut [f32]) {
-    debug_assert_eq!(h.len(), bsz * n);
-    debug_assert_eq!(g.len(), bsz * p);
-    debug_assert_eq!(dw.len(), n * p);
-    for r in 0..bsz {
-        let hrow = &h[r * n..(r + 1) * n];
-        let grow = &g[r * p..(r + 1) * p];
-        for (kk, &hv) in hrow.iter().enumerate() {
-            if hv == 0.0 {
-                continue;
-            }
-            let dst = &mut dw[kk * p..(kk + 1) * p];
-            for (o, &gv) in dst.iter_mut().zip(grow) {
-                *o += hv * gv;
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -637,15 +423,6 @@ mod tests {
         -> NativeExecution {
         NativeExecution::new(test_ff_spec(m_in, hidden, m_out, batch))
             .unwrap()
-    }
-
-    #[test]
-    fn softmax_rows_sum_to_one() {
-        let mut z = vec![1.0f32, 2.0, 3.0];
-        softmax_in_place(&mut z);
-        let s: f32 = z.iter().sum();
-        assert!((s - 1.0).abs() < 1e-6);
-        assert!(z[2] > z[1] && z[1] > z[0]);
     }
 
     #[test]
@@ -721,56 +498,5 @@ mod tests {
         assert_eq!(wire_opt, state.opt_state);
         // the step counter advanced
         assert_eq!(state.opt_state[0].data[0], 1.0);
-    }
-
-    #[test]
-    fn adam_step_matches_reference_values() {
-        // drive apply_update directly and compare against the python
-        // optim.py first-step formulas:
-        //   lr=0.1, g=[0.5, -2.0], step 1:
-        //   mu = 0.1*g, nu = 0.001*g^2, alpha = 0.1*sqrt(0.001)/0.1
-        //   delta = alpha * mu / (sqrt(nu) + 1e-8)
-        let mut spec = test_ff_spec(2, &[], 2, 1); // one layer [2,2] + bias
-        spec.opt_params.lr = 0.1;
-        let ex = NativeExecution::new(spec).unwrap();
-        let mut rng = Rng::new(1);
-        let mut state = ModelState::init(&ex.spec, &mut rng);
-        let p0 = state.params[0].data.clone();
-        let grads = vec![
-            vec![0.5f32, -2.0, 0.0, 0.0],
-            vec![0.0f32, 0.0],
-        ];
-        ex.apply_update(&mut state, &grads).unwrap();
-        let alpha = 0.1f32 * (1.0f32 - 0.999).sqrt() / (1.0 - 0.9);
-        for (j, &g) in [0.5f32, -2.0].iter().enumerate() {
-            let mu = 0.1 * g;
-            let nu = 0.001 * g * g;
-            let want = p0[j] - alpha * mu / (nu.sqrt() + 1e-8);
-            let got = state.params[0].data[j];
-            assert!((want - got).abs() < 1e-6,
-                    "j={j}: want {want}, got {got}");
-        }
-        // zero-grad entries untouched
-        assert_eq!(state.params[0].data[2], p0[2]);
-        assert_eq!(state.opt_state[0].data[0], 1.0);
-    }
-
-    #[test]
-    fn sgd_clips_by_global_norm() {
-        let mut spec = test_ff_spec(2, &[], 2, 1);
-        spec.optimizer = "sgd".into();
-        spec.opt_slots = 1;
-        spec.opt_params.lr = 1.0;
-        spec.opt_params.momentum = 0.0;
-        spec.opt_params.clip_norm = 1.0;
-        let ex = NativeExecution::new(spec).unwrap();
-        let mut rng = Rng::new(2);
-        let mut state = ModelState::init(&ex.spec, &mut rng);
-        let p0 = state.params[0].data.clone();
-        // global norm = 5 (3-4-0-0 plus zero bias), scale = 1/5
-        let grads = vec![vec![3.0f32, 4.0, 0.0, 0.0], vec![0.0f32, 0.0]];
-        ex.apply_update(&mut state, &grads).unwrap();
-        assert!((p0[0] - state.params[0].data[0] - 0.6).abs() < 1e-5);
-        assert!((p0[1] - state.params[0].data[1] - 0.8).abs() < 1e-5);
     }
 }

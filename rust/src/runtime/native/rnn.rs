@@ -1,0 +1,981 @@
+//! Recurrent interpreter: the paper's GRU (YC session task) and LSTM
+//! (PTB task) trunks over sparse sequence minibatches, with a
+//! full-window truncated-BPTT backward pass.
+//!
+//! Math mirrors python/compile/models/rnn.py exactly. Wire-order
+//! parameters: `wx [m_in, G*h]`, `wh [h, G*h]`, `bg [G*h]`,
+//! `wo [h, m_out]`, `bo [m_out]` with G = 3 (GRU: r, z, n) or 4 (LSTM:
+//! i, f, g, o; forget-gate pre-activation bias +1). Per timestep:
+//!
+//! * `xg = x_t @ wx + bg`, `hg = h @ wh` (bias on the input projection
+//!   only, as in the JAX reference);
+//! * GRU: `r = sigm(xg_r + hg_r)`, `z = sigm(xg_z + hg_z)`,
+//!   `n = tanh(xg_n + r * hg_n)`, `h' = (1-z)*h + z*n`;
+//! * LSTM: `g = xg + hg`, `i = sigm(g_i)`, `f = sigm(g_f + 1)`,
+//!   `c' = f*c + i*tanh(g_g)`, `h' = sigm(g_o) * tanh(c')`;
+//! * logits = `h_T @ wo + bo` (next-item prediction from the last
+//!   hidden state).
+//!
+//! The input at each timestep is one Bloom-encoded item (k active
+//! positions out of m_in), so `xg` is a gather-accumulate over the
+//! step's active positions — O(k * G * h) per step instead of
+//! O(m_in * G * h) — and the wx gradient is the matching scatter.
+//! Accumulation order equals the dense path's (positions ascending), so
+//! sparse and dense sequence batches agree bit-for-bit.
+//!
+//! Backward is truncated BPTT: gradients flow through the full
+//! `seq_len` window (the truncation boundary is the window itself —
+//! state does not carry across minibatches, matching the JAX artifact's
+//! `scan` over a fixed window). Losses and optimizer updates are the
+//! shared ones in [`super`].
+
+use anyhow::{bail, Result};
+
+use super::{accumulate_outer, ce_loss_grad, cosine_loss_grad,
+            optimizer_step, softmax_in_place};
+use crate::model::ModelState;
+use crate::runtime::backend::{BatchInput, Execution, HiddenState};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::{HostTensor, HostTensorI32};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Cell {
+    Gru,
+    Lstm,
+}
+
+/// One interpretable recurrent artifact (GRU or LSTM). Like the FF
+/// execution it is stateless per call for training/prediction; the
+/// stateful serving path threads an explicit
+/// [`HiddenState`] through [`Execution::step`].
+pub struct RecurrentExecution {
+    spec: ArtifactSpec,
+    cell: Cell,
+    hidden: usize,
+    gates: usize,
+}
+
+/// Per-timestep activations recorded for BPTT.
+enum StepTrace {
+    Gru {
+        r: Vec<f32>,
+        z: Vec<f32>,
+        n: Vec<f32>,
+        /// the recurrent candidate pre-activation `hg_n` (needed for dr)
+        hg_n: Vec<f32>,
+    },
+    Lstm {
+        i: Vec<f32>,
+        f: Vec<f32>,
+        g: Vec<f32>,
+        o: Vec<f32>,
+        tanh_c: Vec<f32>,
+        c_prev: Vec<f32>,
+    },
+}
+
+/// Forward-pass tape: everything the backward pass re-reads.
+struct Trace {
+    /// hidden state entering each step (h_{t-1}), `[rows * hidden]`
+    h_prev: Vec<Vec<f32>>,
+    steps: Vec<StepTrace>,
+    /// final hidden state (input to the output head)
+    h_last: Vec<f32>,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// `out[r] += a[r] @ w`: `a` is `[rows, n]`, `w` is `[n, p]` row-major.
+/// Zero activations are skipped (padding rows, zero hidden states).
+fn matmul_acc(a: &[f32], rows: usize, n: usize, w: &[f32], p: usize,
+              out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * n);
+    debug_assert_eq!(w.len(), n * p);
+    debug_assert_eq!(out.len(), rows * p);
+    for r in 0..rows {
+        let row = &a[r * n..(r + 1) * n];
+        let dst = &mut out[r * p..(r + 1) * p];
+        for (kk, &v) in row.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * p..(kk + 1) * p];
+            for (o, &wv) in dst.iter_mut().zip(wrow) {
+                *o += v * wv;
+            }
+        }
+    }
+}
+
+/// `out[r] += g[r] @ w^T`: `g` is `[rows, p]`, `w` is `[n, p]` row-major,
+/// `out` is `[rows, n]`.
+fn matmul_wt(g: &[f32], rows: usize, p: usize, w: &[f32], n: usize,
+             out: &mut [f32]) {
+    debug_assert_eq!(g.len(), rows * p);
+    debug_assert_eq!(w.len(), n * p);
+    debug_assert_eq!(out.len(), rows * n);
+    for r in 0..rows {
+        let grow = &g[r * p..(r + 1) * p];
+        let dst = &mut out[r * n..(r + 1) * n];
+        for (kk, d) in dst.iter_mut().enumerate() {
+            let wrow = &w[kk * p..(kk + 1) * p];
+            let mut acc = 0.0f32;
+            for (&gv, &wv) in grow.iter().zip(wrow) {
+                acc += gv * wv;
+            }
+            *d += acc;
+        }
+    }
+}
+
+impl RecurrentExecution {
+    pub fn new(spec: ArtifactSpec) -> Result<RecurrentExecution> {
+        let cell = match spec.family.as_str() {
+            "gru" => Cell::Gru,
+            "lstm" => Cell::Lstm,
+            other => bail!("recurrent interpreter runs gru/lstm only; \
+                            artifact '{}' is family '{other}'", spec.name),
+        };
+        if !matches!(spec.loss.as_str(), "softmax_ce" | "cosine") {
+            bail!("native backend: unknown loss '{}' in artifact '{}'",
+                  spec.loss, spec.name);
+        }
+        if spec.seq_len == 0 {
+            bail!("recurrent artifact '{}' needs seq_len > 0", spec.name);
+        }
+        if spec.hidden.len() != 1 {
+            bail!("recurrent artifact '{}' takes exactly one hidden \
+                   width, got {:?}", spec.name, spec.hidden);
+        }
+        let hidden = spec.hidden[0];
+        let gates = if cell == Cell::Gru { 3 } else { 4 };
+        let want: [Vec<usize>; 5] = [
+            vec![spec.m_in, gates * hidden],
+            vec![hidden, gates * hidden],
+            vec![gates * hidden],
+            vec![hidden, spec.m_out],
+            vec![spec.m_out],
+        ];
+        if spec.params.len() != want.len() {
+            bail!("recurrent artifact '{}' carries {} param tensors, \
+                   expected 5 ([wx, wh, bg, wo, bo])",
+                  spec.name, spec.params.len());
+        }
+        for (p, w) in spec.params.iter().zip(&want) {
+            if &p.shape != w {
+                bail!("artifact '{}': param '{}' has shape {:?}, \
+                       expected {:?}", spec.name, p.name, p.shape, w);
+            }
+        }
+        Ok(RecurrentExecution { spec, cell, hidden, gates })
+    }
+
+    fn check_params(&self, params: &[HostTensor]) -> Result<()> {
+        if params.len() != self.spec.params.len() {
+            bail!("artifact '{}': got {} param tensors, expected {}",
+                  self.spec.name, params.len(), self.spec.params.len());
+        }
+        for (t, s) in params.iter().zip(&self.spec.params) {
+            if t.data.len() != s.elements() {
+                bail!("artifact '{}': param '{}' has {} elements, \
+                       expected {}", self.spec.name, s.name,
+                      t.data.len(), s.elements());
+            }
+        }
+        Ok(())
+    }
+
+    /// Gate pre-activations for timestep `t` of a sequence batch:
+    /// `xg[r] = bg + x[r, t] @ wx`, gathered over the step's active
+    /// positions. Rows at/past a sparse batch's row count are the
+    /// zero-input padding rows of the static batch (xg = bg).
+    fn input_gates_seq(&self, wx: &[f32], bg: &[f32], x: &BatchInput,
+                       t: usize, rows: usize) -> Result<Vec<f32>> {
+        let gh = self.gates * self.hidden;
+        let mut xg = vec![0.0f32; rows * gh];
+        for r in 0..rows {
+            xg[r * gh..(r + 1) * gh].copy_from_slice(bg);
+        }
+        match x {
+            BatchInput::SparseSeq(sb) => {
+                for r in 0..rows.min(sb.rows()) {
+                    let (idx, wgt) = sb.step(r, t);
+                    let dst = &mut xg[r * gh..(r + 1) * gh];
+                    for (&i, &v) in idx.iter().zip(wgt) {
+                        let i = i as usize;
+                        let wrow = &wx[i * gh..(i + 1) * gh];
+                        for (o, &wv) in dst.iter_mut().zip(wrow) {
+                            *o += v * wv;
+                        }
+                    }
+                }
+            }
+            BatchInput::Dense(xt) => {
+                let m = self.spec.m_in;
+                let t_len = self.spec.seq_len;
+                for r in 0..rows {
+                    let lo = (r * t_len + t) * m;
+                    let row = &xt.data[lo..lo + m];
+                    let dst = &mut xg[r * gh..(r + 1) * gh];
+                    for (kk, &v) in row.iter().enumerate() {
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wx[kk * gh..(kk + 1) * gh];
+                        for (o, &wv) in dst.iter_mut().zip(wrow) {
+                            *o += v * wv;
+                        }
+                    }
+                }
+            }
+            BatchInput::Sparse(_) => {
+                bail!("recurrent artifact '{}' takes sequence batches \
+                       (SparseSeq or dense [batch, seq_len, m_in])",
+                      self.spec.name);
+            }
+        }
+        Ok(xg)
+    }
+
+    /// Gate pre-activations from ONE flat input row per session (the
+    /// [`Execution::step`] path): `xg[r] = bg + x[r] @ wx`.
+    fn input_gates_flat(&self, wx: &[f32], bg: &[f32], x: &BatchInput,
+                        rows: usize) -> Result<Vec<f32>> {
+        let gh = self.gates * self.hidden;
+        let mut xg = vec![0.0f32; rows * gh];
+        for r in 0..rows {
+            xg[r * gh..(r + 1) * gh].copy_from_slice(bg);
+        }
+        match x {
+            BatchInput::Sparse(sb) => {
+                if sb.m_in != self.spec.m_in {
+                    bail!("sparse step m_in {} != artifact m_in {}",
+                          sb.m_in, self.spec.m_in);
+                }
+                if sb.rows() > rows {
+                    bail!("step batch has {} rows, hidden state has {rows}",
+                          sb.rows());
+                }
+                for r in 0..sb.rows() {
+                    let (idx, wgt) = sb.row(r);
+                    let dst = &mut xg[r * gh..(r + 1) * gh];
+                    for (&i, &v) in idx.iter().zip(wgt) {
+                        let i = i as usize;
+                        let wrow = &wx[i * gh..(i + 1) * gh];
+                        for (o, &wv) in dst.iter_mut().zip(wrow) {
+                            *o += v * wv;
+                        }
+                    }
+                }
+            }
+            BatchInput::Dense(xt) => {
+                let m = self.spec.m_in;
+                if xt.data.len() != rows * m {
+                    bail!("dense step batch has {} elements, expected \
+                           {rows}x{m}", xt.data.len());
+                }
+                for r in 0..rows {
+                    let row = &xt.data[r * m..(r + 1) * m];
+                    let dst = &mut xg[r * gh..(r + 1) * gh];
+                    for (kk, &v) in row.iter().enumerate() {
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wx[kk * gh..(kk + 1) * gh];
+                        for (o, &wv) in dst.iter_mut().zip(wrow) {
+                            *o += v * wv;
+                        }
+                    }
+                }
+            }
+            BatchInput::SparseSeq(_) => {
+                bail!("step consumes one flat input row per session, \
+                       got a sequence batch");
+            }
+        }
+        Ok(xg)
+    }
+
+    /// One cell application over `rows` rows: consumes the gate
+    /// pre-activations, updates `hstate` (and `cstate` for LSTM) in
+    /// place, and optionally records the activations BPTT needs.
+    fn apply_cell(&self, xg: &[f32], hg: &[f32], hstate: &mut [f32],
+                  cstate: &mut [f32], rows: usize, keep: bool)
+        -> Option<StepTrace> {
+        let h = self.hidden;
+        let gh = self.gates * h;
+        match self.cell {
+            Cell::Gru => {
+                let mut tr_r = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_z = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_n = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_hgn = keep.then(|| vec![0.0f32; rows * h]);
+                for row in 0..rows {
+                    let base = row * gh;
+                    for j in 0..h {
+                        let rv = sigmoid(xg[base + j] + hg[base + j]);
+                        let zv =
+                            sigmoid(xg[base + h + j] + hg[base + h + j]);
+                        let hn = hg[base + 2 * h + j];
+                        let nv = (xg[base + 2 * h + j] + rv * hn).tanh();
+                        let idx = row * h + j;
+                        let hp = hstate[idx];
+                        hstate[idx] = (1.0 - zv) * hp + zv * nv;
+                        if keep {
+                            tr_r.as_mut().unwrap()[idx] = rv;
+                            tr_z.as_mut().unwrap()[idx] = zv;
+                            tr_n.as_mut().unwrap()[idx] = nv;
+                            tr_hgn.as_mut().unwrap()[idx] = hn;
+                        }
+                    }
+                }
+                keep.then(|| StepTrace::Gru {
+                    r: tr_r.unwrap(),
+                    z: tr_z.unwrap(),
+                    n: tr_n.unwrap(),
+                    hg_n: tr_hgn.unwrap(),
+                })
+            }
+            Cell::Lstm => {
+                let mut tr_i = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_f = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_g = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_o = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_tc = keep.then(|| vec![0.0f32; rows * h]);
+                let mut tr_cp = keep.then(|| vec![0.0f32; rows * h]);
+                for row in 0..rows {
+                    let base = row * gh;
+                    for j in 0..h {
+                        let iv = sigmoid(xg[base + j] + hg[base + j]);
+                        // forget-gate pre-activation bias +1 (rnn.py)
+                        let fv = sigmoid(
+                            xg[base + h + j] + hg[base + h + j] + 1.0);
+                        let gv =
+                            (xg[base + 2 * h + j] + hg[base + 2 * h + j])
+                                .tanh();
+                        let ov =
+                            sigmoid(xg[base + 3 * h + j]
+                                    + hg[base + 3 * h + j]);
+                        let idx = row * h + j;
+                        let cp = cstate[idx];
+                        let cn = fv * cp + iv * gv;
+                        let tc = cn.tanh();
+                        cstate[idx] = cn;
+                        hstate[idx] = ov * tc;
+                        if keep {
+                            tr_i.as_mut().unwrap()[idx] = iv;
+                            tr_f.as_mut().unwrap()[idx] = fv;
+                            tr_g.as_mut().unwrap()[idx] = gv;
+                            tr_o.as_mut().unwrap()[idx] = ov;
+                            tr_tc.as_mut().unwrap()[idx] = tc;
+                            tr_cp.as_mut().unwrap()[idx] = cp;
+                        }
+                    }
+                }
+                keep.then(|| StepTrace::Lstm {
+                    i: tr_i.unwrap(),
+                    f: tr_f.unwrap(),
+                    g: tr_g.unwrap(),
+                    o: tr_o.unwrap(),
+                    tanh_c: tr_tc.unwrap(),
+                    c_prev: tr_cp.unwrap(),
+                })
+            }
+        }
+    }
+
+    /// Full-window forward over the first `rows` rows; returns the
+    /// optional BPTT tape and the `rows x m_out` pre-activation logits.
+    fn forward_seq(&self, params: &[HostTensor], x: &BatchInput,
+                   rows: usize, keep_trace: bool)
+        -> Result<(Option<Trace>, Vec<f32>)> {
+        self.check_params(params)?;
+        match x {
+            BatchInput::SparseSeq(sb) => {
+                if sb.m_in != self.spec.m_in {
+                    bail!("sparse batch m_in {} != artifact m_in {}",
+                          sb.m_in, self.spec.m_in);
+                }
+                if sb.seq_len != self.spec.seq_len {
+                    bail!("sparse batch seq_len {} != artifact seq_len {}",
+                          sb.seq_len, self.spec.seq_len);
+                }
+                if sb.rows() > self.spec.batch {
+                    bail!("sparse batch has {} rows, artifact batch is {}",
+                          sb.rows(), self.spec.batch);
+                }
+                if !sb.complete() {
+                    bail!("sparse sequence batch has a partial trailing \
+                           row ({} steps, seq_len {})",
+                          sb.indptr.len() - 1, sb.seq_len);
+                }
+            }
+            BatchInput::Dense(t) => {
+                let want =
+                    self.spec.batch * self.spec.seq_len * self.spec.m_in;
+                if t.data.len() != want {
+                    bail!("dense sequence batch has {} elements, \
+                           expected {want}", t.data.len());
+                }
+            }
+            BatchInput::Sparse(_) => {
+                bail!("recurrent artifact '{}' takes sequence batches \
+                       (SparseSeq or dense [batch, seq_len, m_in])",
+                      self.spec.name);
+            }
+        }
+        let h = self.hidden;
+        let gh = self.gates * h;
+        let wx = &params[0].data;
+        let wh = &params[1].data;
+        let bg = &params[2].data;
+        let mut hstate = vec![0.0f32; rows * h];
+        let mut cstate = vec![0.0f32; rows * h];
+        let mut trace = Trace {
+            h_prev: Vec::new(),
+            steps: Vec::new(),
+            h_last: Vec::new(),
+        };
+        for t in 0..self.spec.seq_len {
+            let xg = self.input_gates_seq(wx, bg, x, t, rows)?;
+            let mut hg = vec![0.0f32; rows * gh];
+            matmul_acc(&hstate, rows, h, wh, gh, &mut hg);
+            if keep_trace {
+                trace.h_prev.push(hstate.clone());
+            }
+            if let Some(st) = self.apply_cell(&xg, &hg, &mut hstate,
+                                              &mut cstate, rows,
+                                              keep_trace) {
+                trace.steps.push(st);
+            }
+        }
+        // output head: logits = h_last @ wo + bo
+        let m_out = self.spec.m_out;
+        let wo = &params[3].data;
+        let bo = &params[4].data;
+        let mut logits = vec![0.0f32; rows * m_out];
+        for r in 0..rows {
+            logits[r * m_out..(r + 1) * m_out].copy_from_slice(bo);
+        }
+        matmul_acc(&hstate, rows, h, wo, m_out, &mut logits);
+        if keep_trace {
+            trace.h_last = hstate;
+            Ok((Some(trace), logits))
+        } else {
+            Ok((None, logits))
+        }
+    }
+
+    fn predict_impl(&self, params: &[HostTensor], x: &BatchInput)
+        -> Result<HostTensor> {
+        let bsz = self.spec.batch;
+        let m = self.spec.m_out;
+        // Partial sparse batches (the serving/evaluation tail) pay for
+        // the live rows plus ONE shared padding row, replicated — the
+        // same trick as the FF path.
+        let compute_rows = match x {
+            BatchInput::SparseSeq(sb) if sb.rows() < bsz => sb.rows() + 1,
+            _ => bsz,
+        };
+        let (_, mut out) = self.forward_seq(params, x, compute_rows,
+                                            false)?;
+        if self.spec.loss == "softmax_ce" {
+            for r in 0..compute_rows {
+                softmax_in_place(&mut out[r * m..(r + 1) * m]);
+            }
+        }
+        if compute_rows < bsz {
+            let pad =
+                out[(compute_rows - 1) * m..compute_rows * m].to_vec();
+            out.reserve((bsz - compute_rows) * m);
+            for _ in compute_rows..bsz {
+                out.extend_from_slice(&pad);
+            }
+        }
+        Ok(HostTensor::from_vec(&[bsz, m], out))
+    }
+
+    /// Scatter `dxg` (gradient wrt the input gate pre-activations of
+    /// step `t`) into the wx gradient: `dwx[i] += x[r, t][i] * dxg[r]`.
+    fn scatter_input_grad(&self, x: &BatchInput, t: usize, rows: usize,
+                          dxg: &[f32], dwx: &mut [f32]) -> Result<()> {
+        let gh = self.gates * self.hidden;
+        match x {
+            BatchInput::SparseSeq(sb) => {
+                for r in 0..rows.min(sb.rows()) {
+                    let (idx, wgt) = sb.step(r, t);
+                    let grow = &dxg[r * gh..(r + 1) * gh];
+                    for (&i, &v) in idx.iter().zip(wgt) {
+                        let i = i as usize;
+                        let dst = &mut dwx[i * gh..(i + 1) * gh];
+                        for (o, &gv) in dst.iter_mut().zip(grow) {
+                            *o += v * gv;
+                        }
+                    }
+                }
+            }
+            BatchInput::Dense(xt) => {
+                let m = self.spec.m_in;
+                let t_len = self.spec.seq_len;
+                for r in 0..rows {
+                    let lo = (r * t_len + t) * m;
+                    let row = &xt.data[lo..lo + m];
+                    let grow = &dxg[r * gh..(r + 1) * gh];
+                    for (kk, &v) in row.iter().enumerate() {
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let dst = &mut dwx[kk * gh..(kk + 1) * gh];
+                        for (o, &gv) in dst.iter_mut().zip(grow) {
+                            *o += v * gv;
+                        }
+                    }
+                }
+            }
+            BatchInput::Sparse(_) => {
+                bail!("recurrent artifact '{}' takes sequence batches",
+                      self.spec.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward + truncated BPTT + optimizer update; returns the batch
+    /// loss at the pre-update parameters.
+    fn train_step_impl(&self, state: &mut ModelState, x: &BatchInput,
+                       y: &HostTensor) -> Result<f32> {
+        let bsz = self.spec.batch;
+        let m_out = self.spec.m_out;
+        if y.data.len() != bsz * m_out {
+            bail!("target tensor has {} elements, expected {}x{}",
+                  y.data.len(), bsz, m_out);
+        }
+        let (trace, logits) =
+            self.forward_seq(&state.params, x, bsz, true)?;
+        let trace = trace.expect("trace kept");
+        let (loss, dlogits) = match self.spec.loss.as_str() {
+            "softmax_ce" => ce_loss_grad(&logits, &y.data, bsz, m_out),
+            _ => cosine_loss_grad(&logits, &y.data, bsz, m_out),
+        };
+
+        let h = self.hidden;
+        let gh = self.gates * h;
+
+        // output head gradients
+        let mut dwo = vec![0.0f32; h * m_out];
+        accumulate_outer(&trace.h_last, &dlogits, bsz, h, m_out,
+                         &mut dwo);
+        let mut dbo = vec![0.0f32; m_out];
+        for r in 0..bsz {
+            let grow = &dlogits[r * m_out..(r + 1) * m_out];
+            for (d, &gv) in dbo.iter_mut().zip(grow) {
+                *d += gv;
+            }
+        }
+        // dL/dh_T = dlogits @ wo^T
+        let mut dh = vec![0.0f32; bsz * h];
+        matmul_wt(&dlogits, bsz, m_out, &state.params[3].data, h,
+                  &mut dh);
+
+        // walk the tape backwards
+        let mut dc = vec![0.0f32; bsz * h]; // LSTM cell-state gradient
+        let mut dwx = vec![0.0f32; self.spec.m_in * gh];
+        let mut dwh = vec![0.0f32; h * gh];
+        let mut dbg = vec![0.0f32; gh];
+        for t in (0..self.spec.seq_len).rev() {
+            let h_prev = &trace.h_prev[t];
+            // gradients wrt the gate pre-activations: dxg is the input
+            // projection's (and bias's), dhg the recurrent one's — they
+            // differ only in the GRU candidate block (gated by r)
+            let mut dxg = vec![0.0f32; bsz * gh];
+            let mut dhg = vec![0.0f32; bsz * gh];
+            let mut dh_prev = vec![0.0f32; bsz * h];
+            match &trace.steps[t] {
+                StepTrace::Gru { r, z, n, hg_n } => {
+                    for row in 0..bsz {
+                        let base = row * gh;
+                        for j in 0..h {
+                            let idx = row * h + j;
+                            let dhv = dh[idx];
+                            let rv = r[idx];
+                            let zv = z[idx];
+                            let nv = n[idx];
+                            // h' = (1-z)*h + z*n
+                            let dz = dhv * (nv - h_prev[idx]);
+                            let dn = dhv * zv;
+                            dh_prev[idx] = dhv * (1.0 - zv);
+                            // n = tanh(xg_n + r*hg_n)
+                            let dn_pre = dn * (1.0 - nv * nv);
+                            let dr = dn_pre * hg_n[idx];
+                            let dr_pre = dr * rv * (1.0 - rv);
+                            let dz_pre = dz * zv * (1.0 - zv);
+                            dxg[base + j] = dr_pre;
+                            dxg[base + h + j] = dz_pre;
+                            dxg[base + 2 * h + j] = dn_pre;
+                            dhg[base + j] = dr_pre;
+                            dhg[base + h + j] = dz_pre;
+                            dhg[base + 2 * h + j] = dn_pre * rv;
+                        }
+                    }
+                }
+                StepTrace::Lstm { i, f, g, o, tanh_c, c_prev } => {
+                    for row in 0..bsz {
+                        let base = row * gh;
+                        for j in 0..h {
+                            let idx = row * h + j;
+                            let dhv = dh[idx];
+                            let tc = tanh_c[idx];
+                            let iv = i[idx];
+                            let fv = f[idx];
+                            let gv = g[idx];
+                            let ov = o[idx];
+                            // h' = o * tanh(c'); c' = f*c + i*g
+                            let dct =
+                                dc[idx] + dhv * ov * (1.0 - tc * tc);
+                            let do_g = dhv * tc;
+                            let di = dct * gv;
+                            let df = dct * c_prev[idx];
+                            let dg = dct * iv;
+                            dc[idx] = dct * fv;
+                            dxg[base + j] = di * iv * (1.0 - iv);
+                            dxg[base + h + j] = df * fv * (1.0 - fv);
+                            dxg[base + 2 * h + j] = dg * (1.0 - gv * gv);
+                            dxg[base + 3 * h + j] =
+                                do_g * ov * (1.0 - ov);
+                            // h_{t-1} feeds only through hg = h @ wh
+                        }
+                    }
+                    dhg.copy_from_slice(&dxg);
+                }
+            }
+            // dL/dh_{t-1} += dhg @ wh^T
+            matmul_wt(&dhg, bsz, gh, &state.params[1].data, h,
+                      &mut dh_prev);
+            dh = dh_prev;
+            // bias gradient: bg enters through xg only
+            for row in 0..bsz {
+                let grow = &dxg[row * gh..(row + 1) * gh];
+                for (d, &gv) in dbg.iter_mut().zip(grow) {
+                    *d += gv;
+                }
+            }
+            // dwh += h_{t-1}^T @ dhg, dwx += x_t^T @ dxg (sparse scatter)
+            accumulate_outer(h_prev, &dhg, bsz, h, gh, &mut dwh);
+            self.scatter_input_grad(x, t, bsz, &dxg, &mut dwx)?;
+        }
+
+        let grads = vec![dwx, dwh, dbg, dwo, dbo];
+        optimizer_step(&self.spec, state, &grads)?;
+        Ok(loss)
+    }
+}
+
+impl Execution for RecurrentExecution {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn supports_sparse_input(&self) -> bool {
+        true
+    }
+
+    fn supports_stepping(&self) -> bool {
+        true
+    }
+
+    fn predict(&self, params: &[HostTensor], x: &BatchInput)
+        -> Result<HostTensor> {
+        self.predict_impl(params, x)
+    }
+
+    fn train_step(&self, state: &mut ModelState, x: &BatchInput,
+                  y: &HostTensor) -> Result<f32> {
+        self.train_step_impl(state, x, y)
+    }
+
+    fn begin_state(&self, rows: usize) -> Result<HiddenState> {
+        Ok(HiddenState {
+            h: HostTensor::zeros(&[rows, self.hidden]),
+            c: (self.cell == Cell::Lstm)
+                .then(|| HostTensor::zeros(&[rows, self.hidden])),
+        })
+    }
+
+    fn step(&self, params: &[HostTensor], state: &mut HiddenState,
+            x: &BatchInput) -> Result<()> {
+        self.check_params(params)?;
+        let rows = state.rows();
+        let h = self.hidden;
+        if state.h.data.len() != rows * h {
+            bail!("hidden state has {} elements, expected {rows}x{h}",
+                  state.h.data.len());
+        }
+        let gh = self.gates * h;
+        let xg = self.input_gates_flat(&params[0].data, &params[2].data,
+                                       x, rows)?;
+        let mut hg = vec![0.0f32; rows * gh];
+        matmul_acc(&state.h.data, rows, h, &params[1].data, gh, &mut hg);
+        match self.cell {
+            Cell::Gru => {
+                let mut unused: Vec<f32> = Vec::new();
+                let _ = self.apply_cell(&xg, &hg, &mut state.h.data,
+                                        &mut unused, rows, false);
+            }
+            Cell::Lstm => {
+                let c = state.c.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("lstm artifact '{}' needs a cell \
+                                     state (begin_state)", self.spec.name)
+                })?;
+                if c.data.len() != rows * h {
+                    bail!("cell state has {} elements, expected {rows}x{h}",
+                          c.data.len());
+                }
+                let _ = self.apply_cell(&xg, &hg, &mut state.h.data,
+                                        &mut c.data, rows, false);
+            }
+        }
+        Ok(())
+    }
+
+    fn readout(&self, params: &[HostTensor], state: &HiddenState)
+        -> Result<HostTensor> {
+        self.check_params(params)?;
+        let rows = state.rows();
+        let h = self.hidden;
+        if state.h.data.len() != rows * h {
+            bail!("hidden state has {} elements, expected {rows}x{h}",
+                  state.h.data.len());
+        }
+        let m_out = self.spec.m_out;
+        let bo = &params[4].data;
+        let mut out = vec![0.0f32; rows * m_out];
+        for r in 0..rows {
+            out[r * m_out..(r + 1) * m_out].copy_from_slice(bo);
+        }
+        matmul_acc(&state.h.data, rows, h, &params[3].data, m_out,
+                   &mut out);
+        if self.spec.loss == "softmax_ce" {
+            for r in 0..rows {
+                softmax_in_place(&mut out[r * m_out..(r + 1) * m_out]);
+            }
+        }
+        Ok(HostTensor::from_vec(&[rows, m_out], out))
+    }
+
+    fn run(&self, inputs: &[&HostTensor], i32_inputs: &[&HostTensorI32])
+        -> Result<Vec<HostTensor>> {
+        let _ = i32_inputs;
+        let p = self.spec.params.len();
+        match self.spec.kind.as_str() {
+            "train" => {
+                let s = 1 + self.spec.opt_slots * p;
+                if inputs.len() != p + s + 2 {
+                    bail!("train artifact '{}' takes {} inputs, got {}",
+                          self.spec.name, p + s + 2, inputs.len());
+                }
+                let mut state = ModelState {
+                    params: inputs[..p]
+                        .iter()
+                        .map(|t| (*t).clone())
+                        .collect(),
+                    opt_state: inputs[p..p + s]
+                        .iter()
+                        .map(|t| (*t).clone())
+                        .collect(),
+                };
+                let x = BatchInput::Dense(inputs[p + s].clone());
+                let loss = self.train_step_impl(&mut state, &x,
+                                                inputs[p + s + 1])?;
+                let mut out = state.params;
+                out.append(&mut state.opt_state);
+                out.push(HostTensor::scalar(loss));
+                Ok(out)
+            }
+            "predict" => {
+                if inputs.len() != p + 1 {
+                    bail!("predict artifact '{}' takes {} inputs, got {}",
+                          self.spec.name, p + 1, inputs.len());
+                }
+                let params: Vec<HostTensor> =
+                    inputs[..p].iter().map(|t| (*t).clone()).collect();
+                let x = BatchInput::Dense(inputs[p].clone());
+                Ok(vec![self.predict_impl(&params, &x)?])
+            }
+            other => bail!("recurrent artifact kind '{other}' is not \
+                            interpretable (fused decode is ff-only)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{SparseBatch, SparseSeqBatch};
+    use crate::runtime::manifest::test_rnn_spec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rejects_bad_specs() {
+        let mut spec = test_rnn_spec("gru", 8, 4, 8, 2, 3);
+        spec.family = "ff".into();
+        assert!(RecurrentExecution::new(spec).is_err());
+        let mut spec = test_rnn_spec("lstm", 8, 4, 8, 2, 3);
+        spec.params.pop();
+        assert!(RecurrentExecution::new(spec).is_err());
+        let mut spec = test_rnn_spec("gru", 8, 4, 8, 2, 3);
+        spec.seq_len = 0;
+        assert!(RecurrentExecution::new(spec).is_err());
+        // gru shapes under an lstm family (gate count mismatch)
+        let mut spec = test_rnn_spec("gru", 8, 4, 8, 2, 3);
+        spec.family = "lstm".into();
+        assert!(RecurrentExecution::new(spec).is_err());
+    }
+
+    #[test]
+    fn begin_state_shape_per_cell() {
+        let gru = RecurrentExecution::new(test_rnn_spec("gru", 8, 4, 8,
+                                                        2, 3))
+            .unwrap();
+        let st = gru.begin_state(5).unwrap();
+        assert_eq!(st.h.shape, vec![5, 4]);
+        assert!(st.c.is_none());
+        let lstm = RecurrentExecution::new(test_rnn_spec("lstm", 8, 4, 8,
+                                                         2, 3))
+            .unwrap();
+        let st = lstm.begin_state(2).unwrap();
+        assert_eq!(st.c.as_ref().unwrap().shape, vec![2, 4]);
+    }
+
+    #[test]
+    fn predict_rows_are_distributions() {
+        for family in ["gru", "lstm"] {
+            let spec = test_rnn_spec(family, 12, 5, 12, 3, 4);
+            let exe = RecurrentExecution::new(spec.clone()).unwrap();
+            let mut rng = Rng::new(7);
+            let state = ModelState::init(&spec, &mut rng);
+            let mut x = HostTensor::zeros(&[3, 4, 12]);
+            for v in x.data.iter_mut() {
+                if rng.bool(0.2) {
+                    *v = 1.0;
+                }
+            }
+            let out = exe
+                .predict(&state.params, &BatchInput::Dense(x))
+                .unwrap();
+            assert_eq!(out.shape, vec![3, 12]);
+            for r in 0..3 {
+                let s: f32 = out.data[r * 12..(r + 1) * 12].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4,
+                        "{family} row {r} sums to {s}");
+            }
+        }
+    }
+
+    /// Stepping the window item-by-item through the stateful serving
+    /// interface must reproduce the full-sequence forward bit-for-bit.
+    #[test]
+    fn step_readout_matches_full_predict() {
+        for family in ["gru", "lstm"] {
+            let (m, h, t_len, batch) = (10usize, 6usize, 5usize, 3usize);
+            let spec = test_rnn_spec(family, m, h, m, batch, t_len);
+            let exe = RecurrentExecution::new(spec.clone()).unwrap();
+            let mut rng = Rng::new(0xC0FFEE);
+            let state = ModelState::init(&spec, &mut rng);
+
+            // random sparse windows, k=2 active bits per step, some pads
+            let mut steps: Vec<Vec<Vec<(u32, f32)>>> = Vec::new();
+            for _ in 0..batch {
+                let mut row = Vec::new();
+                for t in 0..t_len {
+                    if t == 0 && rng.bool(0.5) {
+                        row.push(Vec::new()); // leading pad
+                    } else {
+                        let a = rng.below(m) as u32;
+                        let b = rng.below(m) as u32;
+                        let mut e = vec![(a, 1.0f32), (b, 1.0f32)];
+                        e.sort_unstable_by_key(|p| p.0);
+                        e.dedup_by_key(|p| p.0);
+                        row.push(e);
+                    }
+                }
+                steps.push(row);
+            }
+
+            let mut sb = SparseSeqBatch::new(m, t_len);
+            for row in &steps {
+                for st in row {
+                    sb.push_step(st);
+                }
+            }
+            let full = exe
+                .predict(&state.params, &BatchInput::SparseSeq(sb))
+                .unwrap();
+
+            let mut hs = exe.begin_state(batch).unwrap();
+            for t in 0..t_len {
+                let mut flat = SparseBatch::new(m);
+                for row in &steps {
+                    flat.push_row(&row[t]);
+                }
+                exe.step(&state.params, &mut hs,
+                         &BatchInput::Sparse(flat))
+                    .unwrap();
+            }
+            let stepped = exe.readout(&state.params, &hs).unwrap();
+            assert_eq!(stepped.data, full.data,
+                       "{family}: step path diverged from full forward");
+        }
+    }
+
+    #[test]
+    fn step_with_input_changes_state() {
+        let spec = test_rnn_spec("gru", 8, 4, 8, 1, 3);
+        let exe = RecurrentExecution::new(spec.clone()).unwrap();
+        let mut rng = Rng::new(5);
+        let state = ModelState::init(&spec, &mut rng);
+        let mut hs = exe.begin_state(1).unwrap();
+        let mut x = SparseBatch::new(8);
+        x.push_row(&[(2, 1.0), (5, 1.0)]);
+        exe.step(&state.params, &mut hs, &BatchInput::Sparse(x))
+            .unwrap();
+        assert!(hs.h.data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn train_wire_call_matches_typed_call() {
+        let spec = test_rnn_spec("lstm", 6, 4, 6, 2, 3);
+        let exe = RecurrentExecution::new(spec.clone()).unwrap();
+        let mut rng = Rng::new(21);
+        let mut state = ModelState::init(&spec, &mut rng);
+        let mut x = HostTensor::zeros(&[2, 3, 6]);
+        let mut y = HostTensor::zeros(&[2, 6]);
+        for v in x.data.iter_mut() {
+            if rng.bool(0.3) {
+                *v = 1.0;
+            }
+        }
+        for v in y.data.iter_mut() {
+            if rng.bool(0.3) {
+                *v = 1.0;
+            }
+        }
+        let mut inputs: Vec<&HostTensor> = Vec::new();
+        inputs.extend(state.params.iter());
+        inputs.extend(state.opt_state.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        let mut out = exe.run(&inputs, &[]).unwrap();
+        let wire_loss = out.pop().unwrap().data[0];
+        let wire_opt = out.split_off(state.params.len());
+        let wire_params = out;
+
+        let typed_loss = exe
+            .train_step(&mut state, &BatchInput::Dense(x.clone()), &y)
+            .unwrap();
+        assert_eq!(wire_loss, typed_loss);
+        assert_eq!(wire_params, state.params);
+        assert_eq!(wire_opt, state.opt_state);
+    }
+}

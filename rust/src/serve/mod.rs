@@ -12,6 +12,13 @@
 //! are encoded straight to active positions — the dense `[batch, m]`
 //! multi-hot never materializes on the hot path. Latency percentiles and
 //! throughput are recorded per request.
+//!
+//! Recurrent models (the GRU session recommender, the LSTM language
+//! model) additionally serve *statefully*: the server keeps a bounded
+//! per-session hidden-state cache, and a [`RecRequest`] carrying a
+//! session id only ships the user's new clicks — each advances the
+//! cached state by one `Execution::step` instead of replaying the whole
+//! window. See `RecRequest::session`.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,14 +1,23 @@
 //! The recommendation server: router + worker replicas over a trained
 //! model artifact. Requests carry a user's item set; responses carry the
 //! top-N recommended original items with scores.
+//!
+//! Feed-forward models serve statelessly: each request's full item set is
+//! encoded (sparse) and pushed through one batched `predict`. Recurrent
+//! models serve *statefully*: the server keeps a per-session
+//! [`crate::runtime::HiddenState`] cache, so a request with a session id
+//! only carries the user's NEW clicks — each advances the cached state by
+//! one [`crate::runtime::Execution::step`] (O(k·G·h) per click) instead
+//! of re-running the whole window.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::ServeMetrics;
@@ -17,12 +26,36 @@ use crate::coordinator::batcher::encode_item_rows;
 use crate::embedding::Embedding;
 use crate::linalg::knn::top_k;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, BatchInput, Execution, Runtime};
+use crate::runtime::{ArtifactSpec, BatchInput, Execution, HiddenState,
+                     HostTensor, Runtime, SparseBatch};
 
 #[derive(Clone, Debug)]
 pub struct RecRequest {
     pub user_items: Vec<u32>,
     pub top_n: usize,
+    /// Session continuation for recurrent models: requests carrying the
+    /// same id reuse the server's cached hidden state, so `user_items`
+    /// holds only the clicks since the previous request. `None` (and
+    /// every request against an FF model) is stateless. Requests for one
+    /// session must be submitted sequentially — the state is checked out
+    /// while a request is in flight.
+    pub session: Option<u64>,
+}
+
+impl RecRequest {
+    /// Stateless request over a full item set / click history.
+    pub fn new(user_items: Vec<u32>, top_n: usize) -> RecRequest {
+        RecRequest { user_items, top_n, session: None }
+    }
+
+    /// Session-continuation request (recurrent serving): `new_items`
+    /// holds only the clicks since the last request with this id. The
+    /// server remembers the session's full click history, so earlier
+    /// clicks stay excluded from the top-N as well.
+    pub fn session(id: u64, new_items: Vec<u32>, top_n: usize)
+        -> RecRequest {
+        RecRequest { user_items: new_items, top_n, session: Some(id) }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -50,12 +83,69 @@ struct Job {
     respond: Sender<RecResponse>,
 }
 
+/// One live session: its recurrent hidden state plus the items clicked
+/// so far (the top-N protocol excludes the full history, not just the
+/// current request's clicks).
+struct SessionEntry {
+    state: HiddenState,
+    seen: Vec<u32>,
+}
+
+/// Per-session cache for recurrent serving. `take` removes the entry
+/// while its session's request is in flight (a concurrent request for
+/// the same id therefore starts a fresh state rather than racing on a
+/// shared one); `put` returns it, evicting beyond the capacity bound
+/// (`BLOOMREC_SESSION_CACHE`, default 65536 sessions). Memory per
+/// session is the hidden state (400 bytes for GRU-100) plus 4 bytes per
+/// distinct clicked item in `seen` — bounded by session length, so size
+/// the cap down for workloads with very long sessions.
+struct SessionCache {
+    map: HashMap<u64, (SessionEntry, u64)>,
+    clock: u64,
+    capacity: usize,
+}
+
+impl SessionCache {
+    fn new() -> Self {
+        let capacity = std::env::var("BLOOMREC_SESSION_CACHE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(65536usize)
+            .max(1);
+        Self { map: HashMap::new(), clock: 0, capacity }
+    }
+
+    fn take(&mut self, id: u64) -> Option<SessionEntry> {
+        self.map.remove(&id).map(|(entry, _)| entry)
+    }
+
+    fn put(&mut self, id: u64, entry: SessionEntry) {
+        self.clock += 1;
+        if self.map.len() >= self.capacity {
+            // amortized eviction: drop the oldest ~1/8 of sessions in
+            // one sweep instead of an O(n) LRU min-scan per insert
+            let mut stamps: Vec<u64> =
+                self.map.values().map(|v| v.1).collect();
+            stamps.sort_unstable();
+            let cut = stamps[self.capacity / 8];
+            self.map.retain(|_, v| v.1 > cut);
+            crate::debug!("evicted session states up to stamp {cut}");
+        }
+        self.map.insert(id, (entry, self.clock));
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
 /// Handle to a running server; dropping it shuts the workers down.
 pub struct Server {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<ServeMetrics>,
     in_flight: Arc<AtomicUsize>,
+    sessions: Arc<Mutex<SessionCache>>,
 }
 
 impl Server {
@@ -69,11 +159,12 @@ impl Server {
         let metrics = Arc::new(ServeMetrics::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
         let state = Arc::new(state);
+        let sessions = Arc::new(Mutex::new(SessionCache::new()));
 
         // single injector queue; the OS scheduler is the router across
         // replica threads (work-stealing at the queue head)
         let (tx, rx) = mpsc::channel::<Job>();
-        let batcher = Arc::new(std::sync::Mutex::new(
+        let batcher = Arc::new(Mutex::new(
             DynamicBatcher::new(rx, cfg.batcher)));
 
         let mut workers = Vec::with_capacity(cfg.replicas.max(1));
@@ -84,6 +175,7 @@ impl Server {
             let metrics = Arc::clone(&metrics);
             let in_flight = Arc::clone(&in_flight);
             let batcher = Arc::clone(&batcher);
+            let sessions = Arc::clone(&sessions);
             let spec = spec.clone();
             workers.push(std::thread::Builder::new()
                 .name(format!("bloomrec-serve-{w}"))
@@ -97,7 +189,7 @@ impl Server {
                         let Some(jobs) = batch else { break };
                         if let Err(e) = Self::serve_batch(
                             exe.as_ref(), &spec, &state, emb.as_ref(),
-                            &jobs, &metrics)
+                            &jobs, &metrics, &sessions)
                         {
                             crate::error!("serve batch failed: {e}");
                         }
@@ -106,23 +198,140 @@ impl Server {
                 })
                 .expect("spawn worker"));
         }
-        Ok(Server { tx: Some(tx), workers, metrics, in_flight })
+        Ok(Server {
+            tx: Some(tx),
+            workers,
+            metrics,
+            in_flight,
+            sessions,
+        })
     }
 
     fn serve_batch(exe: &dyn Execution, spec: &ArtifactSpec,
                    state: &ModelState, emb: &dyn Embedding, jobs: &[Job],
-                   metrics: &ServeMetrics) -> Result<()> {
+                   metrics: &ServeMetrics,
+                   sessions: &Mutex<SessionCache>) -> Result<()> {
+        if spec.seq_len > 0 {
+            // the stateful path needs a stepping interpreter (native);
+            // executions without one (PJRT runs the AOT full-window
+            // artifact) fall back to stateless window predicts
+            return if exe.supports_stepping() {
+                Self::serve_batch_recurrent(exe, spec, state, emb, jobs,
+                                            metrics, sessions)
+            } else {
+                Self::serve_batch_window(exe, spec, state, emb, jobs,
+                                         metrics)
+            };
+        }
         let x = Self::encode_jobs(exe, spec, emb, jobs);
         let probs = exe.predict(&state.params, &x)?;
-        let m_out = spec.m_out;
+        Self::respond(jobs, &probs.data, spec, emb, metrics, None);
+        Ok(())
+    }
 
+    /// Stateful recurrent serving: resume (or open) each job's session,
+    /// advance its hidden state one [`Execution::step`] per new click —
+    /// the O(k·G·h) incremental hot path — read the output head out, and
+    /// check the session back into the cache. The session's full click
+    /// history (not just this request's items) is excluded from top-N.
+    fn serve_batch_recurrent(exe: &dyn Execution, spec: &ArtifactSpec,
+                             state: &ModelState, emb: &dyn Embedding,
+                             jobs: &[Job], metrics: &ServeMetrics,
+                             sessions: &Mutex<SessionCache>)
+        -> Result<()> {
+        let m_in = spec.m_in;
+        let m_out = spec.m_out;
+        let mut probs = vec![0.0f32; jobs.len() * m_out];
+        let mut excludes: Vec<Vec<u32>> = Vec::with_capacity(jobs.len());
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for (row, job) in jobs.iter().enumerate() {
+            let mut entry = match job
+                .request
+                .session
+                .and_then(|id| sessions.lock().unwrap().take(id))
+            {
+                Some(entry) => entry,
+                None => SessionEntry {
+                    state: exe.begin_state(1)?,
+                    seen: Vec::new(),
+                },
+            };
+            for &item in &job.request.user_items {
+                let x = if emb.encode_input_sparse(&[item], &mut scratch)
+                {
+                    let mut sb = SparseBatch::new(m_in);
+                    sb.push_row(&scratch);
+                    BatchInput::Sparse(sb)
+                } else {
+                    let mut t = HostTensor::zeros(&[1, m_in]);
+                    emb.encode_input(&[item], &mut t.data);
+                    BatchInput::Dense(t)
+                };
+                exe.step(&state.params, &mut entry.state, &x)?;
+                if !entry.seen.contains(&item) {
+                    entry.seen.push(item);
+                }
+            }
+            let out = exe.readout(&state.params, &entry.state)?;
+            probs[row * m_out..(row + 1) * m_out]
+                .copy_from_slice(&out.data[..m_out]);
+            excludes.push(entry.seen.clone());
+            if let Some(id) = job.request.session {
+                sessions.lock().unwrap().put(id, entry);
+            }
+        }
+        Self::respond(jobs, &probs, spec, emb, metrics,
+                      Some(excludes.as_slice()));
+        Ok(())
+    }
+
+    /// Stateless recurrent fallback for executions without a stepping
+    /// interface: each request's last `seq_len` clicks become one
+    /// left-padded dense window pushed through the full predict. Session
+    /// ids are ignored — there is no cross-request state on this path.
+    fn serve_batch_window(exe: &dyn Execution, spec: &ArtifactSpec,
+                          state: &ModelState, emb: &dyn Embedding,
+                          jobs: &[Job], metrics: &ServeMetrics)
+        -> Result<()> {
+        let m = spec.m_in;
+        let t_len = spec.seq_len;
+        if jobs.len() > spec.batch {
+            bail!("batch of {} jobs exceeds artifact batch {} (lower \
+                   BatcherConfig::max_batch)", jobs.len(), spec.batch);
+        }
+        let mut x = HostTensor::zeros(&[spec.batch, t_len, m]);
+        for (row, job) in jobs.iter().enumerate() {
+            let items = &job.request.user_items;
+            let tail = &items[items.len().saturating_sub(t_len)..];
+            let offset = t_len - tail.len();
+            for (s, &item) in tail.iter().enumerate() {
+                let lo = (row * t_len + offset + s) * m;
+                emb.encode_input(&[item], &mut x.data[lo..lo + m]);
+            }
+        }
+        let probs = exe.predict(&state.params, &BatchInput::Dense(x))?;
+        Self::respond(jobs, &probs.data, spec, emb, metrics, None);
+        Ok(())
+    }
+
+    /// Shared response tail: decode each output row to item scores,
+    /// apply the top-N protocol — `excludes[row]` when given (session
+    /// serving passes the full click history), the request's own items
+    /// otherwise — record metrics, send responses.
+    fn respond(jobs: &[Job], probs: &[f32], spec: &ArtifactSpec,
+               emb: &dyn Embedding, metrics: &ServeMetrics,
+               excludes: Option<&[Vec<u32>]>) {
+        let m_out = spec.m_out;
         let mut responses = Vec::with_capacity(jobs.len());
         let mut lats = Vec::with_capacity(jobs.len());
         for (row, job) in jobs.iter().enumerate() {
-            let out_row = &probs.data[row * m_out..(row + 1) * m_out];
+            let out_row = &probs[row * m_out..(row + 1) * m_out];
             let mut scores = emb.decode(out_row);
-            // exclude the user's own items (top-N protocol)
-            for &it in &job.request.user_items {
+            let excl: &[u32] = match excludes {
+                Some(lists) => &lists[row],
+                None => &job.request.user_items,
+            };
+            for &it in excl {
                 if (it as usize) < scores.len() {
                     scores[it as usize] = f32::NEG_INFINITY;
                 }
@@ -141,7 +350,6 @@ impl Server {
         for (job, resp) in jobs.iter().zip(responses) {
             let _ = job.respond.send(resp);
         }
-        Ok(())
     }
 
     /// Encode a job batch for the backend: sparse active-position rows on
@@ -176,6 +384,11 @@ impl Server {
 
     pub fn pending(&self) -> usize {
         self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Number of live session states in the recurrent serving cache.
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
     }
 
     /// Stop accepting requests and join the workers.

@@ -2,8 +2,8 @@
 //! With AOT artifacts built (`make artifacts`) and the `xla` feature these
 //! exercise the PJRT path; otherwise they run end-to-end on the native
 //! backend over the synthetic manifest, so plain `cargo test` covers the
-//! whole pipeline in a fresh checkout. Recurrent-family tests still need
-//! the XLA backend and skip elsewhere.
+//! whole pipeline — all seven tasks, recurrent families included — in a
+//! fresh checkout.
 
 use std::path::{Path, PathBuf};
 use std::sync::OnceLock;
@@ -71,13 +71,13 @@ fn train_step_reduces_loss_ff() {
 #[test]
 fn train_step_reduces_loss_recurrent() {
     let Some(rt) = runtime() else { return };
+    // yc (GRU + adagrad) and ptb (LSTM + sgd/momentum/clip) now run on
+    // every backend, the native interpreter included — no skip branch
     for task in ["yc", "ptb"] {
         let spec_task = rt.manifest.task(task).expect(task);
-        if !rt.supports_task(spec_task) {
-            eprintln!("skipping {task}: recurrent families need the xla \
-                       backend (current: {})", rt.backend_name());
-            continue;
-        }
+        assert!(rt.supports_task(spec_task),
+                "backend '{}' must support family '{}'",
+                rt.backend_name(), spec_task.family);
         let spec = RunSpec {
             task: task.into(),
             method: Method::Be { k: 4 },
@@ -91,6 +91,8 @@ fn train_step_reduces_loss_recurrent() {
         let last = *res.train.epoch_losses.last().unwrap();
         assert!(last <= first * 1.05,
                 "{task} loss exploded: {:?}", res.train.epoch_losses);
+        assert!(res.score.is_finite() && res.score > 0.0,
+                "{task} score {}", res.score);
     }
 }
 

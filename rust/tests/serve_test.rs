@@ -1,15 +1,17 @@
 //! Serving-stack integration tests: correctness under concurrency, the
-//! batching policy, and graceful shutdown. Runs on whichever backend
-//! `Runtime::new` selects — the native backend (sparse serving path) in a
-//! fresh checkout, PJRT when artifacts are built with the `xla` feature.
+//! batching policy, stateful recurrent sessions, and graceful shutdown.
+//! Runs on whichever backend `Runtime::new` selects — the native backend
+//! (sparse serving path) in a fresh checkout, PJRT when artifacts are
+//! built with the `xla` feature.
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
-use bloomrec::data::Scale;
-use bloomrec::runtime::{Execution, HostTensor, Runtime};
+use bloomrec::data::{Scale, PAD};
+use bloomrec::runtime::{BatchInput, Execution, HostTensor, Runtime,
+                        SparseBatch};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
 
 struct Fixture {
@@ -84,10 +86,7 @@ fn concurrent_requests_match_direct_computation() {
         .map(|e| e.input_items().to_vec())
         .collect();
     let rxs: Vec<_> = queries.iter()
-        .map(|q| server.submit(RecRequest {
-            user_items: q.clone(),
-            top_n: 5,
-        }))
+        .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
         .collect();
     for (q, rx) in queries.iter().zip(rxs) {
         let resp = rx.recv().expect("response");
@@ -123,10 +122,7 @@ fn batching_actually_batches_under_load() {
     let rxs: Vec<_> = (0..200)
         .map(|i| {
             let ex = &f.ds.test[i % f.ds.test.len()];
-            server.submit(RecRequest {
-                user_items: ex.input_items().to_vec(),
-                top_n: 3,
-            })
+            server.submit(RecRequest::new(ex.input_items().to_vec(), 3))
         })
         .collect();
     for rx in rxs {
@@ -157,6 +153,108 @@ fn native_serving_path_is_sparse() {
     assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "sorted, unique");
 }
 
+/// A trained recurrent (yc / GRU) serving fixture on the native backend.
+fn recurrent_fixture() -> Option<Fixture> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
+    if rt.backend_name() != "native" {
+        eprintln!("session serving needs the native step interpreter, \
+                   skipping on '{}'", rt.backend_name());
+        return None;
+    }
+    let cache = DatasetCache::new();
+    let task = rt.manifest.task("yc").expect("task").clone();
+    let spec = RunSpec {
+        task: task.name.clone(),
+        method: Method::Be { k: 4 },
+        ratio: 0.1,
+        seed: 9,
+        scale: Scale::Tiny,
+        epochs: Some(1),
+    };
+    let m = bloomrec::runtime::round_m(task.d, spec.ratio);
+    let ds = cache.get(&task, spec.scale, spec.seed);
+    let emb: Arc<dyn bloomrec::embedding::Embedding> =
+        coordinator::build_embedding(spec.method, &ds, &task, m, spec.seed)
+            .expect("embedding")
+            .into();
+    let train_spec = rt.manifest
+        .find(&task.name, "train", "softmax_ce", m).unwrap().clone();
+    let predict = rt.manifest
+        .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
+    let (state, _) = coordinator::train(
+        &rt, &train_spec, &ds, emb.as_ref(),
+        &coordinator::TrainConfig { epochs: 1, seed: 9, verbose: false })
+        .expect("train");
+    Some(Fixture { rt, predict, state, emb, ds })
+}
+
+/// Replaying a session click-by-click through the server (same session
+/// id, one item per request) must end at exactly the state/ranking the
+/// public step API produces — the hidden state survives across requests.
+#[test]
+fn recurrent_session_serving_matches_direct_steps() {
+    let Some(f) = recurrent_fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        }).expect("server");
+
+    let items: Vec<u32> = f.ds.test.iter()
+        .find_map(|e| {
+            let v: Vec<u32> = e.input_items().iter().copied()
+                .filter(|&i| i != PAD).collect();
+            (v.len() >= 3).then_some(v)
+        })
+        .expect("a session with >= 3 clicks");
+
+    let mut last_resp = None;
+    for &click in &items {
+        last_resp =
+            Some(server.recommend(RecRequest::session(42, vec![click], 5)));
+    }
+    assert_eq!(server.session_count(), 1, "one live session cached");
+
+    // ground truth via the public stateful API
+    let exe = f.rt.load(&f.predict.name).expect("load");
+    let mut hs = exe.begin_state(1).expect("state");
+    let mut scratch = Vec::new();
+    for &click in &items {
+        let mut sb = SparseBatch::new(f.predict.m_in);
+        assert!(f.emb.encode_input_sparse(&[click], &mut scratch));
+        sb.push_row(&scratch);
+        exe.step(&f.state.params, &mut hs, &BatchInput::Sparse(sb))
+            .expect("step");
+    }
+    let probs = exe.readout(&f.state.params, &hs).expect("readout");
+    let mut scores = f.emb.decode(&probs.data);
+    // the server tracks the session's full click history for the top-N
+    // protocol, so every click of the session is excluded
+    for &click in &items {
+        scores[click as usize] = f32::NEG_INFINITY;
+    }
+    let want = bloomrec::linalg::knn::top_k(&scores, 5);
+    let got: Vec<usize> =
+        last_resp.unwrap().items.iter().map(|&(i, _)| i).collect();
+    assert_eq!(got, want, "session replay diverged from direct steps");
+    // recommended items never include any click from the session
+    for i in &got {
+        assert!(!items.contains(&(*i as u32)),
+                "recommended an already-clicked item");
+    }
+
+    // a request without a session id is stateless on the same server
+    let resp = server.recommend(RecRequest::new(items.clone(), 5));
+    assert_eq!(resp.items.len(), 5);
+    assert_eq!(server.session_count(), 1, "stateless requests not cached");
+    server.shutdown();
+}
+
 #[test]
 fn shutdown_drains_and_joins() {
     let Some(f) = fixture() else { return };
@@ -164,10 +262,7 @@ fn shutdown_drains_and_joins() {
         Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
         Arc::clone(&f.emb), ServeConfig::default()).expect("server");
     let ex = &f.ds.test[0];
-    let rx = server.submit(RecRequest {
-        user_items: ex.input_items().to_vec(),
-        top_n: 3,
-    });
+    let rx = server.submit(RecRequest::new(ex.input_items().to_vec(), 3));
     rx.recv().expect("response before shutdown");
     server.shutdown(); // must not hang or panic
 }
