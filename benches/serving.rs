@@ -3,7 +3,13 @@
 //! 1. sparse-vs-dense encode+forward on the native backend — the hot-path
 //!    claim of this repo: feeding the model O(c*k) active positions beats
 //!    materializing and multiplying the O(m) multi-hot row;
-//! 2. throughput/latency across batching policies and replica counts.
+//! 2. throughput/latency across batching policies and replica counts;
+//! 3. raw GEMM throughput of the blocked kernel layer (plain vs
+//!    packed-B vs the pre-kernel naive loop) at recurrent-serving
+//!    shapes;
+//! 4. batched vs sequential session stepping (N ∈ {1, 8, 64}): the
+//!    micro-batching scheduler's win — one `[N, h]` step_batch GEMM
+//!    against N rows=1 step calls.
 //!
 //! Results are printed and written to BENCH_serving.json at the repo
 //! root (overwritten per run; the PR-over-PR trajectory lives in git
@@ -16,9 +22,11 @@ use bloomrec::bloom::HashMatrix;
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::Scale;
 use bloomrec::embedding::{Bloom, Embedding};
+use bloomrec::linalg::gemm::{gemm, gemm_packed, PackedB};
 use bloomrec::model::ModelState;
-use bloomrec::runtime::{BatchInput, Execution, HostTensor, Runtime,
-                        SparseBatch, SparseSeqBatch};
+use bloomrec::runtime::{BatchInput, BatchedHiddenState, Execution,
+                        HiddenState, HostTensor, Runtime, SparseBatch,
+                        SparseSeqBatch};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
 use bloomrec::util::benchkit::Bench;
 use bloomrec::util::rng::Rng;
@@ -63,8 +71,145 @@ fn main() {
     server_sweep(&rt, &predict_spec, &state, &emb, &ds, ratio, k,
                  &mut json_sections);
     recurrent_bench(&mut json_sections);
+    gemm_bench(&mut json_sections);
+    batched_step_bench(&mut json_sections);
 
     write_json(&json_sections);
+}
+
+/// Raw kernel-layer throughput at the recurrent serving shape
+/// (`[N, h] @ [h, G*h]`, the step GEMM) and the FF hidden-layer shape:
+/// naive i-k-j loop vs blocked `gemm` vs blocked + packed B.
+fn gemm_bench(json: &mut Vec<String>) {
+    let mut rng = Rng::new(23);
+    let mut rows = Vec::new();
+    println!("\n-- blocked GEMM throughput (kernel layer) --");
+    for &(label, m, k, n) in &[("step64_gru100", 64usize, 100usize,
+                                300usize),
+                               ("ff_hidden", 64, 150, 150),
+                               ("wide_head", 64, 100, 1000)] {
+        let a: Vec<f32> =
+            (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|_| rng.normal() as f32).collect();
+        let flops = (2 * m * k * n) as f64;
+        let bench = Bench::default();
+        let mut c = vec![0.0f32; m * n];
+        let naive = bench.run(&format!("gemm/{label}/naive"), 1, || {
+            c.fill(0.0);
+            for i in 0..m {
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        c[i * n + j] += av * b[kk * n + j];
+                    }
+                }
+            }
+            std::hint::black_box(&mut c);
+        });
+        let blocked = bench.run(&format!("gemm/{label}/blocked"), 1, || {
+            gemm(&a, &b, &mut c, m, k, n, 0.0);
+            std::hint::black_box(&mut c);
+        });
+        let bp = PackedB::pack(&b, k, n);
+        let packed = bench.run(&format!("gemm/{label}/packed"), 1, || {
+            gemm_packed(&a, &bp, &mut c, m, k, n, 0.0);
+            std::hint::black_box(&mut c);
+        });
+        let gflops = |us: f64| flops / us / 1e3;
+        println!("   {label} ({m}x{k}x{n}): naive {:.2} vs blocked \
+                  {:.2} vs packed {:.2} GFLOP/s",
+                 gflops(naive.mean_us), gflops(blocked.mean_us),
+                 gflops(packed.mean_us));
+        rows.push(format!(
+            "    {{\"shape\": \"{label}\", \"m\": {m}, \"k\": {k}, \
+             \"n\": {n}, \"naive_us\": {:.2}, \"blocked_us\": {:.2}, \
+             \"packed_us\": {:.2}}}",
+            naive.mean_us, blocked.mean_us, packed.mean_us));
+    }
+    json.push(format!("  \"gemm\": [\n{}\n  ]", rows.join(",\n")));
+}
+
+/// The micro-batching scheduler's core trade: advancing N live sessions
+/// with one `step_batch` + `readout_batch` (per-flush gather/scatter
+/// included) versus N sequential rows=1 `step` + `readout` calls.
+/// Sweeps N ∈ {1, 8, 64}; single-session latency (N = 1) must not
+/// regress.
+fn batched_step_bench(json: &mut Vec<String>) {
+    let rt = Runtime::native(std::path::Path::new("artifacts"))
+        .expect("native runtime");
+    let task = rt.manifest.task("yc").expect("yc").clone();
+    let (ratio, k) = (0.1, 4);
+    let m = bloomrec::runtime::round_m(task.d, ratio);
+    let spec = rt.manifest
+        .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
+    let exe = rt.load(&spec.name).expect("load yc predict");
+    let mut rng = Rng::new(29);
+    let state = ModelState::init(&spec, &mut rng);
+    let emb = Bloom::new(HashMatrix::random(task.d, m, k, &mut rng), None);
+
+    println!("\n-- batched vs sequential session stepping (yc gru, \
+              m={m}) --");
+    let mut rows = Vec::new();
+    let mut scratch = Vec::new();
+    for &n in &[1usize, 8, 64] {
+        // one pending click per live session
+        let clicks: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|_| {
+                let item = rng.below(task.d) as u32;
+                assert!(emb.encode_input_sparse(&[item], &mut scratch));
+                scratch.clone()
+            })
+            .collect();
+        let mut sessions: Vec<HiddenState> = (0..n)
+            .map(|_| exe.begin_state(1).expect("state"))
+            .collect();
+
+        let bench = Bench::default();
+        let seq = bench.run(&format!("step/sequential/n{n}"), n, || {
+            for (hs, click) in sessions.iter_mut().zip(&clicks) {
+                let mut sb = SparseBatch::new(spec.m_in);
+                sb.push_row(click);
+                exe.step(&state.params, hs, &BatchInput::Sparse(sb))
+                    .expect("step");
+                let out =
+                    exe.readout(&state.params, hs).expect("readout");
+                std::hint::black_box(out);
+            }
+        });
+        let bat = bench.run(&format!("step/batched/n{n}"), n, || {
+            // the server's flush path: gather -> step_batch ->
+            // readout_batch -> scatter
+            let refs: Vec<&HiddenState> = sessions.iter().collect();
+            let mut packed =
+                BatchedHiddenState::gather(&refs).expect("gather");
+            let mut sb = SparseBatch::new(spec.m_in);
+            for click in &clicks {
+                sb.push_row(click);
+            }
+            exe.step_batch(&state.params, &mut packed,
+                           &BatchInput::Sparse(sb))
+                .expect("step_batch");
+            let out = exe.readout_batch(&state.params, &packed)
+                .expect("readout_batch");
+            std::hint::black_box(out);
+            for (row, hs) in sessions.iter_mut().enumerate() {
+                packed.copy_row_into(row, hs, 0).expect("scatter");
+            }
+        });
+        let speedup = seq.mean_us / bat.mean_us;
+        println!("   N={n:>2}: sequential {:.1}us vs batched {:.1}us \
+                  ({speedup:.2}x)", seq.mean_us, bat.mean_us);
+        rows.push(format!(
+            "    {{\"n\": {n}, \"sequential_us\": {:.2}, \
+             \"batched_us\": {:.2}, \"speedup\": {speedup:.3}}}",
+            seq.mean_us, bat.mean_us));
+    }
+    json.push(format!("  \"batched_step\": [\n{}\n  ]",
+                      rows.join(",\n")));
 }
 
 /// Recurrent hot paths on the native backend (yc / GRU): the
@@ -249,6 +394,7 @@ fn server_sweep(rt: &Arc<Runtime>,
                         max_batch,
                         max_wait: Duration::from_micros(wait_us),
                     },
+                    ..ServeConfig::default()
                 })
                 .expect("server");
             let mut pending = Vec::new();

@@ -70,7 +70,8 @@ fn main() -> anyhow::Result<()> {
         let server = Server::start(
             Arc::clone(&rt), predict_spec.clone(), state.clone(),
             Arc::clone(&emb),
-            ServeConfig { replicas: 2, batcher })?;
+            ServeConfig { replicas: 2, batcher,
+                          ..ServeConfig::default() })?;
 
         let n_requests = 3000;
         let mut pending = Vec::new();

@@ -3,12 +3,15 @@
 //! rows first (the paper's O(c*k) encoding, flat [`SparseBatch`] rows
 //! for FF artifacts and per-timestep [`SparseSeqBatch`] steps for the
 //! recurrent ones), dense zero-padded tensors only for dense-only
-//! embeddings and backends without sparse support.
+//! embeddings and backends without sparse support. Training targets get
+//! the same treatment on the output side: [`encode_target_batch`]
+//! produces [`BatchTarget::Sparse`] rows so the dense `[batch, m_out]`
+//! tensor never materializes on sparse-aware backends.
 
 use crate::data::{Example, Input, Target, PAD};
 use crate::embedding::Embedding;
-use crate::runtime::{ArtifactSpec, BatchInput, HostTensor, SparseBatch,
-                     SparseSeqBatch};
+use crate::runtime::{ArtifactSpec, BatchInput, BatchTarget, HostTensor,
+                     SparseBatch, SparseSeqBatch};
 
 /// Encode example inputs sparse-first: per-row active embedded positions
 /// when the backend consumes them (`sparse`, from
@@ -134,6 +137,44 @@ pub fn encode_inputs(spec: &ArtifactSpec, emb: &dyn Embedding,
             emb.encode_input(items, &mut out.data[lo..lo + m]);
         }
     }
+}
+
+/// Encode targets sparse-first — the output-side mirror of
+/// [`encode_input_batch`]: per-row active embedded positions when the
+/// backend's losses consume them (`sparse`, from
+/// [`crate::runtime::Execution::supports_sparse_input`]) and the
+/// embedding produces them (Bloom/HT/CBE, identity, code matrices;
+/// class labels are a single one-hot position). The dense
+/// `[batch, m_out]` target tensor only materializes for dense-only
+/// embeddings (PMI/CCA) or dense-only backends.
+pub fn encode_target_batch(spec: &ArtifactSpec, emb: &dyn Embedding,
+                           examples: &[&Example], sparse: bool)
+    -> BatchTarget {
+    if sparse {
+        let mut sb = SparseBatch::new(spec.m_out);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        let mut sparse_ok = true;
+        for ex in examples {
+            match &ex.target {
+                Target::Items(items) => {
+                    if !emb.encode_target_sparse(items, &mut scratch) {
+                        sparse_ok = false;
+                        break;
+                    }
+                    sb.push_row(&scratch);
+                }
+                Target::Class(c) => {
+                    sb.push_row(&[(*c as u32, 1.0)]);
+                }
+            }
+        }
+        if sparse_ok {
+            return BatchTarget::Sparse(sb);
+        }
+    }
+    let mut y = HostTensor::zeros(&spec.y_shape());
+    encode_targets(spec, emb, examples, &mut y);
+    BatchTarget::Dense(y)
 }
 
 /// Encode targets: item sets through the embedding; class labels one-hot.
@@ -314,6 +355,42 @@ mod tests {
         let emb = Identity { d: 2 };
         let x = encode_input_batch(&spec, &emb, &[&e], false);
         assert!(matches!(x, BatchInput::Dense(_)));
+    }
+
+    #[test]
+    fn encode_target_batch_is_sparse_for_bloom_and_classes() {
+        let mut rng = Rng::new(6);
+        let spec = ff_spec(16, 3);
+        let emb = Bloom::new(HashMatrix::random(32, 16, 3, &mut rng), None);
+        let e1 = Example { input: Input::Items(vec![1]),
+                           target: Target::Items(vec![9, 4]) };
+        let e2 = Example { input: Input::Items(vec![2]),
+                           target: Target::Class(7) };
+        let y = encode_target_batch(&spec, &emb, &[&e1, &e2], true);
+        let BatchTarget::Sparse(sb) = &y else {
+            panic!("bloom targets encode sparse");
+        };
+        assert_eq!(sb.rows(), 2);
+        // the class row is a single one-hot position
+        assert_eq!(sb.row(1), (&[7u32][..], &[1.0f32][..]));
+        // the sparse rows densify to exactly what encode_targets builds
+        let mut dense = HostTensor::zeros(&spec.y_shape());
+        encode_targets(&spec, &emb, &[&e1, &e2], &mut dense);
+        assert_eq!(sb.to_dense(spec.batch), dense);
+        // dense-only embeddings and backends fall back to dense tensors
+        use crate::embedding::DenseTable;
+        use crate::linalg::dense::Mat;
+        use crate::linalg::knn::Metric;
+        let mut spec2 = ff_spec(2, 1);
+        spec2.m_out = 2;
+        let table = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.5, 0.5]]);
+        let dt = DenseTable::new(table, Metric::Cosine, "pmi");
+        let e = Example { input: Input::Items(vec![0]),
+                          target: Target::Items(vec![1]) };
+        assert!(matches!(encode_target_batch(&spec2, &dt, &[&e], true),
+                         BatchTarget::Dense(_)));
+        assert!(matches!(encode_target_batch(&spec, &emb, &[&e1], false),
+                         BatchTarget::Dense(_)));
     }
 
     #[test]

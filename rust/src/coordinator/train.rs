@@ -9,11 +9,12 @@
 
 use anyhow::Result;
 
-use super::batcher::{batch_ranges, encode_input_batch, encode_targets};
+use super::batcher::{batch_ranges, encode_input_batch,
+                     encode_target_batch};
 use crate::data::Dataset;
 use crate::embedding::Embedding;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, Execution, HostTensor, Runtime};
+use crate::runtime::{ArtifactSpec, Execution, Runtime};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -54,7 +55,6 @@ pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
         first_epoch_curve: Vec::new(),
     };
 
-    let mut y = HostTensor::zeros(&spec.y_shape());
     let mut order: Vec<usize> = (0..ds.train.len()).collect();
     let watch = Stopwatch::new();
 
@@ -65,11 +65,12 @@ pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
         for (lo, hi) in batch_ranges(order.len(), spec.batch) {
             let batch: Vec<&crate::data::Example> =
                 order[lo..hi].iter().map(|&i| &ds.train[i]).collect();
-            // sparse active-position rows when both the backend and the
-            // embedding support them; dense otherwise
-            let x = encode_input_batch(spec, emb, &batch,
-                                       exe.supports_sparse_input());
-            encode_targets(spec, emb, &batch, &mut y);
+            // sparse active-position rows (inputs AND targets) when
+            // both the backend and the embedding support them; dense
+            // otherwise
+            let sparse = exe.supports_sparse_input();
+            let x = encode_input_batch(spec, emb, &batch, sparse);
+            let y = encode_target_batch(spec, emb, &batch, sparse);
             let loss = exe.train_step(&mut state, &x, &y)?;
 
             epoch_loss += loss as f64;

@@ -63,6 +63,22 @@ pub trait Embedding: Send + Sync {
     /// Encode a ground-truth item set into `out` (len `m_out`).
     fn encode_target(&self, items: &[u32], out: &mut [f32]);
 
+    /// Sparse target encode: the output-side mirror of
+    /// [`Embedding::encode_input_sparse`] — clear `out` and fill it with
+    /// exactly the (embedded position, value) pairs
+    /// [`Embedding::encode_target`] would write as nonzeros, each
+    /// position at most once, ascending. Returns `false` for dense-only
+    /// embeddings (PMI/CCA real-valued tables); callers then fall back
+    /// to the dense target tensor. With it, training targets flow to
+    /// the backend as `runtime::BatchTarget::Sparse` rows and the dense
+    /// `[batch, m_out]` tensor never materializes on sparse-aware
+    /// backends.
+    fn encode_target_sparse(&self, items: &[u32],
+                            out: &mut Vec<(u32, f32)>) -> bool {
+        let _ = (items, out);
+        false
+    }
+
     /// Map a model output (len `m_out`) to scores over the d original
     /// items (descending = better).
     fn decode(&self, output: &[f32]) -> Vec<f32>;
@@ -104,6 +120,10 @@ impl Embedding for Identity {
     }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         self.encode_input(items, out);
+    }
+    fn encode_target_sparse(&self, items: &[u32],
+                            out: &mut Vec<(u32, f32)>) -> bool {
+        self.encode_input_sparse(items, out)
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
         output.to_vec()
@@ -161,6 +181,11 @@ impl Embedding for Bloom {
     }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         BloomEncoder::new(self.out_matrix()).encode_into(items, out);
+    }
+    fn encode_target_sparse(&self, items: &[u32],
+                            out: &mut Vec<(u32, f32)>) -> bool {
+        BloomEncoder::new(self.out_matrix()).encode_sparse_row(items, out);
+        true
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
         decode_scores(output, self.out_matrix())
@@ -270,6 +295,10 @@ impl Embedding for CodeMatrix {
     }
     fn encode_target(&self, items: &[u32], out: &mut [f32]) {
         self.encode_input(items, out);
+    }
+    fn encode_target_sparse(&self, items: &[u32],
+                            out: &mut Vec<(u32, f32)>) -> bool {
+        self.encode_input_sparse(items, out)
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
         let logs: Vec<f32> = output
@@ -458,6 +487,26 @@ mod tests {
                 .collect();
             assert_eq!(sparse, expected, "{}", emb.name());
         }
+    }
+
+    #[test]
+    fn sparse_target_encode_matches_dense_nonzeros() {
+        let mut rng = Rng::new(12);
+        // separate in/out hash matrices: the target side must use hm_out
+        let be = Bloom::new(HashMatrix::random(40, 16, 3, &mut rng),
+                            Some(HashMatrix::random(40, 20, 2, &mut rng)));
+        let items: &[u32] = &[2, 17, 5];
+        let mut dense = vec![0.0f32; be.m_out()];
+        be.encode_target(items, &mut dense);
+        let mut sparse = Vec::new();
+        assert!(be.encode_target_sparse(items, &mut sparse));
+        let expected: Vec<(u32, f32)> = dense
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        assert_eq!(sparse, expected);
     }
 
     #[test]

@@ -18,10 +18,13 @@
 //! artifacts; Python never runs on the request path either way.
 //! Minibatches flow to the backend as sparse active-position rows
 //! (`runtime::SparseBatch` for flat inputs, `runtime::SparseSeqBatch`
-//! for sequences — the paper's O(c*k) encoding); dense tensors
-//! materialize only inside backends that need them. Recurrent serving is
-//! stateful: the server keeps per-session hidden states and advances
-//! them one `runtime::Execution::step` per click.
+//! for sequences — the paper's O(c*k) encoding), and training targets
+//! as their mirror (`runtime::BatchTarget::Sparse`); dense tensors
+//! materialize only inside backends that need them. Every hot matmul
+//! runs on the blocked kernel layer in `linalg::gemm`. Recurrent
+//! serving is stateful and micro-batched: the server keeps per-session
+//! hidden states and a flush advances all of its sessions through one
+//! `runtime::Execution::step_batch` GEMM per click-round.
 //!
 //! A reader's guide to the crate lives in `docs/ARCHITECTURE.md`.
 

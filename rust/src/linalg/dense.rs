@@ -1,10 +1,10 @@
 //! Row-major dense f32 matrix with the operations the baselines need:
 //! matmul, transpose, QR (modified Gram-Schmidt), norms.
 //!
-//! Deliberately simple — the heavy numeric work in this repo runs in the
-//! AOT-compiled XLA artifacts; this dense kernel set only powers the
-//! embedding *construction* phase (PMI/CCA SVD, ECOC search), which is
-//! off the request path.
+//! The matrix product routes through the blocked kernel layer in
+//! [`super::gemm`]; everything else stays deliberately simple — `Mat`
+//! powers the embedding *construction* phase (PMI/CCA SVD, ECOC
+//! search), which is off the request path.
 
 use crate::util::rng::Rng;
 
@@ -74,26 +74,16 @@ impl Mat {
         out
     }
 
-    /// self [m,k] * other [k,n] -> [m,n], blocked i-k-j loop order.
+    /// self [m,k] * other [k,n] -> [m,n], via the blocked kernel layer
+    /// (zero entries of self are skipped — sparse-ish inputs are common
+    /// here).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows,
                    "matmul dims {}x{} * {}x{}", self.rows, self.cols,
                    other.rows, other.cols);
         let mut out = Mat::zeros(self.rows, other.cols);
-        let n = other.cols;
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue; // sparse-ish inputs are common here
-                }
-                let b_row = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in out_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
-            }
-        }
+        super::gemm::matmul_into(&self.data, &other.data, &mut out.data,
+                                 self.rows, self.cols, other.cols);
         out
     }
 

@@ -1,0 +1,539 @@
+//! The kernel layer: cache-blocked f32 matrix kernels that every hot
+//! matmul in the crate routes through — the dense `Mat` ops, the native
+//! FF layers, the GRU/LSTM gate projections, and the batched session
+//! stepping in `serve::Server`.
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Deterministic accumulation order.** For every output element the
+//!    contributions are added in ascending-k order into a single
+//!    accumulator, and zero `a` entries are skipped — exactly the order
+//!    the sparse gather paths use (active positions ascending). This is
+//!    what keeps the repo's bit-for-bit sparse/dense and
+//!    step-vs-forward parity guarantees intact: [`gemm`],
+//!    [`gemm_packed`] and [`spmm_gather`] are interchangeable
+//!    bit-for-bit wherever their inputs describe the same operands.
+//! 2. **Cache blocking.** Output columns are tiled by [`NR`] floats so a
+//!    B panel column-tile stays hot across the whole row block, the k
+//!    dimension is panelled by `KC` rows, and rows are processed four at
+//!    a time so each loaded B row is reused across four accumulator
+//!    rows.
+//! 3. **Packed B panels.** [`PackedB`] re-lays a B matrix out as
+//!    contiguous column tiles once, so a weight matrix that is reused
+//!    across many GEMM calls (the recurrent `wh` across `seq_len`
+//!    timesteps, the output head across serve batches) streams linearly
+//!    from the pack instead of striding through row-major B.
+//!
+//! Everything is plain scalar Rust: the auto-vectorizer does well on the
+//! tight `axpy` loops, and no `unsafe` is needed.
+
+// kernel entry points take positional (ptr, dims...) argument lists by
+// design — grouping them into structs would obscure the BLAS-like shape
+#![allow(clippy::too_many_arguments)]
+
+/// Column-tile width in f32s (one tile row = 256 bytes = 4 cache lines).
+pub const NR: usize = 64;
+/// k-panel height: how many B rows a blocked pass consumes per tile.
+const KC: usize = 256;
+/// Row block: how many A/C rows share one loaded B row.
+const MR: usize = 4;
+
+/// `dst += a * src` elementwise; zero `a` skips the pass entirely (the
+/// shared zero-skip rule of the kernel layer).
+#[inline]
+fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+    if a == 0.0 {
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += a * s;
+    }
+}
+
+#[inline]
+fn scale_c(c: &mut [f32], beta: f32) {
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// Four disjoint mutable column-tile views of consecutive C rows.
+#[inline]
+fn quad_tiles(c: &mut [f32], n: usize, i: usize, j0: usize, tw: usize)
+    -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    let (_, rest) = c.split_at_mut(i * n);
+    let (r0, rest) = rest.split_at_mut(n);
+    let (r1, rest) = rest.split_at_mut(n);
+    let (r2, rest) = rest.split_at_mut(n);
+    let r3 = &mut rest[..n];
+    (&mut r0[j0..j0 + tw], &mut r1[j0..j0 + tw],
+     &mut r2[j0..j0 + tw], &mut r3[j0..j0 + tw])
+}
+
+/// `C = beta * C + A @ B`: row-major `A [m, k]`, `B [k, n]`, `C [m, n]`.
+///
+/// Blocked j-tile / k-panel / 4-row loop nest; per output element the
+/// additions happen in ascending-k order into one accumulator, zero `A`
+/// entries skipped — bit-identical to the naive i-k-j loop with a
+/// zero-skip, and to [`gemm_packed`] over a [`PackedB`] of the same `B`.
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
+            n: usize, beta: f32) {
+    debug_assert_eq!(a.len(), m * k, "A is [m, k]");
+    debug_assert_eq!(b.len(), k * n, "B is [k, n]");
+    debug_assert_eq!(c.len(), m * n, "C is [m, n]");
+    scale_c(c, beta);
+    let mut j0 = 0;
+    while j0 < n {
+        let tw = NR.min(n - j0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let mut i = 0;
+            while i + MR <= m {
+                let (c0, c1, c2, c3) = quad_tiles(c, n, i, j0, tw);
+                for kk in k0..k0 + kc {
+                    let brow = &b[kk * n + j0..kk * n + j0 + tw];
+                    axpy(c0, brow, a[i * k + kk]);
+                    axpy(c1, brow, a[(i + 1) * k + kk]);
+                    axpy(c2, brow, a[(i + 2) * k + kk]);
+                    axpy(c3, brow, a[(i + 3) * k + kk]);
+                }
+                i += MR;
+            }
+            while i < m {
+                let crow = &mut c[i * n + j0..i * n + j0 + tw];
+                for kk in k0..k0 + kc {
+                    axpy(crow, &b[kk * n + j0..kk * n + j0 + tw],
+                         a[i * k + kk]);
+                }
+                i += 1;
+            }
+            k0 += kc;
+        }
+        j0 += tw;
+    }
+}
+
+/// `C = A @ B` (overwrite): [`gemm`] with `beta = 0`.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                   k: usize, n: usize) {
+    gemm(a, b, c, m, k, n, 0.0);
+}
+
+/// A `B [k, n]` matrix re-laid out as contiguous [`NR`]-wide column
+/// tiles, packed once and reused across many [`gemm_packed`] calls —
+/// the recurrent `wh` across a window's timesteps is the motivating
+/// case.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack row-major `b [k, n]`. Tile for columns `[j0, j0 + tw)` lives
+    /// at offset `j0 * k`, as `k` contiguous rows of `tw` values.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        debug_assert_eq!(b.len(), k * n, "B is [k, n]");
+        let mut data = vec![0.0f32; k * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let tw = NR.min(n - j0);
+            let base = j0 * k;
+            for kk in 0..k {
+                data[base + kk * tw..base + (kk + 1) * tw]
+                    .copy_from_slice(&b[kk * n + j0..kk * n + j0 + tw]);
+            }
+            j0 += tw;
+        }
+        PackedB { k, n, data }
+    }
+}
+
+/// `C = beta * C + A @ B` with `B` pre-packed: bit-identical to [`gemm`]
+/// over the matrix [`PackedB::pack`] consumed (same loop order, same
+/// zero-skip), but streaming B linearly from the pack.
+pub fn gemm_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize,
+                   k: usize, n: usize, beta: f32) {
+    debug_assert_eq!(k, bp.k, "packed B k mismatch");
+    debug_assert_eq!(n, bp.n, "packed B n mismatch");
+    debug_assert_eq!(a.len(), m * k, "A is [m, k]");
+    debug_assert_eq!(c.len(), m * n, "C is [m, n]");
+    scale_c(c, beta);
+    let mut j0 = 0;
+    while j0 < n {
+        let tw = NR.min(n - j0);
+        let tile = &bp.data[j0 * k..j0 * k + k * tw];
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let mut i = 0;
+            while i + MR <= m {
+                let (c0, c1, c2, c3) = quad_tiles(c, n, i, j0, tw);
+                for kk in k0..k0 + kc {
+                    let brow = &tile[kk * tw..(kk + 1) * tw];
+                    axpy(c0, brow, a[i * k + kk]);
+                    axpy(c1, brow, a[(i + 1) * k + kk]);
+                    axpy(c2, brow, a[(i + 2) * k + kk]);
+                    axpy(c3, brow, a[(i + 3) * k + kk]);
+                }
+                i += MR;
+            }
+            while i < m {
+                let crow = &mut c[i * n + j0..i * n + j0 + tw];
+                for kk in k0..k0 + kc {
+                    axpy(crow, &tile[kk * tw..(kk + 1) * tw],
+                         a[i * k + kk]);
+                }
+                i += 1;
+            }
+            k0 += kc;
+        }
+        j0 += tw;
+    }
+}
+
+/// `C = beta * C + A @ Bt^T`: the transpose-aware variant for row-major
+/// `Bt [n, k]` (each B^T column is a contiguous Bt row). `A [m, k]`,
+/// `C [m, n]`. Each output element is one dot product accumulated in
+/// ascending-k order and then added once — the order the backward
+/// passes have always used. Rows are processed four at a time so each
+/// Bt row is reused across four dots.
+pub fn gemm_nt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize,
+               n: usize, beta: f32) {
+    debug_assert_eq!(a.len(), m * k, "A is [m, k]");
+    debug_assert_eq!(bt.len(), n * k, "Bt is [n, k]");
+    debug_assert_eq!(c.len(), m * n, "C is [m, n]");
+    scale_c(c, beta);
+    let mut i = 0;
+    while i + MR <= m {
+        let (c0, c1, c2, c3) = quad_tiles(c, n, i, 0, n);
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        for j in 0..n {
+            let brow = &bt[j * k..(j + 1) * k];
+            c0[j] += dot_f32(a0, brow);
+            c1[j] += dot_f32(a1, brow);
+            c2[j] += dot_f32(a2, brow);
+            c3[j] += dot_f32(a3, brow);
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv += dot_f32(arow, &bt[j * k..(j + 1) * k]);
+        }
+        i += 1;
+    }
+}
+
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&av, &bv) in a.iter().zip(b) {
+        acc += av * bv;
+    }
+    acc
+}
+
+/// `dw += A^T @ G` exploiting sparsity in `A`: for every nonzero
+/// `a[r, kk]`, add `a[r, kk] * g[r, :]` into row `kk` of `dw [n, p]`
+/// (`A [rows, n]`, `G [rows, p]`). Contributions to each `dw` element
+/// arrive in ascending-r order — the outer-product accumulation every
+/// weight gradient in the native backend uses.
+pub fn gemm_tn_acc(a: &[f32], g: &[f32], dw: &mut [f32], rows: usize,
+                   n: usize, p: usize) {
+    debug_assert_eq!(a.len(), rows * n, "A is [rows, n]");
+    debug_assert_eq!(g.len(), rows * p, "G is [rows, p]");
+    debug_assert_eq!(dw.len(), n * p, "dw is [n, p]");
+    for r in 0..rows {
+        let arow = &a[r * n..(r + 1) * n];
+        let grow = &g[r * p..(r + 1) * p];
+        for (kk, &av) in arow.iter().enumerate() {
+            axpy(&mut dw[kk * p..(kk + 1) * p], grow, av);
+        }
+    }
+}
+
+/// `gp[r, kk] = relu'(h[r, kk]) * dot(g[r, :], w[kk, :])`: the fused
+/// masked `G @ W^T` of the FF backward pass (`w [n, p]` row-major,
+/// `g [rows, p]`, `h`/`gp` `[rows, n]`). `gp` must arrive zeroed;
+/// masked-out entries are left untouched.
+pub fn gemm_nt_relu_masked(g: &[f32], w: &[f32], h: &[f32],
+                           gp: &mut [f32], rows: usize, p: usize,
+                           n: usize) {
+    debug_assert_eq!(g.len(), rows * p);
+    debug_assert_eq!(w.len(), n * p);
+    debug_assert_eq!(h.len(), rows * n);
+    debug_assert_eq!(gp.len(), rows * n);
+    for r in 0..rows {
+        let grow = &g[r * p..(r + 1) * p];
+        let hrow = &h[r * n..(r + 1) * n];
+        let dst = &mut gp[r * n..(r + 1) * n];
+        for (kk, d) in dst.iter_mut().enumerate() {
+            if hrow[kk] > 0.0 {
+                *d = dot_f32(grow, &w[kk * p..(kk + 1) * p]);
+            }
+        }
+    }
+}
+
+/// Sparse-times-dense gather: `out[r, :] += sum_e v_e * w[i_e, :]` over
+/// row `r`'s CSR entries, column-tiled so the gathered weight-row
+/// segments of a tile stay hot across the whole batch — all active
+/// positions of the batch feed one blocked product instead of per-row
+/// strided sweeps.
+///
+/// Row `r`'s entries live at
+/// `indptr[base + r * stride] .. indptr[base + r * stride + 1]` —
+/// `base = 0, stride = 1` for a flat `SparseBatch`, `base = t,
+/// stride = seq_len` for timestep `t` of a `SparseSeqBatch`. Per output
+/// element the additions happen in entry order (active positions
+/// ascending), matching [`gemm`]'s ascending-k zero-skip order
+/// bit-for-bit when the CSR rows describe the same dense operand.
+pub fn spmm_gather(indptr: &[usize], indices: &[u32], vals: &[f32],
+                   rows: usize, base: usize, stride: usize, w: &[f32],
+                   p: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= rows * p, "out is [rows, p]");
+    debug_assert!(rows == 0
+                  || indptr.len() > base + (rows - 1) * stride + 1);
+    let mut j0 = 0;
+    while j0 < p {
+        let tw = NR.min(p - j0);
+        for r in 0..rows {
+            let s = base + r * stride;
+            let (lo, hi) = (indptr[s], indptr[s + 1]);
+            let dst = &mut out[r * p + j0..r * p + j0 + tw];
+            for (&i, &v) in indices[lo..hi].iter().zip(&vals[lo..hi]) {
+                let i = i as usize;
+                axpy(dst, &w[i * p + j0..i * p + j0 + tw], v);
+            }
+        }
+        j0 += tw;
+    }
+}
+
+/// The matching scatter for weight gradients:
+/// `dw[i_e, :] += v_e * g[r, :]` over every CSR entry of every row —
+/// the exact transpose of [`spmm_gather`], same row addressing scheme.
+pub fn spmm_scatter(indptr: &[usize], indices: &[u32], vals: &[f32],
+                    rows: usize, base: usize, stride: usize, g: &[f32],
+                    p: usize, dw: &mut [f32]) {
+    debug_assert!(g.len() >= rows * p, "g is [rows, p]");
+    debug_assert!(rows == 0
+                  || indptr.len() > base + (rows - 1) * stride + 1);
+    for r in 0..rows {
+        let s = base + r * stride;
+        let (lo, hi) = (indptr[s], indptr[s + 1]);
+        let grow = &g[r * p..(r + 1) * p];
+        for (&i, &v) in indices[lo..hi].iter().zip(&vals[lo..hi]) {
+            let i = i as usize;
+            axpy(&mut dw[i * p..(i + 1) * p], grow, v);
+        }
+    }
+}
+
+/// Broadcast a bias row into every row of `out [rows, p]` — the usual
+/// prologue before a `beta = 1` [`gemm`]/[`spmm_gather`] accumulation.
+pub fn broadcast_bias(out: &mut [f32], bias: &[f32], rows: usize,
+                      p: usize) {
+    debug_assert_eq!(out.len(), rows * p);
+    debug_assert_eq!(bias.len(), p);
+    for r in 0..rows {
+        out[r * p..(r + 1) * p].copy_from_slice(bias);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The reference: naive i-k-j with the shared zero-skip rule.
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+        -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    c[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_mat(rng: &mut Rng, len: usize, sparsity: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.bool(sparsity) {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive_bitwise_across_shapes() {
+        let mut rng = Rng::new(41);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (1, 300, 70),
+                            (3, 5, 64), (4, 64, 65), (7, 300, 130),
+                            (9, 1, 9), (17, 257, 100)] {
+            let a = rand_mat(&mut rng, m * k, 0.3);
+            let b = rand_mat(&mut rng, k * n, 0.0);
+            let mut c = vec![0.0f32; m * n];
+            gemm(&a, &b, &mut c, m, k, n, 0.0);
+            assert_eq!(c, naive(&a, &b, m, k, n), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_beta_accumulates_and_scales() {
+        let mut rng = Rng::new(42);
+        let (m, k, n) = (5, 9, 70);
+        let a = rand_mat(&mut rng, m * k, 0.0);
+        let b = rand_mat(&mut rng, k * n, 0.0);
+        let seed = rand_mat(&mut rng, m * n, 0.0);
+        // beta = 1: accumulate on top of the seed
+        let mut c = seed.clone();
+        gemm(&a, &b, &mut c, m, k, n, 1.0);
+        let plain = naive(&a, &b, m, k, n);
+        for ((&got, &p), &s) in c.iter().zip(&plain).zip(&seed) {
+            assert_eq!(got, s + p);
+        }
+        // beta = 0 ignores (even non-finite) seed content
+        let mut c = vec![f32::NAN; m * n];
+        gemm(&a, &b, &mut c, m, k, n, 0.0);
+        assert_eq!(c, plain);
+    }
+
+    #[test]
+    fn packed_gemm_is_bit_identical_to_plain() {
+        let mut rng = Rng::new(43);
+        for &(m, k, n) in &[(1usize, 8usize, 64usize), (6, 100, 130),
+                            (13, 31, 7)] {
+            let a = rand_mat(&mut rng, m * k, 0.4);
+            let b = rand_mat(&mut rng, k * n, 0.0);
+            let bp = PackedB::pack(&b, k, n);
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            gemm(&a, &b, &mut c1, m, k, n, 0.0);
+            gemm_packed(&a, &bp, &mut c2, m, k, n, 0.0);
+            assert_eq!(c1, c2, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(44);
+        let (m, k, n) = (6usize, 40usize, 9usize);
+        let a = rand_mat(&mut rng, m * k, 0.0);
+        let bt = rand_mat(&mut rng, n * k, 0.0); // [n, k] = B^T
+        // build B = Bt^T and compare against the NN kernel numerically
+        let mut b = vec![0.0f32; k * n];
+        for j in 0..n {
+            for kk in 0..k {
+                b[kk * n + j] = bt[j * k + kk];
+            }
+        }
+        let mut c_nt = vec![0.0f32; m * n];
+        gemm_nt(&a, &bt, &mut c_nt, m, k, n, 0.0);
+        let c_nn = naive(&a, &b, m, k, n);
+        for (i, (&x, &y)) in c_nt.iter().zip(&c_nn).enumerate() {
+            assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                    "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn spmm_gather_matches_dense_gemm_bitwise() {
+        let mut rng = Rng::new(45);
+        let (rows, k, p) = (5usize, 30usize, 70usize);
+        let w = rand_mat(&mut rng, k * p, 0.0);
+        // CSR rows with ascending unique positions + the dense mirror
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        let mut dense = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            let nnz = rng.below(6);
+            let mut pos: Vec<usize> = rng.sample_distinct(k, nnz.min(k));
+            pos.sort_unstable();
+            for i in pos {
+                indices.push(i as u32);
+                vals.push(1.0);
+                dense[r * k + i] = 1.0;
+            }
+            indptr.push(indices.len());
+        }
+        let mut out_sparse = rand_mat(&mut rng, rows * p, 0.0);
+        let out_dense_seed = out_sparse.clone();
+        spmm_gather(&indptr, &indices, &vals, rows, 0, 1, &w, p,
+                    &mut out_sparse);
+        let mut out_dense = out_dense_seed;
+        gemm(&dense, &w, &mut out_dense, rows, k, p, 1.0);
+        assert_eq!(out_sparse, out_dense);
+    }
+
+    #[test]
+    fn spmm_scatter_matches_outer_accumulation() {
+        let mut rng = Rng::new(46);
+        let (rows, k, p) = (4usize, 12usize, 66usize);
+        let g = rand_mat(&mut rng, rows * p, 0.0);
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        let mut dense = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            let mut pos: Vec<usize> = rng.sample_distinct(k, 3);
+            pos.sort_unstable();
+            for i in pos {
+                indices.push(i as u32);
+                vals.push(1.0);
+                dense[r * k + i] = 1.0;
+            }
+            indptr.push(indices.len());
+        }
+        let mut dw_sparse = vec![0.0f32; k * p];
+        spmm_scatter(&indptr, &indices, &vals, rows, 0, 1, &g, p,
+                     &mut dw_sparse);
+        let mut dw_dense = vec![0.0f32; k * p];
+        gemm_tn_acc(&dense, &g, &mut dw_dense, rows, k, p);
+        assert_eq!(dw_sparse, dw_dense);
+    }
+
+    #[test]
+    fn strided_spmm_addresses_sequence_steps() {
+        // two rows, seq_len 3: step t = 1 must pick slots 1 and 4
+        let indptr = vec![0usize, 0, 2, 2, 3, 4, 4];
+        let indices = vec![0u32, 1, 0, 1];
+        let vals = vec![1.0f32, 2.0, 3.0, 4.0];
+        let w = vec![10.0f32, 100.0]; // [k = 2, p = 1]
+        let mut out = vec![0.0f32; 2];
+        spmm_gather(&indptr, &indices, &vals, 2, 1, 3, &w, 1, &mut out);
+        // row 0 step 1: 1.0 * w[0] + 2.0 * w[1]; row 1 step 1: 4.0 * w[1]
+        assert_eq!(out, vec![210.0, 400.0]);
+    }
+
+    #[test]
+    fn broadcast_bias_fills_every_row() {
+        let mut out = vec![0.0f32; 6];
+        broadcast_bias(&mut out, &[1.0, 2.0], 3, 2);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+}

@@ -1,13 +1,19 @@
-//! Linear algebra substrate: dense matrices, CSR sparse matrices,
-//! randomized SVD and top-k retrieval. Off the request path — this code
-//! constructs embeddings (PMI/CCA/ECOC); model compute runs in XLA.
+//! Linear algebra substrate: the blocked kernel layer every hot matmul
+//! routes through ([`gemm`]), dense matrices, CSR sparse matrices,
+//! randomized SVD and top-k retrieval. The kernel layer serves the
+//! native backend's request path (FF layers, GRU/LSTM gate projections,
+//! batched session stepping); the rest constructs embeddings
+//! (PMI/CCA/ECOC) off the request path.
 
 pub mod dense;
+pub mod gemm;
 pub mod knn;
 pub mod sparse;
 pub mod svd;
 
 pub use dense::{cosine, correlation, dot, Mat};
+pub use gemm::{gemm as gemm_nn, gemm_nt, gemm_tn_acc, matmul_into,
+               spmm_gather, spmm_scatter, PackedB};
 pub use knn::{argsort_desc, top_k, Metric};
 pub use sparse::Csr;
 pub use svd::{randomized_svd, LinOp, Svd};

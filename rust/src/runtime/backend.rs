@@ -17,11 +17,21 @@
 //! `[batch, seq_len, m_in]`) buffer themselves when the backend supports
 //! sparse input.
 //!
+//! Training targets cross the boundary as [`BatchTarget`]: sparse
+//! active-position rows mirroring the input side, so backends with
+//! sparse-aware losses never see a dense `[batch, m_out]` tensor;
+//! dense-only backends materialize it behind
+//! [`BatchTarget::dense_view`].
+//!
 //! Recurrent executions additionally expose a stateful single-timestep
 //! interface ([`Execution::begin_state`] / [`Execution::step`] /
 //! [`Execution::readout`]) so the serving layer can keep one
 //! [`HiddenState`] per live user session instead of re-running the whole
-//! window on every click.
+//! window on every click — plus the batched variant
+//! ([`Execution::step_batch`] / [`Execution::readout_batch`] over a
+//! [`BatchedHiddenState`]) that packs N live sessions' hidden states
+//! into one `[N, h]` matrix so a single blocked GEMM advances all of
+//! them (the micro-batching `serve::Server` scheduler's hot path).
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -215,6 +225,97 @@ impl HiddenState {
     pub fn rows(&self) -> usize {
         self.h.shape[0]
     }
+
+    /// Hidden width (the `h` of `[rows, h]`).
+    pub fn width(&self) -> usize {
+        self.h.shape[1]
+    }
+}
+
+/// N live sessions' hidden states packed into one `[N, h]` matrix (plus
+/// the `[N, h]` cell matrix for LSTM), so one blocked GEMM advances all
+/// of them per timestep. Built by [`BatchedHiddenState::gather`] from
+/// per-session [`HiddenState`]s, advanced by [`Execution::step_batch`],
+/// projected by [`Execution::readout_batch`], and scattered back row by
+/// row with [`BatchedHiddenState::copy_row_into`] — sessions may join
+/// and leave between steps (ragged micro-batches), the pack is rebuilt
+/// per flush from whatever sessions are live.
+#[derive(Clone, Debug)]
+pub struct BatchedHiddenState {
+    /// `[rows, hidden]` hidden activations
+    pub h: HostTensor,
+    /// `[rows, hidden]` LSTM cell state; `None` for GRU
+    pub c: Option<HostTensor>,
+}
+
+impl BatchedHiddenState {
+    pub fn rows(&self) -> usize {
+        self.h.shape[0]
+    }
+
+    /// Hidden width (the `h` of `[rows, h]`).
+    pub fn width(&self) -> usize {
+        self.h.shape[1]
+    }
+
+    /// Pack the given session states (in order, all their rows) into one
+    /// batched state. All inputs must agree on hidden width and on
+    /// carrying (or not carrying) a cell state.
+    pub fn gather(states: &[&HiddenState]) -> Result<BatchedHiddenState> {
+        let Some(first) = states.first() else {
+            bail!("gather needs at least one session state");
+        };
+        let width = first.width();
+        let has_c = first.c.is_some();
+        let total: usize = states.iter().map(|s| s.rows()).sum();
+        let mut h = HostTensor::zeros(&[total, width]);
+        let mut c = has_c.then(|| HostTensor::zeros(&[total, width]));
+        let mut row = 0usize;
+        for s in states {
+            if s.width() != width {
+                bail!("gather: hidden width {} != {}", s.width(), width);
+            }
+            if s.c.is_some() != has_c {
+                bail!("gather: mixed GRU/LSTM session states");
+            }
+            let r = s.rows();
+            h.data[row * width..(row + r) * width]
+                .copy_from_slice(&s.h.data);
+            if let (Some(c), Some(sc)) = (c.as_mut(), s.c.as_ref()) {
+                c.data[row * width..(row + r) * width]
+                    .copy_from_slice(&sc.data);
+            }
+            row += r;
+        }
+        Ok(BatchedHiddenState { h, c })
+    }
+
+    /// Scatter one batched row back into row `dst_row` of a per-session
+    /// state (the inverse of [`BatchedHiddenState::gather`] for that
+    /// row).
+    pub fn copy_row_into(&self, row: usize, dst: &mut HiddenState,
+                         dst_row: usize) -> Result<()> {
+        let width = self.width();
+        if dst.width() != width {
+            bail!("scatter: hidden width {} != {}", dst.width(), width);
+        }
+        if row >= self.rows() || dst_row >= dst.rows() {
+            bail!("scatter: row {row} -> {dst_row} out of range \
+                   ({} -> {})", self.rows(), dst.rows());
+        }
+        dst.h.data[dst_row * width..(dst_row + 1) * width]
+            .copy_from_slice(&self.h.data[row * width..(row + 1) * width]);
+        match (&self.c, &mut dst.c) {
+            (Some(src), Some(dc)) => {
+                dc.data[dst_row * width..(dst_row + 1) * width]
+                    .copy_from_slice(
+                        &src.data[row * width..(row + 1) * width]);
+            }
+            (None, None) => {}
+            _ => bail!("scatter: mixed GRU/LSTM session states"),
+        }
+        Ok(())
+    }
 }
 
 /// A minibatch input at the backend boundary.
@@ -274,6 +375,71 @@ impl BatchInput {
     }
 }
 
+/// A minibatch of training targets at the backend boundary — the output
+/// side's mirror of [`BatchInput`]. Sparse targets reuse the
+/// [`SparseBatch`] CSR layout with `m_in` holding `m_out`; rows past
+/// `rows()` are implicit all-zero rows (the tail padding of a short
+/// final minibatch), exactly like a zero-padded dense tensor.
+#[derive(Clone, Debug)]
+pub enum BatchTarget {
+    /// Active-position target rows (multi-hot item sets, one-hot class
+    /// labels).
+    Sparse(SparseBatch),
+    /// Fully materialized `[batch, m_out]` target tensor.
+    Dense(HostTensor),
+}
+
+impl BatchTarget {
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, BatchTarget::Sparse(_))
+    }
+
+    /// Explicitly encoded rows (dense tensors count their full batch).
+    pub fn rows(&self) -> usize {
+        match self {
+            BatchTarget::Sparse(sb) => sb.rows(),
+            BatchTarget::Dense(t) => t.shape.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// Check the target against an artifact's `[batch, m_out]` contract.
+    pub fn validate(&self, spec: &ArtifactSpec) -> Result<()> {
+        match self {
+            BatchTarget::Sparse(sb) => {
+                if sb.m_in != spec.m_out {
+                    bail!("sparse target m {} != artifact m_out {}",
+                          sb.m_in, spec.m_out);
+                }
+                if sb.rows() > spec.batch {
+                    bail!("sparse target has {} rows, artifact batch \
+                           is {}", sb.rows(), spec.batch);
+                }
+            }
+            BatchTarget::Dense(t) => {
+                if t.data.len() != spec.batch * spec.m_out {
+                    bail!("target tensor has {} elements, expected \
+                           {}x{}", t.data.len(), spec.batch, spec.m_out);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense `[batch, m_out]` view — borrowed when already dense,
+    /// materialized (inside the backend boundary) when sparse. For
+    /// backends whose losses cannot consume sparse targets (the wire
+    /// path, PJRT).
+    pub fn dense_view(&self, spec: &ArtifactSpec)
+        -> Result<Cow<'_, HostTensor>> {
+        self.validate(spec)?;
+        match self {
+            BatchTarget::Dense(t) => Ok(Cow::Borrowed(t)),
+            BatchTarget::Sparse(sb) => Ok(Cow::Owned(sb.to_dense(
+                spec.batch))),
+        }
+    }
+}
+
 /// A loaded/compiled artifact, ready to execute.
 ///
 /// `run` is the raw artifact-wire call (flat dense tensors, the layout
@@ -296,17 +462,21 @@ pub trait Execution: Send + Sync {
         false
     }
 
-    /// One optimizer step on `state`; returns the batch loss.
+    /// One optimizer step on `state`; returns the batch loss. Targets
+    /// arrive as a [`BatchTarget`] and may stay sparse into the backend
+    /// (the native losses consume active positions directly); this
+    /// default wire-path implementation densifies both sides.
     fn train_step(&self, state: &mut ModelState, x: &BatchInput,
-                  y: &HostTensor) -> Result<f32> {
+                  y: &BatchTarget) -> Result<f32> {
         let x_dense = x.dense_view(self.spec())?;
+        let y_dense = y.dense_view(self.spec())?;
         let p = state.params.len();
         let s = state.opt_state.len();
         let mut inputs: Vec<&HostTensor> = Vec::with_capacity(p + s + 2);
         inputs.extend(state.params.iter());
         inputs.extend(state.opt_state.iter());
         inputs.push(x_dense.as_ref());
-        inputs.push(y);
+        inputs.push(y_dense.as_ref());
         let mut outputs = self.run(&inputs, &[])?;
         if outputs.len() != p + s + 1 {
             bail!("train artifact '{}' returned {} outputs, expected {}",
@@ -382,6 +552,39 @@ pub trait Execution: Send + Sync {
         let _ = (params, state);
         bail!("artifact '{}' (family '{}') has no recurrent state",
               self.spec().name, self.spec().family)
+    }
+
+    /// Whether this execution implements the *batched* stateful
+    /// interface ([`Execution::step_batch`] /
+    /// [`Execution::readout_batch`]). Static per execution, like
+    /// [`Execution::supports_stepping`] — the server picks the
+    /// micro-batched scheduler once, not per flush.
+    fn supports_batched_stepping(&self) -> bool {
+        false
+    }
+
+    /// Advance every packed session in `state` by ONE timestep with a
+    /// single blocked GEMM over the `[N, h]` hidden matrix. `x` carries
+    /// one flat input row per packed session, exactly like
+    /// [`Execution::step`]; rows are independent, so stepping a
+    /// [`BatchedHiddenState::gather`] of N sessions is bit-identical to
+    /// N separate [`Execution::step`] calls on the per-session states.
+    fn step_batch(&self, params: &[HostTensor],
+                  state: &mut BatchedHiddenState, x: &BatchInput)
+        -> Result<()> {
+        let _ = (params, state, x);
+        bail!("artifact '{}' (family '{}') has no batched recurrent \
+               state", self.spec().name, self.spec().family)
+    }
+
+    /// Batched output-head projection: `[N, m_out]` over a packed
+    /// state, row-for-row identical to [`Execution::readout`] on the
+    /// individual sessions.
+    fn readout_batch(&self, params: &[HostTensor],
+                     state: &BatchedHiddenState) -> Result<HostTensor> {
+        let _ = (params, state);
+        bail!("artifact '{}' (family '{}') has no batched recurrent \
+               state", self.spec().name, self.spec().family)
     }
 
     /// Forward pass; returns the `[batch, m_out]` output tensor.
@@ -630,6 +833,59 @@ mod tests {
         sb.clear();
         assert_eq!(sb.rows(), 0);
         assert_eq!(sb.nnz(), 0);
+    }
+
+    #[test]
+    fn batch_target_sparse_view_and_validation() {
+        let spec = crate::runtime::manifest::test_ff_spec(4, &[3], 6, 2);
+        let mut sb = SparseBatch::new(6);
+        sb.push_row(&[(1, 1.0), (5, 1.0)]);
+        let y = BatchTarget::Sparse(sb);
+        assert!(y.is_sparse());
+        assert_eq!(y.rows(), 1);
+        let v = y.dense_view(&spec).unwrap();
+        assert_eq!(v.shape, vec![2, 6]);
+        assert_eq!(v.data[1], 1.0);
+        assert_eq!(v.data[5], 1.0);
+        // padded row all zero
+        assert!(v.data[6..].iter().all(|&x| x == 0.0));
+        // m mismatch rejected
+        let y = BatchTarget::Sparse(SparseBatch::new(5));
+        assert!(y.validate(&spec).is_err());
+        // dense wrong size rejected
+        let y = BatchTarget::Dense(HostTensor::zeros(&[2, 5]));
+        assert!(y.validate(&spec).is_err());
+        let y = BatchTarget::Dense(HostTensor::zeros(&[2, 6]));
+        assert!(y.validate(&spec).is_ok());
+        assert!(matches!(y.dense_view(&spec).unwrap(), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn batched_hidden_state_gather_scatter_round_trip() {
+        let mk = |vals: &[f32], cell: bool| HiddenState {
+            h: HostTensor::from_vec(&[1, 2], vals.to_vec()),
+            c: cell.then(|| HostTensor::from_vec(
+                &[1, 2], vals.iter().map(|v| v * 10.0).collect())),
+        };
+        let (a, b) = (mk(&[1.0, 2.0], true), mk(&[3.0, 4.0], true));
+        let packed = BatchedHiddenState::gather(&[&a, &b]).unwrap();
+        assert_eq!(packed.rows(), 2);
+        assert_eq!(packed.width(), 2);
+        assert_eq!(packed.h.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(packed.c.as_ref().unwrap().data,
+                   vec![10.0, 20.0, 30.0, 40.0]);
+        // scatter row 1 back into a fresh session slot
+        let mut dst = mk(&[0.0, 0.0], true);
+        packed.copy_row_into(1, &mut dst, 0).unwrap();
+        assert_eq!(dst.h.data, vec![3.0, 4.0]);
+        assert_eq!(dst.c.as_ref().unwrap().data, vec![30.0, 40.0]);
+        // mixed cell-state presence is rejected
+        let gru = mk(&[5.0, 6.0], false);
+        assert!(BatchedHiddenState::gather(&[&a, &gru]).is_err());
+        assert!(BatchedHiddenState::gather(&[]).is_err());
+        let mut gru_dst = mk(&[0.0, 0.0], false);
+        assert!(packed.copy_row_into(0, &mut gru_dst, 0).is_err());
+        assert!(packed.copy_row_into(2, &mut dst, 0).is_err());
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //!
 //! * [`backend`]: the [`Backend`]/[`Execution`] traits, the sparse-first
 //!   [`BatchInput`]/[`SparseBatch`]/[`SparseSeqBatch`] minibatch
-//!   representation, the stateful [`HiddenState`] serving interface, and
-//!   the [`Runtime`] façade (manifest + backend + execution cache).
+//!   representation and its target-side mirror [`BatchTarget`], the
+//!   stateful [`HiddenState`] serving interface plus the micro-batched
+//!   [`BatchedHiddenState`] variant, and the [`Runtime`] façade
+//!   (manifest + backend + execution cache).
 //! * [`native`]: pure-Rust interpreter covering the whole task grid —
 //!   sparse-gather FF layers ([`NativeExecution`]) and GRU/LSTM cells
 //!   with truncated BPTT ([`RecurrentExecution`]), the analytic losses,
@@ -24,8 +26,9 @@ pub mod tensor;
 #[cfg(feature = "xla")]
 pub mod xla;
 
-pub use backend::{Backend, BatchInput, Execution, HiddenState, Runtime,
-                  SparseBatch, SparseSeqBatch};
+pub use backend::{Backend, BatchInput, BatchTarget, BatchedHiddenState,
+                  Execution, HiddenState, Runtime, SparseBatch,
+                  SparseSeqBatch};
 pub use manifest::{round_m, test_ff_spec, test_rnn_spec, ArtifactSpec,
                    Manifest, OptParams, TaskSpec, TensorSpec};
 pub use native::{NativeBackend, NativeExecution, RecurrentExecution};

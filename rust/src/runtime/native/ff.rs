@@ -9,17 +9,32 @@
 //! The sparse input path turns the first-layer matmul into a
 //! gather-accumulate over each row's active positions — O(batch*c*k*h)
 //! instead of O(batch*m_in*h) — and the first-layer weight gradient into
-//! the matching scatter. Accumulation order equals the dense path's
-//! (positions ascending), so sparse and dense results agree bit-for-bit.
+//! the matching scatter. All of it runs on the blocked kernel layer
+//! ([`crate::linalg::gemm`]): dense layers are `gemm` calls, the sparse
+//! first layer is one column-tiled `spmm_gather` over the whole batch's
+//! active positions, gradients are `gemm_tn_acc`/`spmm_scatter`.
+//! Accumulation order equals the dense path's (positions ascending), so
+//! sparse and dense results agree bit-for-bit.
 
 use anyhow::{bail, Result};
 
-use super::{accumulate_outer, ce_loss_grad, cosine_loss_grad,
-            optimizer_step, softmax_in_place};
+use super::{loss_and_grad, optimizer_step, softmax_in_place};
+use crate::linalg::gemm::{broadcast_bias, gemm, gemm_nt_relu_masked,
+                          gemm_tn_acc, spmm_gather, spmm_scatter};
 use crate::model::ModelState;
-use crate::runtime::backend::{BatchInput, Execution, SparseBatch};
+use crate::runtime::backend::{BatchInput, BatchTarget, Execution,
+                              SparseBatch};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::{HostTensor, HostTensorI32};
+
+#[inline]
+fn relu_in_place(v: &mut [f32]) {
+    for o in v.iter_mut() {
+        if *o < 0.0 {
+            *o = 0.0;
+        }
+    }
+}
 
 /// One interpretable FF artifact: weights arrive per call (the wire
 /// contract), so the execution itself is stateless and trivially shared
@@ -86,63 +101,34 @@ impl NativeExecution {
     }
 
     /// `out[r] = relu?(h[r] @ w + b)` for `bsz` rows; `w` is `[n, p]`
-    /// row-major. Zero activations are skipped (post-ReLU activations and
-    /// multi-hot inputs are mostly zero).
+    /// row-major. One blocked `gemm` over the batch (zero activations
+    /// skipped inside the kernel — post-ReLU activations and multi-hot
+    /// inputs are mostly zero).
     fn dense_layer(h: &[f32], bsz: usize, n: usize, w: &[f32], b: &[f32],
                    p: usize, relu: bool) -> Vec<f32> {
         debug_assert_eq!(h.len(), bsz * n);
         debug_assert_eq!(w.len(), n * p);
         let mut out = vec![0.0f32; bsz * p];
-        for r in 0..bsz {
-            let row = &h[r * n..(r + 1) * n];
-            let dst = &mut out[r * p..(r + 1) * p];
-            dst.copy_from_slice(b);
-            for (kk, &a) in row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let wrow = &w[kk * p..(kk + 1) * p];
-                for (o, &wv) in dst.iter_mut().zip(wrow) {
-                    *o += a * wv;
-                }
-            }
-            if relu {
-                for o in dst.iter_mut() {
-                    if *o < 0.0 {
-                        *o = 0.0;
-                    }
-                }
-            }
+        broadcast_bias(&mut out, b, bsz, p);
+        gemm(h, w, &mut out, bsz, n, p, 1.0);
+        if relu {
+            relu_in_place(&mut out);
         }
         out
     }
 
-    /// First layer from sparse rows: per-row gather-accumulate over the
-    /// active positions, O(nnz * p). Rows past `sb.rows()` are the
-    /// zero-input (bias-only) padding rows of the static batch.
+    /// First layer from sparse rows: one column-tiled `spmm_gather` over
+    /// the whole batch's active positions, O(nnz * p). Rows past
+    /// `sb.rows()` are the zero-input (bias-only) padding rows of the
+    /// static batch.
     fn sparse_first_layer(sb: &SparseBatch, bsz: usize, w: &[f32],
                           b: &[f32], p: usize, relu: bool) -> Vec<f32> {
         let mut out = vec![0.0f32; bsz * p];
-        for r in 0..bsz {
-            let dst = &mut out[r * p..(r + 1) * p];
-            dst.copy_from_slice(b);
-            if r < sb.rows() {
-                let (idx, wgt) = sb.row(r);
-                for (&i, &v) in idx.iter().zip(wgt) {
-                    let i = i as usize;
-                    let wrow = &w[i * p..(i + 1) * p];
-                    for (o, &wv) in dst.iter_mut().zip(wrow) {
-                        *o += v * wv;
-                    }
-                }
-            }
-            if relu {
-                for o in dst.iter_mut() {
-                    if *o < 0.0 {
-                        *o = 0.0;
-                    }
-                }
-            }
+        broadcast_bias(&mut out, b, bsz, p);
+        spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
+                    bsz.min(sb.rows()), 0, 1, w, p, &mut out);
+        if relu {
+            relu_in_place(&mut out);
         }
         out
     }
@@ -227,18 +213,13 @@ impl NativeExecution {
     }
 
     fn train_step_impl(&self, state: &mut ModelState, x: &BatchInput,
-                       y: &HostTensor) -> Result<f32> {
+                       y: &BatchTarget) -> Result<f32> {
         let bsz = self.spec.batch;
         let m_out = self.spec.m_out;
-        if y.data.len() != bsz * m_out {
-            bail!("target tensor has {} elements, expected {}x{}",
-                  y.data.len(), bsz, m_out);
-        }
+        y.validate(&self.spec)?;
         let (hidden, logits) = self.forward_rows(&state.params, x, bsz)?;
-        let (loss, mut g) = match self.spec.loss.as_str() {
-            "softmax_ce" => ce_loss_grad(&logits, &y.data, bsz, m_out),
-            _ => cosine_loss_grad(&logits, &y.data, bsz, m_out),
-        };
+        let (loss, mut g) =
+            loss_and_grad(&self.spec.loss, &logits, y, bsz, m_out)?;
 
         // backprop through the layers, newest first
         let nl = self.dims.len() - 1;
@@ -258,20 +239,12 @@ impl NativeExecution {
                 match x {
                     BatchInput::Sparse(sb) => {
                         // scatter: dW0[i] += v * g_row, O(nnz * p)
-                        for r in 0..sb.rows() {
-                            let (idx, wgt) = sb.row(r);
-                            let grow = &g[r * p..(r + 1) * p];
-                            for (&i, &v) in idx.iter().zip(wgt) {
-                                let i = i as usize;
-                                let dst = &mut dw[i * p..(i + 1) * p];
-                                for (o, &gv) in dst.iter_mut().zip(grow) {
-                                    *o += v * gv;
-                                }
-                            }
-                        }
+                        spmm_scatter(&sb.indptr, &sb.indices,
+                                     &sb.weights, sb.rows(), 0, 1, &g, p,
+                                     &mut dw);
                     }
                     BatchInput::Dense(t) => {
-                        accumulate_outer(&t.data, &g, bsz, n, p, &mut dw);
+                        gemm_tn_acc(&t.data, &g, &mut dw, bsz, n, p);
                     }
                     BatchInput::SparseSeq(_) => {
                         bail!("ff artifact '{}' takes flat batches",
@@ -279,29 +252,14 @@ impl NativeExecution {
                     }
                 }
             } else {
-                accumulate_outer(&hidden[layer - 1], &g, bsz, n, p,
-                                 &mut dw);
+                gemm_tn_acc(&hidden[layer - 1], &g, &mut dw, bsz, n, p);
             }
             if layer > 0 {
                 // g_prev = (g @ W^T) * relu'(h): only where h > 0
                 let w = &state.params[2 * layer].data;
-                let h = &hidden[layer - 1];
                 let mut gp = vec![0.0f32; bsz * n];
-                for r in 0..bsz {
-                    let grow = &g[r * p..(r + 1) * p];
-                    let hrow = &h[r * n..(r + 1) * n];
-                    let dst = &mut gp[r * n..(r + 1) * n];
-                    for (kk, d) in dst.iter_mut().enumerate() {
-                        if hrow[kk] > 0.0 {
-                            let wrow = &w[kk * p..(kk + 1) * p];
-                            let mut acc = 0.0f32;
-                            for (&gv, &wv) in grow.iter().zip(wrow) {
-                                acc += gv * wv;
-                            }
-                            *d = acc;
-                        }
-                    }
-                }
+                gemm_nt_relu_masked(&g, w, &hidden[layer - 1], &mut gp,
+                                    bsz, p, n);
                 g = gp;
             }
             grads[2 * layer] = dw;
@@ -328,7 +286,7 @@ impl Execution for NativeExecution {
     }
 
     fn train_step(&self, state: &mut ModelState, x: &BatchInput,
-                  y: &HostTensor) -> Result<f32> {
+                  y: &BatchTarget) -> Result<f32> {
         self.train_step_impl(state, x, y)
     }
 
@@ -353,8 +311,8 @@ impl Execution for NativeExecution {
                         .collect(),
                 };
                 let x = BatchInput::Dense(inputs[p + s].clone());
-                let loss =
-                    self.train_step_impl(&mut state, &x, inputs[p + s + 1])?;
+                let y = BatchTarget::Dense(inputs[p + s + 1].clone());
+                let loss = self.train_step_impl(&mut state, &x, &y)?;
                 let mut out = state.params;
                 out.append(&mut state.opt_state);
                 out.push(HostTensor::scalar(loss));
@@ -491,7 +449,8 @@ mod tests {
 
         // typed call on a fresh copy of the same state
         let typed_loss = ex
-            .train_step(&mut state, &BatchInput::Dense(x.clone()), &y)
+            .train_step(&mut state, &BatchInput::Dense(x.clone()),
+                        &BatchTarget::Dense(y.clone()))
             .unwrap();
         assert_eq!(wire_loss, typed_loss);
         assert_eq!(wire_params, state.params);

@@ -10,8 +10,12 @@
 //!   stateful step/readout serving interface ([`RecurrentExecution`]).
 //!
 //! Both share the loss functions (softmax-CE over the normalised
-//! multi-hot target, cosine proximity) and the four optimizers of
-//! python/compile/optim.py, implemented here as free functions. The
+//! multi-hot target, cosine proximity — each with a sparse-target arm
+//! consuming [`BatchTarget::Sparse`] active positions directly, see
+//! [`loss_and_grad`]) and the four optimizers of
+//! python/compile/optim.py, implemented here as free functions. Hot
+//! matmuls route through the blocked kernel layer in
+//! [`crate::linalg::gemm`]. The
 //! default build therefore trains, evaluates and serves every task —
 //! ml/msd/amz/bc/cade *and* yc/ptb — without the XLA toolchain; the PJRT
 //! path stays behind the `xla` feature for AOT artifact execution.
@@ -32,7 +36,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, Execution};
+use super::backend::{Backend, BatchTarget, Execution, SparseBatch};
 use super::manifest::{ArtifactSpec, Manifest};
 use crate::model::ModelState;
 
@@ -78,6 +82,32 @@ pub(crate) fn softmax_in_place(z: &mut [f32]) {
     }
 }
 
+/// Loss + gradient dispatch over the [`BatchTarget`] representation:
+/// sparse targets feed the active-position loss arms directly (the
+/// dense `[batch, m_out]` tensor never materializes), dense targets the
+/// slice arms. The sparse arms accumulate in the same order as the
+/// dense ones over the equivalent zero-padded rows, so both
+/// representations produce bit-identical losses and gradients.
+pub(crate) fn loss_and_grad(loss: &str, logits: &[f32], y: &BatchTarget,
+                            bsz: usize, m: usize)
+    -> Result<(f32, Vec<f32>)> {
+    Ok(match (loss, y) {
+        ("softmax_ce", BatchTarget::Dense(t)) => {
+            ce_loss_grad(logits, &t.data, bsz, m)
+        }
+        ("softmax_ce", BatchTarget::Sparse(sb)) => {
+            ce_loss_grad_sparse(logits, sb, bsz, m)
+        }
+        ("cosine", BatchTarget::Dense(t)) => {
+            cosine_loss_grad(logits, &t.data, bsz, m)
+        }
+        ("cosine", BatchTarget::Sparse(sb)) => {
+            cosine_loss_grad_sparse(logits, sb, bsz, m)
+        }
+        (other, _) => bail!("native backend: unknown loss '{other}'"),
+    })
+}
+
 /// Softmax-CE loss over targets normalised to a distribution, and its
 /// gradient wrt the logits:
 ///   L = -mean_r sum_j (y/max(sum y, 1))_j * log_softmax(z)_j
@@ -104,6 +134,56 @@ pub(crate) fn ce_loss_grad(logits: &[f32], y: &[f32], bsz: usize,
         for j in 0..m {
             let pj = (z[j] - lse).exp();
             let tj = yr[j] / denom;
+            grow[j] = (tsum * pj - tj) * inv_b;
+            if tj > 0.0 {
+                loss -= tj as f64 * (z[j] - lse) as f64;
+            }
+        }
+    }
+    ((loss / bsz as f64) as f32, g)
+}
+
+/// [`ce_loss_grad`] over sparse active-position target rows: O(m) for
+/// the softmax term plus O(nnz) for the target corrections, instead of
+/// O(m) target reads — and no dense `[batch, m_out]` tensor anywhere.
+/// Rows at/past `sb.rows()` are implicit all-zero target rows (T = 0:
+/// no loss, pure-softmax gradient), like the dense path's padding rows.
+pub(crate) fn ce_loss_grad_sparse(logits: &[f32], sb: &SparseBatch,
+                                  bsz: usize, m: usize)
+    -> (f32, Vec<f32>) {
+    debug_assert_eq!(sb.m_in, m);
+    debug_assert!(sb.rows() <= bsz);
+    let mut g = vec![0.0f32; bsz * m];
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / bsz as f32;
+    for r in 0..bsz {
+        let z = &logits[r * m..(r + 1) * m];
+        let (idx, wgt) = if r < sb.rows() {
+            sb.row(r)
+        } else {
+            (&[][..], &[][..])
+        };
+        let ysum: f32 = wgt.iter().sum();
+        let denom = ysum.max(1.0);
+        let tsum = ysum / denom;
+        let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut esum = 0.0f32;
+        for &v in z {
+            esum += (v - zmax).exp();
+        }
+        let lse = zmax + esum.ln();
+        let grow = &mut g[r * m..(r + 1) * m];
+        // softmax term everywhere (the dense arm's tj = 0 case, which
+        // subtracts an exact zero — bit-identical), then patch the
+        // active positions with the full expression
+        for (j, gv) in grow.iter_mut().enumerate() {
+            let pj = (z[j] - lse).exp();
+            *gv = (tsum * pj - 0.0) * inv_b;
+        }
+        for (&i, &yv) in idx.iter().zip(wgt) {
+            let j = i as usize;
+            let pj = (z[j] - lse).exp();
+            let tj = yv / denom;
             grow[j] = (tsum * pj - tj) * inv_b;
             if tj > 0.0 {
                 loss -= tj as f64 * (z[j] - lse) as f64;
@@ -146,26 +226,55 @@ pub(crate) fn cosine_loss_grad(out: &[f32], y: &[f32], bsz: usize,
     ((loss / bsz as f64) as f32, g)
 }
 
-/// `dw += h^T @ g` exploiting sparsity in `h`: for every nonzero h[r, kk],
-/// add `h[r, kk] * g[r, :]` into row kk of `dw`.
-pub(crate) fn accumulate_outer(h: &[f32], g: &[f32], bsz: usize, n: usize,
-                               p: usize, dw: &mut [f32]) {
-    debug_assert_eq!(h.len(), bsz * n);
-    debug_assert_eq!(g.len(), bsz * p);
-    debug_assert_eq!(dw.len(), n * p);
+/// [`cosine_loss_grad`] over sparse active-position target rows: the
+/// target norm and inner product come from the active entries, the
+/// output norm from the (dense) outputs; no dense target row is read.
+/// Rows at/past `sb.rows()` are implicit all-zero targets, matching the
+/// dense path's zero-padded rows.
+pub(crate) fn cosine_loss_grad_sparse(out: &[f32], sb: &SparseBatch,
+                                      bsz: usize, m: usize)
+    -> (f32, Vec<f32>) {
+    const EPS: f32 = 1e-8;
+    debug_assert_eq!(sb.m_in, m);
+    debug_assert!(sb.rows() <= bsz);
+    let mut g = vec![0.0f32; bsz * m];
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / bsz as f32;
     for r in 0..bsz {
-        let hrow = &h[r * n..(r + 1) * n];
-        let grow = &g[r * p..(r + 1) * p];
-        for (kk, &hv) in hrow.iter().enumerate() {
-            if hv == 0.0 {
-                continue;
-            }
-            let dst = &mut dw[kk * p..(kk + 1) * p];
-            for (o, &gv) in dst.iter_mut().zip(grow) {
-                *o += hv * gv;
-            }
+        let o = &out[r * m..(r + 1) * m];
+        let (idx, wgt) = if r < sb.rows() {
+            sb.row(r)
+        } else {
+            (&[][..], &[][..])
+        };
+        let mut n = 0.0f32;
+        let mut aa = 0.0f32;
+        let mut bb = 0.0f32;
+        for &ov in o {
+            aa += ov * ov;
+        }
+        for (&i, &yv) in idx.iter().zip(wgt) {
+            n += o[i as usize] * yv;
+            bb += yv * yv;
+        }
+        let a = aa.sqrt();
+        let b = bb.sqrt();
+        let den = a * b + EPS;
+        loss += (1.0 - n / den) as f64;
+        let a_safe = a.max(1e-12);
+        let grow = &mut g[r * m..(r + 1) * m];
+        // yr[j] = 0 term everywhere, then patch the active positions
+        for (j, gv) in grow.iter_mut().enumerate() {
+            *gv = -(0.0 / den - n * b * o[j] / (a_safe * den * den))
+                * inv_b;
+        }
+        for (&i, &yv) in idx.iter().zip(wgt) {
+            let j = i as usize;
+            grow[j] = -(yv / den - n * b * o[j] / (a_safe * den * den))
+                * inv_b;
         }
     }
+    ((loss / bsz as f64) as f32, g)
 }
 
 /// One optimizer update, mirroring python/compile/optim.py: state layout
@@ -304,6 +413,35 @@ mod tests {
         // zero-grad entries untouched
         assert_eq!(state.params[0].data[2], p0[2]);
         assert_eq!(state.opt_state[0].data[0], 1.0);
+    }
+
+    #[test]
+    fn sparse_and_dense_loss_arms_agree_bitwise() {
+        let mut rng = Rng::new(0x10A5);
+        let (bsz, m) = (4usize, 9usize);
+        let logits: Vec<f32> =
+            (0..bsz * m).map(|_| rng.normal() as f32).collect();
+        // rows 0..2 carry target bits, row 3 is an all-zero padding row
+        let mut sb = SparseBatch::new(m);
+        let mut dense = vec![0.0f32; bsz * m];
+        for r in 0..3 {
+            let mut pos: Vec<usize> = rng.sample_distinct(m, 2);
+            pos.sort_unstable();
+            let row: Vec<(u32, f32)> =
+                pos.iter().map(|&j| (j as u32, 1.0)).collect();
+            sb.push_row(&row);
+            for &j in &pos {
+                dense[r * m + j] = 1.0;
+            }
+        }
+        let (l_d, g_d) = ce_loss_grad(&logits, &dense, bsz, m);
+        let (l_s, g_s) = ce_loss_grad_sparse(&logits, &sb, bsz, m);
+        assert_eq!(l_d, l_s);
+        assert_eq!(g_d, g_s);
+        let (l_d, g_d) = cosine_loss_grad(&logits, &dense, bsz, m);
+        let (l_s, g_s) = cosine_loss_grad_sparse(&logits, &sb, bsz, m);
+        assert_eq!(l_d, l_s);
+        assert_eq!(g_d, g_s);
     }
 
     #[test]

@@ -23,18 +23,33 @@
 //! Accumulation order equals the dense path's (positions ascending), so
 //! sparse and dense sequence batches agree bit-for-bit.
 //!
+//! Every hot matmul routes through the blocked kernel layer
+//! ([`crate::linalg::gemm`]): the recurrent `h @ wh` projection runs as
+//! one blocked GEMM per timestep over a [`PackedB`] panel of `wh`
+//! (packed once per window, reused across all `seq_len` steps), the
+//! sparse input gather is a column-tiled `spmm_gather` over the whole
+//! batch's active positions, and the backward projections are
+//! `gemm_nt`/`gemm_tn_acc`. The stateful serving interface comes in
+//! both per-session ([`Execution::step`]/[`Execution::readout`]) and
+//! batched ([`Execution::step_batch`]/[`Execution::readout_batch`])
+//! forms; both share one implementation, so stepping N packed sessions
+//! is bit-identical to N separate single-session steps.
+//!
 //! Backward is truncated BPTT: gradients flow through the full
 //! `seq_len` window (the truncation boundary is the window itself —
 //! state does not carry across minibatches, matching the JAX artifact's
 //! `scan` over a fixed window). Losses and optimizer updates are the
 //! shared ones in [`super`].
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::{accumulate_outer, ce_loss_grad, cosine_loss_grad,
-            optimizer_step, softmax_in_place};
+use super::{loss_and_grad, optimizer_step, softmax_in_place};
+use crate::linalg::gemm::{broadcast_bias, gemm, gemm_nt, gemm_packed,
+                          gemm_tn_acc, spmm_gather, spmm_scatter,
+                          PackedB};
 use crate::model::ModelState;
-use crate::runtime::backend::{BatchInput, Execution, HiddenState};
+use crate::runtime::backend::{BatchInput, BatchTarget,
+                              BatchedHiddenState, Execution, HiddenState};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::{HostTensor, HostTensorI32};
 
@@ -85,49 +100,6 @@ struct Trace {
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
-}
-
-/// `out[r] += a[r] @ w`: `a` is `[rows, n]`, `w` is `[n, p]` row-major.
-/// Zero activations are skipped (padding rows, zero hidden states).
-fn matmul_acc(a: &[f32], rows: usize, n: usize, w: &[f32], p: usize,
-              out: &mut [f32]) {
-    debug_assert_eq!(a.len(), rows * n);
-    debug_assert_eq!(w.len(), n * p);
-    debug_assert_eq!(out.len(), rows * p);
-    for r in 0..rows {
-        let row = &a[r * n..(r + 1) * n];
-        let dst = &mut out[r * p..(r + 1) * p];
-        for (kk, &v) in row.iter().enumerate() {
-            if v == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * p..(kk + 1) * p];
-            for (o, &wv) in dst.iter_mut().zip(wrow) {
-                *o += v * wv;
-            }
-        }
-    }
-}
-
-/// `out[r] += g[r] @ w^T`: `g` is `[rows, p]`, `w` is `[n, p]` row-major,
-/// `out` is `[rows, n]`.
-fn matmul_wt(g: &[f32], rows: usize, p: usize, w: &[f32], n: usize,
-             out: &mut [f32]) {
-    debug_assert_eq!(g.len(), rows * p);
-    debug_assert_eq!(w.len(), n * p);
-    debug_assert_eq!(out.len(), rows * n);
-    for r in 0..rows {
-        let grow = &g[r * p..(r + 1) * p];
-        let dst = &mut out[r * n..(r + 1) * n];
-        for (kk, d) in dst.iter_mut().enumerate() {
-            let wrow = &w[kk * p..(kk + 1) * p];
-            let mut acc = 0.0f32;
-            for (&gv, &wv) in grow.iter().zip(wrow) {
-                acc += gv * wv;
-            }
-            *d += acc;
-        }
-    }
 }
 
 impl RecurrentExecution {
@@ -188,29 +160,20 @@ impl RecurrentExecution {
     }
 
     /// Gate pre-activations for timestep `t` of a sequence batch:
-    /// `xg[r] = bg + x[r, t] @ wx`, gathered over the step's active
-    /// positions. Rows at/past a sparse batch's row count are the
-    /// zero-input padding rows of the static batch (xg = bg).
+    /// `xg[r] = bg + x[r, t] @ wx` — one column-tiled `spmm_gather` over
+    /// the whole batch's active positions at step `t`. Rows at/past a
+    /// sparse batch's row count are the zero-input padding rows of the
+    /// static batch (xg = bg).
     fn input_gates_seq(&self, wx: &[f32], bg: &[f32], x: &BatchInput,
                        t: usize, rows: usize) -> Result<Vec<f32>> {
         let gh = self.gates * self.hidden;
         let mut xg = vec![0.0f32; rows * gh];
-        for r in 0..rows {
-            xg[r * gh..(r + 1) * gh].copy_from_slice(bg);
-        }
+        broadcast_bias(&mut xg, bg, rows, gh);
         match x {
             BatchInput::SparseSeq(sb) => {
-                for r in 0..rows.min(sb.rows()) {
-                    let (idx, wgt) = sb.step(r, t);
-                    let dst = &mut xg[r * gh..(r + 1) * gh];
-                    for (&i, &v) in idx.iter().zip(wgt) {
-                        let i = i as usize;
-                        let wrow = &wx[i * gh..(i + 1) * gh];
-                        for (o, &wv) in dst.iter_mut().zip(wrow) {
-                            *o += v * wv;
-                        }
-                    }
-                }
+                spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
+                            rows.min(sb.rows()), t, sb.seq_len, wx, gh,
+                            &mut xg);
             }
             BatchInput::Dense(xt) => {
                 let m = self.spec.m_in;
@@ -240,14 +203,13 @@ impl RecurrentExecution {
     }
 
     /// Gate pre-activations from ONE flat input row per session (the
-    /// [`Execution::step`] path): `xg[r] = bg + x[r] @ wx`.
+    /// [`Execution::step`]/[`Execution::step_batch`] path):
+    /// `xg[r] = bg + x[r] @ wx`, one gather/GEMM over all sessions.
     fn input_gates_flat(&self, wx: &[f32], bg: &[f32], x: &BatchInput,
                         rows: usize) -> Result<Vec<f32>> {
         let gh = self.gates * self.hidden;
         let mut xg = vec![0.0f32; rows * gh];
-        for r in 0..rows {
-            xg[r * gh..(r + 1) * gh].copy_from_slice(bg);
-        }
+        broadcast_bias(&mut xg, bg, rows, gh);
         match x {
             BatchInput::Sparse(sb) => {
                 if sb.m_in != self.spec.m_in {
@@ -258,17 +220,8 @@ impl RecurrentExecution {
                     bail!("step batch has {} rows, hidden state has {rows}",
                           sb.rows());
                 }
-                for r in 0..sb.rows() {
-                    let (idx, wgt) = sb.row(r);
-                    let dst = &mut xg[r * gh..(r + 1) * gh];
-                    for (&i, &v) in idx.iter().zip(wgt) {
-                        let i = i as usize;
-                        let wrow = &wx[i * gh..(i + 1) * gh];
-                        for (o, &wv) in dst.iter_mut().zip(wrow) {
-                            *o += v * wv;
-                        }
-                    }
-                }
+                spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
+                            sb.rows(), 0, 1, wx, gh, &mut xg);
             }
             BatchInput::Dense(xt) => {
                 let m = self.spec.m_in;
@@ -276,19 +229,7 @@ impl RecurrentExecution {
                     bail!("dense step batch has {} elements, expected \
                            {rows}x{m}", xt.data.len());
                 }
-                for r in 0..rows {
-                    let row = &xt.data[r * m..(r + 1) * m];
-                    let dst = &mut xg[r * gh..(r + 1) * gh];
-                    for (kk, &v) in row.iter().enumerate() {
-                        if v == 0.0 {
-                            continue;
-                        }
-                        let wrow = &wx[kk * gh..(kk + 1) * gh];
-                        for (o, &wv) in dst.iter_mut().zip(wrow) {
-                            *o += v * wv;
-                        }
-                    }
-                }
+                gemm(&xt.data, wx, &mut xg, rows, m, gh, 1.0);
             }
             BatchInput::SparseSeq(_) => {
                 bail!("step consumes one flat input row per session, \
@@ -429,8 +370,11 @@ impl RecurrentExecution {
         let h = self.hidden;
         let gh = self.gates * h;
         let wx = &params[0].data;
-        let wh = &params[1].data;
         let bg = &params[2].data;
+        // wh is reused every timestep of the window: pack it once into
+        // contiguous column tiles so all seq_len GEMMs stream linearly
+        // (bit-identical to the unpacked kernel, see linalg::gemm)
+        let wh_packed = PackedB::pack(&params[1].data, h, gh);
         let mut hstate = vec![0.0f32; rows * h];
         let mut cstate = vec![0.0f32; rows * h];
         let mut trace = Trace {
@@ -438,10 +382,10 @@ impl RecurrentExecution {
             steps: Vec::new(),
             h_last: Vec::new(),
         };
+        let mut hg = vec![0.0f32; rows * gh];
         for t in 0..self.spec.seq_len {
             let xg = self.input_gates_seq(wx, bg, x, t, rows)?;
-            let mut hg = vec![0.0f32; rows * gh];
-            matmul_acc(&hstate, rows, h, wh, gh, &mut hg);
+            gemm_packed(&hstate, &wh_packed, &mut hg, rows, h, gh, 0.0);
             if keep_trace {
                 trace.h_prev.push(hstate.clone());
             }
@@ -456,10 +400,8 @@ impl RecurrentExecution {
         let wo = &params[3].data;
         let bo = &params[4].data;
         let mut logits = vec![0.0f32; rows * m_out];
-        for r in 0..rows {
-            logits[r * m_out..(r + 1) * m_out].copy_from_slice(bo);
-        }
-        matmul_acc(&hstate, rows, h, wo, m_out, &mut logits);
+        broadcast_bias(&mut logits, bo, rows, m_out);
+        gemm(&hstate, wo, &mut logits, rows, h, m_out, 1.0);
         if keep_trace {
             trace.h_last = hstate;
             Ok((Some(trace), logits))
@@ -504,17 +446,9 @@ impl RecurrentExecution {
         let gh = self.gates * self.hidden;
         match x {
             BatchInput::SparseSeq(sb) => {
-                for r in 0..rows.min(sb.rows()) {
-                    let (idx, wgt) = sb.step(r, t);
-                    let grow = &dxg[r * gh..(r + 1) * gh];
-                    for (&i, &v) in idx.iter().zip(wgt) {
-                        let i = i as usize;
-                        let dst = &mut dwx[i * gh..(i + 1) * gh];
-                        for (o, &gv) in dst.iter_mut().zip(grow) {
-                            *o += v * gv;
-                        }
-                    }
-                }
+                spmm_scatter(&sb.indptr, &sb.indices, &sb.weights,
+                             rows.min(sb.rows()), t, sb.seq_len, dxg, gh,
+                             dwx);
             }
             BatchInput::Dense(xt) => {
                 let m = self.spec.m_in;
@@ -545,28 +479,22 @@ impl RecurrentExecution {
     /// Forward + truncated BPTT + optimizer update; returns the batch
     /// loss at the pre-update parameters.
     fn train_step_impl(&self, state: &mut ModelState, x: &BatchInput,
-                       y: &HostTensor) -> Result<f32> {
+                       y: &BatchTarget) -> Result<f32> {
         let bsz = self.spec.batch;
         let m_out = self.spec.m_out;
-        if y.data.len() != bsz * m_out {
-            bail!("target tensor has {} elements, expected {}x{}",
-                  y.data.len(), bsz, m_out);
-        }
+        y.validate(&self.spec)?;
         let (trace, logits) =
             self.forward_seq(&state.params, x, bsz, true)?;
         let trace = trace.expect("trace kept");
-        let (loss, dlogits) = match self.spec.loss.as_str() {
-            "softmax_ce" => ce_loss_grad(&logits, &y.data, bsz, m_out),
-            _ => cosine_loss_grad(&logits, &y.data, bsz, m_out),
-        };
+        let (loss, dlogits) =
+            loss_and_grad(&self.spec.loss, &logits, y, bsz, m_out)?;
 
         let h = self.hidden;
         let gh = self.gates * h;
 
         // output head gradients
         let mut dwo = vec![0.0f32; h * m_out];
-        accumulate_outer(&trace.h_last, &dlogits, bsz, h, m_out,
-                         &mut dwo);
+        gemm_tn_acc(&trace.h_last, &dlogits, &mut dwo, bsz, h, m_out);
         let mut dbo = vec![0.0f32; m_out];
         for r in 0..bsz {
             let grow = &dlogits[r * m_out..(r + 1) * m_out];
@@ -576,8 +504,8 @@ impl RecurrentExecution {
         }
         // dL/dh_T = dlogits @ wo^T
         let mut dh = vec![0.0f32; bsz * h];
-        matmul_wt(&dlogits, bsz, m_out, &state.params[3].data, h,
-                  &mut dh);
+        gemm_nt(&dlogits, &state.params[3].data, &mut dh, bsz, m_out, h,
+                1.0);
 
         // walk the tape backwards
         let mut dc = vec![0.0f32; bsz * h]; // LSTM cell-state gradient
@@ -651,8 +579,8 @@ impl RecurrentExecution {
                 }
             }
             // dL/dh_{t-1} += dhg @ wh^T
-            matmul_wt(&dhg, bsz, gh, &state.params[1].data, h,
-                      &mut dh_prev);
+            gemm_nt(&dhg, &state.params[1].data, &mut dh_prev, bsz, gh,
+                    h, 1.0);
             dh = dh_prev;
             // bias gradient: bg enters through xg only
             for row in 0..bsz {
@@ -662,13 +590,74 @@ impl RecurrentExecution {
                 }
             }
             // dwh += h_{t-1}^T @ dhg, dwx += x_t^T @ dxg (sparse scatter)
-            accumulate_outer(h_prev, &dhg, bsz, h, gh, &mut dwh);
+            gemm_tn_acc(h_prev, &dhg, &mut dwh, bsz, h, gh);
             self.scatter_input_grad(x, t, bsz, &dxg, &mut dwx)?;
         }
 
         let grads = vec![dwx, dwh, dbg, dwo, dbo];
         optimizer_step(&self.spec, state, &grads)?;
         Ok(loss)
+    }
+
+    /// The shared single-timestep advance behind [`Execution::step`]
+    /// and [`Execution::step_batch`]: one gather for the input gates,
+    /// one blocked GEMM for `h @ wh` over all `rows` sessions, one cell
+    /// application. Rows are independent, so the batched and
+    /// per-session entry points are bit-identical by construction.
+    fn step_rows(&self, params: &[HostTensor], h: &mut [f32],
+                 c: Option<&mut [f32]>, rows: usize, x: &BatchInput)
+        -> Result<()> {
+        self.check_params(params)?;
+        let hd = self.hidden;
+        let gh = self.gates * hd;
+        if h.len() != rows * hd {
+            bail!("hidden state has {} elements, expected {rows}x{hd}",
+                  h.len());
+        }
+        let xg = self.input_gates_flat(&params[0].data, &params[2].data,
+                                       x, rows)?;
+        let mut hg = vec![0.0f32; rows * gh];
+        gemm(h, &params[1].data, &mut hg, rows, hd, gh, 0.0);
+        match self.cell {
+            Cell::Gru => {
+                let _ = self.apply_cell(&xg, &hg, h, &mut [], rows,
+                                        false);
+            }
+            Cell::Lstm => {
+                let c = c.ok_or_else(|| {
+                    anyhow!("lstm artifact '{}' needs a cell state \
+                             (begin_state)", self.spec.name)
+                })?;
+                if c.len() != rows * hd {
+                    bail!("cell state has {} elements, expected \
+                           {rows}x{hd}", c.len());
+                }
+                let _ = self.apply_cell(&xg, &hg, h, c, rows, false);
+            }
+        }
+        Ok(())
+    }
+
+    /// The shared output-head projection behind [`Execution::readout`]
+    /// and [`Execution::readout_batch`].
+    fn readout_rows(&self, params: &[HostTensor], h: &[f32], rows: usize)
+        -> Result<HostTensor> {
+        self.check_params(params)?;
+        let hd = self.hidden;
+        if h.len() != rows * hd {
+            bail!("hidden state has {} elements, expected {rows}x{hd}",
+                  h.len());
+        }
+        let m_out = self.spec.m_out;
+        let mut out = vec![0.0f32; rows * m_out];
+        broadcast_bias(&mut out, &params[4].data, rows, m_out);
+        gemm(h, &params[3].data, &mut out, rows, hd, m_out, 1.0);
+        if self.spec.loss == "softmax_ce" {
+            for r in 0..rows {
+                softmax_in_place(&mut out[r * m_out..(r + 1) * m_out]);
+            }
+        }
+        Ok(HostTensor::from_vec(&[rows, m_out], out))
     }
 }
 
@@ -691,7 +680,7 @@ impl Execution for RecurrentExecution {
     }
 
     fn train_step(&self, state: &mut ModelState, x: &BatchInput,
-                  y: &HostTensor) -> Result<f32> {
+                  y: &BatchTarget) -> Result<f32> {
         self.train_step_impl(state, x, y)
     }
 
@@ -705,63 +694,35 @@ impl Execution for RecurrentExecution {
 
     fn step(&self, params: &[HostTensor], state: &mut HiddenState,
             x: &BatchInput) -> Result<()> {
-        self.check_params(params)?;
         let rows = state.rows();
-        let h = self.hidden;
-        if state.h.data.len() != rows * h {
-            bail!("hidden state has {} elements, expected {rows}x{h}",
-                  state.h.data.len());
-        }
-        let gh = self.gates * h;
-        let xg = self.input_gates_flat(&params[0].data, &params[2].data,
-                                       x, rows)?;
-        let mut hg = vec![0.0f32; rows * gh];
-        matmul_acc(&state.h.data, rows, h, &params[1].data, gh, &mut hg);
-        match self.cell {
-            Cell::Gru => {
-                let mut unused: Vec<f32> = Vec::new();
-                let _ = self.apply_cell(&xg, &hg, &mut state.h.data,
-                                        &mut unused, rows, false);
-            }
-            Cell::Lstm => {
-                let c = state.c.as_mut().ok_or_else(|| {
-                    anyhow::anyhow!("lstm artifact '{}' needs a cell \
-                                     state (begin_state)", self.spec.name)
-                })?;
-                if c.data.len() != rows * h {
-                    bail!("cell state has {} elements, expected {rows}x{h}",
-                          c.data.len());
-                }
-                let _ = self.apply_cell(&xg, &hg, &mut state.h.data,
-                                        &mut c.data, rows, false);
-            }
-        }
-        Ok(())
+        let HiddenState { h, c } = state;
+        self.step_rows(params, &mut h.data,
+                       c.as_mut().map(|t| t.data.as_mut_slice()), rows,
+                       x)
     }
 
     fn readout(&self, params: &[HostTensor], state: &HiddenState)
         -> Result<HostTensor> {
-        self.check_params(params)?;
+        self.readout_rows(params, &state.h.data, state.rows())
+    }
+
+    fn supports_batched_stepping(&self) -> bool {
+        true
+    }
+
+    fn step_batch(&self, params: &[HostTensor],
+                  state: &mut BatchedHiddenState, x: &BatchInput)
+        -> Result<()> {
         let rows = state.rows();
-        let h = self.hidden;
-        if state.h.data.len() != rows * h {
-            bail!("hidden state has {} elements, expected {rows}x{h}",
-                  state.h.data.len());
-        }
-        let m_out = self.spec.m_out;
-        let bo = &params[4].data;
-        let mut out = vec![0.0f32; rows * m_out];
-        for r in 0..rows {
-            out[r * m_out..(r + 1) * m_out].copy_from_slice(bo);
-        }
-        matmul_acc(&state.h.data, rows, h, &params[3].data, m_out,
-                   &mut out);
-        if self.spec.loss == "softmax_ce" {
-            for r in 0..rows {
-                softmax_in_place(&mut out[r * m_out..(r + 1) * m_out]);
-            }
-        }
-        Ok(HostTensor::from_vec(&[rows, m_out], out))
+        let BatchedHiddenState { h, c } = state;
+        self.step_rows(params, &mut h.data,
+                       c.as_mut().map(|t| t.data.as_mut_slice()), rows,
+                       x)
+    }
+
+    fn readout_batch(&self, params: &[HostTensor],
+                     state: &BatchedHiddenState) -> Result<HostTensor> {
+        self.readout_rows(params, &state.h.data, state.rows())
     }
 
     fn run(&self, inputs: &[&HostTensor], i32_inputs: &[&HostTensorI32])
@@ -786,8 +747,8 @@ impl Execution for RecurrentExecution {
                         .collect(),
                 };
                 let x = BatchInput::Dense(inputs[p + s].clone());
-                let loss = self.train_step_impl(&mut state, &x,
-                                                inputs[p + s + 1])?;
+                let y = BatchTarget::Dense(inputs[p + s + 1].clone());
+                let loss = self.train_step_impl(&mut state, &x, &y)?;
                 let mut out = state.params;
                 out.append(&mut state.opt_state);
                 out.push(HostTensor::scalar(loss));
@@ -929,6 +890,64 @@ mod tests {
         }
     }
 
+    /// One batched step over N packed sessions must equal N separate
+    /// single-session steps bit-for-bit, and the batched readout the
+    /// per-session readouts.
+    #[test]
+    fn step_batch_matches_sequential_steps() {
+        use crate::runtime::backend::BatchedHiddenState;
+        for family in ["gru", "lstm"] {
+            let (m, h, n) = (12usize, 5usize, 4usize);
+            let spec = test_rnn_spec(family, m, h, m, n, 3);
+            let exe = RecurrentExecution::new(spec.clone()).unwrap();
+            let mut rng = Rng::new(0xBA7C4);
+            let state = ModelState::init(&spec, &mut rng);
+
+            // N single-row sessions, advanced one click each
+            let clicks: Vec<Vec<(u32, f32)>> = (0..n)
+                .map(|_| {
+                    let a = rng.below(m) as u32;
+                    vec![(a, 1.0f32)]
+                })
+                .collect();
+            let mut singles: Vec<_> =
+                (0..n).map(|_| exe.begin_state(1).unwrap()).collect();
+            for (hs, click) in singles.iter_mut().zip(&clicks) {
+                let mut sb = SparseBatch::new(m);
+                sb.push_row(click);
+                exe.step(&state.params, hs, &BatchInput::Sparse(sb))
+                    .unwrap();
+            }
+
+            let fresh: Vec<_> =
+                (0..n).map(|_| exe.begin_state(1).unwrap()).collect();
+            let refs: Vec<&crate::runtime::backend::HiddenState> =
+                fresh.iter().collect();
+            let mut packed = BatchedHiddenState::gather(&refs).unwrap();
+            let mut sb = SparseBatch::new(m);
+            for click in &clicks {
+                sb.push_row(click);
+            }
+            exe.step_batch(&state.params, &mut packed,
+                           &BatchInput::Sparse(sb))
+                .unwrap();
+
+            for (r, hs) in singles.iter().enumerate() {
+                assert_eq!(&packed.h.data[r * h..(r + 1) * h],
+                           &hs.h.data[..],
+                           "{family} row {r} hidden diverged");
+            }
+            let batched = exe.readout_batch(&state.params, &packed)
+                .unwrap();
+            for (r, hs) in singles.iter().enumerate() {
+                let single = exe.readout(&state.params, hs).unwrap();
+                assert_eq!(&batched.data[r * m..(r + 1) * m],
+                           &single.data[..],
+                           "{family} row {r} readout diverged");
+            }
+        }
+    }
+
     #[test]
     fn step_with_input_changes_state() {
         let spec = test_rnn_spec("gru", 8, 4, 8, 1, 3);
@@ -972,7 +991,8 @@ mod tests {
         let wire_params = out;
 
         let typed_loss = exe
-            .train_step(&mut state, &BatchInput::Dense(x.clone()), &y)
+            .train_step(&mut state, &BatchInput::Dense(x.clone()),
+                        &BatchTarget::Dense(y.clone()))
             .unwrap();
         assert_eq!(wire_loss, typed_loss);
         assert_eq!(wire_params, state.params);

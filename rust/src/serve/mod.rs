@@ -6,7 +6,9 @@
 //!             (sparse encode -> predict backend -> Bloom decode -> top-N)
 //!
 //! The batcher collects up to `batch` requests or `max_wait`, whichever
-//! first — classic dynamic batching. Workers share one loaded
+//! first — classic dynamic micro-batching, with a bounded admission
+//! queue (`ServeConfig::queue_cap` + `Server::try_submit`) for
+//! backpressure. Workers share one loaded
 //! [`crate::runtime::Execution`] (backends are thread-safe); a router
 //! fans the queue out to replicas. On a sparse-capable backend requests
 //! are encoded straight to active positions — the dense `[batch, m]`
@@ -16,9 +18,14 @@
 //! Recurrent models (the GRU session recommender, the LSTM language
 //! model) additionally serve *statefully*: the server keeps a bounded
 //! per-session hidden-state cache, and a [`RecRequest`] carrying a
-//! session id only ships the user's new clicks — each advances the
-//! cached state by one `Execution::step` instead of replaying the whole
-//! window. See `RecRequest::session`.
+//! session id only ships the user's new clicks. A flush advances all
+//! its live sessions together — hidden states gathered into one
+//! `runtime::BatchedHiddenState`, one `Execution::step_batch` (a single
+//! blocked GEMM) per round of clicks, one batched readout — instead of
+//! per-session rows=1 matmuls; executions without batched stepping fall
+//! back to per-session `Execution::step`, and executions without any
+//! stepping (PJRT) to stateless window predicts. See
+//! `RecRequest::session`.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,14 +1,22 @@
-//! The recommendation server: router + worker replicas over a trained
-//! model artifact. Requests carry a user's item set; responses carry the
-//! top-N recommended original items with scores.
+//! The recommendation server: a micro-batching scheduler + worker
+//! replicas over a trained model artifact. Requests carry a user's item
+//! set; responses carry the top-N recommended original items with
+//! scores.
 //!
-//! Feed-forward models serve statelessly: each request's full item set is
-//! encoded (sparse) and pushed through one batched `predict`. Recurrent
-//! models serve *statefully*: the server keeps a per-session
-//! [`crate::runtime::HiddenState`] cache, so a request with a session id
-//! only carries the user's NEW clicks — each advances the cached state by
-//! one [`crate::runtime::Execution::step`] (O(k·G·h) per click) instead
-//! of re-running the whole window.
+//! Incoming requests accumulate in a bounded queue; the
+//! [`DynamicBatcher`] flushes a batch when it is full or its deadline
+//! passes. Feed-forward models serve statelessly: each flush's item
+//! sets are encoded (sparse) and pushed through one batched `predict`.
+//! Recurrent models serve *statefully*: the server keeps a per-session
+//! [`crate::runtime::HiddenState`] cache, and a flush advances ALL its
+//! sessions together — their hidden states are gathered into one
+//! [`crate::runtime::BatchedHiddenState`] and every round of clicks is
+//! one [`crate::runtime::Execution::step_batch`] (a single blocked GEMM
+//! for the whole batch) followed by one batched readout, with results
+//! scattered back to the per-session caches. A request with a session
+//! id therefore only carries the user's NEW clicks, and N concurrent
+//! sessions cost one `[N, h]` matmul per click-round instead of N
+//! rows=1 matmuls.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -26,8 +34,9 @@ use crate::coordinator::batcher::encode_item_rows;
 use crate::embedding::Embedding;
 use crate::linalg::knn::top_k;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, BatchInput, Execution, HiddenState,
-                     HostTensor, Runtime, SparseBatch};
+use crate::runtime::{ArtifactSpec, BatchInput, BatchedHiddenState,
+                     Execution, HiddenState, HostTensor, Runtime,
+                     SparseBatch};
 
 #[derive(Clone, Debug)]
 pub struct RecRequest {
@@ -68,12 +77,20 @@ pub struct RecResponse {
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub replicas: usize,
+    /// Admission bound for [`Server::try_submit`]: requests beyond this
+    /// many in flight are rejected instead of queued (backpressure).
+    /// [`Server::submit`] ignores the bound (legacy unbounded behavior).
+    pub queue_cap: usize,
     pub batcher: BatcherConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { replicas: 2, batcher: BatcherConfig::default() }
+        Self {
+            replicas: 2,
+            queue_cap: 4096,
+            batcher: BatcherConfig::default(),
+        }
     }
 }
 
@@ -145,14 +162,64 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<ServeMetrics>,
     in_flight: Arc<AtomicUsize>,
+    queue_cap: usize,
     sessions: Arc<Mutex<SessionCache>>,
 }
 
 impl Server {
-    /// Spin up worker replicas around a trained model.
+    /// Spin up the micro-batching scheduler + worker replicas around a
+    /// trained model.
     ///
     /// `emb` decodes model outputs to original items (Bloom hash matrix on
     /// the serving path); the predict artifact is compiled once and shared.
+    ///
+    /// # Example
+    ///
+    /// Serve a recurrent (GRU) artifact statefully: three live sessions
+    /// submitted together land in one flush, and the scheduler advances
+    /// all of them with a single batched step (`Execution::step_batch`
+    /// over their gathered hidden states) before one batched readout.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use std::time::Duration;
+    /// use bloomrec::model::ModelState;
+    /// use bloomrec::runtime::{round_m, Runtime};
+    /// use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig,
+    ///                       Server};
+    /// use bloomrec::util::rng::Rng;
+    ///
+    /// // synthetic manifest + untrained weights: wiring, not quality
+    /// let rt = Arc::new(
+    ///     Runtime::native(std::path::Path::new("artifacts")).unwrap());
+    /// let task = rt.manifest.task("yc").unwrap().clone();
+    /// let m = round_m(task.d, 0.1);
+    /// let spec = rt.manifest
+    ///     .find("yc", "predict", "softmax_ce", m).unwrap().clone();
+    /// let state = ModelState::init(&spec, &mut Rng::new(1));
+    /// let emb = bloomrec::serve::server::bloom_serving_embedding(
+    ///     task.d, m, 4, 1);
+    /// let server = Server::start(rt, spec, state, emb, ServeConfig {
+    ///     replicas: 1,
+    ///     queue_cap: 64,
+    ///     batcher: BatcherConfig {
+    ///         max_batch: 8,
+    ///         max_wait: Duration::from_millis(2),
+    ///     },
+    /// }).unwrap();
+    ///
+    /// // one click for each of three sessions; same flush -> one
+    /// // batched step advances all three hidden states
+    /// let waiting: Vec<_> = (0..3u64)
+    ///     .map(|s| server.submit(RecRequest::session(s, vec![s as u32],
+    ///                                                5)))
+    ///     .collect();
+    /// for rx in waiting {
+    ///     assert_eq!(rx.recv().unwrap().items.len(), 5);
+    /// }
+    /// assert_eq!(server.session_count(), 3);
+    /// server.shutdown();
+    /// ```
     pub fn start(rt: Arc<Runtime>, spec: ArtifactSpec, state: ModelState,
                  emb: Arc<dyn Embedding>, cfg: ServeConfig) -> Result<Server> {
         let exe = rt.load(&spec.name)?;
@@ -203,6 +270,7 @@ impl Server {
             workers,
             metrics,
             in_flight,
+            queue_cap: cfg.queue_cap.max(1),
             sessions,
         })
     }
@@ -215,9 +283,12 @@ impl Server {
             // the stateful path needs a stepping interpreter (native);
             // executions without one (PJRT runs the AOT full-window
             // artifact) fall back to stateless window predicts
-            return if exe.supports_stepping() {
+            return if exe.supports_batched_stepping() {
                 Self::serve_batch_recurrent(exe, spec, state, emb, jobs,
                                             metrics, sessions)
+            } else if exe.supports_stepping() {
+                Self::serve_batch_recurrent_sequential(
+                    exe, spec, state, emb, jobs, metrics, sessions)
             } else {
                 Self::serve_batch_window(exe, spec, state, emb, jobs,
                                          metrics)
@@ -229,16 +300,139 @@ impl Server {
         Ok(())
     }
 
-    /// Stateful recurrent serving: resume (or open) each job's session,
-    /// advance its hidden state one [`Execution::step`] per new click —
-    /// the O(k·G·h) incremental hot path — read the output head out, and
-    /// check the session back into the cache. The session's full click
-    /// history (not just this request's items) is excluded from top-N.
+    /// Check each job's session out of the cache (or open a fresh one).
+    /// Callers guarantee the flush holds at most one job per session id
+    /// (duplicates are rerouted to the sequential path, which chains
+    /// them in submission order).
+    fn checkout_sessions(exe: &dyn Execution, jobs: &[Job],
+                         sessions: &Mutex<SessionCache>)
+        -> Result<Vec<SessionEntry>> {
+        let mut entries = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let entry = match job
+                .request
+                .session
+                .and_then(|id| sessions.lock().unwrap().take(id))
+            {
+                Some(entry) => entry,
+                None => SessionEntry {
+                    state: exe.begin_state(1)?,
+                    seen: Vec::new(),
+                },
+            };
+            entries.push(entry);
+        }
+        Ok(entries)
+    }
+
+    /// Micro-batched stateful serving — the scheduler's recurrent hot
+    /// path. The flush's sessions are checked out together and advanced
+    /// in *rounds*: round `i` packs the hidden states of every session
+    /// with an i-th new click into one
+    /// [`crate::runtime::BatchedHiddenState`], encodes those clicks as
+    /// one sparse batch, and runs a single [`Execution::step_batch`] —
+    /// one blocked `[N, h] @ [h, G*h]` GEMM for all N sessions instead
+    /// of N rows=1 matmuls. Sessions join and leave rounds as their
+    /// click lists run out (ragged batches); one batched readout scores
+    /// every job at the end, then states scatter back into the cache.
+    /// Per-session results are bit-identical to the sequential path —
+    /// rows of a batched step are independent.
     fn serve_batch_recurrent(exe: &dyn Execution, spec: &ArtifactSpec,
                              state: &ModelState, emb: &dyn Embedding,
                              jobs: &[Job], metrics: &ServeMetrics,
                              sessions: &Mutex<SessionCache>)
         -> Result<()> {
+        // Two requests for one session in the same flush would race on
+        // the checked-out state (the later put-back would clobber the
+        // earlier one's advanced state). The sequential path chains
+        // them in submission order instead — take that path for the
+        // whole (rare, protocol-violating) flush.
+        let mut ids: Vec<u64> = jobs
+            .iter()
+            .filter_map(|j| j.request.session)
+            .collect();
+        ids.sort_unstable();
+        if ids.windows(2).any(|w| w[0] == w[1]) {
+            return Self::serve_batch_recurrent_sequential(
+                exe, spec, state, emb, jobs, metrics, sessions);
+        }
+        let m_in = spec.m_in;
+        let mut entries = Self::checkout_sessions(exe, jobs, sessions)?;
+        let rounds = jobs
+            .iter()
+            .map(|j| j.request.user_items.len())
+            .max()
+            .unwrap_or(0);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for round in 0..rounds {
+            let active: Vec<usize> = (0..jobs.len())
+                .filter(|&i| round < jobs[i].request.user_items.len())
+                .collect();
+            // pack the active sessions' states into one [N, h] matrix
+            let refs: Vec<&HiddenState> =
+                active.iter().map(|&i| &entries[i].state).collect();
+            let mut packed = BatchedHiddenState::gather(&refs)?;
+            // encode this round's clicks, one row per active session
+            let mut sb = SparseBatch::new(m_in);
+            let mut sparse_ok = true;
+            for &i in &active {
+                let item = jobs[i].request.user_items[round];
+                if !emb.encode_input_sparse(&[item], &mut scratch) {
+                    sparse_ok = false;
+                    break;
+                }
+                sb.push_row(&scratch);
+            }
+            let x = if sparse_ok {
+                BatchInput::Sparse(sb)
+            } else {
+                let mut t =
+                    HostTensor::zeros(&[active.len(), m_in]);
+                for (row, &i) in active.iter().enumerate() {
+                    let item = jobs[i].request.user_items[round];
+                    emb.encode_input(
+                        &[item],
+                        &mut t.data[row * m_in..(row + 1) * m_in]);
+                }
+                BatchInput::Dense(t)
+            };
+            exe.step_batch(&state.params, &mut packed, &x)?;
+            // scatter the advanced rows back to the per-session states
+            for (row, &i) in active.iter().enumerate() {
+                packed.copy_row_into(row, &mut entries[i].state, 0)?;
+                let item = jobs[i].request.user_items[round];
+                if !entries[i].seen.contains(&item) {
+                    entries[i].seen.push(item);
+                }
+            }
+        }
+        // one batched readout scores every job of the flush
+        let refs: Vec<&HiddenState> =
+            entries.iter().map(|e| &e.state).collect();
+        let packed = BatchedHiddenState::gather(&refs)?;
+        let out = exe.readout_batch(&state.params, &packed)?;
+        let excludes: Vec<Vec<u32>> =
+            entries.iter().map(|e| e.seen.clone()).collect();
+        for (job, entry) in jobs.iter().zip(entries) {
+            if let Some(id) = job.request.session {
+                sessions.lock().unwrap().put(id, entry);
+            }
+        }
+        Self::respond(jobs, &out.data, spec, emb, metrics,
+                      Some(excludes.as_slice()));
+        Ok(())
+    }
+
+    /// Sequential stateful fallback for executions that can step but not
+    /// batch-step: resume (or open) each job's session, advance its
+    /// hidden state one [`Execution::step`] per new click — the
+    /// O(k·G·h) incremental path — read the output head out, and check
+    /// the session back into the cache. The session's full click
+    /// history (not just this request's items) is excluded from top-N.
+    fn serve_batch_recurrent_sequential(
+        exe: &dyn Execution, spec: &ArtifactSpec, state: &ModelState,
+        emb: &dyn Embedding, jobs: &[Job], metrics: &ServeMetrics,
+        sessions: &Mutex<SessionCache>) -> Result<()> {
         let m_in = spec.m_in;
         let m_out = spec.m_out;
         let mut probs = vec![0.0f32; jobs.len() * m_out];
@@ -364,7 +558,9 @@ impl Server {
         encode_item_rows(spec, emb, &rows, exe.supports_sparse_input())
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the response. Unbounded:
+    /// the request is queued no matter how deep the backlog is — use
+    /// [`Server::try_submit`] for admission control.
     pub fn submit(&self, request: RecRequest)
         -> mpsc::Receiver<RecResponse> {
         let (respond, rx) = mpsc::channel();
@@ -375,6 +571,26 @@ impl Server {
             .send(Job { request, enqueued: Instant::now(), respond })
             .expect("workers alive");
         rx
+    }
+
+    /// Bounded submit: admit the request only while fewer than
+    /// `ServeConfig::queue_cap` requests are in flight; returns `None`
+    /// (shed load, caller retries or degrades) when the queue is full.
+    pub fn try_submit(&self, request: RecRequest)
+        -> Option<mpsc::Receiver<RecResponse>> {
+        // optimistic admission: reserve a slot, back out if over the cap
+        if self.in_flight.fetch_add(1, Ordering::SeqCst)
+            >= self.queue_cap {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Job { request, enqueued: Instant::now(), respond })
+            .expect("workers alive");
+        Some(rx)
     }
 
     /// Blocking convenience call.

@@ -1,0 +1,254 @@
+//! Kernel-layer and batched-serving correctness:
+//!
+//! * property tests that the blocked `gemm` (plain and packed-B) agrees
+//!   with a naive triple-loop matmul within 1e-5 across random shapes;
+//! * property tests that `Execution::step_batch` over N packed sessions
+//!   is bit-identical to N sequential `Execution::step` calls —
+//!   including sessions that ragged-join and leave mid-stream, the
+//!   micro-batching server's actual access pattern.
+
+use bloomrec::linalg::gemm::{gemm, gemm_nt, gemm_packed, matmul_into,
+                             PackedB};
+use bloomrec::model::ModelState;
+use bloomrec::runtime::{test_rnn_spec, BatchInput, BatchedHiddenState,
+                        Execution, HiddenState, RecurrentExecution,
+                        SparseBatch};
+use bloomrec::util::proptest::check;
+use bloomrec::util::rng::Rng;
+
+/// Naive i-j-k reference matmul (no blocking, no zero-skip, plain
+/// per-element dot) — deliberately a DIFFERENT summation order than the
+/// blocked kernel, so agreement is numeric (1e-5), not structural.
+fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn rand_vec(rng: &mut Rng, len: usize, sparsity: f64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if rng.bool(sparsity) {
+                0.0
+            } else {
+                rng.normal() as f32
+            }
+        })
+        .collect()
+}
+
+/// Blocked gemm (plain, packed, and transpose-aware) vs the naive
+/// matmul: within 1e-5 relative error on random shapes spanning the
+/// tile boundaries.
+#[test]
+fn prop_blocked_gemm_matches_naive_matmul() {
+    check("gemm-vs-naive", 0xCE11, 40,
+          |rng| {
+              let m = 1 + rng.below(12);
+              let k = 1 + rng.below(300);
+              let n = 1 + rng.below(200);
+              let seed = rng.next_u64();
+              (vec![m, k, n], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 3 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (m, k, n) = (dims[0], dims[1], dims[2]);
+              if m == 0 || k == 0 || n == 0 {
+                  return Ok(()); // shrunk outside the invariants
+              }
+              let mut rng = Rng::new(*seed);
+              let a = rand_vec(&mut rng, m * k, 0.3);
+              let b = rand_vec(&mut rng, k * n, 0.0);
+              let want = naive_matmul(&a, &b, m, k, n);
+              let tol = |w: f32| 1e-5f32 * w.abs().max(1.0);
+
+              let mut c = vec![0.0f32; m * n];
+              matmul_into(&a, &b, &mut c, m, k, n);
+              for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                  if (got - w).abs() > tol(w) {
+                      return Err(format!(
+                          "gemm {m}x{k}x{n} elem {i}: {got} vs {w}"));
+                  }
+              }
+
+              // packed-B must be bit-identical to the plain kernel
+              let bp = PackedB::pack(&b, k, n);
+              let mut cp = vec![0.0f32; m * n];
+              gemm_packed(&a, &bp, &mut cp, m, k, n, 0.0);
+              if cp != c {
+                  return Err(format!(
+                      "packed gemm diverged from plain at {m}x{k}x{n}"));
+              }
+
+              // beta = 1 accumulates exactly once more
+              gemm(&a, &b, &mut c, m, k, n, 1.0);
+              for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                  if (got - 2.0 * w).abs() > 2.0 * tol(w) {
+                      return Err(format!(
+                          "gemm beta=1 elem {i}: {got} vs {}", 2.0 * w));
+                  }
+              }
+
+              // transpose-aware: A @ (B^T)^T == A @ B
+              let mut bt = vec![0.0f32; n * k];
+              for j in 0..n {
+                  for kk in 0..k {
+                      bt[j * k + kk] = b[kk * n + j];
+                  }
+              }
+              let mut cnt = vec![0.0f32; m * n];
+              gemm_nt(&a, &bt, &mut cnt, m, k, n, 0.0);
+              for (i, (&got, &w)) in cnt.iter().zip(&want).enumerate() {
+                  if (got - w).abs() > tol(w) {
+                      return Err(format!(
+                          "gemm_nt elem {i}: {got} vs {w}"));
+                  }
+              }
+              Ok(())
+          });
+}
+
+/// Drive N sessions with ragged per-session click streams two ways —
+/// sequentially (one `step` per session per click) and micro-batched
+/// (gather the sessions active in each round, one `step_batch`, scatter
+/// back, exactly like `serve::Server`) — and require bit-identical
+/// hidden states and readouts. Sessions join late (empty early rounds)
+/// and leave early (short streams), so every gather is a different
+/// ragged subset.
+#[test]
+fn prop_step_batch_matches_sequential_ragged_sessions() {
+    check("step-batch-ragged", 0x5E55, 14,
+          |rng| {
+              let m = 6 + rng.below(20);
+              let h = 2 + rng.below(8);
+              let n = 1 + rng.below(6);
+              let lstm = rng.below(2);
+              let seed = rng.next_u64();
+              (vec![m, h, n, lstm], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 4 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (m, h, n, lstm) = (dims[0], dims[1], dims[2], dims[3]);
+              if m == 0 || h == 0 || n == 0 {
+                  return Ok(()); // shrunk outside the invariants
+              }
+              let family = if lstm == 1 { "lstm" } else { "gru" };
+              let mut rng = Rng::new(*seed);
+              let spec = test_rnn_spec(family, m, h, m, n, 4);
+              let exe = RecurrentExecution::new(spec.clone())
+                  .map_err(|e| e.to_string())?;
+              let state = ModelState::init(&spec, &mut rng);
+
+              // ragged streams: session s becomes active at round
+              // `join[s]` and has `len[s]` clicks from there on
+              let rounds = 5usize;
+              let mut streams: Vec<Vec<Vec<(u32, f32)>>> = Vec::new();
+              for _ in 0..n {
+                  let join = rng.below(rounds);
+                  let len = 1 + rng.below(rounds - join);
+                  let clicks: Vec<Vec<(u32, f32)>> = (0..len)
+                      .map(|_| vec![(rng.below(m) as u32, 1.0f32)])
+                      .collect();
+                  let mut stream = vec![Vec::new(); join];
+                  stream.extend(clicks);
+                  streams.push(stream);
+              }
+
+              // sequential ground truth: per-session rows=1 stepping
+              let mut singles: Vec<HiddenState> = (0..n)
+                  .map(|_| exe.begin_state(1).expect("state"))
+                  .collect();
+              for round in 0..rounds {
+                  for (s, stream) in streams.iter().enumerate() {
+                      if let Some(click) = stream.get(round) {
+                          if click.is_empty() {
+                              continue; // not joined yet
+                          }
+                          let mut sb = SparseBatch::new(m);
+                          sb.push_row(click);
+                          exe.step(&state.params, &mut singles[s],
+                                   &BatchInput::Sparse(sb))
+                              .map_err(|e| e.to_string())?;
+                      }
+                  }
+              }
+
+              // micro-batched: gather the active subset per round
+              let mut batched: Vec<HiddenState> = (0..n)
+                  .map(|_| exe.begin_state(1).expect("state"))
+                  .collect();
+              for round in 0..rounds {
+                  let active: Vec<usize> = (0..n)
+                      .filter(|&s| {
+                          streams[s].get(round)
+                              .is_some_and(|c| !c.is_empty())
+                      })
+                      .collect();
+                  if active.is_empty() {
+                      continue;
+                  }
+                  let refs: Vec<&HiddenState> =
+                      active.iter().map(|&s| &batched[s]).collect();
+                  let mut packed = BatchedHiddenState::gather(&refs)
+                      .map_err(|e| e.to_string())?;
+                  let mut sb = SparseBatch::new(m);
+                  for &s in &active {
+                      sb.push_row(&streams[s][round]);
+                  }
+                  exe.step_batch(&state.params, &mut packed,
+                                 &BatchInput::Sparse(sb))
+                      .map_err(|e| e.to_string())?;
+                  for (row, &s) in active.iter().enumerate() {
+                      packed.copy_row_into(row, &mut batched[s], 0)
+                          .map_err(|e| e.to_string())?;
+                  }
+              }
+
+              // states and readouts must agree bit-for-bit
+              for s in 0..n {
+                  if singles[s].h.data != batched[s].h.data {
+                      return Err(format!(
+                          "{family} session {s}: hidden state diverged"));
+                  }
+                  let a = exe.readout(&state.params, &singles[s])
+                      .map_err(|e| e.to_string())?;
+                  let b = exe.readout(&state.params, &batched[s])
+                      .map_err(|e| e.to_string())?;
+                  if a != b {
+                      return Err(format!(
+                          "{family} session {s}: readout diverged"));
+                  }
+              }
+              // ...and the batched readout over ALL sessions matches
+              let refs: Vec<&HiddenState> = batched.iter().collect();
+              let packed = BatchedHiddenState::gather(&refs)
+                  .map_err(|e| e.to_string())?;
+              let all = exe.readout_batch(&state.params, &packed)
+                  .map_err(|e| e.to_string())?;
+              for (s, single) in singles.iter().enumerate() {
+                  let one = exe.readout(&state.params, single)
+                      .map_err(|e| e.to_string())?;
+                  if all.data[s * m..(s + 1) * m] != one.data[..] {
+                      return Err(format!(
+                          "{family} session {s}: batched readout \
+                           diverged"));
+                  }
+              }
+              Ok(())
+          });
+}

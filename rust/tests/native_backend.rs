@@ -8,7 +8,7 @@ use bloomrec::bloom::HashMatrix;
 use bloomrec::embedding::{Bloom, Embedding};
 use bloomrec::model::ModelState;
 use bloomrec::runtime::{test_ff_spec, test_rnn_spec, ArtifactSpec,
-                        BatchInput, Execution, HostTensor,
+                        BatchInput, BatchTarget, Execution, HostTensor,
                         NativeExecution, RecurrentExecution, SparseBatch,
                         SparseSeqBatch};
 use bloomrec::util::proptest::check;
@@ -17,7 +17,7 @@ use bloomrec::util::rng::Rng;
 /// Loss at the given parameters (train_step reports the pre-update loss;
 /// the mutated state is discarded).
 fn loss_at(exe: &dyn Execution, params: &[HostTensor],
-           opt_state: &[HostTensor], x: &BatchInput, y: &HostTensor)
+           opt_state: &[HostTensor], x: &BatchInput, y: &BatchTarget)
     -> f32 {
     let mut state = ModelState {
         params: params.to_vec(),
@@ -29,7 +29,7 @@ fn loss_at(exe: &dyn Execution, params: &[HostTensor],
 /// Extract analytic gradients by running one plain-SGD step with lr = 1:
 /// params' = params - grad.
 fn analytic_grads(exe: &dyn Execution, state: &ModelState,
-                  x: &BatchInput, y: &HostTensor) -> Vec<Vec<f32>> {
+                  x: &BatchInput, y: &BatchTarget) -> Vec<Vec<f32>> {
     let mut s = state.clone();
     exe.train_step(&mut s, x, y).expect("train step");
     state
@@ -58,7 +58,7 @@ fn sgd_lr1(spec: &mut ArtifactSpec) {
 /// Central-difference check of every bias coordinate and a deterministic
 /// subset of the weights against the analytic gradients.
 fn fd_check(exe: &dyn Execution, label: &str, state: &ModelState,
-            x: &BatchInput, y: &HostTensor, min_checked: usize) {
+            x: &BatchInput, y: &BatchTarget, min_checked: usize) {
     let grads = analytic_grads(exe, state, x, y);
     let h = 1e-2f32;
     let mut checked = 0usize;
@@ -112,6 +112,7 @@ fn finite_difference_check(loss: &str) {
         }
     }
     let x = BatchInput::Dense(x);
+    let y = BatchTarget::Dense(y);
     fd_check(&exe, loss, &state, &x, &y, 25);
 }
 
@@ -155,6 +156,7 @@ fn finite_difference_check_rnn(family: &str, loss: &str) {
         }
     }
     let x = BatchInput::Dense(x);
+    let y = BatchTarget::Dense(y);
     fd_check(&exe, &format!("{family}/{loss}"), &state, &x, &y, 30);
 }
 
@@ -299,6 +301,7 @@ fn prop_sparse_and_dense_train_step_agree_exactly() {
                                     &mut y.data[r * m..(r + 1) * m]);
               }
 
+              let y = BatchTarget::Dense(y);
               let mut s_sparse = state0.clone();
               let l_sparse = exe
                   .train_step(&mut s_sparse, &BatchInput::Sparse(sb), &y)
@@ -316,6 +319,114 @@ fn prop_sparse_and_dense_train_step_agree_exactly() {
               {
                   return Err(format!(
                       "state mismatch at d={d} m={m} k={k} batch={batch}"));
+              }
+              Ok(())
+          });
+}
+
+/// One training step from identical states must produce identical
+/// parameters whether the TARGETS went in sparse or dense — the output
+/// side of the sparse-first pipeline (`BatchTarget::Sparse`), across
+/// both loss families and both model families.
+#[test]
+fn prop_sparse_and_dense_targets_agree_exactly() {
+    check("sparse-dense-targets", 0xB4, 16,
+          |rng| {
+              let d = 30 + rng.below(80);
+              let m = 8 + rng.below(16);
+              let k = 1 + rng.below(4.min(m));
+              let batch = 1 + rng.below(5);
+              let recurrent = rng.below(2);
+              let cosine = rng.below(2);
+              let seed = rng.next_u64();
+              (vec![d, m, k, batch, recurrent, cosine], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 6 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (d, m, k, batch, recurrent, cosine) =
+                  (dims[0], dims[1], dims[2], dims[3], dims[4], dims[5]);
+              if d == 0 || m == 0 || k == 0 || k > m || batch == 0 {
+                  return Ok(()); // shrunk outside the invariants
+              }
+              let mut rng = Rng::new(*seed);
+              let loss = if cosine == 1 { "cosine" } else { "softmax_ce" };
+              let (exe, spec): (Box<dyn Execution>, ArtifactSpec) =
+                  if recurrent == 1 {
+                      let mut spec = test_rnn_spec("gru", m, 5, m, batch,
+                                                   3);
+                      spec.loss = loss.into();
+                      (Box::new(RecurrentExecution::new(spec.clone())
+                           .unwrap()), spec)
+                  } else {
+                      let mut spec = test_ff_spec(m, &[9], m, batch);
+                      spec.loss = loss.into();
+                      (Box::new(NativeExecution::new(spec.clone())
+                           .unwrap()), spec)
+                  };
+              let state0 = ModelState::init(&spec, &mut rng);
+              let emb =
+                  Bloom::new(HashMatrix::random(d, m, k, &mut rng), None);
+
+              // random input batch (family-appropriate)
+              let x = if recurrent == 1 {
+                  let (sb, _) = random_seq_batches(&emb, d, m, batch,
+                                                   batch, 3, &mut rng);
+                  BatchInput::SparseSeq(sb)
+              } else {
+                  let mut sb = SparseBatch::new(m);
+                  let mut scratch = Vec::new();
+                  for _ in 0..batch {
+                      let item = rng.below(d) as u32;
+                      emb.encode_input_sparse(&[item], &mut scratch);
+                      sb.push_row(&scratch);
+                  }
+                  BatchInput::Sparse(sb)
+              };
+              // identical targets, sparse and dense; the last row stays
+              // empty/zero to exercise the padding-row arm
+              let mut ysb = SparseBatch::new(m);
+              let mut ydense = HostTensor::zeros(&[batch, m]);
+              let mut scratch = Vec::new();
+              for r in 0..batch.saturating_sub(1) {
+                  let t = 1 + rng.below(3.min(d));
+                  let targets: Vec<u32> = rng
+                      .sample_distinct(d, t)
+                      .into_iter()
+                      .map(|i| i as u32)
+                      .collect();
+                  if !emb.encode_target_sparse(&targets, &mut scratch) {
+                      return Err("bloom must encode targets sparsely"
+                          .into());
+                  }
+                  ysb.push_row(&scratch);
+                  emb.encode_target(&targets,
+                                    &mut ydense.data[r * m..(r + 1) * m]);
+              }
+
+              let mut s_sparse = state0.clone();
+              let l_sparse = exe
+                  .train_step(&mut s_sparse, &x,
+                              &BatchTarget::Sparse(ysb))
+                  .map_err(|e| e.to_string())?;
+              let mut s_dense = state0.clone();
+              let l_dense = exe
+                  .train_step(&mut s_dense, &x,
+                              &BatchTarget::Dense(ydense))
+                  .map_err(|e| e.to_string())?;
+              if l_sparse != l_dense {
+                  return Err(format!(
+                      "{loss} target loss mismatch: {l_sparse} vs \
+                       {l_dense}"));
+              }
+              if s_sparse.params != s_dense.params
+                  || s_sparse.opt_state != s_dense.opt_state
+              {
+                  return Err(format!(
+                      "{loss} target state mismatch at d={d} m={m} k={k} \
+                       batch={batch} recurrent={recurrent}"));
               }
               Ok(())
           });
@@ -440,6 +551,7 @@ fn prop_sparse_and_dense_seq_train_step_agree_exactly() {
                                     &mut y.data[r * m..(r + 1) * m]);
               }
 
+              let y = BatchTarget::Dense(y);
               let mut s_sparse = state0.clone();
               let l_sparse = exe
                   .train_step(&mut s_sparse, &BatchInput::SparseSeq(sb),
@@ -492,6 +604,7 @@ fn recurrent_training_reduces_loss() {
                                   ..(r as usize + 1) * 16]);
         }
         let x = BatchInput::SparseSeq(sb);
+        let y = BatchTarget::Dense(y);
         let first = exe.train_step(&mut state, &x, &y).unwrap();
         let mut last = first;
         for _ in 0..120 {
@@ -524,6 +637,7 @@ fn native_training_reduces_loss() {
         emb.encode_target(&target, &mut y.data[r * 24..(r + 1) * 24]);
     }
     let x = BatchInput::Dense(x);
+    let y = BatchTarget::Dense(y);
     let first = exe.train_step(&mut state, &x, &y).unwrap();
     let mut last = first;
     for _ in 0..150 {

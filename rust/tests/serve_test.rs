@@ -79,6 +79,7 @@ fn concurrent_requests_match_direct_computation() {
                 max_batch: 16,
                 max_wait: Duration::from_millis(1),
             },
+            ..ServeConfig::default()
         }).expect("server");
 
     // submit a wave of concurrent requests over distinct profiles
@@ -118,6 +119,7 @@ fn batching_actually_batches_under_load() {
                 max_batch: 32,
                 max_wait: Duration::from_millis(5),
             },
+            ..ServeConfig::default()
         }).expect("server");
     let rxs: Vec<_> = (0..200)
         .map(|i| {
@@ -203,6 +205,7 @@ fn recurrent_session_serving_matches_direct_steps() {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
             },
+            ..ServeConfig::default()
         }).expect("server");
 
     let items: Vec<u32> = f.ds.test.iter()
@@ -252,6 +255,125 @@ fn recurrent_session_serving_matches_direct_steps() {
     let resp = server.recommend(RecRequest::new(items.clone(), 5));
     assert_eq!(resp.items.len(), 5);
     assert_eq!(server.session_count(), 1, "stateless requests not cached");
+    server.shutdown();
+}
+
+/// Many concurrent sessions replayed through the micro-batching
+/// scheduler (which advances a flush's sessions with ONE batched step
+/// per click-round) must each end at exactly the ranking their own
+/// sequential step replay produces — batched rows are independent.
+/// Sessions have different lengths, so flushes are ragged: sessions
+/// join and leave rounds mid-stream.
+#[test]
+fn concurrent_sessions_match_sequential_replay() {
+    let Some(f) = recurrent_fixture() else { return };
+    let exe = f.rt.load(&f.predict.name).expect("load");
+    assert!(exe.supports_batched_stepping(),
+            "native recurrent execution must batch-step");
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 1, // one worker => concurrent submits share a flush
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(5),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    // distinct sessions with RAGGED lengths (1..=4 clicks)
+    let sessions: Vec<(u64, Vec<u32>)> = f.ds.test.iter()
+        .filter_map(|e| {
+            let v: Vec<u32> = e.input_items().iter().copied()
+                .filter(|&i| i != PAD).collect();
+            (!v.is_empty()).then_some(v)
+        })
+        .take(12)
+        .enumerate()
+        .map(|(s, v)| {
+            let len = 1 + s % 4;
+            (1000 + s as u64, v[..len.min(v.len())].to_vec())
+        })
+        .collect();
+
+    // submit every session's whole click list as ONE session request,
+    // all concurrently — the single worker flushes them together and
+    // advances the pack round by round
+    let waiting: Vec<_> = sessions.iter()
+        .map(|(id, clicks)| {
+            server.submit(RecRequest::session(*id, clicks.clone(), 5))
+        })
+        .collect();
+    let responses: Vec<_> =
+        waiting.into_iter().map(|rx| rx.recv().expect("resp")).collect();
+    assert_eq!(server.session_count(), sessions.len());
+
+    // ground truth: sequential single-session stepping per session
+    let mut scratch = Vec::new();
+    for ((_, clicks), resp) in sessions.iter().zip(&responses) {
+        let mut hs = exe.begin_state(1).expect("state");
+        for &click in clicks {
+            let mut sb = SparseBatch::new(f.predict.m_in);
+            assert!(f.emb.encode_input_sparse(&[click], &mut scratch));
+            sb.push_row(&scratch);
+            exe.step(&f.state.params, &mut hs, &BatchInput::Sparse(sb))
+                .expect("step");
+        }
+        let probs = exe.readout(&f.state.params, &hs).expect("readout");
+        let mut scores = f.emb.decode(&probs.data);
+        for &click in clicks {
+            scores[click as usize] = f32::NEG_INFINITY;
+        }
+        let want = bloomrec::linalg::knn::top_k(&scores, 5);
+        let got: Vec<usize> =
+            resp.items.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, want, "session {clicks:?} diverged from \
+                               sequential replay");
+    }
+    server.shutdown();
+}
+
+/// `try_submit` enforces `queue_cap`: admissions beyond the bound are
+/// rejected, a rejection does not leak its in-flight reservation, and
+/// capacity frees up again once responses drain. The batcher's
+/// `max_wait` keeps the worker holding the flush long enough for the
+/// over-cap attempt to be deterministic.
+#[test]
+fn try_submit_sheds_load_beyond_queue_cap() {
+    let Some(f) = fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 1,
+            queue_cap: 1,
+            batcher: BatcherConfig {
+                max_batch: 64, // never fills -> flush only on deadline
+                max_wait: Duration::from_millis(500),
+            },
+        }).expect("server");
+    let items = f.ds.test[0].input_items().to_vec();
+
+    // slot 1 admitted; the worker sits on it until the 500 ms deadline
+    let rx = server.try_submit(RecRequest::new(items.clone(), 3))
+        .expect("first request admitted");
+    assert_eq!(server.pending(), 1);
+    // over the cap while the first is in flight: shed, twice (the
+    // second attempt also proves the first rejection gave its
+    // reservation back instead of wedging the counter)
+    assert!(server.try_submit(RecRequest::new(items.clone(), 3))
+        .is_none());
+    assert!(server.try_submit(RecRequest::new(items.clone(), 3))
+        .is_none());
+    assert_eq!(server.pending(), 1, "rejections must not leak slots");
+
+    // once the flush drains, capacity is available again
+    rx.recv().expect("response");
+    while server.pending() > 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let rx = server.try_submit(RecRequest::new(items, 3))
+        .expect("capacity freed after drain");
+    rx.recv().expect("response");
     server.shutdown();
 }
 
