@@ -22,14 +22,15 @@ use bloomrec::bloom::HashMatrix;
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::Scale;
 use bloomrec::embedding::{Bloom, Embedding};
-use bloomrec::linalg::gemm::{gemm, gemm_packed, PackedB};
+use bloomrec::linalg::gemm::{gemm, gemm_packed, par_gemm, PackedB};
 use bloomrec::model::ModelState;
-use bloomrec::runtime::{BatchInput, BatchedHiddenState, Execution,
-                        HiddenState, HostTensor, Runtime, SparseBatch,
-                        SparseSeqBatch};
+use bloomrec::runtime::{BatchInput, BatchTarget, BatchedHiddenState,
+                        Execution, HiddenState, HostTensor, Runtime,
+                        SparseBatch, SparseSeqBatch};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
 use bloomrec::util::benchkit::Bench;
 use bloomrec::util::rng::Rng;
+use bloomrec::util::threadpool::WorkerPool;
 
 fn main() {
     let dir = std::path::Path::new("artifacts");
@@ -61,7 +62,7 @@ fn main() {
         .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
     let (state, _) = coordinator::train(
         &rt, &train_spec, &ds, emb.as_ref(),
-        &coordinator::TrainConfig { epochs: 1, seed: 1, verbose: false })
+        &coordinator::TrainConfig { epochs: 1, seed: 1, ..Default::default() })
         .expect("train");
 
     let mut json_sections: Vec<String> = Vec::new();
@@ -73,6 +74,7 @@ fn main() {
     recurrent_bench(&mut json_sections);
     gemm_bench(&mut json_sections);
     batched_step_bench(&mut json_sections);
+    parallel_bench(&mut json_sections);
 
     write_json(&json_sections);
 }
@@ -210,6 +212,126 @@ fn batched_step_bench(json: &mut Vec<String>) {
     }
     json.push(format!("  \"batched_step\": [\n{}\n  ]",
                       rows.join(",\n")));
+}
+
+/// The data-parallel execution layer at threads ∈ {1, 2, 4}: raw
+/// `par_gemm` throughput on a large shape (the acceptance target is
+/// >= 2x at 4 threads with no regression at 1 thread, where the kernel
+/// falls straight through to the serial arm), and the full micro-shard
+/// `train_step_sharded` on the ml FF train artifact. Bit-parity between
+/// the parallel and serial arms is asserted before timing — the sweep
+/// measures wall-clock only, the numbers are identical by construction.
+fn parallel_bench(json: &mut Vec<String>) {
+    let mut rng = Rng::new(31);
+    println!("\n-- parallel kernels / sharded training \
+              (BLOOMREC_THREADS sweep) --");
+
+    // gemm: big enough that 4 workers each clear the per-worker
+    // fan-out threshold
+    let (m, k, n) = (256usize, 256usize, 512usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let flops = (2 * m * k * n) as f64;
+    let mut c_ref = vec![0.0f32; m * n];
+    gemm(&a, &b, &mut c_ref, m, k, n, 0.0);
+    let mut rows_gemm = Vec::new();
+    let mut base_us = 0.0f64;
+    for &t in &[1usize, 2, 4] {
+        WorkerPool::set_global_threads(t);
+        let mut c = vec![0.0f32; m * n];
+        par_gemm(&a, &b, &mut c, m, k, n, 0.0);
+        assert_eq!(c, c_ref, "par_gemm must be bit-identical at t={t}");
+        let bench = Bench::default();
+        let r = bench.run(&format!("par_gemm/{m}x{k}x{n}/t{t}"), 1, || {
+            par_gemm(&a, &b, &mut c, m, k, n, 0.0);
+            std::hint::black_box(&mut c);
+        });
+        if t == 1 {
+            base_us = r.mean_us;
+        }
+        let speedup = base_us / r.mean_us;
+        println!("   gemm {m}x{k}x{n} t={t}: {:.1}us \
+                  ({:.2} GFLOP/s, {speedup:.2}x vs t=1)",
+                 r.mean_us, flops / r.mean_us / 1e3);
+        rows_gemm.push(format!(
+            "      {{\"threads\": {t}, \"m\": {m}, \"k\": {k}, \
+             \"n\": {n}, \"us\": {:.2}, \"speedup_vs_1\": {speedup:.3}}}",
+            r.mean_us));
+    }
+
+    // sharded train_step on the ml FF train artifact (native backend)
+    let rt = Runtime::native(std::path::Path::new("artifacts"))
+        .expect("native runtime");
+    let task = rt.manifest.task("ml").expect("ml").clone();
+    let m_emb = bloomrec::runtime::round_m(task.d, 0.2);
+    let spec = rt.manifest
+        .find(&task.name, "train", "softmax_ce", m_emb).unwrap().clone();
+    let exe = rt.load(&spec.name).expect("load ml train");
+    let state0 = ModelState::init(&spec, &mut rng);
+    let mut x = SparseBatch::new(spec.m_in);
+    let mut y = SparseBatch::new(spec.m_out);
+    for _ in 0..spec.batch {
+        // 4 active bits per row, the Bloom-k fill of the serving path
+        let mut row: Vec<(u32, f32)> = (0..4)
+            .map(|_| (rng.below(spec.m_in) as u32, 1.0))
+            .collect();
+        row.sort_unstable_by_key(|p| p.0);
+        row.dedup_by_key(|p| p.0);
+        x.push_row(&row);
+        let mut row: Vec<(u32, f32)> = (0..4)
+            .map(|_| (rng.below(spec.m_out) as u32, 1.0))
+            .collect();
+        row.sort_unstable_by_key(|p| p.0);
+        row.dedup_by_key(|p| p.0);
+        y.push_row(&row);
+    }
+    let x = BatchInput::Sparse(x);
+    let y = BatchTarget::Sparse(y);
+
+    // parity: a 4-shard 4-thread step equals the serial step bitwise
+    WorkerPool::set_global_threads(1);
+    let mut s_serial = state0.clone();
+    let l_serial = exe.train_step_sharded(&mut s_serial, &x, &y, 1)
+        .expect("serial step");
+    WorkerPool::set_global_threads(4);
+    let mut s_par = state0.clone();
+    let l_par = exe.train_step_sharded(&mut s_par, &x, &y, 4)
+        .expect("sharded step");
+    assert_eq!(l_serial.to_bits(), l_par.to_bits(),
+               "sharded loss must be bit-identical to serial");
+    assert_eq!(s_serial.params, s_par.params,
+               "sharded update must be bit-identical to serial");
+
+    let mut rows_train = Vec::new();
+    let mut base_us = 0.0f64;
+    for &t in &[1usize, 2, 4] {
+        WorkerPool::set_global_threads(t);
+        let mut state = state0.clone();
+        let bench = Bench::default();
+        let r = bench.run(&format!("train_step/ml/t{t}"), spec.batch,
+                          || {
+            let l = exe.train_step_sharded(&mut state, &x, &y, t)
+                .expect("train step");
+            std::hint::black_box(l);
+        });
+        if t == 1 {
+            base_us = r.mean_us;
+        }
+        let speedup = base_us / r.mean_us;
+        println!("   train_step ml (batch={}, m={m_emb}) t={t}: \
+                  {:.1}us ({speedup:.2}x vs t=1)",
+                 spec.batch, r.mean_us);
+        rows_train.push(format!(
+            "      {{\"threads\": {t}, \"task\": \"ml\", \
+             \"batch\": {}, \"m\": {m_emb}, \"us\": {:.2}, \
+             \"speedup_vs_1\": {speedup:.3}}}",
+            spec.batch, r.mean_us));
+    }
+    WorkerPool::set_global_threads(0);
+    json.push(format!(
+        "  \"parallel\": {{\n    \"gemm\": [\n{}\n    ],\n    \
+         \"train_step\": [\n{}\n    ]\n  }}",
+        rows_gemm.join(",\n"), rows_train.join(",\n")));
 }
 
 /// Recurrent hot paths on the native backend (yc / GRU): the

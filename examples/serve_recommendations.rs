@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             epochs: opts.epochs.unwrap_or(task.epochs),
             seed: spec.seed,
             verbose: true,
+            shards: 0,
         })?;
     println!("trained: {} steps in {:.1}s", report.steps,
              report.train_secs);

@@ -197,6 +197,13 @@ pub fn encode_targets(spec: &ArtifactSpec, emb: &dyn Embedding,
 }
 
 /// Iterator over index batches of fixed size (the last one short).
+///
+/// This is the *minibatch* cut (one backend call per range); the
+/// *intra-batch* data-parallel cut — micro-shards inside one call —
+/// uses [`crate::util::threadpool::split_ranges`], shared by the
+/// sharded `train_step`, the evaluation ranking sweep and the parallel
+/// kernels so every layer partitions rows by the same deterministic
+/// rule.
 pub fn batch_ranges(n: usize, batch: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::with_capacity(n.div_ceil(batch));
     let mut lo = 0;

@@ -9,6 +9,13 @@
 //! next-word model (both RR over the decoded next-item scores), and the
 //! classifier (Acc), with batches encoded sparse whenever the backend
 //! accepts them.
+//!
+//! Both halves of a batch are data-parallel: the forward pass fans row
+//! shards across the global worker pool inside the backend, and the
+//! per-example decode + rank-count sweep fans the batch's examples
+//! across the same pool here, reducing contributions back in example
+//! order — the reported score is bit-identical to the serial sweep for
+//! every thread count.
 
 use std::collections::HashSet;
 
@@ -23,6 +30,7 @@ use crate::linalg::knn::{rank_of, ranks_of};
 use crate::model::ModelState;
 use crate::runtime::{ArtifactSpec, Execution, Runtime};
 use crate::util::rng::Rng;
+use crate::util::threadpool::{split_ranges, WorkerPool};
 use crate::util::Stopwatch;
 
 #[derive(Clone, Debug)]
@@ -30,6 +38,16 @@ pub struct EvalReport {
     pub score: f64,
     pub eval_secs: f64,
     pub n_examples: usize,
+}
+
+/// One example's contribution to the batch measure, computed on a
+/// worker of the parallel ranking sweep and reduced back in example
+/// order (so the totals accumulate exactly as the serial loop did).
+enum RowScore {
+    /// classifier: (predicted, truth)
+    Pred(u16, u16),
+    /// ranking: the example's AP / RR contribution
+    Partial(f64),
 }
 
 /// Evaluate `state` on the dataset's test split.
@@ -46,6 +64,7 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
     let mut preds: Vec<u16> = Vec::new();
     let mut truths: Vec<u16> = Vec::new();
 
+    let pool = WorkerPool::global();
     for (lo, hi) in batch_ranges(ds.test.len(), spec.batch) {
         let batch: Vec<&Example> = ds.test[lo..hi].iter().collect();
         let x = encode_input_batch(spec, emb, &batch,
@@ -53,36 +72,68 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
         let probs = exe.predict(&state.params, &x)?; // [batch, m_out]
         let m = spec.m_out;
 
-        for (row, ex) in batch.iter().enumerate() {
-            let out_row = &probs.data[row * m..(row + 1) * m];
-            match (&ex.target, measure) {
-                (Target::Class(c), Measure::Acc) => {
-                    let pred = argmax(out_row) as u16;
-                    preds.push(pred);
-                    truths.push(*c);
-                }
-                (Target::Items(items), Measure::Map) => {
-                    // rank-counting instead of a full argsort: O(d * r)
-                    // (EXPERIMENTS.md §Perf, ~4x faster evaluation)
-                    let mut scores = emb.decode(out_row);
-                    for &it in ex.input_items() {
-                        if (it as usize) < scores.len() {
-                            scores[it as usize] = f32::NEG_INFINITY;
-                        }
+        // the ranking sweep — decode to the d-dim item space and
+        // rank-count, the evaluation-time cost the paper quantifies —
+        // fans the batch's examples across the pool in shard ranges and
+        // reduces contributions back in example order (deterministic:
+        // same totals as the serial loop, for every thread count).
+        // Classifier accuracy is one argmax per example — far below the
+        // cost of a fork-join — so it stays serial, as do tiny batches;
+        // the decode-heavy Map/Rr sweep is what fans out.
+        let workers = match measure {
+            Measure::Acc => 1,
+            _ if batch.len() < 8 => 1,
+            _ => pool.threads(),
+        };
+        let ranges = split_ranges(batch.len(), workers);
+        let parts = pool.scope_map(&ranges, |&(rlo, rhi)| {
+            let mut out = Vec::with_capacity(rhi - rlo);
+            for row in rlo..rhi {
+                let ex = batch[row];
+                let out_row = &probs.data[row * m..(row + 1) * m];
+                match (&ex.target, measure) {
+                    (Target::Class(c), Measure::Acc) => {
+                        out.push(RowScore::Pred(argmax(out_row) as u16,
+                                                *c));
                     }
-                    let relevant: Vec<usize> =
-                        items.iter().map(|&i| i as usize).collect();
-                    let mut ranks = ranks_of(&scores, &relevant);
-                    scores_sum += average_precision_from_ranks(&mut ranks);
-                    n += 1;
+                    (Target::Items(items), Measure::Map) => {
+                        // rank-counting instead of a full argsort:
+                        // O(d * r) (EXPERIMENTS.md §Perf, ~4x faster
+                        // evaluation)
+                        let mut scores = emb.decode(out_row);
+                        for &it in ex.input_items() {
+                            if (it as usize) < scores.len() {
+                                scores[it as usize] = f32::NEG_INFINITY;
+                            }
+                        }
+                        let relevant: Vec<usize> =
+                            items.iter().map(|&i| i as usize).collect();
+                        let mut ranks = ranks_of(&scores, &relevant);
+                        out.push(RowScore::Partial(
+                            average_precision_from_ranks(&mut ranks)));
+                    }
+                    (Target::Items(items), Measure::Rr) => {
+                        let scores = emb.decode(out_row);
+                        let rank = rank_of(&scores, items[0] as usize);
+                        out.push(RowScore::Partial(1.0 / rank as f64));
+                    }
+                    _ => anyhow::bail!("measure/target mismatch"),
                 }
-                (Target::Items(items), Measure::Rr) => {
-                    let scores = emb.decode(out_row);
-                    let rank = rank_of(&scores, items[0] as usize);
-                    scores_sum += 1.0 / rank as f64;
-                    n += 1;
+            }
+            Ok(out)
+        });
+        for part in parts {
+            for score in part? {
+                match score {
+                    RowScore::Pred(pred, truth) => {
+                        preds.push(pred);
+                        truths.push(truth);
+                    }
+                    RowScore::Partial(s) => {
+                        scores_sum += s;
+                        n += 1;
+                    }
                 }
-                _ => anyhow::bail!("measure/target mismatch"),
             }
         }
     }

@@ -241,7 +241,12 @@ pub fn run(rt: &Runtime, cache: &DatasetCache, spec: &RunSpec)
         rt.manifest.find(&task.name, "predict", loss.tag(), m)?.clone();
 
     let epochs = spec.epochs.unwrap_or(task.epochs);
-    let cfg = TrainConfig { epochs, seed: spec.seed, verbose: false };
+    let cfg = TrainConfig {
+        epochs,
+        seed: spec.seed,
+        verbose: false,
+        shards: 0,
+    };
     let (state, train_report) =
         train(rt, &train_spec, &ds, emb.as_ref(), &cfg)?;
     let eval_report =

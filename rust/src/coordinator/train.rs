@@ -6,6 +6,13 @@
 //! flat sparse rows, recurrent ones (GRU/LSTM) as sparse per-timestep
 //! steps — see [`encode_input_batch`] — and both fall back to dense
 //! tensors when the backend or embedding cannot produce sparse input.
+//!
+//! Training is data-parallel: every step passes
+//! [`TrainConfig::shards`] to the backend's `train_step_sharded`, which
+//! fans the minibatch's rows across the global worker pool
+//! (`BLOOMREC_THREADS`). Sharding never changes the loss curve — the
+//! backends guarantee bit-identical results for every shard and thread
+//! count.
 
 use anyhow::Result;
 
@@ -24,11 +31,16 @@ pub struct TrainConfig {
     pub seed: u64,
     /// log epoch losses at info level
     pub verbose: bool,
+    /// micro-shards per minibatch, fanned across the global worker pool
+    /// by sharding-aware backends (0 = auto-size from the pool). The
+    /// loss trajectory is bit-identical for every value — sharding is
+    /// an execution detail, see `Execution::train_step_sharded`.
+    pub shards: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        Self { epochs: 3, seed: 0, verbose: false }
+        Self { epochs: 3, seed: 0, verbose: false, shards: 0 }
     }
 }
 
@@ -71,7 +83,8 @@ pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
             let sparse = exe.supports_sparse_input();
             let x = encode_input_batch(spec, emb, &batch, sparse);
             let y = encode_target_batch(spec, emb, &batch, sparse);
-            let loss = exe.train_step(&mut state, &x, &y)?;
+            let loss =
+                exe.train_step_sharded(&mut state, &x, &y, cfg.shards)?;
 
             epoch_loss += loss as f64;
             n_batches += 1;

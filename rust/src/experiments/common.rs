@@ -1,5 +1,13 @@
 //! Shared experiment machinery: grid execution, S_0 baseline caching,
 //! table rendering, TSV output.
+//!
+//! Grid sweeps are data-parallel: the per-seed runs of a grid point fan
+//! out across the global worker pool ([`WorkerPool::global`],
+//! `BLOOMREC_THREADS`) via `scope_map`, with results collected in seed
+//! order — every run is deterministic in its `(task, method, ratio,
+//! seed)` key, so the sweep's tables are identical for every thread
+//! count. Results stay memoised under the same keys as the serial
+//! sweep.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -12,6 +20,7 @@ use crate::config::Options;
 use crate::coordinator::{run, DatasetCache, Method, RunResult, RunSpec};
 use crate::runtime::Runtime;
 use crate::util::stats::mean;
+use crate::util::threadpool::WorkerPool;
 
 /// Execution context threaded through every experiment.
 pub struct Ctx<'a> {
@@ -62,13 +71,7 @@ impl<'a> Ctx<'a> {
 
     /// Baseline score S_0 for a task (mean over the option seeds).
     pub fn s0(&self, task: &str) -> Result<f64> {
-        let scores: Result<Vec<f64>> = self
-            .opts
-            .seeds
-            .iter()
-            .map(|&s| Ok(self.point(task, Method::Baseline, 1.0, s)?.score))
-            .collect();
-        Ok(mean(&scores?))
+        Ok(mean(&self.score_over_seeds(task, Method::Baseline, 1.0)?))
     }
 
     /// Baseline result of the FIRST seed (timing reference T_0 in Fig. 3).
@@ -76,13 +79,16 @@ impl<'a> Ctx<'a> {
         self.point(task, Method::Baseline, 1.0, self.opts.seeds[0])
     }
 
-    /// Mean of `score` over all seeds for a point.
+    /// `score` over all seeds for a grid point, the per-seed runs fanned
+    /// across the global worker pool and collected in seed order
+    /// (deterministic: each run depends only on its key).
     pub fn score_over_seeds(&self, task: &str, method: Method, ratio: f64)
         -> Result<Vec<f64>> {
-        self.opts
-            .seeds
-            .iter()
-            .map(|&s| Ok(self.point(task, method, ratio, s)?.score))
+        WorkerPool::global()
+            .scope_map(&self.opts.seeds, |&s| {
+                Ok(self.point(task, method, ratio, s)?.score)
+            })
+            .into_iter()
             .collect()
     }
 

@@ -26,10 +26,25 @@
 //!
 //! Everything is plain scalar Rust: the auto-vectorizer does well on the
 //! tight `axpy` loops, and no `unsafe` is needed.
+//!
+//! **Parallel entry points.** Every kernel has a `par_*` twin (and
+//! [`PackedB::matmul`] for the packed kernel) that fans disjoint output
+//! blocks across [`crate::util::threadpool::WorkerPool::global`]:
+//! C row-blocks for the forward shapes, weight-row blocks for the
+//! gradient accumulators. Each worker owns its output rows outright and
+//! runs the serial kernel (or the serial per-element accumulation
+//! order) on them, so the parallel arms are **bit-identical** to the
+//! serial kernels for every thread count — determinism is a structural
+//! property of the partition, not a numerical accident. Kernels fall
+//! back to the serial arm below a per-worker work threshold
+//! (`PAR_MIN_WORK`, rationale at its definition) and on single-worker
+//! pools.
 
 // kernel entry points take positional (ptr, dims...) argument lists by
 // design — grouping them into structs would obscure the BLAS-like shape
 #![allow(clippy::too_many_arguments)]
+
+use crate::util::threadpool::WorkerPool;
 
 /// Column-tile width in f32s (one tile row = 256 bytes = 4 cache lines).
 pub const NR: usize = 64;
@@ -152,6 +167,37 @@ impl PackedB {
             j0 += tw;
         }
         PackedB { k, n, data }
+    }
+}
+
+impl PackedB {
+    /// Parallel `C = beta * C + A @ B` over this pack: disjoint C
+    /// row-blocks across the global pool, each running [`gemm_packed`]
+    /// — bit-identical to the serial call for every thread count (and
+    /// therefore to [`gemm`] over the unpacked matrix). The recurrent
+    /// `wh` projection steps all `[N, h]` session rows through this.
+    pub fn matmul(&self, a: &[f32], c: &mut [f32], m: usize, beta: f32) {
+        self.matmul_pooled(WorkerPool::global(), a, c, m, beta)
+    }
+
+    fn matmul_pooled(&self, pool: WorkerPool, a: &[f32], c: &mut [f32],
+                     m: usize, beta: f32) {
+        let (k, n) = (self.k, self.n);
+        let t = if n == 0 {
+            1
+        } else {
+            fanout(pool.threads(), m, m * k * n)
+        };
+        if t <= 1 {
+            return gemm_packed(a, self, c, m, k, n, beta);
+        }
+        let rows_per = m.div_ceil(t);
+        pool.scope_chunks(c, rows_per * n, |i, cc| {
+            let r0 = i * rows_per;
+            let rows = cc.len() / n;
+            gemm_packed(&a[r0 * k..(r0 + rows) * k], self, cc, rows, k,
+                        n, beta);
+        });
     }
 }
 
@@ -353,6 +399,232 @@ pub fn broadcast_bias(out: &mut [f32], bias: &[f32], rows: usize,
     }
 }
 
+// ---------------------------------------------------------------------
+// Parallel entry points: disjoint output blocks across the worker pool,
+// bit-identical to the serial kernels (see the module docs).
+
+/// Minimum multiply-accumulate count per worker before a kernel fans
+/// out: a scoped-thread spawn+join costs tens of microseconds, and 2^18
+/// mul-adds is ~100-250us of serial kernel time — below that the spawn
+/// overhead would eat the win. The threshold only picks serial vs
+/// parallel execution; it can never change a result bit.
+const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Workers for `rows` disjoint output rows carrying `work` total
+/// mul-adds: capped by the pool, the row count, and the per-worker
+/// minimum.
+#[inline]
+fn fanout(threads: usize, rows: usize, work: usize) -> usize {
+    if rows < 2 {
+        return 1;
+    }
+    threads.min(rows).min((work / PAR_MIN_WORK).max(1))
+}
+
+/// [`gemm`] with disjoint C row-blocks fanned across the global pool;
+/// each worker runs the serial kernel on its own rows, so the result is
+/// bit-identical to [`gemm`] for every thread count.
+pub fn par_gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
+                n: usize, beta: f32) {
+    gemm_pooled(WorkerPool::global(), a, b, c, m, k, n, beta)
+}
+
+fn gemm_pooled(pool: WorkerPool, a: &[f32], b: &[f32], c: &mut [f32],
+               m: usize, k: usize, n: usize, beta: f32) {
+    let t = if n == 0 {
+        1
+    } else {
+        fanout(pool.threads(), m, m * k * n)
+    };
+    if t <= 1 {
+        return gemm(a, b, c, m, k, n, beta);
+    }
+    let rows_per = m.div_ceil(t);
+    pool.scope_chunks(c, rows_per * n, |i, cc| {
+        let r0 = i * rows_per;
+        let rows = cc.len() / n;
+        gemm(&a[r0 * k..(r0 + rows) * k], b, cc, rows, k, n, beta);
+    });
+}
+
+/// [`gemm_nt`] with disjoint C row-blocks fanned across the global
+/// pool — bit-identical to the serial kernel for every thread count.
+pub fn par_gemm_nt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize,
+                   k: usize, n: usize, beta: f32) {
+    gemm_nt_pooled(WorkerPool::global(), a, bt, c, m, k, n, beta)
+}
+
+fn gemm_nt_pooled(pool: WorkerPool, a: &[f32], bt: &[f32], c: &mut [f32],
+                  m: usize, k: usize, n: usize, beta: f32) {
+    let t = if n == 0 {
+        1
+    } else {
+        fanout(pool.threads(), m, m * k * n)
+    };
+    if t <= 1 {
+        return gemm_nt(a, bt, c, m, k, n, beta);
+    }
+    let rows_per = m.div_ceil(t);
+    pool.scope_chunks(c, rows_per * n, |i, cc| {
+        let r0 = i * rows_per;
+        let rows = cc.len() / n;
+        gemm_nt(&a[r0 * k..(r0 + rows) * k], bt, cc, rows, k, n, beta);
+    });
+}
+
+/// [`gemm_tn_acc`] with disjoint `dw` *weight-row* blocks fanned across
+/// the global pool. Every worker walks the full batch in ascending-r
+/// order and accumulates only its own `dw` rows, so each element
+/// receives exactly the serial kernel's addition sequence —
+/// bit-identical for every thread count. (This is the "reduce shard
+/// contributions serially in fixed order" arm of the sharded trainer:
+/// no intermediate per-shard partials ever materialize.)
+pub fn par_gemm_tn_acc(a: &[f32], g: &[f32], dw: &mut [f32], rows: usize,
+                       n: usize, p: usize) {
+    gemm_tn_acc_pooled(WorkerPool::global(), a, g, dw, rows, n, p)
+}
+
+fn gemm_tn_acc_pooled(pool: WorkerPool, a: &[f32], g: &[f32],
+                      dw: &mut [f32], rows: usize, n: usize, p: usize) {
+    let t = if p == 0 {
+        1
+    } else {
+        fanout(pool.threads(), n, rows * n * p)
+    };
+    if t <= 1 {
+        return gemm_tn_acc(a, g, dw, rows, n, p);
+    }
+    let wrows_per = n.div_ceil(t);
+    pool.scope_chunks(dw, wrows_per * p, |b, chunk| {
+        let n0 = b * wrows_per;
+        let nn = chunk.len() / p;
+        for r in 0..rows {
+            let arow = &a[r * n + n0..r * n + n0 + nn];
+            let grow = &g[r * p..(r + 1) * p];
+            for (kk, &av) in arow.iter().enumerate() {
+                axpy(&mut chunk[kk * p..(kk + 1) * p], grow, av);
+            }
+        }
+    });
+}
+
+/// [`gemm_nt_relu_masked`] with disjoint `gp` row-blocks fanned across
+/// the global pool — bit-identical to the serial kernel for every
+/// thread count.
+pub fn par_gemm_nt_relu_masked(g: &[f32], w: &[f32], h: &[f32],
+                               gp: &mut [f32], rows: usize, p: usize,
+                               n: usize) {
+    gemm_nt_relu_masked_pooled(WorkerPool::global(), g, w, h, gp, rows,
+                               p, n)
+}
+
+fn gemm_nt_relu_masked_pooled(pool: WorkerPool, g: &[f32], w: &[f32],
+                              h: &[f32], gp: &mut [f32], rows: usize,
+                              p: usize, n: usize) {
+    let t = if n == 0 {
+        1
+    } else {
+        fanout(pool.threads(), rows, rows * p * n)
+    };
+    if t <= 1 {
+        return gemm_nt_relu_masked(g, w, h, gp, rows, p, n);
+    }
+    let rows_per = rows.div_ceil(t);
+    pool.scope_chunks(gp, rows_per * n, |i, chunk| {
+        let r0 = i * rows_per;
+        let rr = chunk.len() / n;
+        gemm_nt_relu_masked(&g[r0 * p..(r0 + rr) * p], w,
+                            &h[r0 * n..(r0 + rr) * n], chunk, rr, p, n);
+    });
+}
+
+/// Total CSR entries of `rows` consecutive logical rows: exact for flat
+/// batches (`stride == 1`), a conservative per-row estimate for strided
+/// sequence steps (whose entries are not contiguous in `indptr`).
+#[inline]
+fn spmm_nnz(indptr: &[usize], rows: usize, base: usize, stride: usize)
+    -> usize {
+    if rows == 0 {
+        0
+    } else if stride == 1 {
+        indptr[base + rows] - indptr[base]
+    } else {
+        rows
+    }
+}
+
+/// [`spmm_gather`] with disjoint output row-blocks fanned across the
+/// global pool (each worker gathers its own rows' entries) —
+/// bit-identical to the serial kernel for every thread count.
+pub fn par_spmm_gather(indptr: &[usize], indices: &[u32], vals: &[f32],
+                       rows: usize, base: usize, stride: usize,
+                       w: &[f32], p: usize, out: &mut [f32]) {
+    spmm_gather_pooled(WorkerPool::global(), indptr, indices, vals, rows,
+                       base, stride, w, p, out)
+}
+
+fn spmm_gather_pooled(pool: WorkerPool, indptr: &[usize], indices: &[u32],
+                      vals: &[f32], rows: usize, base: usize,
+                      stride: usize, w: &[f32], p: usize,
+                      out: &mut [f32]) {
+    let work = spmm_nnz(indptr, rows, base, stride) * p;
+    let t = fanout(pool.threads(), rows, work);
+    if t <= 1 {
+        return spmm_gather(indptr, indices, vals, rows, base, stride, w,
+                           p, out);
+    }
+    let rows_per = rows.div_ceil(t);
+    pool.scope_chunks(&mut out[..rows * p], rows_per * p, |i, chunk| {
+        let r0 = i * rows_per;
+        let rr = chunk.len() / p;
+        spmm_gather(indptr, indices, vals, rr, base + r0 * stride,
+                    stride, w, p, chunk);
+    });
+}
+
+/// [`spmm_scatter`] with disjoint `dw` *weight-row* blocks fanned across
+/// the global pool: every worker walks all CSR entries in the serial
+/// (ascending-row, ascending-entry) order and accumulates only the
+/// entries whose position lands in its block, so each `dw` element
+/// receives exactly the serial addition sequence — bit-identical for
+/// every thread count.
+pub fn par_spmm_scatter(indptr: &[usize], indices: &[u32], vals: &[f32],
+                        rows: usize, base: usize, stride: usize,
+                        g: &[f32], p: usize, dw: &mut [f32]) {
+    spmm_scatter_pooled(WorkerPool::global(), indptr, indices, vals,
+                        rows, base, stride, g, p, dw)
+}
+
+fn spmm_scatter_pooled(pool: WorkerPool, indptr: &[usize],
+                       indices: &[u32], vals: &[f32], rows: usize,
+                       base: usize, stride: usize, g: &[f32], p: usize,
+                       dw: &mut [f32]) {
+    let n = if p == 0 { 0 } else { dw.len() / p };
+    let work = spmm_nnz(indptr, rows, base, stride) * p;
+    let t = fanout(pool.threads(), n, work);
+    if t <= 1 {
+        return spmm_scatter(indptr, indices, vals, rows, base, stride,
+                            g, p, dw);
+    }
+    let wrows_per = n.div_ceil(t);
+    pool.scope_chunks(dw, wrows_per * p, |b, chunk| {
+        let w0 = b * wrows_per;
+        let w1 = w0 + chunk.len() / p;
+        for r in 0..rows {
+            let s = base + r * stride;
+            let (lo, hi) = (indptr[s], indptr[s + 1]);
+            let grow = &g[r * p..(r + 1) * p];
+            for (&i, &v) in indices[lo..hi].iter().zip(&vals[lo..hi]) {
+                let i = i as usize;
+                if i >= w0 && i < w1 {
+                    axpy(&mut chunk[(i - w0) * p..(i - w0 + 1) * p],
+                         grow, v);
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,5 +807,118 @@ mod tests {
         let mut out = vec![0.0f32; 6];
         broadcast_bias(&mut out, &[1.0, 2.0], 3, 2);
         assert_eq!(out, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn fanout_respects_row_and_work_caps() {
+        assert_eq!(fanout(8, 1, usize::MAX), 1); // single row: serial
+        assert_eq!(fanout(8, 64, PAR_MIN_WORK - 1), 1); // tiny work
+        assert_eq!(fanout(8, 64, 2 * PAR_MIN_WORK), 2);
+        assert_eq!(fanout(8, 3, 100 * PAR_MIN_WORK), 3); // row cap
+        assert_eq!(fanout(4, 64, 100 * PAR_MIN_WORK), 4); // pool cap
+    }
+
+    /// Every pooled kernel must be bit-identical to its serial arm, at
+    /// shapes big enough to clear the fan-out threshold (64x128x128 =
+    /// 2^20 mul-adds -> 4 workers at an 8-thread pool) and at ragged
+    /// row counts that leave a short final block.
+    #[test]
+    fn pooled_kernels_bit_identical_to_serial() {
+        let mut rng = Rng::new(0x9A11);
+        for &(m, k, n) in &[(64usize, 128usize, 128usize), (67, 129, 65)] {
+            let a = rand_mat(&mut rng, m * k, 0.3);
+            let b = rand_mat(&mut rng, k * n, 0.0);
+            let bt = rand_mat(&mut rng, n * k, 0.0);
+            let seed = rand_mat(&mut rng, m * n, 0.0);
+            let mut want = seed.clone();
+            gemm(&a, &b, &mut want, m, k, n, 1.0);
+            let mut want_nt = seed.clone();
+            gemm_nt(&a, &bt, &mut want_nt, m, k, n, 1.0);
+            let bp = PackedB::pack(&b, k, n);
+            let mut want_packed = seed.clone();
+            gemm_packed(&a, &bp, &mut want_packed, m, k, n, 1.0);
+            // reuse b as [n, k] A and bt as [n, k] G: dw is [k, k]
+            let mut want_tn = vec![0.0f32; k * k];
+            gemm_tn_acc(&b, &bt, &mut want_tn, n, k, k);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::with_threads(threads);
+                let mut c = seed.clone();
+                gemm_pooled(pool, &a, &b, &mut c, m, k, n, 1.0);
+                assert_eq!(c, want, "par_gemm t={threads} {m}x{k}x{n}");
+                let mut c = seed.clone();
+                bp.matmul_pooled(pool, &a, &mut c, m, 1.0);
+                assert_eq!(c, want_packed,
+                           "PackedB::matmul t={threads} {m}x{k}x{n}");
+                let mut c = seed.clone();
+                gemm_nt_pooled(pool, &a, &bt, &mut c, m, k, n, 1.0);
+                assert_eq!(c, want_nt,
+                           "par_gemm_nt t={threads} {m}x{k}x{n}");
+                let mut dw = vec![0.0f32; k * k];
+                gemm_tn_acc_pooled(pool, &b, &bt, &mut dw, n, k, k);
+                assert_eq!(dw, want_tn,
+                           "par_gemm_tn_acc t={threads} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_relu_masked_backward_bit_identical() {
+        let mut rng = Rng::new(0x9A12);
+        let (rows, p, n) = (65usize, 96usize, 80usize);
+        let g = rand_mat(&mut rng, rows * p, 0.0);
+        let w = rand_mat(&mut rng, n * p, 0.0);
+        let h = rand_mat(&mut rng, rows * n, 0.4);
+        let mut want = vec![0.0f32; rows * n];
+        gemm_nt_relu_masked(&g, &w, &h, &mut want, rows, p, n);
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::with_threads(threads);
+            let mut gp = vec![0.0f32; rows * n];
+            gemm_nt_relu_masked_pooled(pool, &g, &w, &h, &mut gp, rows,
+                                       p, n);
+            assert_eq!(gp, want, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_spmm_bit_identical_to_serial() {
+        let mut rng = Rng::new(0x9A13);
+        // dense enough that nnz * p clears the fan-out threshold
+        let (rows, k, p) = (96usize, 90usize, 128usize);
+        let w = rand_mat(&mut rng, k * p, 0.0);
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..rows {
+            let nnz = 60 + rng.below(30);
+            let mut pos: Vec<usize> = rng.sample_distinct(k, nnz.min(k));
+            pos.sort_unstable();
+            for i in pos {
+                indices.push(i as u32);
+                vals.push(rng.normal() as f32);
+            }
+            indptr.push(indices.len());
+        }
+        // gather (out has live rows plus padding rows the kernel must
+        // not touch)
+        let seed = rand_mat(&mut rng, (rows + 3) * p, 0.0);
+        let mut want = seed.clone();
+        spmm_gather(&indptr, &indices, &vals, rows, 0, 1, &w, p,
+                    &mut want);
+        // scatter
+        let g = rand_mat(&mut rng, rows * p, 0.0);
+        let mut want_dw = vec![0.0f32; k * p];
+        spmm_scatter(&indptr, &indices, &vals, rows, 0, 1, &g, p,
+                     &mut want_dw);
+        for threads in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::with_threads(threads);
+            let mut out = seed.clone();
+            spmm_gather_pooled(pool, &indptr, &indices, &vals, rows, 0,
+                               1, &w, p, &mut out);
+            assert_eq!(out, want, "par gather t={threads}");
+            let mut dw = vec![0.0f32; k * p];
+            spmm_scatter_pooled(pool, &indptr, &indices, &vals, rows, 0,
+                                1, &g, p, &mut dw);
+            assert_eq!(dw, want_dw, "par scatter t={threads}");
+        }
     }
 }

@@ -173,6 +173,7 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
         epochs: opts.epochs.unwrap_or(task.epochs),
         seed: spec.seed,
         verbose: true,
+        shards: 0, // auto-size micro-shards from the worker pool
     };
     let (state, _) =
         coordinator::train(&rt, &train_spec, &ds, emb.as_ref(), &cfg)?;

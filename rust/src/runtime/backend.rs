@@ -32,6 +32,13 @@
 //! [`BatchedHiddenState`]) that packs N live sessions' hidden states
 //! into one `[N, h]` matrix so a single blocked GEMM advances all of
 //! them (the micro-batching `serve::Server` scheduler's hot path).
+//!
+//! Training additionally exposes a data-parallel entry point
+//! ([`Execution::train_step_sharded`]): the coordinator passes a
+//! micro-shard count and sharding-aware backends fan the minibatch's
+//! rows across the global worker pool, bit-identically to the serial
+//! call — the sharded loss curve never depends on shard or thread
+//! count.
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -487,6 +494,24 @@ pub trait Execution: Send + Sync {
         state.params = outputs;
         state.opt_state = new_opt;
         Ok(loss)
+    }
+
+    /// [`Execution::train_step`] with an explicit micro-shard hint for
+    /// data-parallel backends: the native interpreters partition the
+    /// minibatch's rows into `shards` contiguous blocks and fan the
+    /// forward/backward work across the global worker pool (`0` =
+    /// auto-size from the pool). Sharding is an *execution* detail,
+    /// never a semantic one — implementations guarantee the returned
+    /// loss and the updated state are bit-identical to the serial
+    /// 1-shard call for every shard count and every thread count
+    /// (per-row work is row-disjoint, and cross-row gradient reductions
+    /// keep the serial fixed-order accumulation; see
+    /// `docs/ARCHITECTURE.md`, "Parallel execution layer"). The default
+    /// ignores the hint.
+    fn train_step_sharded(&self, state: &mut ModelState, x: &BatchInput,
+                          y: &BatchTarget, shards: usize) -> Result<f32> {
+        let _ = shards;
+        self.train_step(state, x, y)
     }
 
     /// Whether this execution implements the stateful recurrent

@@ -15,17 +15,26 @@
 //! active positions, gradients are `gemm_tn_acc`/`spmm_scatter`.
 //! Accumulation order equals the dense path's (positions ascending), so
 //! sparse and dense results agree bit-for-bit.
+//!
+//! Execution is data-parallel: the forward pass splits the batch's rows
+//! into contiguous micro-shards fanned across the global worker pool
+//! ([`crate::util::threadpool::WorkerPool`]), and the backward pass
+//! reduces weight gradients with the parallel kernels (disjoint output
+//! blocks, serial fixed-order accumulation inside). Both are
+//! bit-identical to the serial single-shard step for every shard count
+//! and thread count — parallelism never moves the loss curve.
 
 use anyhow::{bail, Result};
 
 use super::{loss_and_grad, optimizer_step, softmax_in_place};
-use crate::linalg::gemm::{broadcast_bias, gemm, gemm_nt_relu_masked,
-                          gemm_tn_acc, spmm_gather, spmm_scatter};
+use crate::linalg::gemm::{broadcast_bias, gemm, par_gemm_nt_relu_masked,
+                          par_gemm_tn_acc, par_spmm_scatter,
+                          spmm_gather};
 use crate::model::ModelState;
-use crate::runtime::backend::{BatchInput, BatchTarget, Execution,
-                              SparseBatch};
+use crate::runtime::backend::{BatchInput, BatchTarget, Execution};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::{HostTensor, HostTensorI32};
+use crate::util::threadpool::{split_ranges, WorkerPool};
 
 #[inline]
 fn relu_in_place(v: &mut [f32]) {
@@ -100,49 +109,27 @@ impl NativeExecution {
         Ok(())
     }
 
-    /// `out[r] = relu?(h[r] @ w + b)` for `bsz` rows; `w` is `[n, p]`
-    /// row-major. One blocked `gemm` over the batch (zero activations
-    /// skipped inside the kernel — post-ReLU activations and multi-hot
-    /// inputs are mostly zero).
-    fn dense_layer(h: &[f32], bsz: usize, n: usize, w: &[f32], b: &[f32],
-                   p: usize, relu: bool) -> Vec<f32> {
+    /// `out[r] = relu?(h[r] @ w + b)` for `bsz` rows into the caller's
+    /// buffer; `w` is `[n, p]` row-major. One blocked `gemm` over the
+    /// rows (zero activations skipped inside the kernel — post-ReLU
+    /// activations and multi-hot inputs are mostly zero).
+    fn dense_layer_into(h: &[f32], bsz: usize, n: usize, w: &[f32],
+                        b: &[f32], p: usize, relu: bool,
+                        out: &mut [f32]) {
         debug_assert_eq!(h.len(), bsz * n);
         debug_assert_eq!(w.len(), n * p);
-        let mut out = vec![0.0f32; bsz * p];
-        broadcast_bias(&mut out, b, bsz, p);
-        gemm(h, w, &mut out, bsz, n, p, 1.0);
+        debug_assert_eq!(out.len(), bsz * p);
+        broadcast_bias(out, b, bsz, p);
+        gemm(h, w, out, bsz, n, p, 1.0);
         if relu {
-            relu_in_place(&mut out);
+            relu_in_place(out);
         }
-        out
     }
 
-    /// First layer from sparse rows: one column-tiled `spmm_gather` over
-    /// the whole batch's active positions, O(nnz * p). Rows past
-    /// `sb.rows()` are the zero-input (bias-only) padding rows of the
-    /// static batch.
-    fn sparse_first_layer(sb: &SparseBatch, bsz: usize, w: &[f32],
-                          b: &[f32], p: usize, relu: bool) -> Vec<f32> {
-        let mut out = vec![0.0f32; bsz * p];
-        broadcast_bias(&mut out, b, bsz, p);
-        spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
-                    bsz.min(sb.rows()), 0, 1, w, p, &mut out);
-        if relu {
-            relu_in_place(&mut out);
-        }
-        out
-    }
-
-    /// Forward pass over the first `rows` rows of the batch (sparse rows
-    /// past `sb.rows()` are the zero-input padding rows). Returns the
-    /// post-ReLU hidden activations (inputs to layers 1..) and the final
-    /// pre-activation logits, both `rows` tall.
-    fn forward_rows(&self, params: &[HostTensor], x: &BatchInput,
-                    rows: usize) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
-        self.check_params(params)?;
-        let nl = self.dims.len() - 1;
-        let relu0 = nl > 1;
-        let mut h = match x {
+    /// Shape-check a batch input against the artifact contract (once per
+    /// call, before any shard fans out).
+    fn validate_input(&self, x: &BatchInput) -> Result<()> {
+        match x {
             BatchInput::Sparse(sb) => {
                 if sb.m_in != self.dims[0] {
                     bail!("sparse batch m_in {} != artifact m_in {}",
@@ -152,35 +139,172 @@ impl NativeExecution {
                     bail!("sparse batch has {} rows, artifact batch is {}",
                           sb.rows(), self.spec.batch);
                 }
-                Self::sparse_first_layer(sb, rows, &params[0].data,
-                                         &params[1].data, self.dims[1],
-                                         relu0)
             }
             BatchInput::Dense(t) => {
                 if t.data.len() != self.spec.batch * self.dims[0] {
                     bail!("dense batch has {} elements, expected {}x{}",
                           t.data.len(), self.spec.batch, self.dims[0]);
                 }
-                Self::dense_layer(&t.data[..rows * self.dims[0]], rows,
-                                  self.dims[0], &params[0].data,
-                                  &params[1].data, self.dims[1], relu0)
             }
             BatchInput::SparseSeq(_) => {
                 bail!("ff artifact '{}' takes flat batches, got a sparse \
                        sequence batch", self.spec.name);
             }
-        };
-        let mut hidden: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
+        }
+        Ok(())
+    }
+
+    /// Forward pass over rows `[lo, hi)` of the batch — one micro-shard
+    /// — writing straight into the caller's stitched buffers:
+    /// `hidden_out[l]` receives the shard's rows of hidden layer
+    /// `l + 1`'s post-ReLU activations, `logits_out` its pre-activation
+    /// logits (no per-shard temporaries, no re-copy). The first layer
+    /// is a column-tiled `spmm_gather` over the shard's active
+    /// positions (sparse rows past `sb.rows()` are the zero-input
+    /// bias-only padding rows of the static batch); the kernels inside
+    /// a shard stay serial — the shards are the fan-out. Every row's
+    /// math is independent of the shard partition, which is what makes
+    /// sharded forwards bit-identical to serial ones.
+    fn forward_range_into(&self, params: &[HostTensor], x: &BatchInput,
+                          lo: usize, hi: usize,
+                          hidden_out: &mut [&mut [f32]],
+                          logits_out: &mut [f32]) -> Result<()> {
+        let rows = hi - lo;
+        let nl = self.dims.len() - 1;
+        let relu0 = nl > 1;
+        {
+            let p = self.dims[1];
+            let dst: &mut [f32] = if nl > 1 {
+                &mut hidden_out[0][..]
+            } else {
+                &mut logits_out[..]
+            };
+            debug_assert_eq!(dst.len(), rows * p);
+            match x {
+                BatchInput::Sparse(sb) => {
+                    let live = sb.rows().min(hi).saturating_sub(lo);
+                    broadcast_bias(dst, &params[1].data, rows, p);
+                    spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
+                                live, lo, 1, &params[0].data, p, dst);
+                    if relu0 {
+                        relu_in_place(dst);
+                    }
+                }
+                BatchInput::Dense(t) => {
+                    let d0 = self.dims[0];
+                    Self::dense_layer_into(&t.data[lo * d0..hi * d0],
+                                           rows, d0, &params[0].data,
+                                           &params[1].data, p, relu0,
+                                           dst);
+                }
+                BatchInput::SparseSeq(_) => {
+                    bail!("ff artifact '{}' takes flat batches, got a \
+                           sparse sequence batch", self.spec.name);
+                }
+            }
+        }
         for i in 1..nl {
             let relu = i < nl - 1;
-            let next = Self::dense_layer(&h, rows, self.dims[i],
-                                         &params[2 * i].data,
-                                         &params[2 * i + 1].data,
-                                         self.dims[i + 1], relu);
-            hidden.push(h);
-            h = next;
+            let (head, tail) = hidden_out.split_at_mut(i);
+            let src: &[f32] = &head[i - 1][..];
+            let dst: &mut [f32] = if i < nl - 1 {
+                &mut tail[0][..]
+            } else {
+                &mut logits_out[..]
+            };
+            Self::dense_layer_into(src, rows, self.dims[i],
+                                   &params[2 * i].data,
+                                   &params[2 * i + 1].data,
+                                   self.dims[i + 1], relu, dst);
         }
-        Ok((hidden, h))
+        Ok(())
+    }
+
+    /// Data-parallel forward over the first `rows` rows: partition the
+    /// rows into `shards` contiguous micro-shards (`0` = auto-size from
+    /// the worker pool), run [`NativeExecution::forward_range_into`]
+    /// per shard on the pool — each shard writes its disjoint row
+    /// ranges of the shared activation/logit buffers directly, no
+    /// stitch copy. Rows are independent, so the result is
+    /// bit-identical to the 1-shard serial forward for every shard and
+    /// thread count.
+    fn forward_rows(&self, params: &[HostTensor], x: &BatchInput,
+                    rows: usize, shards: usize)
+        -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        self.check_params(params)?;
+        self.validate_input(x)?;
+        let pool = WorkerPool::global();
+        // auto mode sizes shards so each carries enough per-row work
+        // (sparse first layers count their actual active positions, not
+        // m_in) to amortize a scoped spawn — mirroring the kernel
+        // layer's fan-out threshold; an explicit count is honored as
+        // given (clamped to the row count)
+        let s = if shards == 0 {
+            let first = match x {
+                BatchInput::Sparse(sb) => {
+                    (sb.nnz() / rows.max(1)).max(1) * self.dims[1]
+                }
+                _ => self.dims[0] * self.dims[1],
+            };
+            let rest: usize =
+                self.dims[1..].windows(2).map(|w| w[0] * w[1]).sum();
+            // per-shard minimum: 2^18 mul-adds, the kernel layer's rule
+            let cap = (rows * (first + rest)) >> 18;
+            pool.threads().min(rows / 8).min(cap).max(1)
+        } else {
+            shards.min(rows.max(1)).max(1)
+        };
+        let nl = self.dims.len() - 1;
+        let mut hidden: Vec<Vec<f32>> = (1..nl)
+            .map(|i| vec![0.0f32; rows * self.dims[i]])
+            .collect();
+        let mut logits = vec![0.0f32; rows * self.dims[nl]];
+        if s <= 1 {
+            let mut views: Vec<&mut [f32]> =
+                hidden.iter_mut().map(Vec::as_mut_slice).collect();
+            self.forward_range_into(params, x, 0, rows, &mut views,
+                                    &mut logits)?;
+            return Ok((hidden, logits));
+        }
+        // cut every buffer into per-shard row slices derived from the
+        // ranges THEMSELVES (successive split_at_mut by each range's
+        // row count), so the views cannot drift out of sync with the
+        // partition rule
+        let ranges = split_ranges(rows, s);
+        let mut layer_rests: Vec<(&mut [f32], usize)> = hidden
+            .iter_mut()
+            .enumerate()
+            .map(|(l, buf)| (buf.as_mut_slice(), self.dims[l + 1]))
+            .collect();
+        let mut logits_rest: &mut [f32] = &mut logits;
+        let m_out_dim = self.dims[nl];
+        let tasks: Vec<_> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let len = hi - lo;
+                let views: Vec<&mut [f32]> = layer_rests
+                    .iter_mut()
+                    .map(|(rest, dim)| {
+                        let (head, tail) = std::mem::take(rest)
+                            .split_at_mut(len * *dim);
+                        *rest = tail;
+                        head
+                    })
+                    .collect();
+                let (lchunk, ltail) = std::mem::take(&mut logits_rest)
+                    .split_at_mut(len * m_out_dim);
+                logits_rest = ltail;
+                move || {
+                    let mut views = views;
+                    self.forward_range_into(params, x, lo, hi,
+                                            &mut views, lchunk)
+                }
+            })
+            .collect();
+        for res in pool.scope_run(tasks) {
+            res?;
+        }
+        Ok((hidden, logits))
     }
 
     fn predict_impl(&self, params: &[HostTensor], x: &BatchInput)
@@ -195,7 +319,7 @@ impl NativeExecution {
             BatchInput::Sparse(sb) if sb.rows() < bsz => sb.rows() + 1,
             _ => bsz,
         };
-        let (_, mut out) = self.forward_rows(params, x, compute_rows)?;
+        let (_, mut out) = self.forward_rows(params, x, compute_rows, 0)?;
         if self.spec.loss == "softmax_ce" {
             for r in 0..compute_rows {
                 softmax_in_place(&mut out[r * m..(r + 1) * m]);
@@ -212,12 +336,19 @@ impl NativeExecution {
         Ok(HostTensor::from_vec(&[bsz, m], out))
     }
 
+    /// Forward (sharded across the pool) + backward + optimizer update.
+    /// The backward pass reduces weight gradients with the parallel
+    /// kernels' fixed-order accumulation (disjoint *output* blocks, rows
+    /// ascending inside each), so the whole step is bit-identical to
+    /// the serial 1-shard step for every `shards` value and thread
+    /// count.
     fn train_step_impl(&self, state: &mut ModelState, x: &BatchInput,
-                       y: &BatchTarget) -> Result<f32> {
+                       y: &BatchTarget, shards: usize) -> Result<f32> {
         let bsz = self.spec.batch;
         let m_out = self.spec.m_out;
         y.validate(&self.spec)?;
-        let (hidden, logits) = self.forward_rows(&state.params, x, bsz)?;
+        let (hidden, logits) =
+            self.forward_rows(&state.params, x, bsz, shards)?;
         let (loss, mut g) =
             loss_and_grad(&self.spec.loss, &logits, y, bsz, m_out)?;
 
@@ -238,13 +369,14 @@ impl NativeExecution {
             if layer == 0 {
                 match x {
                     BatchInput::Sparse(sb) => {
-                        // scatter: dW0[i] += v * g_row, O(nnz * p)
-                        spmm_scatter(&sb.indptr, &sb.indices,
-                                     &sb.weights, sb.rows(), 0, 1, &g, p,
-                                     &mut dw);
+                        // scatter: dW0[i] += v * g_row, O(nnz * p),
+                        // weight-row blocks across the pool
+                        par_spmm_scatter(&sb.indptr, &sb.indices,
+                                         &sb.weights, sb.rows(), 0, 1,
+                                         &g, p, &mut dw);
                     }
                     BatchInput::Dense(t) => {
-                        gemm_tn_acc(&t.data, &g, &mut dw, bsz, n, p);
+                        par_gemm_tn_acc(&t.data, &g, &mut dw, bsz, n, p);
                     }
                     BatchInput::SparseSeq(_) => {
                         bail!("ff artifact '{}' takes flat batches",
@@ -252,14 +384,15 @@ impl NativeExecution {
                     }
                 }
             } else {
-                gemm_tn_acc(&hidden[layer - 1], &g, &mut dw, bsz, n, p);
+                par_gemm_tn_acc(&hidden[layer - 1], &g, &mut dw, bsz, n,
+                                p);
             }
             if layer > 0 {
                 // g_prev = (g @ W^T) * relu'(h): only where h > 0
                 let w = &state.params[2 * layer].data;
                 let mut gp = vec![0.0f32; bsz * n];
-                gemm_nt_relu_masked(&g, w, &hidden[layer - 1], &mut gp,
-                                    bsz, p, n);
+                par_gemm_nt_relu_masked(&g, w, &hidden[layer - 1],
+                                        &mut gp, bsz, p, n);
                 g = gp;
             }
             grads[2 * layer] = dw;
@@ -287,7 +420,12 @@ impl Execution for NativeExecution {
 
     fn train_step(&self, state: &mut ModelState, x: &BatchInput,
                   y: &BatchTarget) -> Result<f32> {
-        self.train_step_impl(state, x, y)
+        self.train_step_impl(state, x, y, 0)
+    }
+
+    fn train_step_sharded(&self, state: &mut ModelState, x: &BatchInput,
+                          y: &BatchTarget, shards: usize) -> Result<f32> {
+        self.train_step_impl(state, x, y, shards)
     }
 
     fn run(&self, inputs: &[&HostTensor], i32_inputs: &[&HostTensorI32])
@@ -312,7 +450,7 @@ impl Execution for NativeExecution {
                 };
                 let x = BatchInput::Dense(inputs[p + s].clone());
                 let y = BatchTarget::Dense(inputs[p + s + 1].clone());
-                let loss = self.train_step_impl(&mut state, &x, &y)?;
+                let loss = self.train_step_impl(&mut state, &x, &y, 0)?;
                 let mut out = state.params;
                 out.append(&mut state.opt_state);
                 out.push(HostTensor::scalar(loss));

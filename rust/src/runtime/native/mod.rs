@@ -15,7 +15,12 @@
 //! [`loss_and_grad`]) and the four optimizers of
 //! python/compile/optim.py, implemented here as free functions. Hot
 //! matmuls route through the blocked kernel layer in
-//! [`crate::linalg::gemm`]. The
+//! [`crate::linalg::gemm`], using its parallel entry points — both
+//! interpreters are data-parallel over the global worker pool
+//! ([`crate::util::threadpool::WorkerPool`], `BLOOMREC_THREADS`) with
+//! results bit-identical to serial execution for every shard and
+//! thread count (see [`crate::runtime::backend::Execution::train_step_sharded`]).
+//! The
 //! default build therefore trains, evaluates and serves every task —
 //! ml/msd/amz/bc/cade *and* yc/ptb — without the XLA toolchain; the PJRT
 //! path stays behind the `xla` feature for AOT artifact execution.

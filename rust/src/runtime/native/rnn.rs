@@ -29,7 +29,10 @@
 //! (packed once per window, reused across all `seq_len` steps), the
 //! sparse input gather is a column-tiled `spmm_gather` over the whole
 //! batch's active positions, and the backward projections are
-//! `gemm_nt`/`gemm_tn_acc`. The stateful serving interface comes in
+//! `gemm_nt`/`gemm_tn_acc` — all through the kernel layer's parallel
+//! entry points, which fan disjoint row/output blocks across the global
+//! worker pool per timestep, bit-identically to the serial kernels for
+//! every thread count. The stateful serving interface comes in
 //! both per-session ([`Execution::step`]/[`Execution::readout`]) and
 //! batched ([`Execution::step_batch`]/[`Execution::readout_batch`])
 //! forms; both share one implementation, so stepping N packed sessions
@@ -44,9 +47,9 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::{loss_and_grad, optimizer_step, softmax_in_place};
-use crate::linalg::gemm::{broadcast_bias, gemm, gemm_nt, gemm_packed,
-                          gemm_tn_acc, spmm_gather, spmm_scatter,
-                          PackedB};
+use crate::linalg::gemm::{broadcast_bias, par_gemm, par_gemm_nt,
+                          par_gemm_tn_acc, par_spmm_gather,
+                          par_spmm_scatter, PackedB};
 use crate::model::ModelState;
 use crate::runtime::backend::{BatchInput, BatchTarget,
                               BatchedHiddenState, Execution, HiddenState};
@@ -171,9 +174,9 @@ impl RecurrentExecution {
         broadcast_bias(&mut xg, bg, rows, gh);
         match x {
             BatchInput::SparseSeq(sb) => {
-                spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
-                            rows.min(sb.rows()), t, sb.seq_len, wx, gh,
-                            &mut xg);
+                par_spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
+                                rows.min(sb.rows()), t, sb.seq_len, wx,
+                                gh, &mut xg);
             }
             BatchInput::Dense(xt) => {
                 let m = self.spec.m_in;
@@ -220,8 +223,8 @@ impl RecurrentExecution {
                     bail!("step batch has {} rows, hidden state has {rows}",
                           sb.rows());
                 }
-                spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
-                            sb.rows(), 0, 1, wx, gh, &mut xg);
+                par_spmm_gather(&sb.indptr, &sb.indices, &sb.weights,
+                                sb.rows(), 0, 1, wx, gh, &mut xg);
             }
             BatchInput::Dense(xt) => {
                 let m = self.spec.m_in;
@@ -229,7 +232,7 @@ impl RecurrentExecution {
                     bail!("dense step batch has {} elements, expected \
                            {rows}x{m}", xt.data.len());
                 }
-                gemm(&xt.data, wx, &mut xg, rows, m, gh, 1.0);
+                par_gemm(&xt.data, wx, &mut xg, rows, m, gh, 1.0);
             }
             BatchInput::SparseSeq(_) => {
                 bail!("step consumes one flat input row per session, \
@@ -385,7 +388,8 @@ impl RecurrentExecution {
         let mut hg = vec![0.0f32; rows * gh];
         for t in 0..self.spec.seq_len {
             let xg = self.input_gates_seq(wx, bg, x, t, rows)?;
-            gemm_packed(&hstate, &wh_packed, &mut hg, rows, h, gh, 0.0);
+            // one packed GEMM per timestep, row-blocked across the pool
+            wh_packed.matmul(&hstate, &mut hg, rows, 0.0);
             if keep_trace {
                 trace.h_prev.push(hstate.clone());
             }
@@ -401,7 +405,7 @@ impl RecurrentExecution {
         let bo = &params[4].data;
         let mut logits = vec![0.0f32; rows * m_out];
         broadcast_bias(&mut logits, bo, rows, m_out);
-        gemm(&hstate, wo, &mut logits, rows, h, m_out, 1.0);
+        par_gemm(&hstate, wo, &mut logits, rows, h, m_out, 1.0);
         if keep_trace {
             trace.h_last = hstate;
             Ok((Some(trace), logits))
@@ -446,9 +450,9 @@ impl RecurrentExecution {
         let gh = self.gates * self.hidden;
         match x {
             BatchInput::SparseSeq(sb) => {
-                spmm_scatter(&sb.indptr, &sb.indices, &sb.weights,
-                             rows.min(sb.rows()), t, sb.seq_len, dxg, gh,
-                             dwx);
+                par_spmm_scatter(&sb.indptr, &sb.indices, &sb.weights,
+                                 rows.min(sb.rows()), t, sb.seq_len, dxg,
+                                 gh, dwx);
             }
             BatchInput::Dense(xt) => {
                 let m = self.spec.m_in;
@@ -494,7 +498,7 @@ impl RecurrentExecution {
 
         // output head gradients
         let mut dwo = vec![0.0f32; h * m_out];
-        gemm_tn_acc(&trace.h_last, &dlogits, &mut dwo, bsz, h, m_out);
+        par_gemm_tn_acc(&trace.h_last, &dlogits, &mut dwo, bsz, h, m_out);
         let mut dbo = vec![0.0f32; m_out];
         for r in 0..bsz {
             let grow = &dlogits[r * m_out..(r + 1) * m_out];
@@ -504,8 +508,8 @@ impl RecurrentExecution {
         }
         // dL/dh_T = dlogits @ wo^T
         let mut dh = vec![0.0f32; bsz * h];
-        gemm_nt(&dlogits, &state.params[3].data, &mut dh, bsz, m_out, h,
-                1.0);
+        par_gemm_nt(&dlogits, &state.params[3].data, &mut dh, bsz, m_out,
+                    h, 1.0);
 
         // walk the tape backwards
         let mut dc = vec![0.0f32; bsz * h]; // LSTM cell-state gradient
@@ -579,8 +583,8 @@ impl RecurrentExecution {
                 }
             }
             // dL/dh_{t-1} += dhg @ wh^T
-            gemm_nt(&dhg, &state.params[1].data, &mut dh_prev, bsz, gh,
-                    h, 1.0);
+            par_gemm_nt(&dhg, &state.params[1].data, &mut dh_prev, bsz,
+                        gh, h, 1.0);
             dh = dh_prev;
             // bias gradient: bg enters through xg only
             for row in 0..bsz {
@@ -589,8 +593,10 @@ impl RecurrentExecution {
                     *d += gv;
                 }
             }
-            // dwh += h_{t-1}^T @ dhg, dwx += x_t^T @ dxg (sparse scatter)
-            gemm_tn_acc(h_prev, &dhg, &mut dwh, bsz, h, gh);
+            // dwh += h_{t-1}^T @ dhg, dwx += x_t^T @ dxg (sparse
+            // scatter; a timestep's few active bits usually fall below
+            // the kernel's fan-out threshold, so it runs serial there)
+            par_gemm_tn_acc(h_prev, &dhg, &mut dwh, bsz, h, gh);
             self.scatter_input_grad(x, t, bsz, &dxg, &mut dwx)?;
         }
 
@@ -617,7 +623,7 @@ impl RecurrentExecution {
         let xg = self.input_gates_flat(&params[0].data, &params[2].data,
                                        x, rows)?;
         let mut hg = vec![0.0f32; rows * gh];
-        gemm(h, &params[1].data, &mut hg, rows, hd, gh, 0.0);
+        par_gemm(h, &params[1].data, &mut hg, rows, hd, gh, 0.0);
         match self.cell {
             Cell::Gru => {
                 let _ = self.apply_cell(&xg, &hg, h, &mut [], rows,
@@ -651,7 +657,7 @@ impl RecurrentExecution {
         let m_out = self.spec.m_out;
         let mut out = vec![0.0f32; rows * m_out];
         broadcast_bias(&mut out, &params[4].data, rows, m_out);
-        gemm(h, &params[3].data, &mut out, rows, hd, m_out, 1.0);
+        par_gemm(h, &params[3].data, &mut out, rows, hd, m_out, 1.0);
         if self.spec.loss == "softmax_ce" {
             for r in 0..rows {
                 softmax_in_place(&mut out[r * m_out..(r + 1) * m_out]);
@@ -681,6 +687,18 @@ impl Execution for RecurrentExecution {
 
     fn train_step(&self, state: &mut ModelState, x: &BatchInput,
                   y: &BatchTarget) -> Result<f32> {
+        self.train_step_impl(state, x, y)
+    }
+
+    /// Recurrent training is data-parallel *within* each timestep: the
+    /// gate projections and BPTT reductions already fan row/output
+    /// blocks across the global pool, and the timestep loop itself is a
+    /// sequential dependency — so the shard hint adds nothing and is
+    /// ignored. Results are bit-identical for every thread count (the
+    /// parallel kernels' contract), hence trivially for every `shards`.
+    fn train_step_sharded(&self, state: &mut ModelState, x: &BatchInput,
+                          y: &BatchTarget, shards: usize) -> Result<f32> {
+        let _ = shards;
         self.train_step_impl(state, x, y)
     }
 

@@ -17,6 +17,13 @@
 //! id therefore only carries the user's NEW clicks, and N concurrent
 //! sessions cost one `[N, h]` matmul per click-round instead of N
 //! rows=1 matmuls.
+//!
+//! Within a flush the server is core-parallel through the global worker
+//! pool (`BLOOMREC_THREADS`): the batched `step_batch`/`readout_batch`
+//! GEMMs fan row blocks across the pool inside the kernel layer, and
+//! the per-job Bloom-decode + top-N sweep fans the flush's jobs across
+//! the same pool. Responses are bit-identical to single-threaded
+//! serving — parallelism only moves wall-clock.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -37,6 +44,7 @@ use crate::model::ModelState;
 use crate::runtime::{ArtifactSpec, BatchInput, BatchedHiddenState,
                      Execution, HiddenState, HostTensor, Runtime,
                      SparseBatch};
+use crate::util::threadpool::WorkerPool;
 
 #[derive(Clone, Debug)]
 pub struct RecRequest {
@@ -511,28 +519,56 @@ impl Server {
     /// Shared response tail: decode each output row to item scores,
     /// apply the top-N protocol — `excludes[row]` when given (session
     /// serving passes the full click history), the request's own items
-    /// otherwise — record metrics, send responses.
+    /// otherwise — record metrics, send responses. The decode + top-N
+    /// sweep (O(d·k) per job) fans the flush's jobs across the global
+    /// worker pool once the flush is big enough to amortize the
+    /// fork-join; per-job results are independent, so the responses are
+    /// identical either way.
     fn respond(jobs: &[Job], probs: &[f32], spec: &ArtifactSpec,
                emb: &dyn Embedding, metrics: &ServeMetrics,
                excludes: Option<&[Vec<u32>]>) {
         let m_out = spec.m_out;
-        let mut responses = Vec::with_capacity(jobs.len());
-        let mut lats = Vec::with_capacity(jobs.len());
-        for (row, job) in jobs.iter().enumerate() {
-            let out_row = &probs[row * m_out..(row + 1) * m_out];
+        // (output row, exclusion list, top_n) per job — no Sender
+        // crosses a thread boundary
+        let work: Vec<(&[f32], &[u32], usize)> = jobs
+            .iter()
+            .enumerate()
+            .map(|(row, job)| {
+                let out_row = &probs[row * m_out..(row + 1) * m_out];
+                let excl: &[u32] = match excludes {
+                    Some(lists) => &lists[row],
+                    None => &job.request.user_items,
+                };
+                (out_row, excl, job.request.top_n)
+            })
+            .collect();
+        let rank_one = |&(out_row, excl, top_n): &(&[f32], &[u32], usize)|
+            -> Vec<(usize, f32)> {
             let mut scores = emb.decode(out_row);
-            let excl: &[u32] = match excludes {
-                Some(lists) => &lists[row],
-                None => &job.request.user_items,
-            };
             for &it in excl {
                 if (it as usize) < scores.len() {
                     scores[it as usize] = f32::NEG_INFINITY;
                 }
             }
-            let top = top_k(&scores, job.request.top_n);
-            let items: Vec<(usize, f32)> =
-                top.into_iter().map(|i| (i, scores[i])).collect();
+            let top = top_k(&scores, top_n);
+            top.into_iter().map(|i| (i, scores[i])).collect()
+        };
+        let pool = WorkerPool::global();
+        // fan out only when the flush carries enough decode work to
+        // amortize a fork-join (m_out is a conservative stand-in for
+        // the decode width d — small catalogs stay on the serial,
+        // latency-friendly path)
+        let ranked: Vec<Vec<(usize, f32)>> = if jobs.len() >= 4
+            && jobs.len() * m_out >= (1 << 13)
+            && pool.threads() > 1
+        {
+            pool.scope_map(&work, rank_one)
+        } else {
+            work.iter().map(rank_one).collect()
+        };
+        let mut responses = Vec::with_capacity(jobs.len());
+        let mut lats = Vec::with_capacity(jobs.len());
+        for (job, items) in jobs.iter().zip(ranked) {
             let latency = job.enqueued.elapsed();
             lats.push(latency.as_micros() as f64);
             responses.push(RecResponse { items, latency });

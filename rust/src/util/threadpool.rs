@@ -1,10 +1,32 @@
-//! Minimal scoped thread pool (no rayon/tokio in the offline vendor set).
+//! Minimal scoped thread pool + the crate's shared fork-join layer (no
+//! rayon/tokio in the offline vendor set).
 //!
-//! Used by the serving stack's workers and by embarrassingly-parallel
-//! experiment sweeps. Work items are `FnOnce` closures; `scope_map` offers
-//! a convenient parallel map over an input slice with deterministic output
-//! ordering.
+//! Two levels of API:
+//!
+//! * [`ThreadPool`]: a long-lived pool with an injector queue for
+//!   `'static` jobs (the serving stack's workers).
+//! * [`WorkerPool`]: the crate-wide *data-parallel* layer — a scoped
+//!   fork-join API over borrowed slices. [`WorkerPool::global`] sizes
+//!   itself from `BLOOMREC_THREADS` (default: all available cores) and
+//!   backs every parallel kernel in [`crate::linalg::gemm`], the sharded
+//!   `train_step`, the evaluation ranking sweep, the serving decode
+//!   sweep, and the experiment grid loops.
+//!
+//! Determinism contract: every `WorkerPool` helper partitions work into
+//! **disjoint contiguous chunks with a partition that callers derive
+//! from the data shape**, runs chunks on scoped threads, and writes
+//! results only into each chunk's own region (or collects them in input
+//! order). No reductions happen across workers inside this module, so
+//! callers that keep their per-element accumulation order fixed get
+//! bit-identical results for every thread count — the property the
+//! kernel layer and the sharded trainer are built on.
+//!
+//! Worker threads are *scoped* (`std::thread::scope`), spawned per
+//! fork-join region: tens of microseconds of overhead per region, which
+//! is why the kernel layer only fans out above a minimum per-worker
+//! work threshold.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -73,19 +95,29 @@ where
         return Vec::new();
     }
     let n_threads = n_threads.max(1).min(items.len());
+    if n_threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
     let chunk = items.len().div_ceil(n_threads);
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
 
     thread::scope(|s| {
-        for (slot_chunk, item_chunk) in
-            out.chunks_mut(chunk).zip(items.chunks(chunk))
-        {
+        let mut pairs = out.chunks_mut(chunk).zip(items.chunks(chunk));
+        let first = pairs.next();
+        for (slot_chunk, item_chunk) in pairs {
             let f = &f;
             s.spawn(move || {
                 for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
                     *slot = Some(f(item));
                 }
             });
+        }
+        // the driver participates: the first chunk runs on the caller
+        // while the spawned workers chew the rest
+        if let Some((slot_chunk, item_chunk)) = first {
+            for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
+                *slot = Some(f(item));
+            }
         }
     });
     out.into_iter().map(|o| o.unwrap()).collect()
@@ -96,6 +128,184 @@ pub fn default_threads() -> usize {
     thread::available_parallelism()
         .map(|n| n.get().saturating_sub(1).max(1))
         .unwrap_or(4)
+}
+
+/// Cached worker count of the global [`WorkerPool`]; 0 = not yet read
+/// from the environment.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// `BLOOMREC_THREADS` if set to a positive integer, otherwise all
+/// available cores (the data-parallel layer owns the machine; the
+/// driver thread participates in every fork-join region).
+fn env_threads() -> usize {
+    std::env::var("BLOOMREC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+}
+
+/// The crate-wide scoped fork-join layer: a worker count plus the
+/// chunked `scope_*` helpers. Cheap to copy — the "pool" is the
+/// configuration; threads are scoped per fork-join region.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// The process-wide pool, sized from `BLOOMREC_THREADS` (default:
+    /// available cores) on first use.
+    pub fn global() -> WorkerPool {
+        let cached = GLOBAL_THREADS.load(Ordering::Relaxed);
+        if cached != 0 {
+            return WorkerPool { threads: cached };
+        }
+        let t = env_threads().max(1);
+        GLOBAL_THREADS.store(t, Ordering::Relaxed);
+        WorkerPool { threads: t }
+    }
+
+    /// A pool with an explicit worker count (tests, benches).
+    pub fn with_threads(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Override the global pool's worker count at runtime — the hook the
+    /// determinism tests and the `threads ∈ {1, 2, 4}` bench sweep use.
+    /// Passing 0 resets to the `BLOOMREC_THREADS`/auto default on the
+    /// next [`WorkerPool::global`] call. Results never depend on this
+    /// (the determinism contract above), only wall-clock does.
+    pub fn set_global_threads(threads: usize) {
+        GLOBAL_THREADS.store(threads, Ordering::Relaxed);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Scoped fork-join over disjoint contiguous chunks of `data`:
+    /// `f(chunk_index, chunk)` runs once per `chunk`-length piece (last
+    /// piece may be short), each on its own scoped worker. Callers size
+    /// `chunk` from [`WorkerPool::threads`] so the piece count matches
+    /// the worker count, and recover each piece's offset from
+    /// `chunk_index * chunk`. Runs inline (in chunk order) on a
+    /// single-worker pool or when there is only one piece — bit-identical
+    /// either way, since pieces are disjoint.
+    pub fn scope_chunks<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "scope_chunks needs a positive chunk length");
+        if data.is_empty() {
+            return;
+        }
+        if self.threads <= 1 || data.len() <= chunk {
+            for (i, c) in data.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        thread::scope(|s| {
+            let mut chunks = data.chunks_mut(chunk).enumerate();
+            let first = chunks.next();
+            for (i, c) in chunks {
+                let f = &f;
+                s.spawn(move || f(i, c));
+            }
+            // the driver participates: chunk 0 runs on the caller while
+            // the spawned workers chew the rest
+            if let Some((i, c)) = first {
+                f(i, c);
+            }
+        });
+    }
+
+    /// Scoped fork-join over prepared tasks — for shard work the
+    /// chunked helpers cannot express, e.g. one shard writing disjoint
+    /// row ranges of SEVERAL buffers at once. Tasks are grouped into at
+    /// most [`WorkerPool::threads`] contiguous runs (so more tasks than
+    /// workers queue instead of oversubscribing); the first group runs
+    /// on the caller, the rest on scoped workers. Results come back in
+    /// task order. Runs inline (in order) on a single-worker pool or
+    /// for a single task.
+    pub fn scope_run<R, F>(&self, tasks: Vec<F>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        if self.threads <= 1 || tasks.len() <= 1 {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        let n = tasks.len();
+        let group = n.div_ceil(self.threads);
+        let mut groups: Vec<Vec<F>> = Vec::with_capacity(self.threads);
+        let mut iter = tasks.into_iter();
+        loop {
+            let g: Vec<F> = iter.by_ref().take(group).collect();
+            if g.is_empty() {
+                break;
+            }
+            groups.push(g);
+        }
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        thread::scope(|s| {
+            let mut pairs = out.chunks_mut(group).zip(groups);
+            let first = pairs.next();
+            for (slots, g) in pairs {
+                s.spawn(move || {
+                    for (slot, task) in slots.iter_mut().zip(g) {
+                        *slot = Some(task());
+                    }
+                });
+            }
+            // the driver participates: the first task group runs on
+            // the caller while the spawned workers chew the rest
+            if let Some((slots, g)) = first {
+                for (slot, task) in slots.iter_mut().zip(g) {
+                    *slot = Some(task());
+                }
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    /// Parallel map over `items` with output order equal to input order
+    /// (a pool-sized [`par_map`]). Runs inline on a single-worker pool
+    /// or for a single item.
+    pub fn scope_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            return items.iter().map(&f).collect();
+        }
+        par_map(items, self.threads, f)
+    }
+}
+
+/// `parts` near-equal contiguous `(lo, hi)` ranges covering `0..n`
+/// (fewer when `n < parts`; empty ranges are never emitted). The shared
+/// partition rule of the sharded trainer and the parallel kernels — the
+/// partition depends only on `(n, parts)`, never on scheduling.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let per = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts.min(n));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + per).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -130,5 +340,82 @@ mod tests {
     fn par_map_single_thread_and_empty() {
         assert_eq!(par_map::<usize, usize, _>(&[], 4, |&x| x), vec![]);
         assert_eq!(par_map(&[5], 4, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn scope_chunks_covers_disjoint_pieces_in_order() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::with_threads(threads);
+            let mut data = vec![0usize; 10];
+            pool.scope_chunks(&mut data, 4, |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = i * 4 + j + 1;
+                }
+            });
+            let want: Vec<usize> = (1..=10).collect();
+            assert_eq!(data, want, "threads={threads}");
+        }
+        // empty data is a no-op
+        let mut empty: Vec<usize> = Vec::new();
+        WorkerPool::with_threads(4).scope_chunks(&mut empty, 4, |_, _| {
+            panic!("no chunks expected");
+        });
+    }
+
+    #[test]
+    fn scope_run_returns_results_in_task_order() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::with_threads(threads);
+            let tasks: Vec<_> =
+                (0..9usize).map(|i| move || i * i).collect();
+            assert_eq!(pool.scope_run(tasks),
+                       (0..9usize).map(|i| i * i).collect::<Vec<_>>(),
+                       "threads={threads}");
+        }
+        // empty task list is a no-op
+        let none: Vec<fn() -> usize> = Vec::new();
+        assert!(WorkerPool::with_threads(4).scope_run(none).is_empty());
+    }
+
+    #[test]
+    fn scope_map_matches_serial_map() {
+        let xs: Vec<usize> = (0..37).collect();
+        for threads in [1usize, 3, 8] {
+            let pool = WorkerPool::with_threads(threads);
+            let ys = pool.scope_map(&xs, |&x| x * x);
+            assert_eq!(ys,
+                       xs.iter().map(|&x| x * x).collect::<Vec<_>>(),
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn split_ranges_partition_properties() {
+        assert_eq!(split_ranges(10, 3), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(split_ranges(4, 8), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert_eq!(split_ranges(0, 3), Vec::<(usize, usize)>::new());
+        assert_eq!(split_ranges(5, 1), vec![(0, 5)]);
+        // covering and non-overlapping for a spread of (n, parts)
+        for n in [1usize, 7, 64, 129] {
+            for parts in [1usize, 2, 5, 16] {
+                let ranges = split_ranges(n, parts);
+                assert!(ranges.len() <= parts);
+                let mut next = 0;
+                for (lo, hi) in ranges {
+                    assert_eq!(lo, next);
+                    assert!(hi > lo, "empty range at {lo} (n={n})");
+                    next = hi;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_override_round_trips() {
+        WorkerPool::set_global_threads(3);
+        assert_eq!(WorkerPool::global().threads(), 3);
+        WorkerPool::set_global_threads(0); // reset to env/auto default
+        assert!(WorkerPool::global().threads() >= 1);
     }
 }

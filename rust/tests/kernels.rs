@@ -2,12 +2,20 @@
 //!
 //! * property tests that the blocked `gemm` (plain and packed-B) agrees
 //!   with a naive triple-loop matmul within 1e-5 across random shapes;
+//! * property tests that the parallel kernel entry points (`par_gemm`,
+//!   `PackedB::matmul`, `par_gemm_nt`, `par_gemm_tn_acc`,
+//!   `par_spmm_gather`/`par_spmm_scatter`) are **bit-identical** to
+//!   their serial arms across random shapes and thread counts — the
+//!   determinism contract of the data-parallel execution layer;
 //! * property tests that `Execution::step_batch` over N packed sessions
 //!   is bit-identical to N sequential `Execution::step` calls —
 //!   including sessions that ragged-join and leave mid-stream, the
 //!   micro-batching server's actual access pattern.
 
-use bloomrec::linalg::gemm::{gemm, gemm_nt, gemm_packed, matmul_into,
+use bloomrec::linalg::gemm::{gemm, gemm_nt, gemm_packed, gemm_tn_acc,
+                             matmul_into, par_gemm, par_gemm_nt,
+                             par_gemm_tn_acc, par_spmm_gather,
+                             par_spmm_scatter, spmm_gather, spmm_scatter,
                              PackedB};
 use bloomrec::model::ModelState;
 use bloomrec::runtime::{test_rnn_spec, BatchInput, BatchedHiddenState,
@@ -15,6 +23,14 @@ use bloomrec::runtime::{test_rnn_spec, BatchInput, BatchedHiddenState,
                         SparseBatch};
 use bloomrec::util::proptest::check;
 use bloomrec::util::rng::Rng;
+use bloomrec::util::threadpool::WorkerPool;
+
+/// Tests that mutate the process-global worker-pool size serialize on
+/// this lock, so a concurrently running test cannot resize the pool
+/// while a serial reference arm is mid-run (pool *readers* are safe —
+/// results are thread-count-invariant — but the reference arms must
+/// genuinely run serial to give the comparisons teeth).
+static POOL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// Naive i-j-k reference matmul (no blocking, no zero-skip, plain
 /// per-element dot) — deliberately a DIFFERENT summation order than the
@@ -116,6 +132,112 @@ fn prop_blocked_gemm_matches_naive_matmul() {
                           "gemm_nt elem {i}: {got} vs {w}"));
                   }
               }
+              Ok(())
+          });
+}
+
+/// Every parallel kernel entry point must produce bit-identical output
+/// to its serial arm for random shapes and thread counts — the
+/// determinism contract the sharded trainer and the batched server are
+/// built on. Small shapes fall back to the serial kernel (trivially
+/// identical); shapes above the fan-out threshold genuinely split
+/// across workers.
+#[test]
+fn prop_parallel_kernels_bit_identical_to_serial() {
+    let _pool = POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    check("par-kernels-vs-serial", 0xBA12, 10,
+          |rng| {
+              let m = 1 + rng.below(96);
+              let k = 1 + rng.below(160);
+              let n = 1 + rng.below(160);
+              let seed = rng.next_u64();
+              (vec![m, k, n], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 3 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (m, k, n) = (dims[0], dims[1], dims[2]);
+              if m == 0 || k == 0 || n == 0 {
+                  return Ok(()); // shrunk outside the invariants
+              }
+              let mut rng = Rng::new(*seed);
+              let a = rand_vec(&mut rng, m * k, 0.3);
+              let b = rand_vec(&mut rng, k * n, 0.0);
+              let bt = rand_vec(&mut rng, n * k, 0.0);
+              let g = rand_vec(&mut rng, m * n, 0.0);
+              // CSR rows over k positions (the sparse-batch mirror)
+              let mut indptr = vec![0usize];
+              let mut indices = Vec::new();
+              let mut vals = Vec::new();
+              for _ in 0..m {
+                  let nnz = rng.below(k.min(40) + 1);
+                  let mut pos: Vec<usize> = rng.sample_distinct(k, nnz);
+                  pos.sort_unstable();
+                  for i in pos {
+                      indices.push(i as u32);
+                      vals.push(rng.normal() as f32);
+                  }
+                  indptr.push(indices.len());
+              }
+              // serial references
+              let mut c_ref = vec![0.0f32; m * n];
+              gemm(&a, &b, &mut c_ref, m, k, n, 0.0);
+              let bp = PackedB::pack(&b, k, n);
+              let mut nt_ref = vec![0.0f32; m * n];
+              gemm_nt(&a, &bt, &mut nt_ref, m, k, n, 0.0);
+              let mut tn_ref = vec![0.0f32; k * n];
+              gemm_tn_acc(&a, &g, &mut tn_ref, m, k, n);
+              let mut gather_ref = vec![0.0f32; m * n];
+              spmm_gather(&indptr, &indices, &vals, m, 0, 1, &b, n,
+                          &mut gather_ref);
+              let mut scatter_ref = vec![0.0f32; k * n];
+              spmm_scatter(&indptr, &indices, &vals, m, 0, 1, &g, n,
+                           &mut scatter_ref);
+
+              for &threads in &[1usize, 2, 3, 6] {
+                  WorkerPool::set_global_threads(threads);
+                  let shape = format!("{m}x{k}x{n} t={threads}");
+                  let mut c = vec![0.0f32; m * n];
+                  par_gemm(&a, &b, &mut c, m, k, n, 0.0);
+                  if c != c_ref {
+                      return Err(format!("par_gemm diverged at {shape}"));
+                  }
+                  c.fill(0.0);
+                  bp.matmul(&a, &mut c, m, 0.0);
+                  if c != c_ref {
+                      return Err(format!(
+                          "PackedB::matmul diverged at {shape}"));
+                  }
+                  c.fill(0.0);
+                  par_gemm_nt(&a, &bt, &mut c, m, k, n, 0.0);
+                  if c != nt_ref {
+                      return Err(format!(
+                          "par_gemm_nt diverged at {shape}"));
+                  }
+                  let mut dw = vec![0.0f32; k * n];
+                  par_gemm_tn_acc(&a, &g, &mut dw, m, k, n);
+                  if dw != tn_ref {
+                      return Err(format!(
+                          "par_gemm_tn_acc diverged at {shape}"));
+                  }
+                  let mut out = vec![0.0f32; m * n];
+                  par_spmm_gather(&indptr, &indices, &vals, m, 0, 1, &b,
+                                  n, &mut out);
+                  if out != gather_ref {
+                      return Err(format!(
+                          "par_spmm_gather diverged at {shape}"));
+                  }
+                  let mut dw = vec![0.0f32; k * n];
+                  par_spmm_scatter(&indptr, &indices, &vals, m, 0, 1,
+                                   &g, n, &mut dw);
+                  if dw != scatter_ref {
+                      return Err(format!(
+                          "par_spmm_scatter diverged at {shape}"));
+                  }
+              }
+              WorkerPool::set_global_threads(0);
               Ok(())
           });
 }

@@ -1,8 +1,11 @@
 //! Native-backend correctness: finite-difference gradient checks of the
 //! analytic backward passes (FF layers and GRU/LSTM truncated BPTT) on
-//! tiny specs, and property tests that the sparse (active-position) path
+//! tiny specs, property tests that the sparse (active-position) path
 //! agrees bit-for-bit with the dense path for both forward and training
-//! — flat rows and sequence minibatches alike.
+//! — flat rows and sequence minibatches alike — and property tests that
+//! the data-parallel execution layer (micro-sharded `train_step`,
+//! parallel kernels) is bit-identical to serial 1-shard execution for
+//! every shard count and thread count.
 
 use bloomrec::bloom::HashMatrix;
 use bloomrec::embedding::{Bloom, Embedding};
@@ -13,6 +16,18 @@ use bloomrec::runtime::{test_ff_spec, test_rnn_spec, ArtifactSpec,
                         SparseSeqBatch};
 use bloomrec::util::proptest::check;
 use bloomrec::util::rng::Rng;
+use bloomrec::util::threadpool::WorkerPool;
+
+/// Tests that mutate the process-global worker-pool size serialize on
+/// this lock, so a concurrently running test cannot resize the pool
+/// while a serial reference arm is mid-run (pool *readers* are safe —
+/// results are thread-count-invariant — but the reference arms must
+/// genuinely run serial to give the comparisons teeth).
+static POOL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Loss at the given parameters (train_step reports the pre-update loss;
 /// the mutated state is discarded).
@@ -645,4 +660,194 @@ fn native_training_reduces_loss() {
     }
     assert!(last < first * 0.8,
             "loss did not decrease: first {first}, last {last}");
+}
+
+/// Random sparse FF batch + target for the sharding properties: `rows`
+/// live rows (possibly fewer than the spec batch — the ragged tail),
+/// ascending unique positions per row.
+fn random_ff_batch(rng: &mut Rng, m_in: usize, m_out: usize, rows: usize)
+    -> (BatchInput, BatchTarget) {
+    let mut x = SparseBatch::new(m_in);
+    let mut y = SparseBatch::new(m_out);
+    for _ in 0..rows {
+        let nnz = 1 + rng.below(m_in.min(4));
+        let mut pos: Vec<usize> = rng.sample_distinct(m_in, nnz);
+        pos.sort_unstable();
+        let row: Vec<(u32, f32)> =
+            pos.iter().map(|&j| (j as u32, 1.0)).collect();
+        x.push_row(&row);
+        let nnz = 1 + rng.below(m_out.min(3));
+        let mut pos: Vec<usize> = rng.sample_distinct(m_out, nnz);
+        pos.sort_unstable();
+        let row: Vec<(u32, f32)> =
+            pos.iter().map(|&j| (j as u32, 1.0)).collect();
+        y.push_row(&row);
+    }
+    (BatchInput::Sparse(x), BatchTarget::Sparse(y))
+}
+
+/// The S-shard `train_step` must be bit-identical to the serial 1-shard
+/// arm — same loss, same updated parameters and optimizer state — for
+/// random shapes, ragged shard sizes (shards that do not divide the
+/// batch, shards exceeding the row count) and thread counts. This is
+/// the data-parallel trainer's core guarantee: the loss curve never
+/// depends on how the minibatch was sharded or how many workers ran it.
+#[test]
+fn prop_sharded_train_step_bit_identical_to_serial() {
+    let _pool = lock_pool();
+    check("sharded-train-vs-serial", 0x5AD3, 8,
+          |rng| {
+              let m_in = 8 + rng.below(24);
+              let hidden = 4 + rng.below(12);
+              let m_out = 8 + rng.below(24);
+              let batch = 2 + rng.below(11);
+              let rows = 1 + rng.below(batch);
+              let seed = rng.next_u64();
+              (vec![m_in, hidden, m_out, batch, rows], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 5 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (m_in, hidden, m_out, batch, rows) =
+                  (dims[0], dims[1], dims[2], dims[3], dims[4]);
+              if m_in == 0 || hidden == 0 || m_out == 0 || batch == 0
+                  || rows == 0 || rows > batch {
+                  return Ok(()); // shrunk outside the invariants
+              }
+              let mut rng = Rng::new(*seed);
+              let spec = test_ff_spec(m_in, &[hidden], m_out, batch);
+              let exe = NativeExecution::new(spec.clone())
+                  .map_err(|e| e.to_string())?;
+              let state = ModelState::init(&spec, &mut rng);
+              let (x, y) = random_ff_batch(&mut rng, m_in, m_out, rows);
+
+              // serial reference: one shard, one worker
+              WorkerPool::set_global_threads(1);
+              let mut s_ref = state.clone();
+              let l_ref = exe.train_step_sharded(&mut s_ref, &x, &y, 1)
+                  .map_err(|e| e.to_string())?;
+
+              for &(shards, threads) in
+                  &[(0usize, 1usize), (0, 4), (1, 3), (2, 2), (3, 1),
+                    (batch, 4), (batch + 5, 2)]
+              {
+                  WorkerPool::set_global_threads(threads);
+                  let mut s = state.clone();
+                  let l = exe.train_step_sharded(&mut s, &x, &y, shards)
+                      .map_err(|e| e.to_string())?;
+                  if l.to_bits() != l_ref.to_bits() {
+                      return Err(format!(
+                          "loss diverged: {l} vs {l_ref} \
+                           (shards={shards}, threads={threads})"));
+                  }
+                  if s.params != s_ref.params
+                      || s.opt_state != s_ref.opt_state {
+                      return Err(format!(
+                          "updated state diverged \
+                           (shards={shards}, threads={threads})"));
+                  }
+              }
+              WorkerPool::set_global_threads(0);
+              Ok(())
+          });
+}
+
+/// Multi-step determinism: the whole LOSS TRAJECTORY (optimizer state
+/// threaded across steps) is identical between a serial single-worker
+/// run and sharded multi-worker runs.
+#[test]
+fn sharded_training_loss_trajectory_is_bit_identical() {
+    let _pool = lock_pool();
+    // 64 x 128 x 128 layer products clear the kernels' fan-out
+    // threshold, so multi-worker runs genuinely split the work
+    let spec = test_ff_spec(128, &[128], 128, 64);
+    let exe = NativeExecution::new(spec.clone()).unwrap();
+    let mut rng = Rng::new(0x70AD);
+    let state0 = ModelState::init(&spec, &mut rng);
+    let batches: Vec<(BatchInput, BatchTarget)> = (0..4)
+        .map(|_| random_ff_batch(&mut rng, 128, 128, 64))
+        .collect();
+
+    let run = |shards: usize, threads: usize| -> (Vec<u32>, ModelState) {
+        WorkerPool::set_global_threads(threads);
+        let mut state = state0.clone();
+        let mut losses = Vec::new();
+        for (x, y) in &batches {
+            let l = exe.train_step_sharded(&mut state, x, y, shards)
+                .expect("train step");
+            losses.push(l.to_bits());
+        }
+        (losses, state)
+    };
+    let (curve_ref, state_ref) = run(1, 1);
+    for (shards, threads) in [(0, 4), (2, 2), (5, 4), (64, 8)] {
+        let (curve, state) = run(shards, threads);
+        assert_eq!(curve, curve_ref,
+                   "loss curve diverged (shards={shards}, \
+                    threads={threads})");
+        assert_eq!(state.params, state_ref.params,
+                   "params diverged (shards={shards}, \
+                    threads={threads})");
+        assert_eq!(state.opt_state, state_ref.opt_state,
+                   "opt state diverged (shards={shards}, \
+                    threads={threads})");
+    }
+    WorkerPool::set_global_threads(0);
+}
+
+/// Recurrent training is parallel inside each timestep (row-blocked
+/// kernels); its results must also be independent of the worker count —
+/// exercised at a shape big enough that the gate GEMMs genuinely fan
+/// out (64 rows x 64 hidden x 4*64 gate columns > the kernel
+/// threshold).
+#[test]
+fn recurrent_train_step_bit_identical_across_thread_counts() {
+    let _pool = lock_pool();
+    for family in ["gru", "lstm"] {
+        let (m, h, batch, t_len) = (64usize, 64usize, 64usize, 3usize);
+        let spec = test_rnn_spec(family, m, h, m, batch, t_len);
+        let exe = RecurrentExecution::new(spec.clone()).unwrap();
+        let mut rng = Rng::new(0x7EC4);
+        let state0 = ModelState::init(&spec, &mut rng);
+        let mut x = SparseSeqBatch::new(m, t_len);
+        let mut y = SparseBatch::new(m);
+        for _ in 0..batch {
+            for t in 0..t_len {
+                if t == 0 && rng.bool(0.3) {
+                    x.push_step(&[]); // leading pad
+                } else {
+                    let mut pos: Vec<usize> = rng.sample_distinct(m, 3);
+                    pos.sort_unstable();
+                    let row: Vec<(u32, f32)> =
+                        pos.iter().map(|&j| (j as u32, 1.0)).collect();
+                    x.push_step(&row);
+                }
+            }
+            y.push_row(&[(rng.below(m) as u32, 1.0)]);
+        }
+        let x = BatchInput::SparseSeq(x);
+        let y = BatchTarget::Sparse(y);
+
+        WorkerPool::set_global_threads(1);
+        let mut s_ref = state0.clone();
+        let l_ref = exe.train_step(&mut s_ref, &x, &y).unwrap();
+        for threads in [2usize, 4, 7] {
+            WorkerPool::set_global_threads(threads);
+            let mut s = state0.clone();
+            // the shard hint is a no-op for recurrent training but must
+            // stay bit-identical through the sharded entry point too
+            let l = exe.train_step_sharded(&mut s, &x, &y, threads)
+                .unwrap();
+            assert_eq!(l.to_bits(), l_ref.to_bits(),
+                       "{family}: loss diverged at threads={threads}");
+            assert_eq!(s.params, s_ref.params,
+                       "{family}: params diverged at threads={threads}");
+            assert_eq!(s.opt_state, s_ref.opt_state,
+                       "{family}: opt state diverged at \
+                        threads={threads}");
+        }
+    }
+    WorkerPool::set_global_threads(0);
 }

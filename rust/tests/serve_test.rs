@@ -47,7 +47,7 @@ fn fixture() -> Option<Fixture> {
         .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
     let (state, _) = coordinator::train(
         &rt, &train_spec, &ds, emb.as_ref(),
-        &coordinator::TrainConfig { epochs: 1, seed: 1, verbose: false })
+        &coordinator::TrainConfig { epochs: 1, seed: 1, ..Default::default() })
         .expect("train");
     Some(Fixture { rt, predict, state, emb, ds })
 }
@@ -186,7 +186,7 @@ fn recurrent_fixture() -> Option<Fixture> {
         .find(&task.name, "predict", "softmax_ce", m).unwrap().clone();
     let (state, _) = coordinator::train(
         &rt, &train_spec, &ds, emb.as_ref(),
-        &coordinator::TrainConfig { epochs: 1, seed: 9, verbose: false })
+        &coordinator::TrainConfig { epochs: 1, seed: 9, ..Default::default() })
         .expect("train");
     Some(Fixture { rt, predict, state, emb, ds })
 }
