@@ -9,11 +9,17 @@
 //!    shapes;
 //! 4. batched vs sequential session stepping (N ∈ {1, 8, 64}): the
 //!    micro-batching scheduler's win — one `[N, h]` step_batch GEMM
-//!    against N rows=1 step calls.
+//!    against N rows=1 step calls;
+//! 5. the SIMD microkernel tier: forced-scalar vs dispatched gemm /
+//!    gemm_nt / Bloom decode on large single-thread shapes
+//!    (acceptance: >= 2x gemm with AVX2/NEON, no scalar regression —
+//!    bit-parity asserted before timing).
 //!
 //! Results are printed and written to BENCH_serving.json at the repo
 //! root (overwritten per run; the PR-over-PR trajectory lives in git
-//! history of that file).
+//! history of that file). Every run is stamped with the git sha, the
+//! detected + active SIMD level and the worker-pool width, so numbers
+//! stay comparable across machines.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -22,7 +28,9 @@ use bloomrec::bloom::HashMatrix;
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::Scale;
 use bloomrec::embedding::{Bloom, Embedding};
-use bloomrec::linalg::gemm::{gemm, gemm_packed, par_gemm, PackedB};
+use bloomrec::linalg::gemm::{gemm, gemm_nt, gemm_packed, par_gemm,
+                             PackedB};
+use bloomrec::linalg::simd::{self, SimdLevel};
 use bloomrec::model::ModelState;
 use bloomrec::runtime::{BatchInput, BatchTarget, BatchedHiddenState,
                         Execution, HiddenState, HostTensor, Runtime,
@@ -75,8 +83,116 @@ fn main() {
     gemm_bench(&mut json_sections);
     batched_step_bench(&mut json_sections);
     parallel_bench(&mut json_sections);
+    simd_bench(&mut json_sections);
 
     write_json(&json_sections);
+}
+
+/// The SIMD microkernel tier, single-thread (serial kernels — the pool
+/// never enters): forced-scalar vs the dispatched level on large gemm /
+/// gemm_nt shapes and the Bloom decode sweep. Bit-parity between the
+/// arms is asserted before timing; the acceptance target is >= 2x gemm
+/// throughput with AVX2/NEON over forced scalar, with the scalar path
+/// itself tracked so it can never silently regress.
+fn simd_bench(json: &mut Vec<String>) {
+    let mut rng = Rng::new(37);
+    let detected = simd::detected_level();
+    simd::set_level(None);
+    let active = simd::level();
+    println!("\n-- SIMD microkernels (detected: {}, active: {}) --",
+             detected.name(), active.name());
+    let mut rows = Vec::new();
+
+    // serial gemm + gemm_nt at a large shape (single-thread by
+    // construction: these are the serial kernel entry points)
+    let (m, k, n) = (256usize, 256usize, 512usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let flops = (2 * m * k * n) as f64;
+    for (label, run) in [
+        ("gemm", Box::new(|c: &mut Vec<f32>| {
+            gemm(&a, &b, c, m, k, n, 0.0);
+        }) as Box<dyn Fn(&mut Vec<f32>)>),
+        ("gemm_nt", Box::new(|c: &mut Vec<f32>| {
+            gemm_nt(&a, &bt, c, m, k, n, 0.0);
+        })),
+    ] {
+        // parity first: scalar and dispatched arms must agree bitwise
+        simd::set_level(Some(SimdLevel::Scalar));
+        let mut c_ref = vec![0.0f32; m * n];
+        run(&mut c_ref);
+        simd::set_level(None);
+        let mut c = vec![0.0f32; m * n];
+        run(&mut c);
+        assert_eq!(c, c_ref,
+                   "{label}: SIMD arm must be bit-identical to scalar");
+
+        let bench = Bench::default();
+        simd::set_level(Some(SimdLevel::Scalar));
+        let scalar = bench.run(&format!("simd/{label}/scalar"), 1, || {
+            run(&mut c);
+            std::hint::black_box(&mut c);
+        });
+        simd::set_level(None);
+        let vec_r = bench.run(
+            &format!("simd/{label}/{}", active.name()), 1, || {
+                run(&mut c);
+                std::hint::black_box(&mut c);
+            });
+        let speedup = scalar.mean_us / vec_r.mean_us;
+        println!("   {label} {m}x{k}x{n}: scalar {:.1}us ({:.2} \
+                  GFLOP/s) vs {} {:.1}us ({:.2} GFLOP/s) — \
+                  {speedup:.2}x",
+                 scalar.mean_us, flops / scalar.mean_us / 1e3,
+                 active.name(), vec_r.mean_us,
+                 flops / vec_r.mean_us / 1e3);
+        rows.push(format!(
+            "    {{\"kernel\": \"{label}\", \"m\": {m}, \"k\": {k}, \
+             \"n\": {n}, \"scalar_us\": {:.2}, \"simd_us\": {:.2}, \
+             \"level\": \"{}\", \"speedup\": {speedup:.3}}}",
+            scalar.mean_us, vec_r.mean_us, active.name()));
+    }
+
+    // the Bloom decode sweep at serving scale: d items, k probes
+    let (d, m_emb, kk) = (50_000usize, 4096usize, 4usize);
+    let hm = HashMatrix::random(d, m_emb, kk, &mut rng);
+    let probs: Vec<f32> =
+        (0..m_emb).map(|_| rng.f32() + 1e-4).collect();
+    let mut logs: Vec<f32> = Vec::new();
+    let mut scores: Vec<f32> = Vec::new();
+    simd::set_level(Some(SimdLevel::Scalar));
+    let want = bloomrec::bloom::decode_scores(&probs, &hm);
+    simd::set_level(None);
+    bloomrec::bloom::decode_scores_into(&probs, &hm, &mut logs,
+                                        &mut scores);
+    assert_eq!(scores, want,
+               "decode: SIMD arm must be bit-identical to scalar");
+    let bench = Bench::default();
+    simd::set_level(Some(SimdLevel::Scalar));
+    let scalar = bench.run("simd/decode/scalar", 1, || {
+        bloomrec::bloom::decode_scores_into(&probs, &hm, &mut logs,
+                                            &mut scores);
+        std::hint::black_box(&mut scores);
+    });
+    simd::set_level(None);
+    let vec_r = bench.run(&format!("simd/decode/{}", active.name()), 1,
+                          || {
+        bloomrec::bloom::decode_scores_into(&probs, &hm, &mut logs,
+                                            &mut scores);
+        std::hint::black_box(&mut scores);
+    });
+    let speedup = scalar.mean_us / vec_r.mean_us;
+    println!("   decode d={d} k={kk}: scalar {:.1}us vs {} {:.1}us — \
+              {speedup:.2}x",
+             scalar.mean_us, active.name(), vec_r.mean_us);
+    rows.push(format!(
+        "    {{\"kernel\": \"decode\", \"d\": {d}, \"k\": {kk}, \
+         \"m\": {m_emb}, \"scalar_us\": {:.2}, \"simd_us\": {:.2}, \
+         \"level\": \"{}\", \"speedup\": {speedup:.3}}}",
+        scalar.mean_us, vec_r.mean_us, active.name()));
+
+    json.push(format!("  \"simd\": [\n{}\n  ]", rows.join(",\n")));
 }
 
 /// Raw kernel-layer throughput at the recurrent serving shape
@@ -550,14 +666,34 @@ fn server_sweep(rt: &Arc<Runtime>,
     json.push(format!("  \"server\": [\n{}\n  ]", rows.join(",\n")));
 }
 
+/// Current git sha (short), or "unknown" outside a git checkout — part
+/// of the per-run stamp that keeps the perf trajectory comparable.
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 fn write_json(sections: &[String]) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("repo root")
         .join("BENCH_serving.json");
+    simd::set_level(None);
+    let meta = format!(
+        "  \"meta\": {{\"git_sha\": \"{}\", \"simd_detected\": \"{}\", \
+         \"simd_active\": \"{}\", \"threads\": {}}}",
+        git_sha(), simd::detected_level().name(),
+        simd::level().name(), WorkerPool::global().threads());
     let body = format!(
         "{{\n  \"bench\": \"serving\",\n  \"source\": \"cargo bench \
-         --bench serving\",\n{}\n}}\n",
+         --bench serving\",\n{meta},\n{}\n}}\n",
         sections.join(",\n"));
     match std::fs::write(&path, body) {
         Ok(()) => println!("\nwrote {}", path.display()),

@@ -6,47 +6,86 @@
 //! (the log form of Eq. 2; descending order preserved). This is the
 //! Rust-side mirror of the Pallas `bloom_decode` kernel — both are tested
 //! against the same oracle semantics.
+//!
+//! The hot path is allocation-free and vectorized: callers hand
+//! [`decode_scores_into`] a reusable log-table + score buffer (the
+//! serve flush and the evaluation sweep keep one pair per worker), the
+//! log table is built once per output vector, and the d-item log-sum
+//! gather runs on the SIMD microkernel tier
+//! ([`crate::linalg::simd::decode_logsum`]) — one lane per item,
+//! ascending-j adds per item, bit-identical to the scalar sweep at
+//! every SIMD level.
 
 use super::hashing::HashMatrix;
 use crate::linalg::knn::{argsort_desc, top_k};
+use crate::linalg::simd;
 
 /// Must match python/compile/kernels/ref.py LOG_EPS.
 pub const LOG_EPS: f32 = 1e-12;
 
-/// Scores over all d items. `probs` has length m.
+/// Fill `logs` with `ln(p + LOG_EPS)` per embedded probability — the
+/// once-per-output-vector half of the decode, reusing the caller's
+/// buffer. (Stays scalar: `ln` is a libm transcendental, outside the
+/// SIMD tier's bit-identity contract.)
+pub fn log_probs_into(probs: &[f32], logs: &mut Vec<f32>) {
+    logs.clear();
+    logs.extend(probs.iter().map(|&p| (p + LOG_EPS).ln()));
+}
+
+/// Scores over all d items. `probs` has length m. Allocating
+/// convenience wrapper over [`decode_scores_into`].
 pub fn decode_scores(probs: &[f32], hm: &HashMatrix) -> Vec<f32> {
+    let mut logs = Vec::with_capacity(hm.m);
+    let mut scores = Vec::with_capacity(hm.d);
+    decode_scores_into(probs, hm, &mut logs, &mut scores);
+    scores
+}
+
+/// The allocation-free decode every caller shares (serving flushes and
+/// the evaluation sweep pass per-worker scratch reused across
+/// sessions/examples): build the log table once into `logs` (m ops),
+/// then one [`simd::decode_logsum`] gather-sum over the d*k table into
+/// `scores` — vectorized across items, ascending-j per item.
+pub fn decode_scores_into(probs: &[f32], hm: &HashMatrix,
+                          logs: &mut Vec<f32>, scores: &mut Vec<f32>) {
     assert_eq!(probs.len(), hm.m);
-    // hot path: take the log of each embedded prob once (m ops), then
-    // gather-sum over the d*k table
-    let logs: Vec<f32> = probs.iter().map(|&p| (p + LOG_EPS).ln()).collect();
-    decode_scores_prelogged(&logs, hm)
+    log_probs_into(probs, logs);
+    decode_scores_prelogged_into(logs, hm, scores);
 }
 
 /// Same as `decode_scores` but with the log table precomputed (batch
 /// evaluation reuses it across candidate subsets).
 pub fn decode_scores_prelogged(logs: &[f32], hm: &HashMatrix) -> Vec<f32> {
     let mut scores = Vec::with_capacity(hm.d);
-    let k = hm.k;
-    let mut chunk_iter = hm.h.chunks_exact(k);
-    for row in &mut chunk_iter {
-        let mut acc = 0.0f32;
-        for &p in row {
-            acc += logs[p as usize];
-        }
-        scores.push(acc);
-    }
+    decode_scores_prelogged_into(logs, hm, &mut scores);
     scores
 }
 
-/// Top-N recommendation from the embedded probabilities.
+/// [`decode_scores_prelogged`] into a caller-owned score buffer — the
+/// Eq. 3 log-sum sweep on the SIMD tier.
+pub fn decode_scores_prelogged_into(logs: &[f32], hm: &HashMatrix,
+                                    scores: &mut Vec<f32>) {
+    debug_assert!(logs.len() >= hm.m, "log table covers the m probs");
+    scores.resize(hm.d, 0.0);
+    simd::decode_logsum(logs, &hm.h, hm.k, scores);
+}
+
+/// Top-N recommendation from the embedded probabilities. Shares the
+/// prelogged/score-buffer route with [`decode_scores_into`] — ranking
+/// metrics and serving run one decode implementation.
 pub fn decode_top_n(probs: &[f32], hm: &HashMatrix, n: usize) -> Vec<usize> {
-    let scores = decode_scores(probs, hm);
+    let mut logs = Vec::with_capacity(hm.m);
+    let mut scores = Vec::with_capacity(hm.d);
+    decode_scores_into(probs, hm, &mut logs, &mut scores);
     top_k(&scores, n)
 }
 
-/// Full ranking (descending) — used by the rank-based metrics.
+/// Full ranking (descending) — used by the rank-based metrics. Same
+/// shared decode route as [`decode_top_n`].
 pub fn decode_ranking(probs: &[f32], hm: &HashMatrix) -> Vec<usize> {
-    let scores = decode_scores(probs, hm);
+    let mut logs = Vec::with_capacity(hm.m);
+    let mut scores = Vec::with_capacity(hm.d);
+    decode_scores_into(probs, hm, &mut logs, &mut scores);
     argsort_desc(&scores)
 }
 
@@ -139,6 +178,39 @@ mod tests {
         for (g, w) in scores.iter().zip(&expect) {
             assert!((g - w).abs() < 1e-6, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_scratch() {
+        let mut rng = Rng::new(11);
+        let hm = HashMatrix::random(80, 32, 4, &mut rng);
+        let probs: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+        let want = decode_scores(&probs, &hm);
+        // scratch arrives dirty and wrongly sized — the into-variants
+        // must fully overwrite it
+        let mut logs = vec![9.9f32; 7];
+        let mut scores = vec![-3.3f32; 200];
+        decode_scores_into(&probs, &hm, &mut logs, &mut scores);
+        assert_eq!(scores, want);
+        // and be reusable across output vectors without reallocation
+        let probs2: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+        let want2 = decode_scores(&probs2, &hm);
+        decode_scores_into(&probs2, &hm, &mut logs, &mut scores);
+        assert_eq!(scores, want2);
+    }
+
+    #[test]
+    fn top_n_and_ranking_agree_with_scores() {
+        let mut rng = Rng::new(12);
+        let hm = HashMatrix::random(60, 24, 3, &mut rng);
+        let probs: Vec<f32> = (0..24).map(|_| rng.f32() + 0.01).collect();
+        let scores = decode_scores(&probs, &hm);
+        let ranking = decode_ranking(&probs, &hm);
+        assert_eq!(ranking.len(), 60);
+        for w in ranking.windows(2) {
+            assert!(scores[w[0]] >= scores[w[1]]);
+        }
+        assert_eq!(decode_top_n(&probs, &hm, 5), ranking[..5].to_vec());
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub mod hashing;
 pub use analysis::{measure_fp, theoretical_fp, FpReport};
 pub use cbe::{cbe_rewrite, cooccurrence_stats, CoocStats};
 pub use counting::{encode_counting_into, estimate_count, CountingBloom};
-pub use decode::{decode_ranking, decode_scores, decode_top_n, LOG_EPS};
+pub use decode::{decode_ranking, decode_scores, decode_scores_into,
+                 decode_scores_prelogged, decode_scores_prelogged_into,
+                 decode_top_n, log_probs_into, LOG_EPS};
 pub use encode::{encode_batch, encode_on_the_fly_into, BloomEncoder};
 pub use hashing::{double_hash_position, HashKind, HashMatrix};

@@ -15,7 +15,10 @@
 //! per-example decode + rank-count sweep fans the batch's examples
 //! across the same pool here, reducing contributions back in example
 //! order — the reported score is bit-identical to the serial sweep for
-//! every thread count.
+//! every thread count. Each worker reuses one decode scratch pair
+//! (log table + score buffer, [`Embedding::decode_into`]) across its
+//! examples, and the log-sum gather itself rides the SIMD tier — the
+//! sweep allocates nothing per example.
 
 use std::collections::HashSet;
 
@@ -87,6 +90,11 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
         };
         let ranges = split_ranges(batch.len(), workers);
         let parts = pool.scope_map(&ranges, |&(rlo, rhi)| {
+            // per-worker decode scratch (log table + score buffer),
+            // reused across every example of the range — the sweep
+            // allocates nothing per example
+            let mut logs: Vec<f32> = Vec::new();
+            let mut scores: Vec<f32> = Vec::new();
             let mut out = Vec::with_capacity(rhi - rlo);
             for row in rlo..rhi {
                 let ex = batch[row];
@@ -100,7 +108,7 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
                         // rank-counting instead of a full argsort:
                         // O(d * r) (EXPERIMENTS.md §Perf, ~4x faster
                         // evaluation)
-                        let mut scores = emb.decode(out_row);
+                        emb.decode_into(out_row, &mut logs, &mut scores);
                         for &it in ex.input_items() {
                             if (it as usize) < scores.len() {
                                 scores[it as usize] = f32::NEG_INFINITY;
@@ -113,7 +121,7 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
                             average_precision_from_ranks(&mut ranks)));
                     }
                     (Target::Items(items), Measure::Rr) => {
-                        let scores = emb.decode(out_row);
+                        emb.decode_into(out_row, &mut logs, &mut scores);
                         let rank = rank_of(&scores, items[0] as usize);
                         out.push(RowScore::Partial(1.0 / rank as f64));
                     }

@@ -14,7 +14,8 @@
 //! inputs) or `runtime::SparseSeqBatch` steps (recurrent inputs, one
 //! item per timestep) — the paper's O(c·k) encoding end to end.
 
-use crate::bloom::{decode_scores, BloomEncoder, HashMatrix};
+use crate::bloom::{decode_scores_into, log_probs_into, BloomEncoder,
+                   HashMatrix};
 use crate::linalg::dense::Mat;
 use crate::linalg::knn::{score_all, Metric};
 
@@ -83,6 +84,20 @@ pub trait Embedding: Send + Sync {
     /// items (descending = better).
     fn decode(&self, output: &[f32]) -> Vec<f32>;
 
+    /// [`Embedding::decode`] into caller-owned scratch: `scores`
+    /// receives exactly what `decode` would return; `logs` is the
+    /// log-table buffer the log-likelihood decoders (Bloom, ECOC)
+    /// rebuild once per output vector. The serve flush and the
+    /// evaluation sweep keep one `(logs, scores)` pair per worker and
+    /// reuse it across sessions/examples, so the hot decode path
+    /// allocates nothing. The default falls back to the allocating
+    /// `decode` (dense-table embeddings).
+    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
+                   scores: &mut Vec<f32>) {
+        let _ = logs;
+        *scores = self.decode(output);
+    }
+
     /// Human-readable method tag for result tables.
     fn name(&self) -> &'static str;
 }
@@ -127,6 +142,11 @@ impl Embedding for Identity {
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
         output.to_vec()
+    }
+    fn decode_into(&self, output: &[f32], _logs: &mut Vec<f32>,
+                   scores: &mut Vec<f32>) {
+        scores.clear();
+        scores.extend_from_slice(output);
     }
     fn name(&self) -> &'static str {
         "baseline"
@@ -188,7 +208,14 @@ impl Embedding for Bloom {
         true
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
-        decode_scores(output, self.out_matrix())
+        let mut logs = Vec::new();
+        let mut scores = Vec::new();
+        self.decode_into(output, &mut logs, &mut scores);
+        scores
+    }
+    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
+                   scores: &mut Vec<f32>) {
+        decode_scores_into(output, self.out_matrix(), logs, scores);
     }
     fn name(&self) -> &'static str {
         self.tag
@@ -301,27 +328,30 @@ impl Embedding for CodeMatrix {
         self.encode_input_sparse(items, out)
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
-        let logs: Vec<f32> = output
-            .iter()
-            .map(|&p| (p + crate::bloom::LOG_EPS).ln())
-            .collect();
-        (0..self.d)
-            .map(|i| {
-                let mut acc = 0.0f32;
-                let mut ones = 0u32;
-                for j in 0..self.m {
-                    if self.bit(i, j) {
-                        acc += logs[j];
-                        ones += 1;
-                    }
+        let mut logs = Vec::new();
+        let mut scores = Vec::new();
+        self.decode_into(output, &mut logs, &mut scores);
+        scores
+    }
+    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
+                   scores: &mut Vec<f32>) {
+        log_probs_into(output, logs);
+        scores.clear();
+        scores.extend((0..self.d).map(|i| {
+            let mut acc = 0.0f32;
+            let mut ones = 0u32;
+            for j in 0..self.m {
+                if self.bit(i, j) {
+                    acc += logs[j];
+                    ones += 1;
                 }
-                if ones == 0 {
-                    f32::NEG_INFINITY
-                } else {
-                    acc / ones as f32
-                }
-            })
-            .collect()
+            }
+            if ones == 0 {
+                f32::NEG_INFINITY
+            } else {
+                acc / ones as f32
+            }
+        }));
     }
     fn name(&self) -> &'static str {
         self.tag
@@ -507,6 +537,47 @@ mod tests {
             .map(|(i, &v)| (i as u32, v))
             .collect();
         assert_eq!(sparse, expected);
+    }
+
+    #[test]
+    fn decode_into_matches_decode_with_dirty_scratch() {
+        let mut rng = Rng::new(21);
+        let embs: Vec<Box<dyn Embedding>> = vec![
+            Box::new(Identity { d: 16 }),
+            Box::new(Bloom::new(HashMatrix::random(40, 16, 3, &mut rng),
+                                None)),
+            Box::new(CodeMatrix::from_rows(
+                5,
+                16,
+                &(0..5)
+                    .map(|i| (0..16).map(|j| (i + j) % 3 == 0).collect())
+                    .collect::<Vec<_>>(),
+                "ecoc",
+            )),
+            Box::new(DenseTable::new(
+                Mat::from_rows((0..4)
+                    .map(|i| (0..16).map(|j| ((i * j) as f32).sin())
+                        .collect())
+                    .collect()),
+                Metric::Cosine,
+                "pmi",
+            )),
+        ];
+        for emb in &embs {
+            let out: Vec<f32> =
+                (0..emb.m_out()).map(|_| rng.f32() + 0.01).collect();
+            let want = emb.decode(&out);
+            // scratch arrives dirty; reuse it across two decodes
+            let mut logs = vec![5.0f32; 3];
+            let mut scores = vec![-1.0f32; 99];
+            emb.decode_into(&out, &mut logs, &mut scores);
+            assert_eq!(scores, want, "{}", emb.name());
+            let out2: Vec<f32> =
+                (0..emb.m_out()).map(|_| rng.f32() + 0.01).collect();
+            let want2 = emb.decode(&out2);
+            emb.decode_into(&out2, &mut logs, &mut scores);
+            assert_eq!(scores, want2, "{} (reuse)", emb.name());
+        }
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //! for sequences — the paper's O(c*k) encoding), and training targets
 //! as their mirror (`runtime::BatchTarget::Sparse`); dense tensors
 //! materialize only inside backends that need them. Every hot matmul
-//! runs on the blocked kernel layer in `linalg::gemm`. Recurrent
+//! runs on the blocked kernel layer in `linalg::gemm`, whose inner
+//! loops ride the runtime-dispatched SIMD microkernel tier in
+//! `linalg::simd` (AVX2/SSE/NEON, `BLOOMREC_SIMD`, bit-identical to
+//! scalar at every level). Recurrent
 //! serving is stateful and micro-batched: the server keeps per-session
 //! hidden states and a flush advances all of its sessions through one
 //! `runtime::Execution::step_batch` GEMM per click-round.

@@ -24,8 +24,14 @@
 //!    timesteps, the output head across serve batches) streams linearly
 //!    from the pack instead of striding through row-major B.
 //!
-//! Everything is plain scalar Rust: the auto-vectorizer does well on the
-//! tight `axpy` loops, and no `unsafe` is needed.
+//! The inner loops run on the runtime-dispatched SIMD microkernel tier
+//! ([`crate::linalg::simd`]): `axpy`/`scale` and the restructured
+//! `gemm_nt` panel loops vectorize **across output columns only** —
+//! each lane owns one output element, each element keeps its
+//! single-accumulator ascending-k zero-skip order, and every multiply
+//! is followed by a rounded add (no FMA contraction) — so the AVX2/
+//! SSE/NEON arms are bit-identical to the scalar kernels
+//! (`BLOOMREC_SIMD=0`), exactly as the thread partition is.
 //!
 //! **Parallel entry points.** Every kernel has a `par_*` twin (and
 //! [`PackedB::matmul`] for the packed kernel) that fans disjoint output
@@ -44,6 +50,7 @@
 // design — grouping them into structs would obscure the BLAS-like shape
 #![allow(clippy::too_many_arguments)]
 
+use crate::linalg::simd;
 use crate::util::threadpool::WorkerPool;
 
 /// Column-tile width in f32s (one tile row = 256 bytes = 4 cache lines).
@@ -54,15 +61,14 @@ const KC: usize = 256;
 const MR: usize = 4;
 
 /// `dst += a * src` elementwise; zero `a` skips the pass entirely (the
-/// shared zero-skip rule of the kernel layer).
+/// shared zero-skip rule of the kernel layer — applied BEFORE the SIMD
+/// dispatch, so every level sees the same skip decisions).
 #[inline]
 fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
     if a == 0.0 {
         return;
     }
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d += a * s;
-    }
+    simd::axpy(dst, src, a);
 }
 
 #[inline]
@@ -70,9 +76,7 @@ fn scale_c(c: &mut [f32], beta: f32) {
     if beta == 0.0 {
         c.fill(0.0);
     } else if beta != 1.0 {
-        for v in c.iter_mut() {
-            *v *= beta;
-        }
+        simd::scale(c, beta);
     }
 }
 
@@ -246,49 +250,64 @@ pub fn gemm_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize,
 
 /// `C = beta * C + A @ Bt^T`: the transpose-aware variant for row-major
 /// `Bt [n, k]` (each B^T column is a contiguous Bt row). `A [m, k]`,
-/// `C [m, n]`. Each output element is one dot product accumulated in
-/// ascending-k order and then added once — the order the backward
-/// passes have always used. Rows are processed four at a time so each
-/// Bt row is reused across four dots.
+/// `C [m, n]`.
+///
+/// Restructured for the SIMD tier: instead of one k-reduction dot per
+/// output element (which vector lanes could only split by reassociating
+/// the sum), each `Bt` column tile is transposed on the fly into a
+/// `[kc, tw]` panel and fed through the same j-tile / k-panel / 4-row
+/// `axpy` nest as [`gemm`] — every lane owns one output **column**, and
+/// every output element keeps a single accumulator updated in
+/// ascending-k order with zero `A` entries skipped. The kernel is
+/// therefore bit-identical to [`gemm`] over the explicit transpose of
+/// `bt`, at any SIMD level.
 pub fn gemm_nt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize,
                n: usize, beta: f32) {
     debug_assert_eq!(a.len(), m * k, "A is [m, k]");
     debug_assert_eq!(bt.len(), n * k, "Bt is [n, k]");
     debug_assert_eq!(c.len(), m * n, "C is [m, n]");
     scale_c(c, beta);
-    let mut i = 0;
-    while i + MR <= m {
-        let (c0, c1, c2, c3) = quad_tiles(c, n, i, 0, n);
-        let a0 = &a[i * k..(i + 1) * k];
-        let a1 = &a[(i + 1) * k..(i + 2) * k];
-        let a2 = &a[(i + 2) * k..(i + 3) * k];
-        let a3 = &a[(i + 3) * k..(i + 4) * k];
-        for j in 0..n {
-            let brow = &bt[j * k..(j + 1) * k];
-            c0[j] += dot_f32(a0, brow);
-            c1[j] += dot_f32(a1, brow);
-            c2[j] += dot_f32(a2, brow);
-            c3[j] += dot_f32(a3, brow);
+    // one [KC, NR] scratch panel, O(n*k) transpose work total — noise
+    // against the O(m*n*k) multiply work it unlocks
+    let mut panel = vec![0.0f32; KC.min(k.max(1)) * NR.min(n.max(1))];
+    let mut j0 = 0;
+    while j0 < n {
+        let tw = NR.min(n - j0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            // transpose the tile: panel[kk][jj] = Bt[j0+jj][k0+kk]
+            // (contiguous reads along each Bt row)
+            for jj in 0..tw {
+                let brow = &bt[(j0 + jj) * k + k0..(j0 + jj) * k + k0 + kc];
+                for (kk, &v) in brow.iter().enumerate() {
+                    panel[kk * tw + jj] = v;
+                }
+            }
+            let mut i = 0;
+            while i + MR <= m {
+                let (c0, c1, c2, c3) = quad_tiles(c, n, i, j0, tw);
+                for kk in 0..kc {
+                    let brow = &panel[kk * tw..(kk + 1) * tw];
+                    axpy(c0, brow, a[i * k + k0 + kk]);
+                    axpy(c1, brow, a[(i + 1) * k + k0 + kk]);
+                    axpy(c2, brow, a[(i + 2) * k + k0 + kk]);
+                    axpy(c3, brow, a[(i + 3) * k + k0 + kk]);
+                }
+                i += MR;
+            }
+            while i < m {
+                let crow = &mut c[i * n + j0..i * n + j0 + tw];
+                for kk in 0..kc {
+                    axpy(crow, &panel[kk * tw..(kk + 1) * tw],
+                         a[i * k + k0 + kk]);
+                }
+                i += 1;
+            }
+            k0 += kc;
         }
-        i += MR;
+        j0 += tw;
     }
-    while i < m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            *cv += dot_f32(arow, &bt[j * k..(j + 1) * k]);
-        }
-        i += 1;
-    }
-}
-
-#[inline]
-fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = 0.0f32;
-    for (&av, &bv) in a.iter().zip(b) {
-        acc += av * bv;
-    }
-    acc
 }
 
 /// `dw += A^T @ G` exploiting sparsity in `A`: for every nonzero
@@ -312,8 +331,13 @@ pub fn gemm_tn_acc(a: &[f32], g: &[f32], dw: &mut [f32], rows: usize,
 
 /// `gp[r, kk] = relu'(h[r, kk]) * dot(g[r, :], w[kk, :])`: the fused
 /// masked `G @ W^T` of the FF backward pass (`w [n, p]` row-major,
-/// `g [rows, p]`, `h`/`gp` `[rows, n]`). `gp` must arrive zeroed;
-/// masked-out entries are left untouched.
+/// `g [rows, p]`, `h`/`gp` `[rows, n]`). Runs as the restructured
+/// [`gemm_nt`] (`G [rows, p] @ w^T`, lanes across output columns, one
+/// ascending-p accumulator per element) followed by a vectorized
+/// ReLU-derivative mask that zeroes every `h <= 0` position — the same
+/// values the old compute-only-unmasked-dots loop produced, since
+/// masked positions are exactly the ones whose result is dropped.
+/// Overwrites `gp` entirely (`beta = 0`).
 pub fn gemm_nt_relu_masked(g: &[f32], w: &[f32], h: &[f32],
                            gp: &mut [f32], rows: usize, p: usize,
                            n: usize) {
@@ -321,16 +345,8 @@ pub fn gemm_nt_relu_masked(g: &[f32], w: &[f32], h: &[f32],
     debug_assert_eq!(w.len(), n * p);
     debug_assert_eq!(h.len(), rows * n);
     debug_assert_eq!(gp.len(), rows * n);
-    for r in 0..rows {
-        let grow = &g[r * p..(r + 1) * p];
-        let hrow = &h[r * n..(r + 1) * n];
-        let dst = &mut gp[r * n..(r + 1) * n];
-        for (kk, d) in dst.iter_mut().enumerate() {
-            if hrow[kk] > 0.0 {
-                *d = dot_f32(grow, &w[kk * p..(kk + 1) * p]);
-            }
-        }
-    }
+    gemm_nt(g, w, gp, rows, p, n, 0.0);
+    simd::relu_mask(gp, &h[..rows * n]);
 }
 
 /// Sparse-times-dense gather: `out[r, :] += sum_e v_e * w[i_e, :]` over
@@ -713,22 +729,54 @@ mod tests {
     #[test]
     fn gemm_nt_matches_explicit_transpose() {
         let mut rng = Rng::new(44);
-        let (m, k, n) = (6usize, 40usize, 9usize);
-        let a = rand_mat(&mut rng, m * k, 0.0);
-        let bt = rand_mat(&mut rng, n * k, 0.0); // [n, k] = B^T
-        // build B = Bt^T and compare against the NN kernel numerically
-        let mut b = vec![0.0f32; k * n];
-        for j in 0..n {
-            for kk in 0..k {
-                b[kk * n + j] = bt[j * k + kk];
+        // spans every tile boundary: n crosses NR, k = 300 crosses the
+        // KC = 256 k-panel (multi-panel accumulation must stay bitwise
+        // too), and the shapes leave ragged 4-row and lane tails
+        for &(m, k, n) in &[(6usize, 40usize, 9usize), (5, 30, 70),
+                            (1, 7, 65), (6, 300, 9)] {
+            let a = rand_mat(&mut rng, m * k, 0.3);
+            let bt = rand_mat(&mut rng, n * k, 0.0); // [n, k] = B^T
+            let mut b = vec![0.0f32; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    b[kk * n + j] = bt[j * k + kk];
+                }
             }
+            // structural claim: gemm_nt IS gemm over the transpose,
+            // bit-for-bit (same panel loop, same zero-skip)
+            let seed = rand_mat(&mut rng, m * n, 0.0);
+            let mut c_nt = seed.clone();
+            gemm_nt(&a, &bt, &mut c_nt, m, k, n, 1.0);
+            let mut c_nn = seed.clone();
+            gemm(&a, &b, &mut c_nn, m, k, n, 1.0);
+            assert_eq!(c_nt, c_nn, "{m}x{k}x{n}");
         }
-        let mut c_nt = vec![0.0f32; m * n];
-        gemm_nt(&a, &bt, &mut c_nt, m, k, n, 0.0);
-        let c_nn = naive(&a, &b, m, k, n);
-        for (i, (&x, &y)) in c_nt.iter().zip(&c_nn).enumerate() {
-            assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0),
-                    "elem {i}: {x} vs {y}");
+    }
+
+    #[test]
+    fn relu_masked_backward_matches_masked_dots() {
+        let mut rng = Rng::new(47);
+        let (rows, p, n) = (5usize, 23usize, 67usize);
+        let g = rand_mat(&mut rng, rows * p, 0.0);
+        let w = rand_mat(&mut rng, n * p, 0.0);
+        let h = rand_mat(&mut rng, rows * n, 0.5);
+        let mut gp = vec![0.0f32; rows * n];
+        gemm_nt_relu_masked(&g, &w, &h, &mut gp, rows, p, n);
+        for r in 0..rows {
+            for kk in 0..n {
+                let got = gp[r * n + kk];
+                if h[r * n + kk] <= 0.0 {
+                    assert_eq!(got, 0.0, "masked ({r},{kk})");
+                } else {
+                    let mut want = 0.0f32;
+                    for j in 0..p {
+                        want += g[r * p + j] * w[kk * p + j];
+                    }
+                    assert!((got - want).abs()
+                            <= 1e-5 * want.abs().max(1.0),
+                            "({r},{kk}): {got} vs {want}");
+                }
+            }
         }
     }
 

@@ -1,5 +1,6 @@
 //! Linear algebra substrate: the blocked kernel layer every hot matmul
-//! routes through ([`gemm`]), dense matrices, CSR sparse matrices,
+//! routes through ([`gemm`]), the runtime-dispatched SIMD microkernel
+//! tier underneath it ([`simd`]), dense matrices, CSR sparse matrices,
 //! randomized SVD and top-k retrieval. The kernel layer serves the
 //! native backend's request path (FF layers, GRU/LSTM gate projections,
 //! batched session stepping); the rest constructs embeddings
@@ -8,6 +9,7 @@
 pub mod dense;
 pub mod gemm;
 pub mod knn;
+pub mod simd;
 pub mod sparse;
 pub mod svd;
 
@@ -15,5 +17,6 @@ pub use dense::{cosine, correlation, dot, Mat};
 pub use gemm::{gemm as gemm_nn, gemm_nt, gemm_tn_acc, matmul_into,
                spmm_gather, spmm_scatter, PackedB};
 pub use knn::{argsort_desc, top_k, Metric};
+pub use simd::SimdLevel;
 pub use sparse::Csr;
 pub use svd::{randomized_svd, LinOp, Svd};

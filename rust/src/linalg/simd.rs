@@ -1,0 +1,1062 @@
+//! Explicit-SIMD microkernel tier under the kernel layer: runtime-
+//! dispatched lane primitives that every hot elementwise loop in the
+//! crate routes through — the `axpy`/`scale` loops inside
+//! [`crate::linalg::gemm`], the activation/optimizer/loss sweeps in the
+//! native backends, and the Bloom decode log-sum gather.
+//!
+//! # The determinism constraint
+//!
+//! The repo's non-negotiable invariant is that execution strategy never
+//! moves a bit: sparse vs dense batches, packed vs plain B, thread and
+//! shard counts — and now SIMD level — are pure wall-clock knobs. The
+//! SIMD tier delivers that the same way the thread partition does:
+//! **structurally**, not by tolerance.
+//!
+//! * **Vectorize across output elements only.** A lane owns one output
+//!   element (one C column of an `axpy` row, one decoded item of the
+//!   log-sum sweep, one parameter of an optimizer update). Reductions
+//!   across the k dimension are never split over lanes, so each
+//!   element keeps its scalar single-accumulator ascending-k order.
+//! * **Multiply then add — never FMA.** Every arm issues a rounded
+//!   multiply followed by a rounded add (separate intrinsics; Rust
+//!   does not contract them), matching the scalar `a * b + c` exactly.
+//! * **Exactly-rounded lane ops only.** Add/sub/mul/div/sqrt are
+//!   IEEE-754 exactly rounded in both scalar and vector form, and
+//!   compares/selects are bitwise, so lane math equals scalar math
+//!   bit-for-bit. Transcendentals (`exp`, `ln`, `tanh`, `sigmoid`) are
+//!   libm calls with no such guarantee — those loops deliberately stay
+//!   scalar (softmax/CE terms, the log-table build, the RNN cells).
+//!
+//! Consequently every SIMD arm is bit-identical to its scalar twin —
+//! property-tested at ragged tail shapes in `rust/tests/kernels.rs`
+//! and in this module — and SIMD composes multiplicatively with the
+//! thread pool (lanes × cores) without weakening any parity guarantee.
+//!
+//! # Dispatch
+//!
+//! The active level is detected once at first use and cached:
+//! `avx2` → `sse` (the x86_64 baseline) on x86_64, `neon` (the aarch64
+//! baseline) on aarch64, `scalar` everywhere else. `BLOOMREC_SIMD`
+//! overrides it (`0`/`off`/`scalar`, `sse`, `avx2`, `neon` — clamped
+//! to what the host supports), and [`set_level`] force-overrides at
+//! runtime (tests and the bench sweep). Results never depend on the
+//! level — only wall-clock does.
+
+// lane primitives take positional (buffers..., scalars...) argument
+// lists by design — grouping them into structs would obscure the
+// BLAS-like shape (same rule as the kernel layer above)
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+// the intrinsic names handed to `x86_simd_module!` resolve at the
+// invocation site (this module), not inside the generated submodules
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// A SIMD instruction-set tier. Ordered by lane width within an
+/// architecture family; `Scalar` is always available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// plain scalar Rust — the reference arm every other level must
+    /// match bit-for-bit
+    Scalar = 0,
+    /// x86-64 SSE2 (the architecture baseline), 4 f32 lanes
+    Sse = 1,
+    /// x86-64 AVX2, 8 f32 lanes
+    Avx2 = 2,
+    /// aarch64 NEON (the architecture baseline), 4 f32 lanes
+    Neon = 3,
+}
+
+impl SimdLevel {
+    /// Stable lowercase tag (`BLOOMREC_SIMD` values, bench stamps).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse => "sse",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `BLOOMREC_SIMD` value; `None` for unknown strings (the
+    /// caller then falls back to detection).
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "0" | "off" | "scalar" => Some(SimdLevel::Scalar),
+            "sse" | "sse2" => Some(SimdLevel::Sse),
+            "avx2" => Some(SimdLevel::Avx2),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+}
+
+fn from_u8(v: u8) -> SimdLevel {
+    match v {
+        1 => SimdLevel::Sse,
+        2 => SimdLevel::Avx2,
+        3 => SimdLevel::Neon,
+        _ => SimdLevel::Scalar,
+    }
+}
+
+/// Best level the running host supports, ignoring the env var and any
+/// [`set_level`] override — the hardware fact benches stamp into
+/// BENCH_serving.json.
+pub fn detected_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            SimdLevel::Avx2
+        } else {
+            // SSE2 is part of the x86_64 baseline: always available
+            SimdLevel::Sse
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdLevel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+/// A requested level, clamped to what this host can actually execute:
+/// unsupported requests (e.g. `neon` on x86, `avx2` on a pre-AVX2 CPU)
+/// fall back to `Scalar` — predictable, never mid-tier surprises.
+fn clamp_supported(l: SimdLevel) -> SimdLevel {
+    let det = detected_level();
+    let ok = match l {
+        SimdLevel::Scalar => true,
+        // AVX2 hosts support SSE too; NEON is its own family
+        SimdLevel::Sse => {
+            matches!(det, SimdLevel::Sse | SimdLevel::Avx2)
+        }
+        SimdLevel::Avx2 | SimdLevel::Neon => det == l,
+    };
+    if ok { l } else { SimdLevel::Scalar }
+}
+
+fn env_level() -> SimdLevel {
+    match std::env::var("BLOOMREC_SIMD") {
+        Ok(v) => match SimdLevel::parse(&v) {
+            Some(l) => clamp_supported(l),
+            // unknown value: ignore it and auto-detect
+            None => detected_level(),
+        },
+        Err(_) => detected_level(),
+    }
+}
+
+const LEVEL_UNSET: u8 = u8::MAX;
+/// Cached active level; `LEVEL_UNSET` = not yet resolved from the env.
+static ACTIVE: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// The level the dispatched primitives execute at: the [`set_level`]
+/// override if present, else `BLOOMREC_SIMD` (clamped to host
+/// support), else [`detected_level`] — resolved once and cached.
+#[inline]
+pub fn level() -> SimdLevel {
+    let raw = ACTIVE.load(Ordering::Relaxed);
+    if raw != LEVEL_UNSET {
+        return from_u8(raw);
+    }
+    let l = env_level();
+    ACTIVE.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// Force the active level at runtime (clamped to host support), or
+/// reset to the `BLOOMREC_SIMD`/auto default with `None` — the hook the
+/// bit-parity tests and the bench scalar-vs-SIMD sweep use. Results
+/// never depend on this (the module contract), only wall-clock does.
+pub fn set_level(l: Option<SimdLevel>) {
+    match l {
+        Some(l) => ACTIVE.store(clamp_supported(l) as u8,
+                                Ordering::Relaxed),
+        None => ACTIVE.store(LEVEL_UNSET, Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar arms: the canonical reference semantics. Every vector arm
+// below mirrors these expressions operation-for-operation (same
+// association, same rounding points), which is what makes the levels
+// interchangeable bit-for-bit.
+
+mod scalar {
+    /// `dst[i] += a * src[i]`. No zero-skip here — the kernel layer's
+    /// zero-skip rule lives at the call site, before dispatch.
+    pub fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += a * s;
+        }
+    }
+
+    pub fn scale(dst: &mut [f32], b: f32) {
+        for v in dst.iter_mut() {
+            *v *= b;
+        }
+    }
+
+    pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+
+    pub fn relu(dst: &mut [f32]) {
+        for v in dst.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// `dst[i] = if h[i] > 0.0 { dst[i] } else { 0.0 }` — the ReLU
+    /// derivative mask of the FF backward pass.
+    pub fn relu_mask(dst: &mut [f32], h: &[f32]) {
+        for (d, &hv) in dst.iter_mut().zip(h) {
+            if !(hv > 0.0) {
+                *d = 0.0;
+            }
+        }
+    }
+
+    /// `scores[i] = sum_{j ascending} logs[h[i*k + j]]` — Eq. 3's
+    /// log-sum gather, one lane per item.
+    pub fn decode_logsum(logs: &[f32], h: &[u32], k: usize,
+                         scores: &mut [f32]) {
+        for (i, s) in scores.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for j in 0..k {
+                acc += logs[h[i * k + j] as usize];
+            }
+            *s = acc;
+        }
+    }
+
+    pub fn adam_update(pd: &mut [f32], mu: &mut [f32], nu: &mut [f32],
+                       g: &[f32], b1: f32, b2: f32, alpha: f32,
+                       eps: f32) {
+        let omb1 = 1.0 - b1;
+        let omb2 = 1.0 - b2;
+        for j in 0..g.len() {
+            mu[j] = b1 * mu[j] + omb1 * g[j];
+            nu[j] = b2 * nu[j] + omb2 * g[j] * g[j];
+            pd[j] -= alpha * mu[j] / (nu[j].sqrt() + eps);
+        }
+    }
+
+    pub fn sgd_update(pd: &mut [f32], vel: &mut [f32], g: &[f32],
+                      momentum: f32, gscale: f32, lr: f32) {
+        for j in 0..g.len() {
+            vel[j] = momentum * vel[j] + g[j] * gscale;
+            pd[j] -= lr * vel[j];
+        }
+    }
+
+    pub fn rmsprop_update(pd: &mut [f32], avg: &mut [f32], g: &[f32],
+                          decay: f32, lr: f32, eps: f32) {
+        let omd = 1.0 - decay;
+        for j in 0..g.len() {
+            avg[j] = decay * avg[j] + omd * g[j] * g[j];
+            pd[j] -= lr * g[j] / (avg[j].sqrt() + eps);
+        }
+    }
+
+    pub fn adagrad_update(pd: &mut [f32], acc: &mut [f32], g: &[f32],
+                          lr: f32, eps: f32) {
+        for j in 0..g.len() {
+            acc[j] += g[j] * g[j];
+            pd[j] -= lr * g[j] / (acc[j].sqrt() + eps);
+        }
+    }
+
+    /// Cosine-loss gradient row,
+    /// `dst[j] = -(y[j]/den - nb*o[j]/d2) * inv_b` with the scalar
+    /// factors (`nb = n*b`, `d2 = a_safe*den*den`) precomputed by the
+    /// caller in the loss's own association order.
+    pub fn cosine_grad(dst: &mut [f32], y: &[f32], o: &[f32], den: f32,
+                       nb: f32, d2: f32, inv_b: f32) {
+        for j in 0..dst.len() {
+            dst[j] = -(y[j] / den - nb * o[j] / d2) * inv_b;
+        }
+    }
+
+    /// [`cosine_grad`] with an implicit all-zero `y` row — the base
+    /// sweep of the sparse-target arm (active positions get patched
+    /// afterwards).
+    pub fn cosine_grad_zero_y(dst: &mut [f32], o: &[f32], den: f32,
+                              nb: f32, d2: f32, inv_b: f32) {
+        for j in 0..dst.len() {
+            dst[j] = -(0.0f32 / den - nb * o[j] / d2) * inv_b;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86-64 arms: one macro body instantiated for SSE2 (4 lanes) and AVX2
+// (8 lanes). Intrinsic parameters arrive as expressions so the same
+// body serves both widths; every function handles its ragged tail by
+// falling through to the scalar arm (elementwise ops — the tail join
+// point cannot change any bit).
+
+#[cfg(target_arch = "x86_64")]
+macro_rules! x86_simd_module {
+    ($modname:ident, $feat:literal, $lanes:expr, $v:ty,
+     $loadu:expr, $storeu:expr, $set1:expr, $setzero:expr,
+     $add:expr, $mul:expr, $sub:expr, $div:expr, $sqrt:expr,
+     $xor:expr, $and:expr, $andnot:expr, $cmplt:expr, $cmpgt:expr) => {
+        mod $modname {
+            use super::scalar;
+            use std::arch::x86_64::*;
+
+            const LANES: usize = $lanes;
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+                let n = dst.len().min(src.len());
+                let av: $v = ($set1)(a);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let d = ($loadu)(dst.as_ptr().add(i));
+                    let s = ($loadu)(src.as_ptr().add(i));
+                    // mul then add: no FMA contraction
+                    ($storeu)(dst.as_mut_ptr().add(i),
+                              ($add)(d, ($mul)(av, s)));
+                    i += LANES;
+                }
+                scalar::axpy(&mut dst[i..n], &src[i..n], a);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn scale(dst: &mut [f32], b: f32) {
+                let bv: $v = ($set1)(b);
+                let n = dst.len();
+                let mut i = 0;
+                while i + LANES <= n {
+                    let d = ($loadu)(dst.as_ptr().add(i));
+                    ($storeu)(dst.as_mut_ptr().add(i), ($mul)(d, bv));
+                    i += LANES;
+                }
+                scalar::scale(&mut dst[i..], b);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+                let n = dst.len().min(src.len());
+                let mut i = 0;
+                while i + LANES <= n {
+                    let d = ($loadu)(dst.as_ptr().add(i));
+                    let s = ($loadu)(src.as_ptr().add(i));
+                    ($storeu)(dst.as_mut_ptr().add(i), ($add)(d, s));
+                    i += LANES;
+                }
+                scalar::add_assign(&mut dst[i..n], &src[i..n]);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn relu(dst: &mut [f32]) {
+                let z: $v = ($setzero)();
+                let n = dst.len();
+                let mut i = 0;
+                while i + LANES <= n {
+                    let d = ($loadu)(dst.as_ptr().add(i));
+                    // keep d where !(d < 0) — matches the scalar branch
+                    // (NaN stays, -0.0 stays, negatives become +0.0)
+                    let m = ($cmplt)(d, z);
+                    ($storeu)(dst.as_mut_ptr().add(i), ($andnot)(m, d));
+                    i += LANES;
+                }
+                scalar::relu(&mut dst[i..]);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn relu_mask(dst: &mut [f32], h: &[f32]) {
+                let z: $v = ($setzero)();
+                let n = dst.len().min(h.len());
+                let mut i = 0;
+                while i + LANES <= n {
+                    let d = ($loadu)(dst.as_ptr().add(i));
+                    let hv = ($loadu)(h.as_ptr().add(i));
+                    let m = ($cmpgt)(hv, z);
+                    ($storeu)(dst.as_mut_ptr().add(i), ($and)(d, m));
+                    i += LANES;
+                }
+                scalar::relu_mask(&mut dst[i..n], &h[i..n]);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn decode_logsum(logs: &[f32], h: &[u32],
+                                        k: usize, scores: &mut [f32]) {
+                let d = scores.len();
+                let mut i = 0;
+                let mut tmp = [0.0f32; LANES];
+                while i + LANES <= d {
+                    let mut acc: $v = ($setzero)();
+                    for j in 0..k {
+                        // lane l sums item i+l: the k-strided table
+                        // reads are scalar (a transparent gather); the
+                        // ascending-j adds are the vector part, one
+                        // accumulator per item
+                        for (l, t) in tmp.iter_mut().enumerate() {
+                            *t = logs[h[(i + l) * k + j] as usize];
+                        }
+                        acc = ($add)(acc, ($loadu)(tmp.as_ptr()));
+                    }
+                    ($storeu)(scores.as_mut_ptr().add(i), acc);
+                    i += LANES;
+                }
+                scalar::decode_logsum(logs, &h[i * k..], k,
+                                      &mut scores[i..]);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn adam_update(pd: &mut [f32], mu: &mut [f32],
+                                      nu: &mut [f32], g: &[f32], b1: f32,
+                                      b2: f32, alpha: f32, eps: f32) {
+                let n = g.len();
+                let b1v: $v = ($set1)(b1);
+                let omb1v: $v = ($set1)(1.0 - b1);
+                let b2v: $v = ($set1)(b2);
+                let omb2v: $v = ($set1)(1.0 - b2);
+                let av: $v = ($set1)(alpha);
+                let ev: $v = ($set1)(eps);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let gv = ($loadu)(g.as_ptr().add(i));
+                    let muv = ($loadu)(mu.as_ptr().add(i));
+                    let nuv = ($loadu)(nu.as_ptr().add(i));
+                    let pdv = ($loadu)(pd.as_ptr().add(i));
+                    let m2 = ($add)(($mul)(b1v, muv), ($mul)(omb1v, gv));
+                    let n2 = ($add)(($mul)(b2v, nuv),
+                                    ($mul)(($mul)(omb2v, gv), gv));
+                    ($storeu)(mu.as_mut_ptr().add(i), m2);
+                    ($storeu)(nu.as_mut_ptr().add(i), n2);
+                    let upd = ($div)(($mul)(av, m2),
+                                     ($add)(($sqrt)(n2), ev));
+                    ($storeu)(pd.as_mut_ptr().add(i), ($sub)(pdv, upd));
+                    i += LANES;
+                }
+                scalar::adam_update(&mut pd[i..n], &mut mu[i..n],
+                                    &mut nu[i..n], &g[i..n], b1, b2,
+                                    alpha, eps);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn sgd_update(pd: &mut [f32], vel: &mut [f32],
+                                     g: &[f32], momentum: f32,
+                                     gscale: f32, lr: f32) {
+                let n = g.len();
+                let mv: $v = ($set1)(momentum);
+                let sv: $v = ($set1)(gscale);
+                let lv: $v = ($set1)(lr);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let gv = ($loadu)(g.as_ptr().add(i));
+                    let vv = ($loadu)(vel.as_ptr().add(i));
+                    let pdv = ($loadu)(pd.as_ptr().add(i));
+                    let v2 = ($add)(($mul)(mv, vv), ($mul)(gv, sv));
+                    ($storeu)(vel.as_mut_ptr().add(i), v2);
+                    ($storeu)(pd.as_mut_ptr().add(i),
+                              ($sub)(pdv, ($mul)(lv, v2)));
+                    i += LANES;
+                }
+                scalar::sgd_update(&mut pd[i..n], &mut vel[i..n],
+                                   &g[i..n], momentum, gscale, lr);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn rmsprop_update(pd: &mut [f32], avg: &mut [f32],
+                                         g: &[f32], decay: f32, lr: f32,
+                                         eps: f32) {
+                let n = g.len();
+                let dv: $v = ($set1)(decay);
+                let omdv: $v = ($set1)(1.0 - decay);
+                let lv: $v = ($set1)(lr);
+                let ev: $v = ($set1)(eps);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let gv = ($loadu)(g.as_ptr().add(i));
+                    let avv = ($loadu)(avg.as_ptr().add(i));
+                    let pdv = ($loadu)(pd.as_ptr().add(i));
+                    let a2 = ($add)(($mul)(dv, avv),
+                                    ($mul)(($mul)(omdv, gv), gv));
+                    ($storeu)(avg.as_mut_ptr().add(i), a2);
+                    let upd = ($div)(($mul)(lv, gv),
+                                     ($add)(($sqrt)(a2), ev));
+                    ($storeu)(pd.as_mut_ptr().add(i), ($sub)(pdv, upd));
+                    i += LANES;
+                }
+                scalar::rmsprop_update(&mut pd[i..n], &mut avg[i..n],
+                                       &g[i..n], decay, lr, eps);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn adagrad_update(pd: &mut [f32], acc: &mut [f32],
+                                         g: &[f32], lr: f32, eps: f32) {
+                let n = g.len();
+                let lv: $v = ($set1)(lr);
+                let ev: $v = ($set1)(eps);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let gv = ($loadu)(g.as_ptr().add(i));
+                    let acv = ($loadu)(acc.as_ptr().add(i));
+                    let pdv = ($loadu)(pd.as_ptr().add(i));
+                    let a2 = ($add)(acv, ($mul)(gv, gv));
+                    ($storeu)(acc.as_mut_ptr().add(i), a2);
+                    let upd = ($div)(($mul)(lv, gv),
+                                     ($add)(($sqrt)(a2), ev));
+                    ($storeu)(pd.as_mut_ptr().add(i), ($sub)(pdv, upd));
+                    i += LANES;
+                }
+                scalar::adagrad_update(&mut pd[i..n], &mut acc[i..n],
+                                       &g[i..n], lr, eps);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn cosine_grad(dst: &mut [f32], y: &[f32],
+                                      o: &[f32], den: f32, nb: f32,
+                                      d2: f32, inv_b: f32) {
+                let n = dst.len();
+                let denv: $v = ($set1)(den);
+                let nbv: $v = ($set1)(nb);
+                let d2v: $v = ($set1)(d2);
+                let ibv: $v = ($set1)(inv_b);
+                // negation = sign-bit flip, exactly like scalar `-x`
+                let sign: $v = ($set1)(-0.0f32);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let yv = ($loadu)(y.as_ptr().add(i));
+                    let ov = ($loadu)(o.as_ptr().add(i));
+                    let t = ($div)(yv, denv);
+                    let u = ($div)(($mul)(nbv, ov), d2v);
+                    let s = ($sub)(t, u);
+                    ($storeu)(dst.as_mut_ptr().add(i),
+                              ($mul)(($xor)(s, sign), ibv));
+                    i += LANES;
+                }
+                scalar::cosine_grad(&mut dst[i..], &y[i..], &o[i..],
+                                    den, nb, d2, inv_b);
+            }
+
+            #[target_feature(enable = $feat)]
+            pub unsafe fn cosine_grad_zero_y(dst: &mut [f32], o: &[f32],
+                                             den: f32, nb: f32, d2: f32,
+                                             inv_b: f32) {
+                let n = dst.len();
+                let zv: $v = ($setzero)();
+                let denv: $v = ($set1)(den);
+                let nbv: $v = ($set1)(nb);
+                let d2v: $v = ($set1)(d2);
+                let ibv: $v = ($set1)(inv_b);
+                let sign: $v = ($set1)(-0.0f32);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let ov = ($loadu)(o.as_ptr().add(i));
+                    let t = ($div)(zv, denv);
+                    let u = ($div)(($mul)(nbv, ov), d2v);
+                    let s = ($sub)(t, u);
+                    ($storeu)(dst.as_mut_ptr().add(i),
+                              ($mul)(($xor)(s, sign), ibv));
+                    i += LANES;
+                }
+                scalar::cosine_grad_zero_y(&mut dst[i..], &o[i..], den,
+                                           nb, d2, inv_b);
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+x86_simd_module!(sse, "sse2", 4, __m128,
+                 _mm_loadu_ps, _mm_storeu_ps, _mm_set1_ps,
+                 _mm_setzero_ps, _mm_add_ps, _mm_mul_ps, _mm_sub_ps,
+                 _mm_div_ps, _mm_sqrt_ps, _mm_xor_ps, _mm_and_ps,
+                 _mm_andnot_ps, _mm_cmplt_ps, _mm_cmpgt_ps);
+
+#[cfg(target_arch = "x86_64")]
+x86_simd_module!(avx2, "avx2", 8, __m256,
+                 _mm256_loadu_ps, _mm256_storeu_ps, _mm256_set1_ps,
+                 _mm256_setzero_ps, _mm256_add_ps, _mm256_mul_ps,
+                 _mm256_sub_ps, _mm256_div_ps, _mm256_sqrt_ps,
+                 _mm256_xor_ps, _mm256_and_ps, _mm256_andnot_ps,
+                 _mm256_cmp_ps::<_CMP_LT_OQ>, _mm256_cmp_ps::<_CMP_GT_OQ>);
+
+// ---------------------------------------------------------------------
+// aarch64 NEON arms (4 f32 lanes). Same structure as the x86 bodies;
+// masking uses NEON's bit-select so NaN/-0.0 semantics match the
+// scalar branches exactly.
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::scalar;
+    use std::arch::aarch64::*;
+
+    const LANES: usize = 4;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            // explicit mul then add (vmulq + vaddq, not vfmaq): no FMA
+            vst1q_f32(dst.as_mut_ptr().add(i),
+                      vaddq_f32(d, vmulq_f32(av, s)));
+            i += LANES;
+        }
+        scalar::axpy(&mut dst[i..n], &src[i..n], a);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(dst: &mut [f32], b: f32) {
+        let bv = vdupq_n_f32(b);
+        let n = dst.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(d, bv));
+            i += LANES;
+        }
+        scalar::scale(&mut dst[i..], b);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len().min(src.len());
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, s));
+            i += LANES;
+        }
+        scalar::add_assign(&mut dst[i..n], &src[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn relu(dst: &mut [f32]) {
+        let z = vdupq_n_f32(0.0);
+        let n = dst.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            // select 0 where d < 0, else keep d (NaN/-0.0 kept)
+            let m = vcltq_f32(d, z);
+            vst1q_f32(dst.as_mut_ptr().add(i), vbslq_f32(m, z, d));
+            i += LANES;
+        }
+        scalar::relu(&mut dst[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn relu_mask(dst: &mut [f32], h: &[f32]) {
+        let z = vdupq_n_f32(0.0);
+        let n = dst.len().min(h.len());
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let hv = vld1q_f32(h.as_ptr().add(i));
+            let m = vcgtq_f32(hv, z);
+            vst1q_f32(dst.as_mut_ptr().add(i), vbslq_f32(m, d, z));
+            i += LANES;
+        }
+        scalar::relu_mask(&mut dst[i..n], &h[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn decode_logsum(logs: &[f32], h: &[u32], k: usize,
+                                scores: &mut [f32]) {
+        let d = scores.len();
+        let mut i = 0;
+        let mut tmp = [0.0f32; LANES];
+        while i + LANES <= d {
+            let mut acc = vdupq_n_f32(0.0);
+            for j in 0..k {
+                for (l, t) in tmp.iter_mut().enumerate() {
+                    *t = logs[h[(i + l) * k + j] as usize];
+                }
+                acc = vaddq_f32(acc, vld1q_f32(tmp.as_ptr()));
+            }
+            vst1q_f32(scores.as_mut_ptr().add(i), acc);
+            i += LANES;
+        }
+        scalar::decode_logsum(logs, &h[i * k..], k, &mut scores[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn adam_update(pd: &mut [f32], mu: &mut [f32],
+                              nu: &mut [f32], g: &[f32], b1: f32,
+                              b2: f32, alpha: f32, eps: f32) {
+        let n = g.len();
+        let b1v = vdupq_n_f32(b1);
+        let omb1v = vdupq_n_f32(1.0 - b1);
+        let b2v = vdupq_n_f32(b2);
+        let omb2v = vdupq_n_f32(1.0 - b2);
+        let av = vdupq_n_f32(alpha);
+        let ev = vdupq_n_f32(eps);
+        let mut i = 0;
+        while i + LANES <= n {
+            let gv = vld1q_f32(g.as_ptr().add(i));
+            let muv = vld1q_f32(mu.as_ptr().add(i));
+            let nuv = vld1q_f32(nu.as_ptr().add(i));
+            let pdv = vld1q_f32(pd.as_ptr().add(i));
+            let m2 = vaddq_f32(vmulq_f32(b1v, muv), vmulq_f32(omb1v, gv));
+            let n2 = vaddq_f32(vmulq_f32(b2v, nuv),
+                               vmulq_f32(vmulq_f32(omb2v, gv), gv));
+            vst1q_f32(mu.as_mut_ptr().add(i), m2);
+            vst1q_f32(nu.as_mut_ptr().add(i), n2);
+            let upd = vdivq_f32(vmulq_f32(av, m2),
+                                vaddq_f32(vsqrtq_f32(n2), ev));
+            vst1q_f32(pd.as_mut_ptr().add(i), vsubq_f32(pdv, upd));
+            i += LANES;
+        }
+        scalar::adam_update(&mut pd[i..n], &mut mu[i..n], &mut nu[i..n],
+                            &g[i..n], b1, b2, alpha, eps);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sgd_update(pd: &mut [f32], vel: &mut [f32], g: &[f32],
+                             momentum: f32, gscale: f32, lr: f32) {
+        let n = g.len();
+        let mv = vdupq_n_f32(momentum);
+        let sv = vdupq_n_f32(gscale);
+        let lv = vdupq_n_f32(lr);
+        let mut i = 0;
+        while i + LANES <= n {
+            let gv = vld1q_f32(g.as_ptr().add(i));
+            let vv = vld1q_f32(vel.as_ptr().add(i));
+            let pdv = vld1q_f32(pd.as_ptr().add(i));
+            let v2 = vaddq_f32(vmulq_f32(mv, vv), vmulq_f32(gv, sv));
+            vst1q_f32(vel.as_mut_ptr().add(i), v2);
+            vst1q_f32(pd.as_mut_ptr().add(i),
+                      vsubq_f32(pdv, vmulq_f32(lv, v2)));
+            i += LANES;
+        }
+        scalar::sgd_update(&mut pd[i..n], &mut vel[i..n], &g[i..n],
+                           momentum, gscale, lr);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rmsprop_update(pd: &mut [f32], avg: &mut [f32],
+                                 g: &[f32], decay: f32, lr: f32,
+                                 eps: f32) {
+        let n = g.len();
+        let dv = vdupq_n_f32(decay);
+        let omdv = vdupq_n_f32(1.0 - decay);
+        let lv = vdupq_n_f32(lr);
+        let ev = vdupq_n_f32(eps);
+        let mut i = 0;
+        while i + LANES <= n {
+            let gv = vld1q_f32(g.as_ptr().add(i));
+            let avv = vld1q_f32(avg.as_ptr().add(i));
+            let pdv = vld1q_f32(pd.as_ptr().add(i));
+            let a2 = vaddq_f32(vmulq_f32(dv, avv),
+                               vmulq_f32(vmulq_f32(omdv, gv), gv));
+            vst1q_f32(avg.as_mut_ptr().add(i), a2);
+            let upd = vdivq_f32(vmulq_f32(lv, gv),
+                                vaddq_f32(vsqrtq_f32(a2), ev));
+            vst1q_f32(pd.as_mut_ptr().add(i), vsubq_f32(pdv, upd));
+            i += LANES;
+        }
+        scalar::rmsprop_update(&mut pd[i..n], &mut avg[i..n], &g[i..n],
+                               decay, lr, eps);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn adagrad_update(pd: &mut [f32], acc: &mut [f32],
+                                 g: &[f32], lr: f32, eps: f32) {
+        let n = g.len();
+        let lv = vdupq_n_f32(lr);
+        let ev = vdupq_n_f32(eps);
+        let mut i = 0;
+        while i + LANES <= n {
+            let gv = vld1q_f32(g.as_ptr().add(i));
+            let acv = vld1q_f32(acc.as_ptr().add(i));
+            let pdv = vld1q_f32(pd.as_ptr().add(i));
+            let a2 = vaddq_f32(acv, vmulq_f32(gv, gv));
+            vst1q_f32(acc.as_mut_ptr().add(i), a2);
+            let upd = vdivq_f32(vmulq_f32(lv, gv),
+                                vaddq_f32(vsqrtq_f32(a2), ev));
+            vst1q_f32(pd.as_mut_ptr().add(i), vsubq_f32(pdv, upd));
+            i += LANES;
+        }
+        scalar::adagrad_update(&mut pd[i..n], &mut acc[i..n], &g[i..n],
+                               lr, eps);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cosine_grad(dst: &mut [f32], y: &[f32], o: &[f32],
+                              den: f32, nb: f32, d2: f32, inv_b: f32) {
+        let n = dst.len();
+        let denv = vdupq_n_f32(den);
+        let nbv = vdupq_n_f32(nb);
+        let d2v = vdupq_n_f32(d2);
+        let ibv = vdupq_n_f32(inv_b);
+        let mut i = 0;
+        while i + LANES <= n {
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            let ov = vld1q_f32(o.as_ptr().add(i));
+            let t = vdivq_f32(yv, denv);
+            let u = vdivq_f32(vmulq_f32(nbv, ov), d2v);
+            let s = vsubq_f32(t, u);
+            // vnegq is a sign-bit flip, exactly like scalar `-x`
+            vst1q_f32(dst.as_mut_ptr().add(i),
+                      vmulq_f32(vnegq_f32(s), ibv));
+            i += LANES;
+        }
+        scalar::cosine_grad(&mut dst[i..], &y[i..], &o[i..], den, nb,
+                            d2, inv_b);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cosine_grad_zero_y(dst: &mut [f32], o: &[f32],
+                                     den: f32, nb: f32, d2: f32,
+                                     inv_b: f32) {
+        let n = dst.len();
+        let zv = vdupq_n_f32(0.0);
+        let denv = vdupq_n_f32(den);
+        let nbv = vdupq_n_f32(nb);
+        let d2v = vdupq_n_f32(d2);
+        let ibv = vdupq_n_f32(inv_b);
+        let mut i = 0;
+        while i + LANES <= n {
+            let ov = vld1q_f32(o.as_ptr().add(i));
+            let t = vdivq_f32(zv, denv);
+            let u = vdivq_f32(vmulq_f32(nbv, ov), d2v);
+            let s = vsubq_f32(t, u);
+            vst1q_f32(dst.as_mut_ptr().add(i),
+                      vmulq_f32(vnegq_f32(s), ibv));
+            i += LANES;
+        }
+        scalar::cosine_grad_zero_y(&mut dst[i..], &o[i..], den, nb, d2,
+                                   inv_b);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatched entry points. Each reads the cached level (one relaxed
+// atomic load) and jumps to the matching arm; arms unsupported on the
+// running host are unreachable because `clamp_supported` never selects
+// them.
+
+macro_rules! dispatch {
+    ($(#[$meta:meta])* $name:ident, ($($arg:ident: $ty:ty),*)) => {
+        $(#[$meta])*
+        #[inline]
+        pub fn $name($($arg: $ty),*) {
+            match level() {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Avx2 is only cached when the host detected it.
+                SimdLevel::Avx2 => unsafe { avx2::$name($($arg),*) },
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: SSE2 is part of the x86_64 baseline.
+                SimdLevel::Sse => unsafe { sse::$name($($arg),*) },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: NEON is part of the aarch64 baseline.
+                SimdLevel::Neon => unsafe { neon::$name($($arg),*) },
+                _ => scalar::$name($($arg),*),
+            }
+        }
+    };
+}
+
+dispatch!(
+    /// `dst[i] += a * src[i]` over the lock-step prefix — the kernel
+    /// layer's inner loop. No zero-skip here: the kernel layer's shared
+    /// zero-skip rule lives at the call site, before dispatch, so it is
+    /// identical for every level.
+    axpy, (dst: &mut [f32], src: &[f32], a: f32));
+dispatch!(
+    /// `dst[i] *= b` (the `beta != 1` GEMM prologue).
+    scale, (dst: &mut [f32], b: f32));
+dispatch!(
+    /// `dst[i] += src[i]` — bias-gradient row accumulation.
+    add_assign, (dst: &mut [f32], src: &[f32]));
+dispatch!(
+    /// In-place ReLU: negatives become `+0.0`; NaN and `-0.0` are kept,
+    /// matching the scalar `if v < 0.0` branch bit-for-bit.
+    relu, (dst: &mut [f32]));
+dispatch!(
+    /// ReLU-derivative mask: `dst[i] = 0.0` wherever `!(h[i] > 0.0)`.
+    relu_mask, (dst: &mut [f32], h: &[f32]));
+dispatch!(
+    /// Eq. 3 log-sum decode sweep, vectorized **across items**:
+    /// `scores[i] = sum_{j ascending} logs[h[i*k + j]]`, one lane (and
+    /// one accumulator) per item. `h` must hold at least
+    /// `scores.len() * k` entries, each `< logs.len()`.
+    decode_logsum, (logs: &[f32], h: &[u32], k: usize,
+                    scores: &mut [f32]));
+dispatch!(
+    /// One Adam update over a parameter tensor (lane = one parameter):
+    /// `mu = b1*mu + (1-b1)*g`, `nu = b2*nu + (1-b2)*g*g`,
+    /// `pd -= alpha*mu / (sqrt(nu) + eps)`.
+    adam_update, (pd: &mut [f32], mu: &mut [f32], nu: &mut [f32],
+                  g: &[f32], b1: f32, b2: f32, alpha: f32, eps: f32));
+dispatch!(
+    /// One SGD(+momentum) update: `vel = momentum*vel + g*gscale`,
+    /// `pd -= lr*vel` (`gscale` carries the global-norm clip factor).
+    sgd_update, (pd: &mut [f32], vel: &mut [f32], g: &[f32],
+                 momentum: f32, gscale: f32, lr: f32));
+dispatch!(
+    /// One RMSProp update: `avg = decay*avg + (1-decay)*g*g`,
+    /// `pd -= lr*g / (sqrt(avg) + eps)`.
+    rmsprop_update, (pd: &mut [f32], avg: &mut [f32], g: &[f32],
+                     decay: f32, lr: f32, eps: f32));
+dispatch!(
+    /// One Adagrad update: `acc += g*g`,
+    /// `pd -= lr*g / (sqrt(acc) + eps)`.
+    adagrad_update, (pd: &mut [f32], acc: &mut [f32], g: &[f32],
+                     lr: f32, eps: f32));
+dispatch!(
+    /// Cosine-loss gradient row:
+    /// `dst[j] = -(y[j]/den - nb*o[j]/d2) * inv_b`.
+    cosine_grad, (dst: &mut [f32], y: &[f32], o: &[f32], den: f32,
+                  nb: f32, d2: f32, inv_b: f32));
+dispatch!(
+    /// [`cosine_grad`] with an implicit all-zero `y` row (the sparse
+    /// target arm's base sweep).
+    cosine_grad_zero_y, (dst: &mut [f32], o: &[f32], den: f32, nb: f32,
+                         d2: f32, inv_b: f32));
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Unit tests that force the dispatch level serialize here so a
+    /// concurrent test never observes a half-switched level. (Results
+    /// are level-invariant by contract; the lock keeps the *reference*
+    /// arms genuinely scalar.)
+    static LEVEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn parse_maps_documented_values() {
+        assert_eq!(SimdLevel::parse("0"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("off"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("Scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("sse"), Some(SimdLevel::Sse));
+        assert_eq!(SimdLevel::parse("AVX2"), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("neon"), Some(SimdLevel::Neon));
+        assert_eq!(SimdLevel::parse("avx512"), None);
+        assert_eq!(SimdLevel::parse(""), None);
+    }
+
+    #[test]
+    fn clamp_never_exceeds_detection() {
+        let det = detected_level();
+        for l in [SimdLevel::Scalar, SimdLevel::Sse, SimdLevel::Avx2,
+                  SimdLevel::Neon] {
+            let c = clamp_supported(l);
+            assert!(c == SimdLevel::Scalar || c == l,
+                    "clamp may only keep or zero a level");
+            if c != SimdLevel::Scalar {
+                // kept levels must be genuinely executable here
+                match c {
+                    SimdLevel::Sse => assert!(matches!(
+                        det, SimdLevel::Sse | SimdLevel::Avx2)),
+                    other => assert_eq!(other, det),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_level_round_trips_and_resets() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_level(Some(SimdLevel::Scalar));
+        assert_eq!(level(), SimdLevel::Scalar);
+        set_level(None); // back to env/auto
+        assert_eq!(level(), env_level());
+    }
+
+    /// Every dispatched primitive at the detected level must be
+    /// bit-identical to the scalar arm, including ragged tails (lengths
+    /// straddling multiples of the widest lane count).
+    #[test]
+    fn primitives_bit_identical_across_levels() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(0x51D);
+        for &n in &[1usize, 4, 7, 8, 9, 31, 64, 65] {
+            let src = rand_vec(&mut rng, n);
+            let g = rand_vec(&mut rng, n);
+            let base = rand_vec(&mut rng, n);
+            let mut h = rand_vec(&mut rng, n);
+            // a few exact zeros/negatives so the masks see both sides
+            for v in h.iter_mut().take(n / 2) {
+                *v = -v.abs();
+            }
+            let run_all = |lvl: Option<SimdLevel>| -> Vec<Vec<f32>> {
+                set_level(lvl);
+                let mut a = base.clone();
+                axpy(&mut a, &src, 1.7);
+                let mut sc = base.clone();
+                scale(&mut sc, -0.3);
+                let mut ad = base.clone();
+                add_assign(&mut ad, &src);
+                let mut re = h.clone();
+                relu(&mut re);
+                let mut rm = base.clone();
+                relu_mask(&mut rm, &h);
+                let mut pd = base.clone();
+                let mut mu = src.clone();
+                let mut nu: Vec<f32> =
+                    src.iter().map(|v| v * v).collect();
+                adam_update(&mut pd, &mut mu, &mut nu, &g, 0.9, 0.999,
+                            0.01, 1e-8);
+                let mut pd2 = base.clone();
+                let mut vel = src.clone();
+                sgd_update(&mut pd2, &mut vel, &g, 0.9, 0.5, 0.1);
+                let mut pd3 = base.clone();
+                let mut avg: Vec<f32> =
+                    src.iter().map(|v| v * v).collect();
+                rmsprop_update(&mut pd3, &mut avg, &g, 0.95, 0.01, 1e-7);
+                let mut pd4 = base.clone();
+                let mut acc: Vec<f32> =
+                    src.iter().map(|v| v * v).collect();
+                adagrad_update(&mut pd4, &mut acc, &g, 0.05, 1e-8);
+                let mut cg = vec![0.0f32; n];
+                cosine_grad(&mut cg, &src, &g, 1.5, 0.7, 2.25, 0.25);
+                let mut cgz = vec![0.0f32; n];
+                cosine_grad_zero_y(&mut cgz, &g, 1.5, 0.7, 2.25, 0.25);
+                vec![a, sc, ad, re, rm, pd, mu, nu, pd2, vel, pd3, avg,
+                     pd4, acc, cg, cgz]
+            };
+            let want = run_all(Some(SimdLevel::Scalar));
+            let got = run_all(None); // detected level
+            set_level(None);
+            assert_eq!(want, got, "n={n}");
+        }
+    }
+
+    #[test]
+    fn decode_logsum_bit_identical_across_levels() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(0x10601);
+        for &(d, m, k) in &[(1usize, 8usize, 3usize), (7, 16, 4),
+                            (33, 32, 1), (100, 64, 5)] {
+            let logs = rand_vec(&mut rng, m);
+            let h: Vec<u32> =
+                (0..d * k).map(|_| rng.below(m) as u32).collect();
+            set_level(Some(SimdLevel::Scalar));
+            let mut want = vec![0.0f32; d];
+            decode_logsum(&logs, &h, k, &mut want);
+            set_level(None);
+            let mut got = vec![f32::NAN; d];
+            decode_logsum(&logs, &h, k, &mut got);
+            assert_eq!(want, got, "d={d} k={k}");
+        }
+    }
+}

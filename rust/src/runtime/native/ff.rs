@@ -22,7 +22,10 @@
 //! reduces weight gradients with the parallel kernels (disjoint output
 //! blocks, serial fixed-order accumulation inside). Both are
 //! bit-identical to the serial single-shard step for every shard count
-//! and thread count — parallelism never moves the loss curve.
+//! and thread count — parallelism never moves the loss curve. The
+//! elementwise sweeps (ReLU, bias-gradient rows, the fused decode's
+//! log-sum gather) ride the SIMD microkernel tier
+//! ([`crate::linalg::simd`]) under the same bit-identity contract.
 
 use anyhow::{bail, Result};
 
@@ -30,6 +33,7 @@ use super::{loss_and_grad, optimizer_step, softmax_in_place};
 use crate::linalg::gemm::{broadcast_bias, gemm, par_gemm_nt_relu_masked,
                           par_gemm_tn_acc, par_spmm_scatter,
                           spmm_gather};
+use crate::linalg::simd;
 use crate::model::ModelState;
 use crate::runtime::backend::{BatchInput, BatchTarget, Execution};
 use crate::runtime::manifest::ArtifactSpec;
@@ -38,11 +42,7 @@ use crate::util::threadpool::{split_ranges, WorkerPool};
 
 #[inline]
 fn relu_in_place(v: &mut [f32]) {
-    for o in v.iter_mut() {
-        if *o < 0.0 {
-            *o = 0.0;
-        }
-    }
+    simd::relu(v);
 }
 
 /// One interpretable FF artifact: weights arrive per call (the wire
@@ -360,10 +360,8 @@ impl NativeExecution {
             let p = self.dims[layer + 1];
             let mut db = vec![0.0f32; p];
             for r in 0..bsz {
-                let grow = &g[r * p..(r + 1) * p];
-                for (d, &gv) in db.iter_mut().zip(grow) {
-                    *d += gv;
-                }
+                // lanes across the p bias slots, rows ascending per slot
+                simd::add_assign(&mut db, &g[r * p..(r + 1) * p]);
             }
             let mut dw = vec![0.0f32; n * p];
             if layer == 0 {
@@ -486,21 +484,17 @@ impl Execution for NativeExecution {
                 let m = self.spec.m_out;
                 let bsz = self.spec.batch;
                 // Eq. 3 decode: scores[r, i] = sum_j log(v[H_j(i)] + eps)
+                // — the shared decode sweep (log table once per row, the
+                // SIMD log-sum gather vectorized across items)
+                let h_u32: Vec<u32> =
+                    h.data.iter().map(|&v| v as u32).collect();
                 let mut scores = vec![0.0f32; bsz * d];
-                let mut logs = vec![0.0f32; m];
+                let mut logs: Vec<f32> = Vec::with_capacity(m);
                 for r in 0..bsz {
                     let prow = &probs.data[r * m..(r + 1) * m];
-                    for (l, &v) in logs.iter_mut().zip(prow) {
-                        *l = (v + crate::bloom::LOG_EPS).ln();
-                    }
-                    let srow = &mut scores[r * d..(r + 1) * d];
-                    for (i, s) in srow.iter_mut().enumerate() {
-                        let mut acc = 0.0f32;
-                        for j in 0..k {
-                            acc += logs[h.data[i * k + j] as usize];
-                        }
-                        *s = acc;
-                    }
+                    crate::bloom::log_probs_into(prow, &mut logs);
+                    simd::decode_logsum(&logs, &h_u32, k,
+                                        &mut scores[r * d..(r + 1) * d]);
                 }
                 Ok(vec![HostTensor::from_vec(&[bsz, d], scores)])
             }

@@ -13,7 +13,10 @@
 //! multi-hot target, cosine proximity — each with a sparse-target arm
 //! consuming [`BatchTarget::Sparse`] active positions directly, see
 //! [`loss_and_grad`]) and the four optimizers of
-//! python/compile/optim.py, implemented here as free functions. Hot
+//! python/compile/optim.py, implemented here as free functions — their
+//! elementwise update loops and the cosine gradient rows run on the
+//! SIMD microkernel tier ([`crate::linalg::simd`]), bit-identical to
+//! scalar at every level. Hot
 //! matmuls route through the blocked kernel layer in
 //! [`crate::linalg::gemm`], using its parallel entry points — both
 //! interpreters are data-parallel over the global worker pool
@@ -43,6 +46,7 @@ use anyhow::{bail, Result};
 
 use super::backend::{Backend, BatchTarget, Execution, SparseBatch};
 use super::manifest::{ArtifactSpec, Manifest};
+use crate::linalg::simd;
 use crate::model::ModelState;
 
 /// The default backend: a pure-Rust interpreter over artifact specs.
@@ -118,6 +122,12 @@ pub(crate) fn loss_and_grad(loss: &str, logits: &[f32], y: &BatchTarget,
 ///   L = -mean_r sum_j (y/max(sum y, 1))_j * log_softmax(z)_j
 ///   dL/dz = (T * softmax(z) - target) / batch, T = sum(target_row)
 /// (zero-padded rows have T = 0 and contribute neither loss nor grad).
+///
+/// Stays scalar by design: every element needs `exp(z - lse)`, a libm
+/// transcendental with no lane-invariance guarantee — vectorizing it
+/// would break the SIMD tier's bit-identity contract (see
+/// [`crate::linalg::simd`]). The cosine family, whose gradient is pure
+/// arithmetic, is the vectorized loss.
 pub(crate) fn ce_loss_grad(logits: &[f32], y: &[f32], bsz: usize,
                            m: usize) -> (f32, Vec<f32>) {
     let mut g = vec![0.0f32; bsz * m];
@@ -199,7 +209,12 @@ pub(crate) fn ce_loss_grad_sparse(logits: &[f32], sb: &SparseBatch,
 }
 
 /// Cosine-proximity loss `mean(1 - <o,y>/(|o||y| + 1e-8))` and its
-/// gradient wrt the outputs.
+/// gradient wrt the outputs. The norm/inner-product reductions stay
+/// scalar (splitting them over lanes would reassociate the sums); the
+/// O(m) gradient row is the SIMD tier's [`simd::cosine_grad`] with the
+/// row factors (`nb = n·b`, `d2 = a_safe·den·den`) hoisted in the
+/// scalar expression's own association order — bit-identical at every
+/// level.
 pub(crate) fn cosine_loss_grad(out: &[f32], y: &[f32], bsz: usize,
                                m: usize) -> (f32, Vec<f32>) {
     const EPS: f32 = 1e-8;
@@ -222,11 +237,10 @@ pub(crate) fn cosine_loss_grad(out: &[f32], y: &[f32], bsz: usize,
         let den = a * b + EPS;
         loss += (1.0 - n / den) as f64;
         let a_safe = a.max(1e-12);
-        let grow = &mut g[r * m..(r + 1) * m];
-        for j in 0..m {
-            grow[j] =
-                -(yr[j] / den - n * b * o[j] / (a_safe * den * den)) * inv_b;
-        }
+        let nb = n * b;
+        let d2 = a_safe * den * den;
+        simd::cosine_grad(&mut g[r * m..(r + 1) * m], yr, o, den, nb,
+                          d2, inv_b);
     }
     ((loss / bsz as f64) as f32, g)
 }
@@ -267,16 +281,16 @@ pub(crate) fn cosine_loss_grad_sparse(out: &[f32], sb: &SparseBatch,
         let den = a * b + EPS;
         loss += (1.0 - n / den) as f64;
         let a_safe = a.max(1e-12);
+        let nb = n * b;
+        let d2 = a_safe * den * den;
         let grow = &mut g[r * m..(r + 1) * m];
-        // yr[j] = 0 term everywhere, then patch the active positions
-        for (j, gv) in grow.iter_mut().enumerate() {
-            *gv = -(0.0 / den - n * b * o[j] / (a_safe * den * den))
-                * inv_b;
-        }
+        // yr[j] = 0 term everywhere (SIMD base sweep, same expression
+        // as the dense arm's zero-target lanes), then patch the active
+        // positions with the identical scalar formula
+        simd::cosine_grad_zero_y(grow, o, den, nb, d2, inv_b);
         for (&i, &yv) in idx.iter().zip(wgt) {
             let j = i as usize;
-            grow[j] = -(yv / den - n * b * o[j] / (a_safe * den * den))
-                * inv_b;
+            grow[j] = -(yv / den - nb * o[j] / d2) * inv_b;
         }
     }
     ((loss / bsz as f64) as f32, g)
@@ -299,6 +313,10 @@ pub(crate) fn optimizer_step(spec: &ArtifactSpec, state: &mut ModelState,
     let t = step[0].data[0] + 1.0;
     let lr = op.lr as f32;
     let eps = op.eps as f32;
+    // the per-parameter elementwise updates run on the SIMD tier (one
+    // lane per parameter, exactly-rounded lane ops only) — bit-identical
+    // to the scalar loops at every level; the sgd clip-norm reduction
+    // stays scalar so its accumulation order never changes
     match spec.optimizer.as_str() {
         "adam" => {
             let b1 = op.b1 as f32;
@@ -307,15 +325,9 @@ pub(crate) fn optimizer_step(spec: &ArtifactSpec, state: &mut ModelState,
                 lr * (1.0 - b2.powf(t)).sqrt() / (1.0 - b1.powf(t));
             let (mus, nus) = slots.split_at_mut(np);
             for i in 0..np {
-                let g = &grads[i];
-                let mu = &mut mus[i].data;
-                let nu = &mut nus[i].data;
-                let pd = &mut params[i].data;
-                for j in 0..g.len() {
-                    mu[j] = b1 * mu[j] + (1.0 - b1) * g[j];
-                    nu[j] = b2 * nu[j] + (1.0 - b2) * g[j] * g[j];
-                    pd[j] -= alpha * mu[j] / (nu[j].sqrt() + eps);
-                }
+                simd::adam_update(&mut params[i].data, &mut mus[i].data,
+                                  &mut nus[i].data, &grads[i], b1, b2,
+                                  alpha, eps);
             }
         }
         "sgd" => {
@@ -334,37 +346,23 @@ pub(crate) fn optimizer_step(spec: &ArtifactSpec, state: &mut ModelState,
                 1.0
             };
             for i in 0..np {
-                let g = &grads[i];
-                let vel = &mut slots[i].data;
-                let pd = &mut params[i].data;
-                for j in 0..g.len() {
-                    vel[j] = momentum * vel[j] + g[j] * scale;
-                    pd[j] -= lr * vel[j];
-                }
+                simd::sgd_update(&mut params[i].data, &mut slots[i].data,
+                                 &grads[i], momentum, scale, lr);
             }
         }
         "rmsprop" => {
             let decay = op.decay as f32;
             for i in 0..np {
-                let g = &grads[i];
-                let avg = &mut slots[i].data;
-                let pd = &mut params[i].data;
-                for j in 0..g.len() {
-                    avg[j] = decay * avg[j]
-                        + (1.0 - decay) * g[j] * g[j];
-                    pd[j] -= lr * g[j] / (avg[j].sqrt() + eps);
-                }
+                simd::rmsprop_update(&mut params[i].data,
+                                     &mut slots[i].data, &grads[i],
+                                     decay, lr, eps);
             }
         }
         "adagrad" => {
             for i in 0..np {
-                let g = &grads[i];
-                let acc = &mut slots[i].data;
-                let pd = &mut params[i].data;
-                for j in 0..g.len() {
-                    acc[j] += g[j] * g[j];
-                    pd[j] -= lr * g[j] / (acc[j].sqrt() + eps);
-                }
+                simd::adagrad_update(&mut params[i].data,
+                                     &mut slots[i].data, &grads[i], lr,
+                                     eps);
             }
         }
         other => bail!("native backend: unknown optimizer '{other}' \

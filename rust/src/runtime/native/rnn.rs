@@ -32,7 +32,12 @@
 //! `gemm_nt`/`gemm_tn_acc` — all through the kernel layer's parallel
 //! entry points, which fan disjoint row/output blocks across the global
 //! worker pool per timestep, bit-identically to the serial kernels for
-//! every thread count. The stateful serving interface comes in
+//! every thread count. The bias-gradient rows and the dense-input
+//! gather/scatter loops ride the SIMD microkernel tier
+//! ([`crate::linalg::simd`], lanes across output elements only —
+//! bit-identical at every level); the cell nonlinearities
+//! (sigmoid/tanh) are libm transcendentals and deliberately stay
+//! scalar. The stateful serving interface comes in
 //! both per-session ([`Execution::step`]/[`Execution::readout`]) and
 //! batched ([`Execution::step_batch`]/[`Execution::readout_batch`])
 //! forms; both share one implementation, so stepping N packed sessions
@@ -50,6 +55,7 @@ use super::{loss_and_grad, optimizer_step, softmax_in_place};
 use crate::linalg::gemm::{broadcast_bias, par_gemm, par_gemm_nt,
                           par_gemm_tn_acc, par_spmm_gather,
                           par_spmm_scatter, PackedB};
+use crate::linalg::simd;
 use crate::model::ModelState;
 use crate::runtime::backend::{BatchInput, BatchTarget,
                               BatchedHiddenState, Execution, HiddenState};
@@ -187,12 +193,9 @@ impl RecurrentExecution {
                     let dst = &mut xg[r * gh..(r + 1) * gh];
                     for (kk, &v) in row.iter().enumerate() {
                         if v == 0.0 {
-                            continue;
+                            continue; // the kernel layer's zero-skip
                         }
-                        let wrow = &wx[kk * gh..(kk + 1) * gh];
-                        for (o, &wv) in dst.iter_mut().zip(wrow) {
-                            *o += v * wv;
-                        }
+                        simd::axpy(dst, &wx[kk * gh..(kk + 1) * gh], v);
                     }
                 }
             }
@@ -463,12 +466,10 @@ impl RecurrentExecution {
                     let grow = &dxg[r * gh..(r + 1) * gh];
                     for (kk, &v) in row.iter().enumerate() {
                         if v == 0.0 {
-                            continue;
+                            continue; // the kernel layer's zero-skip
                         }
-                        let dst = &mut dwx[kk * gh..(kk + 1) * gh];
-                        for (o, &gv) in dst.iter_mut().zip(grow) {
-                            *o += v * gv;
-                        }
+                        simd::axpy(&mut dwx[kk * gh..(kk + 1) * gh],
+                                   grow, v);
                     }
                 }
             }
@@ -501,10 +502,9 @@ impl RecurrentExecution {
         par_gemm_tn_acc(&trace.h_last, &dlogits, &mut dwo, bsz, h, m_out);
         let mut dbo = vec![0.0f32; m_out];
         for r in 0..bsz {
-            let grow = &dlogits[r * m_out..(r + 1) * m_out];
-            for (d, &gv) in dbo.iter_mut().zip(grow) {
-                *d += gv;
-            }
+            // lanes across the m_out bias slots, rows ascending per slot
+            simd::add_assign(&mut dbo,
+                             &dlogits[r * m_out..(r + 1) * m_out]);
         }
         // dL/dh_T = dlogits @ wo^T
         let mut dh = vec![0.0f32; bsz * h];
@@ -588,10 +588,8 @@ impl RecurrentExecution {
             dh = dh_prev;
             // bias gradient: bg enters through xg only
             for row in 0..bsz {
-                let grow = &dxg[row * gh..(row + 1) * gh];
-                for (d, &gv) in dbg.iter_mut().zip(grow) {
-                    *d += gv;
-                }
+                simd::add_assign(&mut dbg,
+                                 &dxg[row * gh..(row + 1) * gh]);
             }
             // dwh += h_{t-1}^T @ dhg, dwx += x_t^T @ dxg (sparse
             // scatter; a timestep's few active bits usually fall below

@@ -44,7 +44,7 @@ use crate::model::ModelState;
 use crate::runtime::{ArtifactSpec, BatchInput, BatchedHiddenState,
                      Execution, HiddenState, HostTensor, Runtime,
                      SparseBatch};
-use crate::util::threadpool::WorkerPool;
+use crate::util::threadpool::{split_ranges, WorkerPool};
 
 #[derive(Clone, Debug)]
 pub struct RecRequest {
@@ -520,10 +520,13 @@ impl Server {
     /// apply the top-N protocol — `excludes[row]` when given (session
     /// serving passes the full click history), the request's own items
     /// otherwise — record metrics, send responses. The decode + top-N
-    /// sweep (O(d·k) per job) fans the flush's jobs across the global
-    /// worker pool once the flush is big enough to amortize the
-    /// fork-join; per-job results are independent, so the responses are
-    /// identical either way.
+    /// sweep (O(d·k) per job) fans contiguous job ranges across the
+    /// global worker pool once the flush is big enough to amortize the
+    /// fork-join; each worker owns one `(log table, score buffer)`
+    /// scratch pair reused across all its jobs
+    /// ([`Embedding::decode_into`]), so the hot decode path allocates
+    /// nothing per request. Per-job results are independent, so the
+    /// responses are identical either way.
     fn respond(jobs: &[Job], probs: &[f32], spec: &ArtifactSpec,
                emb: &dyn Embedding, metrics: &ServeMetrics,
                excludes: Option<&[Vec<u32>]>) {
@@ -542,16 +545,24 @@ impl Server {
                 (out_row, excl, job.request.top_n)
             })
             .collect();
-        let rank_one = |&(out_row, excl, top_n): &(&[f32], &[u32], usize)|
-            -> Vec<(usize, f32)> {
-            let mut scores = emb.decode(out_row);
-            for &it in excl {
-                if (it as usize) < scores.len() {
-                    scores[it as usize] = f32::NEG_INFINITY;
+        let rank_range = |&(lo, hi): &(usize, usize)|
+            -> Vec<Vec<(usize, f32)>> {
+            let mut logs: Vec<f32> = Vec::new();
+            let mut scores: Vec<f32> = Vec::new();
+            let mut out = Vec::with_capacity(hi - lo);
+            for &(out_row, excl, top_n) in &work[lo..hi] {
+                emb.decode_into(out_row, &mut logs, &mut scores);
+                for &it in excl {
+                    if (it as usize) < scores.len() {
+                        scores[it as usize] = f32::NEG_INFINITY;
+                    }
                 }
+                let top = top_k(&scores, top_n);
+                out.push(top.into_iter()
+                    .map(|i| (i, scores[i]))
+                    .collect());
             }
-            let top = top_k(&scores, top_n);
-            top.into_iter().map(|i| (i, scores[i])).collect()
+            out
         };
         let pool = WorkerPool::global();
         // fan out only when the flush carries enough decode work to
@@ -562,9 +573,13 @@ impl Server {
             && jobs.len() * m_out >= (1 << 13)
             && pool.threads() > 1
         {
-            pool.scope_map(&work, rank_one)
+            let ranges = split_ranges(work.len(), pool.threads());
+            pool.scope_map(&ranges, rank_range)
+                .into_iter()
+                .flatten()
+                .collect()
         } else {
-            work.iter().map(rank_one).collect()
+            rank_range(&(0, work.len()))
         };
         let mut responses = Vec::with_capacity(jobs.len());
         let mut lats = Vec::with_capacity(jobs.len());

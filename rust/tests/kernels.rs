@@ -10,17 +10,25 @@
 //! * property tests that `Execution::step_batch` over N packed sessions
 //!   is bit-identical to N sequential `Execution::step` calls —
 //!   including sessions that ragged-join and leave mid-stream, the
-//!   micro-batching server's actual access pattern.
+//!   micro-batching server's actual access pattern;
+//! * property tests that every SIMD level (`BLOOMREC_SIMD`) is
+//!   **bit-identical** to the forced-scalar arm across all kernel entry
+//!   points at ragged shapes, plus end-to-end train/predict parity and
+//!   a dispatch-override assertion — the determinism contract of the
+//!   SIMD microkernel tier.
 
-use bloomrec::linalg::gemm::{gemm, gemm_nt, gemm_packed, gemm_tn_acc,
-                             matmul_into, par_gemm, par_gemm_nt,
-                             par_gemm_tn_acc, par_spmm_gather,
-                             par_spmm_scatter, spmm_gather, spmm_scatter,
-                             PackedB};
+use bloomrec::bloom::{decode_scores, HashMatrix};
+use bloomrec::linalg::gemm::{gemm, gemm_nt, gemm_nt_relu_masked,
+                             gemm_packed, gemm_tn_acc, matmul_into,
+                             par_gemm, par_gemm_nt, par_gemm_tn_acc,
+                             par_spmm_gather, par_spmm_scatter,
+                             spmm_gather, spmm_scatter, PackedB};
+use bloomrec::linalg::simd::{self, SimdLevel};
 use bloomrec::model::ModelState;
-use bloomrec::runtime::{test_rnn_spec, BatchInput, BatchedHiddenState,
-                        Execution, HiddenState, RecurrentExecution,
-                        SparseBatch};
+use bloomrec::runtime::{test_ff_spec, test_rnn_spec, BatchInput,
+                        BatchTarget, BatchedHiddenState, Execution,
+                        HiddenState, HostTensor, NativeExecution,
+                        RecurrentExecution, SparseBatch};
 use bloomrec::util::proptest::check;
 use bloomrec::util::rng::Rng;
 use bloomrec::util::threadpool::WorkerPool;
@@ -31,6 +39,26 @@ use bloomrec::util::threadpool::WorkerPool;
 /// results are thread-count-invariant — but the reference arms must
 /// genuinely run serial to give the comparisons teeth).
 static POOL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Same idea for the process-global SIMD dispatch level: results are
+/// level-invariant by contract, but the parity tests' reference arms
+/// must genuinely run scalar.
+static SIMD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Scalar plus every SIMD level this host can actually execute
+/// (`set_level` clamps unsupported requests to scalar, so probing via
+/// the round trip is exact).
+fn supported_simd_levels() -> Vec<SimdLevel> {
+    let mut out = vec![SimdLevel::Scalar];
+    for l in [SimdLevel::Sse, SimdLevel::Avx2, SimdLevel::Neon] {
+        simd::set_level(Some(l));
+        if simd::level() == l {
+            out.push(l);
+        }
+    }
+    simd::set_level(None);
+    out
+}
 
 /// Naive i-j-k reference matmul (no blocking, no zero-skip, plain
 /// per-element dot) — deliberately a DIFFERENT summation order than the
@@ -373,4 +401,255 @@ fn prop_step_batch_matches_sequential_ragged_sessions() {
               }
               Ok(())
           });
+}
+
+/// Every kernel entry point at every supported SIMD level must be
+/// bit-identical to the forced-scalar arm — at ragged shapes (m, k, n
+/// not multiples of the lane width), zero-skip rows, and
+/// beta ∈ {0, 1, other}. This is the SIMD tier's determinism contract:
+/// lanes own output elements only, so parity is structural.
+#[test]
+fn prop_simd_kernels_bit_identical_to_scalar() {
+    let _simd = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let levels = supported_simd_levels();
+    check("simd-kernels-vs-scalar", 0x51D0, 12,
+          |rng| {
+              // deliberately odd-biased shapes: ragged lane tails
+              let m = 1 + rng.below(21);
+              let k = 1 + rng.below(131);
+              let n = 1 + rng.below(131);
+              let seed = rng.next_u64();
+              (vec![m, k, n], seed)
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 3 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (m, k, n) = (dims[0], dims[1], dims[2]);
+              if m == 0 || k == 0 || n == 0 {
+                  return Ok(()); // shrunk outside the invariants
+              }
+              let mut rng = Rng::new(*seed);
+              let a = rand_vec(&mut rng, m * k, 0.3);
+              let b = rand_vec(&mut rng, k * n, 0.0);
+              let bt = rand_vec(&mut rng, n * k, 0.2);
+              let g = rand_vec(&mut rng, m * n, 0.0);
+              let h = rand_vec(&mut rng, m * k, 0.5); // relu mask input
+              let seed_c = rand_vec(&mut rng, m * n, 0.0);
+              // CSR rows over k positions
+              let mut indptr = vec![0usize];
+              let mut indices = Vec::new();
+              let mut vals = Vec::new();
+              for _ in 0..m {
+                  let nnz = rng.below(k.min(30) + 1);
+                  let mut pos: Vec<usize> = rng.sample_distinct(k, nnz);
+                  pos.sort_unstable();
+                  for i in pos {
+                      indices.push(i as u32);
+                      vals.push(rng.normal() as f32);
+                  }
+                  indptr.push(indices.len());
+              }
+              // a decode sweep (d items over a k-probe hash matrix)
+              let dd = 3 + rng.below(90);
+              let mm = 8 + rng.below(24);
+              let kk = 1 + rng.below(5);
+              let hm = HashMatrix::random(dd, mm, kk, &mut rng);
+              let probs: Vec<f32> =
+                  (0..mm).map(|_| rng.f32() + 1e-3).collect();
+              let bp = PackedB::pack(&b, k, n);
+
+              let run_all = |lvl: SimdLevel| -> Vec<Vec<f32>> {
+                  simd::set_level(Some(lvl));
+                  let mut out: Vec<Vec<f32>> = Vec::new();
+                  for &beta in &[0.0f32, 1.0, 0.37] {
+                      let mut c = seed_c.clone();
+                      gemm(&a, &b, &mut c, m, k, n, beta);
+                      out.push(c);
+                      let mut c = seed_c.clone();
+                      gemm_packed(&a, &bp, &mut c, m, k, n, beta);
+                      out.push(c);
+                      let mut c = seed_c.clone();
+                      gemm_nt(&a, &bt, &mut c, m, k, n, beta);
+                      out.push(c);
+                  }
+                  let mut dw = vec![0.0f32; k * n];
+                  gemm_tn_acc(&a, &g, &mut dw, m, k, n);
+                  out.push(dw);
+                  // g [m, n] @ b^T with b [k, n]: rows=m, p=n, out=k
+                  let mut gp = vec![0.0f32; m * k];
+                  gemm_nt_relu_masked(&g, &b, &h, &mut gp, m, n, k);
+                  out.push(gp);
+                  let mut o = seed_c.clone();
+                  spmm_gather(&indptr, &indices, &vals, m, 0, 1, &b, n,
+                              &mut o);
+                  out.push(o);
+                  let mut dw = vec![0.0f32; k * n];
+                  spmm_scatter(&indptr, &indices, &vals, m, 0, 1, &g, n,
+                               &mut dw);
+                  out.push(dw);
+                  out.push(decode_scores(&probs, &hm));
+                  out
+              };
+              let want = run_all(SimdLevel::Scalar);
+              for &lvl in &levels[1..] {
+                  let got = run_all(lvl);
+                  if got != want {
+                      simd::set_level(None);
+                      return Err(format!(
+                          "{} diverged from scalar at {m}x{k}x{n}",
+                          lvl.name()));
+                  }
+              }
+              simd::set_level(None);
+              Ok(())
+          });
+}
+
+/// End-to-end SIMD parity: whole train steps (every optimizer, both
+/// loss families, FF and recurrent) and predicts must produce
+/// bit-identical losses, parameters, optimizer state and outputs under
+/// forced-scalar and the detected SIMD level — the activation /
+/// optimizer / loss sweeps all ride the dispatched tier.
+#[test]
+fn simd_train_and_predict_bit_identical_to_scalar() {
+    let _simd = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let levels = supported_simd_levels();
+
+    // FF grid: optimizer x loss
+    for &(optimizer, slots) in &[("adam", 2usize), ("sgd", 1),
+                                 ("rmsprop", 1), ("adagrad", 1)] {
+        for loss in ["softmax_ce", "cosine"] {
+            let mut spec = test_ff_spec(19, &[13], 19, 3);
+            spec.optimizer = optimizer.into();
+            spec.opt_slots = slots;
+            spec.loss = loss.into();
+            let mut rng = Rng::new(0xF00D);
+            let state0 = ModelState::init(&spec, &mut rng);
+            let mut x = HostTensor::zeros(&[3, 19]);
+            let mut y = HostTensor::zeros(&[3, 19]);
+            for v in x.data.iter_mut() {
+                if rng.bool(0.3) {
+                    *v = 1.0;
+                }
+            }
+            for v in y.data.iter_mut() {
+                if rng.bool(0.3) {
+                    *v = 1.0;
+                }
+            }
+            let exe = NativeExecution::new(spec.clone()).unwrap();
+            let run = |lvl: SimdLevel| {
+                simd::set_level(Some(lvl));
+                let mut st = state0.clone();
+                let mut losses = Vec::new();
+                for _ in 0..3 {
+                    losses.push(
+                        exe.train_step(&mut st,
+                                       &BatchInput::Dense(x.clone()),
+                                       &BatchTarget::Dense(y.clone()))
+                            .unwrap());
+                }
+                let out = exe
+                    .predict(&st.params, &BatchInput::Dense(x.clone()))
+                    .unwrap();
+                (losses, st, out)
+            };
+            let (l_s, st_s, out_s) = run(SimdLevel::Scalar);
+            for &lvl in &levels[1..] {
+                let (l_v, st_v, out_v) = run(lvl);
+                assert_eq!(l_s, l_v,
+                           "{optimizer}/{loss} loss diverged at {}",
+                           lvl.name());
+                assert_eq!(st_s.params, st_v.params,
+                           "{optimizer}/{loss} params diverged at {}",
+                           lvl.name());
+                assert_eq!(st_s.opt_state, st_v.opt_state,
+                           "{optimizer}/{loss} opt state diverged at {}",
+                           lvl.name());
+                assert_eq!(out_s, out_v,
+                           "{optimizer}/{loss} predict diverged at {}",
+                           lvl.name());
+            }
+            simd::set_level(None);
+        }
+    }
+
+    // recurrent: one GRU and one LSTM trajectory
+    for family in ["gru", "lstm"] {
+        let spec = test_rnn_spec(family, 11, 6, 11, 2, 3);
+        let mut rng = Rng::new(0xBEEF);
+        let state0 = ModelState::init(&spec, &mut rng);
+        let mut x = HostTensor::zeros(&[2, 3, 11]);
+        let mut y = HostTensor::zeros(&[2, 11]);
+        for v in x.data.iter_mut() {
+            if rng.bool(0.25) {
+                *v = 1.0;
+            }
+        }
+        for v in y.data.iter_mut() {
+            if rng.bool(0.25) {
+                *v = 1.0;
+            }
+        }
+        let exe = RecurrentExecution::new(spec.clone()).unwrap();
+        let run = |lvl: SimdLevel| {
+            simd::set_level(Some(lvl));
+            let mut st = state0.clone();
+            let mut losses = Vec::new();
+            for _ in 0..2 {
+                losses.push(
+                    exe.train_step(&mut st,
+                                   &BatchInput::Dense(x.clone()),
+                                   &BatchTarget::Dense(y.clone()))
+                        .unwrap());
+            }
+            let out = exe
+                .predict(&st.params, &BatchInput::Dense(x.clone()))
+                .unwrap();
+            (losses, st, out)
+        };
+        let (l_s, st_s, out_s) = run(SimdLevel::Scalar);
+        for &lvl in &levels[1..] {
+            let (l_v, st_v, out_v) = run(lvl);
+            assert_eq!(l_s, l_v, "{family} loss diverged at {}",
+                       lvl.name());
+            assert_eq!(st_s.params, st_v.params,
+                       "{family} params diverged at {}", lvl.name());
+            assert_eq!(out_s, out_v, "{family} predict diverged at {}",
+                       lvl.name());
+        }
+        simd::set_level(None);
+    }
+}
+
+/// The dispatcher must honor `BLOOMREC_SIMD`: under a forced `=0` run
+/// (the CI scalar leg) the active level is Scalar; under any other
+/// parseable value it is that level clamped to host support; with no
+/// override it equals detection.
+#[test]
+fn simd_dispatch_honors_env_override() {
+    let _simd = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    simd::set_level(None); // drop any runtime override, re-read the env
+    let active = simd::level();
+    match std::env::var("BLOOMREC_SIMD")
+        .ok()
+        .as_deref()
+        .and_then(SimdLevel::parse)
+    {
+        Some(SimdLevel::Scalar) => {
+            assert_eq!(active, SimdLevel::Scalar,
+                       "BLOOMREC_SIMD=0 must force the scalar arms");
+        }
+        Some(want) => {
+            assert!(active == want || active == SimdLevel::Scalar,
+                    "override {} must dispatch to it or clamp to \
+                     scalar, got {}", want.name(), active.name());
+        }
+        None => {
+            assert_eq!(active, simd::detected_level(),
+                       "no override: dispatch follows detection");
+        }
+    }
 }
