@@ -84,10 +84,11 @@ impl crate::embedding::Embedding for CountingBloom {
     fn decode(&self, output: &[f32]) -> Vec<f32> {
         super::decode::decode_scores(output, self.out_matrix())
     }
-    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
-                   scores: &mut Vec<f32>) {
+    fn decode_into(&self, output: &[f32],
+                   scratch: &mut super::decode::DecodeScratch) {
         super::decode::decode_scores_into(output, self.out_matrix(),
-                                          logs, scores);
+                                          &mut scratch.logs,
+                                          &mut scratch.scores);
     }
     fn name(&self) -> &'static str {
         "cnt_be"

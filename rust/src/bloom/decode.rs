@@ -23,6 +23,34 @@ use crate::linalg::simd;
 /// Must match python/compile/kernels/ref.py LOG_EPS.
 pub const LOG_EPS: f32 = 1e-12;
 
+/// Per-worker reusable decode scratch: every buffer the exhaustive
+/// sweep and the candidate-pruned tier
+/// ([`crate::bloom::index::decode_pruned_top_n_into`]) touch, bundled
+/// so the serve flush and the evaluation sweep keep exactly one of
+/// these per worker and the whole decode + top-N path allocates
+/// nothing per request once the buffers have grown to size. Buffers
+/// may arrive dirty — every consumer fully overwrites what it reads.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeScratch {
+    /// `ln(p + LOG_EPS)` table, one entry per embedded position (len m)
+    pub logs: Vec<f32>,
+    /// full-catalog score buffer for exhaustive sweeps (len d)
+    pub scores: Vec<f32>,
+    /// merged candidate item ids, sorted ascending and deduplicated
+    pub cands: Vec<u32>,
+    /// scores of `cands`, same order
+    pub cand_scores: Vec<f32>,
+    /// top-k selection heap/output buffer
+    /// ([`crate::linalg::knn::top_k_into`])
+    pub heap: Vec<(f32, usize)>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Fill `logs` with `ln(p + LOG_EPS)` per embedded probability — the
 /// once-per-output-vector half of the decode, reusing the caller's
 /// buffer. (Stays scalar: `ln` is a libm transcendental, outside the

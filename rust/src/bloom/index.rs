@@ -1,0 +1,513 @@
+//! Candidate-pruned Bloom decode: the inverted position index and the
+//! pruned scorer that turn the paper's O(d·k) full-catalog likelihood
+//! sweep (Eqs. 2-3) into a sublinear top-N retrieval for million-item
+//! catalogs.
+//!
+//! The observation: an item can only rank high when *all* k of its
+//! Bloom positions carry high probability, so the request's top-N must
+//! live inside the union of the posting lists of the highest
+//! log-probability positions. [`PositionIndex`] is the CSR inverted
+//! index position -> sorted posting list of items hashed there (built
+//! once per [`HashMatrix`] in O(d·k), reusable across requests, built
+//! in parallel over the worker pool); the pruned scorer
+//! ([`decode_pruned_top_n_into`]):
+//!
+//! 1. selects the top-P positions of the per-request log table
+//!    (allocation-free heap select, [`top_k_into`]),
+//! 2. merges their posting lists into a deduplicated ascending
+//!    candidate set,
+//! 3. exact-rescores only the candidates with the same
+//!    single-accumulator ascending-j log-sum the exhaustive sweep
+//!    runs — candidate scores are *bitwise identical* to the
+//!    exhaustive scores, so whenever the candidate set covers the true
+//!    top-N the pruned result equals the exhaustive result exactly
+//!    (ties included: candidates are scored in ascending item order,
+//!    so index tie-breaks equal item-id tie-breaks).
+//!
+//! When the candidate set degenerates (knobs covering the whole
+//! catalog, a merge overflowing `max_candidates`, or too few
+//! candidates to fill the response past the exclusions) the scorer
+//! falls back to the exhaustive sweep — the guaranteed-exact escape
+//! hatch — and reports the fallback in [`DecodeStats`] so serving
+//! metrics can observe pruning effectiveness. The exhaustive decode
+//! stays the oracle everywhere: benches and tests assert pruned
+//! recall against it before timing anything.
+
+use super::decode::{decode_scores_prelogged_into, log_probs_into,
+                    DecodeScratch};
+use super::hashing::HashMatrix;
+use crate::linalg::knn::top_k_into;
+use crate::util::threadpool::{split_ranges, WorkerPool};
+
+/// Default top-P positions for `DecodeStrategy::Pruned` (`pruned` with
+/// no parameters, e.g. `BLOOMREC_DECODE=pruned`).
+pub const DEFAULT_TOP_POSITIONS: usize = 128;
+/// Default candidate-set cap for `DecodeStrategy::Pruned`.
+pub const DEFAULT_MAX_CANDIDATES: usize = 65_536;
+
+/// How [`crate::embedding::Embedding::decode_top_n_into`] recovers the
+/// top-N: the exact full-catalog sweep, or the candidate-pruned tier.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeStrategy {
+    /// Eq. 3 over every item — O(d·k), exact, the oracle.
+    #[default]
+    Exhaustive,
+    /// Top-P position selection + posting-list merge + exact rescore
+    /// of the candidates, exhaustive fallback when the set
+    /// degenerates. Exact whenever the candidates cover the true
+    /// top-N (always when `max_candidates >= d`).
+    Pruned {
+        /// positions of the log table whose posting lists seed the
+        /// candidate set
+        top_positions: usize,
+        /// fall back to the exhaustive sweep beyond this many merged
+        /// candidates
+        max_candidates: usize,
+    },
+}
+
+impl DecodeStrategy {
+    /// Parse `exhaustive`, `pruned`, or `pruned:P,C` (both counts
+    /// positive). Returns `None` for anything else.
+    pub fn parse(s: &str) -> Option<DecodeStrategy> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("exhaustive") {
+            return Some(DecodeStrategy::Exhaustive);
+        }
+        if s.eq_ignore_ascii_case("pruned") {
+            return Some(DecodeStrategy::Pruned {
+                top_positions: DEFAULT_TOP_POSITIONS,
+                max_candidates: DEFAULT_MAX_CANDIDATES,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("pruned:") {
+            let mut it = rest.split(',');
+            let p: usize = it.next()?.trim().parse().ok()?;
+            let c: usize = it.next()?.trim().parse().ok()?;
+            if it.next().is_some() || p == 0 || c == 0 {
+                return None;
+            }
+            return Some(DecodeStrategy::Pruned {
+                top_positions: p,
+                max_candidates: c,
+            });
+        }
+        None
+    }
+
+    /// `BLOOMREC_DECODE` (`exhaustive` | `pruned` | `pruned:P,C`),
+    /// defaulting to the exhaustive sweep when unset or unparseable.
+    pub fn from_env() -> DecodeStrategy {
+        std::env::var("BLOOMREC_DECODE")
+            .ok()
+            .and_then(|v| DecodeStrategy::parse(&v))
+            .unwrap_or_default()
+    }
+}
+
+/// What one top-N decode actually did — aggregated per flush into the
+/// serving metrics so pruning effectiveness is observable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// items whose log-sum was evaluated (candidate-set size, or d on
+    /// the exhaustive path)
+    pub scored: usize,
+    /// catalog size d
+    pub catalog: usize,
+    /// the pruned tier was requested
+    pub pruned: bool,
+    /// the pruned tier was requested but fell back to the exhaustive
+    /// sweep (degenerate candidate set)
+    pub fallback: bool,
+}
+
+/// CSR inverted index over a [`HashMatrix`]: for each of the m Bloom
+/// positions, the ascending list of items hashed there. `|items| =
+/// d·k` (every probe appears exactly once), built in O(d·k) by
+/// counting sort, reusable across every request against the same
+/// matrix.
+#[derive(Clone, Debug)]
+pub struct PositionIndex {
+    pub d: usize,
+    pub m: usize,
+    pub k: usize,
+    /// position p's posting list is `items[offsets[p]..offsets[p+1]]`
+    offsets: Vec<u32>,
+    /// posting lists back to back, each ascending by item id
+    items: Vec<u32>,
+}
+
+/// Shared write target of the parallel scatter pass. Each build task
+/// writes only the disjoint slot set its cursor array reserved, so
+/// aliasing is impossible by construction (see
+/// [`PositionIndex::build_with`]).
+struct SlotWriter(*mut u32);
+// SAFETY: tasks write disjoint slots of a buffer that outlives the
+// scoped fork-join; no slot is read until every task has joined.
+unsafe impl Send for SlotWriter {}
+unsafe impl Sync for SlotWriter {}
+
+impl PositionIndex {
+    /// Serial build — the oracle the parallel build is tested against.
+    pub fn build(hm: &HashMatrix) -> Self {
+        Self::build_with(hm, WorkerPool::with_threads(1))
+    }
+
+    /// Build over the global worker pool (`BLOOMREC_THREADS`). The
+    /// result is bit-identical to [`PositionIndex::build`] for every
+    /// thread count: item ranges scatter into disjoint, precomputed
+    /// slot ranges, and ranges ascend in item id.
+    pub fn build_parallel(hm: &HashMatrix) -> Self {
+        Self::build_with(hm, WorkerPool::global())
+    }
+
+    /// Counting-sort build: count probes per position (parallel over
+    /// item ranges), prefix-sum into CSR offsets, then scatter each
+    /// item range through its own cursor array — range r's cursor for
+    /// position p starts at `offsets[p] +` the probe count of the
+    /// earlier ranges, so the scattered slot sets are disjoint and the
+    /// posting lists come out ascending by item id.
+    pub fn build_with(hm: &HashMatrix, pool: WorkerPool) -> Self {
+        let (d, m, k) = (hm.d, hm.m, hm.k);
+        assert!(d.saturating_mul(k) <= u32::MAX as usize,
+                "PositionIndex: d*k = {} overflows the u32 CSR layout",
+                d * k);
+        // fan out only when the table is big enough to amortize the
+        // fork-join (and the per-worker count arrays)
+        let parts = if pool.threads() > 1 && d * k >= (1 << 16) {
+            pool.threads()
+        } else {
+            1
+        };
+        let ranges = split_ranges(d, parts);
+        // pass 1: probe counts per position, one array per item range
+        let counts: Vec<Vec<u32>> = pool.scope_map(&ranges, |&(lo, hi)| {
+            let mut c = vec![0u32; m];
+            for &p in &hm.h[lo * k..hi * k] {
+                c[p as usize] += 1;
+            }
+            c
+        });
+        // exclusive prefix sum -> CSR offsets
+        let mut offsets = vec![0u32; m + 1];
+        for c in &counts {
+            for (o, &n) in offsets[1..].iter_mut().zip(c) {
+                *o += n;
+            }
+        }
+        for p in 1..=m {
+            offsets[p] += offsets[p - 1];
+        }
+        // per-range write cursors: range r's slots for position p are
+        // [offsets[p] + sum of earlier ranges' counts, +counts[r][p])
+        let mut cursors: Vec<Vec<u32>> = Vec::with_capacity(counts.len());
+        let mut base = offsets[..m].to_vec();
+        for c in &counts {
+            cursors.push(base.clone());
+            for (b, &n) in base.iter_mut().zip(c) {
+                *b += n;
+            }
+        }
+        // pass 2: disjoint scatter, ranges ascending in item id
+        let mut items = vec![0u32; d * k];
+        if ranges.len() <= 1 {
+            let mut cur = cursors.pop().unwrap_or_default();
+            for item in 0..d {
+                for &p in hm.row(item) {
+                    let at = cur[p as usize];
+                    cur[p as usize] = at + 1;
+                    items[at as usize] = item as u32;
+                }
+            }
+        } else {
+            let writer = SlotWriter(items.as_mut_ptr());
+            let writer = &writer;
+            let tasks: Vec<_> = ranges
+                .iter()
+                .zip(cursors)
+                .map(|(&(lo, hi), mut cur)| {
+                    move || {
+                        for item in lo..hi {
+                            for &p in hm.row(item) {
+                                let at = cur[p as usize] as usize;
+                                cur[p as usize] += 1;
+                                // SAFETY: slot `at` was reserved for
+                                // this range alone by the cursor
+                                // construction above; `items` outlives
+                                // the scoped join.
+                                unsafe {
+                                    *writer.0.add(at) = item as u32;
+                                }
+                            }
+                        }
+                    }
+                })
+                .collect();
+            pool.scope_run(tasks);
+        }
+        Self { d, m, k, offsets, items }
+    }
+
+    /// Ascending item ids hashed to position `p`.
+    #[inline]
+    pub fn posting(&self, p: usize) -> &[u32] {
+        &self.items[self.offsets[p] as usize..self.offsets[p + 1] as usize]
+    }
+
+    /// Longest posting list — with uniform hashing ≈ d·k/m, the
+    /// per-position contribution to a merged candidate set.
+    pub fn max_posting_len(&self) -> usize {
+        (0..self.m)
+            .map(|p| (self.offsets[p + 1] - self.offsets[p]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// RAM footprint in bytes (the index costs the same as the hash
+    /// matrix it inverts, plus m+1 offsets).
+    pub fn bytes(&self) -> usize {
+        (self.offsets.len() + self.items.len())
+            * std::mem::size_of::<u32>()
+    }
+}
+
+/// The exact full-catalog top-N: Eq. 3 over every item via the SIMD
+/// log-sum sweep, exclusions masked to -inf, then one allocation-free
+/// top-k select. Shared by the `Exhaustive` strategy, the pruned
+/// tier's fallback, and the oracle side of the recall tests/benches.
+pub fn decode_exhaustive_top_n_into(hm: &HashMatrix, output: &[f32],
+                                    excl: &[u32], n: usize,
+                                    scratch: &mut DecodeScratch,
+                                    out: &mut Vec<(usize, f32)>)
+    -> DecodeStats {
+    log_probs_into(output, &mut scratch.logs);
+    exhaustive_prelogged(hm, excl, n, scratch, out);
+    DecodeStats {
+        scored: hm.d,
+        catalog: hm.d,
+        pruned: false,
+        fallback: false,
+    }
+}
+
+/// The exhaustive tail with `scratch.logs` already holding the
+/// request's log table (the pruned fallback arrives here without
+/// paying the m `ln` calls twice).
+fn exhaustive_prelogged(hm: &HashMatrix, excl: &[u32], n: usize,
+                        scratch: &mut DecodeScratch,
+                        out: &mut Vec<(usize, f32)>) {
+    let DecodeScratch { logs, scores, heap, .. } = scratch;
+    decode_scores_prelogged_into(logs, hm, scores);
+    for &it in excl {
+        if (it as usize) < scores.len() {
+            scores[it as usize] = f32::NEG_INFINITY;
+        }
+    }
+    top_k_into(scores, n, heap);
+    out.clear();
+    out.extend(heap.iter().map(|&(s, i)| (i, s)));
+}
+
+/// Candidate-pruned top-N (see the module docs for the exactness
+/// argument): top-P positions -> posting-list merge -> exact rescore
+/// of the candidates only, with the exhaustive sweep as fallback when
+/// the candidate set degenerates. `out` receives (item, score)
+/// descending, ties by ascending item id — the same contract as the
+/// exhaustive path, and bitwise-equal scores.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_pruned_top_n_into(hm: &HashMatrix, idx: &PositionIndex,
+                                top_positions: usize,
+                                max_candidates: usize, output: &[f32],
+                                excl: &[u32], n: usize,
+                                scratch: &mut DecodeScratch,
+                                out: &mut Vec<(usize, f32)>)
+    -> DecodeStats {
+    debug_assert_eq!((idx.d, idx.m, idx.k), (hm.d, hm.m, hm.k),
+                     "index built from a different hash matrix shape");
+    let (d, m) = (hm.d, hm.m);
+    log_probs_into(output, &mut scratch.logs);
+    // knobs that cover the whole catalog: the contract is exactness,
+    // so run the sweep that guarantees it
+    if max_candidates >= d || top_positions >= m {
+        exhaustive_prelogged(hm, excl, n, scratch, out);
+        return DecodeStats {
+            scored: d,
+            catalog: d,
+            pruned: true,
+            fallback: true,
+        };
+    }
+    {
+        let DecodeScratch { logs, heap, cands, .. } = scratch;
+        // top-P positions by log-probability, then merge their posting
+        // lists into an ascending deduplicated candidate set — all in
+        // reused buffers
+        top_k_into(logs, top_positions, heap);
+        cands.clear();
+        for &(_, p) in heap.iter() {
+            cands.extend_from_slice(idx.posting(p));
+        }
+        cands.sort_unstable();
+        cands.dedup();
+    }
+    // degenerate set: overflow, or too few candidates to fill the
+    // top-N once the exclusions are masked (conservative: exclusions
+    // may not all be candidates)
+    if scratch.cands.len() > max_candidates
+        || scratch.cands.len() < n.saturating_add(excl.len())
+    {
+        exhaustive_prelogged(hm, excl, n, scratch, out);
+        return DecodeStats {
+            scored: d,
+            catalog: d,
+            pruned: true,
+            fallback: true,
+        };
+    }
+    let scored = scratch.cands.len();
+    let DecodeScratch { logs, cands, cand_scores, heap, .. } = scratch;
+    cand_scores.clear();
+    cand_scores.extend(cands.iter().map(|&it| {
+        // the same single-accumulator ascending-j add order as the
+        // exhaustive sweep (and the SIMD lanes) -> bitwise-identical
+        // scores
+        let mut acc = 0.0f32;
+        for &p in hm.row(it as usize) {
+            acc += logs[p as usize];
+        }
+        acc
+    }));
+    // top-N protocol: mask the exclusions that made the candidate set
+    for &it in excl {
+        if let Ok(c) = cands.binary_search(&it) {
+            cand_scores[c] = f32::NEG_INFINITY;
+        }
+    }
+    // candidates ascend in item id, so tie-breaking on the candidate
+    // index equals the exhaustive path's item-id tie-break
+    top_k_into(cand_scores, n, heap);
+    out.clear();
+    out.extend(heap.iter().map(|&(s, c)| (cands[c] as usize, s)));
+    DecodeStats { scored, catalog: d, pruned: true, fallback: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn hm(d: usize, m: usize, k: usize, seed: u64) -> HashMatrix {
+        HashMatrix::random(d, m, k, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn index_inverts_the_hash_matrix() {
+        let hm = hm(300, 48, 3, 1);
+        let idx = PositionIndex::build(&hm);
+        // every probe appears exactly once, posting lists ascend
+        let mut total = 0;
+        for p in 0..hm.m {
+            let post = idx.posting(p);
+            total += post.len();
+            assert!(post.windows(2).all(|w| w[0] < w[1]),
+                    "posting {p} not strictly ascending: {post:?}");
+            for &it in post {
+                assert!(hm.row(it as usize).contains(&(p as u32)));
+            }
+        }
+        assert_eq!(total, hm.d * hm.k);
+        // and the other direction: every probe is indexed
+        for item in 0..hm.d {
+            for &p in hm.row(item) {
+                assert!(idx.posting(p as usize)
+                            .binary_search(&(item as u32))
+                            .is_ok(),
+                        "item {item} missing from posting {p}");
+            }
+        }
+        assert!(idx.max_posting_len() >= hm.d * hm.k / hm.m);
+        assert_eq!(idx.bytes(), (hm.m + 1 + hm.d * hm.k) * 4);
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        // big enough to clear the fan-out threshold (d*k >= 2^16)
+        let hm = hm(20_000, 512, 4, 7);
+        let serial = PositionIndex::build(&hm);
+        for threads in [2usize, 3, 8] {
+            let par = PositionIndex::build_with(
+                &hm, WorkerPool::with_threads(threads));
+            assert_eq!(par.offsets, serial.offsets, "t={threads}");
+            assert_eq!(par.items, serial.items, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn strategy_parses_env_forms() {
+        assert_eq!(DecodeStrategy::parse("exhaustive"),
+                   Some(DecodeStrategy::Exhaustive));
+        assert_eq!(DecodeStrategy::parse(" Exhaustive "),
+                   Some(DecodeStrategy::Exhaustive));
+        assert_eq!(DecodeStrategy::parse("pruned"),
+                   Some(DecodeStrategy::Pruned {
+                       top_positions: DEFAULT_TOP_POSITIONS,
+                       max_candidates: DEFAULT_MAX_CANDIDATES,
+                   }));
+        assert_eq!(DecodeStrategy::parse("pruned:64,4096"),
+                   Some(DecodeStrategy::Pruned {
+                       top_positions: 64,
+                       max_candidates: 4096,
+                   }));
+        for bad in ["", "prune", "pruned:", "pruned:64", "pruned:0,10",
+                    "pruned:64,0", "pruned:a,b", "pruned:1,2,3"] {
+            assert_eq!(DecodeStrategy::parse(bad), None, "{bad:?}");
+        }
+        assert_eq!(DecodeStrategy::default(),
+                   DecodeStrategy::Exhaustive);
+    }
+
+    #[test]
+    fn pruned_falls_back_exactly_when_knobs_cover_catalog() {
+        let hm = hm(120, 32, 3, 3);
+        let idx = PositionIndex::build(&hm);
+        let mut rng = Rng::new(4);
+        let probs: Vec<f32> =
+            (0..hm.m).map(|_| rng.f32() + 1e-3).collect();
+        let mut scratch = DecodeScratch::new();
+        let mut want = Vec::new();
+        decode_exhaustive_top_n_into(&hm, &probs, &[5, 9], 10,
+                                     &mut scratch, &mut want);
+        for (p, c) in [(4, hm.d), (hm.m, 8), (4, hm.d * 2)] {
+            let mut got = Vec::new();
+            let st = decode_pruned_top_n_into(&hm, &idx, p, c, &probs,
+                                              &[5, 9], 10, &mut scratch,
+                                              &mut got);
+            assert!(st.fallback && st.pruned, "p={p} c={c}");
+            assert_eq!(st.scored, hm.d);
+            assert_eq!(got, want, "p={p} c={c}");
+        }
+    }
+
+    #[test]
+    fn pruned_scores_are_bitwise_exhaustive_scores() {
+        let hm = hm(500, 64, 4, 11);
+        let idx = PositionIndex::build(&hm);
+        let mut rng = Rng::new(12);
+        let probs: Vec<f32> =
+            (0..hm.m).map(|_| rng.f32() + 1e-3).collect();
+        let full = super::super::decode::decode_scores(&probs, &hm);
+        let mut scratch = DecodeScratch::new();
+        let mut got = Vec::new();
+        let st = decode_pruned_top_n_into(&hm, &idx, 16, 400, &probs,
+                                          &[], 10, &mut scratch,
+                                          &mut got);
+        assert!(st.pruned && !st.fallback,
+                "16 positions / cap 400 should not degenerate");
+        assert!(st.scored < hm.d, "candidate set did not prune");
+        assert_eq!(got.len(), 10);
+        for &(item, score) in &got {
+            assert_eq!(score.to_bits(), full[item].to_bits(),
+                       "item {item}: rescore must be bitwise exact");
+        }
+    }
+}

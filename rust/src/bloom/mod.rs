@@ -7,6 +7,9 @@
 //!   embedding, O(c*k), zero space in the on-the-fly mode.
 //! * [`decode`]: Eqs. 2-3 — recover a ranking over the original d items
 //!   from the embedded softmax output.
+//! * [`index`]: candidate-pruned decode for million-item catalogs — the
+//!   position -> posting-list inverted index and the top-P pruned
+//!   scorer, with the exhaustive decode kept as the oracle.
 //! * [`cbe`]: Algorithm 1 — co-occurrence-guided collision redirection.
 
 pub mod analysis;
@@ -15,12 +18,15 @@ pub mod counting;
 pub mod decode;
 pub mod encode;
 pub mod hashing;
+pub mod index;
 
 pub use analysis::{measure_fp, theoretical_fp, FpReport};
 pub use cbe::{cbe_rewrite, cooccurrence_stats, CoocStats};
 pub use counting::{encode_counting_into, estimate_count, CountingBloom};
 pub use decode::{decode_ranking, decode_scores, decode_scores_into,
                  decode_scores_prelogged, decode_scores_prelogged_into,
-                 decode_top_n, log_probs_into, LOG_EPS};
+                 decode_top_n, log_probs_into, DecodeScratch, LOG_EPS};
 pub use encode::{encode_batch, encode_on_the_fly_into, BloomEncoder};
 pub use hashing::{double_hash_position, HashKind, HashMatrix};
+pub use index::{decode_exhaustive_top_n_into, decode_pruned_top_n_into,
+                DecodeStats, DecodeStrategy, PositionIndex};

@@ -5,6 +5,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::bloom::DecodeStrategy;
 use crate::data::Scale;
 
 /// Global options shared by CLI subcommands and the bench harness.
@@ -19,6 +20,9 @@ pub struct Options {
     /// restrict experiments to these tasks
     pub tasks: Option<Vec<String>>,
     pub top_n: usize,
+    /// serving decode route (`--decode exhaustive|pruned|pruned:P,C`);
+    /// `None` defers to the embedding default (`BLOOMREC_DECODE`)
+    pub decode: Option<DecodeStrategy>,
 }
 
 impl Default for Options {
@@ -31,6 +35,7 @@ impl Default for Options {
             epochs: None,
             tasks: None,
             top_n: 10,
+            decode: None,
         }
     }
 }
@@ -77,6 +82,13 @@ impl Options {
                 "--top-n" => {
                     opts.top_n = req(&mut it, arg)?.parse()
                         .map_err(|e| anyhow!("bad --top-n: {e}"))?;
+                }
+                "--decode" => {
+                    let v = req(&mut it, arg)?;
+                    opts.decode = Some(DecodeStrategy::parse(&v)
+                        .ok_or_else(|| anyhow!(
+                            "bad --decode '{v}' (want exhaustive, \
+                             pruned, or pruned:P,C)"))?);
                 }
                 _ if arg.starts_with("--") => bail!("unknown flag {arg}"),
                 _ => positional.push(arg.clone()),
@@ -127,6 +139,22 @@ mod tests {
         assert!(Options::parse(&sv(&["--scale", "huge"])).is_err());
         assert!(Options::parse(&sv(&["--bogus"])).is_err());
         assert!(Options::parse(&sv(&["--seeds"])).is_err());
+        assert!(Options::parse(&sv(&["--decode", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn parses_decode_strategies() {
+        let (o, _) = Options::parse(&[]).unwrap();
+        assert_eq!(o.decode, None);
+        let (o, _) =
+            Options::parse(&sv(&["--decode", "exhaustive"])).unwrap();
+        assert_eq!(o.decode, Some(DecodeStrategy::Exhaustive));
+        let (o, _) =
+            Options::parse(&sv(&["--decode", "pruned:32,1024"])).unwrap();
+        assert_eq!(o.decode, Some(DecodeStrategy::Pruned {
+            top_positions: 32,
+            max_candidates: 1024,
+        }));
     }
 
     #[test]

@@ -15,16 +15,22 @@
 //! per-example decode + rank-count sweep fans the batch's examples
 //! across the same pool here, reducing contributions back in example
 //! order — the reported score is bit-identical to the serial sweep for
-//! every thread count. Each worker reuses one decode scratch pair
-//! (log table + score buffer, [`Embedding::decode_into`]) across its
-//! examples, and the log-sum gather itself rides the SIMD tier — the
-//! sweep allocates nothing per example.
+//! every thread count. Each worker reuses one decode scratch bundle
+//! ([`crate::bloom::DecodeScratch`], via [`Embedding::decode_into`])
+//! across its examples, and the log-sum gather itself rides the SIMD
+//! tier — the sweep allocates nothing per example.
+//!
+//! Evaluation always runs the *exhaustive* decode: MAP and RR need the
+//! full-catalog rank of the relevant items, which the candidate-pruned
+//! serving tier does not produce (it returns a top-N). The pruned path
+//! is exercised by the serving stack and its recall-vs-oracle tests.
 
 use std::collections::HashSet;
 
 use anyhow::Result;
 
 use super::batcher::{batch_ranges, encode_input_batch};
+use crate::bloom::DecodeScratch;
 use crate::data::{Dataset, Example, Target};
 use crate::embedding::Embedding;
 use crate::eval::{accuracy_pct, average_precision,
@@ -90,11 +96,9 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
         };
         let ranges = split_ranges(batch.len(), workers);
         let parts = pool.scope_map(&ranges, |&(rlo, rhi)| {
-            // per-worker decode scratch (log table + score buffer),
-            // reused across every example of the range — the sweep
-            // allocates nothing per example
-            let mut logs: Vec<f32> = Vec::new();
-            let mut scores: Vec<f32> = Vec::new();
+            // per-worker decode scratch, reused across every example
+            // of the range — the sweep allocates nothing per example
+            let mut scratch = DecodeScratch::new();
             let mut out = Vec::with_capacity(rhi - rlo);
             for row in rlo..rhi {
                 let ex = batch[row];
@@ -108,7 +112,8 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
                         // rank-counting instead of a full argsort:
                         // O(d * r) (EXPERIMENTS.md §Perf, ~4x faster
                         // evaluation)
-                        emb.decode_into(out_row, &mut logs, &mut scores);
+                        emb.decode_into(out_row, &mut scratch);
+                        let scores = &mut scratch.scores;
                         for &it in ex.input_items() {
                             if (it as usize) < scores.len() {
                                 scores[it as usize] = f32::NEG_INFINITY;
@@ -116,13 +121,14 @@ pub fn evaluate(rt: &Runtime, spec: &ArtifactSpec, state: &ModelState,
                         }
                         let relevant: Vec<usize> =
                             items.iter().map(|&i| i as usize).collect();
-                        let mut ranks = ranks_of(&scores, &relevant);
+                        let mut ranks = ranks_of(scores, &relevant);
                         out.push(RowScore::Partial(
                             average_precision_from_ranks(&mut ranks)));
                     }
                     (Target::Items(items), Measure::Rr) => {
-                        emb.decode_into(out_row, &mut logs, &mut scores);
-                        let rank = rank_of(&scores, items[0] as usize);
+                        emb.decode_into(out_row, &mut scratch);
+                        let rank = rank_of(&scratch.scores,
+                                           items[0] as usize);
                         out.push(RowScore::Partial(1.0 / rank as f64));
                     }
                     _ => anyhow::bail!("measure/target mismatch"),

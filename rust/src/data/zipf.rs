@@ -56,6 +56,95 @@ impl Zipf {
     }
 }
 
+/// Streaming Zipf sampler over [0, n) with exponent `s > 0`: O(1) memory
+/// and O(1) expected time per draw, no table — the generator that makes
+/// 1M–10M-item synthetic catalogs practical (the table sampler above
+/// would cost 8 bytes/item and an O(log n) search per draw; this one
+/// holds three precomputed constants).
+///
+/// Rejection-inversion for discrete power laws (Hörmann & Derflinger,
+/// "Rejection-inversion to generate variates from monotone discrete
+/// distributions", TOMACS 1996 — the scheme behind Apache Commons'
+/// `RejectionInversionZipfSampler`): invert the integral H of a
+/// continuous hat function h(x) = x^-s, and accept the rounded draw
+/// either inside a precomputed always-accept window or by the exact
+/// H-based test. Acceptance probability stays bounded away from 0 for
+/// every (n, s), so the loop is expected O(1) draws.
+#[derive(Clone, Copy, Debug)]
+pub struct ZipfStream {
+    n: usize,
+    s: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    accept_s: f64,
+}
+
+impl ZipfStream {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "ZipfStream needs a nonempty range");
+        assert!(s > 0.0, "ZipfStream needs a positive exponent");
+        let h_integral_x1 = Self::h_integral(1.5, s) - 1.0;
+        let h_integral_n = Self::h_integral(n as f64 + 0.5, s);
+        let accept_s =
+            2.0 - Self::h_integral_inverse(
+                Self::h_integral(2.5, s) - Self::h(2.0, s), s);
+        Self { n, s, h_integral_x1, h_integral_n, accept_s }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Sample a rank in [0, n); rank 0 is the most popular (same
+    /// contract as [`Zipf::sample`]).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        loop {
+            let u = self.h_integral_n
+                + rng.f64() * (self.h_integral_x1 - self.h_integral_n);
+            // u falls in (h_integral_x1, h_integral_n]; x in [1, n+0.5)
+            let x = Self::h_integral_inverse(u, self.s);
+            let k = x.round().clamp(1.0, self.n as f64);
+            // accept when k is within the always-accept window around x,
+            // or by the exact test against the hat integral
+            if k - x <= self.accept_s
+                || u >= Self::h_integral(k + 0.5, self.s)
+                    - Self::h(k, self.s)
+            {
+                return k as usize - 1;
+            }
+        }
+    }
+
+    /// H(x) = integral of the hat x^-s — in the log domain so s = 1
+    /// and s near 1 stay exact: H(x) = helper2((1-s) ln x) * ln x.
+    fn h_integral(x: f64, s: f64) -> f64 {
+        let log_x = x.ln();
+        Self::helper2((1.0 - s) * log_x) * log_x
+    }
+
+    /// the hat h(x) = x^-s
+    fn h(x: f64, s: f64) -> f64 {
+        (-s * x.ln()).exp()
+    }
+
+    /// H^-1(x) = exp(helper1(t) * x) with t = x (1-s), clamped to the
+    /// domain edge t >= -1 against rounding drift.
+    fn h_integral_inverse(x: f64, s: f64) -> f64 {
+        let t = (x * (1.0 - s)).max(-1.0);
+        (Self::helper1(t) * x).exp()
+    }
+
+    /// ln(1+x)/x, continuous through x = 0.
+    fn helper1(x: f64) -> f64 {
+        if x.abs() > 1e-8 { x.ln_1p() / x } else { 1.0 - x / 2.0 }
+    }
+
+    /// (e^x - 1)/x, continuous through x = 0.
+    fn helper2(x: f64) -> f64 {
+        if x.abs() > 1e-8 { x.exp_m1() / x } else { 1.0 + x / 2.0 }
+    }
+}
+
 /// A latent-topic item model: `t` topics, each a Zipf over its own random
 /// permutation of the catalogue. Items drawn from the same topic co-occur
 /// far more than chance — the signal CBE/PMI/CCA need.
@@ -154,6 +243,72 @@ mod tests {
         for _ in 0..1000 {
             assert!(z.sample(&mut rng) < 50);
         }
+    }
+
+    #[test]
+    fn zipf_stream_matches_table_sampler_head_mass() {
+        // the streaming sampler must draw from the same marginal as the
+        // table sampler: compare head-bucket frequencies empirically
+        for &s in &[0.8f64, 1.0, 1.3] {
+            let n = 2000;
+            let table = Zipf::new(n, s);
+            let stream = ZipfStream::new(n, s);
+            let draws = 20_000;
+            let mut rng_a = Rng::new(7);
+            let mut rng_b = Rng::new(8);
+            let (mut head_a, mut head_b) = (0usize, 0usize);
+            for _ in 0..draws {
+                if table.sample(&mut rng_a) < 20 {
+                    head_a += 1;
+                }
+                if stream.sample(&mut rng_b) < 20 {
+                    head_b += 1;
+                }
+            }
+            let (fa, fb) =
+                (head_a as f64 / draws as f64, head_b as f64 / draws as f64);
+            assert!((fa - fb).abs() < 0.02,
+                    "s={s}: table head {fa} vs stream head {fb}");
+            // and against the exact pmf
+            let exact: f64 = (0..20).map(|i| table.pmf(i)).sum();
+            assert!((fb - exact).abs() < 0.02,
+                    "s={s}: stream head {fb} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn zipf_stream_samples_in_range_at_scale() {
+        // 10M-item catalog: construction is O(1), draws stay in range
+        // and the head is still heavy
+        let n = 10_000_000;
+        let stream = ZipfStream::new(n, 1.05);
+        let mut rng = Rng::new(9);
+        let mut head = 0usize;
+        let draws = 5000;
+        for _ in 0..draws {
+            let k = stream.sample(&mut rng);
+            assert!(k < n);
+            if k < n / 100 {
+                head += 1;
+            }
+        }
+        // top-1% of a Zipf(1.05) catalog carries far more than 1% mass
+        assert!(head * 10 > draws, "head draws {head}/{draws}");
+    }
+
+    #[test]
+    fn zipf_stream_handles_tiny_ranges() {
+        let stream = ZipfStream::new(1, 1.0);
+        let mut rng = Rng::new(10);
+        for _ in 0..100 {
+            assert_eq!(stream.sample(&mut rng), 0);
+        }
+        let stream = ZipfStream::new(2, 0.5);
+        let mut seen = [false; 2];
+        for _ in 0..200 {
+            seen[stream.sample(&mut rng)] = true;
+        }
+        assert!(seen[0] && seen[1]);
     }
 
     #[test]

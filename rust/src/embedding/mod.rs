@@ -14,10 +14,14 @@
 //! inputs) or `runtime::SparseSeqBatch` steps (recurrent inputs, one
 //! item per timestep) — the paper's O(c·k) encoding end to end.
 
-use crate::bloom::{decode_scores_into, log_probs_into, BloomEncoder,
-                   HashMatrix};
+use std::sync::OnceLock;
+
+use crate::bloom::{decode_exhaustive_top_n_into, decode_pruned_top_n_into,
+                   decode_scores_into, log_probs_into, BloomEncoder,
+                   DecodeScratch, DecodeStats, DecodeStrategy, HashMatrix,
+                   PositionIndex};
 use crate::linalg::dense::Mat;
-use crate::linalg::knn::{score_all, Metric};
+use crate::linalg::knn::{score_all, top_k_into, Metric};
 
 /// Which loss family (and hence artifact family) an embedding trains with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,18 +88,47 @@ pub trait Embedding: Send + Sync {
     /// items (descending = better).
     fn decode(&self, output: &[f32]) -> Vec<f32>;
 
-    /// [`Embedding::decode`] into caller-owned scratch: `scores`
-    /// receives exactly what `decode` would return; `logs` is the
-    /// log-table buffer the log-likelihood decoders (Bloom, ECOC)
-    /// rebuild once per output vector. The serve flush and the
-    /// evaluation sweep keep one `(logs, scores)` pair per worker and
-    /// reuse it across sessions/examples, so the hot decode path
-    /// allocates nothing. The default falls back to the allocating
-    /// `decode` (dense-table embeddings).
-    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
-                   scores: &mut Vec<f32>) {
-        let _ = logs;
-        *scores = self.decode(output);
+    /// [`Embedding::decode`] into caller-owned scratch:
+    /// `scratch.scores` receives exactly what `decode` would return;
+    /// `scratch.logs` is the log-table buffer the log-likelihood
+    /// decoders (Bloom, ECOC) rebuild once per output vector. The
+    /// serve flush and the evaluation sweep keep one [`DecodeScratch`]
+    /// per worker and reuse it across sessions/examples, so the hot
+    /// decode path allocates nothing. The default falls back to the
+    /// allocating `decode` (dense-table embeddings).
+    fn decode_into(&self, output: &[f32], scratch: &mut DecodeScratch) {
+        scratch.scores = self.decode(output);
+    }
+
+    /// Top-`n` `(item, score)` pairs (descending score, ties by
+    /// ascending item id) with the items in `excl` masked out — the
+    /// serving protocol's decode in one call, so embeddings can route
+    /// it through a sublinear path. `strategy` overrides the
+    /// embedding's own decode strategy when `Some` (per-request /
+    /// config plumbing); embeddings without a pruned tier ignore it
+    /// and run the full-catalog scan below. Returns what the decode
+    /// actually did ([`DecodeStats`]) for the serving metrics.
+    fn decode_top_n_into(&self, output: &[f32], excl: &[u32], n: usize,
+                         strategy: Option<DecodeStrategy>,
+                         scratch: &mut DecodeScratch,
+                         out: &mut Vec<(usize, f32)>) -> DecodeStats {
+        let _ = strategy;
+        self.decode_into(output, scratch);
+        let DecodeScratch { scores, heap, .. } = scratch;
+        for &it in excl {
+            if (it as usize) < scores.len() {
+                scores[it as usize] = f32::NEG_INFINITY;
+            }
+        }
+        top_k_into(scores, n, heap);
+        out.clear();
+        out.extend(heap.iter().map(|&(s, i)| (i, s)));
+        DecodeStats {
+            scored: scores.len(),
+            catalog: scores.len(),
+            pruned: false,
+            fallback: false,
+        }
     }
 
     /// Human-readable method tag for result tables.
@@ -143,10 +176,9 @@ impl Embedding for Identity {
     fn decode(&self, output: &[f32]) -> Vec<f32> {
         output.to_vec()
     }
-    fn decode_into(&self, output: &[f32], _logs: &mut Vec<f32>,
-                   scores: &mut Vec<f32>) {
-        scores.clear();
-        scores.extend_from_slice(output);
+    fn decode_into(&self, output: &[f32], scratch: &mut DecodeScratch) {
+        scratch.scores.clear();
+        scratch.scores.extend_from_slice(output);
     }
     fn name(&self) -> &'static str {
         "baseline"
@@ -163,17 +195,48 @@ pub struct Bloom {
     pub hm_in: HashMatrix,
     pub hm_out: Option<HashMatrix>,
     tag: &'static str,
+    /// default top-N decode route (`BLOOMREC_DECODE`, overridable per
+    /// call and via [`Bloom::with_decode`])
+    strategy: DecodeStrategy,
+    /// lazily-built inverted index of the output matrix — built once
+    /// (in parallel over the global
+    /// [`WorkerPool`](crate::util::threadpool::WorkerPool)) on the
+    /// first pruned decode, shared by every worker thereafter
+    index: OnceLock<PositionIndex>,
 }
 
 impl Bloom {
     pub fn new(hm_in: HashMatrix, hm_out: Option<HashMatrix>) -> Self {
         let tag = if hm_in.k == 1 { "ht" } else { "be" };
-        Self { hm_in, hm_out, tag }
+        Self::new_tagged(hm_in, hm_out, tag)
     }
 
     pub fn new_tagged(hm_in: HashMatrix, hm_out: Option<HashMatrix>,
                       tag: &'static str) -> Self {
-        Self { hm_in, hm_out, tag }
+        Self {
+            hm_in,
+            hm_out,
+            tag,
+            strategy: DecodeStrategy::from_env(),
+            index: OnceLock::new(),
+        }
+    }
+
+    /// Set the default top-N decode strategy (builder style).
+    pub fn with_decode(mut self, strategy: DecodeStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn decode_strategy(&self) -> DecodeStrategy {
+        self.strategy
+    }
+
+    /// The inverted position index of the output matrix, built on
+    /// first use and cached for the embedding's lifetime.
+    pub fn position_index(&self) -> &PositionIndex {
+        self.index
+            .get_or_init(|| PositionIndex::build_parallel(self.out_matrix()))
     }
 
     fn out_matrix(&self) -> &HashMatrix {
@@ -208,14 +271,28 @@ impl Embedding for Bloom {
         true
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
-        let mut logs = Vec::new();
-        let mut scores = Vec::new();
-        self.decode_into(output, &mut logs, &mut scores);
-        scores
+        let mut scratch = DecodeScratch::new();
+        self.decode_into(output, &mut scratch);
+        scratch.scores
     }
-    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
-                   scores: &mut Vec<f32>) {
-        decode_scores_into(output, self.out_matrix(), logs, scores);
+    fn decode_into(&self, output: &[f32], scratch: &mut DecodeScratch) {
+        decode_scores_into(output, self.out_matrix(), &mut scratch.logs,
+                           &mut scratch.scores);
+    }
+    fn decode_top_n_into(&self, output: &[f32], excl: &[u32], n: usize,
+                         strategy: Option<DecodeStrategy>,
+                         scratch: &mut DecodeScratch,
+                         out: &mut Vec<(usize, f32)>) -> DecodeStats {
+        match strategy.unwrap_or(self.strategy) {
+            DecodeStrategy::Exhaustive => decode_exhaustive_top_n_into(
+                self.out_matrix(), output, excl, n, scratch, out),
+            DecodeStrategy::Pruned { top_positions, max_candidates } => {
+                decode_pruned_top_n_into(self.out_matrix(),
+                                         self.position_index(),
+                                         top_positions, max_candidates,
+                                         output, excl, n, scratch, out)
+            }
+        }
     }
     fn name(&self) -> &'static str {
         self.tag
@@ -328,13 +405,12 @@ impl Embedding for CodeMatrix {
         self.encode_input_sparse(items, out)
     }
     fn decode(&self, output: &[f32]) -> Vec<f32> {
-        let mut logs = Vec::new();
-        let mut scores = Vec::new();
-        self.decode_into(output, &mut logs, &mut scores);
-        scores
+        let mut scratch = DecodeScratch::new();
+        self.decode_into(output, &mut scratch);
+        scratch.scores
     }
-    fn decode_into(&self, output: &[f32], logs: &mut Vec<f32>,
-                   scores: &mut Vec<f32>) {
+    fn decode_into(&self, output: &[f32], scratch: &mut DecodeScratch) {
+        let DecodeScratch { logs, scores, .. } = scratch;
         log_probs_into(output, logs);
         scores.clear();
         scores.extend((0..self.d).map(|i| {
@@ -568,15 +644,98 @@ mod tests {
                 (0..emb.m_out()).map(|_| rng.f32() + 0.01).collect();
             let want = emb.decode(&out);
             // scratch arrives dirty; reuse it across two decodes
-            let mut logs = vec![5.0f32; 3];
-            let mut scores = vec![-1.0f32; 99];
-            emb.decode_into(&out, &mut logs, &mut scores);
-            assert_eq!(scores, want, "{}", emb.name());
+            let mut scratch = DecodeScratch {
+                logs: vec![5.0f32; 3],
+                scores: vec![-1.0f32; 99],
+                cands: vec![42; 4],
+                cand_scores: vec![0.5; 4],
+                heap: vec![(9.9, 7); 8],
+            };
+            emb.decode_into(&out, &mut scratch);
+            assert_eq!(scratch.scores, want, "{}", emb.name());
             let out2: Vec<f32> =
                 (0..emb.m_out()).map(|_| rng.f32() + 0.01).collect();
             let want2 = emb.decode(&out2);
-            emb.decode_into(&out2, &mut logs, &mut scores);
-            assert_eq!(scores, want2, "{} (reuse)", emb.name());
+            emb.decode_into(&out2, &mut scratch);
+            assert_eq!(scratch.scores, want2, "{} (reuse)", emb.name());
+        }
+    }
+
+    #[test]
+    fn decode_top_n_into_masks_exclusions_for_all_embeddings() {
+        use crate::linalg::knn::top_k;
+        let mut rng = Rng::new(33);
+        let embs: Vec<Box<dyn Embedding>> = vec![
+            Box::new(Identity { d: 30 }),
+            Box::new(Bloom::new(HashMatrix::random(60, 24, 3, &mut rng),
+                                None)),
+            Box::new(CodeMatrix::from_rows(
+                8,
+                24,
+                &(0..8)
+                    .map(|i| (0..24).map(|j| (i + j) % 3 == 0).collect())
+                    .collect::<Vec<_>>(),
+                "ecoc",
+            )),
+        ];
+        for emb in &embs {
+            let out: Vec<f32> =
+                (0..emb.m_out()).map(|_| rng.f32() + 0.01).collect();
+            let mut want = emb.decode(&out);
+            let excl: &[u32] = &[0, 3];
+            for &it in excl {
+                want[it as usize] = f32::NEG_INFINITY;
+            }
+            let want_top = top_k(&want, 5);
+            let mut scratch = DecodeScratch::new();
+            let mut got = Vec::new();
+            let st = emb.decode_top_n_into(&out, excl, 5, None,
+                                           &mut scratch, &mut got);
+            let got_items: Vec<usize> =
+                got.iter().map(|&(i, _)| i).collect();
+            assert_eq!(got_items, want_top, "{}", emb.name());
+            for &(i, s) in &got {
+                assert_eq!(s.to_bits(), want[i].to_bits(),
+                           "{} carries wrong score", emb.name());
+            }
+            assert_eq!(st.catalog, want.len(), "{}", emb.name());
+            assert!(!st.pruned && !st.fallback, "{}", emb.name());
+        }
+    }
+
+    #[test]
+    fn bloom_pruned_strategy_routes_through_decode_top_n() {
+        let mut rng = Rng::new(44);
+        let be = Bloom::new(HashMatrix::random(400, 64, 3, &mut rng),
+                            None)
+            .with_decode(DecodeStrategy::Pruned {
+                top_positions: 12,
+                max_candidates: 300,
+            });
+        assert_eq!(be.decode_strategy(),
+                   DecodeStrategy::Pruned {
+                       top_positions: 12,
+                       max_candidates: 300,
+                   });
+        let out: Vec<f32> =
+            (0..be.m_out()).map(|_| rng.f32() + 0.01).collect();
+        let mut scratch = DecodeScratch::new();
+        let mut got = Vec::new();
+        let st = be.decode_top_n_into(&out, &[], 5, None, &mut scratch,
+                                      &mut got);
+        assert!(st.pruned);
+        assert_eq!(got.len(), 5);
+        // per-call override wins over the embedding default
+        let mut ex = Vec::new();
+        let st2 = be.decode_top_n_into(&out, &[], 5,
+                                       Some(DecodeStrategy::Exhaustive),
+                                       &mut scratch, &mut ex);
+        assert!(!st2.pruned);
+        assert_eq!(st2.scored, 400);
+        // pruned scores are the exact Eq. 3 log-sums, bitwise
+        let full = be.decode(&out);
+        for &(i, s) in &got {
+            assert_eq!(s.to_bits(), full[i].to_bits(), "item {i}");
         }
     }
 

@@ -23,49 +23,75 @@ pub fn score_all(query: &[f32], table: &Mat, metric: Metric) -> Vec<f32> {
 
 /// Indices of the top-k scores, descending, deterministic tie-break by
 /// index. Uses a partial selection (O(d log k)) — the serving hot path.
+/// Allocating convenience wrapper over [`top_k_into`].
 pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut buf = Vec::with_capacity(k.min(scores.len()));
+    top_k_into(scores, k, &mut buf);
+    buf.into_iter().map(|(_, i)| i).collect()
+}
+
+/// `(a, i)` is a worse kept entry than `(b, j)` when its score is lower
+/// or, on a tied score, its index is higher — the complement of the
+/// descending (score, ascending index) order every selector here uses.
+/// NaN-free by construction (scores come from our math).
+#[inline]
+fn worse(a: (f32, usize), b: (f32, usize)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+}
+
+/// Allocation-free top-k selection into a caller-owned buffer: `out`
+/// ends holding the k best `(score, index)` pairs, descending by score
+/// with ties broken by ascending index — exactly [`top_k`] plus the
+/// scores. `out` doubles as the selection heap, so a reused buffer
+/// makes the whole select allocation-free once it has grown to k; any
+/// prior contents are discarded. The per-request position selection and
+/// candidate re-ranking of the pruned Bloom decode run on this, as does
+/// the serving top-N.
+pub fn top_k_into(scores: &[f32], k: usize, out: &mut Vec<(f32, usize)>) {
+    out.clear();
     let k = k.min(scores.len());
     if k == 0 {
-        return Vec::new();
+        return;
     }
-    // min-heap of (score, Reverse(idx)) with fixed capacity k
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-
-    #[derive(PartialEq)]
-    struct Entry(f32, Reverse<usize>);
-    impl Eq for Entry {}
-    impl PartialOrd for Entry {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-    impl Ord for Entry {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            // NaN-free by construction (scores come from our math)
-            self.0
-                .partial_cmp(&other.0)
-                .unwrap()
-                .then_with(|| self.1.cmp(&other.1))
-        }
-    }
-
-    let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(k);
+    // `out` is a binary min-heap under `worse` while selecting: the
+    // root is the worst entry kept so far, evicted when a better
+    // element arrives.
     for (i, &s) in scores.iter().enumerate() {
-        if heap.len() < k {
-            heap.push(Reverse(Entry(s, Reverse(i))));
-        } else if let Some(Reverse(min)) = heap.peek() {
-            if s > min.0 || (s == min.0 && i < min.1 .0) {
-                heap.pop();
-                heap.push(Reverse(Entry(s, Reverse(i))));
+        if out.len() < k {
+            out.push((s, i));
+            let mut c = out.len() - 1;
+            while c > 0 {
+                let p = (c - 1) / 2;
+                if worse(out[c], out[p]) {
+                    out.swap(c, p);
+                    c = p;
+                } else {
+                    break;
+                }
+            }
+        } else if worse(out[0], (s, i)) {
+            out[0] = (s, i);
+            let mut p = 0;
+            loop {
+                let (l, r) = (2 * p + 1, 2 * p + 2);
+                let mut w = p;
+                if l < k && worse(out[l], out[w]) {
+                    w = l;
+                }
+                if r < k && worse(out[r], out[w]) {
+                    w = r;
+                }
+                if w == p {
+                    break;
+                }
+                out.swap(p, w);
+                p = w;
             }
         }
     }
-    let mut out: Vec<(f32, usize)> =
-        heap.into_iter().map(|Reverse(Entry(s, Reverse(i)))| (s, i)).collect();
-    out.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap()
-        .then_with(|| a.1.cmp(&b.1)));
-    out.into_iter().map(|(_, i)| i).collect()
+    out.sort_unstable_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap().then_with(|| a.1.cmp(&b.1))
+    });
 }
 
 /// 1-based rank of `item` in the descending ranking of `scores`, with
@@ -136,6 +162,45 @@ mod tests {
         let scores = vec![0.5, 0.5, 0.5];
         assert_eq!(top_k(&scores, 2), vec![0, 1]);
         assert_eq!(argsort_desc(&scores), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn top_k_into_reuses_dirty_buffer_and_carries_scores() {
+        let scores = vec![0.1f32, 0.9, 0.5, 0.7, 0.3, 0.9, 0.0];
+        // buffer arrives dirty and oversized — the select must fully
+        // overwrite it and be reusable across calls without realloc
+        let mut buf: Vec<(f32, usize)> = vec![(7.7, 99); 20];
+        for k in [0usize, 1, 3, 7, 12] {
+            top_k_into(&scores, k, &mut buf);
+            let want = top_k(&scores, k);
+            let got: Vec<usize> = buf.iter().map(|&(_, i)| i).collect();
+            assert_eq!(got, want, "k={k}");
+            for &(s, i) in &buf {
+                assert_eq!(s, scores[i], "k={k} carries wrong score");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_into_matches_argsort_on_random_inputs() {
+        // pseudo-random scores with duplicates and -inf sentinels
+        let scores: Vec<f32> = (0..257u32)
+            .map(|i| {
+                let v = ((i * 2_654_435_761) >> 16) % 19;
+                if v == 0 {
+                    f32::NEG_INFINITY
+                } else {
+                    v as f32 / 19.0
+                }
+            })
+            .collect();
+        let full = argsort_desc(&scores);
+        let mut buf = Vec::new();
+        for k in [1usize, 2, 10, 128, 257] {
+            top_k_into(&scores, k, &mut buf);
+            let got: Vec<usize> = buf.iter().map(|&(_, i)| i).collect();
+            assert_eq!(got, full[..k].to_vec(), "k={k}");
+        }
     }
 
     #[test]

@@ -58,7 +58,8 @@ fn print_usage() {
          serve <task> [ratio] [k] [requests] serving demo + load test\n  \
          inspect              artifact inventory\n\n\
          FLAGS: --artifacts DIR --out DIR --scale tiny|small|full\n       \
-         --seeds 1,2,3 --epochs N --tasks ml,msd --top-n N",
+         --seeds 1,2,3 --epochs N --tasks ml,msd --top-n N\n       \
+         --decode exhaustive|pruned|pruned:P,C  (serve decode route)",
         experiments::ALL
     );
 }
@@ -183,7 +184,10 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     // one request per click, threaded through the server's per-session
     // hidden-state cache
     let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
-                               ServeConfig::default())?;
+                               ServeConfig {
+                                   decode: opts.decode,
+                                   ..ServeConfig::default()
+                               })?;
     info!("serving {n_requests} requests...");
     let mut pending = Vec::new();
     if recurrent {
@@ -244,9 +248,12 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     println!(
         "served {} requests in {} batches\n\
          throughput: {:.0} req/s   batch fill: {:.2}\n\
-         latency ms: p50={:.2} p95={:.2} p99={:.2}",
+         latency ms: p50={:.2} p95={:.2} p99={:.2}\n\
+         decode: scored {:.1}% of catalog   pruned={} fallbacks={}",
         snap.requests, snap.batches, snap.throughput_rps,
         snap.mean_batch_fill, snap.p50_ms, snap.p95_ms, snap.p99_ms,
+        100.0 * snap.scored_frac, snap.pruned_requests,
+        snap.decode_fallbacks,
     );
     server.shutdown();
     Ok(())

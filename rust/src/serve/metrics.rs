@@ -18,6 +18,11 @@ struct Inner {
     requests: u64,
     batches: u64,
     batch_fill: f64,
+    // decode counters (candidate-pruned tier observability)
+    decode_scored: u64,
+    decode_catalog: u64,
+    pruned_requests: u64,
+    decode_fallbacks: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -29,6 +34,18 @@ pub struct MetricsSnapshot {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_batch_fill: f64,
+    /// items whose log-sum was evaluated, summed over all decodes
+    pub decode_scored: u64,
+    /// catalog size summed over all decodes (`scored / catalog` = the
+    /// fraction of the catalog the decode tier actually touched; 1.0
+    /// when every request ran the exhaustive sweep)
+    pub decode_catalog: u64,
+    /// decodes routed through the candidate-pruned tier
+    pub pruned_requests: u64,
+    /// pruned decodes that fell back to the exhaustive sweep
+    pub decode_fallbacks: u64,
+    /// `decode_scored / decode_catalog` (1.0 when nothing was decoded)
+    pub scored_frac: f64,
 }
 
 impl Default for ServeMetrics {
@@ -50,6 +67,19 @@ impl ServeMetrics {
         inner.batch_fill += fill;
     }
 
+    /// Record one flush's decode work: `scored` items evaluated out of
+    /// `catalog` total (summed over the flush's ranking jobs), of which
+    /// `pruned` decodes took the candidate-pruned tier and `fallbacks`
+    /// of those degenerated back to the exhaustive sweep.
+    pub fn record_decode(&self, scored: u64, catalog: u64, pruned: u64,
+                         fallbacks: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.decode_scored += scored;
+        inner.decode_catalog += catalog;
+        inner.pruned_requests += pruned;
+        inner.decode_fallbacks += fallbacks;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let inner = self.inner.lock().unwrap();
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -62,6 +92,15 @@ impl ServeMetrics {
             p99_ms: percentile(&inner.latencies_us, 99.0) / 1000.0,
             mean_batch_fill: inner.batch_fill
                 / inner.batches.max(1) as f64,
+            decode_scored: inner.decode_scored,
+            decode_catalog: inner.decode_catalog,
+            pruned_requests: inner.pruned_requests,
+            decode_fallbacks: inner.decode_fallbacks,
+            scored_frac: if inner.decode_catalog == 0 {
+                1.0
+            } else {
+                inner.decode_scored as f64 / inner.decode_catalog as f64
+            },
         }
     }
 }
@@ -81,5 +120,25 @@ mod tests {
         assert!((s.p50_ms - 2.5).abs() < 0.01, "{}", s.p50_ms);
         assert!((s.mean_batch_fill - 0.5).abs() < 1e-12);
         assert!(s.throughput_rps > 0.0);
+        // no decode recorded yet: counters zero, fraction defined as 1
+        assert_eq!(s.decode_scored, 0);
+        assert_eq!(s.decode_catalog, 0);
+        assert_eq!(s.scored_frac, 1.0);
+    }
+
+    #[test]
+    fn decode_counters_accumulate_across_flushes() {
+        let m = ServeMetrics::new();
+        // flush 1: 3 pruned decodes over a 1000-item catalog, one of
+        // which fell back to the exhaustive sweep
+        m.record_decode(100 + 150 + 1000, 3000, 3, 1);
+        // flush 2: 2 exhaustive decodes
+        m.record_decode(2000, 2000, 0, 0);
+        let s = m.snapshot();
+        assert_eq!(s.decode_scored, 3250);
+        assert_eq!(s.decode_catalog, 5000);
+        assert_eq!(s.pruned_requests, 3);
+        assert_eq!(s.decode_fallbacks, 1);
+        assert!((s.scored_frac - 0.65).abs() < 1e-12, "{}", s.scored_frac);
     }
 }

@@ -36,10 +36,9 @@ use anyhow::{bail, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::ServeMetrics;
-use crate::bloom::HashMatrix;
+use crate::bloom::{DecodeScratch, DecodeStrategy, HashMatrix};
 use crate::coordinator::batcher::encode_item_rows;
 use crate::embedding::Embedding;
-use crate::linalg::knn::top_k;
 use crate::model::ModelState;
 use crate::runtime::{ArtifactSpec, BatchInput, BatchedHiddenState,
                      Execution, HiddenState, HostTensor, Runtime,
@@ -90,6 +89,10 @@ pub struct ServeConfig {
     /// [`Server::submit`] ignores the bound (legacy unbounded behavior).
     pub queue_cap: usize,
     pub batcher: BatcherConfig,
+    /// Top-N decode route for every request: `Some` forces a strategy
+    /// for the whole server; `None` (default) defers to the embedding's
+    /// own strategy (`BLOOMREC_DECODE` for Bloom embeddings).
+    pub decode: Option<DecodeStrategy>,
 }
 
 impl Default for ServeConfig {
@@ -98,6 +101,7 @@ impl Default for ServeConfig {
             replicas: 2,
             queue_cap: 4096,
             batcher: BatcherConfig::default(),
+            decode: None,
         }
     }
 }
@@ -214,6 +218,7 @@ impl Server {
     ///         max_batch: 8,
     ///         max_wait: Duration::from_millis(2),
     ///     },
+    ///     ..ServeConfig::default()
     /// }).unwrap();
     ///
     /// // one click for each of three sessions; same flush -> one
@@ -252,6 +257,7 @@ impl Server {
             let batcher = Arc::clone(&batcher);
             let sessions = Arc::clone(&sessions);
             let spec = spec.clone();
+            let decode = cfg.decode;
             workers.push(std::thread::Builder::new()
                 .name(format!("bloomrec-serve-{w}"))
                 .spawn(move || {
@@ -264,7 +270,7 @@ impl Server {
                         let Some(jobs) = batch else { break };
                         if let Err(e) = Self::serve_batch(
                             exe.as_ref(), &spec, &state, emb.as_ref(),
-                            &jobs, &metrics, &sessions)
+                            &jobs, &metrics, &sessions, decode)
                         {
                             crate::error!("serve batch failed: {e}");
                         }
@@ -283,28 +289,32 @@ impl Server {
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn serve_batch(exe: &dyn Execution, spec: &ArtifactSpec,
                    state: &ModelState, emb: &dyn Embedding, jobs: &[Job],
                    metrics: &ServeMetrics,
-                   sessions: &Mutex<SessionCache>) -> Result<()> {
+                   sessions: &Mutex<SessionCache>,
+                   decode: Option<DecodeStrategy>) -> Result<()> {
         if spec.seq_len > 0 {
             // the stateful path needs a stepping interpreter (native);
             // executions without one (PJRT runs the AOT full-window
             // artifact) fall back to stateless window predicts
             return if exe.supports_batched_stepping() {
                 Self::serve_batch_recurrent(exe, spec, state, emb, jobs,
-                                            metrics, sessions)
+                                            metrics, sessions, decode)
             } else if exe.supports_stepping() {
                 Self::serve_batch_recurrent_sequential(
-                    exe, spec, state, emb, jobs, metrics, sessions)
+                    exe, spec, state, emb, jobs, metrics, sessions,
+                    decode)
             } else {
                 Self::serve_batch_window(exe, spec, state, emb, jobs,
-                                         metrics)
+                                         metrics, decode)
             };
         }
         let x = Self::encode_jobs(exe, spec, emb, jobs);
         let probs = exe.predict(&state.params, &x)?;
-        Self::respond(jobs, &probs.data, spec, emb, metrics, None);
+        Self::respond(jobs, &probs.data, spec, emb, metrics, None,
+                      decode);
         Ok(())
     }
 
@@ -345,10 +355,12 @@ impl Server {
     /// every job at the end, then states scatter back into the cache.
     /// Per-session results are bit-identical to the sequential path —
     /// rows of a batched step are independent.
+    #[allow(clippy::too_many_arguments)]
     fn serve_batch_recurrent(exe: &dyn Execution, spec: &ArtifactSpec,
                              state: &ModelState, emb: &dyn Embedding,
                              jobs: &[Job], metrics: &ServeMetrics,
-                             sessions: &Mutex<SessionCache>)
+                             sessions: &Mutex<SessionCache>,
+                             decode: Option<DecodeStrategy>)
         -> Result<()> {
         // Two requests for one session in the same flush would race on
         // the checked-out state (the later put-back would clobber the
@@ -362,7 +374,7 @@ impl Server {
         ids.sort_unstable();
         if ids.windows(2).any(|w| w[0] == w[1]) {
             return Self::serve_batch_recurrent_sequential(
-                exe, spec, state, emb, jobs, metrics, sessions);
+                exe, spec, state, emb, jobs, metrics, sessions, decode);
         }
         let m_in = spec.m_in;
         let mut entries = Self::checkout_sessions(exe, jobs, sessions)?;
@@ -427,7 +439,7 @@ impl Server {
             }
         }
         Self::respond(jobs, &out.data, spec, emb, metrics,
-                      Some(excludes.as_slice()));
+                      Some(excludes.as_slice()), decode);
         Ok(())
     }
 
@@ -437,10 +449,12 @@ impl Server {
     /// O(k·G·h) incremental path — read the output head out, and check
     /// the session back into the cache. The session's full click
     /// history (not just this request's items) is excluded from top-N.
+    #[allow(clippy::too_many_arguments)]
     fn serve_batch_recurrent_sequential(
         exe: &dyn Execution, spec: &ArtifactSpec, state: &ModelState,
         emb: &dyn Embedding, jobs: &[Job], metrics: &ServeMetrics,
-        sessions: &Mutex<SessionCache>) -> Result<()> {
+        sessions: &Mutex<SessionCache>,
+        decode: Option<DecodeStrategy>) -> Result<()> {
         let m_in = spec.m_in;
         let m_out = spec.m_out;
         let mut probs = vec![0.0f32; jobs.len() * m_out];
@@ -483,7 +497,7 @@ impl Server {
             }
         }
         Self::respond(jobs, &probs, spec, emb, metrics,
-                      Some(excludes.as_slice()));
+                      Some(excludes.as_slice()), decode);
         Ok(())
     }
 
@@ -491,9 +505,11 @@ impl Server {
     /// interface: each request's last `seq_len` clicks become one
     /// left-padded dense window pushed through the full predict. Session
     /// ids are ignored — there is no cross-request state on this path.
+    #[allow(clippy::too_many_arguments)]
     fn serve_batch_window(exe: &dyn Execution, spec: &ArtifactSpec,
                           state: &ModelState, emb: &dyn Embedding,
-                          jobs: &[Job], metrics: &ServeMetrics)
+                          jobs: &[Job], metrics: &ServeMetrics,
+                          decode: Option<DecodeStrategy>)
         -> Result<()> {
         let m = spec.m_in;
         let t_len = spec.seq_len;
@@ -512,24 +528,30 @@ impl Server {
             }
         }
         let probs = exe.predict(&state.params, &BatchInput::Dense(x))?;
-        Self::respond(jobs, &probs.data, spec, emb, metrics, None);
+        Self::respond(jobs, &probs.data, spec, emb, metrics, None,
+                      decode);
         Ok(())
     }
 
-    /// Shared response tail: decode each output row to item scores,
-    /// apply the top-N protocol — `excludes[row]` when given (session
-    /// serving passes the full click history), the request's own items
+    /// Shared response tail: decode each output row to its top-N —
+    /// exclusions from `excludes[row]` when given (session serving
+    /// passes the full click history), the request's own items
     /// otherwise — record metrics, send responses. The decode + top-N
-    /// sweep (O(d·k) per job) fans contiguous job ranges across the
-    /// global worker pool once the flush is big enough to amortize the
-    /// fork-join; each worker owns one `(log table, score buffer)`
-    /// scratch pair reused across all its jobs
-    /// ([`Embedding::decode_into`]), so the hot decode path allocates
-    /// nothing per request. Per-job results are independent, so the
-    /// responses are identical either way.
+    /// sweep runs through [`Embedding::decode_top_n_into`], so the
+    /// per-job cost is O(d·k) on the exhaustive route and sublinear on
+    /// the candidate-pruned route (`decode` strategy, falling through
+    /// to the embedding's own default when `None`). The sweep fans
+    /// contiguous job ranges across the global worker pool once the
+    /// flush is big enough to amortize the fork-join; each worker owns
+    /// one [`DecodeScratch`] reused across all its jobs, so the hot
+    /// decode path allocates nothing per request beyond the response
+    /// vector itself. Per-job results are independent, so the
+    /// responses are identical either way; per-flush decode counters
+    /// aggregate into [`ServeMetrics`].
     fn respond(jobs: &[Job], probs: &[f32], spec: &ArtifactSpec,
                emb: &dyn Embedding, metrics: &ServeMetrics,
-               excludes: Option<&[Vec<u32>]>) {
+               excludes: Option<&[Vec<u32>]>,
+               decode: Option<DecodeStrategy>) {
         let m_out = spec.m_out;
         // (output row, exclusion list, top_n) per job — no Sender
         // crosses a thread boundary
@@ -546,21 +568,15 @@ impl Server {
             })
             .collect();
         let rank_range = |&(lo, hi): &(usize, usize)|
-            -> Vec<Vec<(usize, f32)>> {
-            let mut logs: Vec<f32> = Vec::new();
-            let mut scores: Vec<f32> = Vec::new();
+            -> Vec<(Vec<(usize, f32)>, crate::bloom::DecodeStats)> {
+            let mut scratch = DecodeScratch::new();
             let mut out = Vec::with_capacity(hi - lo);
             for &(out_row, excl, top_n) in &work[lo..hi] {
-                emb.decode_into(out_row, &mut logs, &mut scores);
-                for &it in excl {
-                    if (it as usize) < scores.len() {
-                        scores[it as usize] = f32::NEG_INFINITY;
-                    }
-                }
-                let top = top_k(&scores, top_n);
-                out.push(top.into_iter()
-                    .map(|i| (i, scores[i]))
-                    .collect());
+                let mut items = Vec::with_capacity(top_n);
+                let stats = emb.decode_top_n_into(out_row, excl, top_n,
+                                                  decode, &mut scratch,
+                                                  &mut items);
+                out.push((items, stats));
             }
             out
         };
@@ -569,29 +585,37 @@ impl Server {
         // amortize a fork-join (m_out is a conservative stand-in for
         // the decode width d — small catalogs stay on the serial,
         // latency-friendly path)
-        let ranked: Vec<Vec<(usize, f32)>> = if jobs.len() >= 4
-            && jobs.len() * m_out >= (1 << 13)
-            && pool.threads() > 1
-        {
-            let ranges = split_ranges(work.len(), pool.threads());
-            pool.scope_map(&ranges, rank_range)
-                .into_iter()
-                .flatten()
-                .collect()
-        } else {
-            rank_range(&(0, work.len()))
-        };
+        let ranked: Vec<(Vec<(usize, f32)>, crate::bloom::DecodeStats)> =
+            if jobs.len() >= 4
+                && jobs.len() * m_out >= (1 << 13)
+                && pool.threads() > 1
+            {
+                let ranges = split_ranges(work.len(), pool.threads());
+                pool.scope_map(&ranges, rank_range)
+                    .into_iter()
+                    .flatten()
+                    .collect()
+            } else {
+                rank_range(&(0, work.len()))
+            };
         let mut responses = Vec::with_capacity(jobs.len());
         let mut lats = Vec::with_capacity(jobs.len());
-        for (job, items) in jobs.iter().zip(ranked) {
+        let (mut scored, mut catalog) = (0u64, 0u64);
+        let (mut pruned, mut fallbacks) = (0u64, 0u64);
+        for (job, (items, stats)) in jobs.iter().zip(ranked) {
             let latency = job.enqueued.elapsed();
             lats.push(latency.as_micros() as f64);
             responses.push(RecResponse { items, latency });
+            scored += stats.scored as u64;
+            catalog += stats.catalog as u64;
+            pruned += stats.pruned as u64;
+            fallbacks += stats.fallback as u64;
         }
         // record BEFORE responding: clients may read the metrics as soon
         // as their response arrives
         metrics.record_batch(&lats,
                              jobs.len() as f64 / spec.batch as f64);
+        metrics.record_decode(scored, catalog, pruned, fallbacks);
         for (job, resp) in jobs.iter().zip(responses) {
             let _ = job.respond.send(resp);
         }

@@ -1,0 +1,274 @@
+//! Integration tests for the candidate-pruned decode tier: the
+//! inverted position index must round-trip the hash matrix (serially
+//! and in parallel, bit-identically), and the pruned scorer must hold
+//! its contract against the exhaustive oracle — bitwise-equal scores,
+//! recall above [`RECALL_BOUND`] on structured requests, *exactly*
+//! 1.0 whenever the knobs cover the catalog (the guaranteed-exact
+//! fallback), and full correctness through dirty reused scratch.
+//!
+//! The `#[ignore]` smoke at the bottom is the catalog-scale leg CI
+//! runs in release mode: a million-item Zipf catalog decoded through
+//! the pruned tier.
+
+use bloomrec::bloom::{decode_exhaustive_top_n_into,
+                      decode_pruned_top_n_into, decode_scores,
+                      DecodeScratch, DecodeStrategy, HashMatrix,
+                      PositionIndex};
+use bloomrec::data::zipf::ZipfStream;
+use bloomrec::embedding::{Bloom, Embedding};
+use bloomrec::util::rng::Rng;
+use bloomrec::util::threadpool::WorkerPool;
+
+/// Minimum mean recall@10 of the pruned tier vs the exhaustive oracle
+/// on structured requests (boosted items > top-N, so the true top-N
+/// always lives inside the candidate set — the observed recall is
+/// 1.0; the bound leaves slack only for degenerate rng collisions).
+const RECALL_BOUND: f64 = 0.99;
+
+/// Output probabilities a trained head would emit: low noise
+/// everywhere, `boost` distinct items' positions pushed far above the
+/// noise floor. Boosted logs are >= ln(0.5) while noise logs are
+/// <= ln(0.0101), so fully-boosted items strictly dominate the
+/// ranking and their positions strictly dominate the top-P selection.
+fn structured_probs(hm: &HashMatrix, boost: usize, rng: &mut Rng)
+    -> Vec<f32> {
+    let mut probs: Vec<f32> =
+        (0..hm.m).map(|_| rng.f32() * 0.01 + 1e-4).collect();
+    let mut boosted: Vec<usize> = Vec::with_capacity(boost);
+    while boosted.len() < boost {
+        let item = rng.below(hm.d);
+        if boosted.contains(&item) {
+            continue;
+        }
+        boosted.push(item);
+        for &p in hm.row(item) {
+            probs[p as usize] = 0.5 + rng.f32() * 0.5;
+        }
+    }
+    probs
+}
+
+fn recall(want: &[(usize, f32)], got: &[(usize, f32)]) -> f64 {
+    let hits = want.iter()
+        .filter(|(i, _)| got.iter().any(|(j, _)| j == i))
+        .count();
+    hits as f64 / want.len().max(1) as f64
+}
+
+#[test]
+fn index_round_trips_the_hash_matrix() {
+    let hm = HashMatrix::random(10_000, 512, 4, &mut Rng::new(5));
+    let idx = PositionIndex::build(&hm);
+    let mut total = 0usize;
+    for p in 0..hm.m {
+        let post = idx.posting(p);
+        total += post.len();
+        assert!(post.windows(2).all(|w| w[0] < w[1]),
+                "posting {p} must strictly ascend");
+    }
+    assert_eq!(total, hm.d * hm.k, "every probe indexed exactly once");
+    for item in 0..hm.d {
+        for &p in hm.row(item) {
+            assert!(idx.posting(p as usize)
+                        .binary_search(&(item as u32))
+                        .is_ok(),
+                    "item {item} missing from posting {p}");
+        }
+    }
+}
+
+#[test]
+fn parallel_index_build_is_bit_identical_to_serial() {
+    // clears the d*k >= 2^16 fan-out threshold, including thread
+    // counts that do not divide d evenly
+    let hm = HashMatrix::random(30_000, 1024, 4, &mut Rng::new(9));
+    let serial = PositionIndex::build(&hm);
+    for threads in [2usize, 5, 16] {
+        let par = PositionIndex::build_with(
+            &hm, WorkerPool::with_threads(threads));
+        for p in 0..hm.m {
+            assert_eq!(par.posting(p), serial.posting(p),
+                       "posting {p} differs at t={threads}");
+        }
+    }
+}
+
+#[test]
+fn exact_fallback_when_candidates_cover_catalog() {
+    let hm = HashMatrix::random(800, 96, 3, &mut Rng::new(13));
+    let idx = PositionIndex::build(&hm);
+    let mut rng = Rng::new(14);
+    let probs = structured_probs(&hm, 16, &mut rng);
+    let mut scratch = DecodeScratch::new();
+    let (mut want, mut got) = (Vec::new(), Vec::new());
+    decode_exhaustive_top_n_into(&hm, &probs, &[3, 7], 10,
+                                 &mut scratch, &mut want);
+    let st = decode_pruned_top_n_into(&hm, &idx, 8, hm.d, &probs,
+                                      &[3, 7], 10, &mut scratch,
+                                      &mut got);
+    assert!(st.pruned && st.fallback, "cap >= d must fall back");
+    assert_eq!(st.scored, hm.d);
+    assert_eq!(got, want, "fallback must equal the oracle exactly");
+    assert_eq!(recall(&want, &got), 1.0,
+               "recall is exactly 1.0 when max_candidates >= d");
+
+    // the same contract through the Embedding strategy route
+    let be = Bloom::new(hm.clone(), None)
+        .with_decode(DecodeStrategy::Pruned {
+            top_positions: 8,
+            max_candidates: hm.d,
+        });
+    let mut via_emb = Vec::new();
+    let st = be.decode_top_n_into(&probs, &[3, 7], 10, None,
+                                  &mut scratch, &mut via_emb);
+    assert!(st.pruned && st.fallback);
+    assert_eq!(via_emb, want);
+}
+
+#[test]
+fn pruned_recall_meets_bound_across_shapes() {
+    let mut pruned_for_real = 0usize;
+    for (case, &(d, m, k)) in
+        [(500usize, 64usize, 3usize), (2000, 256, 4), (5000, 512, 2)]
+            .iter()
+            .enumerate()
+    {
+        let mut rng = Rng::new(100 + case as u64);
+        let hm = HashMatrix::random(d, m, k, &mut rng);
+        let idx = PositionIndex::build(&hm);
+        // top-P covers every boosted position (12*k of them), the cap
+        // tolerates the merged posting lists without covering d
+        let (top_positions, max_candidates) = (12 * k + 8, d - 1);
+        let mut scratch = DecodeScratch::new();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        let mut total_recall = 0.0f64;
+        let n_requests = 20usize;
+        for _ in 0..n_requests {
+            let probs = structured_probs(&hm, 12, &mut rng);
+            decode_exhaustive_top_n_into(&hm, &probs, &[], 10,
+                                         &mut scratch, &mut want);
+            let st = decode_pruned_top_n_into(
+                &hm, &idx, top_positions, max_candidates, &probs, &[],
+                10, &mut scratch, &mut got);
+            assert!(st.pruned);
+            if !st.fallback {
+                assert!(st.scored < d, "non-fallback must prune");
+                pruned_for_real += 1;
+            }
+            total_recall += recall(&want, &got);
+        }
+        let mean = total_recall / n_requests as f64;
+        assert!(mean >= RECALL_BOUND,
+                "d={d} m={m} k={k}: recall {mean:.4} < {RECALL_BOUND}");
+    }
+    assert!(pruned_for_real > 0,
+            "at least one shape must exercise the non-fallback path");
+}
+
+#[test]
+fn pruned_scores_are_bitwise_equal_to_the_full_sweep() {
+    // unstructured probabilities: recall is not the point here, the
+    // bitwise-rescore contract is — every returned score must equal
+    // the exhaustive score of that item to the bit
+    let hm = HashMatrix::random(3000, 300, 4, &mut Rng::new(21));
+    let idx = PositionIndex::build(&hm);
+    let mut rng = Rng::new(22);
+    let probs: Vec<f32> = (0..hm.m).map(|_| rng.f32() + 1e-3).collect();
+    let full = decode_scores(&probs, &hm);
+    let mut scratch = DecodeScratch::new();
+    let mut got = Vec::new();
+    let st = decode_pruned_top_n_into(&hm, &idx, 24, 2000, &probs, &[],
+                                      10, &mut scratch, &mut got);
+    assert!(st.pruned && !st.fallback);
+    assert!(st.scored < hm.d);
+    assert_eq!(got.len(), 10);
+    for &(item, score) in &got {
+        assert_eq!(score.to_bits(), full[item].to_bits(),
+                   "item {item}: pruned rescore must be bitwise exact");
+    }
+}
+
+#[test]
+fn decode_top_n_into_is_correct_through_dirty_scratch() {
+    let hm = HashMatrix::random(600, 80, 3, &mut Rng::new(31));
+    let mut rng = Rng::new(32);
+    let be = Bloom::new(hm, None).with_decode(DecodeStrategy::Pruned {
+        top_positions: 48,
+        max_candidates: 580,
+    });
+    let mut scratch = DecodeScratch {
+        logs: vec![7.0; 999],
+        scores: vec![-3.0; 5],
+        cands: vec![1, 1, 2],
+        cand_scores: vec![0.25; 17],
+        heap: vec![(4.5, 123); 31],
+    };
+    for round in 0..3 {
+        let probs = structured_probs(&be.hm_in, 16, &mut rng);
+        let mut fresh = DecodeScratch::new();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        be.decode_top_n_into(&probs, &[2], 10, None, &mut fresh,
+                             &mut want);
+        let st = be.decode_top_n_into(&probs, &[2], 10, None,
+                                      &mut scratch, &mut got);
+        assert!(st.pruned);
+        assert_eq!(got, want, "round {round}: dirty scratch leaked");
+        // and the per-call strategy override through the same scratch
+        be.decode_top_n_into(&probs, &[2],
+                             10, Some(DecodeStrategy::Exhaustive),
+                             &mut fresh, &mut want);
+        let st = be.decode_top_n_into(&probs, &[2], 10,
+                                      Some(DecodeStrategy::Exhaustive),
+                                      &mut scratch, &mut got);
+        assert!(!st.pruned);
+        assert_eq!(st.scored, 600);
+        assert_eq!(got, want, "round {round}: exhaustive via scratch");
+    }
+}
+
+/// Catalog-scale smoke (CI runs it with `--release -- --ignored`): a
+/// million-item Zipf catalog, m = d/10, served through the pruned
+/// tier. Asserts the acceptance contract end to end — recall@10 >=
+/// [`RECALL_BOUND`] vs the exhaustive oracle, no fallback, and a
+/// candidate set under a tenth of the catalog.
+#[test]
+#[ignore = "catalog-scale (needs --release); CI runs it explicitly"]
+fn catalog_scale_smoke() {
+    let (d, m, k) = (1_000_000usize, 100_000usize, 4usize);
+    let mut rng = Rng::new(43);
+    let hm = HashMatrix::random(d, m, k, &mut rng);
+    let idx = PositionIndex::build_parallel(&hm);
+    let zipf = ZipfStream::new(d, 1.05);
+    let mut scratch = DecodeScratch::new();
+    let (mut want, mut got) = (Vec::new(), Vec::new());
+    let mut total_recall = 0.0f64;
+    let n_requests = 8usize;
+    for _ in 0..n_requests {
+        let mut probs: Vec<f32> =
+            (0..m).map(|_| rng.f32() * 0.01 + 1e-4).collect();
+        let mut boosted: Vec<usize> = Vec::with_capacity(16);
+        while boosted.len() < 16 {
+            let item = zipf.sample(&mut rng);
+            if boosted.contains(&item) {
+                continue;
+            }
+            boosted.push(item);
+            for &p in hm.row(item) {
+                probs[p as usize] = 0.5 + rng.f32() * 0.5;
+            }
+        }
+        decode_exhaustive_top_n_into(&hm, &probs, &[], 10,
+                                     &mut scratch, &mut want);
+        let st = decode_pruned_top_n_into(&hm, &idx, 128, 65_536,
+                                          &probs, &[], 10,
+                                          &mut scratch, &mut got);
+        assert!(st.pruned && !st.fallback,
+                "million-item pruned decode must not fall back");
+        assert!(st.scored < d / 10,
+                "candidate set {} is not sublinear in d", st.scored);
+        total_recall += recall(&want, &got);
+    }
+    let mean = total_recall / n_requests as f64;
+    assert!(mean >= RECALL_BOUND,
+            "catalog-scale recall@10 {mean:.4} < {RECALL_BOUND}");
+}

@@ -350,6 +350,7 @@ fn try_submit_sheds_load_beyond_queue_cap() {
                 max_batch: 64, // never fills -> flush only on deadline
                 max_wait: Duration::from_millis(500),
             },
+            ..ServeConfig::default()
         }).expect("server");
     let items = f.ds.test[0].input_items().to_vec();
 
@@ -374,6 +375,52 @@ fn try_submit_sheds_load_beyond_queue_cap() {
     let rx = server.try_submit(RecRequest::new(items, 3))
         .expect("capacity freed after drain");
     rx.recv().expect("response");
+    server.shutdown();
+}
+
+/// Forcing the candidate-pruned decode strategy through `ServeConfig`
+/// must keep responses equal to the exhaustive oracle whenever the
+/// candidate cap covers the catalog (the exactness contract), and the
+/// decode counters must show the pruned tier was exercised.
+#[test]
+fn pruned_decode_strategy_serves_and_counts() {
+    use bloomrec::bloom::DecodeStrategy;
+    let Some(f) = fixture() else { return };
+    let d_cap = 1 << 20; // >= any tiny-scale catalog -> exact fallback
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 1,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+            },
+            decode: Some(DecodeStrategy::Pruned {
+                top_positions: 64,
+                max_candidates: d_cap,
+            }),
+            ..ServeConfig::default()
+        }).expect("server");
+    let queries: Vec<Vec<u32>> = f.ds.test.iter().take(20)
+        .map(|e| e.input_items().to_vec())
+        .collect();
+    let rxs: Vec<_> = queries.iter()
+        .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+        .collect();
+    for (q, rx) in queries.iter().zip(rxs) {
+        let resp = rx.recv().expect("response");
+        let got: Vec<usize> =
+            resp.items.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, direct_top_n(&f, q, 5),
+                   "pruned (exact-fallback) response diverged for {q:?}");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.pruned_requests, queries.len() as u64,
+               "every decode should have taken the pruned tier");
+    assert_eq!(snap.decode_fallbacks, queries.len() as u64,
+               "cap >= d must report the exact fallback");
+    assert!(snap.decode_scored >= snap.pruned_requests);
+    assert!(snap.decode_catalog >= snap.decode_scored);
     server.shutdown();
 }
 
