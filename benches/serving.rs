@@ -16,7 +16,11 @@
 //!    bit-parity asserted before timing);
 //! 6. the candidate-pruned decode tier against the exhaustive oracle
 //!    at d ∈ {50k, 1M, 10M} item catalogs (acceptance: >= 5x at
-//!    d = 1M with mean recall@10 >= 0.99, asserted before timing).
+//!    d = 1M with mean recall@10 >= 0.99, asserted before timing);
+//! 7. the artifact subsystem (`bloomrec pack` / `serve --artifact`):
+//!    pack/load latency and on-disk bytes per model at Bloom ratios
+//!    m/d ∈ {1, 1/2, 1/5} — the shipped footprint follows the paper's
+//!    compression curve since f32 weights dominate the payload.
 //!
 //! Results are printed and written to BENCH_serving.json at the repo
 //! root (overwritten per run; the PR-over-PR trajectory lives in git
@@ -91,6 +95,7 @@ fn main() {
     parallel_bench(&mut json_sections);
     simd_bench(&mut json_sections);
     decode_bench(&mut json_sections);
+    artifact_bench(&mut json_sections);
 
     write_json(&json_sections);
 }
@@ -787,6 +792,62 @@ fn server_sweep(rt: &Arc<Runtime>,
         }
     }
     json.push(format!("  \"server\": [\n{}\n  ]", rows.join(",\n")));
+}
+
+/// The artifact subsystem at the paper's compression points: pack and
+/// load wall-clock plus on-disk footprint for the ml FF head at
+/// m/d ∈ {1, 1/2, 1/5}. The payload is dominated by f32 weights, so
+/// bytes/model track the Bloom ratio; the hash-table segments are the
+/// fixed d*k*4-byte overhead that makes an artifact self-decoding.
+fn artifact_bench(json: &mut Vec<String>) {
+    let rt = Runtime::native(std::path::Path::new("artifacts"))
+        .expect("native runtime");
+    let task = rt.manifest.task("ml").expect("ml").clone();
+    let mut rng = Rng::new(43);
+    let dir = std::env::temp_dir().join(format!(
+        "bloomrec_bench_artifact_{}", std::process::id()));
+    println!("\n-- artifact pack/load (ml ff head, m/d sweep) --");
+    let mut rows = Vec::new();
+    for &ratio in &[1.0f64, 0.5, 0.2] {
+        let m = bloomrec::runtime::round_m(task.d, ratio);
+        let spec = bloomrec::runtime::ArtifactSpec::ff(
+            &format!("ml_pack_m{m}"), "ml", "predict", "softmax_ce", m,
+            &task.hidden, m, 64, "adam",
+            bloomrec::runtime::OptParams::default());
+        let state = ModelState::init(&spec, &mut rng);
+        let bloom = Bloom::new(
+            HashMatrix::random(task.d, m, 4, &mut rng), None);
+        let inmem_bytes = 4 * spec.n_weights();
+
+        let bench = Bench::quick();
+        let mut report = None;
+        let p = bench.run(&format!("artifact/pack/m{m}"), 1, || {
+            report = Some(
+                bloomrec::artifact::pack(&dir, &spec, &state,
+                                         Some(&bloom))
+                    .expect("pack"));
+        });
+        let l = bench.run(&format!("artifact/load/m{m}"), 1, || {
+            let loaded =
+                bloomrec::artifact::load(&dir).expect("load");
+            std::hint::black_box(loaded.payload_bytes);
+        });
+        let report = report.expect("pack ran");
+        println!("   m/d={ratio} (m={m}): pack {:.0}us load {:.0}us, \
+                  payload {} bytes ({} weight + {} hash) vs {} \
+                  in-memory f32",
+                 p.mean_us, l.mean_us, report.payload_bytes,
+                 report.weight_bytes, report.hash_bytes, inmem_bytes);
+        rows.push(format!(
+            "    {{\"ratio\": {ratio}, \"m\": {m}, \
+             \"pack_us\": {:.2}, \"load_us\": {:.2}, \
+             \"payload_bytes\": {}, \"weight_bytes\": {}, \
+             \"hash_bytes\": {}, \"inmem_f32_bytes\": {}}}",
+            p.mean_us, l.mean_us, report.payload_bytes,
+            report.weight_bytes, report.hash_bytes, inmem_bytes));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    json.push(format!("  \"artifact\": [\n{}\n  ]", rows.join(",\n")));
 }
 
 /// Current git sha (short), or "unknown" outside a git checkout — part

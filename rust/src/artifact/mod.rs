@@ -1,0 +1,702 @@
+//! Versioned model artifacts: the shippable unit between training and
+//! serving.
+//!
+//! An artifact is a directory with two files, modeled on the AOT
+//! manifest+payload split (SNIPPETS.md §1) and the serde package-meta
+//! idiom (§2), built on the repo's own JSON:
+//!
+//! * `manifest.json` — schema version, the full [`ArtifactSpec`] (task,
+//!   wire shapes, loss, family), the Bloom hash config (d/m/k and a
+//!   checksummed position table, so decode is reproducible without the
+//!   training run), per-tensor sha256 checksums with payload offsets,
+//!   and provenance (git sha, SIMD level, thread count at pack time).
+//! * `payload.bin` — the concatenated little-endian tensor segments
+//!   (f32 weights in wire order, then u32 Bloom hash tables), in
+//!   exactly the offsets the manifest declares.
+//!
+//! [`pack`] writes both; [`load`] validates *everything* before a
+//! single weight is decoded: schema version first, then manifest/spec
+//! shape consistency, then payload length (truncation), then segment
+//! bounds and per-segment + whole-payload sha256. A corrupt or
+//! incompatible artifact is rejected with a useful error and no
+//! partially-loaded state.
+
+pub mod sha256;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bloom::HashMatrix;
+use crate::embedding::Bloom;
+use crate::model::ModelState;
+use crate::runtime::{ArtifactSpec, HostTensor};
+use crate::util::json::{obj, Json};
+
+pub use sha256::{sha256 as sha256_digest, sha256_hex};
+
+/// Field access with a contextual error (`Json::req` returns a bare
+/// `String` error, which does not convert into `anyhow::Error` via `?`).
+fn req<'a>(j: &'a Json, what: &str, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow!("{what}: missing field '{key}'"))
+}
+
+/// Bumped whenever the manifest or payload layout changes shape.
+/// Loaders reject any other version before reading anything else.
+pub const SCHEMA_VERSION: u64 = 1;
+/// Manifest file name inside an artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+/// Payload file name inside an artifact directory.
+pub const PAYLOAD_FILE: &str = "payload.bin";
+/// The `format` tag manifests carry, so a stray JSON file is rejected
+/// with a clear message rather than a field-by-field parse error.
+const FORMAT_TAG: &str = "bloomrec-artifact";
+
+/// Where an artifact came from: stamped at pack time, surfaced at load
+/// time. Purely informational — never part of validation.
+#[derive(Clone, Debug)]
+pub struct Provenance {
+    pub git_sha: String,
+    pub simd: String,
+    pub threads: usize,
+}
+
+impl Provenance {
+    /// Capture the packing environment: repo git sha (or "unknown"
+    /// outside a checkout), active SIMD level, worker-pool width.
+    pub fn capture() -> Self {
+        let git_sha = std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string());
+        Self {
+            git_sha,
+            simd: crate::linalg::simd::level().name().to_string(),
+            threads: crate::util::threadpool::WorkerPool::global().threads(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj([
+            ("git_sha", Json::from(self.git_sha.as_str())),
+            ("simd", Json::from(self.simd.as_str())),
+            ("threads", Json::from(self.threads)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Self {
+        Self {
+            git_sha: j
+                .get("git_sha")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            simd: j
+                .get("simd")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            threads: j
+                .get("threads")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+        }
+    }
+}
+
+/// What [`pack`] wrote: sizes for logs and benches.
+#[derive(Clone, Debug)]
+pub struct PackReport {
+    /// total payload bytes (weights + hash tables)
+    pub payload_bytes: usize,
+    /// bytes of f32 weight segments alone
+    pub weight_bytes: usize,
+    /// bytes of u32 Bloom hash-table segments alone
+    pub hash_bytes: usize,
+    /// number of weight tensors packed
+    pub tensors: usize,
+}
+
+/// A fully validated artifact: spec, weights, and the Bloom hash
+/// config needed to reproduce encode/decode without the training run.
+#[derive(Clone, Debug)]
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    /// weights only — `opt_state` is empty (artifacts ship inference
+    /// state, not optimizer slots)
+    pub state: ModelState,
+    pub hash_in: Option<HashMatrix>,
+    pub hash_out: Option<HashMatrix>,
+    pub provenance: Provenance,
+    pub payload_bytes: usize,
+}
+
+impl LoadedArtifact {
+    /// Rebuild the serving embedding from the packed hash tables.
+    /// `None` when the artifact was packed without a Bloom config.
+    pub fn embedding(&self) -> Option<std::sync::Arc<dyn crate::embedding::Embedding>> {
+        let hm_in = self.hash_in.clone()?;
+        let hm_out = self.hash_out.clone();
+        Some(std::sync::Arc::new(Bloom::new(hm_in, hm_out)))
+    }
+}
+
+/// One contiguous payload segment as the manifest declares it.
+struct Segment {
+    name: String,
+    shape: Vec<usize>,
+    dtype: &'static str,
+    offset: usize,
+    bytes: usize,
+    sha256: String,
+}
+
+impl Segment {
+    fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.as_str())),
+            ("shape", Json::Arr(self.shape.iter().map(|&s| Json::from(s)).collect())),
+            ("dtype", Json::from(self.dtype)),
+            ("offset", Json::from(self.offset)),
+            ("bytes", Json::from(self.bytes)),
+            ("sha256", Json::from(self.sha256.as_str())),
+        ])
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<Self> {
+        let name = req(j, what, "name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("{what}: name is not a string"))?
+            .to_string();
+        let shape = req(j, &name, "shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("segment '{name}': shape is not an array"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow!("segment '{name}': bad shape entry"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let dtype_s = req(j, &name, "dtype")?
+            .as_str()
+            .ok_or_else(|| anyhow!("segment '{name}': dtype is not a string"))?;
+        let dtype = match dtype_s {
+            "f32" => "f32",
+            "u32" => "u32",
+            other => bail!("segment '{name}': unsupported dtype '{other}'"),
+        };
+        let offset = req(j, &name, "offset")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("segment '{name}': bad offset"))?;
+        let bytes = req(j, &name, "bytes")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("segment '{name}': bad bytes"))?;
+        let sha256 = req(j, &name, "sha256")?
+            .as_str()
+            .ok_or_else(|| anyhow!("segment '{name}': sha256 is not a string"))?
+            .to_string();
+        Ok(Self { name, shape, dtype, offset, bytes, sha256 })
+    }
+
+    fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Slice this segment out of the payload, checking bounds and the
+    /// per-segment checksum. Everything here runs before any decode.
+    fn checked_slice<'a>(&self, payload: &'a [u8]) -> Result<&'a [u8]> {
+        let end = self
+            .offset
+            .checked_add(self.bytes)
+            .ok_or_else(|| anyhow!("segment '{}': offset overflow", self.name))?;
+        if end > payload.len() {
+            bail!(
+                "segment '{}' spans bytes {}..{} but payload has only {} \
+                 bytes (truncated?)",
+                self.name,
+                self.offset,
+                end,
+                payload.len()
+            );
+        }
+        let slice = &payload[self.offset..end];
+        let got = sha256_hex(slice);
+        if got != self.sha256 {
+            bail!(
+                "segment '{}' failed its sha256 checksum (manifest {}, \
+                 payload {}): artifact is corrupt",
+                self.name,
+                self.sha256,
+                got
+            );
+        }
+        Ok(slice)
+    }
+}
+
+fn f32_segment(name: &str, shape: &[usize], offset: usize, data: &[f32],
+               payload: &mut Vec<u8>) -> Segment {
+    let start = payload.len();
+    debug_assert_eq!(start, offset);
+    for v in data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    Segment {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: "f32",
+        offset,
+        bytes: payload.len() - start,
+        sha256: sha256_hex(&payload[start..]),
+    }
+}
+
+fn u32_segment(name: &str, shape: &[usize], offset: usize, data: &[u32],
+               payload: &mut Vec<u8>) -> Segment {
+    let start = payload.len();
+    debug_assert_eq!(start, offset);
+    for v in data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    Segment {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: "u32",
+        offset,
+        bytes: payload.len() - start,
+        sha256: sha256_hex(&payload[start..]),
+    }
+}
+
+fn hash_table_json(hm: &HashMatrix, seg: &Segment) -> Json {
+    obj([
+        ("d", Json::from(hm.d)),
+        ("m", Json::from(hm.m)),
+        ("k", Json::from(hm.k)),
+        ("table", seg.to_json()),
+    ])
+}
+
+/// Write `spec` + `state` (and optionally the Bloom hash config) as a
+/// versioned artifact under `dir`. The stored spec is normalized to an
+/// inference spec: `kind = "predict"`, no optimizer slots, `file`
+/// pointing at the payload.
+pub fn pack(dir: &Path, spec: &ArtifactSpec, state: &ModelState,
+            bloom: Option<&Bloom>) -> Result<PackReport> {
+    // validate before writing anything: every param tensor must match
+    // the spec's wire shapes, and the hash tables must match the wire
+    if state.params.len() != spec.params.len() {
+        bail!(
+            "cannot pack '{}': state has {} param tensors, spec \
+             declares {}",
+            spec.name,
+            state.params.len(),
+            spec.params.len()
+        );
+    }
+    for (t, ts) in state.params.iter().zip(&spec.params) {
+        if t.shape != ts.shape {
+            bail!(
+                "cannot pack '{}': tensor '{}' has shape {:?}, spec \
+                 declares {:?}",
+                spec.name,
+                ts.name,
+                t.shape,
+                ts.shape
+            );
+        }
+    }
+    if let Some(b) = bloom {
+        if b.hm_in.m != spec.m_in {
+            bail!(
+                "cannot pack '{}': Bloom input table has m = {} but the \
+                 spec's input wire is {}",
+                spec.name,
+                b.hm_in.m,
+                spec.m_in
+            );
+        }
+        let out_m = b.hm_out.as_ref().map_or(b.hm_in.m, |h| h.m);
+        if out_m != spec.m_out {
+            bail!(
+                "cannot pack '{}': Bloom output table has m = {} but the \
+                 spec's output wire is {}",
+                spec.name,
+                out_m,
+                spec.m_out
+            );
+        }
+    }
+
+    let mut stored = spec.clone();
+    stored.kind = "predict".to_string();
+    stored.opt_slots = 0;
+    stored.file = PAYLOAD_FILE.to_string();
+
+    let mut payload: Vec<u8> = Vec::new();
+    let mut tensors: Vec<Segment> = Vec::with_capacity(state.params.len());
+    for (t, ts) in state.params.iter().zip(&spec.params) {
+        let seg = f32_segment(&ts.name, &t.shape, payload.len(), &t.data,
+                              &mut payload);
+        tensors.push(seg);
+    }
+    let weight_bytes = payload.len();
+
+    let bloom_json = match bloom {
+        None => Json::Null,
+        Some(b) => {
+            let seg_in = u32_segment("__bloom_in", &[b.hm_in.d, b.hm_in.k],
+                                     payload.len(), &b.hm_in.h, &mut payload);
+            let input = hash_table_json(&b.hm_in, &seg_in);
+            let output = match &b.hm_out {
+                None => Json::Null,
+                Some(hm) => {
+                    let seg = u32_segment("__bloom_out", &[hm.d, hm.k],
+                                          payload.len(), &hm.h, &mut payload);
+                    hash_table_json(hm, &seg)
+                }
+            };
+            obj([("input", input), ("output", output)])
+        }
+    };
+    let hash_bytes = payload.len() - weight_bytes;
+
+    let provenance = Provenance::capture();
+    let manifest = obj([
+        ("format", Json::from(FORMAT_TAG)),
+        ("schema_version", Json::from(SCHEMA_VERSION as usize)),
+        ("spec", stored.to_json()),
+        ("tensors", Json::Arr(tensors.iter().map(Segment::to_json).collect())),
+        ("bloom", bloom_json),
+        (
+            "payload",
+            obj([
+                ("file", Json::from(PAYLOAD_FILE)),
+                ("bytes", Json::from(payload.len())),
+                ("sha256", Json::from(sha256_hex(&payload))),
+            ]),
+        ),
+        ("provenance", provenance.to_json()),
+    ]);
+
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    fs::write(dir.join(PAYLOAD_FILE), &payload)
+        .with_context(|| format!("writing {}", dir.join(PAYLOAD_FILE).display()))?;
+    fs::write(dir.join(MANIFEST_FILE), manifest.to_string_pretty())
+        .with_context(|| format!("writing {}", dir.join(MANIFEST_FILE).display()))?;
+
+    Ok(PackReport {
+        payload_bytes: payload.len(),
+        weight_bytes,
+        hash_bytes,
+        tensors: state.params.len(),
+    })
+}
+
+fn parse_hash_table(j: &Json, payload: &[u8], which: &str)
+                    -> Result<HashMatrix> {
+    let d = req(j, which, "d")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{which}: bad d"))?;
+    let m = req(j, which, "m")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{which}: bad m"))?;
+    let k = req(j, which, "k")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{which}: bad k"))?;
+    let seg = Segment::from_json(req(j, which, "table")?, which)?;
+    if seg.shape != [d, k] {
+        bail!(
+            "{which}: table shape {:?} disagrees with d = {d}, k = {k}",
+            seg.shape
+        );
+    }
+    if seg.bytes != seg.elements() * 4 {
+        bail!(
+            "{which}: table declares {} bytes for {} u32 entries",
+            seg.bytes,
+            seg.elements()
+        );
+    }
+    let slice = seg.checked_slice(payload)?;
+    let h: Vec<u32> = slice
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if let Some(&bad) = h.iter().find(|&&p| p as usize >= m) {
+        bail!("{which}: hash position {bad} out of range for m = {m}");
+    }
+    Ok(HashMatrix { d, m, k, h })
+}
+
+/// Load and fully validate an artifact directory. Rejection order is
+/// deliberate — schema version, then declared shapes, then payload
+/// length, then checksums — so nothing is ever decoded from a payload
+/// that has not passed every check.
+pub fn load(dir: &Path) -> Result<LoadedArtifact> {
+    let mpath = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&mpath)
+        .with_context(|| format!("reading {}", mpath.display()))?;
+    let root = Json::parse(&text)
+        .with_context(|| format!("parsing {}", mpath.display()))?;
+
+    // 1. format + schema version gate, before touching anything else
+    let format = root
+        .get("format")
+        .and_then(|v| v.as_str())
+        .unwrap_or("<missing>");
+    if format != FORMAT_TAG {
+        bail!(
+            "{} is not a bloomrec artifact (format tag '{format}')",
+            mpath.display()
+        );
+    }
+    let version = req(&root, "manifest", "schema_version")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("schema_version is not a number"))? as u64;
+    if version != SCHEMA_VERSION {
+        bail!(
+            "unsupported artifact schema version {version} (this build \
+             reads version {SCHEMA_VERSION}); re-pack the model"
+        );
+    }
+
+    // 2. spec + declared segments, cross-checked before any payload IO
+    let spec = ArtifactSpec::from_json(req(&root, "manifest", "spec")?)?;
+    let tensor_json = req(&root, "manifest", "tensors")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("manifest tensors is not an array"))?;
+    let tensors = tensor_json
+        .iter()
+        .map(|j| Segment::from_json(j, "tensor"))
+        .collect::<Result<Vec<Segment>>>()?;
+    if tensors.len() != spec.params.len() {
+        bail!(
+            "manifest lists {} tensor segments but spec '{}' declares \
+             {} params",
+            tensors.len(),
+            spec.name,
+            spec.params.len()
+        );
+    }
+    for (seg, ts) in tensors.iter().zip(&spec.params) {
+        if seg.name != ts.name || seg.shape != ts.shape {
+            bail!(
+                "tensor segment '{}' {:?} does not match spec param \
+                 '{}' {:?}",
+                seg.name,
+                seg.shape,
+                ts.name,
+                ts.shape
+            );
+        }
+        if seg.dtype != "f32" {
+            bail!("tensor segment '{}' has dtype {}", seg.name, seg.dtype);
+        }
+        if seg.bytes != seg.elements() * 4 {
+            bail!(
+                "tensor segment '{}' declares {} bytes for {} f32 \
+                 elements — manifest/payload shape mismatch",
+                seg.name,
+                seg.bytes,
+                seg.elements()
+            );
+        }
+    }
+
+    // 3. payload length (truncation) and whole-file checksum
+    let pj = req(&root, "manifest", "payload")?;
+    let declared_bytes = req(pj, "payload", "bytes")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("payload bytes is not a number"))?;
+    let declared_sha = req(pj, "payload", "sha256")?
+        .as_str()
+        .ok_or_else(|| anyhow!("payload sha256 is not a string"))?;
+    let ppath = dir.join(PAYLOAD_FILE);
+    let payload = fs::read(&ppath)
+        .with_context(|| format!("reading {}", ppath.display()))?;
+    if payload.len() != declared_bytes {
+        bail!(
+            "payload {} has {} bytes, manifest declares {} (truncated \
+             or overwritten)",
+            ppath.display(),
+            payload.len(),
+            declared_bytes
+        );
+    }
+    let got = sha256_hex(&payload);
+    if got != declared_sha {
+        bail!(
+            "payload failed its whole-file sha256 checksum (manifest \
+             {declared_sha}, payload {got}): artifact is corrupt"
+        );
+    }
+
+    // 4. per-segment bounds + checksums, then (and only then) decode
+    let mut params: Vec<HostTensor> = Vec::with_capacity(tensors.len());
+    for seg in &tensors {
+        let slice = seg.checked_slice(&payload)?;
+        let data: Vec<f32> = slice
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        params.push(HostTensor::from_vec(&seg.shape, data));
+    }
+
+    let (hash_in, hash_out) = match root.get("bloom") {
+        None | Some(Json::Null) => (None, None),
+        Some(b) => {
+            let hm_in =
+                parse_hash_table(req(b, "bloom", "input")?, &payload,
+                                 "bloom input table")?;
+            if hm_in.m != spec.m_in {
+                bail!(
+                    "bloom input table has m = {} but spec input wire \
+                     is {}",
+                    hm_in.m,
+                    spec.m_in
+                );
+            }
+            let hm_out = match b.get("output") {
+                None | Some(Json::Null) => {
+                    if spec.m_out != spec.m_in {
+                        bail!(
+                            "artifact has no output hash table but spec \
+                             wires differ (m_in = {}, m_out = {})",
+                            spec.m_in,
+                            spec.m_out
+                        );
+                    }
+                    None
+                }
+                Some(o) => {
+                    let hm = parse_hash_table(o, &payload,
+                                              "bloom output table")?;
+                    if hm.m != spec.m_out {
+                        bail!(
+                            "bloom output table has m = {} but spec \
+                             output wire is {}",
+                            hm.m,
+                            spec.m_out
+                        );
+                    }
+                    Some(hm)
+                }
+            };
+            (Some(hm_in), hm_out)
+        }
+    };
+
+    let provenance = root
+        .get("provenance")
+        .map(Provenance::from_json)
+        .unwrap_or_else(|| Provenance {
+            git_sha: "unknown".into(),
+            simd: "unknown".into(),
+            threads: 0,
+        });
+
+    Ok(LoadedArtifact {
+        spec,
+        state: ModelState { params, opt_state: Vec::new() },
+        hash_in,
+        hash_out,
+        provenance,
+        payload_bytes: payload.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::test_ff_spec;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bloomrec_artifact_mod_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_model() -> (ArtifactSpec, ModelState, Bloom) {
+        let mut spec = test_ff_spec(24, &[8], 24, 4);
+        spec.kind = "predict".to_string();
+        spec.opt_slots = 0;
+        let mut rng = Rng::new(11);
+        let state = ModelState::init(&spec, &mut rng);
+        let hm = HashMatrix::random(96, 24, 3, &mut rng);
+        (spec, state, Bloom::new(hm, None))
+    }
+
+    #[test]
+    fn pack_load_round_trips_bitwise() {
+        let dir = tmp("roundtrip");
+        let (spec, state, bloom) = small_model();
+        let report = pack(&dir, &spec, &state, Some(&bloom)).unwrap();
+        assert_eq!(report.tensors, state.params.len());
+        assert_eq!(report.payload_bytes,
+                   report.weight_bytes + report.hash_bytes);
+
+        let loaded = load(&dir).unwrap();
+        assert_eq!(loaded.spec.name, spec.name);
+        assert_eq!(loaded.spec.kind, "predict");
+        assert_eq!(loaded.state.params.len(), state.params.len());
+        for (a, b) in loaded.state.params.iter().zip(&state.params) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data, "weights must round-trip bitwise");
+        }
+        let hin = loaded.hash_in.as_ref().unwrap();
+        assert_eq!(hin.h, bloom.hm_in.h, "hash table must round-trip");
+        assert_eq!((hin.d, hin.m, hin.k),
+                   (bloom.hm_in.d, bloom.hm_in.m, bloom.hm_in.k));
+        assert!(loaded.embedding().is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pack_rejects_state_shape_mismatch() {
+        let dir = tmp("badshape");
+        let (spec, _, bloom) = small_model();
+        let other = test_ff_spec(16, &[8], 16, 4);
+        let mut rng = Rng::new(3);
+        let wrong = ModelState::init(&other, &mut rng);
+        let err = pack(&dir, &spec, &wrong, Some(&bloom)).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pack_rejects_bloom_wire_mismatch() {
+        let dir = tmp("badwire");
+        let (spec, state, _) = small_model();
+        let mut rng = Rng::new(5);
+        let wrong = Bloom::new(HashMatrix::random(96, 16, 3, &mut rng), None);
+        let err = pack(&dir, &spec, &state, Some(&wrong)).unwrap_err();
+        assert!(err.to_string().contains("wire"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_checksum() {
+        let dir = tmp("flip");
+        let (spec, state, bloom) = small_model();
+        pack(&dir, &spec, &state, Some(&bloom)).unwrap();
+        let p = dir.join(PAYLOAD_FILE);
+        let mut bytes = fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        fs::write(&p, &bytes).unwrap();
+        let err = load(&dir).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

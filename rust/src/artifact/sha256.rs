@@ -1,0 +1,182 @@
+//! Minimal SHA-256 (FIPS 180-4): the artifact checksum primitive.
+//!
+//! No crypto crate exists in the offline vendor set, so this is the
+//! plain reference compression function — one pass, no incremental
+//! state — tested against the FIPS example vectors. Artifact payloads
+//! are tens of megabytes at most, so a single-shot digest over a byte
+//! slice is all the packer and loader need.
+
+/// Round constants: fractional parts of the cube roots of the first 64
+/// primes (FIPS 180-4 Sec. 4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5,
+    0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+    0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc,
+    0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+    0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3,
+    0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5,
+    0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+    0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// SHA-256 digest of `data`.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    // initial hash: fractional parts of the square roots of the first
+    // 8 primes
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a,
+        0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+    ];
+    let bit_len = (data.len() as u64).wrapping_mul(8);
+
+    let mut chunks = data.chunks_exact(64);
+    for block in chunks.by_ref() {
+        compress(&mut h, block.try_into().unwrap());
+    }
+    // padding: 0x80, zeros, 64-bit big-endian message length — spread
+    // over one or two final blocks without copying the message
+    let rem = chunks.remainder();
+    let mut block = [0u8; 64];
+    block[..rem.len()].copy_from_slice(rem);
+    block[rem.len()] = 0x80;
+    if rem.len() >= 56 {
+        compress(&mut h, &block);
+        block = [0u8; 64];
+    }
+    block[56..].copy_from_slice(&bit_len.to_be_bytes());
+    compress(&mut h, &block);
+
+    let mut out = [0u8; 32];
+    for (dst, word) in out.chunks_exact_mut(4).zip(&h) {
+        dst.copy_from_slice(&word.to_be_bytes());
+    }
+    out
+}
+
+/// Lowercase hex digest — the form manifests store and compare.
+pub fn sha256_hex(data: &[u8]) -> String {
+    let digest = sha256(data);
+    let mut s = String::with_capacity(64);
+    for b in digest {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn compress(h: &mut [u32; 8], block: &[u8; 64]) {
+    let mut w = [0u32; 64];
+    for (wi, chunk) in w.iter_mut().zip(block.chunks_exact(4)) {
+        *wi = u32::from_be_bytes(chunk.try_into().unwrap());
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7)
+            ^ w[i - 15].rotate_right(18)
+            ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17)
+            ^ w[i - 2].rotate_right(19)
+            ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[i - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = *h;
+    for (&ki, &wi) in K.iter().zip(&w) {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11)
+            ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = hh
+            .wrapping_add(s1)
+            .wrapping_add(ch)
+            .wrapping_add(ki)
+            .wrapping_add(wi);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13)
+            ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        hh = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    h[0] = h[0].wrapping_add(a);
+    h[1] = h[1].wrapping_add(b);
+    h[2] = h[2].wrapping_add(c);
+    h[3] = h[3].wrapping_add(d);
+    h[4] = h[4].wrapping_add(e);
+    h[5] = h[5].wrapping_add(f);
+    h[6] = h[6].wrapping_add(g);
+    h[7] = h[7].wrapping_add(hh);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // FIPS 180-4 example vectors
+    #[test]
+    fn empty_message() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b78\
+             52b855"
+        );
+    }
+
+    #[test]
+    fn abc() {
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f2\
+             0015ad"
+        );
+    }
+
+    #[test]
+    fn two_block_message() {
+        assert_eq!(
+            sha256_hex(
+                b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"
+            ),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419\
+             db06c1"
+        );
+    }
+
+    #[test]
+    fn million_a() {
+        let msg = vec![b'a'; 1_000_000];
+        assert_eq!(
+            sha256_hex(&msg),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7\
+             112cd0"
+        );
+    }
+
+    #[test]
+    fn padding_boundaries() {
+        // 55/56/63/64 bytes exercise both one- and two-block padding
+        for len in [55usize, 56, 63, 64, 119, 120] {
+            let msg = vec![0x5au8; len];
+            let d1 = sha256(&msg);
+            let d2 = sha256(&msg);
+            assert_eq!(d1, d2);
+            // a one-bit flip changes the digest
+            let mut flipped = msg.clone();
+            flipped[len / 2] ^= 1;
+            assert_ne!(sha256(&flipped), d1, "len {len}");
+        }
+    }
+}

@@ -23,6 +23,9 @@ pub struct Options {
     /// serving decode route (`--decode exhaustive|pruned|pruned:P,C`);
     /// `None` defers to the embedding default (`BLOOMREC_DECODE`)
     pub decode: Option<DecodeStrategy>,
+    /// serve from a packed model artifact directory (`--artifact DIR`,
+    /// see `bloomrec pack`) instead of training at startup
+    pub artifact: Option<PathBuf>,
 }
 
 impl Default for Options {
@@ -36,6 +39,7 @@ impl Default for Options {
             tasks: None,
             top_n: 10,
             decode: None,
+            artifact: None,
         }
     }
 }
@@ -89,6 +93,9 @@ impl Options {
                         .ok_or_else(|| anyhow!(
                             "bad --decode '{v}' (want exhaustive, \
                              pruned, or pruned:P,C)"))?);
+                }
+                "--artifact" => {
+                    opts.artifact = Some(PathBuf::from(req(&mut it, arg)?));
                 }
                 _ if arg.starts_with("--") => bail!("unknown flag {arg}"),
                 _ => positional.push(arg.clone()),
@@ -155,6 +162,18 @@ mod tests {
             top_positions: 32,
             max_candidates: 1024,
         }));
+    }
+
+    #[test]
+    fn parses_artifact_path() {
+        let (o, _) = Options::parse(&[]).unwrap();
+        assert_eq!(o.artifact, None);
+        let (o, pos) =
+            Options::parse(&sv(&["serve", "ml", "--artifact", "out/ml_art"]))
+                .unwrap();
+        assert_eq!(pos, vec!["serve", "ml"]);
+        assert_eq!(o.artifact, Some(PathBuf::from("out/ml_art")));
+        assert!(Options::parse(&sv(&["--artifact"])).is_err());
     }
 
     #[test]

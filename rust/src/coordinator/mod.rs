@@ -10,4 +10,5 @@ pub mod train;
 pub use evaluate::{evaluate, random_score, EvalReport};
 pub use experiment::{build_embedding, run, DatasetCache, Method, RunResult,
                      RunSpec};
-pub use train::{train, TrainConfig, TrainReport};
+pub use train::{train, train_serving_model, ServingModel, TrainConfig,
+                TrainReport};

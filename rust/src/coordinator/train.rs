@@ -14,14 +14,17 @@
 //! backends guarantee bit-identical results for every shard and thread
 //! count.
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use super::batcher::{batch_ranges, encode_input_batch,
                      encode_target_batch};
-use crate::data::Dataset;
+use super::experiment::{build_embedding, DatasetCache, Method};
+use crate::data::{Dataset, Scale};
 use crate::embedding::Embedding;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, Execution, Runtime};
+use crate::runtime::{round_m, ArtifactSpec, Execution, Runtime, TaskSpec};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -101,4 +104,55 @@ pub fn train(rt: &Runtime, spec: &ArtifactSpec, ds: &Dataset,
     }
     report.train_secs = watch.elapsed_secs();
     Ok((state, report))
+}
+
+/// A trained model plus everything the serving/packing paths need to
+/// run it: the predict-kind [`ArtifactSpec`], the weights, and the
+/// Bloom embedding whose hash matrices define the wire format.
+pub struct ServingModel {
+    pub task: TaskSpec,
+    /// the predict-kind spec matching `state`
+    pub spec: ArtifactSpec,
+    pub state: ModelState,
+    pub emb: Arc<dyn Embedding>,
+}
+
+/// Train one Bloom-embedded configuration end to end and return the
+/// pieces `bloomrec serve` and `bloomrec pack` both need. Factors the
+/// train-then-serve preamble out of the CLI so the two subcommands
+/// produce byte-identical models for the same inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn train_serving_model(rt: &Runtime, cache: &DatasetCache,
+                           task_name: &str, ratio: f64, k: usize,
+                           scale: Scale, seed: u64,
+                           epochs: Option<usize>)
+    -> Result<ServingModel> {
+    let task = rt.manifest.task(task_name)?.clone();
+    if !rt.supports_task(&task) {
+        bail!("the '{}' backend cannot run family '{}'",
+              rt.backend_name(), task.family);
+    }
+    if task.family == "classifier" {
+        bail!("serving supports the recommender tasks (ff: ml/msd/amz/bc, \
+               recurrent: yc/ptb), not the classifier");
+    }
+
+    let m = round_m(task.d, ratio);
+    let ds = cache.get(&task, scale, seed);
+    let emb: Arc<dyn Embedding> =
+        build_embedding(Method::Be { k }, &ds, &task, m, seed)?.into();
+    let train_spec =
+        rt.manifest.find(&task.name, "train", "softmax_ce", m)?.clone();
+    let predict_spec =
+        rt.manifest.find(&task.name, "predict", "softmax_ce", m)?.clone();
+    let cfg = TrainConfig {
+        epochs: epochs.unwrap_or(task.epochs),
+        seed,
+        verbose: true,
+        shards: 0, // auto-size micro-shards from the worker pool
+    };
+    crate::info!("training {} (m/d={ratio}, k={k}) on the {} backend...",
+                 task.name, rt.backend_name());
+    let (state, _) = train(rt, &train_spec, &ds, emb.as_ref(), &cfg)?;
+    Ok(ServingModel { task, spec: predict_spec, state, emb })
 }

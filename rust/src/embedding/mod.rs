@@ -133,6 +133,14 @@ pub trait Embedding: Send + Sync {
 
     /// Human-readable method tag for result tables.
     fn name(&self) -> &'static str;
+
+    /// Downcast hook for the artifact packer: Bloom embeddings expose
+    /// their hash matrices (the tables `bloomrec pack` ships so decode
+    /// is reproducible without the training run); everything else
+    /// returns `None` and cannot be packed with a decode config.
+    fn as_bloom(&self) -> Option<&Bloom> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -296,6 +304,9 @@ impl Embedding for Bloom {
     }
     fn name(&self) -> &'static str {
         self.tag
+    }
+    fn as_bloom(&self) -> Option<&Bloom> {
+        Some(self)
     }
 }
 

@@ -36,6 +36,7 @@ pub mod linalg;
 pub mod util;
 
 // modules added as the build proceeds bottom-up
+pub mod artifact;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

@@ -4,11 +4,14 @@
 //!   experiment <id|all>   regenerate a paper table/figure (see DESIGN.md)
 //!   train <task>          train one configuration and report the score
 //!   serve <task>          start the recommendation server + load test
+//!   pack <task>           train, then pack a versioned model artifact
 //!   inspect               print manifest/artifact inventory
 //!
 //! Common flags: --artifacts DIR --out DIR --scale tiny|small|full
 //!               --seeds 1,2,3 --epochs N --tasks ml,bc --top-n N
+//!               --artifact DIR (serve from a packed artifact)
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
@@ -38,6 +41,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&opts, &positional[1..]),
         "train" => cmd_train(&opts, &positional[1..]),
         "serve" => cmd_serve(&opts, &positional[1..]),
+        "pack" => cmd_pack(&opts, &positional[1..]),
         "inspect" => cmd_inspect(&opts),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -56,10 +60,12 @@ fn print_usage() {
          experiment <id|all>  regenerate paper artifacts: {:?}\n  \
          train <task> [method] [ratio]       one training run\n  \
          serve <task> [ratio] [k] [requests] serving demo + load test\n  \
+         pack <task> [ratio] [k] [out_dir]   train + pack model artifact\n  \
          inspect              artifact inventory\n\n\
          FLAGS: --artifacts DIR --out DIR --scale tiny|small|full\n       \
          --seeds 1,2,3 --epochs N --tasks ml,msd --top-n N\n       \
-         --decode exhaustive|pruned|pruned:P,C  (serve decode route)",
+         --decode exhaustive|pruned|pruned:P,C  (serve decode route)\n       \
+         --artifact DIR  (serve from a packed artifact, skip training)",
         experiments::ALL
     );
 }
@@ -143,41 +149,31 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
         bail!("the '{}' backend cannot run family '{}'",
               rt.backend_name(), task.family);
     }
-    if task.family == "classifier" {
-        bail!("serve demo supports the recommender tasks (ff: \
-               ml/msd/amz/bc, recurrent: yc/ptb), not the classifier");
-    }
     let recurrent = matches!(task.family.as_str(), "gru" | "lstm");
-
-    // train the model to serve
-    info!("training {} (m/d={ratio}, k={k}) on the {} backend before \
-           serving...", task.name, rt.backend_name());
-    let spec = RunSpec {
-        task: task.name.clone(),
-        method: Method::Be { k },
-        ratio,
-        seed: opts.seeds[0],
-        scale: opts.scale,
-        epochs: opts.epochs,
-    };
-    let m = bloomrec::runtime::round_m(task.d, ratio);
     let ds = cache.get(&task, opts.scale, opts.seeds[0]);
-    let emb: Arc<dyn bloomrec::embedding::Embedding> =
-        coordinator::build_embedding(spec.method, &ds, &task, m,
-                                     spec.seed)?
-        .into();
-    let train_spec = rt.manifest
-        .find(&task.name, "train", "softmax_ce", m)?.clone();
-    let predict_spec = rt.manifest
-        .find(&task.name, "predict", "softmax_ce", m)?.clone();
-    let cfg = coordinator::TrainConfig {
-        epochs: opts.epochs.unwrap_or(task.epochs),
-        seed: spec.seed,
-        verbose: true,
-        shards: 0, // auto-size micro-shards from the worker pool
+
+    // the model to serve: load a packed artifact (`bloomrec pack`) or
+    // train one at startup
+    let (predict_spec, state, emb) = if let Some(dir) = &opts.artifact {
+        let loaded = bloomrec::artifact::load(dir)?;
+        if loaded.spec.task != *task_name {
+            bail!("artifact {} packs task '{}', not '{}'",
+                  dir.display(), loaded.spec.task, task_name);
+        }
+        let emb = loaded.embedding().ok_or_else(|| anyhow!(
+            "artifact {} carries no Bloom hash tables; cannot decode",
+            dir.display()))?;
+        info!("serving packed artifact {} ({} payload bytes, built at \
+               {} with simd {})",
+              dir.display(), loaded.payload_bytes,
+              loaded.provenance.git_sha, loaded.provenance.simd);
+        (loaded.spec, loaded.state, emb)
+    } else {
+        let sm = coordinator::train_serving_model(
+            &rt, &cache, task_name, ratio, k, opts.scale, opts.seeds[0],
+            opts.epochs)?;
+        (sm.spec, sm.state, sm.emb)
     };
-    let (state, _) =
-        coordinator::train(&rt, &train_spec, &ds, emb.as_ref(), &cfg)?;
 
     // serve a synthetic workload from test-split user profiles; for
     // recurrent tasks, replay each test window as a live session —
@@ -256,6 +252,42 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
         snap.decode_fallbacks,
     );
     server.shutdown();
+    Ok(())
+}
+
+fn cmd_pack(opts: &Options, rest: &[String]) -> Result<()> {
+    let task_name = rest
+        .first()
+        .ok_or_else(|| anyhow!("usage: pack <task> [ratio] [k] [out_dir]"))?;
+    let ratio: f64 = rest.get(1).map(|s| s.parse()).transpose()?
+        .unwrap_or(0.2);
+    let k: usize = rest.get(2).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let out: PathBuf = rest
+        .get(3)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| opts.out_dir.join(format!("{task_name}_artifact")));
+
+    let rt = Runtime::new(&opts.artifact_dir)?;
+    let cache = DatasetCache::new();
+    let sm = coordinator::train_serving_model(
+        &rt, &cache, task_name, ratio, k, opts.scale, opts.seeds[0],
+        opts.epochs)?;
+    let bloom = sm.emb.as_bloom().ok_or_else(|| anyhow!(
+        "pack needs a Bloom embedding; '{}' produced none", sm.emb.name()))?;
+    let report = bloomrec::artifact::pack(&out, &sm.spec, &sm.state,
+                                          Some(bloom))?;
+    let prov = bloomrec::artifact::Provenance::capture();
+    println!(
+        "packed {} -> {}\n\
+         payload: {} bytes ({} weight + {} hash-table) over {} tensors\n\
+         provenance: git {} simd {} threads {}\n\
+         serve it: bloomrec serve {} --artifact {}",
+        sm.spec.name, out.display(),
+        report.payload_bytes, report.weight_bytes, report.hash_bytes,
+        report.tensors,
+        prov.git_sha, prov.simd, prov.threads,
+        task_name, out.display(),
+    );
     Ok(())
 }
 

@@ -776,6 +776,33 @@ impl Runtime {
         Ok(exe)
     }
 
+    /// Load an execution for a spec that need not exist in the
+    /// manifest — the path packed model artifacts arrive through
+    /// (`artifact::load` hands back a self-describing [`ArtifactSpec`]).
+    /// Cached like [`Runtime::load`], but a cache hit is only taken
+    /// when the cached execution's spec is shape-compatible with the
+    /// requested one, so a test or artifact spec that reuses a name
+    /// with different wires can never pick up a stale execution.
+    pub fn load_spec(&self, spec: &ArtifactSpec)
+        -> Result<Arc<dyn Execution>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&spec.name) {
+            let c = exe.spec();
+            if c.family == spec.family && c.kind == spec.kind
+                && c.loss == spec.loss && c.m_in == spec.m_in
+                && c.m_out == spec.m_out && c.hidden == spec.hidden
+                && c.seq_len == spec.seq_len && c.batch == spec.batch
+                && c.optimizer == spec.optimizer {
+                return Ok(exe);
+            }
+        }
+        let exe = self.backend.load(&self.manifest, spec)?;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(spec.name.clone(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
     /// Number of loaded executions held in the cache.
     pub fn cached(&self) -> usize {
         self.cache.lock().unwrap().map.len()

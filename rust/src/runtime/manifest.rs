@@ -10,9 +10,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::util::json::Json;
+use crate::util::json::{obj, Json};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TensorSpec {
     pub name: String,
     pub shape: Vec<usize>,
@@ -21,6 +21,28 @@ pub struct TensorSpec {
 impl TensorSpec {
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.as_str())),
+            (
+                "shape",
+                Json::Arr(self.shape.iter().map(|&s| Json::from(s)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .req("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .unwrap_or("")
+                .into(),
+            shape: usizes(j.req("shape").map_err(|e| anyhow!("{e}"))?),
+        })
     }
 }
 
@@ -52,6 +74,18 @@ impl Default for OptParams {
 }
 
 impl OptParams {
+    fn to_json(&self) -> Json {
+        obj([
+            ("lr", Json::from(self.lr)),
+            ("b1", Json::from(self.b1)),
+            ("b2", Json::from(self.b2)),
+            ("eps", Json::from(self.eps)),
+            ("momentum", Json::from(self.momentum)),
+            ("clip_norm", Json::from(self.clip_norm)),
+            ("decay", Json::from(self.decay)),
+        ])
+    }
+
     fn from_json(j: &Json) -> OptParams {
         let mut p = OptParams::default();
         if let Some(o) = j.as_obj() {
@@ -199,6 +233,73 @@ impl ArtifactSpec {
     pub fn y_shape(&self) -> Vec<usize> {
         vec![self.batch, self.m_out]
     }
+
+    /// Serialize every field — the artifact subsystem embeds this in
+    /// `manifest.json` so a packed model is self-describing.
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.as_str())),
+            ("task", Json::from(self.task.as_str())),
+            ("family", Json::from(self.family.as_str())),
+            ("kind", Json::from(self.kind.as_str())),
+            ("loss", Json::from(self.loss.as_str())),
+            ("m_in", Json::from(self.m_in)),
+            ("m_out", Json::from(self.m_out)),
+            (
+                "hidden",
+                Json::Arr(self.hidden.iter().map(|&h| Json::from(h)).collect()),
+            ),
+            ("batch", Json::from(self.batch)),
+            ("seq_len", Json::from(self.seq_len)),
+            ("optimizer", Json::from(self.optimizer.as_str())),
+            ("opt_params", self.opt_params.to_json()),
+            ("ratio", Json::from(self.ratio)),
+            ("file", Json::from(self.file.as_str())),
+            (
+                "params",
+                Json::Arr(self.params.iter().map(TensorSpec::to_json).collect()),
+            ),
+            ("opt_slots", Json::from(self.opt_slots)),
+            ("decode_d", Json::from(self.decode_d)),
+            ("decode_k", Json::from(self.decode_k)),
+        ])
+    }
+
+    /// Parse one artifact-spec object — shared by `Manifest::parse`
+    /// (AOT manifests) and `artifact::load` (packed models). Tolerant
+    /// of wrong-typed fields (defaults) but strict about missing ones.
+    pub fn from_json(a: &Json) -> Result<ArtifactSpec> {
+        let get = |j: &Json, k: &str| -> Result<Json> {
+            Ok(j.req(k).map_err(|e| anyhow!("{e}"))?.clone())
+        };
+        let mut params = Vec::new();
+        for p in get(a, "params")?.as_arr().unwrap_or_default() {
+            params.push(TensorSpec::from_json(p)?);
+        }
+        Ok(ArtifactSpec {
+            name: get(a, "name")?.as_str().unwrap_or("").into(),
+            task: get(a, "task")?.as_str().unwrap_or("").into(),
+            family: get(a, "family")?.as_str().unwrap_or("").into(),
+            kind: get(a, "kind")?.as_str().unwrap_or("").into(),
+            loss: get(a, "loss")?.as_str().unwrap_or("").into(),
+            m_in: get(a, "m_in")?.as_usize().unwrap_or(0),
+            m_out: get(a, "m_out")?.as_usize().unwrap_or(0),
+            hidden: usizes(&get(a, "hidden")?),
+            batch: get(a, "batch")?.as_usize().unwrap_or(0),
+            seq_len: get(a, "seq_len")?.as_usize().unwrap_or(0),
+            optimizer: get(a, "optimizer")?.as_str().unwrap_or("").into(),
+            opt_params: a
+                .get("opt_params")
+                .map(OptParams::from_json)
+                .unwrap_or_default(),
+            ratio: get(a, "ratio")?.as_f64().unwrap_or(0.0),
+            file: get(a, "file")?.as_str().unwrap_or("").into(),
+            opt_slots: get(a, "opt_slots")?.as_usize().unwrap_or(0),
+            decode_d: get(a, "decode_d")?.as_usize().unwrap_or(0),
+            decode_k: get(a, "decode_k")?.as_usize().unwrap_or(0),
+            params,
+        })
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -299,36 +400,7 @@ impl Manifest {
 
         let mut artifacts = Vec::new();
         for a in get(&root, "artifacts")?.as_arr().unwrap_or_default() {
-            let mut params = Vec::new();
-            for p in get(a, "params")?.as_arr().unwrap_or_default() {
-                params.push(TensorSpec {
-                    name: get(p, "name")?.as_str().unwrap_or("").into(),
-                    shape: usizes(&get(p, "shape")?),
-                });
-            }
-            artifacts.push(ArtifactSpec {
-                name: get(a, "name")?.as_str().unwrap_or("").into(),
-                task: get(a, "task")?.as_str().unwrap_or("").into(),
-                family: get(a, "family")?.as_str().unwrap_or("").into(),
-                kind: get(a, "kind")?.as_str().unwrap_or("").into(),
-                loss: get(a, "loss")?.as_str().unwrap_or("").into(),
-                m_in: get(a, "m_in")?.as_usize().unwrap_or(0),
-                m_out: get(a, "m_out")?.as_usize().unwrap_or(0),
-                hidden: usizes(&get(a, "hidden")?),
-                batch: get(a, "batch")?.as_usize().unwrap_or(0),
-                seq_len: get(a, "seq_len")?.as_usize().unwrap_or(0),
-                optimizer: get(a, "optimizer")?.as_str().unwrap_or("").into(),
-                opt_params: a
-                    .get("opt_params")
-                    .map(OptParams::from_json)
-                    .unwrap_or_default(),
-                ratio: get(a, "ratio")?.as_f64().unwrap_or(0.0),
-                file: get(a, "file")?.as_str().unwrap_or("").into(),
-                opt_slots: get(a, "opt_slots")?.as_usize().unwrap_or(0),
-                decode_d: get(a, "decode_d")?.as_usize().unwrap_or(0),
-                decode_k: get(a, "decode_k")?.as_usize().unwrap_or(0),
-                params,
-            });
+            artifacts.push(ArtifactSpec::from_json(a)?);
         }
 
         let by_name = artifacts
@@ -727,6 +799,28 @@ mod tests {
                             .is_ok(),
                         "{}@{tp}", t.name);
             }
+        }
+    }
+
+    #[test]
+    fn artifact_spec_json_round_trips() {
+        // every field must survive to_json -> serialize -> parse ->
+        // from_json (the artifact subsystem depends on this)
+        let m = Manifest::synthetic(Path::new("/tmp/none"));
+        for spec in [
+            m.artifact("ml_ff_ce_m152_predict").unwrap().clone(),
+            m.artifact("yc_gru_ce_m104_train").unwrap().clone(),
+            m.artifact("ptb_lstm_ce_m200_train").unwrap().clone(),
+            m.artifact("ml_ff_ce_m152_predict_decode_d768_k4")
+                .unwrap()
+                .clone(),
+        ] {
+            let text = spec.to_json().to_string_pretty();
+            let back =
+                ArtifactSpec::from_json(&Json::parse(&text).unwrap())
+                    .unwrap();
+            assert_eq!(format!("{spec:?}"), format!("{back:?}"),
+                       "{} did not round-trip", spec.name);
         }
     }
 

@@ -23,6 +23,10 @@ struct Inner {
     decode_catalog: u64,
     pruned_requests: u64,
     decode_fallbacks: u64,
+    // hot-swap counters (artifact roll observability)
+    swaps_applied: u64,
+    swaps_rejected: u64,
+    sessions_drained: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -46,6 +50,15 @@ pub struct MetricsSnapshot {
     pub decode_fallbacks: u64,
     /// `decode_scored / decode_catalog` (1.0 when nothing was decoded)
     pub scored_frac: f64,
+    /// artifact hot swaps installed on the serving path
+    pub swaps_applied: u64,
+    /// artifact swaps rejected by validation (checksum, schema
+    /// version, shape mismatch) — the old generation kept serving
+    pub swaps_rejected: u64,
+    /// recurrent session states dropped at swap points, summed over
+    /// all applied swaps (each drained session reopens fresh on the
+    /// new model at its next click)
+    pub sessions_drained: u64,
 }
 
 impl Default for ServeMetrics {
@@ -80,6 +93,19 @@ impl ServeMetrics {
         inner.decode_fallbacks += fallbacks;
     }
 
+    /// Record an artifact swap attempt: `applied` swaps count the
+    /// sessions they drained; rejected swaps only bump the rejection
+    /// counter (nothing was installed, nothing drained).
+    pub fn record_swap(&self, applied: bool, drained: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if applied {
+            inner.swaps_applied += 1;
+            inner.sessions_drained += drained as u64;
+        } else {
+            inner.swaps_rejected += 1;
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let inner = self.inner.lock().unwrap();
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -101,6 +127,9 @@ impl ServeMetrics {
             } else {
                 inner.decode_scored as f64 / inner.decode_catalog as f64
             },
+            swaps_applied: inner.swaps_applied,
+            swaps_rejected: inner.swaps_rejected,
+            sessions_drained: inner.sessions_drained,
         }
     }
 }
@@ -140,5 +169,22 @@ mod tests {
         assert_eq!(s.pruned_requests, 3);
         assert_eq!(s.decode_fallbacks, 1);
         assert!((s.scored_frac - 0.65).abs() < 1e-12, "{}", s.scored_frac);
+    }
+
+    #[test]
+    fn swap_counters_accumulate() {
+        let m = ServeMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.swaps_applied, s.swaps_rejected, s.sessions_drained),
+            (0, 0, 0)
+        );
+        m.record_swap(true, 5);
+        m.record_swap(false, 0);
+        m.record_swap(true, 2);
+        let s = m.snapshot();
+        assert_eq!(s.swaps_applied, 2);
+        assert_eq!(s.swaps_rejected, 1);
+        assert_eq!(s.sessions_drained, 7);
     }
 }

@@ -26,6 +26,10 @@
 //! back to per-session `Execution::step`, and executions without any
 //! stepping (PJRT) to stateless window predicts. See
 //! `RecRequest::session`.
+//!
+//! Models roll without downtime: [`Server::swap_artifact`] installs a
+//! validated `bloomrec pack` artifact atomically between flushes (see
+//! the [`server`] module docs), with swap counters in [`ServeMetrics`].
 
 pub mod batcher;
 pub mod metrics;
@@ -33,4 +37,5 @@ pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::ServeMetrics;
-pub use server::{RecRequest, RecResponse, ServeConfig, Server};
+pub use server::{RecRequest, RecResponse, ServeConfig, Server,
+                 SwapReport};

@@ -24,11 +24,23 @@
 //! the per-job Bloom-decode + top-N sweep fans the flush's jobs across
 //! the same pool. Responses are bit-identical to single-threaded
 //! serving — parallelism only moves wall-clock.
+//!
+//! The serving model lives in an immutable [`ModelGeneration`] that
+//! workers pin once per flush, which is what makes zero-downtime
+//! artifact rolls possible: [`Server::swap_artifact`] validates a
+//! packed model (`bloomrec pack`) end to end, then installs it with a
+//! single pointer store between flushes — in-flight flushes finish on
+//! the old weights, every later flush runs on the new ones, and no
+//! batch ever mixes generations. Recurrent session states drain at the
+//! swap point (old hidden states never advance under new weights);
+//! swap outcomes are observable as `swaps_applied` / `swaps_rejected`
+//! / `sessions_drained` in [`ServeMetrics`].
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -112,6 +124,36 @@ struct Job {
     respond: Sender<RecResponse>,
 }
 
+/// One immutable model generation: everything a flush needs — the
+/// compiled execution, its spec, the weights, and the decode
+/// embedding. Workers clone the current generation's `Arc` exactly
+/// once per flush, so a flush runs entirely on one generation *by
+/// construction*; installing a new generation
+/// ([`Server::swap_artifact`]) is a single pointer store between
+/// flushes.
+struct ModelGeneration {
+    exe: Arc<dyn Execution>,
+    spec: ArtifactSpec,
+    state: Arc<ModelState>,
+    emb: Arc<dyn Embedding>,
+    /// session-cache epoch this generation writes under; a put-back
+    /// from a flush that outlived a swap is dropped by the epoch check
+    epoch: u64,
+}
+
+/// Report returned by a successful [`Server::swap_artifact`].
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    /// name of the spec now serving
+    pub spec_name: String,
+    /// recurrent session states dropped at the swap point; each
+    /// affected session reopens fresh on the new model at its next
+    /// request
+    pub sessions_drained: usize,
+    /// git sha stamped into the artifact at pack time
+    pub git_sha: String,
+}
+
 /// One live session: its recurrent hidden state plus the items clicked
 /// so far (the top-N protocol excludes the full history, not just the
 /// current request's clicks).
@@ -132,6 +174,10 @@ struct SessionCache {
     map: HashMap<u64, (SessionEntry, u64)>,
     clock: u64,
     capacity: usize,
+    /// bumped by every hot swap; a `put` stamped with an older epoch
+    /// is dropped, so a flush still running on the outgoing generation
+    /// can never resurrect a hidden state the swap already drained
+    epoch: u64,
 }
 
 impl SessionCache {
@@ -141,14 +187,29 @@ impl SessionCache {
             .and_then(|v| v.parse().ok())
             .unwrap_or(65536usize)
             .max(1);
-        Self { map: HashMap::new(), clock: 0, capacity }
+        Self { map: HashMap::new(), clock: 0, capacity, epoch: 0 }
     }
 
     fn take(&mut self, id: u64) -> Option<SessionEntry> {
         self.map.remove(&id).map(|(entry, _)| entry)
     }
 
-    fn put(&mut self, id: u64, entry: SessionEntry) {
+    /// Drop every live session and open a new epoch (hot swap):
+    /// returns the new epoch and how many sessions were drained.
+    fn advance_epoch(&mut self) -> (u64, usize) {
+        let drained = self.map.len();
+        self.map.clear();
+        self.epoch += 1;
+        (self.epoch, drained)
+    }
+
+    fn put(&mut self, id: u64, entry: SessionEntry, epoch: u64) {
+        if epoch != self.epoch {
+            // the generation that produced this state was swapped out
+            // mid-flight; its session restarts on the new model
+            crate::debug!("dropping stale session {id} (epoch {epoch})");
+            return;
+        }
         self.clock += 1;
         if self.map.len() >= self.capacity {
             // amortized eviction: drop the oldest ~1/8 of sessions in
@@ -176,6 +237,11 @@ pub struct Server {
     in_flight: Arc<AtomicUsize>,
     queue_cap: usize,
     sessions: Arc<Mutex<SessionCache>>,
+    /// runtime the server compiles swapped-in artifact specs against
+    rt: Arc<Runtime>,
+    /// the serving model generation; workers clone it once per flush,
+    /// [`Server::swap_artifact`] replaces it between flushes
+    current: Arc<RwLock<Arc<ModelGeneration>>>,
 }
 
 impl Server {
@@ -235,11 +301,17 @@ impl Server {
     /// ```
     pub fn start(rt: Arc<Runtime>, spec: ArtifactSpec, state: ModelState,
                  emb: Arc<dyn Embedding>, cfg: ServeConfig) -> Result<Server> {
-        let exe = rt.load(&spec.name)?;
+        let exe = rt.load_spec(&spec)?;
         let metrics = Arc::new(ServeMetrics::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
-        let state = Arc::new(state);
         let sessions = Arc::new(Mutex::new(SessionCache::new()));
+        let current = Arc::new(RwLock::new(Arc::new(ModelGeneration {
+            exe,
+            spec,
+            state: Arc::new(state),
+            emb,
+            epoch: 0,
+        })));
 
         // single injector queue; the OS scheduler is the router across
         // replica threads (work-stealing at the queue head)
@@ -249,14 +321,11 @@ impl Server {
 
         let mut workers = Vec::with_capacity(cfg.replicas.max(1));
         for w in 0..cfg.replicas.max(1) {
-            let exe = Arc::clone(&exe);
-            let state = Arc::clone(&state);
-            let emb = Arc::clone(&emb);
+            let current = Arc::clone(&current);
             let metrics = Arc::clone(&metrics);
             let in_flight = Arc::clone(&in_flight);
             let batcher = Arc::clone(&batcher);
             let sessions = Arc::clone(&sessions);
-            let spec = spec.clone();
             let decode = cfg.decode;
             workers.push(std::thread::Builder::new()
                 .name(format!("bloomrec-serve-{w}"))
@@ -268,9 +337,16 @@ impl Server {
                             guard.next_batch()
                         };
                         let Some(jobs) = batch else { break };
+                        // pin the model generation ONCE for the whole
+                        // flush (the read guard is held only for this
+                        // Arc clone): every job below runs on the
+                        // pinned generation, and a concurrent swap
+                        // takes effect at the next flush boundary
+                        let model_gen =
+                            Arc::clone(&*current.read().unwrap());
                         if let Err(e) = Self::serve_batch(
-                            exe.as_ref(), &spec, &state, emb.as_ref(),
-                            &jobs, &metrics, &sessions, decode)
+                            &model_gen, &jobs, &metrics, &sessions,
+                            decode)
                         {
                             crate::error!("serve batch failed: {e}");
                         }
@@ -286,33 +362,35 @@ impl Server {
             in_flight,
             queue_cap: cfg.queue_cap.max(1),
             sessions,
+            rt,
+            current,
         })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn serve_batch(exe: &dyn Execution, spec: &ArtifactSpec,
-                   state: &ModelState, emb: &dyn Embedding, jobs: &[Job],
+    fn serve_batch(model_gen: &ModelGeneration, jobs: &[Job],
                    metrics: &ServeMetrics,
                    sessions: &Mutex<SessionCache>,
                    decode: Option<DecodeStrategy>) -> Result<()> {
+        let exe = model_gen.exe.as_ref();
+        let spec = &model_gen.spec;
         if spec.seq_len > 0 {
             // the stateful path needs a stepping interpreter (native);
             // executions without one (PJRT runs the AOT full-window
             // artifact) fall back to stateless window predicts
             return if exe.supports_batched_stepping() {
-                Self::serve_batch_recurrent(exe, spec, state, emb, jobs,
-                                            metrics, sessions, decode)
+                Self::serve_batch_recurrent(model_gen, jobs, metrics,
+                                            sessions, decode)
             } else if exe.supports_stepping() {
                 Self::serve_batch_recurrent_sequential(
-                    exe, spec, state, emb, jobs, metrics, sessions,
-                    decode)
+                    model_gen, jobs, metrics, sessions, decode)
             } else {
-                Self::serve_batch_window(exe, spec, state, emb, jobs,
-                                         metrics, decode)
+                Self::serve_batch_window(model_gen, jobs, metrics,
+                                         decode)
             };
         }
+        let emb = model_gen.emb.as_ref();
         let x = Self::encode_jobs(exe, spec, emb, jobs);
-        let probs = exe.predict(&state.params, &x)?;
+        let probs = exe.predict(&model_gen.state.params, &x)?;
         Self::respond(jobs, &probs.data, spec, emb, metrics, None,
                       decode);
         Ok(())
@@ -355,10 +433,8 @@ impl Server {
     /// every job at the end, then states scatter back into the cache.
     /// Per-session results are bit-identical to the sequential path —
     /// rows of a batched step are independent.
-    #[allow(clippy::too_many_arguments)]
-    fn serve_batch_recurrent(exe: &dyn Execution, spec: &ArtifactSpec,
-                             state: &ModelState, emb: &dyn Embedding,
-                             jobs: &[Job], metrics: &ServeMetrics,
+    fn serve_batch_recurrent(model_gen: &ModelGeneration, jobs: &[Job],
+                             metrics: &ServeMetrics,
                              sessions: &Mutex<SessionCache>,
                              decode: Option<DecodeStrategy>)
         -> Result<()> {
@@ -374,8 +450,12 @@ impl Server {
         ids.sort_unstable();
         if ids.windows(2).any(|w| w[0] == w[1]) {
             return Self::serve_batch_recurrent_sequential(
-                exe, spec, state, emb, jobs, metrics, sessions, decode);
+                model_gen, jobs, metrics, sessions, decode);
         }
+        let exe = model_gen.exe.as_ref();
+        let spec = &model_gen.spec;
+        let state = model_gen.state.as_ref();
+        let emb = model_gen.emb.as_ref();
         let m_in = spec.m_in;
         let mut entries = Self::checkout_sessions(exe, jobs, sessions)?;
         let rounds = jobs
@@ -435,7 +515,10 @@ impl Server {
             entries.iter().map(|e| e.seen.clone()).collect();
         for (job, entry) in jobs.iter().zip(entries) {
             if let Some(id) = job.request.session {
-                sessions.lock().unwrap().put(id, entry);
+                sessions
+                    .lock()
+                    .unwrap()
+                    .put(id, entry, model_gen.epoch);
             }
         }
         Self::respond(jobs, &out.data, spec, emb, metrics,
@@ -449,12 +532,14 @@ impl Server {
     /// O(k·G·h) incremental path — read the output head out, and check
     /// the session back into the cache. The session's full click
     /// history (not just this request's items) is excluded from top-N.
-    #[allow(clippy::too_many_arguments)]
     fn serve_batch_recurrent_sequential(
-        exe: &dyn Execution, spec: &ArtifactSpec, state: &ModelState,
-        emb: &dyn Embedding, jobs: &[Job], metrics: &ServeMetrics,
-        sessions: &Mutex<SessionCache>,
+        model_gen: &ModelGeneration, jobs: &[Job],
+        metrics: &ServeMetrics, sessions: &Mutex<SessionCache>,
         decode: Option<DecodeStrategy>) -> Result<()> {
+        let exe = model_gen.exe.as_ref();
+        let spec = &model_gen.spec;
+        let state = model_gen.state.as_ref();
+        let emb = model_gen.emb.as_ref();
         let m_in = spec.m_in;
         let m_out = spec.m_out;
         let mut probs = vec![0.0f32; jobs.len() * m_out];
@@ -493,7 +578,10 @@ impl Server {
                 .copy_from_slice(&out.data[..m_out]);
             excludes.push(entry.seen.clone());
             if let Some(id) = job.request.session {
-                sessions.lock().unwrap().put(id, entry);
+                sessions
+                    .lock()
+                    .unwrap()
+                    .put(id, entry, model_gen.epoch);
             }
         }
         Self::respond(jobs, &probs, spec, emb, metrics,
@@ -505,12 +593,14 @@ impl Server {
     /// interface: each request's last `seq_len` clicks become one
     /// left-padded dense window pushed through the full predict. Session
     /// ids are ignored — there is no cross-request state on this path.
-    #[allow(clippy::too_many_arguments)]
-    fn serve_batch_window(exe: &dyn Execution, spec: &ArtifactSpec,
-                          state: &ModelState, emb: &dyn Embedding,
-                          jobs: &[Job], metrics: &ServeMetrics,
+    fn serve_batch_window(model_gen: &ModelGeneration, jobs: &[Job],
+                          metrics: &ServeMetrics,
                           decode: Option<DecodeStrategy>)
         -> Result<()> {
+        let exe = model_gen.exe.as_ref();
+        let spec = &model_gen.spec;
+        let state = model_gen.state.as_ref();
+        let emb = model_gen.emb.as_ref();
         let m = spec.m_in;
         let t_len = spec.seq_len;
         if jobs.len() > spec.batch {
@@ -680,6 +770,92 @@ impl Server {
     /// Number of live session states in the recurrent serving cache.
     pub fn session_count(&self) -> usize {
         self.sessions.lock().unwrap().len()
+    }
+
+    /// Atomically replace the serving model with a packed artifact
+    /// (`bloomrec pack` output). The artifact is fully validated —
+    /// schema version, manifest/payload shape consistency, per-tensor
+    /// and whole-payload sha256 — and its execution compiled *before*
+    /// anything is installed; any failure leaves the current
+    /// generation serving untouched and bumps the `swaps_rejected`
+    /// metric.
+    ///
+    /// The install is a single pointer store under the generation
+    /// lock. Workers pin the generation once per flush, so in-flight
+    /// flushes finish entirely on the old weights and every later
+    /// flush runs entirely on the new ones — no batch ever mixes
+    /// generations. Recurrent session states drain in the same
+    /// critical section (counted in the report and the
+    /// `sessions_drained` metric): a hidden state advanced by the old
+    /// weights is never resumed under the new ones, and a put-back
+    /// from a still-running old-generation flush dies on the session
+    /// cache's epoch check.
+    pub fn swap_artifact(&self, dir: &Path) -> Result<SwapReport> {
+        match self.validate_and_swap(dir) {
+            Ok(report) => {
+                self.metrics.record_swap(true, report.sessions_drained);
+                crate::info!(
+                    "hot-swapped artifact {} in ({}; {} sessions \
+                     drained)",
+                    dir.display(), report.spec_name,
+                    report.sessions_drained);
+                Ok(report)
+            }
+            Err(e) => {
+                self.metrics.record_swap(false, 0);
+                crate::warn_!("rejected artifact swap from {}: {e}",
+                              dir.display());
+                Err(e)
+            }
+        }
+    }
+
+    fn validate_and_swap(&self, dir: &Path) -> Result<SwapReport> {
+        let loaded = crate::artifact::load(dir)?;
+        let exe = self.rt.load_spec(&loaded.spec)?;
+        let emb = match loaded.embedding() {
+            Some(emb) => emb,
+            None => {
+                // artifact without a Bloom config: keep the serving
+                // embedding, but only if the wires line up
+                let cur = Arc::clone(&*self.current.read().unwrap());
+                if cur.emb.m_in() != loaded.spec.m_in
+                    || cur.emb.m_out() != loaded.spec.m_out
+                {
+                    bail!(
+                        "artifact {} carries no Bloom hash config and \
+                         its wires ({}, {}) do not match the serving \
+                         embedding's ({}, {})",
+                        dir.display(), loaded.spec.m_in,
+                        loaded.spec.m_out, cur.emb.m_in(),
+                        cur.emb.m_out());
+                }
+                Arc::clone(&cur.emb)
+            }
+        };
+        let spec_name = loaded.spec.name.clone();
+        let git_sha = loaded.provenance.git_sha.clone();
+        let state = Arc::new(loaded.state);
+        // nothing above touched the serving path; install now. Lock
+        // order (generation write lock, then session lock) cannot
+        // deadlock with workers: they hold the generation read guard
+        // only for the per-flush Arc clone and take the session lock
+        // separately, never both at once.
+        let drained;
+        {
+            let mut slot = self.current.write().unwrap();
+            let mut cache = self.sessions.lock().unwrap();
+            let (epoch, n) = cache.advance_epoch();
+            drained = n;
+            *slot = Arc::new(ModelGeneration {
+                exe,
+                spec: loaded.spec,
+                state,
+                emb,
+                epoch,
+            });
+        }
+        Ok(SwapReport { spec_name, sessions_drained: drained, git_sha })
     }
 
     /// Stop accepting requests and join the workers.

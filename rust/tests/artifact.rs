@@ -1,0 +1,323 @@
+//! Artifact round-trip property suite: train → pack → load must be
+//! bit-identical — weights, hash tables, predictions, and top-N
+//! decodes — for every model family (ff/gru/lstm), both losses, and
+//! random wire shapes. Corrupt artifacts (flipped bytes, truncation,
+//! schema bumps, shape lies) must be rejected with a useful error
+//! before a single weight is used.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use bloomrec::artifact::{self, MANIFEST_FILE, PAYLOAD_FILE};
+use bloomrec::bloom::{DecodeScratch, HashMatrix};
+use bloomrec::embedding::{Bloom, Embedding};
+use bloomrec::model::ModelState;
+use bloomrec::runtime::{test_ff_spec, test_rnn_spec, ArtifactSpec,
+                        BatchInput, BatchTarget, HostTensor, Runtime};
+use bloomrec::util::json::Json;
+use bloomrec::util::rng::Rng;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "bloomrec_artifact_test_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn runtime() -> Runtime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::native(&dir).expect("native runtime")
+}
+
+fn random_tensor(shape: &[usize], rng: &mut Rng) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::from_vec(shape, (0..n).map(|_| rng.f32()).collect())
+}
+
+/// Random multi-hot-ish target with at least one hot position per row
+/// (keeps the cosine loss away from zero-norm rows).
+fn random_target(shape: &[usize], rng: &mut Rng) -> HostTensor {
+    let (rows, cols) = (shape[0], shape[1]);
+    let mut t = HostTensor::zeros(shape);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.bool(0.2) {
+                t.data[r * cols + c] = 1.0;
+            }
+        }
+        t.data[r * cols + rng.below(cols)] = 1.0;
+    }
+    t
+}
+
+/// Train a small model of the given family/loss on random data with
+/// randomized wire shapes, and return the predict-kind spec, the
+/// trained weights, and a Bloom config matching the wire.
+fn trained_case(rt: &Runtime, family: &str, loss: &str, seed: u64)
+    -> (ArtifactSpec, ModelState, Bloom) {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37) ^ 0xA57);
+    let m_in = 12 + rng.below(24);
+    let m_out = 12 + rng.below(24);
+    let batch = 2 + rng.below(3);
+    let mut train = if family == "ff" {
+        let hidden = [6 + rng.below(10)];
+        test_ff_spec(m_in, &hidden, m_out, batch)
+    } else {
+        let hidden = 8 + rng.below(8);
+        let seq_len = 2 + rng.below(3);
+        test_rnn_spec(family, m_in, hidden, m_out, batch, seq_len)
+    };
+    train.name = format!("art_{family}_{loss}_{seed}");
+    train.loss = loss.to_string();
+    let mut predict = train.clone();
+    predict.kind = "predict".to_string();
+    predict.opt_slots = 0;
+    predict.name = format!("{}_predict", train.name);
+
+    let exe = rt.load_spec(&train).expect("train execution");
+    let mut state = ModelState::init(&train, &mut rng);
+    for _ in 0..3 {
+        let x = random_tensor(&train.x_shape(), &mut rng);
+        let y = random_target(&train.y_shape(), &mut rng);
+        exe.train_step_sharded(&mut state, &BatchInput::Dense(x),
+                               &BatchTarget::Dense(y), 0)
+            .expect("train step");
+    }
+
+    // a catalog over both wires; separate in/out tables exercise the
+    // dual-segment path
+    let d = 4 * m_in.max(m_out);
+    let hm_in = HashMatrix::random(d, m_in, 3, &mut rng);
+    let hm_out = HashMatrix::random(d, m_out, 3, &mut rng);
+    (predict, state, Bloom::new(hm_in, Some(hm_out)))
+}
+
+/// The tentpole property: for every family × loss × seed, a packed and
+/// reloaded model is indistinguishable from the in-memory one — same
+/// weight bits, same hash tables, same predict outputs, same top-N
+/// decode — without rerunning training.
+#[test]
+fn round_trip_is_bit_identical_across_families_and_losses() {
+    let rt = runtime();
+    for family in ["ff", "gru", "lstm"] {
+        for loss in ["softmax_ce", "cosine"] {
+            for seed in [1u64, 2] {
+                let tag = format!("rt_{family}_{loss}_{seed}");
+                let dir = tmp(&tag);
+                let (predict, state, bloom) =
+                    trained_case(&rt, family, loss, seed);
+                artifact::pack(&dir, &predict, &state, Some(&bloom))
+                    .expect("pack");
+                let loaded = artifact::load(&dir).expect("load");
+
+                // 1. weights round-trip bitwise
+                assert_eq!(loaded.state.params.len(), state.params.len());
+                for (a, b) in loaded.state.params.iter()
+                    .zip(&state.params) {
+                    assert_eq!(a.shape, b.shape, "{tag}");
+                    assert_eq!(a.data, b.data,
+                               "{tag}: weights must be bit-identical");
+                }
+
+                // 2. hash tables round-trip exactly
+                let hin = loaded.hash_in.as_ref().expect("input table");
+                let hout = loaded.hash_out.as_ref().expect("output table");
+                assert_eq!(hin.h, bloom.hm_in.h, "{tag}");
+                let bout = bloom.hm_out.as_ref().unwrap();
+                assert_eq!(hout.h, bout.h, "{tag}");
+                assert_eq!((hout.d, hout.m, hout.k),
+                           (bout.d, bout.m, bout.k), "{tag}");
+
+                // 3. predictions are bit-identical through the packed
+                //    spec (loaded.spec compiles its own execution)
+                let exe_a = rt.load_spec(&predict).expect("exe a");
+                let exe_b = rt.load_spec(&loaded.spec).expect("exe b");
+                let mut rng = Rng::new(seed ^ 0xF00D);
+                let x = random_tensor(&predict.x_shape(), &mut rng);
+                let out_a = exe_a
+                    .predict(&state.params, &BatchInput::Dense(x.clone()))
+                    .expect("predict a");
+                let out_b = exe_b
+                    .predict(&loaded.state.params, &BatchInput::Dense(x))
+                    .expect("predict b");
+                assert_eq!(out_a.shape, out_b.shape, "{tag}");
+                assert_eq!(out_a.data, out_b.data,
+                           "{tag}: predictions must be bit-identical");
+
+                // 4. top-N decode agrees item-for-item, score-for-score
+                let emb_b = loaded.embedding().expect("embedding");
+                let row = &out_a.data[..predict.m_out];
+                let excl: &[u32] = &[0, 3];
+                let (mut sc_a, mut sc_b) =
+                    (DecodeScratch::new(), DecodeScratch::new());
+                let (mut top_a, mut top_b) = (Vec::new(), Vec::new());
+                bloom.decode_top_n_into(row, excl, 5, None, &mut sc_a,
+                                        &mut top_a);
+                emb_b.decode_top_n_into(row, excl, 5, None, &mut sc_b,
+                                        &mut top_b);
+                assert_eq!(top_a, top_b,
+                           "{tag}: decode_top_n must be bit-identical");
+                let _ = fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn flipped_payload_byte_is_rejected_before_use() {
+    let rt = runtime();
+    let dir = tmp("corrupt_flip");
+    let (predict, state, bloom) = trained_case(&rt, "ff", "softmax_ce", 7);
+    artifact::pack(&dir, &predict, &state, Some(&bloom)).expect("pack");
+    let p = dir.join(PAYLOAD_FILE);
+    let orig = fs::read(&p).unwrap();
+    // a flip anywhere — first byte, a middle weight, the hash-table
+    // tail — must fail the checksum gate
+    for pos in [0, orig.len() / 2, orig.len() - 1] {
+        let mut bytes = orig.clone();
+        bytes[pos] ^= 0x80;
+        fs::write(&p, &bytes).unwrap();
+        let err = artifact::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("checksum"),
+                "byte {pos}: {err}");
+    }
+    fs::write(&p, &orig).unwrap();
+    assert!(artifact::load(&dir).is_ok(), "restored payload loads");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bumped_schema_version_is_rejected_with_version_error() {
+    let rt = runtime();
+    let dir = tmp("corrupt_schema");
+    let (predict, state, bloom) = trained_case(&rt, "ff", "softmax_ce", 8);
+    artifact::pack(&dir, &predict, &state, Some(&bloom)).expect("pack");
+    let mpath = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&mpath).unwrap();
+    assert!(text.contains("\"schema_version\": 1"), "pretty format moved");
+    fs::write(&mpath,
+              text.replace("\"schema_version\": 1",
+                           "\"schema_version\": 999"))
+        .unwrap();
+    let err = artifact::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("schema version"), "{err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_payload_is_rejected_cleanly() {
+    let rt = runtime();
+    let dir = tmp("corrupt_trunc");
+    let (predict, state, bloom) = trained_case(&rt, "gru", "softmax_ce", 9);
+    artifact::pack(&dir, &predict, &state, Some(&bloom)).expect("pack");
+    let p = dir.join(PAYLOAD_FILE);
+    let orig = fs::read(&p).unwrap();
+    for cut in [0, 1, orig.len() / 3, orig.len() - 1] {
+        fs::write(&p, &orig[..cut]).unwrap();
+        // must be a clean error — no panic, no partial load
+        let err = artifact::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("truncated"),
+                "cut {cut}: {err}");
+    }
+    // a payload that GREW is just as invalid
+    let mut grown = orig.clone();
+    grown.extend_from_slice(&[0u8; 16]);
+    fs::write(&p, &grown).unwrap();
+    assert!(artifact::load(&dir).is_err());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_payload_shape_mismatch_is_an_error_not_ub() {
+    let rt = runtime();
+    let dir = tmp("corrupt_shape");
+    let (predict, state, bloom) = trained_case(&rt, "ff", "cosine", 10);
+    artifact::pack(&dir, &predict, &state, Some(&bloom)).expect("pack");
+    let mpath = dir.join(MANIFEST_FILE);
+    let pristine = fs::read_to_string(&mpath).unwrap();
+
+    // (a) a tensor segment whose shape disagrees with the spec
+    let mut root = Json::parse(&pristine).unwrap();
+    let lie = Json::Arr(vec![Json::from(1usize), Json::from(1usize)]);
+    if let Json::Obj(m) = &mut root {
+        let Some(Json::Arr(tensors)) = m.get_mut("tensors") else {
+            panic!("manifest lost its tensors")
+        };
+        let Json::Obj(seg) = &mut tensors[0] else {
+            panic!("segment is not an object")
+        };
+        seg.insert("shape".to_string(), lie.clone());
+    }
+    fs::write(&mpath, root.to_string_pretty()).unwrap();
+    let err = artifact::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("does not match spec"), "{err}");
+
+    // (b) spec AND segment lie consistently — caught against the
+    //     payload byte count instead (shape mismatch, never a bad read)
+    let mut root = Json::parse(&pristine).unwrap();
+    if let Json::Obj(m) = &mut root {
+        if let Some(Json::Arr(tensors)) = m.get_mut("tensors") {
+            if let Json::Obj(seg) = &mut tensors[0] {
+                seg.insert("shape".to_string(), lie.clone());
+            }
+        }
+        if let Some(Json::Obj(spec)) = m.get_mut("spec") {
+            if let Some(Json::Arr(params)) = spec.get_mut("params") {
+                if let Json::Obj(p0) = &mut params[0] {
+                    p0.insert("shape".to_string(), lie);
+                }
+            }
+        }
+    }
+    fs::write(&mpath, root.to_string_pretty()).unwrap();
+    let err = artifact::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("shape mismatch"), "{err}");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_or_foreign_files_are_rejected() {
+    let rt = runtime();
+    let dir = tmp("corrupt_missing");
+    let (predict, state, bloom) = trained_case(&rt, "ff", "softmax_ce", 11);
+    artifact::pack(&dir, &predict, &state, Some(&bloom)).expect("pack");
+
+    // payload gone
+    fs::remove_file(dir.join(PAYLOAD_FILE)).unwrap();
+    assert!(artifact::load(&dir).is_err(), "missing payload must fail");
+
+    // a stray JSON file is not an artifact manifest
+    fs::write(dir.join(MANIFEST_FILE), "{\"batch\": 64}").unwrap();
+    let err = artifact::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("not a bloomrec artifact"), "{err}");
+
+    // no directory at all
+    assert!(artifact::load(Path::new("/nonexistent/bloomrec")).is_err());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Packing validates against the spec BEFORE writing: a weight set
+/// from a different architecture never produces an artifact.
+#[test]
+fn pack_rejects_mismatched_state() {
+    let rt = runtime();
+    let dir = tmp("pack_reject");
+    let (predict, state, bloom) = trained_case(&rt, "ff", "softmax_ce", 12);
+
+    let mut wrong_shape = state.clone();
+    wrong_shape.params[0] = HostTensor::zeros(&[1, 1]);
+    let err = artifact::pack(&dir, &predict, &wrong_shape, Some(&bloom))
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+
+    let mut fewer = state.clone();
+    fewer.params.pop();
+    let err = artifact::pack(&dir, &predict, &fewer, Some(&bloom))
+        .unwrap_err();
+    assert!(err.to_string().contains("tensors"), "{err}");
+
+    assert!(!dir.join(MANIFEST_FILE).exists(),
+            "rejected pack must not leave files behind");
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -54,10 +54,17 @@ fn fixture() -> Option<Fixture> {
 
 /// Ground-truth top-N computed directly (no server, batch of 1).
 fn direct_top_n(f: &Fixture, items: &[u32], n: usize) -> Vec<usize> {
+    direct_top_n_for(f, &f.state, items, n)
+}
+
+/// Ground truth against an explicit weight set — lets the hot-swap
+/// tests compare one query under two model generations.
+fn direct_top_n_for(f: &Fixture, state: &bloomrec::model::ModelState,
+                    items: &[u32], n: usize) -> Vec<usize> {
     let exe = f.rt.load(&f.predict.name).unwrap();
     let mut x = HostTensor::zeros(&f.predict.x_shape());
     f.emb.encode_input(items, &mut x.data[..f.predict.m_in]);
-    let mut inputs: Vec<&HostTensor> = f.state.params.iter().collect();
+    let mut inputs: Vec<&HostTensor> = state.params.iter().collect();
     inputs.push(&x);
     let out = exe.run(&inputs, &[]).unwrap();
     let mut scores =
@@ -422,6 +429,176 @@ fn pruned_decode_strategy_serves_and_counts() {
     assert!(snap.decode_scored >= snap.pruned_requests);
     assert!(snap.decode_catalog >= snap.decode_scored);
     server.shutdown();
+}
+
+/// Swap a packed artifact under live stateless load. Every response —
+/// including those straddling the swap — must match exactly one model
+/// generation's direct computation (no lost and no mixed-model
+/// responses), requests submitted after the swap must deterministically
+/// see the new weights, a corrupt artifact must be rejected without
+/// disturbing serving, and the whole roll must be visible in the
+/// metrics counters.
+#[test]
+fn hot_swap_under_load_is_atomic_and_observable() {
+    use bloomrec::artifact;
+    use bloomrec::model::ModelState;
+    use bloomrec::util::rng::Rng;
+
+    let Some(f) = fixture() else { return };
+    // model B: same architecture, fresh random weights — rankings
+    // differ from the trained model A on essentially every query
+    let state_b = ModelState::init(&f.predict, &mut Rng::new(4242));
+    let dir = std::env::temp_dir().join(format!(
+        "bloomrec_swap_ff_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let bloom = f.emb.as_bloom().expect("serving embedding is Bloom");
+    artifact::pack(&dir, &f.predict, &state_b, Some(bloom)).expect("pack");
+
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    let queries: Vec<Vec<u32>> = f.ds.test.iter().take(30)
+        .map(|e| e.input_items().to_vec())
+        .collect();
+    let want_a: Vec<Vec<usize>> = queries.iter()
+        .map(|q| direct_top_n_for(&f, &f.state, q, 5)).collect();
+    let want_b: Vec<Vec<usize>> = queries.iter()
+        .map(|q| direct_top_n_for(&f, &state_b, q, 5)).collect();
+    assert!(want_a != want_b,
+            "fresh random weights must rank differently somewhere");
+
+    // wave 1: settled on model A
+    let rxs: Vec<_> = queries.iter()
+        .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let got: Vec<usize> =
+            rx.recv().expect("resp").items.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, want_a[i], "pre-swap response must be model A");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!((snap.swaps_applied, snap.swaps_rejected), (0, 0));
+
+    // straddle: requests in flight on both sides of the swap
+    let before: Vec<_> = queries.iter()
+        .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+        .collect();
+    let report = server.swap_artifact(&dir).expect("swap accepted");
+    assert_eq!(report.spec_name, f.predict.name);
+    assert_eq!(report.sessions_drained, 0, "stateless load: no sessions");
+    let after: Vec<_> = queries.iter()
+        .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+        .collect();
+    for (i, rx) in before.into_iter().enumerate() {
+        let got: Vec<usize> =
+            rx.recv().expect("resp").items.iter().map(|&(i, _)| i).collect();
+        assert!(got == want_a[i] || got == want_b[i],
+                "straddling response mixed models for query {i}: {got:?}");
+    }
+    for (i, rx) in after.into_iter().enumerate() {
+        let got: Vec<usize> =
+            rx.recv().expect("resp").items.iter().map(|&(i, _)| i).collect();
+        // the flush serving this job was collected after the swap, so
+        // it pinned the new generation — deterministically model B
+        assert_eq!(got, want_b[i], "post-swap response must be model B");
+    }
+
+    // settled on model B
+    let rxs: Vec<_> = queries.iter()
+        .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let got: Vec<usize> =
+            rx.recv().expect("resp").items.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, want_b[i]);
+    }
+
+    // a corrupt artifact is rejected and serving stays on model B
+    let p = dir.join(artifact::PAYLOAD_FILE);
+    let mut bytes = std::fs::read(&p).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&p, &bytes).unwrap();
+    let err = server.swap_artifact(&dir).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+    let got: Vec<usize> = server
+        .recommend(RecRequest::new(queries[0].clone(), 5))
+        .items.iter().map(|&(i, _)| i).collect();
+    assert_eq!(got, want_b[0], "rejected swap must not disturb serving");
+
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.swaps_applied, 1);
+    assert_eq!(snap.swaps_rejected, 1);
+    assert_eq!(snap.sessions_drained, 0);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Swapping under a recurrent server drains the per-session hidden
+/// states: the counters report the drain, and a drained session
+/// restarts fresh on the new generation (identical to a brand-new
+/// session) instead of resuming an old-model hidden state.
+#[test]
+fn hot_swap_drains_recurrent_sessions() {
+    use bloomrec::artifact;
+
+    let Some(f) = recurrent_fixture() else { return };
+    let dir = std::env::temp_dir().join(format!(
+        "bloomrec_swap_rnn_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // pack the SAME weights: the swap still drains sessions (the old
+    // hidden states are not portable across generations by contract)
+    let bloom = f.emb.as_bloom().expect("serving embedding is Bloom");
+    artifact::pack(&dir, &f.predict, &f.state, Some(bloom)).expect("pack");
+
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    let clicks: Vec<u32> = f.ds.test.iter()
+        .flat_map(|e| e.input_items().iter().copied())
+        .filter(|&i| i != PAD)
+        .take(6)
+        .collect();
+    assert_eq!(clicks.len(), 6, "need 6 clicks from the tiny split");
+    for (sid, &click) in clicks.iter().enumerate() {
+        server.recommend(RecRequest::session(sid as u64 + 1,
+                                             vec![click], 5));
+    }
+    assert_eq!(server.session_count(), 6);
+
+    let report = server.swap_artifact(&dir).expect("swap accepted");
+    assert_eq!(report.sessions_drained, 6);
+    assert_eq!(server.session_count(), 0, "cache drained at the swap");
+
+    // session 1 "continues" after the drain — it must behave exactly
+    // like a brand-new session on the new generation
+    let cont = server.recommend(RecRequest::session(1, vec![clicks[3]], 5));
+    let fresh = server.recommend(RecRequest::session(99, vec![clicks[3]], 5));
+    assert_eq!(cont.items, fresh.items,
+               "drained session must restart fresh, not resume old state");
+
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.swaps_applied, 1);
+    assert_eq!(snap.swaps_rejected, 0);
+    assert_eq!(snap.sessions_drained, 6);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
