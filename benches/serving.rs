@@ -20,7 +20,12 @@
 //! 7. the artifact subsystem (`bloomrec pack` / `serve --artifact`):
 //!    pack/load latency and on-disk bytes per model at Bloom ratios
 //!    m/d ∈ {1, 1/2, 1/5} — the shipped footprint follows the paper's
-//!    compression curve since f32 weights dominate the payload.
+//!    compression curve since f32 weights dominate the payload;
+//! 8. replica-scaling under the Zipf load harness: sustained QPS of
+//!    closed-loop million-user click traffic at replicas ∈ {1, 2, 4}
+//!    with the kernel pool pinned to one thread, so replica count is
+//!    the only parallelism knob (acceptance: >= 2x QPS at 4 replicas
+//!    vs 1 when the host has >= 4 cores), against a 50 ms p99 budget.
 //!
 //! Results are printed and written to BENCH_serving.json at the repo
 //! root (overwritten per run; the PR-over-PR trajectory lives in git
@@ -89,6 +94,8 @@ fn main() {
                     &mut json_sections);
     server_sweep(&rt, &predict_spec, &state, &emb, &ds, ratio, k,
                  &mut json_sections);
+    load_bench(&rt, &predict_spec, &state, &emb, &ds,
+               &mut json_sections);
     recurrent_bench(&mut json_sections);
     gemm_bench(&mut json_sections);
     batched_step_bench(&mut json_sections);
@@ -792,6 +799,96 @@ fn server_sweep(rt: &Arc<Runtime>,
         }
     }
     json.push(format!("  \"server\": [\n{}\n  ]", rows.join(",\n")));
+}
+
+/// Replica scaling under the Zipf load harness: closed-loop clients
+/// replaying million-user click traffic (one request per click, under
+/// the stateful session protocol, so the router's affine dispatch is
+/// on the hot path) against tiers of 1, 2 and 4 replicas. The global
+/// kernel pool is pinned to ONE thread for the whole section — inner
+/// GEMM parallelism would otherwise eat the cores the extra replicas
+/// are supposed to use, and the point of the section is that replica
+/// count alone scales sustained QPS. Acceptance (asserted when the
+/// host has >= 4 cores): 4 replicas sustain >= 2x the 1-replica QPS.
+/// Each row also records whether p99 stayed within the 50 ms serving
+/// budget at that replica count.
+fn load_bench(rt: &Arc<Runtime>,
+              predict_spec: &bloomrec::runtime::ArtifactSpec,
+              state: &ModelState,
+              emb: &Arc<dyn bloomrec::embedding::Embedding>,
+              ds: &bloomrec::data::Dataset,
+              json: &mut Vec<String>) {
+    use bloomrec::serve::{run_load, LoadConfig};
+    let p99_budget_ms = 50.0;
+    println!("\n-- Zipf load harness: replica scaling (1M users, \
+              kernel pool pinned to 1 thread) --");
+    WorkerPool::set_global_threads(1);
+    let mut rng = Rng::new(53);
+    let pool = bloomrec::data::sequences::generate_serve_sessions(
+        ds.d, 1024, 8, &mut rng);
+    let mut rows = Vec::new();
+    let mut qps_by_replicas = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let server = Server::start(
+            Arc::clone(rt), predict_spec.clone(), state.clone(),
+            Arc::clone(emb),
+            ServeConfig {
+                replicas,
+                batcher: BatcherConfig {
+                    max_batch: 64,
+                    // greedy zero-wait flushing: latency is compute,
+                    // not deadline timers
+                    max_wait: Duration::ZERO,
+                },
+                ..ServeConfig::default()
+            })
+            .expect("server");
+        let cfg = LoadConfig {
+            concurrency: 16,
+            duration: Duration::from_millis(1500),
+            stateful: true,
+            seed: 7,
+            ..LoadConfig::default()
+        };
+        let rep = run_load(&server, &pool, &cfg);
+        assert_eq!(rep.completed, rep.sent,
+                   "load harness dropped responses at {replicas} \
+                    replicas");
+        assert_eq!(rep.failed, 0,
+                   "flush failures at {replicas} replicas");
+        let within = rep.p99_ms <= p99_budget_ms;
+        println!("   replicas={replicas}: {:.0} req/s sustained, \
+                  p50={:.2}ms p95={:.2}ms p99={:.2}ms (budget \
+                  {p99_budget_ms:.0}ms: {}), degraded={}",
+                 rep.qps, rep.p50_ms, rep.p95_ms, rep.p99_ms,
+                 if within { "ok" } else { "MISS" }, rep.degraded);
+        rows.push(format!(
+            "    {{\"replicas\": {replicas}, \"qps\": {:.0}, \
+             \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"p99_budget_ms\": {p99_budget_ms}, \
+             \"within_budget\": {within}, \"degraded\": {}, \
+             \"completed\": {}}}",
+            rep.qps, rep.p50_ms, rep.p95_ms, rep.p99_ms, rep.degraded,
+            rep.completed));
+        qps_by_replicas.push((replicas, rep.qps));
+        server.shutdown();
+    }
+    WorkerPool::set_global_threads(0);
+
+    let q1 = qps_by_replicas[0].1;
+    let q4 = qps_by_replicas[2].1;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 4 {
+        assert!(q4 >= 2.0 * q1,
+                "replica scaling failed: {q4:.0} qps at 4 replicas vs \
+                 {q1:.0} at 1 ({cores} cores)");
+    } else {
+        println!("   ({cores} cores: skipping the 4-vs-1 replica \
+                  scaling assertion)");
+    }
+    json.push(format!("  \"load\": [\n{}\n  ]", rows.join(",\n")));
 }
 
 /// The artifact subsystem at the paper's compression points: pack and

@@ -26,6 +26,15 @@ pub struct Options {
     /// serve from a packed model artifact directory (`--artifact DIR`,
     /// see `bloomrec pack`) instead of training at startup
     pub artifact: Option<PathBuf>,
+    /// serving replica count override (`--replicas N`); `None` defers
+    /// to `BLOOMREC_REPLICAS` / the `ServeConfig` default
+    pub replicas: Option<usize>,
+    /// run the Zipf load harness for this many seconds instead of the
+    /// test-split replay (`serve --load SECS`)
+    pub load: Option<f64>,
+    /// closed-loop client threads for the load harness
+    /// (`--concurrency N`)
+    pub concurrency: usize,
 }
 
 impl Default for Options {
@@ -40,6 +49,9 @@ impl Default for Options {
             top_n: 10,
             decode: None,
             artifact: None,
+            replicas: None,
+            load: None,
+            concurrency: 32,
         }
     }
 }
@@ -96,6 +108,30 @@ impl Options {
                 }
                 "--artifact" => {
                     opts.artifact = Some(PathBuf::from(req(&mut it, arg)?));
+                }
+                "--replicas" => {
+                    let n: usize = req(&mut it, arg)?.parse()
+                        .map_err(|e| anyhow!("bad --replicas: {e}"))?;
+                    if n == 0 {
+                        bail!("--replicas needs at least 1");
+                    }
+                    opts.replicas = Some(n);
+                }
+                "--load" => {
+                    let secs: f64 = req(&mut it, arg)?.parse()
+                        .map_err(|e| anyhow!("bad --load: {e}"))?;
+                    if !(secs > 0.0) {
+                        bail!("--load needs a positive duration (secs)");
+                    }
+                    opts.load = Some(secs);
+                }
+                "--concurrency" => {
+                    let n: usize = req(&mut it, arg)?.parse()
+                        .map_err(|e| anyhow!("bad --concurrency: {e}"))?;
+                    if n == 0 {
+                        bail!("--concurrency needs at least 1");
+                    }
+                    opts.concurrency = n;
                 }
                 _ if arg.starts_with("--") => bail!("unknown flag {arg}"),
                 _ => positional.push(arg.clone()),

@@ -6,7 +6,7 @@
 //! Zipf emissions (low-rank bigram structure); sessions use shorter,
 //! topic-coherent click streams with re-click noise.
 
-use super::zipf::TopicModel;
+use super::zipf::{TopicModel, ZipfStream};
 use super::{Dataset, Example, Input, Target, PAD};
 use crate::util::rng::Rng;
 
@@ -126,6 +126,38 @@ pub fn generate_serve_sessions(d: usize, n: usize, max_len: usize,
         .collect()
 }
 
+/// Million-item variant of [`generate_serve_sessions`] for the load
+/// harness: clicks are Zipf-popular draws from a [`ZipfStream`]
+/// (rejection-inversion, O(1) memory per draw) instead of the topic
+/// model, whose per-topic permutations cost O(topics·d) memory — at
+/// d = 1M that is hundreds of megabytes, where this generator holds
+/// three floats. Sessions keep the same shape (length 2..=max_len,
+/// 15% re-click noise) but trade topical co-occurrence for pure
+/// popularity skew — fine for load generation, where the server's
+/// cost per click does not depend on which item it is.
+pub fn generate_zipf_sessions(d: usize, n: usize, max_len: usize,
+                              s: f64, rng: &mut Rng) -> Vec<Vec<u32>> {
+    assert!(max_len >= 2);
+    let stream = ZipfStream::new(d, s);
+    (0..n)
+        .map(|_| {
+            let len = 2 + rng.below(max_len - 1);
+            let mut session = Vec::with_capacity(len);
+            let mut last = stream.sample(rng) as u32;
+            session.push(last);
+            for _ in 1..len {
+                last = if rng.bool(0.15) {
+                    last
+                } else {
+                    stream.sample(rng) as u32
+                };
+                session.push(last);
+            }
+            session
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +232,32 @@ mod tests {
         // some length diversity
         assert!(sessions.iter().any(|s| s.len() == 2));
         assert!(sessions.iter().any(|s| s.len() > 5));
+    }
+
+    #[test]
+    fn zipf_sessions_scale_to_huge_catalogs() {
+        let mut rng = Rng::new(7);
+        // a million-item catalog: the topic model would materialize
+        // permutations here; the stream generator stays O(1)
+        let sessions =
+            generate_zipf_sessions(1_000_000, 300, 8, 1.1, &mut rng);
+        assert_eq!(sessions.len(), 300);
+        let mut head_hits = 0usize;
+        let mut total = 0usize;
+        for s in &sessions {
+            assert!(s.len() >= 2 && s.len() <= 8, "len {}", s.len());
+            for &i in s {
+                assert!((i as usize) < 1_000_000);
+                total += 1;
+                if (i as usize) < 100 {
+                    head_hits += 1;
+                }
+            }
+        }
+        // Zipf skew: the 100-item head (1e-4 of the catalog) draws far
+        // more than its uniform share of clicks
+        assert!(head_hits * 100 > total,
+                "head {head_hits} of {total} clicks");
     }
 
     #[test]

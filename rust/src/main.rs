@@ -65,7 +65,10 @@ fn print_usage() {
          FLAGS: --artifacts DIR --out DIR --scale tiny|small|full\n       \
          --seeds 1,2,3 --epochs N --tasks ml,msd --top-n N\n       \
          --decode exhaustive|pruned|pruned:P,C  (serve decode route)\n       \
-         --artifact DIR  (serve from a packed artifact, skip training)",
+         --artifact DIR  (serve from a packed artifact, skip training)\n       \
+         --replicas N    (serving replicas; default BLOOMREC_REPLICAS)\n       \
+         --load SECS --concurrency N  (Zipf load harness instead of\n       \
+                                       the test-split replay)",
         experiments::ALL
     );
 }
@@ -175,15 +178,59 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
         (sm.spec, sm.state, sm.emb)
     };
 
-    // serve a synthetic workload from test-split user profiles; for
-    // recurrent tasks, replay each test window as a live session —
-    // one request per click, threaded through the server's per-session
-    // hidden-state cache
+    let mut cfg = ServeConfig {
+        decode: opts.decode,
+        ..ServeConfig::default()
+    };
+    if let Some(r) = opts.replicas {
+        cfg.replicas = r;
+    }
     let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
-                               ServeConfig {
-                                   decode: opts.decode,
-                                   ..ServeConfig::default()
-                               })?;
+                               cfg)?;
+
+    // `--load SECS`: drive the replica tier with the Zipf harness
+    // instead of replaying the test split
+    if let Some(secs) = opts.load {
+        use bloomrec::serve::{run_load, LoadConfig};
+        let mut rng = bloomrec::util::rng::Rng::new(opts.seeds[0]);
+        // click pool sized to the catalog: topical sessions where the
+        // topic model is affordable, raw Zipf draws for huge catalogs
+        let pool = if task.d > 100_000 {
+            bloomrec::data::sequences::generate_zipf_sessions(
+                task.d, 4096, 8, 1.05, &mut rng)
+        } else {
+            bloomrec::data::sequences::generate_serve_sessions(
+                task.d, 4096, 8, &mut rng)
+        };
+        let lcfg = LoadConfig {
+            concurrency: opts.concurrency,
+            duration: std::time::Duration::from_secs_f64(secs),
+            stateful: recurrent,
+            top_n: opts.top_n,
+            seed: opts.seeds[0],
+            snapshot_every: Some(std::time::Duration::from_secs(1)),
+            ..LoadConfig::default()
+        };
+        info!("load: {} replicas, {} clients, {:.1}s{}",
+              server.router().replica_count(), lcfg.concurrency, secs,
+              if recurrent { " (stateful sessions)" } else { "" });
+        let rep = run_load(&server, &pool, &lcfg);
+        let snap = server.metrics.snapshot();
+        println!(
+            "load: {:.0} req/s sustained over {:.1}s\n\
+             requests: sent={} completed={} failed={} degraded={}\n\
+             latency ms: p50={:.2} p95={:.2} p99={:.2}\n\
+             queue depths at end: {:?}",
+            rep.qps, rep.elapsed.as_secs_f64(),
+            rep.sent, rep.completed, rep.failed, rep.degraded,
+            rep.p50_ms, rep.p95_ms, rep.p99_ms,
+            snap.queue_depths,
+        );
+        println!("{}", snap.to_json_line());
+        server.shutdown();
+        return Ok(());
+    }
+
     info!("serving {n_requests} requests...");
     let mut pending = Vec::new();
     if recurrent {
@@ -242,15 +289,19 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     }
     let snap = server.metrics.snapshot();
     println!(
-        "served {} requests in {} batches\n\
+        "served {} requests in {} batches over {} replicas\n\
          throughput: {:.0} req/s   batch fill: {:.2}\n\
          latency ms: p50={:.2} p95={:.2} p99={:.2}\n\
+         degraded={} failed={}   queue depths: {:?}\n\
          decode: scored {:.1}% of catalog   pruned={} fallbacks={}",
-        snap.requests, snap.batches, snap.throughput_rps,
-        snap.mean_batch_fill, snap.p50_ms, snap.p95_ms, snap.p99_ms,
+        snap.requests, snap.batches, server.router().replica_count(),
+        snap.throughput_rps, snap.mean_batch_fill,
+        snap.p50_ms, snap.p95_ms, snap.p99_ms,
+        snap.degraded_responses, snap.failed_responses, snap.queue_depths,
         100.0 * snap.scored_frac, snap.pruned_requests,
         snap.decode_fallbacks,
     );
+    println!("{}", snap.to_json_line());
     server.shutdown();
     Ok(())
 }

@@ -40,6 +40,18 @@ impl<T> DynamicBatcher<T> {
         };
         let mut batch = Vec::with_capacity(self.cfg.max_batch);
         batch.push(first);
+        if self.cfg.max_wait.is_zero() {
+            // zero-wait greedy mode: take whatever is already queued
+            // (no timer syscalls) — lowest-latency flushing, batching
+            // only what backlog has accumulated
+            while batch.len() < self.cfg.max_batch {
+                match self.rx.try_recv() {
+                    Ok(v) => batch.push(v),
+                    Err(_) => break,
+                }
+            }
+            return Some(batch);
+        }
         let deadline = Instant::now() + self.cfg.max_wait;
         while batch.len() < self.cfg.max_batch {
             let now = Instant::now();
@@ -92,6 +104,24 @@ mod tests {
         assert!(waited >= Duration::from_millis(15), "{waited:?}");
         drop(tx);
         assert_eq!(b.next_batch(), None);
+    }
+
+    #[test]
+    fn zero_wait_drains_backlog_without_blocking() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        // greedy: everything queued, nothing waited for
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        tx.send(9).unwrap();
+        assert_eq!(b.next_batch().unwrap(), vec![9]);
     }
 
     #[test]

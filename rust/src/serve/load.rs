@@ -1,0 +1,187 @@
+//! Zipf-traffic load harness: closed-loop clients driving think-time
+//! click sessions against a running [`Server`] at configurable
+//! concurrency.
+//!
+//! The workload models what a recommender front end actually sees:
+//! a large user population (`LoadConfig::users`, defaulting to one
+//! million ids) with Zipf-distributed activity — a few hot users
+//! generate most of the traffic, the long tail shows up once — and
+//! per-user click sessions submitted one click at a time under a
+//! think-time pause. User ids double as session ids, so the router's
+//! session-affine dispatch, the per-replica caches, and the admission
+//! controller all see realistic skew: hot users hammer one home
+//! replica until its queue crosses the high-water mark and their
+//! requests start degrading to the stateless path on other replicas.
+//!
+//! User arrivals sample a [`ZipfStream`] (rejection-inversion, O(1)
+//! memory — the million-user id space costs nothing); click content
+//! comes from a pregenerated session pool
+//! ([`crate::data::sequences::generate_serve_sessions`] for topical
+//! catalogs, [`crate::data::sequences::generate_zipf_sessions`] for
+//! million-item ones).
+//! Clients are closed-loop: each waits for its response before the
+//! next click, so offered load is `concurrency / (latency + think)` —
+//! the classic saturation-throughput harness.
+//!
+//! Every client counts sent/completed/failed from the responses it
+//! receives; under the serving tier's zero-drop contract
+//! `completed == sent` and `failed == 0` unless flushes error.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::server::{RecRequest, Server};
+use crate::data::zipf::ZipfStream;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// user-id space; user ids double as session ids
+    pub users: usize,
+    /// Zipf exponent for user activity (1.0–1.2 is web-typical)
+    pub zipf_s: f64,
+    /// closed-loop client threads
+    pub concurrency: usize,
+    /// wall-clock duration to sustain the load
+    pub duration: Duration,
+    /// pause between a response and the user's next click (0 for
+    /// saturation benchmarks)
+    pub think_time: Duration,
+    /// `true`: submit each session's clicks one at a time under its
+    /// session id (stateful serving / affinity under test). `false`:
+    /// one stateless request per session with the full item set.
+    pub stateful: bool,
+    pub top_n: usize,
+    pub seed: u64,
+    /// emit a JSON-line metrics snapshot to stdout at this interval
+    pub snapshot_every: Option<Duration>,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            users: 1_000_000,
+            zipf_s: 1.05,
+            concurrency: 32,
+            duration: Duration::from_secs(2),
+            think_time: Duration::ZERO,
+            stateful: true,
+            top_n: 10,
+            seed: 1,
+            snapshot_every: None,
+        }
+    }
+}
+
+/// What the harness measured, combining client-side counts with the
+/// server's histogram percentiles.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub completed: u64,
+    /// responses carrying a [`super::ServeError`] (flush failures) or
+    /// dropped channels — zero in a healthy run
+    pub failed: u64,
+    /// responses flagged degraded by admission control
+    pub degraded: u64,
+    pub elapsed: Duration,
+    /// completed requests per second over the measured window
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Drive `cfg.concurrency` closed-loop Zipf clients against `server`
+/// for `cfg.duration`, drawing click content from `pool` (user `u`
+/// replays `pool[u % pool.len()]`). Blocks until every in-flight
+/// request is answered; returns the aggregated report.
+pub fn run_load(server: &Server, pool: &[Vec<u32>], cfg: &LoadConfig)
+    -> LoadReport {
+    assert!(!pool.is_empty(), "load harness needs a session pool");
+    let sent = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let degraded = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let deadline = t0 + cfg.duration;
+    let users = ZipfStream::new(cfg.users.max(1), cfg.zipf_s);
+    std::thread::scope(|s| {
+        for c in 0..cfg.concurrency.max(1) {
+            let (sent, completed, failed, degraded) =
+                (&sent, &completed, &failed, &degraded);
+            s.spawn(move || {
+                let mut rng = Rng::new(
+                    cfg.seed ^ (c as u64 + 1)
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut roundtrip = |req: RecRequest| {
+                    sent.fetch_add(1, Ordering::Relaxed);
+                    match server.submit(req).recv() {
+                        Ok(resp) => {
+                            completed.fetch_add(1, Ordering::Relaxed);
+                            if resp.degraded {
+                                degraded.fetch_add(1,
+                                                   Ordering::Relaxed);
+                            }
+                            if !resp.is_ok() {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        // a dropped response channel would break the
+                        // zero-drop contract; count it as a failure
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    if !cfg.think_time.is_zero() {
+                        std::thread::sleep(cfg.think_time);
+                    }
+                };
+                while Instant::now() < deadline {
+                    let user = users.sample(&mut rng) as u64;
+                    let clicks = &pool[user as usize % pool.len()];
+                    if cfg.stateful {
+                        // one request per click, sequential within the
+                        // session (the stateful serving protocol)
+                        for &click in clicks {
+                            if Instant::now() >= deadline {
+                                break;
+                            }
+                            roundtrip(RecRequest::session(
+                                user, vec![click], cfg.top_n));
+                        }
+                    } else {
+                        roundtrip(RecRequest::new(clicks.clone(),
+                                                  cfg.top_n));
+                    }
+                }
+            });
+        }
+        if let Some(every) = cfg.snapshot_every {
+            s.spawn(move || {
+                let mut next = Instant::now() + every;
+                while next < deadline {
+                    std::thread::sleep(
+                        next.saturating_duration_since(Instant::now()));
+                    println!("{}",
+                             server.metrics.snapshot().to_json_line());
+                    next += every;
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    let completed = completed.into_inner();
+    LoadReport {
+        sent: sent.into_inner(),
+        completed,
+        failed: failed.into_inner(),
+        degraded: degraded.into_inner(),
+        elapsed,
+        qps: completed as f64 / elapsed.as_secs_f64().max(1e-9),
+        p50_ms: snap.p50_ms,
+        p95_ms: snap.p95_ms,
+        p99_ms: snap.p99_ms,
+    }
+}

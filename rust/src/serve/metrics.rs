@@ -1,23 +1,162 @@
-//! Serving metrics: lock-protected latency reservoir + counters, reported
-//! as throughput and p50/p95/p99 latency.
+//! Serving metrics: a streaming log-scale latency histogram plus
+//! lock-protected counters, reported as throughput, p50/p95/p99, queue
+//! depth, and degradation/decode/swap observability.
+//!
+//! The latency path is built for the flush hot loop: recording a
+//! latency is two relaxed atomic increments into a fixed 128-bucket
+//! histogram — no allocation, no lock, no sorting. Buckets are
+//! log-spaced at four per octave (bucket `i` covers
+//! `[2^(i/4), 2^((i+1)/4))` microseconds, ~19% wide), so percentile
+//! estimates carry at most half a bucket (~9%) of relative error while
+//! the histogram itself stays 1 KiB forever — unlike the previous
+//! reservoir, which grew one `f64` per request and re-sorted the whole
+//! vector on every snapshot. Counters that only move once per flush
+//! (batches, decode work, swaps) stay behind a single mutex.
+//!
+//! Queue depth is a *gauge*, not a counter: the router registers its
+//! per-replica depth atomics once at startup and `snapshot` reads them
+//! live, so a snapshot shows where backlog sits right now.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::util::stats::percentile;
+use crate::util::json::{obj, Json};
+
+/// Number of histogram buckets: with four buckets per octave the top
+/// bucket starts at `2^(127/4)` µs ≈ 64 minutes — far beyond any
+/// serving latency, so the clamp at the top is theoretical.
+pub const HIST_BUCKETS: usize = 128;
+/// Log resolution: buckets per factor-of-two of latency.
+const BUCKETS_PER_OCTAVE: f64 = 4.0;
+
+/// Fixed-bucket log-scale histogram over microsecond latencies.
+/// Recording is wait-free (two `Relaxed` atomic adds) and allocation
+/// free; percentile queries walk the 128 buckets and interpolate
+/// linearly inside the crossing bucket.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    total: AtomicU64,
+    /// whole microseconds, for the mean (saturating at u64 is ~584k
+    /// years of accumulated latency — not a practical concern)
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a latency: `floor(log2(us) * 4)`, clamped.
+    /// Sub-microsecond latencies share bucket 0.
+    fn bucket(us: f64) -> usize {
+        if us < 1.0 {
+            return 0;
+        }
+        ((us.log2() * BUCKETS_PER_OCTAVE) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Lower bound of bucket `i` in microseconds (bucket 0 reaches
+    /// down to zero: everything sub-microsecond lands there).
+    fn bucket_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            (i as f64 / BUCKETS_PER_OCTAVE).exp2()
+        }
+    }
+
+    /// Record one latency. Wait-free, allocation-free — safe on the
+    /// flush hot path.
+    pub fn record_us(&self, us: f64) {
+        let b = Self::bucket(us);
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us.max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Percentile estimate in microseconds: find the bucket where the
+    /// cumulative count crosses the rank, interpolate linearly between
+    /// its bounds. Resolution is the bucket width (~19%), so estimates
+    /// are within ~9% of the true value. Returns 0 when empty.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q / 100.0).clamp(0.0, 1.0) * (total - 1) as f64;
+        let mut cum = 0u64;
+        for i in 0..HIST_BUCKETS {
+            let c = self.counts[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            let below = cum as f64;
+            cum += c;
+            if (cum - 1) as f64 >= rank {
+                let frac =
+                    ((rank - below + 0.5) / c as f64).clamp(0.0, 1.0);
+                let lo = Self::bucket_lo(i);
+                let hi = Self::bucket_lo(i + 1);
+                return lo + frac * (hi - lo);
+            }
+        }
+        Self::bucket_lo(HIST_BUCKETS)
+    }
+}
 
 #[derive(Debug)]
 pub struct ServeMetrics {
+    /// per-request latency — outside the mutex, recorded wait-free
+    hist: LatencyHistogram,
     inner: Mutex<Inner>,
+    /// per-replica queue-depth gauges, registered once by the router
+    gauges: Mutex<Vec<Arc<AtomicUsize>>>,
     started: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 #[derive(Debug, Default)]
 struct Inner {
-    latencies_us: Vec<f64>,
     requests: u64,
     batches: u64,
     batch_fill: f64,
+    /// stateful requests the admission controller downgraded to the
+    /// stateless path because their home replica was over the
+    /// high-water mark (answered, not dropped)
+    degraded_responses: u64,
+    /// requests answered with an error response because their flush
+    /// failed (every admitted request is answered either way)
+    failed_responses: u64,
     // decode counters (candidate-pruned tier observability)
     decode_scored: u64,
     decode_catalog: u64,
@@ -34,10 +173,19 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub throughput_rps: f64,
+    /// histogram estimates (log-bucket resolution, ~9% relative error)
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_batch_fill: f64,
+    /// live per-replica queue depths at snapshot time (gauges — these
+    /// go up and down; empty until a router registers its replicas)
+    pub queue_depths: Vec<usize>,
+    /// stateful requests degraded to the stateless predict path by
+    /// admission control (each still answered — never dropped)
+    pub degraded_responses: u64,
+    /// requests answered with an error response after a flush failure
+    pub failed_responses: u64,
     /// items whose log-sum was evaluated, summed over all decodes
     pub decode_scored: u64,
     /// catalog size summed over all decodes (`scored / catalog` = the
@@ -61,23 +209,46 @@ pub struct MetricsSnapshot {
     pub sessions_drained: u64,
 }
 
-impl Default for ServeMetrics {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl ServeMetrics {
     pub fn new() -> Self {
-        Self { inner: Mutex::new(Inner::default()), started: Instant::now() }
+        Self {
+            hist: LatencyHistogram::new(),
+            inner: Mutex::new(Inner::default()),
+            gauges: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
     }
 
-    pub fn record_batch(&self, latencies_us: &[f64], fill: f64) {
+    /// Record one request's latency. Allocation-free and lock-free —
+    /// this is the per-job call on the flush hot path.
+    pub fn record_latency_us(&self, us: f64) {
+        self.hist.record_us(us);
+    }
+
+    /// Record one flush: `n_jobs` requests answered, `fill` the batch
+    /// fill fraction. Called once per flush (latencies are recorded
+    /// per job via [`ServeMetrics::record_latency_us`]).
+    pub fn record_flush(&self, n_jobs: usize, fill: f64) {
         let mut inner = self.inner.lock().unwrap();
-        inner.latencies_us.extend_from_slice(latencies_us);
-        inner.requests += latencies_us.len() as u64;
+        inner.requests += n_jobs as u64;
         inner.batches += 1;
         inner.batch_fill += fill;
+    }
+
+    /// Count stateful requests degraded to the stateless path by the
+    /// router's admission control.
+    pub fn record_degraded(&self, n: u64) {
+        self.inner.lock().unwrap().degraded_responses += n;
+    }
+
+    /// Count requests answered with an error response (flush failure).
+    pub fn record_failed(&self, n: u64) {
+        self.inner.lock().unwrap().failed_responses += n;
+    }
+
+    /// Register the per-replica queue-depth gauges (router startup).
+    pub fn register_queue_gauges(&self, gauges: Vec<Arc<AtomicUsize>>) {
+        *self.gauges.lock().unwrap() = gauges;
     }
 
     /// Record one flush's decode work: `scored` items evaluated out of
@@ -109,15 +280,25 @@ impl ServeMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let inner = self.inner.lock().unwrap();
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        let queue_depths: Vec<usize> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|g| g.load(Ordering::SeqCst))
+            .collect();
         MetricsSnapshot {
             requests: inner.requests,
             batches: inner.batches,
             throughput_rps: inner.requests as f64 / elapsed,
-            p50_ms: percentile(&inner.latencies_us, 50.0) / 1000.0,
-            p95_ms: percentile(&inner.latencies_us, 95.0) / 1000.0,
-            p99_ms: percentile(&inner.latencies_us, 99.0) / 1000.0,
+            p50_ms: self.hist.percentile_us(50.0) / 1000.0,
+            p95_ms: self.hist.percentile_us(95.0) / 1000.0,
+            p99_ms: self.hist.percentile_us(99.0) / 1000.0,
             mean_batch_fill: inner.batch_fill
                 / inner.batches.max(1) as f64,
+            queue_depths,
+            degraded_responses: inner.degraded_responses,
+            failed_responses: inner.failed_responses,
             decode_scored: inner.decode_scored,
             decode_catalog: inner.decode_catalog,
             pruned_requests: inner.pruned_requests,
@@ -134,25 +315,104 @@ impl ServeMetrics {
     }
 }
 
+impl MetricsSnapshot {
+    /// Structured rendering (same hand-rolled [`Json`] the artifact
+    /// manifest writer uses — no serde in the offline vendor set).
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("requests", Json::from(self.requests as usize)),
+            ("batches", Json::from(self.batches as usize)),
+            ("throughput_rps", Json::from(self.throughput_rps)),
+            ("p50_ms", Json::from(self.p50_ms)),
+            ("p95_ms", Json::from(self.p95_ms)),
+            ("p99_ms", Json::from(self.p99_ms)),
+            ("mean_batch_fill", Json::from(self.mean_batch_fill)),
+            ("queue_depths", Json::from(self.queue_depths.clone())),
+            ("degraded_responses",
+             Json::from(self.degraded_responses as usize)),
+            ("failed_responses",
+             Json::from(self.failed_responses as usize)),
+            ("decode_scored", Json::from(self.decode_scored as usize)),
+            ("decode_catalog", Json::from(self.decode_catalog as usize)),
+            ("pruned_requests",
+             Json::from(self.pruned_requests as usize)),
+            ("decode_fallbacks",
+             Json::from(self.decode_fallbacks as usize)),
+            ("scored_frac", Json::from(self.scored_frac)),
+            ("swaps_applied", Json::from(self.swaps_applied as usize)),
+            ("swaps_rejected", Json::from(self.swaps_rejected as usize)),
+            ("sessions_drained",
+             Json::from(self.sessions_drained as usize)),
+        ])
+    }
+
+    /// One machine-readable line (JSON-lines framing) for periodic
+    /// snapshot streams from the load harness and `bloomrec serve`.
+    pub fn to_json_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
+    fn histogram_percentiles_track_known_distribution() {
+        let h = LatencyHistogram::new();
+        // 1..=1000 µs uniform: p50 ≈ 500, p99 ≈ 990
+        for us in 1..=1000 {
+            h.record_us(us as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        // log-bucket resolution is ~19%; allow a full bucket of slack
+        assert!((p50 - 500.0).abs() / 500.0 < 0.25, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.25, "p99 {p99}");
+        assert!(p50 <= h.percentile_us(95.0));
+        assert!(h.percentile_us(95.0) <= p99);
+        let mean = h.mean_us();
+        assert!((mean - 500.5).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(50.0), 0.0); // empty
+        h.record_us(0.25); // sub-µs -> bucket 0
+        h.record_us(1e12); // absurdly large -> clamped top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(0.0) < 2.0);
+        assert!(h.percentile_us(100.0) > 1e6);
+    }
+
+    #[test]
     fn snapshot_aggregates() {
         let m = ServeMetrics::new();
-        m.record_batch(&[1000.0, 2000.0, 3000.0], 0.75);
-        m.record_batch(&[4000.0], 0.25);
+        for us in [1000.0, 2000.0, 3000.0] {
+            m.record_latency_us(us);
+        }
+        m.record_flush(3, 0.75);
+        m.record_latency_us(4000.0);
+        m.record_flush(1, 0.25);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
-        assert!((s.p50_ms - 2.5).abs() < 0.01, "{}", s.p50_ms);
+        // histogram estimate: true p50 of [1,2,3,4] ms is 2.5 ms;
+        // log-bucket resolution puts the estimate within one bucket
+        assert!(s.p50_ms > 1.5 && s.p50_ms < 3.5, "{}", s.p50_ms);
+        assert!(s.p99_ms >= s.p95_ms && s.p95_ms >= s.p50_ms);
         assert!((s.mean_batch_fill - 0.5).abs() < 1e-12);
         assert!(s.throughput_rps > 0.0);
         // no decode recorded yet: counters zero, fraction defined as 1
         assert_eq!(s.decode_scored, 0);
         assert_eq!(s.decode_catalog, 0);
         assert_eq!(s.scored_frac, 1.0);
+        // no router registered: no queue gauges, nothing degraded
+        assert!(s.queue_depths.is_empty());
+        assert_eq!(s.degraded_responses, 0);
+        assert_eq!(s.failed_responses, 0);
     }
 
     #[test]
@@ -186,5 +446,46 @@ mod tests {
         assert_eq!(s.swaps_applied, 2);
         assert_eq!(s.swaps_rejected, 1);
         assert_eq!(s.sessions_drained, 7);
+    }
+
+    #[test]
+    fn queue_gauges_read_live() {
+        let m = ServeMetrics::new();
+        let g0 = Arc::new(AtomicUsize::new(3));
+        let g1 = Arc::new(AtomicUsize::new(0));
+        m.register_queue_gauges(vec![Arc::clone(&g0), Arc::clone(&g1)]);
+        assert_eq!(m.snapshot().queue_depths, vec![3, 0]);
+        g0.store(1, Ordering::SeqCst);
+        g1.store(7, Ordering::SeqCst);
+        assert_eq!(m.snapshot().queue_depths, vec![1, 7]);
+    }
+
+    #[test]
+    fn degraded_and_failed_counters_tick() {
+        let m = ServeMetrics::new();
+        m.record_degraded(3);
+        m.record_degraded(1);
+        m.record_failed(2);
+        let s = m.snapshot();
+        assert_eq!(s.degraded_responses, 4);
+        assert_eq!(s.failed_responses, 2);
+    }
+
+    #[test]
+    fn snapshot_json_line_round_trips() {
+        let m = ServeMetrics::new();
+        m.record_latency_us(1500.0);
+        m.record_flush(1, 1.0);
+        m.record_degraded(1);
+        m.register_queue_gauges(vec![Arc::new(AtomicUsize::new(2))]);
+        let line = m.snapshot().to_json_line();
+        assert!(!line.contains('\n'), "{line}");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            v.get("degraded_responses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            v.get("queue_depths").unwrap().as_arr().unwrap().len(), 1);
+        assert!(v.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -1,41 +1,61 @@
 //! Serving stack: the deployment story the paper motivates (Sec. 1 —
 //! compressed models fit on limited hardware and serve cheaply).
 //!
-//! Thread-based (no tokio in the offline vendor set):
-//!   clients -> request queue -> [DynamicBatcher] -> worker replicas
-//!             (sparse encode -> predict backend -> Bloom decode -> top-N)
+//! Thread-based (no tokio in the offline vendor set), replica-sharded:
 //!
-//! The batcher collects up to `batch` requests or `max_wait`, whichever
-//! first — classic dynamic micro-batching, with a bounded admission
-//! queue (`ServeConfig::queue_cap` + `Server::try_submit`) for
-//! backpressure. Workers share one loaded
-//! [`crate::runtime::Execution`] (backends are thread-safe); a router
-//! fans the queue out to replicas. On a sparse-capable backend requests
-//! are encoded straight to active positions — the dense `[batch, m]`
-//! multi-hot never materializes on the hot path. Latency percentiles and
-//! throughput are recorded per request.
+//! ```text
+//! clients -> Router (session-affine dispatch + admission control)
+//!             ├─ replica 0: queue -> [DynamicBatcher] -> flush loop
+//!             ├─ replica 1: queue -> [DynamicBatcher] -> flush loop
+//!             └─ ...          (sparse encode -> predict backend
+//!                              -> Bloom decode -> top-N)
+//! ```
+//!
+//! The [`Router`] owns `ServeConfig::replicas` replicas
+//! (`BLOOMREC_REPLICAS`), each a private flush loop with its own
+//! queue, session-cache shard, and model-generation slot. Stateful
+//! requests hash by session id to a *home* replica so hidden states
+//! never migrate; stateless requests take the shortest queue. When a
+//! home replica's queue crosses the high-water mark
+//! (`ServeConfig::high_water`), admission control *degrades* the
+//! request to the stateless path instead of dropping it. Each
+//! replica's batcher collects up to `batch` requests or `max_wait`,
+//! whichever first — classic dynamic micro-batching, with a bounded
+//! admission queue (`ServeConfig::queue_cap` + `Server::try_submit`)
+//! for hard backpressure when callers want rejection instead of
+//! degradation. On a sparse-capable backend requests are encoded
+//! straight to active positions — the dense `[batch, m]` multi-hot
+//! never materializes on the hot path. Latency lands in a streaming
+//! log-bucket histogram (p50/p95/p99 with no allocation per request);
+//! queue depths are live per-replica gauges.
 //!
 //! Recurrent models (the GRU session recommender, the LSTM language
-//! model) additionally serve *statefully*: the server keeps a bounded
-//! per-session hidden-state cache, and a [`RecRequest`] carrying a
-//! session id only ships the user's new clicks. A flush advances all
-//! its live sessions together — hidden states gathered into one
-//! `runtime::BatchedHiddenState`, one `Execution::step_batch` (a single
-//! blocked GEMM) per round of clicks, one batched readout — instead of
-//! per-session rows=1 matmuls; executions without batched stepping fall
-//! back to per-session `Execution::step`, and executions without any
-//! stepping (PJRT) to stateless window predicts. See
+//! model) additionally serve *statefully*: each replica keeps a
+//! bounded per-session hidden-state cache shard, and a [`RecRequest`]
+//! carrying a session id only ships the user's new clicks. A flush
+//! advances all its live sessions together — hidden states gathered
+//! into one `runtime::BatchedHiddenState`, one `Execution::step_batch`
+//! (a single blocked GEMM) per round of clicks, one batched readout —
+//! instead of per-session rows=1 matmuls; executions without batched
+//! stepping fall back to per-session `Execution::step`, and executions
+//! without any stepping (PJRT) to stateless window predicts. See
 //! `RecRequest::session`.
 //!
 //! Models roll without downtime: [`Server::swap_artifact`] installs a
-//! validated `bloomrec pack` artifact atomically between flushes (see
-//! the [`server`] module docs), with swap counters in [`ServeMetrics`].
+//! validated `bloomrec pack` artifact across every replica (see the
+//! [`server`] and [`router`] module docs), with swap counters in
+//! [`ServeMetrics`]. The [`load`] module drives the whole tier with
+//! Zipf think-time click traffic at configurable concurrency.
 
 pub mod batcher;
+pub mod load;
 pub mod metrics;
+pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use metrics::ServeMetrics;
-pub use server::{RecRequest, RecResponse, ServeConfig, Server,
-                 SwapReport};
+pub use load::{run_load, LoadConfig, LoadReport};
+pub use metrics::{LatencyHistogram, MetricsSnapshot, ServeMetrics};
+pub use router::Router;
+pub use server::{RecRequest, RecResponse, ServeConfig, ServeError,
+                 Server, SwapReport};

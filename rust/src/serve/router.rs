@@ -1,0 +1,440 @@
+//! Session-affine replica router: the dispatch layer of the serving
+//! tier.
+//!
+//! The [`Router`] owns N replicas. Each replica is one flush loop (an
+//! OS thread pulling from its own private queue through its own
+//! [`DynamicBatcher`]) with its own session-cache shard and its own
+//! model-generation slot — nothing on a replica's hot path is shared
+//! with another replica, which is what kills the single-mutex
+//! contention the pre-sharded server had on its session cache and
+//! batcher.
+//!
+//! Dispatch rules:
+//!
+//! * **Stateful** requests (`RecRequest::session = Some(id)`) hash to
+//!   their *home* replica — `splitmix64(id) % N` — so a recurrent
+//!   hidden state is cached, resumed, and put back on exactly one
+//!   replica for the session's whole life. States never migrate, and
+//!   the per-replica cache shards never coordinate.
+//! * **Stateless** requests go to the replica with the shortest queue
+//!   (round-robin tie-break), since any replica can serve them.
+//! * **Admission control degrades, it does not drop:** when a stateful
+//!   request's home replica has `ServeConfig::high_water` or more jobs
+//!   queued, the request is *downgraded* — its session id is stripped,
+//!   it is served through the stateless full-window path on the
+//!   shortest queue, its response is flagged `degraded`, and the
+//!   `degraded_responses` counter ticks. Overload bends latency and
+//!   freshness (one windowed prediction instead of a session resume);
+//!   it never loses a request. The hard reject path
+//!   ([`Router::try_submit`] against `ServeConfig::queue_cap`) stays
+//!   opt-in for callers that prefer backpressure.
+//!
+//! Hot swaps roll through the router: one
+//! [`Router::swap_artifact`] call validates and compiles the packed
+//! artifact once, then installs it replica by replica (generation
+//! pointer store + session-shard epoch bump under that replica's
+//! locks). Every flush pins one generation, so no response ever mixes
+//! weights; during the roll different replicas may briefly serve
+//! different generations — a rolling deploy in one call, reported as
+//! one aggregated [`SwapReport`].
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::batcher::DynamicBatcher;
+use super::metrics::ServeMetrics;
+use super::server::{fail_jobs, serve_flush, Job, ModelGeneration,
+                    RecRequest, RecResponse, ServeConfig, SessionCache,
+                    SwapReport};
+use crate::embedding::Embedding;
+use crate::model::ModelState;
+use crate::runtime::{ArtifactSpec, Runtime};
+
+/// The affinity hash: splitmix64's finalizer. Cheap, stateless, and
+/// well-mixed — consecutive session ids spread evenly over replicas.
+fn hash_session(id: u64) -> u64 {
+    let mut z = id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One serving replica: its queue, flush-loop thread, session-cache
+/// shard, queue-depth gauge, and model-generation slot.
+struct Replica {
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    sessions: Arc<Mutex<SessionCache>>,
+    /// jobs queued or in flight on this replica (gauge, registered
+    /// with [`ServeMetrics`]; also the admission-control signal)
+    depth: Arc<AtomicUsize>,
+    current: Arc<RwLock<Arc<ModelGeneration>>>,
+}
+
+/// Replica-sharded dispatch: owns the replicas, routes requests,
+/// rolls swaps. Use it through [`super::Server`] (the façade adds the
+/// model-loading constructor); the router is exposed for replica-level
+/// observability.
+pub struct Router {
+    replicas: Vec<Replica>,
+    metrics: Arc<ServeMetrics>,
+    /// total requests in flight across all replicas (the
+    /// [`Router::try_submit`] admission bound)
+    in_flight: Arc<AtomicUsize>,
+    queue_cap: usize,
+    high_water: usize,
+    /// rotating start offset for shortest-queue scans, so ties spread
+    /// round-robin instead of piling on replica 0
+    rr: AtomicUsize,
+    /// runtime the router compiles swapped-in artifact specs against
+    rt: Arc<Runtime>,
+}
+
+impl Router {
+    /// Compile the model once and spin up `cfg.replicas` flush loops,
+    /// each with a private queue, session shard, and generation slot.
+    pub(crate) fn start(rt: Arc<Runtime>, spec: ArtifactSpec,
+                        state: ModelState, emb: Arc<dyn Embedding>,
+                        cfg: ServeConfig) -> Result<Router> {
+        let exe = rt.load_spec(&spec)?;
+        let state = Arc::new(state);
+        let metrics = Arc::new(ServeMetrics::new());
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let n = cfg.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n);
+        let mut gauges = Vec::with_capacity(n);
+        for r in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let sessions = Arc::new(Mutex::new(SessionCache::new()));
+            let depth = Arc::new(AtomicUsize::new(0));
+            let current = Arc::new(RwLock::new(Arc::new(
+                ModelGeneration {
+                    exe: Arc::clone(&exe),
+                    spec: spec.clone(),
+                    state: Arc::clone(&state),
+                    emb: Arc::clone(&emb),
+                    epoch: 0,
+                })));
+            gauges.push(Arc::clone(&depth));
+            let worker = {
+                let current = Arc::clone(&current);
+                let metrics = Arc::clone(&metrics);
+                let in_flight = Arc::clone(&in_flight);
+                let sessions = Arc::clone(&sessions);
+                let depth = Arc::clone(&depth);
+                let batcher_cfg = cfg.batcher;
+                let decode = cfg.decode;
+                std::thread::Builder::new()
+                    .name(format!("bloomrec-replica-{r}"))
+                    .spawn(move || {
+                        // the batcher is owned by this thread — no
+                        // shared receiver lock on the flush path
+                        let batcher =
+                            DynamicBatcher::new(rx, batcher_cfg);
+                        while let Some(jobs) = batcher.next_batch() {
+                            // pin the model generation ONCE for the
+                            // whole flush (the read guard is held only
+                            // for this Arc clone): every job below
+                            // runs on the pinned generation, and a
+                            // concurrent swap takes effect at the next
+                            // flush boundary
+                            let model_gen =
+                                Arc::clone(&*current.read().unwrap());
+                            if let Err(e) = serve_flush(
+                                &model_gen, &jobs, &metrics, &sessions,
+                                decode)
+                            {
+                                crate::error!(
+                                    "replica {r} flush failed: {e}");
+                                // zero-drop contract: every admitted
+                                // job still gets a response
+                                fail_jobs(&jobs, &metrics, &e);
+                            }
+                            depth.fetch_sub(jobs.len(),
+                                            Ordering::SeqCst);
+                            in_flight.fetch_sub(jobs.len(),
+                                                Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn replica worker")
+            };
+            replicas.push(Replica {
+                tx: Some(tx),
+                worker: Some(worker),
+                sessions,
+                depth,
+                current,
+            });
+        }
+        metrics.register_queue_gauges(gauges);
+        Ok(Router {
+            replicas,
+            metrics,
+            in_flight,
+            queue_cap: cfg.queue_cap.max(1),
+            high_water: cfg.high_water,
+            rr: AtomicUsize::new(0),
+            rt,
+        })
+    }
+
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The affinity rule: the home replica a stateful request with
+    /// this session id routes to (while its queue is under the
+    /// high-water mark).
+    pub fn replica_for(&self, session_id: u64) -> usize {
+        (hash_session(session_id) % self.replicas.len() as u64) as usize
+    }
+
+    /// Live queue depth per replica (queued + in-flush jobs).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|r| r.depth.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Live session-cache size per replica shard.
+    pub fn session_counts(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|r| r.sessions.lock().unwrap().len())
+            .collect()
+    }
+
+    /// Which replica shard holds a cached state for this session id
+    /// right now, if any. (With affine routing this can only ever be
+    /// `replica_for(id)` — the property the tests pin.)
+    pub fn session_replica(&self, id: u64) -> Option<usize> {
+        self.replicas
+            .iter()
+            .position(|r| r.sessions.lock().unwrap().contains(id))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.session_counts().iter().sum()
+    }
+
+    /// Shortest-queue scan with a rotating start offset: equal depths
+    /// resolve round-robin instead of always favoring replica 0.
+    fn shortest_queue(&self) -> usize {
+        let n = self.replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_depth = usize::MAX;
+        for off in 0..n {
+            let i = (start + off) % n;
+            let d = self.replicas[i].depth.load(Ordering::SeqCst);
+            if d < best_depth {
+                best_depth = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Pick the replica for a request, applying admission control.
+    /// Returns the replica index and whether the request was degraded
+    /// (session id stripped — it will be served statelessly).
+    fn route(&self, request: &mut RecRequest) -> (usize, bool) {
+        if let Some(id) = request.session {
+            let home = self.replica_for(id);
+            if self.replicas[home].depth.load(Ordering::SeqCst)
+                < self.high_water
+            {
+                return (home, false);
+            }
+            // over the high-water mark: degrade to the stateless path
+            // and escape the hot replica — answered, never dropped
+            request.session = None;
+            return (self.shortest_queue(), true);
+        }
+        (self.shortest_queue(), false)
+    }
+
+    fn enqueue(&self, mut request: RecRequest)
+        -> Receiver<RecResponse> {
+        let (idx, degraded) = self.route(&mut request);
+        if degraded {
+            self.metrics.record_degraded(1);
+        }
+        let rep = &self.replicas[idx];
+        rep.depth.fetch_add(1, Ordering::SeqCst);
+        let (respond, rx) = mpsc::channel();
+        rep.tx
+            .as_ref()
+            .expect("router running")
+            .send(Job {
+                request,
+                enqueued: Instant::now(),
+                respond,
+                degraded,
+            })
+            .expect("replica worker alive");
+        rx
+    }
+
+    /// Unbounded submit (see [`super::Server::submit`]).
+    pub fn submit(&self, request: RecRequest)
+        -> Receiver<RecResponse> {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.enqueue(request)
+    }
+
+    /// Bounded submit against the global `queue_cap` (see
+    /// [`super::Server::try_submit`]): optimistic admission — reserve
+    /// a slot, back out if over the cap.
+    pub fn try_submit(&self, request: RecRequest)
+        -> Option<Receiver<RecResponse>> {
+        if self.in_flight.fetch_add(1, Ordering::SeqCst)
+            >= self.queue_cap
+        {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(self.enqueue(request))
+    }
+
+    /// Validate once, then roll the new generation across every
+    /// replica (see [`super::Server::swap_artifact`] for the full
+    /// contract).
+    pub fn swap_artifact(&self, dir: &Path) -> Result<SwapReport> {
+        match self.validate_and_swap(dir) {
+            Ok(report) => {
+                self.metrics.record_swap(true, report.sessions_drained);
+                crate::info!(
+                    "hot-swapped artifact {} in across {} replicas \
+                     ({}; {} sessions drained)",
+                    dir.display(), self.replicas.len(),
+                    report.spec_name, report.sessions_drained);
+                Ok(report)
+            }
+            Err(e) => {
+                self.metrics.record_swap(false, 0);
+                crate::warn_!("rejected artifact swap from {}: {e}",
+                              dir.display());
+                Err(e)
+            }
+        }
+    }
+
+    fn validate_and_swap(&self, dir: &Path) -> Result<SwapReport> {
+        let loaded = crate::artifact::load(dir)?;
+        let exe = self.rt.load_spec(&loaded.spec)?;
+        let emb = match loaded.embedding() {
+            Some(emb) => emb,
+            None => {
+                // artifact without a Bloom config: keep the serving
+                // embedding, but only if the wires line up (all
+                // replicas share one embedding, so replica 0 speaks
+                // for the fleet)
+                let cur = Arc::clone(
+                    &*self.replicas[0].current.read().unwrap());
+                if cur.emb.m_in() != loaded.spec.m_in
+                    || cur.emb.m_out() != loaded.spec.m_out
+                {
+                    bail!(
+                        "artifact {} carries no Bloom hash config and \
+                         its wires ({}, {}) do not match the serving \
+                         embedding's ({}, {})",
+                        dir.display(), loaded.spec.m_in,
+                        loaded.spec.m_out, cur.emb.m_in(),
+                        cur.emb.m_out());
+                }
+                Arc::clone(&cur.emb)
+            }
+        };
+        let spec_name = loaded.spec.name.clone();
+        let git_sha = loaded.provenance.git_sha.clone();
+        let state = Arc::new(loaded.state);
+        let spec = loaded.spec;
+        // nothing above touched any serving path; roll the install
+        // replica by replica. Per replica, lock order (generation
+        // write lock, then session lock) cannot deadlock with its
+        // flush loop: the loop holds the generation read guard only
+        // for the per-flush Arc clone and takes the session lock
+        // separately, never both at once. Each replica's install is
+        // atomic at its flush boundary; the roll across replicas is
+        // sequential (a one-call rolling deploy).
+        let mut drained = 0usize;
+        for rep in &self.replicas {
+            let mut slot = rep.current.write().unwrap();
+            let mut cache = rep.sessions.lock().unwrap();
+            let (epoch, n) = cache.advance_epoch();
+            drained += n;
+            *slot = Arc::new(ModelGeneration {
+                exe: Arc::clone(&exe),
+                spec: spec.clone(),
+                state: Arc::clone(&state),
+                emb: Arc::clone(&emb),
+                epoch,
+            });
+        }
+        Ok(SwapReport { spec_name, sessions_drained: drained, git_sha })
+    }
+
+    /// Close every replica's queue and join the flush loops. Workers
+    /// drain their queues on the way out — every job admitted before
+    /// this call is answered (normally, or error-marked if its flush
+    /// fails) before its worker joins. Idempotent.
+    pub(crate) fn shutdown_now(&mut self) {
+        for rep in &mut self.replicas {
+            drop(rep.tx.take());
+        }
+        for rep in &mut self.replicas {
+            if let Some(w) = rep.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_hash_spreads_and_is_stable() {
+        // the rule is pure: same id -> same value, and 10k consecutive
+        // ids spread near-uniformly over small replica counts
+        for n in [2u64, 3, 4, 7] {
+            let mut counts = vec![0usize; n as usize];
+            for id in 0..10_000u64 {
+                let a = hash_session(id) % n;
+                let b = hash_session(id) % n;
+                assert_eq!(a, b);
+                counts[a as usize] += 1;
+            }
+            let expect = 10_000 / n as usize;
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(
+                    c > expect / 2 && c < expect * 2,
+                    "replica {i}/{n}: {c} of 10000"
+                );
+            }
+        }
+    }
+}

@@ -1,13 +1,23 @@
-//! The recommendation server: a micro-batching scheduler + worker
-//! replicas over a trained model artifact. Requests carry a user's item
-//! set; responses carry the top-N recommended original items with
+//! The recommendation server: a replica-sharded, micro-batching
+//! scheduler over a trained model artifact. Requests carry a user's
+//! item set; responses carry the top-N recommended original items with
 //! scores.
 //!
-//! Incoming requests accumulate in a bounded queue; the
-//! [`DynamicBatcher`] flushes a batch when it is full or its deadline
-//! passes. Feed-forward models serve statelessly: each flush's item
-//! sets are encoded (sparse) and pushed through one batched `predict`.
-//! Recurrent models serve *statefully*: the server keeps a per-session
+//! [`Server`] is the public façade over a [`Router`](super::Router)
+//! that owns N replicas (`ServeConfig::replicas` /
+//! `BLOOMREC_REPLICAS`). Each replica runs its own flush loop: a
+//! private [`crate::serve::DynamicBatcher`] flushes a batch when it is
+//! full or its deadline passes, and the replica owns its own session
+//! cache and model-generation slot — the router shards requests across
+//! replicas (session-affine: one session id always lands on one
+//! replica) so no lock is shared between replica hot paths. This
+//! module holds the *flush engine* — everything that happens to a
+//! batch once a replica pulls it; `serve/router.rs` holds dispatch,
+//! admission control, and the cross-replica swap.
+//!
+//! Feed-forward models serve statelessly: each flush's item sets are
+//! encoded (sparse) and pushed through one batched `predict`.
+//! Recurrent models serve *statefully*: the replica keeps a per-session
 //! [`crate::runtime::HiddenState`] cache, and a flush advances ALL its
 //! sessions together — their hidden states are gathered into one
 //! [`crate::runtime::BatchedHiddenState`] and every round of clicks is
@@ -25,29 +35,33 @@
 //! the same pool. Responses are bit-identical to single-threaded
 //! serving — parallelism only moves wall-clock.
 //!
-//! The serving model lives in an immutable [`ModelGeneration`] that
-//! workers pin once per flush, which is what makes zero-downtime
+//! Every admitted request is answered: a flush that fails sends each of
+//! its jobs an error-marked [`RecResponse`] (see [`ServeError`]), and
+//! [`Server::shutdown`] drains the queues — workers answer everything
+//! still enqueued before they join.
+//!
+//! The serving model lives in an immutable [`ModelGeneration`] that a
+//! replica pins once per flush, which is what makes zero-downtime
 //! artifact rolls possible: [`Server::swap_artifact`] validates a
-//! packed model (`bloomrec pack`) end to end, then installs it with a
-//! single pointer store between flushes — in-flight flushes finish on
-//! the old weights, every later flush runs on the new ones, and no
-//! batch ever mixes generations. Recurrent session states drain at the
-//! swap point (old hidden states never advance under new weights);
-//! swap outcomes are observable as `swaps_applied` / `swaps_rejected`
-//! / `sessions_drained` in [`ServeMetrics`].
+//! packed model (`bloomrec pack`) end to end, then installs it with one
+//! pointer store per replica between flushes — in-flight flushes finish
+//! on the old weights, every later flush runs on the new ones, and no
+//! batch ever mixes generations. Recurrent session states drain at each
+//! replica's swap point (old hidden states never advance under new
+//! weights); swap outcomes are observable as `swaps_applied` /
+//! `swaps_rejected` / `sessions_drained` in [`ServeMetrics`].
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Mutex, RwLock};
-use std::thread::JoinHandle;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::BatcherConfig;
 use super::metrics::ServeMetrics;
+use super::router::Router;
 use crate::bloom::{DecodeScratch, DecodeStrategy, HashMatrix};
 use crate::coordinator::batcher::encode_item_rows;
 use crate::embedding::Embedding;
@@ -86,20 +100,67 @@ impl RecRequest {
     }
 }
 
+/// Typed serving error carried inside an error-marked [`RecResponse`].
+/// The contract is that every admitted request receives a response —
+/// a flush failure answers its jobs with one of these instead of
+/// silently dropping them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The flush this request was batched into failed; the message is
+    /// the underlying serve error.
+    BatchFailed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BatchFailed(msg) => {
+                write!(f, "serve batch failed: {msg}")
+            }
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RecResponse {
-    /// (item, score), descending
+    /// (item, score), descending; empty on an error response
     pub items: Vec<(usize, f32)>,
     pub latency: Duration,
+    /// `true` when admission control downgraded this stateful request
+    /// to the stateless full-window path (overload on its home
+    /// replica). The response is still a real prediction — computed
+    /// from the request's items without session state.
+    pub degraded: bool,
+    /// `Some` when the flush failed and this is an error response
+    /// (`items` is empty); `None` for every successful response.
+    pub error: Option<ServeError>,
+}
+
+impl RecResponse {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// Number of serving replicas (`BLOOMREC_REPLICAS` overrides the
+    /// built-in default of 2). Each replica is one flush loop with its
+    /// own queue, session-cache shard, and model-generation slot.
     pub replicas: usize,
     /// Admission bound for [`Server::try_submit`]: requests beyond this
     /// many in flight are rejected instead of queued (backpressure).
     /// [`Server::submit`] ignores the bound (legacy unbounded behavior).
     pub queue_cap: usize,
+    /// Per-replica admission high-water mark (`BLOOMREC_HIGH_WATER`
+    /// overrides the built-in default of 512): a stateful request whose
+    /// home replica already has this many jobs queued is *degraded* —
+    /// served through the stateless full-window path on whichever
+    /// replica has the shortest queue — instead of piling onto the hot
+    /// replica. Degraded requests are answered (never dropped) and
+    /// counted in `degraded_responses`. `0` degrades every stateful
+    /// request (useful to force the path under test).
+    pub high_water: usize,
     pub batcher: BatcherConfig,
     /// Top-N decode route for every request: `Some` forces a strategy
     /// for the whole server; `None` (default) defers to the embedding's
@@ -107,38 +168,49 @@ pub struct ServeConfig {
     pub decode: Option<DecodeStrategy>,
 }
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
-            replicas: 2,
+            replicas: env_usize("BLOOMREC_REPLICAS", 2).max(1),
             queue_cap: 4096,
+            high_water: env_usize("BLOOMREC_HIGH_WATER", 512),
             batcher: BatcherConfig::default(),
             decode: None,
         }
     }
 }
 
-struct Job {
-    request: RecRequest,
-    enqueued: Instant,
-    respond: Sender<RecResponse>,
+pub(crate) struct Job {
+    pub(crate) request: RecRequest,
+    pub(crate) enqueued: Instant,
+    pub(crate) respond: Sender<RecResponse>,
+    /// set by the router when admission control stripped this
+    /// request's session id (stateful -> stateless downgrade)
+    pub(crate) degraded: bool,
 }
 
 /// One immutable model generation: everything a flush needs — the
 /// compiled execution, its spec, the weights, and the decode
-/// embedding. Workers clone the current generation's `Arc` exactly
+/// embedding. A replica clones the current generation's `Arc` exactly
 /// once per flush, so a flush runs entirely on one generation *by
 /// construction*; installing a new generation
-/// ([`Server::swap_artifact`]) is a single pointer store between
-/// flushes.
-struct ModelGeneration {
-    exe: Arc<dyn Execution>,
-    spec: ArtifactSpec,
-    state: Arc<ModelState>,
-    emb: Arc<dyn Embedding>,
+/// ([`Server::swap_artifact`]) is a single pointer store per replica
+/// between flushes.
+pub(crate) struct ModelGeneration {
+    pub(crate) exe: Arc<dyn Execution>,
+    pub(crate) spec: ArtifactSpec,
+    pub(crate) state: Arc<ModelState>,
+    pub(crate) emb: Arc<dyn Embedding>,
     /// session-cache epoch this generation writes under; a put-back
     /// from a flush that outlived a swap is dropped by the epoch check
-    epoch: u64,
+    pub(crate) epoch: u64,
 }
 
 /// Report returned by a successful [`Server::swap_artifact`].
@@ -146,9 +218,9 @@ struct ModelGeneration {
 pub struct SwapReport {
     /// name of the spec now serving
     pub spec_name: String,
-    /// recurrent session states dropped at the swap point; each
-    /// affected session reopens fresh on the new model at its next
-    /// request
+    /// recurrent session states dropped at the swap point, summed
+    /// over all replicas; each affected session reopens fresh on the
+    /// new model at its next request
     pub sessions_drained: usize,
     /// git sha stamped into the artifact at pack time
     pub git_sha: String,
@@ -157,20 +229,23 @@ pub struct SwapReport {
 /// One live session: its recurrent hidden state plus the items clicked
 /// so far (the top-N protocol excludes the full history, not just the
 /// current request's clicks).
-struct SessionEntry {
+pub(crate) struct SessionEntry {
     state: HiddenState,
     seen: Vec<u32>,
 }
 
-/// Per-session cache for recurrent serving. `take` removes the entry
-/// while its session's request is in flight (a concurrent request for
-/// the same id therefore starts a fresh state rather than racing on a
-/// shared one); `put` returns it, evicting beyond the capacity bound
-/// (`BLOOMREC_SESSION_CACHE`, default 65536 sessions). Memory per
-/// session is the hidden state (400 bytes for GRU-100) plus 4 bytes per
-/// distinct clicked item in `seen` — bounded by session length, so size
-/// the cap down for workloads with very long sessions.
-struct SessionCache {
+/// Per-session cache for recurrent serving — one shard per replica
+/// (session-affine routing guarantees a session id only ever touches
+/// its home replica's shard, so shards never coordinate). `take`
+/// removes the entry while its session's request is in flight (a
+/// concurrent request for the same id therefore starts a fresh state
+/// rather than racing on a shared one); `put` returns it, evicting
+/// beyond the capacity bound (`BLOOMREC_SESSION_CACHE`, default 65536
+/// sessions *per replica*). Memory per session is the hidden state
+/// (400 bytes for GRU-100) plus 4 bytes per distinct clicked item in
+/// `seen` — bounded by session length, so size the cap down for
+/// workloads with very long sessions.
+pub(crate) struct SessionCache {
     map: HashMap<u64, (SessionEntry, u64)>,
     clock: u64,
     capacity: usize,
@@ -181,12 +256,8 @@ struct SessionCache {
 }
 
 impl SessionCache {
-    fn new() -> Self {
-        let capacity = std::env::var("BLOOMREC_SESSION_CACHE")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(65536usize)
-            .max(1);
+    pub(crate) fn new() -> Self {
+        let capacity = env_usize("BLOOMREC_SESSION_CACHE", 65536).max(1);
         Self { map: HashMap::new(), clock: 0, capacity, epoch: 0 }
     }
 
@@ -196,7 +267,7 @@ impl SessionCache {
 
     /// Drop every live session and open a new epoch (hot swap):
     /// returns the new epoch and how many sessions were drained.
-    fn advance_epoch(&mut self) -> (u64, usize) {
+    pub(crate) fn advance_epoch(&mut self) -> (u64, usize) {
         let drained = self.map.len();
         self.map.clear();
         self.epoch += 1;
@@ -224,32 +295,28 @@ impl SessionCache {
         self.map.insert(id, (entry, self.clock));
     }
 
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.map.len()
+    }
+
+    pub(crate) fn contains(&self, id: u64) -> bool {
+        self.map.contains_key(&id)
     }
 }
 
-/// Handle to a running server; dropping it shuts the workers down.
+/// Handle to a running server; dropping it shuts the replicas down
+/// (draining their queues — every queued request is answered first).
 pub struct Server {
-    tx: Option<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
+    router: Router,
     pub metrics: Arc<ServeMetrics>,
-    in_flight: Arc<AtomicUsize>,
-    queue_cap: usize,
-    sessions: Arc<Mutex<SessionCache>>,
-    /// runtime the server compiles swapped-in artifact specs against
-    rt: Arc<Runtime>,
-    /// the serving model generation; workers clone it once per flush,
-    /// [`Server::swap_artifact`] replaces it between flushes
-    current: Arc<RwLock<Arc<ModelGeneration>>>,
 }
 
 impl Server {
-    /// Spin up the micro-batching scheduler + worker replicas around a
-    /// trained model.
+    /// Spin up the replica-sharded scheduler around a trained model.
     ///
     /// `emb` decodes model outputs to original items (Bloom hash matrix on
-    /// the serving path); the predict artifact is compiled once and shared.
+    /// the serving path); the predict artifact is compiled once and shared
+    /// across replicas.
     ///
     /// # Example
     ///
@@ -301,441 +368,19 @@ impl Server {
     /// ```
     pub fn start(rt: Arc<Runtime>, spec: ArtifactSpec, state: ModelState,
                  emb: Arc<dyn Embedding>, cfg: ServeConfig) -> Result<Server> {
-        let exe = rt.load_spec(&spec)?;
-        let metrics = Arc::new(ServeMetrics::new());
-        let in_flight = Arc::new(AtomicUsize::new(0));
-        let sessions = Arc::new(Mutex::new(SessionCache::new()));
-        let current = Arc::new(RwLock::new(Arc::new(ModelGeneration {
-            exe,
-            spec,
-            state: Arc::new(state),
-            emb,
-            epoch: 0,
-        })));
-
-        // single injector queue; the OS scheduler is the router across
-        // replica threads (work-stealing at the queue head)
-        let (tx, rx) = mpsc::channel::<Job>();
-        let batcher = Arc::new(Mutex::new(
-            DynamicBatcher::new(rx, cfg.batcher)));
-
-        let mut workers = Vec::with_capacity(cfg.replicas.max(1));
-        for w in 0..cfg.replicas.max(1) {
-            let current = Arc::clone(&current);
-            let metrics = Arc::clone(&metrics);
-            let in_flight = Arc::clone(&in_flight);
-            let batcher = Arc::clone(&batcher);
-            let sessions = Arc::clone(&sessions);
-            let decode = cfg.decode;
-            workers.push(std::thread::Builder::new()
-                .name(format!("bloomrec-serve-{w}"))
-                .spawn(move || {
-                    loop {
-                        // batch under the shared receiver lock
-                        let batch = {
-                            let guard = batcher.lock().unwrap();
-                            guard.next_batch()
-                        };
-                        let Some(jobs) = batch else { break };
-                        // pin the model generation ONCE for the whole
-                        // flush (the read guard is held only for this
-                        // Arc clone): every job below runs on the
-                        // pinned generation, and a concurrent swap
-                        // takes effect at the next flush boundary
-                        let model_gen =
-                            Arc::clone(&*current.read().unwrap());
-                        if let Err(e) = Self::serve_batch(
-                            &model_gen, &jobs, &metrics, &sessions,
-                            decode)
-                        {
-                            crate::error!("serve batch failed: {e}");
-                        }
-                        in_flight.fetch_sub(jobs.len(), Ordering::SeqCst);
-                    }
-                })
-                .expect("spawn worker"));
-        }
-        Ok(Server {
-            tx: Some(tx),
-            workers,
-            metrics,
-            in_flight,
-            queue_cap: cfg.queue_cap.max(1),
-            sessions,
-            rt,
-            current,
-        })
-    }
-
-    fn serve_batch(model_gen: &ModelGeneration, jobs: &[Job],
-                   metrics: &ServeMetrics,
-                   sessions: &Mutex<SessionCache>,
-                   decode: Option<DecodeStrategy>) -> Result<()> {
-        let exe = model_gen.exe.as_ref();
-        let spec = &model_gen.spec;
-        if spec.seq_len > 0 {
-            // the stateful path needs a stepping interpreter (native);
-            // executions without one (PJRT runs the AOT full-window
-            // artifact) fall back to stateless window predicts
-            return if exe.supports_batched_stepping() {
-                Self::serve_batch_recurrent(model_gen, jobs, metrics,
-                                            sessions, decode)
-            } else if exe.supports_stepping() {
-                Self::serve_batch_recurrent_sequential(
-                    model_gen, jobs, metrics, sessions, decode)
-            } else {
-                Self::serve_batch_window(model_gen, jobs, metrics,
-                                         decode)
-            };
-        }
-        let emb = model_gen.emb.as_ref();
-        let x = Self::encode_jobs(exe, spec, emb, jobs);
-        let probs = exe.predict(&model_gen.state.params, &x)?;
-        Self::respond(jobs, &probs.data, spec, emb, metrics, None,
-                      decode);
-        Ok(())
-    }
-
-    /// Check each job's session out of the cache (or open a fresh one).
-    /// Callers guarantee the flush holds at most one job per session id
-    /// (duplicates are rerouted to the sequential path, which chains
-    /// them in submission order).
-    fn checkout_sessions(exe: &dyn Execution, jobs: &[Job],
-                         sessions: &Mutex<SessionCache>)
-        -> Result<Vec<SessionEntry>> {
-        let mut entries = Vec::with_capacity(jobs.len());
-        for job in jobs {
-            let entry = match job
-                .request
-                .session
-                .and_then(|id| sessions.lock().unwrap().take(id))
-            {
-                Some(entry) => entry,
-                None => SessionEntry {
-                    state: exe.begin_state(1)?,
-                    seen: Vec::new(),
-                },
-            };
-            entries.push(entry);
-        }
-        Ok(entries)
-    }
-
-    /// Micro-batched stateful serving — the scheduler's recurrent hot
-    /// path. The flush's sessions are checked out together and advanced
-    /// in *rounds*: round `i` packs the hidden states of every session
-    /// with an i-th new click into one
-    /// [`crate::runtime::BatchedHiddenState`], encodes those clicks as
-    /// one sparse batch, and runs a single [`Execution::step_batch`] —
-    /// one blocked `[N, h] @ [h, G*h]` GEMM for all N sessions instead
-    /// of N rows=1 matmuls. Sessions join and leave rounds as their
-    /// click lists run out (ragged batches); one batched readout scores
-    /// every job at the end, then states scatter back into the cache.
-    /// Per-session results are bit-identical to the sequential path —
-    /// rows of a batched step are independent.
-    fn serve_batch_recurrent(model_gen: &ModelGeneration, jobs: &[Job],
-                             metrics: &ServeMetrics,
-                             sessions: &Mutex<SessionCache>,
-                             decode: Option<DecodeStrategy>)
-        -> Result<()> {
-        // Two requests for one session in the same flush would race on
-        // the checked-out state (the later put-back would clobber the
-        // earlier one's advanced state). The sequential path chains
-        // them in submission order instead — take that path for the
-        // whole (rare, protocol-violating) flush.
-        let mut ids: Vec<u64> = jobs
-            .iter()
-            .filter_map(|j| j.request.session)
-            .collect();
-        ids.sort_unstable();
-        if ids.windows(2).any(|w| w[0] == w[1]) {
-            return Self::serve_batch_recurrent_sequential(
-                model_gen, jobs, metrics, sessions, decode);
-        }
-        let exe = model_gen.exe.as_ref();
-        let spec = &model_gen.spec;
-        let state = model_gen.state.as_ref();
-        let emb = model_gen.emb.as_ref();
-        let m_in = spec.m_in;
-        let mut entries = Self::checkout_sessions(exe, jobs, sessions)?;
-        let rounds = jobs
-            .iter()
-            .map(|j| j.request.user_items.len())
-            .max()
-            .unwrap_or(0);
-        let mut scratch: Vec<(u32, f32)> = Vec::new();
-        for round in 0..rounds {
-            let active: Vec<usize> = (0..jobs.len())
-                .filter(|&i| round < jobs[i].request.user_items.len())
-                .collect();
-            // pack the active sessions' states into one [N, h] matrix
-            let refs: Vec<&HiddenState> =
-                active.iter().map(|&i| &entries[i].state).collect();
-            let mut packed = BatchedHiddenState::gather(&refs)?;
-            // encode this round's clicks, one row per active session
-            let mut sb = SparseBatch::new(m_in);
-            let mut sparse_ok = true;
-            for &i in &active {
-                let item = jobs[i].request.user_items[round];
-                if !emb.encode_input_sparse(&[item], &mut scratch) {
-                    sparse_ok = false;
-                    break;
-                }
-                sb.push_row(&scratch);
-            }
-            let x = if sparse_ok {
-                BatchInput::Sparse(sb)
-            } else {
-                let mut t =
-                    HostTensor::zeros(&[active.len(), m_in]);
-                for (row, &i) in active.iter().enumerate() {
-                    let item = jobs[i].request.user_items[round];
-                    emb.encode_input(
-                        &[item],
-                        &mut t.data[row * m_in..(row + 1) * m_in]);
-                }
-                BatchInput::Dense(t)
-            };
-            exe.step_batch(&state.params, &mut packed, &x)?;
-            // scatter the advanced rows back to the per-session states
-            for (row, &i) in active.iter().enumerate() {
-                packed.copy_row_into(row, &mut entries[i].state, 0)?;
-                let item = jobs[i].request.user_items[round];
-                if !entries[i].seen.contains(&item) {
-                    entries[i].seen.push(item);
-                }
-            }
-        }
-        // one batched readout scores every job of the flush
-        let refs: Vec<&HiddenState> =
-            entries.iter().map(|e| &e.state).collect();
-        let packed = BatchedHiddenState::gather(&refs)?;
-        let out = exe.readout_batch(&state.params, &packed)?;
-        let excludes: Vec<Vec<u32>> =
-            entries.iter().map(|e| e.seen.clone()).collect();
-        for (job, entry) in jobs.iter().zip(entries) {
-            if let Some(id) = job.request.session {
-                sessions
-                    .lock()
-                    .unwrap()
-                    .put(id, entry, model_gen.epoch);
-            }
-        }
-        Self::respond(jobs, &out.data, spec, emb, metrics,
-                      Some(excludes.as_slice()), decode);
-        Ok(())
-    }
-
-    /// Sequential stateful fallback for executions that can step but not
-    /// batch-step: resume (or open) each job's session, advance its
-    /// hidden state one [`Execution::step`] per new click — the
-    /// O(k·G·h) incremental path — read the output head out, and check
-    /// the session back into the cache. The session's full click
-    /// history (not just this request's items) is excluded from top-N.
-    fn serve_batch_recurrent_sequential(
-        model_gen: &ModelGeneration, jobs: &[Job],
-        metrics: &ServeMetrics, sessions: &Mutex<SessionCache>,
-        decode: Option<DecodeStrategy>) -> Result<()> {
-        let exe = model_gen.exe.as_ref();
-        let spec = &model_gen.spec;
-        let state = model_gen.state.as_ref();
-        let emb = model_gen.emb.as_ref();
-        let m_in = spec.m_in;
-        let m_out = spec.m_out;
-        let mut probs = vec![0.0f32; jobs.len() * m_out];
-        let mut excludes: Vec<Vec<u32>> = Vec::with_capacity(jobs.len());
-        let mut scratch: Vec<(u32, f32)> = Vec::new();
-        for (row, job) in jobs.iter().enumerate() {
-            let mut entry = match job
-                .request
-                .session
-                .and_then(|id| sessions.lock().unwrap().take(id))
-            {
-                Some(entry) => entry,
-                None => SessionEntry {
-                    state: exe.begin_state(1)?,
-                    seen: Vec::new(),
-                },
-            };
-            for &item in &job.request.user_items {
-                let x = if emb.encode_input_sparse(&[item], &mut scratch)
-                {
-                    let mut sb = SparseBatch::new(m_in);
-                    sb.push_row(&scratch);
-                    BatchInput::Sparse(sb)
-                } else {
-                    let mut t = HostTensor::zeros(&[1, m_in]);
-                    emb.encode_input(&[item], &mut t.data);
-                    BatchInput::Dense(t)
-                };
-                exe.step(&state.params, &mut entry.state, &x)?;
-                if !entry.seen.contains(&item) {
-                    entry.seen.push(item);
-                }
-            }
-            let out = exe.readout(&state.params, &entry.state)?;
-            probs[row * m_out..(row + 1) * m_out]
-                .copy_from_slice(&out.data[..m_out]);
-            excludes.push(entry.seen.clone());
-            if let Some(id) = job.request.session {
-                sessions
-                    .lock()
-                    .unwrap()
-                    .put(id, entry, model_gen.epoch);
-            }
-        }
-        Self::respond(jobs, &probs, spec, emb, metrics,
-                      Some(excludes.as_slice()), decode);
-        Ok(())
-    }
-
-    /// Stateless recurrent fallback for executions without a stepping
-    /// interface: each request's last `seq_len` clicks become one
-    /// left-padded dense window pushed through the full predict. Session
-    /// ids are ignored — there is no cross-request state on this path.
-    fn serve_batch_window(model_gen: &ModelGeneration, jobs: &[Job],
-                          metrics: &ServeMetrics,
-                          decode: Option<DecodeStrategy>)
-        -> Result<()> {
-        let exe = model_gen.exe.as_ref();
-        let spec = &model_gen.spec;
-        let state = model_gen.state.as_ref();
-        let emb = model_gen.emb.as_ref();
-        let m = spec.m_in;
-        let t_len = spec.seq_len;
-        if jobs.len() > spec.batch {
-            bail!("batch of {} jobs exceeds artifact batch {} (lower \
-                   BatcherConfig::max_batch)", jobs.len(), spec.batch);
-        }
-        let mut x = HostTensor::zeros(&[spec.batch, t_len, m]);
-        for (row, job) in jobs.iter().enumerate() {
-            let items = &job.request.user_items;
-            let tail = &items[items.len().saturating_sub(t_len)..];
-            let offset = t_len - tail.len();
-            for (s, &item) in tail.iter().enumerate() {
-                let lo = (row * t_len + offset + s) * m;
-                emb.encode_input(&[item], &mut x.data[lo..lo + m]);
-            }
-        }
-        let probs = exe.predict(&state.params, &BatchInput::Dense(x))?;
-        Self::respond(jobs, &probs.data, spec, emb, metrics, None,
-                      decode);
-        Ok(())
-    }
-
-    /// Shared response tail: decode each output row to its top-N —
-    /// exclusions from `excludes[row]` when given (session serving
-    /// passes the full click history), the request's own items
-    /// otherwise — record metrics, send responses. The decode + top-N
-    /// sweep runs through [`Embedding::decode_top_n_into`], so the
-    /// per-job cost is O(d·k) on the exhaustive route and sublinear on
-    /// the candidate-pruned route (`decode` strategy, falling through
-    /// to the embedding's own default when `None`). The sweep fans
-    /// contiguous job ranges across the global worker pool once the
-    /// flush is big enough to amortize the fork-join; each worker owns
-    /// one [`DecodeScratch`] reused across all its jobs, so the hot
-    /// decode path allocates nothing per request beyond the response
-    /// vector itself. Per-job results are independent, so the
-    /// responses are identical either way; per-flush decode counters
-    /// aggregate into [`ServeMetrics`].
-    fn respond(jobs: &[Job], probs: &[f32], spec: &ArtifactSpec,
-               emb: &dyn Embedding, metrics: &ServeMetrics,
-               excludes: Option<&[Vec<u32>]>,
-               decode: Option<DecodeStrategy>) {
-        let m_out = spec.m_out;
-        // (output row, exclusion list, top_n) per job — no Sender
-        // crosses a thread boundary
-        let work: Vec<(&[f32], &[u32], usize)> = jobs
-            .iter()
-            .enumerate()
-            .map(|(row, job)| {
-                let out_row = &probs[row * m_out..(row + 1) * m_out];
-                let excl: &[u32] = match excludes {
-                    Some(lists) => &lists[row],
-                    None => &job.request.user_items,
-                };
-                (out_row, excl, job.request.top_n)
-            })
-            .collect();
-        let rank_range = |&(lo, hi): &(usize, usize)|
-            -> Vec<(Vec<(usize, f32)>, crate::bloom::DecodeStats)> {
-            let mut scratch = DecodeScratch::new();
-            let mut out = Vec::with_capacity(hi - lo);
-            for &(out_row, excl, top_n) in &work[lo..hi] {
-                let mut items = Vec::with_capacity(top_n);
-                let stats = emb.decode_top_n_into(out_row, excl, top_n,
-                                                  decode, &mut scratch,
-                                                  &mut items);
-                out.push((items, stats));
-            }
-            out
-        };
-        let pool = WorkerPool::global();
-        // fan out only when the flush carries enough decode work to
-        // amortize a fork-join (m_out is a conservative stand-in for
-        // the decode width d — small catalogs stay on the serial,
-        // latency-friendly path)
-        let ranked: Vec<(Vec<(usize, f32)>, crate::bloom::DecodeStats)> =
-            if jobs.len() >= 4
-                && jobs.len() * m_out >= (1 << 13)
-                && pool.threads() > 1
-            {
-                let ranges = split_ranges(work.len(), pool.threads());
-                pool.scope_map(&ranges, rank_range)
-                    .into_iter()
-                    .flatten()
-                    .collect()
-            } else {
-                rank_range(&(0, work.len()))
-            };
-        let mut responses = Vec::with_capacity(jobs.len());
-        let mut lats = Vec::with_capacity(jobs.len());
-        let (mut scored, mut catalog) = (0u64, 0u64);
-        let (mut pruned, mut fallbacks) = (0u64, 0u64);
-        for (job, (items, stats)) in jobs.iter().zip(ranked) {
-            let latency = job.enqueued.elapsed();
-            lats.push(latency.as_micros() as f64);
-            responses.push(RecResponse { items, latency });
-            scored += stats.scored as u64;
-            catalog += stats.catalog as u64;
-            pruned += stats.pruned as u64;
-            fallbacks += stats.fallback as u64;
-        }
-        // record BEFORE responding: clients may read the metrics as soon
-        // as their response arrives
-        metrics.record_batch(&lats,
-                             jobs.len() as f64 / spec.batch as f64);
-        metrics.record_decode(scored, catalog, pruned, fallbacks);
-        for (job, resp) in jobs.iter().zip(responses) {
-            let _ = job.respond.send(resp);
-        }
-    }
-
-    /// Encode a job batch for the backend: sparse active-position rows on
-    /// the hot path (never materializing the `[batch, m_in]` multi-hot)
-    /// whenever both the executable and the embedding support it.
-    fn encode_jobs(exe: &dyn Execution, spec: &ArtifactSpec,
-                   emb: &dyn Embedding, jobs: &[Job]) -> BatchInput {
-        let rows: Vec<&[u32]> = jobs
-            .iter()
-            .map(|job| job.request.user_items.as_slice())
-            .collect();
-        encode_item_rows(spec, emb, &rows, exe.supports_sparse_input())
+        let router = Router::start(rt, spec, state, emb, cfg)?;
+        let metrics = Arc::clone(router.metrics());
+        Ok(Server { router, metrics })
     }
 
     /// Submit a request; returns a receiver for the response. Unbounded:
     /// the request is queued no matter how deep the backlog is — use
-    /// [`Server::try_submit`] for admission control.
+    /// [`Server::try_submit`] for admission control. The router picks
+    /// the replica: session-affine for stateful requests (under the
+    /// high-water mark), shortest queue otherwise.
     pub fn submit(&self, request: RecRequest)
         -> mpsc::Receiver<RecResponse> {
-        let (respond, rx) = mpsc::channel();
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(Job { request, enqueued: Instant::now(), respond })
-            .expect("workers alive");
-        rx
+        self.router.submit(request)
     }
 
     /// Bounded submit: admit the request only while fewer than
@@ -743,19 +388,7 @@ impl Server {
     /// (shed load, caller retries or degrades) when the queue is full.
     pub fn try_submit(&self, request: RecRequest)
         -> Option<mpsc::Receiver<RecResponse>> {
-        // optimistic admission: reserve a slot, back out if over the cap
-        if self.in_flight.fetch_add(1, Ordering::SeqCst)
-            >= self.queue_cap {
-            self.in_flight.fetch_sub(1, Ordering::SeqCst);
-            return None;
-        }
-        let (respond, rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(Job { request, enqueued: Instant::now(), respond })
-            .expect("workers alive");
-        Some(rx)
+        self.router.try_submit(request)
     }
 
     /// Blocking convenience call.
@@ -764,116 +397,436 @@ impl Server {
     }
 
     pub fn pending(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+        self.router.pending()
     }
 
-    /// Number of live session states in the recurrent serving cache.
+    /// Number of live session states summed over every replica's
+    /// recurrent serving cache.
     pub fn session_count(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        self.router.session_count()
+    }
+
+    /// The dispatch layer, for replica-level observability
+    /// ([`Router::replica_for`], [`Router::queue_depths`],
+    /// [`Router::session_counts`], ...).
+    pub fn router(&self) -> &Router {
+        &self.router
     }
 
     /// Atomically replace the serving model with a packed artifact
-    /// (`bloomrec pack` output). The artifact is fully validated —
-    /// schema version, manifest/payload shape consistency, per-tensor
-    /// and whole-payload sha256 — and its execution compiled *before*
-    /// anything is installed; any failure leaves the current
-    /// generation serving untouched and bumps the `swaps_rejected`
-    /// metric.
+    /// (`bloomrec pack` output) on every replica. The artifact is
+    /// fully validated — schema version, manifest/payload shape
+    /// consistency, per-tensor and whole-payload sha256 — and its
+    /// execution compiled *before* anything is installed; any failure
+    /// leaves every replica's current generation serving untouched and
+    /// bumps the `swaps_rejected` metric.
     ///
-    /// The install is a single pointer store under the generation
-    /// lock. Workers pin the generation once per flush, so in-flight
-    /// flushes finish entirely on the old weights and every later
-    /// flush runs entirely on the new ones — no batch ever mixes
-    /// generations. Recurrent session states drain in the same
-    /// critical section (counted in the report and the
-    /// `sessions_drained` metric): a hidden state advanced by the old
-    /// weights is never resumed under the new ones, and a put-back
-    /// from a still-running old-generation flush dies on the session
-    /// cache's epoch check.
+    /// The install is one pointer store per replica under that
+    /// replica's generation lock — a rolling deploy across replicas in
+    /// one call. A replica pins its generation once per flush, so no
+    /// flush (hence no response) ever mixes generations; during the
+    /// roll, different replicas may briefly answer from different
+    /// generations, each internally consistent. Recurrent session
+    /// states drain per replica in the same critical section (summed
+    /// in the report and the `sessions_drained` metric): a hidden
+    /// state advanced by the old weights is never resumed under the
+    /// new ones, and a put-back from a still-running old-generation
+    /// flush dies on that replica's session-cache epoch check.
     pub fn swap_artifact(&self, dir: &Path) -> Result<SwapReport> {
-        match self.validate_and_swap(dir) {
-            Ok(report) => {
-                self.metrics.record_swap(true, report.sessions_drained);
-                crate::info!(
-                    "hot-swapped artifact {} in ({}; {} sessions \
-                     drained)",
-                    dir.display(), report.spec_name,
-                    report.sessions_drained);
-                Ok(report)
-            }
-            Err(e) => {
-                self.metrics.record_swap(false, 0);
-                crate::warn_!("rejected artifact swap from {}: {e}",
-                              dir.display());
-                Err(e)
-            }
-        }
+        self.router.swap_artifact(dir)
     }
 
-    fn validate_and_swap(&self, dir: &Path) -> Result<SwapReport> {
-        let loaded = crate::artifact::load(dir)?;
-        let exe = self.rt.load_spec(&loaded.spec)?;
-        let emb = match loaded.embedding() {
-            Some(emb) => emb,
-            None => {
-                // artifact without a Bloom config: keep the serving
-                // embedding, but only if the wires line up
-                let cur = Arc::clone(&*self.current.read().unwrap());
-                if cur.emb.m_in() != loaded.spec.m_in
-                    || cur.emb.m_out() != loaded.spec.m_out
-                {
-                    bail!(
-                        "artifact {} carries no Bloom hash config and \
-                         its wires ({}, {}) do not match the serving \
-                         embedding's ({}, {})",
-                        dir.display(), loaded.spec.m_in,
-                        loaded.spec.m_out, cur.emb.m_in(),
-                        cur.emb.m_out());
-                }
-                Arc::clone(&cur.emb)
-            }
-        };
-        let spec_name = loaded.spec.name.clone();
-        let git_sha = loaded.provenance.git_sha.clone();
-        let state = Arc::new(loaded.state);
-        // nothing above touched the serving path; install now. Lock
-        // order (generation write lock, then session lock) cannot
-        // deadlock with workers: they hold the generation read guard
-        // only for the per-flush Arc clone and take the session lock
-        // separately, never both at once.
-        let drained;
-        {
-            let mut slot = self.current.write().unwrap();
-            let mut cache = self.sessions.lock().unwrap();
-            let (epoch, n) = cache.advance_epoch();
-            drained = n;
-            *slot = Arc::new(ModelGeneration {
-                exe,
-                spec: loaded.spec,
-                state,
-                emb,
-                epoch,
-            });
-        }
-        Ok(SwapReport { spec_name, sessions_drained: drained, git_sha })
-    }
-
-    /// Stop accepting requests and join the workers.
+    /// Stop accepting requests and join the replicas. The queues drain
+    /// first: every request admitted before shutdown receives its
+    /// response (computed, or error-marked if its flush fails) before
+    /// the workers join.
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.router.shutdown_now();
     }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+// ---------------------------------------------------------------------
+// Flush engine: everything that happens to a batch of jobs once a
+// replica's flush loop pulls it. Called from `serve/router.rs`.
+// ---------------------------------------------------------------------
+
+pub(crate) fn serve_flush(model_gen: &ModelGeneration, jobs: &[Job],
+                          metrics: &ServeMetrics,
+                          sessions: &Mutex<SessionCache>,
+                          decode: Option<DecodeStrategy>) -> Result<()> {
+    let exe = model_gen.exe.as_ref();
+    let spec = &model_gen.spec;
+    if spec.seq_len > 0 {
+        // the stateful path needs a stepping interpreter (native);
+        // executions without one (PJRT runs the AOT full-window
+        // artifact) fall back to stateless window predicts
+        return if exe.supports_batched_stepping() {
+            serve_flush_recurrent(model_gen, jobs, metrics, sessions,
+                                  decode)
+        } else if exe.supports_stepping() {
+            serve_flush_recurrent_sequential(model_gen, jobs, metrics,
+                                             sessions, decode)
+        } else {
+            serve_flush_window(model_gen, jobs, metrics, decode)
+        };
+    }
+    let emb = model_gen.emb.as_ref();
+    let x = encode_jobs(exe, spec, emb, jobs);
+    let probs = exe.predict(&model_gen.state.params, &x)?;
+    respond(jobs, &probs.data, spec, emb, metrics, None, decode);
+    Ok(())
+}
+
+/// Answer every job of a failed flush with an error-marked response —
+/// the zero-drop contract: admission implies a response, even when the
+/// batch itself could not be served.
+pub(crate) fn fail_jobs(jobs: &[Job], metrics: &ServeMetrics,
+                        err: &anyhow::Error) {
+    let msg = format!("{err:#}");
+    for job in jobs {
+        let latency = job.enqueued.elapsed();
+        metrics.record_latency_us(latency.as_micros() as f64);
+        let _ = job.respond.send(RecResponse {
+            items: Vec::new(),
+            latency,
+            degraded: job.degraded,
+            error: Some(ServeError::BatchFailed(msg.clone())),
+        });
+    }
+    metrics.record_failed(jobs.len() as u64);
+}
+
+/// Check each job's session out of the cache (or open a fresh one).
+/// Callers guarantee the flush holds at most one job per session id
+/// (duplicates are rerouted to the sequential path, which chains
+/// them in submission order).
+fn checkout_sessions(exe: &dyn Execution, jobs: &[Job],
+                     sessions: &Mutex<SessionCache>)
+    -> Result<Vec<SessionEntry>> {
+    let mut entries = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let entry = match job
+            .request
+            .session
+            .and_then(|id| sessions.lock().unwrap().take(id))
+        {
+            Some(entry) => entry,
+            None => SessionEntry {
+                state: exe.begin_state(1)?,
+                seen: Vec::new(),
+            },
+        };
+        entries.push(entry);
+    }
+    Ok(entries)
+}
+
+/// Micro-batched stateful serving — the scheduler's recurrent hot
+/// path. The flush's sessions are checked out together and advanced
+/// in *rounds*: round `i` packs the hidden states of every session
+/// with an i-th new click into one
+/// [`crate::runtime::BatchedHiddenState`], encodes those clicks as
+/// one sparse batch, and runs a single [`Execution::step_batch`] —
+/// one blocked `[N, h] @ [h, G*h]` GEMM for all N sessions instead
+/// of N rows=1 matmuls. Sessions join and leave rounds as their
+/// click lists run out (ragged batches); one batched readout scores
+/// every job at the end, then states scatter back into the cache.
+/// Per-session results are bit-identical to the sequential path —
+/// rows of a batched step are independent.
+fn serve_flush_recurrent(model_gen: &ModelGeneration, jobs: &[Job],
+                         metrics: &ServeMetrics,
+                         sessions: &Mutex<SessionCache>,
+                         decode: Option<DecodeStrategy>)
+    -> Result<()> {
+    // Two requests for one session in the same flush would race on
+    // the checked-out state (the later put-back would clobber the
+    // earlier one's advanced state). The sequential path chains
+    // them in submission order instead — take that path for the
+    // whole (rare, protocol-violating) flush.
+    let mut ids: Vec<u64> = jobs
+        .iter()
+        .filter_map(|j| j.request.session)
+        .collect();
+    ids.sort_unstable();
+    if ids.windows(2).any(|w| w[0] == w[1]) {
+        return serve_flush_recurrent_sequential(model_gen, jobs,
+                                                metrics, sessions,
+                                                decode);
+    }
+    let exe = model_gen.exe.as_ref();
+    let spec = &model_gen.spec;
+    let state = model_gen.state.as_ref();
+    let emb = model_gen.emb.as_ref();
+    let m_in = spec.m_in;
+    let mut entries = checkout_sessions(exe, jobs, sessions)?;
+    let rounds = jobs
+        .iter()
+        .map(|j| j.request.user_items.len())
+        .max()
+        .unwrap_or(0);
+    let mut scratch: Vec<(u32, f32)> = Vec::new();
+    for round in 0..rounds {
+        let active: Vec<usize> = (0..jobs.len())
+            .filter(|&i| round < jobs[i].request.user_items.len())
+            .collect();
+        // pack the active sessions' states into one [N, h] matrix
+        let refs: Vec<&HiddenState> =
+            active.iter().map(|&i| &entries[i].state).collect();
+        let mut packed = BatchedHiddenState::gather(&refs)?;
+        // encode this round's clicks, one row per active session
+        let mut sb = SparseBatch::new(m_in);
+        let mut sparse_ok = true;
+        for &i in &active {
+            let item = jobs[i].request.user_items[round];
+            if !emb.encode_input_sparse(&[item], &mut scratch) {
+                sparse_ok = false;
+                break;
+            }
+            sb.push_row(&scratch);
+        }
+        let x = if sparse_ok {
+            BatchInput::Sparse(sb)
+        } else {
+            let mut t =
+                HostTensor::zeros(&[active.len(), m_in]);
+            for (row, &i) in active.iter().enumerate() {
+                let item = jobs[i].request.user_items[round];
+                emb.encode_input(
+                    &[item],
+                    &mut t.data[row * m_in..(row + 1) * m_in]);
+            }
+            BatchInput::Dense(t)
+        };
+        exe.step_batch(&state.params, &mut packed, &x)?;
+        // scatter the advanced rows back to the per-session states
+        for (row, &i) in active.iter().enumerate() {
+            packed.copy_row_into(row, &mut entries[i].state, 0)?;
+            let item = jobs[i].request.user_items[round];
+            if !entries[i].seen.contains(&item) {
+                entries[i].seen.push(item);
+            }
         }
     }
+    // one batched readout scores every job of the flush
+    let refs: Vec<&HiddenState> =
+        entries.iter().map(|e| &e.state).collect();
+    let packed = BatchedHiddenState::gather(&refs)?;
+    let out = exe.readout_batch(&state.params, &packed)?;
+    let excludes: Vec<Vec<u32>> =
+        entries.iter().map(|e| e.seen.clone()).collect();
+    for (job, entry) in jobs.iter().zip(entries) {
+        if let Some(id) = job.request.session {
+            sessions
+                .lock()
+                .unwrap()
+                .put(id, entry, model_gen.epoch);
+        }
+    }
+    respond(jobs, &out.data, spec, emb, metrics,
+            Some(excludes.as_slice()), decode);
+    Ok(())
+}
+
+/// Sequential stateful fallback for executions that can step but not
+/// batch-step: resume (or open) each job's session, advance its
+/// hidden state one [`Execution::step`] per new click — the
+/// O(k·G·h) incremental path — read the output head out, and check
+/// the session back into the cache. The session's full click
+/// history (not just this request's items) is excluded from top-N.
+fn serve_flush_recurrent_sequential(
+    model_gen: &ModelGeneration, jobs: &[Job],
+    metrics: &ServeMetrics, sessions: &Mutex<SessionCache>,
+    decode: Option<DecodeStrategy>) -> Result<()> {
+    let exe = model_gen.exe.as_ref();
+    let spec = &model_gen.spec;
+    let state = model_gen.state.as_ref();
+    let emb = model_gen.emb.as_ref();
+    let m_in = spec.m_in;
+    let m_out = spec.m_out;
+    let mut probs = vec![0.0f32; jobs.len() * m_out];
+    let mut excludes: Vec<Vec<u32>> = Vec::with_capacity(jobs.len());
+    let mut scratch: Vec<(u32, f32)> = Vec::new();
+    for (row, job) in jobs.iter().enumerate() {
+        let mut entry = match job
+            .request
+            .session
+            .and_then(|id| sessions.lock().unwrap().take(id))
+        {
+            Some(entry) => entry,
+            None => SessionEntry {
+                state: exe.begin_state(1)?,
+                seen: Vec::new(),
+            },
+        };
+        for &item in &job.request.user_items {
+            let x = if emb.encode_input_sparse(&[item], &mut scratch)
+            {
+                let mut sb = SparseBatch::new(m_in);
+                sb.push_row(&scratch);
+                BatchInput::Sparse(sb)
+            } else {
+                let mut t = HostTensor::zeros(&[1, m_in]);
+                emb.encode_input(&[item], &mut t.data);
+                BatchInput::Dense(t)
+            };
+            exe.step(&state.params, &mut entry.state, &x)?;
+            if !entry.seen.contains(&item) {
+                entry.seen.push(item);
+            }
+        }
+        let out = exe.readout(&state.params, &entry.state)?;
+        probs[row * m_out..(row + 1) * m_out]
+            .copy_from_slice(&out.data[..m_out]);
+        excludes.push(entry.seen.clone());
+        if let Some(id) = job.request.session {
+            sessions
+                .lock()
+                .unwrap()
+                .put(id, entry, model_gen.epoch);
+        }
+    }
+    respond(jobs, &probs, spec, emb, metrics,
+            Some(excludes.as_slice()), decode);
+    Ok(())
+}
+
+/// Stateless recurrent fallback for executions without a stepping
+/// interface: each request's last `seq_len` clicks become one
+/// left-padded dense window pushed through the full predict. Session
+/// ids are ignored — there is no cross-request state on this path.
+fn serve_flush_window(model_gen: &ModelGeneration, jobs: &[Job],
+                      metrics: &ServeMetrics,
+                      decode: Option<DecodeStrategy>)
+    -> Result<()> {
+    let exe = model_gen.exe.as_ref();
+    let spec = &model_gen.spec;
+    let state = model_gen.state.as_ref();
+    let emb = model_gen.emb.as_ref();
+    let m = spec.m_in;
+    let t_len = spec.seq_len;
+    if jobs.len() > spec.batch {
+        bail!("batch of {} jobs exceeds artifact batch {} (lower \
+               BatcherConfig::max_batch)", jobs.len(), spec.batch);
+    }
+    let mut x = HostTensor::zeros(&[spec.batch, t_len, m]);
+    for (row, job) in jobs.iter().enumerate() {
+        let items = &job.request.user_items;
+        let tail = &items[items.len().saturating_sub(t_len)..];
+        let offset = t_len - tail.len();
+        for (s, &item) in tail.iter().enumerate() {
+            let lo = (row * t_len + offset + s) * m;
+            emb.encode_input(&[item], &mut x.data[lo..lo + m]);
+        }
+    }
+    let probs = exe.predict(&state.params, &BatchInput::Dense(x))?;
+    respond(jobs, &probs.data, spec, emb, metrics, None, decode);
+    Ok(())
+}
+
+/// Shared response tail: decode each output row to its top-N —
+/// exclusions from `excludes[row]` when given (session serving
+/// passes the full click history), the request's own items
+/// otherwise — record metrics, send responses. The decode + top-N
+/// sweep runs through [`Embedding::decode_top_n_into`], so the
+/// per-job cost is O(d·k) on the exhaustive route and sublinear on
+/// the candidate-pruned route (`decode` strategy, falling through
+/// to the embedding's own default when `None`). The sweep fans
+/// contiguous job ranges across the global worker pool once the
+/// flush is big enough to amortize the fork-join; each worker owns
+/// one [`DecodeScratch`] reused across all its jobs, so the hot
+/// decode path allocates nothing per request beyond the response
+/// vector itself (latency recording is an allocation-free histogram
+/// write). Per-job results are independent, so the responses are
+/// identical either way; per-flush decode counters aggregate into
+/// [`ServeMetrics`].
+fn respond(jobs: &[Job], probs: &[f32], spec: &ArtifactSpec,
+           emb: &dyn Embedding, metrics: &ServeMetrics,
+           excludes: Option<&[Vec<u32>]>,
+           decode: Option<DecodeStrategy>) {
+    let m_out = spec.m_out;
+    // (output row, exclusion list, top_n) per job — no Sender
+    // crosses a thread boundary
+    let work: Vec<(&[f32], &[u32], usize)> = jobs
+        .iter()
+        .enumerate()
+        .map(|(row, job)| {
+            let out_row = &probs[row * m_out..(row + 1) * m_out];
+            let excl: &[u32] = match excludes {
+                Some(lists) => &lists[row],
+                None => &job.request.user_items,
+            };
+            (out_row, excl, job.request.top_n)
+        })
+        .collect();
+    let rank_range = |&(lo, hi): &(usize, usize)|
+        -> Vec<(Vec<(usize, f32)>, crate::bloom::DecodeStats)> {
+        let mut scratch = DecodeScratch::new();
+        let mut out = Vec::with_capacity(hi - lo);
+        for &(out_row, excl, top_n) in &work[lo..hi] {
+            let mut items = Vec::with_capacity(top_n);
+            let stats = emb.decode_top_n_into(out_row, excl, top_n,
+                                              decode, &mut scratch,
+                                              &mut items);
+            out.push((items, stats));
+        }
+        out
+    };
+    let pool = WorkerPool::global();
+    // fan out only when the flush carries enough decode work to
+    // amortize a fork-join (m_out is a conservative stand-in for
+    // the decode width d — small catalogs stay on the serial,
+    // latency-friendly path)
+    let ranked: Vec<(Vec<(usize, f32)>, crate::bloom::DecodeStats)> =
+        if jobs.len() >= 4
+            && jobs.len() * m_out >= (1 << 13)
+            && pool.threads() > 1
+        {
+            let ranges = split_ranges(work.len(), pool.threads());
+            pool.scope_map(&ranges, rank_range)
+                .into_iter()
+                .flatten()
+                .collect()
+        } else {
+            rank_range(&(0, work.len()))
+        };
+    let mut responses = Vec::with_capacity(jobs.len());
+    let (mut scored, mut catalog) = (0u64, 0u64);
+    let (mut pruned, mut fallbacks) = (0u64, 0u64);
+    for (job, (items, stats)) in jobs.iter().zip(ranked) {
+        let latency = job.enqueued.elapsed();
+        // allocation-free histogram write — the per-job hot path
+        metrics.record_latency_us(latency.as_micros() as f64);
+        responses.push(RecResponse {
+            items,
+            latency,
+            degraded: job.degraded,
+            error: None,
+        });
+        scored += stats.scored as u64;
+        catalog += stats.catalog as u64;
+        pruned += stats.pruned as u64;
+        fallbacks += stats.fallback as u64;
+    }
+    // record BEFORE responding: clients may read the metrics as soon
+    // as their response arrives
+    metrics.record_flush(jobs.len(),
+                         jobs.len() as f64 / spec.batch as f64);
+    metrics.record_decode(scored, catalog, pruned, fallbacks);
+    for (job, resp) in jobs.iter().zip(responses) {
+        let _ = job.respond.send(resp);
+    }
+}
+
+/// Encode a job batch for the backend: sparse active-position rows on
+/// the hot path (never materializing the `[batch, m_in]` multi-hot)
+/// whenever both the executable and the embedding support it.
+fn encode_jobs(exe: &dyn Execution, spec: &ArtifactSpec,
+               emb: &dyn Embedding, jobs: &[Job]) -> BatchInput {
+    let rows: Vec<&[u32]> = jobs
+        .iter()
+        .map(|job| job.request.user_items.as_slice())
+        .collect();
+    encode_item_rows(spec, emb, &rows, exe.supports_sparse_input())
 }
 
 /// Build the standard serving embedding: a Bloom decode over a hash

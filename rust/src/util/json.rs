@@ -106,6 +106,14 @@ impl Json {
         s
     }
 
+    /// Single-line rendering (no newlines anywhere), for JSON-lines
+    /// streams such as the periodic serving-metrics snapshots.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -442,6 +450,15 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let emitted = v.to_string_pretty();
         assert_eq!(Json::parse(&emitted).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_round_trips() {
+        let src = r#"{"arr": [1, 2.5, "s"], "b": false, "n": null}"#;
+        let v = Json::parse(src).unwrap();
+        let line = v.to_string_compact();
+        assert!(!line.contains('\n'), "{line}");
+        assert_eq!(Json::parse(&line).unwrap(), v);
     }
 
     #[test]

@@ -612,3 +612,287 @@ fn shutdown_drains_and_joins() {
     rx.recv().expect("response before shutdown");
     server.shutdown(); // must not hang or panic
 }
+
+/// The zero-drop half of the shutdown contract: every request admitted
+/// before `shutdown()` gets a real response, even when shutdown lands
+/// while the whole backlog is still queued behind a slow batching
+/// deadline. (The workers drain their queues before joining.)
+#[test]
+fn shutdown_answers_every_admitted_request() {
+    let Some(f) = fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 64,
+                // long deadline: the backlog is still queued when
+                // shutdown arrives (channel close short-circuits it)
+                max_wait: Duration::from_millis(400),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+    let items = f.ds.test[0].input_items().to_vec();
+    let want = direct_top_n(&f, &items, 3);
+    let rxs: Vec<_> = (0..40)
+        .map(|_| server.submit(RecRequest::new(items.clone(), 3)))
+        .collect();
+    server.shutdown(); // drains the 40 queued jobs before joining
+    for rx in rxs {
+        let resp = rx.recv()
+            .expect("admitted request answered across shutdown");
+        assert!(resp.error.is_none(), "drained response errored");
+        let got: Vec<usize> =
+            resp.items.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, want);
+    }
+}
+
+/// Affinity property: with N replicas and randomized session ids, every
+/// session's hidden state is cached on exactly its home replica
+/// (`Router::replica_for`), across multiple click waves — states never
+/// migrate and shards never double-cache.
+#[test]
+fn sessions_stay_on_their_home_replica() {
+    use bloomrec::util::rng::Rng;
+    let Some(f) = recurrent_fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 4,
+            high_water: usize::MAX, // never degrade in this test
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    // randomized ids over the full u64 space, distinct
+    let mut rng = Rng::new(0xA11F);
+    let mut ids: Vec<u64> = (0..16).map(|_| rng.next_u64()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let sessions: Vec<(u64, Vec<u32>)> = f.ds.test.iter()
+        .filter_map(|e| {
+            let v: Vec<u32> = e.input_items().iter().copied()
+                .filter(|&i| i != PAD).collect();
+            (!v.is_empty()).then_some(v)
+        })
+        .take(ids.len())
+        .zip(ids.iter().copied())
+        .map(|(clicks, id)| (id, clicks))
+        .collect();
+
+    // two click waves per session, concurrent across sessions
+    for wave in 0..2 {
+        let rxs: Vec<_> = sessions.iter()
+            .map(|(id, clicks)| {
+                let click = clicks[wave % clicks.len()];
+                server.submit(RecRequest::session(*id, vec![click], 5))
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().expect("resp");
+            assert!(!resp.degraded, "under high_water, never degraded");
+        }
+        // after every wave: each session cached exactly on its home
+        for (id, _) in &sessions {
+            let home = server.router().replica_for(*id);
+            assert_eq!(server.router().session_replica(*id), Some(home),
+                       "session {id} strayed from its home replica");
+        }
+        let counts = server.router().session_counts();
+        assert_eq!(counts.len(), 4);
+        assert_eq!(counts.iter().sum::<usize>(), sessions.len(),
+                   "shards double-cached a session: {counts:?}");
+    }
+    server.shutdown();
+}
+
+/// Forced overload (`high_water: 0`): every stateful request is
+/// admitted, answered through the degraded stateless path (flagged,
+/// counted, bit-identical to a stateless request for the same items),
+/// and nothing is cached or dropped. Stateless traffic is untouched.
+#[test]
+fn overload_degrades_stateful_requests_instead_of_dropping() {
+    let Some(f) = recurrent_fixture() else { return };
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            high_water: 0, // every replica is "over water" from job 1
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    let clicks: Vec<u32> = f.ds.test.iter()
+        .flat_map(|e| e.input_items().iter().copied())
+        .filter(|&i| i != PAD)
+        .take(8)
+        .collect();
+    assert_eq!(clicks.len(), 8);
+
+    for (sid, &click) in clicks.iter().enumerate() {
+        let resp = server.recommend(
+            RecRequest::session(sid as u64 + 1, vec![click], 5));
+        assert!(resp.degraded, "over high water must degrade");
+        assert!(resp.error.is_none(), "degraded is answered, not failed");
+        // degraded == the stateless answer for the same item window
+        let stateless =
+            server.recommend(RecRequest::new(vec![click], 5));
+        assert!(!stateless.degraded,
+                "stateless requests are never marked degraded");
+        assert_eq!(resp.items, stateless.items,
+                   "degraded response must equal the stateless path");
+    }
+    assert_eq!(server.session_count(), 0,
+               "degraded requests must not populate session caches");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.degraded_responses, clicks.len() as u64,
+               "exactly one degraded tick per stateful request");
+    assert_eq!(snap.failed_responses, 0);
+    assert_eq!(snap.requests, 2 * clicks.len() as u64);
+    assert_eq!(snap.queue_depths.len(), 2);
+    server.shutdown();
+}
+
+/// One `swap_artifact` call rolls all replicas: under continuous
+/// concurrent load on a 4-replica tier, every response matches exactly
+/// one generation (never a mix), traffic after the call settles on the
+/// new weights everywhere, and the roll reports as ONE applied swap.
+#[test]
+fn swap_rolls_every_replica_under_concurrent_load() {
+    use bloomrec::artifact;
+    use bloomrec::model::ModelState;
+    use bloomrec::util::rng::Rng;
+
+    let Some(f) = fixture() else { return };
+    let state_b = ModelState::init(&f.predict, &mut Rng::new(777));
+    let dir = std::env::temp_dir().join(format!(
+        "bloomrec_swap_roll_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let bloom = f.emb.as_bloom().expect("serving embedding is Bloom");
+    artifact::pack(&dir, &f.predict, &state_b, Some(bloom)).expect("pack");
+
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 4,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    let queries: Vec<Vec<u32>> = f.ds.test.iter().take(12)
+        .map(|e| e.input_items().to_vec())
+        .collect();
+    let want_a: Vec<Vec<usize>> = queries.iter()
+        .map(|q| direct_top_n_for(&f, &f.state, q, 5)).collect();
+    let want_b: Vec<Vec<usize>> = queries.iter()
+        .map(|q| direct_top_n_for(&f, &state_b, q, 5)).collect();
+    assert!(want_a != want_b);
+
+    // hammer all replicas from a client thread while the main thread
+    // rolls the swap mid-stream
+    std::thread::scope(|s| {
+        let server = &server;
+        let queries = &queries;
+        let (want_a, want_b) = (&want_a, &want_b);
+        s.spawn(move || {
+            for round in 0..30 {
+                let rxs: Vec<_> = queries.iter()
+                    .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+                    .collect();
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let got: Vec<usize> = rx.recv().expect("resp")
+                        .items.iter().map(|&(i, _)| i).collect();
+                    assert!(got == want_a[i] || got == want_b[i],
+                            "round {round} query {i} mixed generations: \
+                             {got:?}");
+                }
+            }
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        server.swap_artifact(&dir).expect("swap accepted");
+    });
+
+    // settled: every replica serves model B. Stateless requests go to
+    // the shortest queue; an idle tier spreads them round-robin, so 4x
+    // the query set touches every replica with high probability
+    for _ in 0..4 {
+        let rxs: Vec<_> = queries.iter()
+            .map(|q| server.submit(RecRequest::new(q.clone(), 5)))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let got: Vec<usize> = rx.recv().expect("resp")
+                .items.iter().map(|&(i, _)| i).collect();
+            assert_eq!(got, want_b[i], "a replica kept the old model");
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.swaps_applied, 1, "one roll == one applied swap");
+    assert_eq!(snap.swaps_rejected, 0);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CI load-smoke: two short Zipf load rounds against a 2-replica tier.
+/// Zero-drop (completed == sent, failed == 0), live per-replica
+/// gauges, and counters that only ever move forward between snapshots.
+/// `--ignored`: it sustains wall-clock load, so it runs in its own CI
+/// leg rather than inside the unit sweep.
+#[test]
+#[ignore]
+fn load_smoke() {
+    use bloomrec::serve::{run_load, LoadConfig};
+    use bloomrec::util::rng::Rng;
+    let Some(f) = recurrent_fixture() else { return };
+    let d = f.ds.d;
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+    let mut rng = Rng::new(11);
+    let pool = bloomrec::data::sequences::generate_serve_sessions(
+        d, 256, 6, &mut rng);
+    let cfg = LoadConfig {
+        users: 10_000,
+        concurrency: 8,
+        duration: Duration::from_millis(400),
+        stateful: true,
+        ..LoadConfig::default()
+    };
+
+    let r1 = run_load(&server, &pool, &cfg);
+    assert!(r1.sent > 0, "harness generated no traffic");
+    assert_eq!(r1.completed, r1.sent, "dropped responses in round 1");
+    assert_eq!(r1.failed, 0);
+    let s1 = server.metrics.snapshot();
+    assert_eq!(s1.queue_depths.len(), 2);
+
+    let r2 = run_load(&server, &pool, &cfg);
+    assert_eq!(r2.completed, r2.sent, "dropped responses in round 2");
+    assert_eq!(r2.failed, 0);
+    let s2 = server.metrics.snapshot();
+
+    // counters are cumulative and monotone across rounds
+    assert!(s2.requests >= s1.requests + r2.sent,
+            "requests went backwards: {} then {}", s1.requests,
+            s2.requests);
+    assert!(s2.batches >= s1.batches);
+    assert!(s2.degraded_responses >= s1.degraded_responses);
+    assert_eq!(s2.failed_responses, 0);
+    server.shutdown();
+}
