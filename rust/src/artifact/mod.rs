@@ -20,6 +20,22 @@
 //! bounds and per-segment + whole-payload sha256. A corrupt or
 //! incompatible artifact is rejected with a useful error and no
 //! partially-loaded state.
+//!
+//! # Quantized (int8) artifacts — schema version 2
+//!
+//! When the spec's precision tier is [`Precision::Int8`], [`pack`]
+//! quantizes the feed-forward weight matrices through the execution's
+//! own [`Execution::quantize_params`] policy (weights -> per-block int8
+//! panels, biases stay f32) and writes schema version 2: each weight
+//! becomes an `"i8"` segment holding the [`PackedBQ8`] panel bytes plus
+//! a paired f32 `<name>__scales` segment, and the manifest grows a
+//! `quant` section recording the block geometry so a loader built with
+//! different kernel constants refuses the artifact instead of silently
+//! mis-applying scales. f32 packs keep writing schema version 1
+//! byte-identically, and [`load`] accepts both versions — old artifacts
+//! keep loading forever. Int8 loads also install the *dequantized* f32
+//! weights into `state.params` so every non-quantized consumer (train
+//! resume, f32 fallback serving) keeps working.
 
 pub mod sha256;
 
@@ -30,8 +46,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bloom::HashMatrix;
 use crate::embedding::Bloom;
+use crate::linalg::quant::{PackedBQ8, Precision};
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, HostTensor};
+use crate::runtime::{ArtifactSpec, Execution, HostTensor, NativeExecution,
+                     QTensor, QuantizedParams};
 use crate::util::json::{obj, Json};
 
 pub use sha256::{sha256 as sha256_digest, sha256_hex};
@@ -45,7 +63,12 @@ fn req<'a>(j: &'a Json, what: &str, key: &str) -> Result<&'a Json> {
 
 /// Bumped whenever the manifest or payload layout changes shape.
 /// Loaders reject any other version before reading anything else.
+/// f32 artifacts are written at this version so their byte layout
+/// never changes; int8 artifacts use [`SCHEMA_VERSION_INT8`].
 pub const SCHEMA_VERSION: u64 = 1;
+/// Schema version for artifacts carrying int8 weight panels. Loaders
+/// accept both [`SCHEMA_VERSION`] and this.
+pub const SCHEMA_VERSION_INT8: u64 = 2;
 /// Manifest file name inside an artifact directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
 /// Payload file name inside an artifact directory.
@@ -115,7 +138,8 @@ impl Provenance {
 pub struct PackReport {
     /// total payload bytes (weights + hash tables)
     pub payload_bytes: usize,
-    /// bytes of f32 weight segments alone
+    /// bytes of weight segments alone (f32, or int8 panels + f32
+    /// scales + f32 biases under the quantized tier)
     pub weight_bytes: usize,
     /// bytes of u32 Bloom hash-table segments alone
     pub hash_bytes: usize,
@@ -135,6 +159,11 @@ pub struct LoadedArtifact {
     pub hash_out: Option<HashMatrix>,
     pub provenance: Provenance,
     pub payload_bytes: usize,
+    /// Present iff the artifact was packed at the int8 tier: the
+    /// packed weight panels + scales, ready for
+    /// [`Execution::predict_quantized`]. `state.params` then holds the
+    /// dequantized f32 weights as a universal fallback.
+    pub quant: Option<QuantizedParams>,
 }
 
 impl LoadedArtifact {
@@ -189,6 +218,7 @@ impl Segment {
         let dtype = match dtype_s {
             "f32" => "f32",
             "u32" => "u32",
+            "i8" => "i8",
             other => bail!("segment '{name}': unsupported dtype '{other}'"),
         };
         let offset = req(j, &name, "offset")?
@@ -251,6 +281,24 @@ fn f32_segment(name: &str, shape: &[usize], offset: usize, data: &[f32],
         name: name.to_string(),
         shape: shape.to_vec(),
         dtype: "f32",
+        offset,
+        bytes: payload.len() - start,
+        sha256: sha256_hex(&payload[start..]),
+    }
+}
+
+/// Int8 weight-panel segment. `shape` stays the *logical* `[k, n]`
+/// weight shape; the bytes are the column-tiled [`PackedBQ8`] pack
+/// layout (one byte per element, so `bytes == elements()`).
+fn i8_segment(name: &str, shape: &[usize], offset: usize, data: &[i8],
+              payload: &mut Vec<u8>) -> Segment {
+    let start = payload.len();
+    debug_assert_eq!(start, offset);
+    payload.extend(data.iter().map(|&v| v as u8));
+    Segment {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: "i8",
         offset,
         bytes: payload.len() - start,
         sha256: sha256_hex(&payload[start..]),
@@ -339,12 +387,61 @@ pub fn pack(dir: &Path, spec: &ArtifactSpec, state: &ModelState,
     stored.opt_slots = 0;
     stored.file = PAYLOAD_FILE.to_string();
 
+    // Quantize at pack time when the spec opts into the int8 tier. The
+    // execution owns the which-tensors-quantize policy, so the artifact
+    // layer can never disagree with the serving path.
+    let quantized: Option<QuantizedParams> = match spec.precision {
+        Precision::F32 => None,
+        Precision::Int8 => {
+            let exe = NativeExecution::new(stored.clone()).map_err(|e| {
+                anyhow!(
+                    "cannot pack '{}' at the int8 tier: {e} (quantized \
+                     artifacts are limited to feed-forward families)",
+                    spec.name
+                )
+            })?;
+            Some(exe.quantize_params(&state.params)?)
+        }
+    };
+
     let mut payload: Vec<u8> = Vec::new();
     let mut tensors: Vec<Segment> = Vec::with_capacity(state.params.len());
-    for (t, ts) in state.params.iter().zip(&spec.params) {
-        let seg = f32_segment(&ts.name, &t.shape, payload.len(), &t.data,
-                              &mut payload);
-        tensors.push(seg);
+    let mut scale_json: Vec<Json> = Vec::with_capacity(state.params.len());
+    match &quantized {
+        None => {
+            for (t, ts) in state.params.iter().zip(&spec.params) {
+                let seg = f32_segment(&ts.name, &t.shape, payload.len(),
+                                      &t.data, &mut payload);
+                tensors.push(seg);
+            }
+        }
+        Some(q) => {
+            for ((t, ts), qt) in
+                state.params.iter().zip(&spec.params).zip(&q.tensors)
+            {
+                match qt {
+                    QTensor::Q8(p) => {
+                        let seg = i8_segment(&ts.name, &t.shape,
+                                             payload.len(), p.raw_data(),
+                                             &mut payload);
+                        tensors.push(seg);
+                        let sname = format!("{}__scales", ts.name);
+                        let sseg = f32_segment(&sname,
+                                               &[p.raw_scales().len()],
+                                               payload.len(),
+                                               p.raw_scales(), &mut payload);
+                        scale_json.push(sseg.to_json());
+                    }
+                    QTensor::F32(_) => {
+                        let seg = f32_segment(&ts.name, &t.shape,
+                                              payload.len(), &t.data,
+                                              &mut payload);
+                        tensors.push(seg);
+                        scale_json.push(Json::Null);
+                    }
+                }
+            }
+        }
     }
     let weight_bytes = payload.len();
 
@@ -368,9 +465,16 @@ pub fn pack(dir: &Path, spec: &ArtifactSpec, state: &ModelState,
     let hash_bytes = payload.len() - weight_bytes;
 
     let provenance = Provenance::capture();
-    let manifest = obj([
+    let version = if quantized.is_some() {
+        SCHEMA_VERSION_INT8
+    } else {
+        SCHEMA_VERSION
+    };
+    // The `quant` key is only present on int8 artifacts, so f32
+    // manifests stay byte-identical to schema-v1 output.
+    let mut fields: Vec<(&'static str, Json)> = vec![
         ("format", Json::from(FORMAT_TAG)),
-        ("schema_version", Json::from(SCHEMA_VERSION as usize)),
+        ("schema_version", Json::from(version as usize)),
         ("spec", stored.to_json()),
         ("tensors", Json::Arr(tensors.iter().map(Segment::to_json).collect())),
         ("bloom", bloom_json),
@@ -383,7 +487,19 @@ pub fn pack(dir: &Path, spec: &ArtifactSpec, state: &ModelState,
             ]),
         ),
         ("provenance", provenance.to_json()),
-    ]);
+    ];
+    if quantized.is_some() {
+        let (bk, bn) = PackedBQ8::block_dims();
+        fields.push((
+            "quant",
+            obj([
+                ("block_k", Json::from(bk)),
+                ("block_n", Json::from(bn)),
+                ("scales", Json::Arr(scale_json)),
+            ]),
+        ));
+    }
+    let manifest = obj(fields);
 
     fs::create_dir_all(dir)
         .with_context(|| format!("creating artifact dir {}", dir.display()))?;
@@ -461,10 +577,11 @@ pub fn load(dir: &Path) -> Result<LoadedArtifact> {
     let version = req(&root, "manifest", "schema_version")?
         .as_usize()
         .ok_or_else(|| anyhow!("schema_version is not a number"))? as u64;
-    if version != SCHEMA_VERSION {
+    if version != SCHEMA_VERSION && version != SCHEMA_VERSION_INT8 {
         bail!(
             "unsupported artifact schema version {version} (this build \
-             reads version {SCHEMA_VERSION}); re-pack the model"
+             reads versions {SCHEMA_VERSION} and {SCHEMA_VERSION_INT8}); \
+             re-pack the model"
         );
     }
 
@@ -497,19 +614,114 @@ pub fn load(dir: &Path) -> Result<LoadedArtifact> {
                 ts.shape
             );
         }
-        if seg.dtype != "f32" {
-            bail!("tensor segment '{}' has dtype {}", seg.name, seg.dtype);
-        }
-        if seg.bytes != seg.elements() * 4 {
-            bail!(
-                "tensor segment '{}' declares {} bytes for {} f32 \
-                 elements — manifest/payload shape mismatch",
-                seg.name,
-                seg.bytes,
-                seg.elements()
-            );
+        match seg.dtype {
+            "f32" => {
+                if seg.bytes != seg.elements() * 4 {
+                    bail!(
+                        "tensor segment '{}' declares {} bytes for {} f32 \
+                         elements — manifest/payload shape mismatch",
+                        seg.name,
+                        seg.bytes,
+                        seg.elements()
+                    );
+                }
+            }
+            "i8" => {
+                if version != SCHEMA_VERSION_INT8 {
+                    bail!(
+                        "tensor segment '{}' has dtype i8 but the \
+                         manifest declares schema version {version} — \
+                         int8 panels require version {SCHEMA_VERSION_INT8}",
+                        seg.name
+                    );
+                }
+                if seg.shape.len() != 2 {
+                    bail!(
+                        "tensor segment '{}' has dtype i8 but shape {:?} \
+                         — int8 panels are 2-D weight matrices",
+                        seg.name,
+                        seg.shape
+                    );
+                }
+                if seg.bytes != seg.elements() {
+                    bail!(
+                        "tensor segment '{}' declares {} bytes for {} i8 \
+                         elements — manifest/payload shape mismatch",
+                        seg.name,
+                        seg.bytes,
+                        seg.elements()
+                    );
+                }
+            }
+            other => {
+                bail!("tensor segment '{}' has dtype {other}", seg.name)
+            }
         }
     }
+    let any_i8 = tensors.iter().any(|s| s.dtype == "i8");
+
+    // The quant section carries the block geometry the scales were
+    // computed under plus one scales segment per int8 tensor. Validate
+    // it structurally before any payload IO, like everything else.
+    let quant_scales: Option<Vec<Option<Segment>>> = if any_i8 {
+        let qj = req(&root, "manifest", "quant")?;
+        let (bk, bn) = PackedBQ8::block_dims();
+        let got_bk = req(qj, "quant", "block_k")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("quant: bad block_k"))?;
+        let got_bn = req(qj, "quant", "block_n")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("quant: bad block_n"))?;
+        if (got_bk, got_bn) != (bk, bn) {
+            bail!(
+                "artifact was quantized with {got_bk}x{got_bn} blocks but \
+                 this build uses {bk}x{bn} — the scales do not apply; \
+                 re-pack the model"
+            );
+        }
+        let arr = req(qj, "quant", "scales")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("quant scales is not an array"))?;
+        if arr.len() != tensors.len() {
+            bail!(
+                "quant section lists {} scale entries for {} tensors",
+                arr.len(),
+                tensors.len()
+            );
+        }
+        let mut out = Vec::with_capacity(arr.len());
+        for (j, seg) in arr.iter().zip(&tensors) {
+            match (j, seg.dtype) {
+                (Json::Null, "f32") => out.push(None),
+                (Json::Null, _) => bail!(
+                    "int8 tensor segment '{}' has no scales entry",
+                    seg.name
+                ),
+                (s, "i8") => {
+                    let sseg = Segment::from_json(s, "quant scales")?;
+                    if sseg.dtype != "f32" || sseg.bytes != sseg.elements() * 4 {
+                        bail!(
+                            "scales segment '{}' must be f32 (dtype {}, \
+                             {} bytes for {} elements)",
+                            sseg.name,
+                            sseg.dtype,
+                            sseg.bytes,
+                            sseg.elements()
+                        );
+                    }
+                    out.push(Some(sseg));
+                }
+                (_, other) => bail!(
+                    "scales entry present for non-int8 tensor '{}' \
+                     (dtype {other})",
+                    seg.name
+                ),
+            }
+        }
+        Some(out)
+    } else {
+        None
+    };
 
     // 3. payload length (truncation) and whole-file checksum
     let pj = req(&root, "manifest", "payload")?;
@@ -539,16 +751,49 @@ pub fn load(dir: &Path) -> Result<LoadedArtifact> {
         );
     }
 
-    // 4. per-segment bounds + checksums, then (and only then) decode
+    // 4. per-segment bounds + checksums, then (and only then) decode.
+    // Int8 segments are rebuilt into PackedBQ8 panels *and* dequantized
+    // into `params`, so consumers that know nothing about the tier
+    // still get a complete f32 model.
     let mut params: Vec<HostTensor> = Vec::with_capacity(tensors.len());
-    for seg in &tensors {
+    let mut qtensors: Vec<QTensor> = Vec::with_capacity(tensors.len());
+    for (i, seg) in tensors.iter().enumerate() {
         let slice = seg.checked_slice(&payload)?;
-        let data: Vec<f32> = slice
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        params.push(HostTensor::from_vec(&seg.shape, data));
+        match seg.dtype {
+            "f32" => {
+                let data: Vec<f32> = slice
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let t = HostTensor::from_vec(&seg.shape, data);
+                if any_i8 {
+                    qtensors.push(QTensor::F32(t.clone()));
+                }
+                params.push(t);
+            }
+            "i8" => {
+                let data: Vec<i8> = slice.iter().map(|&b| b as i8).collect();
+                let sseg = quant_scales
+                    .as_ref()
+                    .and_then(|qs| qs[i].as_ref())
+                    .expect("validated above: every i8 tensor has scales");
+                let sslice = sseg.checked_slice(&payload)?;
+                let scales: Vec<f32> = sslice
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let p = PackedBQ8::from_raw(seg.shape[0], seg.shape[1],
+                                            data, scales)
+                    .map_err(|e| anyhow!(
+                        "tensor segment '{}': {e}", seg.name
+                    ))?;
+                params.push(HostTensor::from_vec(&seg.shape, p.dequantize()));
+                qtensors.push(QTensor::Q8(p));
+            }
+            _ => unreachable!("dtype validated above"),
+        }
     }
+    let quant = any_i8.then(|| QuantizedParams { tensors: qtensors });
 
     let (hash_in, hash_out) = match root.get("bloom") {
         None | Some(Json::Null) => (None, None),
@@ -610,6 +855,7 @@ pub fn load(dir: &Path) -> Result<LoadedArtifact> {
         hash_out,
         provenance,
         payload_bytes: payload.len(),
+        quant,
     })
 }
 
@@ -659,6 +905,100 @@ mod tests {
         assert_eq!((hin.d, hin.m, hin.k),
                    (bloom.hm_in.d, bloom.hm_in.m, bloom.hm_in.k));
         assert!(loaded.embedding().is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn f32_pack_stays_schema_v1_with_no_quant_section() {
+        let dir = tmp("v1guard");
+        let (spec, state, bloom) = small_model();
+        pack(&dir, &spec, &state, Some(&bloom)).unwrap();
+        let text = fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+        assert!(text.contains("\"schema_version\": 1"),
+                "f32 artifacts must keep writing schema v1");
+        assert!(!text.contains("\"quant\""),
+                "f32 manifests must not grow a quant section");
+        let loaded = load(&dir).unwrap();
+        assert!(loaded.quant.is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn int8_pack_load_round_trips_panels_bitwise() {
+        let qdir = tmp("int8_rt");
+        let (mut spec, state, bloom) = small_model();
+        spec.precision = Precision::Int8;
+        let report = pack(&qdir, &spec, &state, Some(&bloom)).unwrap();
+        assert_eq!(report.tensors, state.params.len());
+
+        let text = fs::read_to_string(qdir.join(MANIFEST_FILE)).unwrap();
+        assert!(text.contains("\"schema_version\": 2"), "{text}");
+        assert!(text.contains("\"quant\""));
+
+        let loaded = load(&qdir).unwrap();
+        assert_eq!(loaded.spec.precision, Precision::Int8);
+        let q = loaded.quant.as_ref().unwrap();
+        assert_eq!(q.tensors.len(), state.params.len());
+        for (i, (qt, t)) in q.tensors.iter().zip(&state.params).enumerate() {
+            match qt {
+                // even indices: weight matrices, panels bitwise equal to
+                // a fresh quantization of the packed f32 weights
+                QTensor::Q8(p) => {
+                    assert_eq!(i % 2, 0);
+                    let fresh = PackedBQ8::quantize(&t.data, t.shape[0],
+                                                    t.shape[1]);
+                    assert_eq!(p.raw_data(), fresh.raw_data());
+                    assert_eq!(p.raw_scales(), fresh.raw_scales());
+                    // weight-matrix payload shrinks >= 3.5x vs f32
+                    let q_bytes = p.bytes();
+                    let f_bytes = t.data.len() * 4;
+                    assert!(q_bytes * 7 <= f_bytes * 2,
+                            "weight {i}: {q_bytes} int8 bytes vs {f_bytes} \
+                             f32 bytes");
+                    // fallback params hold the dequantized weights
+                    assert_eq!(loaded.state.params[i].data, fresh.dequantize());
+                }
+                // odd indices: biases ride along in exact f32
+                QTensor::F32(b) => {
+                    assert_eq!(i % 2, 1);
+                    assert_eq!(b.data, t.data);
+                    assert_eq!(loaded.state.params[i].data, t.data);
+                }
+            }
+        }
+        assert!(loaded.embedding().is_some(),
+                "bloom tables must survive the int8 tier");
+        let _ = fs::remove_dir_all(&qdir);
+    }
+
+    #[test]
+    fn int8_load_rejects_foreign_block_geometry() {
+        let dir = tmp("int8_blk");
+        let (mut spec, state, bloom) = small_model();
+        spec.precision = Precision::Int8;
+        pack(&dir, &spec, &state, Some(&bloom)).unwrap();
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&mpath).unwrap();
+        let (bk, _) = PackedBQ8::block_dims();
+        let needle = format!("\"block_k\": {bk}");
+        assert!(text.contains(&needle), "{text}");
+        fs::write(&mpath, text.replace(&needle, "\"block_k\": 8")).unwrap();
+        let err = load(&dir).unwrap_err();
+        assert!(err.to_string().contains("block"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn int8_pack_rejects_recurrent_families() {
+        let dir = tmp("int8_rnn");
+        let mut spec = crate::runtime::test_rnn_spec("gru", 24, 16, 24, 4, 8);
+        spec.kind = "predict".to_string();
+        spec.opt_slots = 0;
+        spec.precision = Precision::Int8;
+        let mut rng = Rng::new(17);
+        let state = ModelState::init(&spec, &mut rng);
+        let err = pack(&dir, &spec, &state, None).unwrap_err();
+        assert!(err.to_string().contains("int8"), "{err}");
         let _ = fs::remove_dir_all(&dir);
     }
 

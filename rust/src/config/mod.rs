@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::bloom::DecodeStrategy;
 use crate::data::Scale;
+use crate::linalg::Precision;
 
 /// Global options shared by CLI subcommands and the bench harness.
 #[derive(Clone, Debug)]
@@ -35,6 +36,9 @@ pub struct Options {
     /// closed-loop client threads for the load harness
     /// (`--concurrency N`)
     pub concurrency: usize,
+    /// precision tier for `serve` and `pack` (`--precision f32|int8`);
+    /// `None` defers to `BLOOMREC_PRECISION` / the f32 default
+    pub precision: Option<Precision>,
 }
 
 impl Default for Options {
@@ -52,6 +56,7 @@ impl Default for Options {
             replicas: None,
             load: None,
             concurrency: 32,
+            precision: None,
         }
     }
 }
@@ -133,6 +138,12 @@ impl Options {
                     }
                     opts.concurrency = n;
                 }
+                "--precision" => {
+                    let v = req(&mut it, arg)?;
+                    opts.precision = Some(Precision::parse(&v)
+                        .ok_or_else(|| anyhow!(
+                            "bad --precision '{v}' (want f32 or int8)"))?);
+                }
                 _ if arg.starts_with("--") => bail!("unknown flag {arg}"),
                 _ => positional.push(arg.clone()),
             }
@@ -210,6 +221,20 @@ mod tests {
         assert_eq!(pos, vec!["serve", "ml"]);
         assert_eq!(o.artifact, Some(PathBuf::from("out/ml_art")));
         assert!(Options::parse(&sv(&["--artifact"])).is_err());
+    }
+
+    #[test]
+    fn parses_precision_tier() {
+        let (o, _) = Options::parse(&[]).unwrap();
+        assert_eq!(o.precision, None);
+        let (o, _) =
+            Options::parse(&sv(&["--precision", "int8"])).unwrap();
+        assert_eq!(o.precision, Some(Precision::Int8));
+        let (o, _) =
+            Options::parse(&sv(&["--precision", "f32"])).unwrap();
+        assert_eq!(o.precision, Some(Precision::F32));
+        assert!(Options::parse(&sv(&["--precision", "int4"])).is_err());
+        assert!(Options::parse(&sv(&["--precision"])).is_err());
     }
 
     #[test]

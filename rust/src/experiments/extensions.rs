@@ -7,12 +7,23 @@
 //!                  and the phantom-item rate at the ranking level.
 //! * `ext_counting`: counting Bloom embeddings — BE vs counting-BE score
 //!                  ratios at the Table-3 test points.
+//! * `ext_quant`:   the quantized inference tier's accuracy cost —
+//!                  ranking-metric deltas (MAP) of int8-panel + f16
+//!                  serving vs the f32 oracle across the Bloom
+//!                  compression grid, next to the payload-bytes win.
 
 use anyhow::Result;
 
 use super::common::{fmt2, fmt3, Ctx, Table};
-use crate::bloom::{measure_fp, HashMatrix};
-use crate::coordinator::Method;
+use crate::bloom::{measure_fp, DecodeScratch, HashMatrix};
+use crate::coordinator::batcher::{batch_ranges, encode_input_batch};
+use crate::coordinator::{train_serving_model, Method};
+use crate::data::{Dataset, Example, Target};
+use crate::embedding::Embedding;
+use crate::eval::average_precision_from_ranks;
+use crate::linalg::knn::ranks_of;
+use crate::model::ModelState;
+use crate::runtime::{ArtifactSpec, Execution, QuantizedParams};
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 
@@ -49,6 +60,92 @@ pub fn ext_fp(ctx: &Ctx) -> Result<Table> {
                     fmt2(rep.phantom_outrank),
                 ]);
             }
+        }
+    }
+    Ok(table)
+}
+
+/// MAP of a trained serving model over the test split, through either
+/// the f32 predict (`quant = None`) or the quantized tier. Mirrors the
+/// coordinator evaluator's MAP branch (exhaustive decode, consumed
+/// inputs excluded, rank counting) so the two tiers are compared on
+/// the paper's own measure.
+fn map_over_test(exe: &dyn Execution, spec: &ArtifactSpec,
+                 state: &ModelState, emb: &dyn Embedding, ds: &Dataset,
+                 quant: Option<&QuantizedParams>) -> Result<f64> {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    let mut scratch = DecodeScratch::new();
+    let m = spec.m_out;
+    for (lo, hi) in batch_ranges(ds.test.len(), spec.batch) {
+        let batch: Vec<&Example> = ds.test[lo..hi].iter().collect();
+        let x = encode_input_batch(spec, emb, &batch,
+                                   exe.supports_sparse_input());
+        let probs = match quant {
+            Some(q) => exe.predict_quantized(q, &x)?,
+            None => exe.predict(&state.params, &x)?,
+        };
+        for (row, ex) in batch.iter().enumerate() {
+            let Target::Items(items) = &ex.target else { continue };
+            let out_row = &probs.data[row * m..(row + 1) * m];
+            emb.decode_into(out_row, &mut scratch);
+            for &it in ex.input_items() {
+                if (it as usize) < scratch.scores.len() {
+                    scratch.scores[it as usize] = f32::NEG_INFINITY;
+                }
+            }
+            let relevant: Vec<usize> =
+                items.iter().map(|&i| i as usize).collect();
+            let mut ranks = ranks_of(&scratch.scores, &relevant);
+            sum += average_precision_from_ranks(&mut ranks);
+            n += 1;
+        }
+    }
+    Ok(sum / n.max(1) as f64)
+}
+
+/// Ext. C — the quantization axis over the compression grid: for each
+/// FF recommender task and Table-3 Bloom ratio, one trained model
+/// evaluated through both precision tiers. Reports the MAP delta the
+/// int8+f16 tier costs and the weight-bytes reduction it buys.
+pub fn ext_quant(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Ext. C — quantized serving tier (int8 panels + f16 \
+         activations) vs f32, MAP and payload bytes",
+        &["task", "m/d", "MAP f32", "MAP int8", "delta",
+          "bytes f32", "bytes int8", "ratio"]);
+    for task in ctx.tasks() {
+        if task.family != "ff" {
+            continue; // the quantized tier covers the FF families only
+        }
+        for &ratio in &task.test_points {
+            let sm = train_serving_model(
+                ctx.rt, &ctx.data, &task.name, ratio, 4, ctx.opts.scale,
+                ctx.opts.seeds[0], ctx.opts.epochs)?;
+            let exe = ctx.rt.load_spec(&sm.spec)?;
+            if !exe.supports_quantization() {
+                continue;
+            }
+            let ds = ctx.data.get(&task, ctx.opts.scale,
+                                  ctx.opts.seeds[0]);
+            let q = exe.quantize_params(&sm.state.params)?;
+            let map_f32 = map_over_test(exe.as_ref(), &sm.spec, &sm.state,
+                                        sm.emb.as_ref(), &ds, None)?;
+            let map_q8 = map_over_test(exe.as_ref(), &sm.spec, &sm.state,
+                                       sm.emb.as_ref(), &ds, Some(&q))?;
+            let bytes_f32: usize =
+                sm.state.params.iter().map(|t| t.data.len() * 4).sum();
+            let bytes_q8 = q.bytes();
+            table.row(vec![
+                task.name.clone(),
+                fmt2(ratio),
+                fmt3(map_f32),
+                fmt3(map_q8),
+                format!("{:+.4}", map_q8 - map_f32),
+                bytes_f32.to_string(),
+                bytes_q8.to_string(),
+                fmt2(bytes_f32 as f64 / bytes_q8.max(1) as f64),
+            ]);
         }
     }
     Ok(table)

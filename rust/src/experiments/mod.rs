@@ -18,7 +18,7 @@ pub const ALL: &[&str] = &[
 ];
 
 /// Extension experiments from the paper's future-work section.
-pub const EXTENDED: &[&str] = &["ext_fp", "ext_counting"];
+pub const EXTENDED: &[&str] = &["ext_fp", "ext_counting", "ext_quant"];
 
 /// Run one experiment by id; writes `<out>/<id>.tsv` and returns the
 /// rendered table.
@@ -35,6 +35,7 @@ pub fn run_experiment(id: &str, ctx: &Ctx) -> Result<Table> {
         "fig4" => figures::fig4(ctx)?,
         "ext_fp" => extensions::ext_fp(ctx)?,
         "ext_counting" => extensions::ext_counting(ctx)?,
+        "ext_quant" => extensions::ext_quant(ctx)?,
         other => bail!(
             "unknown experiment '{other}' (try: {ALL:?} or {EXTENDED:?})"),
     };

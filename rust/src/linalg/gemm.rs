@@ -56,9 +56,11 @@ use crate::util::threadpool::WorkerPool;
 /// Column-tile width in f32s (one tile row = 256 bytes = 4 cache lines).
 pub const NR: usize = 64;
 /// k-panel height: how many B rows a blocked pass consumes per tile.
-const KC: usize = 256;
+/// Shared with [`crate::linalg::quant`], whose per-block scales are
+/// aligned to exactly this [`KC`] x [`NR`] blocking.
+pub(crate) const KC: usize = 256;
 /// Row block: how many A/C rows share one loaded B row.
-const MR: usize = 4;
+pub(crate) const MR: usize = 4;
 
 /// `dst += a * src` elementwise; zero `a` skips the pass entirely (the
 /// shared zero-skip rule of the kernel layer — applied BEFORE the SIMD
@@ -72,7 +74,7 @@ fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
 }
 
 #[inline]
-fn scale_c(c: &mut [f32], beta: f32) {
+pub(crate) fn scale_c(c: &mut [f32], beta: f32) {
     if beta == 0.0 {
         c.fill(0.0);
     } else if beta != 1.0 {
@@ -82,7 +84,8 @@ fn scale_c(c: &mut [f32], beta: f32) {
 
 /// Four disjoint mutable column-tile views of consecutive C rows.
 #[inline]
-fn quad_tiles(c: &mut [f32], n: usize, i: usize, j0: usize, tw: usize)
+pub(crate) fn quad_tiles(c: &mut [f32], n: usize, i: usize, j0: usize,
+                         tw: usize)
     -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
     let (_, rest) = c.split_at_mut(i * n);
     let (r0, rest) = rest.split_at_mut(n);
@@ -428,9 +431,10 @@ const PAR_MIN_WORK: usize = 1 << 18;
 
 /// Workers for `rows` disjoint output rows carrying `work` total
 /// mul-adds: capped by the pool, the row count, and the per-worker
-/// minimum.
+/// minimum. Shared with [`crate::linalg::quant`] so the int8 pack's
+/// parallel twin fans out under exactly the same rule.
 #[inline]
-fn fanout(threads: usize, rows: usize, work: usize) -> usize {
+pub(crate) fn fanout(threads: usize, rows: usize, work: usize) -> usize {
     if rows < 2 {
         return 1;
     }

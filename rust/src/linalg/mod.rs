@@ -9,6 +9,7 @@
 pub mod dense;
 pub mod gemm;
 pub mod knn;
+pub mod quant;
 pub mod simd;
 pub mod sparse;
 pub mod svd;
@@ -17,6 +18,7 @@ pub use dense::{cosine, correlation, dot, Mat};
 pub use gemm::{gemm as gemm_nn, gemm_nt, gemm_tn_acc, matmul_into,
                spmm_gather, spmm_scatter, PackedB};
 pub use knn::{argsort_desc, top_k, Metric};
+pub use quant::{gemm_q8, spmm_gather_q8, PackedBQ8, Precision};
 pub use simd::SimdLevel;
 pub use sparse::Csr;
 pub use svd::{randomized_svd, LinOp, Svd};

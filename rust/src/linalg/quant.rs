@@ -1,0 +1,548 @@
+//! Quantized inference tier: per-block symmetric int8 weight panels
+//! under the blocked kernel layer.
+//!
+//! [`PackedBQ8`] is the int8 twin of [`crate::linalg::PackedB`]: the
+//! same contiguous [`NR`]-wide column-tile layout, but each weight is
+//! stored as a signed 8-bit quantum `q` with one f32 dequantization
+//! scale `s` per `[KC, NR]` block (k-panel x column-tile — exactly the
+//! blocking the f32 loop nest already walks, so a block's scale is a
+//! loop-invariant of its inner panel sweep). Quantization is symmetric
+//! around zero: `s = max|w| / 127` over the block and
+//! `q = round(w / s)` clamped to `[-127, 127]`, which bounds the
+//! per-element representation error by `s/2` (plus one f32 division
+//! rounding) and never uses `-128` (the asymmetric encoding).
+//!
+//! [`gemm_q8`] runs the identical j-tile / k-panel / 4-row loop nest as
+//! [`crate::linalg::gemm::gemm_packed`], dequantizing **in register**:
+//! the activation `a[i, kk]` and the current block's scale fold into
+//! one scalar factor `c = a * s` handed to
+//! [`crate::linalg::simd::axpy_q8`], whose i8 -> f32 widen is exact at
+//! every SIMD level. The tier therefore keeps the repo's dispatch
+//! invariant *within itself* — scalar/SSE2/AVX2/NEON int8 arms are
+//! bit-identical, every output element accumulates ascending-k into a
+//! single accumulator with the shared zero-skip rule — while being
+//! deliberately NOT bit-identical to the f32 path: the quantization of
+//! the weights themselves is the one approximation, and it is
+//! property-tested against the interval bound
+//! `|C_q[i,j] - C[i,j]| <= sum_k |a[i,k]| * qerr(k,j)` in
+//! `tests/quant.rs` rather than asserted bitwise.
+//!
+//! [`Precision`] is the opt-in routing knob for the tier
+//! (`BLOOMREC_PRECISION`, `--precision` on `serve`/`pack`): serving
+//! defaults to [`Precision::F32`] everywhere.
+
+use crate::linalg::gemm::{fanout, quad_tiles, scale_c, KC, MR, NR};
+use crate::linalg::simd;
+use crate::util::threadpool::WorkerPool;
+
+/// Serving weight-precision tier. `F32` is the default (bit-exact)
+/// path; `Int8` routes feed-forward GEMMs through [`PackedBQ8`] panels
+/// with f16 hidden-activation storage — smaller and faster, with a
+/// property-tested error bound instead of bit-identity.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// full f32 weights and activations — bit-exact reference tier
+    #[default]
+    F32,
+    /// per-block symmetric int8 weights + f16 hidden activations
+    Int8,
+}
+
+impl Precision {
+    /// Stable lowercase tag (`BLOOMREC_PRECISION` values, artifact
+    /// manifests, bench stamps).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `BLOOMREC_PRECISION` / `--precision` value; `None` for
+    /// unknown strings (callers then fall back to the default).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" | "full" => Some(Precision::F32),
+            "int8" | "i8" | "q8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// The tier `BLOOMREC_PRECISION` requests, defaulting to `F32` when
+    /// the variable is unset or unrecognized.
+    pub fn from_env() -> Precision {
+        std::env::var("BLOOMREC_PRECISION")
+            .ok()
+            .and_then(|v| Precision::parse(&v))
+            .unwrap_or_default()
+    }
+}
+
+/// A `B [k, n]` weight matrix quantized to symmetric int8 in the
+/// [`crate::linalg::PackedB`] column-tile layout, with one f32 scale
+/// per `[KC, NR]` block. Built once at pack/load time and reused across
+/// every [`gemm_q8`] call.
+#[derive(Clone, Debug)]
+pub struct PackedBQ8 {
+    pub k: usize,
+    pub n: usize,
+    /// int8 quanta in the pack layout: the tile for columns
+    /// `[j0, j0 + tw)` lives at offset `j0 * k`, as `k` contiguous rows
+    /// of `tw` values (identical addressing to `PackedB::data`)
+    data: Vec<i8>,
+    /// one scale per block, indexed `jt * n_panels + kt` where
+    /// `jt = j0 / NR`, `kt = k0 / KC`, `n_panels = ceil(k / KC)`
+    scales: Vec<f32>,
+}
+
+impl PackedBQ8 {
+    /// Number of k-panels (`kt` strides) for a given `k`.
+    #[inline]
+    fn n_panels(k: usize) -> usize {
+        k.div_ceil(KC)
+    }
+
+    /// The `(block_k, block_n)` scale granularity — stamped into int8
+    /// artifact manifests and validated at load, so a future re-tuning
+    /// of the kernel blocking can never silently misread old scales.
+    pub fn block_dims() -> (usize, usize) {
+        (KC, NR)
+    }
+
+    /// Quantize row-major `b [k, n]`: per `[KC, NR]` block,
+    /// `s = max|w| / 127` (zero for an all-zero block) and
+    /// `q = round(w / s)` clamped to `[-127, 127]`.
+    pub fn quantize(b: &[f32], k: usize, n: usize) -> PackedBQ8 {
+        debug_assert_eq!(b.len(), k * n, "B is [k, n]");
+        let n_panels = Self::n_panels(k);
+        let mut data = vec![0i8; k * n];
+        let mut scales = vec![0.0f32; n.div_ceil(NR) * n_panels];
+        let mut j0 = 0;
+        let mut jt = 0;
+        while j0 < n {
+            let tw = NR.min(n - j0);
+            let base = j0 * k;
+            let mut k0 = 0;
+            let mut kt = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                let mut amax = 0.0f32;
+                for kk in k0..k0 + kc {
+                    for j in j0..j0 + tw {
+                        amax = amax.max(b[kk * n + j].abs());
+                    }
+                }
+                let s = if amax > 0.0 { amax / 127.0 } else { 0.0 };
+                scales[jt * n_panels + kt] = s;
+                if s > 0.0 {
+                    for kk in k0..k0 + kc {
+                        for jj in 0..tw {
+                            let q = (b[kk * n + j0 + jj] / s)
+                                .round()
+                                .clamp(-127.0, 127.0);
+                            data[base + kk * tw + jj] = q as i8;
+                        }
+                    }
+                }
+                k0 += kc;
+                kt += 1;
+            }
+            j0 += tw;
+            jt += 1;
+        }
+        PackedBQ8 { k, n, data, scales }
+    }
+
+    /// Rebuild from raw artifact segments, validating the layout
+    /// lengths against `(k, n)` and the current [`block_dims`] —
+    /// the inverse of [`raw_data`]/[`raw_scales`].
+    ///
+    /// [`block_dims`]: PackedBQ8::block_dims
+    /// [`raw_data`]: PackedBQ8::raw_data
+    /// [`raw_scales`]: PackedBQ8::raw_scales
+    pub fn from_raw(k: usize, n: usize, data: Vec<i8>, scales: Vec<f32>)
+        -> Result<PackedBQ8, String> {
+        if data.len() != k * n {
+            return Err(format!(
+                "int8 pack [{k}, {n}] needs {} quanta, got {}",
+                k * n,
+                data.len()
+            ));
+        }
+        let want = n.div_ceil(NR) * Self::n_panels(k);
+        if scales.len() != want {
+            return Err(format!(
+                "int8 pack [{k}, {n}] needs {want} block scales, got {}",
+                scales.len()
+            ));
+        }
+        Ok(PackedBQ8 { k, n, data, scales })
+    }
+
+    /// The packed quanta, in pack-layout order (artifact payload IO).
+    pub fn raw_data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// The block scales, `jt * n_panels + kt` order (artifact IO).
+    pub fn raw_scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Payload bytes this pack occupies: one byte per weight plus four
+    /// per block scale — the 4x-minus-epsilon footprint win over f32.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Dequantize back to a row-major `[k, n]` f32 matrix
+    /// (`w_hat = q * s`) — the fallback weights installed into
+    /// `ModelState` when an int8 artifact must feed an f32-only path,
+    /// and the oracle half of the round-trip error-bound tests.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let (k, n) = (self.k, self.n);
+        let n_panels = Self::n_panels(k);
+        let mut b = vec![0.0f32; k * n];
+        let mut j0 = 0;
+        let mut jt = 0;
+        while j0 < n {
+            let tw = NR.min(n - j0);
+            let base = j0 * k;
+            let mut k0 = 0;
+            let mut kt = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                let s = self.scales[jt * n_panels + kt];
+                for kk in k0..k0 + kc {
+                    for jj in 0..tw {
+                        b[kk * n + j0 + jj] =
+                            self.data[base + kk * tw + jj] as f32 * s;
+                    }
+                }
+                k0 += kc;
+                kt += 1;
+            }
+            j0 += tw;
+            jt += 1;
+        }
+        b
+    }
+
+    /// The per-element absolute quantization error bound for position
+    /// `(kk, j)`: half this block's scale step, plus one part in 2^20
+    /// of slop for the f32 division inside `round(w / s)`. The
+    /// interval-propagation tests sum these along k.
+    pub fn qerr_bound(&self, kk: usize, j: usize) -> f32 {
+        let s = self.scales
+            [(j / NR) * Self::n_panels(self.k) + kk / KC];
+        s * 0.5 * (1.0 + 1.0e-6)
+    }
+
+    /// Parallel `C = beta * C + A @ B_q` over this pack: disjoint C
+    /// row-blocks across the global pool, each running [`gemm_q8`] —
+    /// bit-identical to the serial call for every thread count (the
+    /// same structural argument as [`crate::linalg::PackedB::matmul`]).
+    pub fn matmul(&self, a: &[f32], c: &mut [f32], m: usize, beta: f32) {
+        self.matmul_pooled(WorkerPool::global(), a, c, m, beta)
+    }
+
+    pub(crate) fn matmul_pooled(&self, pool: WorkerPool, a: &[f32],
+                                c: &mut [f32], m: usize, beta: f32) {
+        let (k, n) = (self.k, self.n);
+        let t = if n == 0 {
+            1
+        } else {
+            fanout(pool.threads(), m, m * k * n)
+        };
+        if t <= 1 {
+            return gemm_q8(a, self, c, m, k, n, beta);
+        }
+        let rows_per = m.div_ceil(t);
+        pool.scope_chunks(c, rows_per * n, |i, cc| {
+            let r0 = i * rows_per;
+            let rows = cc.len() / n;
+            gemm_q8(&a[r0 * k..(r0 + rows) * k], self, cc, rows, k, n,
+                    beta);
+        });
+    }
+}
+
+/// `dst += c * q` with the kernel layer's shared zero-skip rule applied
+/// BEFORE dispatch (`c` already folds activation x scale, so an all-
+/// zero block — scale 0 — skips exactly like a zero activation).
+#[inline]
+fn axpy_q8(dst: &mut [f32], src: &[i8], c: f32) {
+    if c == 0.0 {
+        return;
+    }
+    simd::axpy_q8(dst, src, c);
+}
+
+/// `C = beta * C + A @ B_q` with `B_q` int8-quantized: the identical
+/// j-tile / k-panel / 4-row loop nest as
+/// [`crate::linalg::gemm::gemm_packed`], dequantizing in register by
+/// folding each block's scale into the activation factor. Per output
+/// element the additions happen in ascending-k order into one
+/// accumulator with zero factors skipped, so the result is invariant
+/// across SIMD levels and thread counts; it differs from the f32
+/// kernel only by the weights' quantization error (see the module
+/// docs for the tested bound).
+pub fn gemm_q8(a: &[f32], bq: &PackedBQ8, c: &mut [f32], m: usize,
+               k: usize, n: usize, beta: f32) {
+    debug_assert_eq!(k, bq.k, "packed B_q k mismatch");
+    debug_assert_eq!(n, bq.n, "packed B_q n mismatch");
+    debug_assert_eq!(a.len(), m * k, "A is [m, k]");
+    debug_assert_eq!(c.len(), m * n, "C is [m, n]");
+    scale_c(c, beta);
+    let n_panels = PackedBQ8::n_panels(k);
+    let mut j0 = 0;
+    let mut jt = 0;
+    while j0 < n {
+        let tw = NR.min(n - j0);
+        let tile = &bq.data[j0 * k..j0 * k + k * tw];
+        let mut k0 = 0;
+        let mut kt = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let s = bq.scales[jt * n_panels + kt];
+            let mut i = 0;
+            while i + MR <= m {
+                let (c0, c1, c2, c3) = quad_tiles(c, n, i, j0, tw);
+                for kk in k0..k0 + kc {
+                    let brow = &tile[kk * tw..(kk + 1) * tw];
+                    axpy_q8(c0, brow, a[i * k + kk] * s);
+                    axpy_q8(c1, brow, a[(i + 1) * k + kk] * s);
+                    axpy_q8(c2, brow, a[(i + 2) * k + kk] * s);
+                    axpy_q8(c3, brow, a[(i + 3) * k + kk] * s);
+                }
+                i += MR;
+            }
+            while i < m {
+                let crow = &mut c[i * n + j0..i * n + j0 + tw];
+                for kk in k0..k0 + kc {
+                    axpy_q8(crow, &tile[kk * tw..(kk + 1) * tw],
+                            a[i * k + kk] * s);
+                }
+                i += 1;
+            }
+            k0 += kc;
+            kt += 1;
+        }
+        j0 += tw;
+        jt += 1;
+    }
+}
+
+/// Sparse-times-quantized gather: `out[r, :] += v_e * (s * q[i_e, :])`
+/// over row `r`'s CSR entries — the int8 twin of
+/// [`crate::linalg::gemm::spmm_gather`], column-tiled over the pack with
+/// each entry's block scale folded into the activation factor. Row
+/// addressing (`base`, `stride`) matches the f32 kernel. Per output
+/// element the additions happen in entry order (active positions
+/// ascending), which is [`gemm_q8`]'s ascending-k zero-skip order —
+/// the two are bit-identical wherever the CSR rows describe the same
+/// dense operand.
+pub fn spmm_gather_q8(indptr: &[usize], indices: &[u32], vals: &[f32],
+                      rows: usize, base: usize, stride: usize,
+                      wq: &PackedBQ8, out: &mut [f32]) {
+    let (k, p) = (wq.k, wq.n);
+    debug_assert!(out.len() >= rows * p, "out is [rows, p]");
+    debug_assert!(rows == 0
+                  || indptr.len() > base + (rows - 1) * stride + 1);
+    let n_panels = PackedBQ8::n_panels(k);
+    let mut j0 = 0;
+    let mut jt = 0;
+    while j0 < p {
+        let tw = NR.min(p - j0);
+        let tile = &wq.data[j0 * k..j0 * k + k * tw];
+        for r in 0..rows {
+            let s = base + r * stride;
+            let (lo, hi) = (indptr[s], indptr[s + 1]);
+            let dst = &mut out[r * p + j0..r * p + j0 + tw];
+            for (&i, &v) in indices[lo..hi].iter().zip(&vals[lo..hi]) {
+                let i = i as usize;
+                let sc = wq.scales[jt * n_panels + i / KC];
+                axpy_q8(dst, &tile[i * tw..(i + 1) * tw], v * sc);
+            }
+        }
+        j0 += tw;
+        jt += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, len: usize, sparsity: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.bool(sparsity) {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn precision_parse_and_env_default() {
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("I8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("q8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("FP32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("int4"), None);
+        assert_eq!(Precision::parse(""), None);
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::Int8.name(), "int8");
+    }
+
+    #[test]
+    fn quantize_round_trip_within_half_scale() {
+        let mut rng = Rng::new(0x0801);
+        // shapes straddling the NR = 64 tile and KC = 256 panel edges
+        for &(k, n) in &[(3usize, 5usize), (300, 70), (256, 64),
+                         (257, 65), (1, 1)] {
+            let b = rand_mat(&mut rng, k * n, 0.2);
+            let q = PackedBQ8::quantize(&b, k, n);
+            let back = q.dequantize();
+            for kk in 0..k {
+                for j in 0..n {
+                    let err = (b[kk * n + j] - back[kk * n + j]).abs();
+                    let bound = q.qerr_bound(kk, j);
+                    assert!(err <= bound,
+                            "[{kk},{j}] of [{k},{n}]: err {err} > {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_blocks_get_zero_scale_and_survive() {
+        let (k, n) = (10usize, 130usize); // 3 column tiles
+        let mut b = vec![0.0f32; k * n];
+        // only the middle tile (columns 64..128) carries weight
+        for kk in 0..k {
+            for j in 64..128 {
+                b[kk * n + j] = (kk + j) as f32 / 100.0;
+            }
+        }
+        let q = PackedBQ8::quantize(&b, k, n);
+        assert_eq!(q.raw_scales().len(), 3);
+        assert_eq!(q.raw_scales()[0], 0.0);
+        assert!(q.raw_scales()[1] > 0.0);
+        assert_eq!(q.raw_scales()[2], 0.0);
+        let a = vec![1.0f32; k];
+        let mut c = vec![0.0f32; n];
+        gemm_q8(&a, &q, &mut c, 1, k, n, 0.0);
+        assert!(c[..64].iter().all(|&v| v == 0.0));
+        assert!(c[64..128].iter().any(|&v| v != 0.0));
+        assert!(c[128..].iter().all(|&v| v == 0.0));
+    }
+
+    /// gemm_q8 over quantized B must be bit-identical to the f32
+    /// kernel over the DEQUANTIZED matrix? No — the f32 kernel
+    /// multiplies `a * (q * s)` where gemm_q8 computes `(a * s) * q`;
+    /// both are two rounded multiplies but associate differently. The
+    /// contract is the interval bound vs the ORIGINAL f32 matrix,
+    /// checked here against a naive oracle with propagated slop.
+    #[test]
+    fn gemm_q8_within_interval_bound_of_f32_oracle() {
+        let mut rng = Rng::new(0x0802);
+        for &(m, k, n) in &[(1usize, 7usize, 9usize), (4, 64, 65),
+                            (7, 300, 130), (5, 257, 64)] {
+            let a = rand_mat(&mut rng, m * k, 0.3);
+            let b = rand_mat(&mut rng, k * n, 0.0);
+            let q = PackedBQ8::quantize(&b, k, n);
+            let mut want = vec![0.0f32; m * n];
+            gemm(&a, &b, &mut want, m, k, n, 0.0);
+            let mut got = vec![0.0f32; m * n];
+            gemm_q8(&a, &q, &mut got, m, k, n, 0.0);
+            for i in 0..m {
+                for j in 0..n {
+                    // interval bound: sum_k |a| * qerr + float slop
+                    let mut bound = 1.0e-5f32;
+                    for kk in 0..k {
+                        bound += a[i * k + kk].abs()
+                            * q.qerr_bound(kk, j)
+                            + 1.0e-7;
+                    }
+                    let err = (want[i * n + j] - got[i * n + j]).abs();
+                    assert!(err <= bound,
+                            "({i},{j}) of {m}x{k}x{n}: {err} > {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matmul_bit_identical_to_serial() {
+        let mut rng = Rng::new(0x0803);
+        for &(m, k, n) in &[(64usize, 128usize, 128usize), (67, 129, 65)] {
+            let a = rand_mat(&mut rng, m * k, 0.3);
+            let b = rand_mat(&mut rng, k * n, 0.0);
+            let q = PackedBQ8::quantize(&b, k, n);
+            let seed = rand_mat(&mut rng, m * n, 0.0);
+            let mut want = seed.clone();
+            gemm_q8(&a, &q, &mut want, m, k, n, 1.0);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::with_threads(threads);
+                let mut c = seed.clone();
+                q.matmul_pooled(pool, &a, &mut c, m, 1.0);
+                assert_eq!(c, want, "t={threads} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_gather_bit_identical_to_gemm_q8() {
+        let mut rng = Rng::new(0x0805);
+        // k = 300 crosses the KC = 256 panel, p = 130 crosses two NR
+        // tiles — the scale lookup must switch blocks mid-gather
+        let (rows, k, p) = (5usize, 300usize, 130usize);
+        let b = rand_mat(&mut rng, k * p, 0.0);
+        let q = PackedBQ8::quantize(&b, k, p);
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        let mut dense = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            let mut pos: Vec<usize> = rng.sample_distinct(k, 6);
+            pos.sort_unstable();
+            for i in pos {
+                indices.push(i as u32);
+                vals.push(rng.normal() as f32);
+                dense[r * k + i] = *vals.last().unwrap();
+            }
+            indptr.push(indices.len());
+        }
+        let seed = rand_mat(&mut rng, rows * p, 0.0);
+        let mut want = seed.clone();
+        gemm_q8(&dense, &q, &mut want, rows, k, p, 1.0);
+        let mut got = seed.clone();
+        spmm_gather_q8(&indptr, &indices, &vals, rows, 0, 1, &q,
+                       &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn raw_round_trip_validates_lengths() {
+        let mut rng = Rng::new(0x0804);
+        let (k, n) = (300usize, 70usize);
+        let b = rand_mat(&mut rng, k * n, 0.1);
+        let q = PackedBQ8::quantize(&b, k, n);
+        let back = PackedBQ8::from_raw(k, n, q.raw_data().to_vec(),
+                                       q.raw_scales().to_vec())
+            .unwrap();
+        assert_eq!(back.dequantize(), q.dequantize());
+        assert_eq!(q.bytes(), k * n + q.raw_scales().len() * 4);
+        assert!(PackedBQ8::from_raw(k, n, vec![0i8; 3], vec![]).is_err());
+        assert!(PackedBQ8::from_raw(k, n, q.raw_data().to_vec(),
+                                    vec![1.0])
+            .is_err());
+    }
+}

@@ -297,6 +297,19 @@ mod scalar {
             dst[j] = -(0.0f32 / den - nb * o[j] / d2) * inv_b;
         }
     }
+
+    /// `dst[i] += c * (src[i] as f32)` — the int8 GEMM inner loop
+    /// ([`crate::linalg::quant`]). The caller folds the activation and
+    /// the block's dequantization scale into the single factor `c`, so
+    /// the widening i8 -> f32 conversion (exact: |q| <= 127 << 2^24)
+    /// followed by mul-then-add keeps the quantized tier's vector arms
+    /// bit-identical to this scalar reference, by the same structural
+    /// argument as [`axpy`].
+    pub fn axpy_q8(dst: &mut [f32], src: &[i8], c: f32) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += c * (s as f32);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -589,6 +602,69 @@ x86_simd_module!(avx2, "avx2", 8, __m256,
                  _mm256_cmp_ps::<_CMP_LT_OQ>, _mm256_cmp_ps::<_CMP_GT_OQ>);
 
 // ---------------------------------------------------------------------
+// x86-64 int8 arms. These live outside `x86_simd_module!` because the
+// i8 -> i32 widening has no shared-spelling intrinsic across widths:
+// `_mm_cvtepi8_epi32` is SSE4.1, so the SSE2 arm sign-extends manually
+// (unpack against a computed sign mask), while AVX2 has the direct
+// widen. Both convert to f32 *exactly* (|q| <= 127) and then issue the
+// same mul-then-add as `axpy`, so each arm is bit-identical to
+// `scalar::axpy_q8`.
+
+#[cfg(target_arch = "x86_64")]
+mod x86_q8 {
+    use super::scalar;
+    use std::arch::x86_64::*;
+
+    /// SSE2 arm: widen 8 i8 lanes by unpacking against their sign mask
+    /// (i8 -> i16 -> 2 x i32), convert, mul-then-add.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_q8_sse(dst: &mut [f32], src: &[i8], c: f32) {
+        let n = dst.len().min(src.len());
+        let cv = _mm_set1_ps(c);
+        let zero = _mm_setzero_si128();
+        let mut i = 0;
+        while i + 8 <= n {
+            let raw =
+                _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+            let neg8 = _mm_cmpgt_epi8(zero, raw);
+            let w16 = _mm_unpacklo_epi8(raw, neg8);
+            let neg16 = _mm_cmpgt_epi16(zero, w16);
+            let lo32 = _mm_unpacklo_epi16(w16, neg16);
+            let hi32 = _mm_unpackhi_epi16(w16, neg16);
+            let flo = _mm_cvtepi32_ps(lo32);
+            let fhi = _mm_cvtepi32_ps(hi32);
+            let d0 = _mm_loadu_ps(dst.as_ptr().add(i));
+            let d1 = _mm_loadu_ps(dst.as_ptr().add(i + 4));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i),
+                          _mm_add_ps(d0, _mm_mul_ps(cv, flo)));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i + 4),
+                          _mm_add_ps(d1, _mm_mul_ps(cv, fhi)));
+            i += 8;
+        }
+        scalar::axpy_q8(&mut dst[i..n], &src[i..n], c);
+    }
+
+    /// AVX2 arm: direct 8-lane sign-extending widen, convert,
+    /// mul-then-add.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_q8_avx2(dst: &mut [f32], src: &[i8], c: f32) {
+        let n = dst.len().min(src.len());
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + 8 <= n {
+            let raw =
+                _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+            let f = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(raw));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i),
+                             _mm256_add_ps(d, _mm256_mul_ps(cv, f)));
+            i += 8;
+        }
+        scalar::axpy_q8(&mut dst[i..n], &src[i..n], c);
+    }
+}
+
+// ---------------------------------------------------------------------
 // aarch64 NEON arms (4 f32 lanes). Same structure as the x86 bodies;
 // masking uses NEON's bit-select so NaN/-0.0 semantics match the
 // scalar branches exactly.
@@ -817,6 +893,30 @@ mod neon {
                             d2, inv_b);
     }
 
+    /// NEON int8 arm: widen 8 i8 lanes (i8 -> i16 -> 2 x i32), convert
+    /// exactly to f32, mul-then-add — bit-identical to
+    /// `scalar::axpy_q8`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_q8(dst: &mut [f32], src: &[i8], c: f32) {
+        let n = dst.len().min(src.len());
+        let cv = vdupq_n_f32(c);
+        let mut i = 0;
+        while i + 8 <= n {
+            let raw = vld1_s8(src.as_ptr().add(i));
+            let w16 = vmovl_s8(raw);
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+            let d0 = vld1q_f32(dst.as_ptr().add(i));
+            let d1 = vld1q_f32(dst.as_ptr().add(i + 4));
+            vst1q_f32(dst.as_mut_ptr().add(i),
+                      vaddq_f32(d0, vmulq_f32(cv, lo)));
+            vst1q_f32(dst.as_mut_ptr().add(i + 4),
+                      vaddq_f32(d1, vmulq_f32(cv, hi)));
+            i += 8;
+        }
+        scalar::axpy_q8(&mut dst[i..n], &src[i..n], c);
+    }
+
     #[target_feature(enable = "neon")]
     pub unsafe fn cosine_grad_zero_y(dst: &mut [f32], o: &[f32],
                                      den: f32, nb: f32, d2: f32,
@@ -926,6 +1026,32 @@ dispatch!(
     /// target arm's base sweep).
     cosine_grad_zero_y, (dst: &mut [f32], o: &[f32], den: f32, nb: f32,
                          d2: f32, inv_b: f32));
+
+/// `dst[i] += c * (src[i] as f32)` over the lock-step prefix — the
+/// quantized-tier inner loop ([`crate::linalg::quant::gemm_q8`]). The
+/// caller folds the activation value and the weight block's
+/// dequantization scale into the one factor `c`, so every arm performs
+/// an exact i8 -> f32 widen followed by the same mul-then-add as
+/// [`axpy`]: the int8 arms are bit-identical to `scalar::axpy_q8` at
+/// every level (the *tier* differs from f32 only through the
+/// quantization of the weights themselves, never through dispatch).
+/// Hand-dispatched rather than `dispatch!`-generated because the x86
+/// arms cannot share one macro body (SSE2 lacks `_mm_cvtepi8_epi32`).
+#[inline]
+pub fn axpy_q8(dst: &mut [f32], src: &[i8], c: f32) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only cached when the host detected it.
+        SimdLevel::Avx2 => unsafe { x86_q8::axpy_q8_avx2(dst, src, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86_64 baseline.
+        SimdLevel::Sse => unsafe { x86_q8::axpy_q8_sse(dst, src, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline.
+        SimdLevel::Neon => unsafe { neon::axpy_q8(dst, src, c) },
+        _ => scalar::axpy_q8(dst, src, c),
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -1038,6 +1164,31 @@ mod tests {
             let got = run_all(None); // detected level
             set_level(None);
             assert_eq!(want, got, "n={n}");
+        }
+    }
+
+    /// The int8 arm's contract is the same as the f32 primitives':
+    /// bit-identity with its scalar twin at every level, including
+    /// ragged tails around the 8-lane int8 step.
+    #[test]
+    fn axpy_q8_bit_identical_across_levels() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(0x8B1);
+        for &n in &[1usize, 4, 7, 8, 9, 15, 16, 17, 63, 64, 65] {
+            let base = rand_vec(&mut rng, n);
+            let qsrc: Vec<i8> = (0..n)
+                .map(|_| (rng.below(255) as i32 - 127) as i8)
+                .collect();
+            for c in [0.37f32, -1.0e-3, 113.5] {
+                set_level(Some(SimdLevel::Scalar));
+                let mut want = base.clone();
+                axpy_q8(&mut want, &qsrc, c);
+                set_level(None); // detected level
+                let mut got = base.clone();
+                axpy_q8(&mut got, &qsrc, c);
+                set_level(None);
+                assert_eq!(want, got, "n={n} c={c}");
+            }
         }
     }
 

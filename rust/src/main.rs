@@ -67,6 +67,8 @@ fn print_usage() {
          --decode exhaustive|pruned|pruned:P,C  (serve decode route)\n       \
          --artifact DIR  (serve from a packed artifact, skip training)\n       \
          --replicas N    (serving replicas; default BLOOMREC_REPLICAS)\n       \
+         --precision f32|int8  (serve/pack weight precision tier;\n       \
+                                default BLOOMREC_PRECISION or f32)\n       \
          --load SECS --concurrency N  (Zipf load harness instead of\n       \
                                        the test-split replay)",
         experiments::ALL
@@ -184,6 +186,9 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     };
     if let Some(r) = opts.replicas {
         cfg.replicas = r;
+    }
+    if let Some(p) = opts.precision {
+        cfg.precision = p;
     }
     let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
                                cfg)?;
@@ -325,15 +330,21 @@ fn cmd_pack(opts: &Options, rest: &[String]) -> Result<()> {
         opts.epochs)?;
     let bloom = sm.emb.as_bloom().ok_or_else(|| anyhow!(
         "pack needs a Bloom embedding; '{}' produced none", sm.emb.name()))?;
-    let report = bloomrec::artifact::pack(&out, &sm.spec, &sm.state,
+    // the packed precision tier: --precision wins, then
+    // BLOOMREC_PRECISION, then the spec's own (f32) default
+    let mut spec = sm.spec;
+    spec.precision = opts
+        .precision
+        .unwrap_or_else(bloomrec::linalg::Precision::from_env);
+    let report = bloomrec::artifact::pack(&out, &spec, &sm.state,
                                           Some(bloom))?;
     let prov = bloomrec::artifact::Provenance::capture();
     println!(
-        "packed {} -> {}\n\
+        "packed {} -> {} ({} weights)\n\
          payload: {} bytes ({} weight + {} hash-table) over {} tensors\n\
          provenance: git {} simd {} threads {}\n\
          serve it: bloomrec serve {} --artifact {}",
-        sm.spec.name, out.display(),
+        spec.name, out.display(), spec.precision.name(),
         report.payload_bytes, report.weight_bytes, report.hash_bytes,
         report.tensors,
         prov.git_sha, prov.simd, prov.threads,

@@ -50,6 +50,7 @@ use anyhow::{anyhow, bail, Result};
 use super::manifest::{ArtifactSpec, Manifest, TaskSpec};
 use super::native::NativeBackend;
 use super::tensor::{HostTensor, HostTensorI32};
+use crate::linalg::quant::PackedBQ8;
 use crate::model::ModelState;
 
 /// CSR-style batch of sparse input rows: per row, the active embedded
@@ -447,6 +448,44 @@ impl BatchTarget {
     }
 }
 
+/// One parameter tensor in the int8 serving representation: either a
+/// quantized weight pack, or the untouched f32 tensor for parameters the
+/// quantized path keeps in full precision (biases; recurrent gate
+/// weights, whose stateful stepping path stays f32).
+#[derive(Clone, Debug)]
+pub enum QTensor {
+    /// per-block symmetric int8 weight panels + scales
+    Q8(PackedBQ8),
+    /// full-precision passthrough
+    F32(HostTensor),
+}
+
+/// A parameter set quantized for the opt-in int8 serving tier —
+/// produced by [`Execution::quantize_params`], consumed by
+/// [`Execution::predict_quantized`], and carried alongside the f32
+/// `ModelState` in the serving generation. Tensors appear in the same
+/// order as the artifact's `spec.params`.
+#[derive(Clone, Debug)]
+pub struct QuantizedParams {
+    pub tensors: Vec<QTensor>,
+}
+
+impl QuantizedParams {
+    /// Serialized weight-payload bytes of this representation (int8
+    /// quanta + block scales for `Q8` tensors, 4 bytes per element for
+    /// `F32` passthroughs) — the numerator of the artifact-footprint
+    /// comparison against the all-f32 payload.
+    pub fn bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| match t {
+                QTensor::Q8(q) => q.bytes(),
+                QTensor::F32(t) => t.data.len() * 4,
+            })
+            .sum()
+    }
+}
+
 /// A loaded/compiled artifact, ready to execute.
 ///
 /// `run` is the raw artifact-wire call (flat dense tensors, the layout
@@ -610,6 +649,38 @@ pub trait Execution: Send + Sync {
         let _ = (params, state);
         bail!("artifact '{}' (family '{}') has no batched recurrent \
                state", self.spec().name, self.spec().family)
+    }
+
+    /// Whether this execution implements the int8 serving tier
+    /// ([`Execution::quantize_params`] /
+    /// [`Execution::predict_quantized`]). Static per execution — the
+    /// serving layer and the artifact packer branch on this once.
+    fn supports_quantization(&self) -> bool {
+        false
+    }
+
+    /// Quantize `params` into the int8 serving representation (weight
+    /// matrices to per-block symmetric [`PackedBQ8`] panels, everything
+    /// else passed through f32). Errors on executions without a
+    /// quantized path.
+    fn quantize_params(&self, params: &[HostTensor])
+        -> Result<QuantizedParams> {
+        let _ = params;
+        bail!("artifact '{}' (family '{}') has no quantized serving \
+               tier", self.spec().name, self.spec().family)
+    }
+
+    /// Forward pass over quantized weights with f16-stored hidden
+    /// activations — the opt-in `Precision::Int8` twin of
+    /// [`Execution::predict`]. NOT bit-identical to the f32 path; the
+    /// absolute error vs the f32 oracle is property-tested against the
+    /// per-block scale bound (see `linalg::quant`). Deterministic in
+    /// itself: bit-identical across SIMD levels and thread counts.
+    fn predict_quantized(&self, q: &QuantizedParams, x: &BatchInput)
+        -> Result<HostTensor> {
+        let _ = (q, x);
+        bail!("artifact '{}' (family '{}') has no quantized serving \
+               tier", self.spec().name, self.spec().family)
     }
 
     /// Forward pass; returns the `[batch, m_out]` output tensor.

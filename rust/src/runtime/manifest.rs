@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::linalg::quant::Precision;
 use crate::util::json::{obj, Json};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -136,6 +137,11 @@ pub struct ArtifactSpec {
     pub opt_slots: usize,
     pub decode_d: usize,
     pub decode_k: usize,
+    /// Serving weight-precision tier this artifact's payload carries.
+    /// `F32` (the default, and the only value schema-v1 manifests can
+    /// express) stores full f32 params; `Int8` stores per-block
+    /// quantized weight panels + scales (schema v2).
+    pub precision: Precision,
 }
 
 impl ArtifactSpec {
@@ -169,6 +175,7 @@ impl ArtifactSpec {
             },
             decode_d: 0,
             decode_k: 0,
+            precision: Precision::F32,
         }
     }
     /// Build a standalone recurrent artifact spec (wire order
@@ -204,6 +211,7 @@ impl ArtifactSpec {
             },
             decode_d: 0,
             decode_k: 0,
+            precision: Precision::F32,
         }
     }
 
@@ -262,6 +270,7 @@ impl ArtifactSpec {
             ("opt_slots", Json::from(self.opt_slots)),
             ("decode_d", Json::from(self.decode_d)),
             ("decode_k", Json::from(self.decode_k)),
+            ("precision", Json::from(self.precision.name())),
         ])
     }
 
@@ -297,6 +306,13 @@ impl ArtifactSpec {
             opt_slots: get(a, "opt_slots")?.as_usize().unwrap_or(0),
             decode_d: get(a, "decode_d")?.as_usize().unwrap_or(0),
             decode_k: get(a, "decode_k")?.as_usize().unwrap_or(0),
+            // optional with a default, like opt_params: schema-v1
+            // manifests predate the field and mean f32
+            precision: a
+                .get("precision")
+                .and_then(Json::as_str)
+                .and_then(Precision::parse)
+                .unwrap_or_default(),
             params,
         })
     }
@@ -594,6 +610,7 @@ fn synthetic_artifact(task: &TaskSpec, kind: &str, loss: &str, ratio: f64)
         },
         decode_d: 0,
         decode_k: 0,
+        precision: Precision::F32,
     }
 }
 
@@ -822,6 +839,27 @@ mod tests {
             assert_eq!(format!("{spec:?}"), format!("{back:?}"),
                        "{} did not round-trip", spec.name);
         }
+    }
+
+    #[test]
+    fn precision_field_defaults_and_round_trips() {
+        // SAMPLE predates the precision field -> defaults to f32
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.artifact("ml_ff_ce_m152_train").unwrap();
+        assert_eq!(a.precision, Precision::F32);
+        // an explicit int8 tag survives the JSON round trip
+        let mut spec = a.clone();
+        spec.precision = Precision::Int8;
+        let text = spec.to_json().to_string_pretty();
+        let back =
+            ArtifactSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.precision, Precision::Int8);
+        // an unknown tag falls back to f32 rather than failing the load
+        let degraded = text.replace("\"int8\"", "\"int3\"");
+        let back = ArtifactSpec::from_json(&Json::parse(&degraded)
+            .unwrap())
+            .unwrap();
+        assert_eq!(back.precision, Precision::F32);
     }
 
     #[test]

@@ -27,8 +27,8 @@ pub mod tensor;
 pub mod xla;
 
 pub use backend::{Backend, BatchInput, BatchTarget, BatchedHiddenState,
-                  Execution, HiddenState, Runtime, SparseBatch,
-                  SparseSeqBatch};
+                  Execution, HiddenState, QTensor, QuantizedParams,
+                  Runtime, SparseBatch, SparseSeqBatch};
 pub use manifest::{round_m, test_ff_spec, test_rnn_spec, ArtifactSpec,
                    Manifest, OptParams, TaskSpec, TensorSpec};
 pub use native::{NativeBackend, NativeExecution, RecurrentExecution};

@@ -33,11 +33,14 @@ use super::{loss_and_grad, optimizer_step, softmax_in_place};
 use crate::linalg::gemm::{broadcast_bias, gemm, par_gemm_nt_relu_masked,
                           par_gemm_tn_acc, par_spmm_scatter,
                           spmm_gather};
+use crate::linalg::quant::{spmm_gather_q8, PackedBQ8};
 use crate::linalg::simd;
 use crate::model::ModelState;
-use crate::runtime::backend::{BatchInput, BatchTarget, Execution};
+use crate::runtime::backend::{BatchInput, BatchTarget, Execution,
+                              QTensor, QuantizedParams};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::{HostTensor, HostTensorI32};
+use crate::util::f16;
 use crate::util::threadpool::{split_ranges, WorkerPool};
 
 #[inline]
@@ -307,6 +310,111 @@ impl NativeExecution {
         Ok((hidden, logits))
     }
 
+    /// Pull layer `l`'s quantized weight pack + f32 bias out of a
+    /// [`QuantizedParams`], shape-checked against the artifact dims.
+    fn quant_layer<'a>(&self, q: &'a QuantizedParams, l: usize)
+        -> Result<(&'a PackedBQ8, &'a [f32])> {
+        if q.tensors.len() != self.spec.params.len() {
+            bail!("artifact '{}': got {} quantized tensors, expected {}",
+                  self.spec.name, q.tensors.len(), self.spec.params.len());
+        }
+        let (n, p) = (self.dims[l], self.dims[l + 1]);
+        match (&q.tensors[2 * l], &q.tensors[2 * l + 1]) {
+            (QTensor::Q8(w), QTensor::F32(b)) => {
+                if w.k != n || w.n != p {
+                    bail!("artifact '{}': quantized w{l} is [{}, {}], \
+                           expected [{n}, {p}]", self.spec.name, w.k, w.n);
+                }
+                if b.data.len() != p {
+                    bail!("artifact '{}': quantized b{l} has {} elements, \
+                           expected {p}", self.spec.name, b.data.len());
+                }
+                Ok((w, &b.data))
+            }
+            _ => bail!("artifact '{}': layer {l} tensors are not \
+                        (Q8 weight, F32 bias)", self.spec.name),
+        }
+    }
+
+    /// Round-trip a hidden activation buffer through f16 storage — the
+    /// quantized tier's activation precision. One rounding per element
+    /// (f16 -> f32 widening is exact), applied after ReLU so only live
+    /// activations pay it.
+    fn f16_round_trip(buf: &mut [f32], scratch: &mut Vec<u16>) {
+        f16::encode_slice(buf, scratch);
+        f16::decode_slice(scratch, buf);
+    }
+
+    /// The `Precision::Int8` forward: each layer runs [`PackedBQ8`]'s
+    /// int8 GEMM (sparse first layer stays a gather — over the
+    /// quantized pack), hidden activations are stored as f16 between
+    /// layers, and the output head's softmax stays f32. Deterministic
+    /// across SIMD levels and thread counts, but NOT bit-identical to
+    /// [`NativeExecution::predict`] — the error vs the f32 oracle is
+    /// bounded by the per-block scales plus the f16 activation step
+    /// (property-tested in `tests/quant.rs`).
+    fn predict_quantized_impl(&self, q: &QuantizedParams, x: &BatchInput)
+        -> Result<HostTensor> {
+        self.validate_input(x)?;
+        let bsz = self.spec.batch;
+        let m = self.spec.m_out;
+        // same shared-padding-row trick as the f32 path
+        let rows = match x {
+            BatchInput::Sparse(sb) if sb.rows() < bsz => sb.rows() + 1,
+            _ => bsz,
+        };
+        let nl = self.dims.len() - 1;
+        let mut scratch: Vec<u16> = Vec::new();
+        let (w0, b0) = self.quant_layer(q, 0)?;
+        let p1 = self.dims[1];
+        let mut h = vec![0.0f32; rows * p1];
+        broadcast_bias(&mut h, b0, rows, p1);
+        match x {
+            BatchInput::Sparse(sb) => {
+                let live = sb.rows().min(rows);
+                spmm_gather_q8(&sb.indptr, &sb.indices, &sb.weights,
+                               live, 0, 1, w0, &mut h);
+            }
+            BatchInput::Dense(t) => {
+                let d0 = self.dims[0];
+                w0.matmul(&t.data[..rows * d0], &mut h, rows, 1.0);
+            }
+            BatchInput::SparseSeq(_) => {
+                bail!("ff artifact '{}' takes flat batches, got a \
+                       sparse sequence batch", self.spec.name);
+            }
+        }
+        if nl > 1 {
+            relu_in_place(&mut h);
+            Self::f16_round_trip(&mut h, &mut scratch);
+        }
+        for l in 1..nl {
+            let (wq, b) = self.quant_layer(q, l)?;
+            let p = self.dims[l + 1];
+            let mut out = vec![0.0f32; rows * p];
+            broadcast_bias(&mut out, b, rows, p);
+            wq.matmul(&h, &mut out, rows, 1.0);
+            if l < nl - 1 {
+                relu_in_place(&mut out);
+                Self::f16_round_trip(&mut out, &mut scratch);
+            }
+            h = out;
+        }
+        if self.spec.loss == "softmax_ce" {
+            for r in 0..rows {
+                softmax_in_place(&mut h[r * m..(r + 1) * m]);
+            }
+        }
+        if rows < bsz {
+            let pad = h[(rows - 1) * m..rows * m].to_vec();
+            h.reserve((bsz - rows) * m);
+            for _ in rows..bsz {
+                h.extend_from_slice(&pad);
+            }
+        }
+        Ok(HostTensor::from_vec(&[bsz, m], h))
+    }
+
     fn predict_impl(&self, params: &[HostTensor], x: &BatchInput)
         -> Result<HostTensor> {
         let bsz = self.spec.batch;
@@ -414,6 +522,36 @@ impl Execution for NativeExecution {
     fn predict(&self, params: &[HostTensor], x: &BatchInput)
         -> Result<HostTensor> {
         self.predict_impl(params, x)
+    }
+
+    fn supports_quantization(&self) -> bool {
+        true
+    }
+
+    /// Weight matrices quantize to per-block symmetric int8 panels;
+    /// biases pass through f32 (they are O(width) against the weights'
+    /// O(width^2) and anchor each layer's output offset exactly).
+    fn quantize_params(&self, params: &[HostTensor])
+        -> Result<QuantizedParams> {
+        self.check_params(params)?;
+        let tensors = params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if i % 2 == 0 {
+                    QTensor::Q8(PackedBQ8::quantize(
+                        &t.data, self.dims[i / 2], self.dims[i / 2 + 1]))
+                } else {
+                    QTensor::F32(t.clone())
+                }
+            })
+            .collect();
+        Ok(QuantizedParams { tensors })
+    }
+
+    fn predict_quantized(&self, q: &QuantizedParams, x: &BatchInput)
+        -> Result<HostTensor> {
+        self.predict_quantized_impl(q, x)
     }
 
     fn train_step(&self, state: &mut ModelState, x: &BatchInput,
@@ -548,6 +686,62 @@ mod tests {
             let s: f32 = out.data[r * 8..(r + 1) * 8].iter().sum();
             assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
         }
+    }
+
+    #[test]
+    fn quantized_predict_tracks_f32_distributions() {
+        let ex = exec(40, &[16, 12], 24, 4);
+        let mut rng = Rng::new(0x0901);
+        let mut spec = ex.spec.clone();
+        spec.kind = "predict".into();
+        let state = ModelState::init(&spec, &mut rng);
+        let q = ex.quantize_params(&state.params).unwrap();
+        assert!(ex.supports_quantization());
+        assert_eq!(q.tensors.len(), state.params.len());
+        // quantized payload is a fraction of the f32 one
+        let f32_bytes: usize =
+            state.params.iter().map(|t| t.data.len() * 4).sum();
+        assert!(q.bytes() < f32_bytes / 2,
+                "{} vs {f32_bytes}", q.bytes());
+        let mut sb = crate::runtime::backend::SparseBatch::new(40);
+        for _ in 0..3 {
+            let mut pos: Vec<usize> = rng.sample_distinct(40, 5);
+            pos.sort_unstable();
+            let row: Vec<(u32, f32)> =
+                pos.into_iter().map(|i| (i as u32, 1.0)).collect();
+            sb.push_row(&row);
+        }
+        let x = BatchInput::Sparse(sb);
+        let want = ex.predict(&state.params, &x).unwrap();
+        let got = ex.predict_quantized(&q, &x).unwrap();
+        assert_eq!(got.shape, want.shape);
+        // rows stay distributions, and track the f32 oracle loosely
+        // (the tight propagated bound lives in tests/quant.rs)
+        for r in 0..4 {
+            let s: f32 = got.data[r * 24..(r + 1) * 24].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        }
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_layer_shape_mismatches_are_rejected() {
+        let ex = exec(10, &[6], 8, 2);
+        let mut rng = Rng::new(0x0902);
+        let state = ModelState::init(&ex.spec, &mut rng);
+        let mut q = ex.quantize_params(&state.params).unwrap();
+        // swapping a weight slot to a passthrough is rejected
+        q.tensors[0] = QTensor::F32(state.params[0].clone());
+        let mut sb = crate::runtime::backend::SparseBatch::new(10);
+        sb.push_row(&[(1, 1.0)]);
+        let x = BatchInput::Sparse(sb);
+        assert!(ex.predict_quantized(&q, &x).is_err());
+        // truncated tensor list is rejected
+        let mut q = ex.quantize_params(&state.params).unwrap();
+        q.tensors.pop();
+        assert!(ex.predict_quantized(&q, &x).is_err());
     }
 
     #[test]

@@ -53,8 +53,39 @@ use super::server::{fail_jobs, serve_flush, Job, ModelGeneration,
                     RecRequest, RecResponse, ServeConfig, SessionCache,
                     SwapReport};
 use crate::embedding::Embedding;
+use crate::linalg::Precision;
 use crate::model::ModelState;
-use crate::runtime::{ArtifactSpec, Runtime};
+use crate::runtime::{ArtifactSpec, Execution, HostTensor,
+                     QuantizedParams, Runtime};
+
+/// Resolve the serving-precision tier into the packed weights a
+/// generation carries. `carried` is quantized params an int8 artifact
+/// already ships (reused verbatim so serving matches the packed
+/// scales bit for bit); otherwise the weights are quantized here.
+/// Families without a quantized tier fall back to f32 with a warning
+/// instead of failing the server — the tier is an optimization, not a
+/// capability.
+fn quantize_for(precision: Precision, exe: &dyn Execution,
+                spec: &ArtifactSpec, params: &[HostTensor],
+                carried: Option<QuantizedParams>)
+    -> Result<Option<Arc<QuantizedParams>>> {
+    match precision {
+        Precision::F32 => Ok(None),
+        Precision::Int8 => {
+            if let Some(q) = carried {
+                return Ok(Some(Arc::new(q)));
+            }
+            if !exe.supports_quantization() {
+                crate::warn_!(
+                    "precision int8 requested but family '{}' has no \
+                     quantized serving tier; '{}' serves f32",
+                    spec.family, spec.name);
+                return Ok(None);
+            }
+            Ok(Some(Arc::new(exe.quantize_params(params)?)))
+        }
+    }
+}
 
 /// The affinity hash: splitmix64's finalizer. Cheap, stateless, and
 /// well-mixed — consecutive session ids spread evenly over replicas.
@@ -94,6 +125,9 @@ pub struct Router {
     rr: AtomicUsize,
     /// runtime the router compiles swapped-in artifact specs against
     rt: Arc<Runtime>,
+    /// serving precision tier; swapped-in generations are built at the
+    /// same tier the server started with
+    precision: Precision,
 }
 
 impl Router {
@@ -103,6 +137,8 @@ impl Router {
                         state: ModelState, emb: Arc<dyn Embedding>,
                         cfg: ServeConfig) -> Result<Router> {
         let exe = rt.load_spec(&spec)?;
+        let quant = quantize_for(cfg.precision, exe.as_ref(), &spec,
+                                 &state.params, None)?;
         let state = Arc::new(state);
         let metrics = Arc::new(ServeMetrics::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
@@ -119,6 +155,7 @@ impl Router {
                     spec: spec.clone(),
                     state: Arc::clone(&state),
                     emb: Arc::clone(&emb),
+                    quant: quant.clone(),
                     epoch: 0,
                 })));
             gauges.push(Arc::clone(&depth));
@@ -181,6 +218,7 @@ impl Router {
             high_water: cfg.high_water,
             rr: AtomicUsize::new(0),
             rt,
+            precision: cfg.precision,
         })
     }
 
@@ -363,6 +401,11 @@ impl Router {
         };
         let spec_name = loaded.spec.name.clone();
         let git_sha = loaded.provenance.git_sha.clone();
+        // int8 artifacts carry their panels; f32 artifacts are
+        // quantized here when the server runs at the int8 tier
+        let quant = quantize_for(self.precision, exe.as_ref(),
+                                 &loaded.spec, &loaded.state.params,
+                                 loaded.quant)?;
         let state = Arc::new(loaded.state);
         let spec = loaded.spec;
         // nothing above touched any serving path; roll the install
@@ -384,6 +427,7 @@ impl Router {
                 spec: spec.clone(),
                 state: Arc::clone(&state),
                 emb: Arc::clone(&emb),
+                quant: quant.clone(),
                 epoch,
             });
         }

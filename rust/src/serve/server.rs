@@ -65,10 +65,11 @@ use super::router::Router;
 use crate::bloom::{DecodeScratch, DecodeStrategy, HashMatrix};
 use crate::coordinator::batcher::encode_item_rows;
 use crate::embedding::Embedding;
+use crate::linalg::Precision;
 use crate::model::ModelState;
 use crate::runtime::{ArtifactSpec, BatchInput, BatchedHiddenState,
-                     Execution, HiddenState, HostTensor, Runtime,
-                     SparseBatch};
+                     Execution, HiddenState, HostTensor, QuantizedParams,
+                     Runtime, SparseBatch};
 use crate::util::threadpool::{split_ranges, WorkerPool};
 
 #[derive(Clone, Debug)]
@@ -166,6 +167,13 @@ pub struct ServeConfig {
     /// for the whole server; `None` (default) defers to the embedding's
     /// own strategy (`BLOOMREC_DECODE` for Bloom embeddings).
     pub decode: Option<DecodeStrategy>,
+    /// Serving precision tier (`BLOOMREC_PRECISION` sets the default;
+    /// `--precision` on the CLI overrides it). [`Precision::Int8`]
+    /// serves feed-forward models through int8 weight panels + f16
+    /// hidden activations — not bit-identical to f32, but inside the
+    /// property-tested error bound; families without a quantized tier
+    /// (recurrent) fall back to f32 with a warning.
+    pub precision: Precision,
 }
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -183,6 +191,7 @@ impl Default for ServeConfig {
             high_water: env_usize("BLOOMREC_HIGH_WATER", 512),
             batcher: BatcherConfig::default(),
             decode: None,
+            precision: Precision::from_env(),
         }
     }
 }
@@ -208,6 +217,11 @@ pub(crate) struct ModelGeneration {
     pub(crate) spec: ArtifactSpec,
     pub(crate) state: Arc<ModelState>,
     pub(crate) emb: Arc<dyn Embedding>,
+    /// int8 weight panels when this generation serves at the quantized
+    /// tier; `None` serves the f32 `state` path. Set once at
+    /// construction (start or swap) so the flush loop never re-decides
+    /// precision mid-generation.
+    pub(crate) quant: Option<Arc<QuantizedParams>>,
     /// session-cache epoch this generation writes under; a put-back
     /// from a flush that outlived a swap is dropped by the epoch check
     pub(crate) epoch: u64,
@@ -472,7 +486,10 @@ pub(crate) fn serve_flush(model_gen: &ModelGeneration, jobs: &[Job],
     }
     let emb = model_gen.emb.as_ref();
     let x = encode_jobs(exe, spec, emb, jobs);
-    let probs = exe.predict(&model_gen.state.params, &x)?;
+    let probs = match &model_gen.quant {
+        Some(q) => exe.predict_quantized(q, &x)?,
+        None => exe.predict(&model_gen.state.params, &x)?,
+    };
     respond(jobs, &probs.data, spec, emb, metrics, None, decode);
     Ok(())
 }

@@ -1,0 +1,177 @@
+//! IEEE 754 binary16 ("half") encode/decode, bit-twiddled on `u16` —
+//! no `half` crate in the vendor set.
+//!
+//! The quantized inference tier stores hidden activations as f16
+//! between layers ([`crate::runtime::native`]): activations are
+//! bounded post-ReLU values whose top-10-bit mantissa loses at most
+//! one part in 2^11 relative, which the tier's property-tested error
+//! bound absorbs. These routines are *scalar only* by design — F16C
+//! is not in the x86-64 baseline, and the conversion runs once per
+//! activation element between GEMMs, off the inner-loop hot path.
+//!
+//! Conversion contract (property-tested in `tests/quant.rs`):
+//!
+//! * [`f16_to_f32`] is exact — every binary16 value (normal,
+//!   subnormal, ±0, ±inf, NaN) is representable in binary32.
+//! * [`f16_from_f32`] rounds to nearest, ties to even, exactly as a
+//!   hardware `vcvtps2ph` would: overflow saturates to ±inf, values
+//!   below the smallest subnormal flush to signed zero, and NaN stays
+//!   NaN (top mantissa bits preserved, never silently becoming inf).
+//! * The round trip f16 -> f32 -> f16 is the identity on every
+//!   non-NaN bit pattern.
+
+/// Round-to-nearest-even f32 -> binary16 bits.
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        if man == 0 {
+            return sign | 0x7c00; // ±inf
+        }
+        // NaN: keep the top mantissa bits, force nonzero so the
+        // narrowed value cannot collapse into an infinity encoding
+        let m = (man >> 13) as u16;
+        return sign | 0x7c00 | if m == 0 { 1 } else { m };
+    }
+    let e = exp - 127; // unbiased
+    if e >= 16 {
+        return sign | 0x7c00; // overflow -> ±inf
+    }
+    if e >= -14 {
+        // normal half: 10-bit mantissa + round-to-nearest-even on the
+        // 13 dropped bits; a mantissa carry overflows into the
+        // exponent field, which is exactly the correct rounding
+        // (up to the next binade, or to inf from the top binade)
+        let m = (man >> 13) as u16;
+        let rest = man & 0x1fff;
+        let mut h = sign | (((e + 15) as u16) << 10) | m;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    if e >= -25 {
+        // subnormal half: shift the 24-bit significand (implicit bit
+        // made explicit) down to the 10-bit field, same tie-to-even
+        let full = man | 0x0080_0000;
+        let shift = (-e - 1) as u32; // in 14..=24
+        let m = (full >> shift) as u16;
+        let half = 1u32 << (shift - 1);
+        let rest = full & ((1u32 << shift) - 1);
+        let mut h = sign | m;
+        if rest > half || (rest == half && (m & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Exact binary16 bits -> f32 (binary32 is a superset of binary16).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // ±inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into a binary32 normal
+            let mut m = man;
+            let mut e32 = 113u32; // = bias 127 + (-14): exponent once bit 10 is set
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | (e32 << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((man << 13) | ((exp as u32 + 112) << 23))
+    };
+    f32::from_bits(bits)
+}
+
+/// Narrow `src` into `dst` (resized to match), rounding each element.
+pub fn encode_slice(src: &[f32], dst: &mut Vec<u16>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| f16_from_f32(v)));
+}
+
+/// Widen `src` into `dst`; panics unless `dst.len() == src.len()`.
+pub fn decode_slice(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "f16 decode length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f16_to_f32(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_round_trip() {
+        assert_eq!(f16_from_f32(0.0), 0x0000);
+        assert_eq!(f16_from_f32(-0.0), 0x8000);
+        assert_eq!(f16_from_f32(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_from_f32(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0x8000), -0.0);
+        assert!(f16_to_f32(0x8000).is_sign_negative());
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f16_from_f32(1.0), 0x3c00);
+        assert_eq!(f16_from_f32(-2.0), 0xc000);
+        assert_eq!(f16_from_f32(65504.0), 0x7bff); // max normal
+        assert_eq!(f16_from_f32(65520.0), 0x7c00); // rounds to inf
+        assert_eq!(f16_from_f32(65519.9), 0x7bff); // rounds to max
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // min subnormal
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14)); // min normal
+        assert_eq!(f16_from_f32(2.0f32.powi(-25)), 0); // tie -> even(0)
+        assert_eq!(f16_from_f32(2.0f32.powi(-25) * 1.0001), 0x0001);
+    }
+
+    #[test]
+    fn every_half_value_round_trips() {
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32(h);
+            if f.is_nan() {
+                assert!(f16_to_f32(f16_from_f32(f)).is_nan());
+            } else {
+                assert_eq!(f16_from_f32(f), h, "bits {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half
+        // (1 + 2^-10): ties to even -> 1.0
+        assert_eq!(f16_from_f32(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        // the next f32 up crosses the tie -> rounds up
+        let above = f32::from_bits((1.0f32 + 2.0f32.powi(-11)).to_bits() + 1);
+        assert_eq!(f16_from_f32(above), 0x3c01);
+        // halfway between 1+2^-10 and 1+2^-9 ties to even -> up (odd mantissa)
+        assert_eq!(f16_from_f32(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+    }
+
+    #[test]
+    fn slice_helpers() {
+        let xs = [0.5f32, -1.25, 3.0e4, 1.0e-6];
+        let mut enc = Vec::new();
+        encode_slice(&xs, &mut enc);
+        let mut dec = vec![0.0f32; xs.len()];
+        decode_slice(&enc, &mut dec);
+        for (a, b) in xs.iter().zip(&dec) {
+            assert!((a - b).abs() <= a.abs() / 1024.0 + 6.0e-8,
+                    "{a} vs {b}");
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! and a mini property-testing harness.
 
 pub mod benchkit;
+pub mod f16;
 pub mod json;
 pub mod logging;
 pub mod proptest;

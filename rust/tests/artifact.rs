@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use bloomrec::artifact::{self, MANIFEST_FILE, PAYLOAD_FILE};
 use bloomrec::bloom::{DecodeScratch, HashMatrix};
 use bloomrec::embedding::{Bloom, Embedding};
+use bloomrec::linalg::Precision;
 use bloomrec::model::ModelState;
 use bloomrec::runtime::{test_ff_spec, test_rnn_spec, ArtifactSpec,
                         BatchInput, BatchTarget, HostTensor, Runtime};
@@ -161,6 +162,90 @@ fn round_trip_is_bit_identical_across_families_and_losses() {
             }
         }
     }
+}
+
+/// Regression for the int8 schema bump: f32 artifacts keep writing
+/// schema version 1 with no quant section, version-1 artifacts keep
+/// loading, and the loaded model keeps serving bit-identically. An
+/// existing artifact fleet must never need a re-pack just because the
+/// reader learned a second schema.
+#[test]
+fn schema_v1_f32_artifacts_keep_loading_and_serving() {
+    let rt = runtime();
+    let dir = tmp("v1_compat");
+    let (predict, state, bloom) = trained_case(&rt, "ff", "softmax_ce", 21);
+    artifact::pack(&dir, &predict, &state, Some(&bloom)).expect("pack");
+    let text = fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+    assert!(text.contains("\"schema_version\": 1"),
+            "f32 packs must stay schema v1");
+    assert!(!text.contains("\"quant\""),
+            "f32 manifests must not carry a quant section");
+    let loaded = artifact::load(&dir).expect("v1 artifact loads");
+    assert!(loaded.quant.is_none());
+    let exe = rt.load_spec(&loaded.spec).expect("exe");
+    let mut rng = Rng::new(0x51);
+    let x = random_tensor(&predict.x_shape(), &mut rng);
+    let a = exe.predict(&state.params, &BatchInput::Dense(x.clone()))
+        .expect("predict in-memory");
+    let b = exe.predict(&loaded.state.params, &BatchInput::Dense(x))
+        .expect("predict loaded");
+    assert_eq!(a.data, b.data, "v1 round trip must stay bit-identical");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The int8 tier end to end at a realistic weight shape: pack shrinks
+/// the weight payload >= 3.5x vs the f32 pack of the same model, the
+/// artifact reloads with its panels intact, and the quantized predict
+/// tracks the f32 oracle within a loose distribution tolerance.
+#[test]
+fn int8_artifact_shrinks_payload_and_serves_within_tolerance() {
+    let rt = runtime();
+    let mut rng = Rng::new(0xA11CE);
+    let mut spec = test_ff_spec(256, &[128], 256, 4);
+    spec.kind = "predict".to_string();
+    spec.opt_slots = 0;
+    spec.name = "art_int8_roundtrip".to_string();
+    let state = ModelState::init(&spec, &mut rng);
+    let bloom = Bloom::new(HashMatrix::random(1024, 256, 3, &mut rng),
+                           None);
+
+    let fdir = tmp("int8_f32_base");
+    let f32_report = artifact::pack(&fdir, &spec, &state, Some(&bloom))
+        .expect("f32 pack");
+
+    let qdir = tmp("int8_quant");
+    spec.precision = Precision::Int8;
+    let q_report = artifact::pack(&qdir, &spec, &state, Some(&bloom))
+        .expect("int8 pack");
+    // the acceptance floor: weight payload shrinks >= 3.5x (panels are
+    // 1 byte/weight + one f32 scale per 256x64 block; biases stay f32)
+    assert!(q_report.weight_bytes * 7 <= f32_report.weight_bytes * 2,
+            "int8 weights {} bytes vs f32 {} bytes — under 3.5x",
+            q_report.weight_bytes, f32_report.weight_bytes);
+
+    let loaded = artifact::load(&qdir).expect("int8 artifact loads");
+    assert_eq!(loaded.spec.precision, Precision::Int8);
+    let quant = loaded.quant.as_ref().expect("panels survive the trip");
+    let exe = rt.load_spec(&loaded.spec).expect("exe");
+    let x = random_tensor(&spec.x_shape(), &mut rng);
+    let oracle = exe
+        .predict(&state.params, &BatchInput::Dense(x.clone()))
+        .expect("f32 oracle");
+    let got = exe
+        .predict_quantized(quant, &BatchInput::Dense(x))
+        .expect("quantized predict");
+    assert_eq!(oracle.shape, got.shape);
+    for (row, chunk) in got.data.chunks(spec.m_out).enumerate() {
+        let sum: f32 = chunk.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4,
+                "row {row} softmax sums to {sum}");
+    }
+    for (i, (a, b)) in oracle.data.iter().zip(&got.data).enumerate() {
+        assert!((a - b).abs() < 0.05,
+                "probability {i} drifted: f32 {a} vs int8 {b}");
+    }
+    let _ = fs::remove_dir_all(&fdir);
+    let _ = fs::remove_dir_all(&qdir);
 }
 
 #[test]

@@ -1,0 +1,409 @@
+//! Quantized-tier integration properties — the error-bound and
+//! determinism contracts of the int8 serving path:
+//!
+//! * property test that quantize -> dequantize stays within the
+//!   per-block half-scale bound (`PackedBQ8::qerr_bound`) on random
+//!   shapes;
+//! * property test that `gemm_q8` stays within the propagated interval
+//!   bound `|C_q - C| <= sum_k |a[i,k]| * qerr(k,j)` of the f32 kernel
+//!   on random shapes spanning the tile/panel edges;
+//! * the int8 kernels (`gemm_q8`, `spmm_gather_q8`) are bit-identical
+//!   across every SIMD level this host supports — the tier keeps the
+//!   repo's dispatch invariant *within itself*;
+//! * the full quantized forward pass is level-invariant, agrees bitwise
+//!   between its dense and sparse input paths, and tracks the f32
+//!   oracle within a layer-propagated interval bound (quantization
+//!   error + f16 activation rounding, ReLU 1-Lipschitz, softmax
+//!   Jacobian row-l1 <= 1/2);
+//! * the f16 conversion contract: round trip within half an ulp on
+//!   normals, half a quantum on subnormals, saturation only at the top
+//!   of the range, NaN never collapsing to inf.
+
+use bloomrec::linalg::simd::{self, SimdLevel};
+use bloomrec::linalg::{gemm_q8, spmm_gather_q8, PackedBQ8};
+use bloomrec::model::ModelState;
+use bloomrec::runtime::{test_ff_spec, BatchInput, Execution, HostTensor,
+                        NativeExecution, QTensor, SparseBatch};
+use bloomrec::util::f16::{f16_from_f32, f16_to_f32};
+use bloomrec::util::proptest::check;
+use bloomrec::util::rng::Rng;
+
+/// Tests that force the process-global SIMD dispatch level serialize on
+/// this lock (same pattern as `tests/kernels.rs`): results are
+/// level-invariant by contract, but the reference arms must genuinely
+/// run scalar while they execute.
+static SIMD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Scalar plus every SIMD level this host can actually execute.
+fn supported_simd_levels() -> Vec<SimdLevel> {
+    let mut out = vec![SimdLevel::Scalar];
+    for l in [SimdLevel::Sse, SimdLevel::Avx2, SimdLevel::Neon] {
+        simd::set_level(Some(l));
+        if simd::level() == l {
+            out.push(l);
+        }
+    }
+    simd::set_level(None);
+    out
+}
+
+fn rand_vec(rng: &mut Rng, len: usize, sparsity: f64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if rng.bool(sparsity) {
+                0.0
+            } else {
+                rng.normal() as f32
+            }
+        })
+        .collect()
+}
+
+/// quantize -> dequantize round trip within the advertised per-block
+/// bound, at random shapes spanning the NR/KC block edges.
+#[test]
+fn prop_quantize_round_trip_within_per_block_bound() {
+    check("q8-round-trip", 0x51AB, 30,
+          |rng| {
+              (vec![1 + rng.below(400), 1 + rng.below(150)],
+               rng.next_u64())
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 2 {
+                  return Ok(()); // shrunk out of shape
+              }
+              let (k, n) = (dims[0], dims[1]);
+              if k == 0 || n == 0 {
+                  return Ok(());
+              }
+              let mut rng = Rng::new(*seed);
+              // mix magnitudes so blocks carry different scales
+              let b: Vec<f32> = (0..k * n)
+                  .map(|i| {
+                      if rng.bool(0.2) {
+                          0.0
+                      } else {
+                          rng.normal() as f32 * (1 + i % 7) as f32
+                      }
+                  })
+                  .collect();
+              let q = PackedBQ8::quantize(&b, k, n);
+              let back = q.dequantize();
+              for kk in 0..k {
+                  for j in 0..n {
+                      let err = (b[kk * n + j] - back[kk * n + j]).abs();
+                      let bound = q.qerr_bound(kk, j);
+                      if err > bound {
+                          return Err(format!(
+                              "[{kk},{j}] of [{k},{n}]: \
+                               err {err} > bound {bound}"));
+                      }
+                  }
+              }
+              Ok(())
+          });
+}
+
+/// `gemm_q8` vs the f32 blocked kernel within the interval bound
+/// `sum_k |a[i,k]| * qerr(k,j)` plus float slop, on random shapes.
+#[test]
+fn prop_gemm_q8_within_propagated_interval_bound() {
+    use bloomrec::linalg::gemm::gemm;
+    check("gemm-q8-bound", 0x51AC, 25,
+          |rng| {
+              (vec![1 + rng.below(9), 1 + rng.below(320),
+                    1 + rng.below(140)],
+               rng.next_u64())
+          },
+          |input| {
+              let (dims, seed) = input;
+              if dims.len() != 3 {
+                  return Ok(());
+              }
+              let (m, k, n) = (dims[0], dims[1], dims[2]);
+              if m == 0 || k == 0 || n == 0 {
+                  return Ok(());
+              }
+              let mut rng = Rng::new(*seed);
+              let a = rand_vec(&mut rng, m * k, 0.3);
+              let b = rand_vec(&mut rng, k * n, 0.0);
+              let q = PackedBQ8::quantize(&b, k, n);
+              let mut want = vec![0.0f32; m * n];
+              gemm(&a, &b, &mut want, m, k, n, 0.0);
+              let mut got = vec![0.0f32; m * n];
+              gemm_q8(&a, &q, &mut got, m, k, n, 0.0);
+              for i in 0..m {
+                  for j in 0..n {
+                      let mut bound = 1.0e-5f32;
+                      for kk in 0..k {
+                          bound += a[i * k + kk].abs()
+                              * q.qerr_bound(kk, j)
+                              + 1.0e-7;
+                      }
+                      let err = (want[i * n + j] - got[i * n + j]).abs();
+                      if err > bound {
+                          return Err(format!(
+                              "({i},{j}) of {m}x{k}x{n}: \
+                               {err} > {bound}"));
+                      }
+                  }
+              }
+              Ok(())
+          });
+}
+
+/// The int8 kernels must be bit-identical to their forced-scalar arms
+/// at every SIMD level, across shapes covering every lane-tail width
+/// of the NR = 64 column tile and the KC = 256 panel edge.
+#[test]
+fn int8_kernels_bit_identical_across_simd_levels() {
+    let _g = SIMD_LOCK.lock().unwrap();
+    let levels = supported_simd_levels();
+    let mut rng = Rng::new(0x51AD);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (4, 64, 64),
+                        (5, 257, 130), (6, 300, 65), (2, 31, 97)] {
+        let a = rand_vec(&mut rng, m * k, 0.3);
+        let b = rand_vec(&mut rng, k * n, 0.1);
+        let q = PackedBQ8::quantize(&b, k, n);
+        let seed_c = rand_vec(&mut rng, m * n, 0.0);
+
+        // sparse operand describing the same dense A, row by row
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..m {
+            for kk in 0..k {
+                let v = a[i * k + kk];
+                if v != 0.0 {
+                    indices.push(kk as u32);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+
+        simd::set_level(Some(SimdLevel::Scalar));
+        let mut want_g = seed_c.clone();
+        gemm_q8(&a, &q, &mut want_g, m, k, n, 1.0);
+        let mut want_s = seed_c.clone();
+        spmm_gather_q8(&indptr, &indices, &vals, m, 0, 1, &q,
+                       &mut want_s);
+
+        for &l in &levels {
+            simd::set_level(Some(l));
+            let mut c = seed_c.clone();
+            gemm_q8(&a, &q, &mut c, m, k, n, 1.0);
+            assert_eq!(c, want_g,
+                       "gemm_q8 diverged at level {} on {m}x{k}x{n}",
+                       l.name());
+            let mut c = seed_c.clone();
+            spmm_gather_q8(&indptr, &indices, &vals, m, 0, 1, &q,
+                           &mut c);
+            assert_eq!(c, want_s,
+                       "spmm_gather_q8 diverged at level {} on \
+                        {m}x{k}x{n}", l.name());
+        }
+        simd::set_level(None);
+    }
+}
+
+/// Naive f64 forward pass capturing per-layer post-ReLU activations —
+/// the "exact arithmetic" reference for the interval propagation.
+fn naive_forward(params: &[HostTensor], x: &[f32], batch: usize)
+    -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut acts: Vec<Vec<f64>> = Vec::new();
+    let mut a: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let layers = params.len() / 2;
+    for l in 0..layers {
+        let w = &params[2 * l];
+        let bias = &params[2 * l + 1];
+        let (k, n) = (w.shape[0], w.shape[1]);
+        let mut z = vec![0.0f64; batch * n];
+        for r in 0..batch {
+            for j in 0..n {
+                let mut acc = bias.data[j] as f64;
+                for kk in 0..k {
+                    acc += a[r * k + kk] * w.data[kk * n + j] as f64;
+                }
+                z[r * n + j] = acc;
+            }
+        }
+        if l + 1 < layers {
+            for v in z.iter_mut() {
+                *v = v.max(0.0); // hidden ReLU
+            }
+            acts.push(z.clone());
+            a = z;
+        } else {
+            return (acts, z); // pre-softmax logits
+        }
+    }
+    unreachable!("spec has at least one layer");
+}
+
+/// Full quantized forward: (a) bit-identical across SIMD levels,
+/// (b) dense and sparse input paths agree bitwise, (c) the softmax
+/// output tracks the f32 oracle within the layer-propagated interval
+/// bound. The propagation is the exact decomposition
+/// `z_q - z = sum_k (a_q - a) * w_hat + a * (w_hat - w)`, so
+/// `err_out[j] <= sum_k err_in[k] * |w_hat[k,j]| + |a[k]| * qerr(k,j)`,
+/// ReLU is 1-Lipschitz, the f16 round trip adds `|a| / 2^11 + 2^-25`
+/// per hidden element, and the softmax Jacobian rows have l1 norm
+/// <= 1/2, so `|p_q - p| <= 0.5 * max_j err_logit[j]` plus float slop.
+#[test]
+fn quantized_forward_level_invariant_and_within_propagated_bound() {
+    let _g = SIMD_LOCK.lock().unwrap();
+    let levels = supported_simd_levels();
+    let mut rng = Rng::new(0x51AE);
+    let mut spec = test_ff_spec(96, &[48, 32], 80, 3);
+    spec.kind = "predict".to_string();
+    spec.opt_slots = 0;
+    let state = ModelState::init(&spec, &mut rng);
+    let exe = NativeExecution::new(spec.clone()).expect("exe");
+    assert!(exe.supports_quantization());
+    let q = exe.quantize_params(&state.params).expect("panels");
+
+    // binary-ish sparse profile input, like the serving encoder emits
+    let mut x = HostTensor::zeros(&spec.x_shape());
+    let mut sb = SparseBatch::new(spec.m_in);
+    let mut row = Vec::new();
+    for r in 0..spec.batch {
+        row.clear();
+        let mut pos: Vec<usize> = rng.sample_distinct(spec.m_in, 8);
+        pos.sort_unstable();
+        for i in pos {
+            x.data[r * spec.m_in + i] = 1.0;
+            row.push((i as u32, 1.0f32));
+        }
+        sb.push_row(&row);
+    }
+
+    let oracle = exe
+        .predict(&state.params, &BatchInput::Dense(x.clone()))
+        .expect("f32 oracle");
+    simd::set_level(Some(SimdLevel::Scalar));
+    let want = exe
+        .predict_quantized(&q, &BatchInput::Dense(x.clone()))
+        .expect("scalar quantized");
+    for &l in &levels {
+        simd::set_level(Some(l));
+        let dense = exe
+            .predict_quantized(&q, &BatchInput::Dense(x.clone()))
+            .expect("dense quantized");
+        assert_eq!(dense.data, want.data,
+                   "quantized forward diverged at level {}", l.name());
+        let sparse = exe
+            .predict_quantized(&q, &BatchInput::Sparse(sb.clone()))
+            .expect("sparse quantized");
+        assert_eq!(sparse.data, want.data,
+                   "sparse input path diverged at level {}", l.name());
+    }
+    simd::set_level(None);
+
+    // interval propagation against the f64 reference activations
+    let (acts, _) = naive_forward(&state.params, &x.data, spec.batch);
+    let whats: Vec<Option<Vec<f32>>> = q.tensors.iter()
+        .map(|t| match t {
+            QTensor::Q8(p) => Some(p.dequantize()),
+            QTensor::F32(_) => None,
+        })
+        .collect();
+    let layers = state.params.len() / 2;
+    for r in 0..spec.batch {
+        let mut a: Vec<f64> = x.data[r * spec.m_in..(r + 1) * spec.m_in]
+            .iter().map(|&v| v as f64).collect();
+        let mut err = vec![0.0f64; spec.m_in];
+        for l in 0..layers {
+            let QTensor::Q8(p) = &q.tensors[2 * l] else {
+                panic!("weight slot {} not quantized", 2 * l);
+            };
+            let what = whats[2 * l].as_ref().unwrap();
+            let (k, n) = (p.k, p.n);
+            let mut err_out = vec![0.0f64; n];
+            for j in 0..n {
+                let mut e = 0.0f64;
+                for kk in 0..k {
+                    e += a[kk].abs() * p.qerr_bound(kk, j) as f64
+                        + err[kk] * what[kk * n + j].abs() as f64;
+                }
+                // slack for the kernels' f32 rounding (both paths)
+                err_out[j] = e * 1.01 + 1.0e-4;
+            }
+            if l + 1 < layers {
+                a = acts[l][r * n..(r + 1) * n].to_vec();
+                // ReLU is 1-Lipschitz; the f16 round trip of the
+                // quantized path's hidden activations adds half an ulp
+                for (ej, &aj) in err_out.iter_mut().zip(&a) {
+                    *ej += (aj.abs() + *ej) / 2048.0 + 2.0f64.powi(-25);
+                }
+                err = err_out;
+            } else {
+                // softmax: Jacobian row l1 <= 1/2
+                let zbound: f64 = err_out.iter().cloned()
+                    .fold(0.0, f64::max);
+                let pbound = 0.5 * zbound + 1.0e-3;
+                for j in 0..n {
+                    let d = (oracle.data[r * n + j]
+                        - want.data[r * n + j]).abs() as f64;
+                    assert!(d <= pbound,
+                            "row {r} prob {j}: |p_q - p| = {d} exceeds \
+                             propagated bound {pbound}");
+                }
+            }
+        }
+    }
+}
+
+/// The f16 conversion contract on arbitrary finite inputs: round trip
+/// within half an ulp (2^-11 relative) on normals, within half the
+/// subnormal quantum (2^-25) below the normal range, and saturation to
+/// infinity only at the very top of the representable range.
+#[test]
+fn prop_f16_round_trip_within_half_ulp() {
+    check("f16-half-ulp", 0x0F16, 400,
+          |rng| rng.next_u64(),
+          |&seed| {
+              let mut rng = Rng::new(seed);
+              let e = rng.below(28) as i32 - 16;
+              let x = (rng.normal() as f32) * 2.0f32.powi(e);
+              let y = f16_to_f32(f16_from_f32(x));
+              let ax = x.abs();
+              if !y.is_finite() {
+                  return if ax >= 65504.0 {
+                      Ok(()) // saturation at the top of the range
+                  } else {
+                      Err(format!("{x} saturated to {y}"))
+                  };
+              }
+              if y.is_sign_positive() != x.is_sign_positive()
+                  && y != 0.0 {
+                  return Err(format!("{x} flipped sign to {y}"));
+              }
+              let bound =
+                  (ax * 2.0f32.powi(-11)).max(2.0f32.powi(-25));
+              let err = (x - y).abs();
+              if err > bound {
+                  Err(format!("{x} -> {y}: err {err} > {bound}"))
+              } else {
+                  Ok(())
+              }
+          });
+}
+
+/// f16 specials, as the serving tier depends on them: NaN survives
+/// (never collapsing into the inf encoding), infinities and signed
+/// zeros are preserved, and the subnormal floor flushes to zero.
+#[test]
+fn f16_specials_survive_the_serving_round_trip() {
+    assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+    let h = f16_from_f32(f32::from_bits(0x7f80_0001)); // min payload NaN
+    assert!(f16_to_f32(h).is_nan(), "NaN collapsed to {h:#06x}");
+    assert_eq!(f16_to_f32(f16_from_f32(f32::INFINITY)), f32::INFINITY);
+    assert_eq!(f16_to_f32(f16_from_f32(f32::NEG_INFINITY)),
+               f32::NEG_INFINITY);
+    assert!(f16_to_f32(f16_from_f32(-0.0)).is_sign_negative());
+    assert_eq!(f16_to_f32(f16_from_f32(2.0f32.powi(-24))),
+               2.0f32.powi(-24)); // min subnormal is exact
+    assert_eq!(f16_to_f32(f16_from_f32(2.0f32.powi(-26))), 0.0);
+}

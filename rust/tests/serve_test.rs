@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use bloomrec::coordinator::{self, DatasetCache, Method, RunSpec};
 use bloomrec::data::{Scale, PAD};
+use bloomrec::linalg::Precision;
 use bloomrec::runtime::{BatchInput, Execution, HostTensor, Runtime,
                         SparseBatch};
 use bloomrec::serve::{BatcherConfig, RecRequest, ServeConfig, Server};
@@ -82,6 +83,10 @@ fn concurrent_requests_match_direct_computation() {
         Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
         Arc::clone(&f.emb), ServeConfig {
             replicas: 3,
+            // this test asserts bit-equality against the f32 direct
+            // computation, so pin the tier (the int8 CI leg flips the
+            // BLOOMREC_PRECISION default)
+            precision: Precision::F32,
             batcher: BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_millis(1),
@@ -398,6 +403,7 @@ fn pruned_decode_strategy_serves_and_counts() {
         Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
         Arc::clone(&f.emb), ServeConfig {
             replicas: 1,
+            precision: Precision::F32, // bit-equality vs the f32 oracle
             batcher: BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_millis(1),
@@ -458,6 +464,7 @@ fn hot_swap_under_load_is_atomic_and_observable() {
         Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
         Arc::clone(&f.emb), ServeConfig {
             replicas: 2,
+            precision: Precision::F32, // bit-equality vs the f32 oracle
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
@@ -601,6 +608,72 @@ fn hot_swap_drains_recurrent_sessions() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The opt-in int8 tier end to end through the server: quantized
+/// serving is NOT bit-identical to f32 (by contract), but it must be
+/// bit-identical to the direct quantized computation — the tier is
+/// deterministic within itself across batching, replicas, and the
+/// server's sparse input path.
+#[test]
+fn int8_precision_tier_serves_deterministically() {
+    let Some(f) = fixture() else { return };
+    if f.rt.backend_name() != "native" {
+        eprintln!("int8 tier is native-only, skipping on '{}'",
+                  f.rt.backend_name());
+        return;
+    }
+    let server = Server::start(
+        Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
+        Arc::clone(&f.emb), ServeConfig {
+            replicas: 2,
+            precision: Precision::Int8,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        }).expect("server");
+
+    // direct quantized oracle: same panels the router derives (the
+    // quantizer is deterministic), dense input (the server's sparse
+    // gather is bit-identical to the dense path by construction)
+    let exe = f.rt.load_spec(&f.predict).expect("exe");
+    let q = exe.quantize_params(&f.state.params).expect("panels");
+
+    let queries: Vec<Vec<u32>> = f.ds.test.iter().take(20)
+        .map(|e| e.input_items().to_vec())
+        .collect();
+    let rxs: Vec<_> = queries.iter()
+        .map(|qr| server.submit(RecRequest::new(qr.clone(), 5)))
+        .collect();
+    for (items, rx) in queries.iter().zip(rxs) {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "int8 serving failed: {:?}",
+                resp.error);
+        let mut x = HostTensor::zeros(&f.predict.x_shape());
+        f.emb.encode_input(items, &mut x.data[..f.predict.m_in]);
+        let probs = exe.predict_quantized(&q, &BatchInput::Dense(x))
+            .expect("quantized predict");
+        let mut scores = f.emb.decode(&probs.data[..f.predict.m_out]);
+        for &it in items {
+            scores[it as usize] = f32::NEG_INFINITY;
+        }
+        let want = bloomrec::linalg::knn::top_k(&scores, 5);
+        let got: Vec<usize> =
+            resp.items.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, want,
+                   "int8 serving diverged from the direct quantized \
+                    computation for {items:?}");
+        for w in resp.items.windows(2) {
+            assert!(w[0].1 >= w[1].1, "scores must be descending");
+        }
+        for (i, _) in &resp.items {
+            assert!(!items.contains(&(*i as u32)),
+                    "recommended one of the user's own items");
+        }
+    }
+    server.shutdown();
+}
+
 #[test]
 fn shutdown_drains_and_joins() {
     let Some(f) = fixture() else { return };
@@ -624,6 +697,7 @@ fn shutdown_answers_every_admitted_request() {
         Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
         Arc::clone(&f.emb), ServeConfig {
             replicas: 2,
+            precision: Precision::F32, // bit-equality vs the f32 oracle
             batcher: BatcherConfig {
                 max_batch: 64,
                 // long deadline: the backlog is still queued when
@@ -782,6 +856,7 @@ fn swap_rolls_every_replica_under_concurrent_load() {
         Arc::clone(&f.rt), f.predict.clone(), f.state.clone(),
         Arc::clone(&f.emb), ServeConfig {
             replicas: 4,
+            precision: Precision::F32, // bit-equality vs the f32 oracle
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
