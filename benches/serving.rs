@@ -897,6 +897,61 @@ fn load_bench(rt: &Arc<Runtime>,
                   scaling assertion)");
     }
     json.push(format!("  \"load\": [\n{}\n  ]", rows.join(",\n")));
+
+    // Chaos leg: the same harness at 2 replicas with deterministic
+    // fault injection armed (seeded caught flush panics + delays) and
+    // a default request deadline. The point is the cost of surviving:
+    // the ledger invariant must hold exactly (every admitted request
+    // resolves into exactly one of completed/timed_out/failed) and
+    // the row records how much sustained QPS the fault load shaved
+    // off the clean 2-replica run above.
+    println!("\n-- Zipf load harness: chaos leg (2 replicas, \
+              panic:0.02 delay:1ms:0.05, 50ms deadline) --");
+    WorkerPool::set_global_threads(1);
+    let plan = bloomrec::serve::FaultPlan::parse(
+        "panic:0.02,delay:1ms:0.05,seed:11")
+        .expect("fault plan");
+    let server = Server::start(
+        Arc::clone(rt), predict_spec.clone(), state.clone(),
+        Arc::clone(emb),
+        ServeConfig {
+            replicas: 2,
+            default_deadline: Some(Duration::from_millis(50)),
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::ZERO,
+            },
+            ..ServeConfig::default()
+        })
+        .expect("server");
+    let cfg = LoadConfig {
+        concurrency: 16,
+        duration: Duration::from_millis(1500),
+        stateful: true,
+        seed: 7,
+        faults: Some(Arc::new(plan)),
+        ..LoadConfig::default()
+    };
+    let rep = run_load(&server, &pool, &cfg);
+    assert_eq!(rep.completed + rep.timed_out + rep.failed, rep.sent,
+               "chaos ledger leak: {} + {} + {} != {}",
+               rep.completed, rep.timed_out, rep.failed, rep.sent);
+    assert!(rep.completed > 0, "chaos leg completed nothing");
+    let clean_q2 = qps_by_replicas[1].1;
+    println!("   chaos: {:.0} req/s sustained ({:.0} clean), \
+              p99={:.2}ms, completed={} timed_out={} failed={} \
+              restarts={}",
+             rep.qps, clean_q2, rep.p99_ms, rep.completed,
+             rep.timed_out, rep.failed, rep.replica_restarts);
+    json.push(format!(
+        "  \"chaos\": {{\"replicas\": 2, \"qps\": {:.0}, \
+         \"clean_qps\": {clean_q2:.0}, \"p99_ms\": {:.3}, \
+         \"completed\": {}, \"timed_out\": {}, \"failed\": {}, \
+         \"replica_restarts\": {}}}",
+        rep.qps, rep.p99_ms, rep.completed, rep.timed_out, rep.failed,
+        rep.replica_restarts));
+    server.shutdown();
+    WorkerPool::set_global_threads(0);
 }
 
 /// The artifact subsystem at the paper's compression points: pack and

@@ -552,6 +552,20 @@ fn parse_hash_table(j: &Json, payload: &[u8], which: &str)
     Ok(HashMatrix { d, m, k, h })
 }
 
+/// Is this artifact error worth retrying? The serving tier's swap
+/// path backs off and retries *transient* failures (a half-written
+/// payload mid-upload, NFS hiccups) but fails fast on *permanent* ones
+/// (checksum mismatch, schema version, shape conflicts — retrying
+/// those can never succeed). The vendored error shim carries its cause
+/// chain as rendered strings, so classification is by message: any
+/// link that is an OS-level I/O error (std renders those with an
+/// `(os error N)` suffix) or carries the explicit `[transient]` tag
+/// (used by fault injection) marks the error transient.
+pub fn is_transient_error(e: &anyhow::Error) -> bool {
+    e.chain()
+        .any(|m| m.contains("(os error") || m.contains("[transient]"))
+}
+
 /// Load and fully validate an artifact directory. Rejection order is
 /// deliberate — schema version, then declared shapes, then payload
 /// length, then checksums — so nothing is ever decoded from a payload
@@ -881,6 +895,18 @@ mod tests {
         let state = ModelState::init(&spec, &mut rng);
         let hm = HashMatrix::random(96, 24, 3, &mut rng);
         (spec, state, Bloom::new(hm, None))
+    }
+
+    #[test]
+    fn transient_classification_is_message_based() {
+        // OS-level I/O failures retry; validation failures fail fast
+        let missing = load(Path::new("/nonexistent/bloomrec_artifact"))
+            .unwrap_err();
+        assert!(is_transient_error(&missing), "{missing:#}");
+        let tagged = anyhow!("[transient] injected swap failure");
+        assert!(is_transient_error(&tagged));
+        let permanent = anyhow!("payload checksum mismatch");
+        assert!(!is_transient_error(&permanent));
     }
 
     #[test]

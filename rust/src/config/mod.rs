@@ -39,6 +39,10 @@ pub struct Options {
     /// precision tier for `serve` and `pack` (`--precision f32|int8`);
     /// `None` defers to `BLOOMREC_PRECISION` / the f32 default
     pub precision: Option<Precision>,
+    /// default per-request serving deadline in (fractional)
+    /// milliseconds (`--deadline-ms MS`); `None` defers to
+    /// `BLOOMREC_DEADLINE_MS` / no deadline
+    pub deadline_ms: Option<f64>,
 }
 
 impl Default for Options {
@@ -57,6 +61,7 @@ impl Default for Options {
             load: None,
             concurrency: 32,
             precision: None,
+            deadline_ms: None,
         }
     }
 }
@@ -137,6 +142,15 @@ impl Options {
                         bail!("--concurrency needs at least 1");
                     }
                     opts.concurrency = n;
+                }
+                "--deadline-ms" => {
+                    let ms: f64 = req(&mut it, arg)?.parse()
+                        .map_err(|e| anyhow!("bad --deadline-ms: {e}"))?;
+                    if !(ms > 0.0) {
+                        bail!("--deadline-ms needs a positive duration \
+                               (milliseconds)");
+                    }
+                    opts.deadline_ms = Some(ms);
                 }
                 "--precision" => {
                     let v = req(&mut it, arg)?;
@@ -235,6 +249,18 @@ mod tests {
         assert_eq!(o.precision, Some(Precision::F32));
         assert!(Options::parse(&sv(&["--precision", "int4"])).is_err());
         assert!(Options::parse(&sv(&["--precision"])).is_err());
+    }
+
+    #[test]
+    fn parses_deadline_ms() {
+        let (o, _) = Options::parse(&[]).unwrap();
+        assert_eq!(o.deadline_ms, None);
+        let (o, _) =
+            Options::parse(&sv(&["--deadline-ms", "7.5"])).unwrap();
+        assert_eq!(o.deadline_ms, Some(7.5));
+        assert!(Options::parse(&sv(&["--deadline-ms", "0"])).is_err());
+        assert!(Options::parse(&sv(&["--deadline-ms", "nan"])).is_err());
+        assert!(Options::parse(&sv(&["--deadline-ms"])).is_err());
     }
 
     #[test]

@@ -69,6 +69,9 @@ fn print_usage() {
          --replicas N    (serving replicas; default BLOOMREC_REPLICAS)\n       \
          --precision f32|int8  (serve/pack weight precision tier;\n       \
                                 default BLOOMREC_PRECISION or f32)\n       \
+         --deadline-ms MS  (default serving deadline; requests past it\n       \
+                            at checkout answer DeadlineExceeded —\n       \
+                            default BLOOMREC_DEADLINE_MS or none)\n       \
          --load SECS --concurrency N  (Zipf load harness instead of\n       \
                                        the test-split replay)",
         experiments::ALL
@@ -190,6 +193,10 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
     if let Some(p) = opts.precision {
         cfg.precision = p;
     }
+    if let Some(ms) = opts.deadline_ms {
+        cfg.default_deadline =
+            Some(std::time::Duration::from_secs_f64(ms / 1000.0));
+    }
     let server = Server::start(Arc::clone(&rt), predict_spec, state, emb,
                                cfg)?;
 
@@ -223,11 +230,15 @@ fn cmd_serve(opts: &Options, rest: &[String]) -> Result<()> {
         let snap = server.metrics.snapshot();
         println!(
             "load: {:.0} req/s sustained over {:.1}s\n\
-             requests: sent={} completed={} failed={} degraded={}\n\
+             requests: sent={} completed={} timed_out={} failed={} \
+             degraded={}\n\
+             faults: replica_restarts={} deadline_expired={}\n\
              latency ms: p50={:.2} p95={:.2} p99={:.2}\n\
              queue depths at end: {:?}",
             rep.qps, rep.elapsed.as_secs_f64(),
-            rep.sent, rep.completed, rep.failed, rep.degraded,
+            rep.sent, rep.completed, rep.timed_out, rep.failed,
+            rep.degraded,
+            rep.replica_restarts, snap.deadline_expired,
             rep.p50_ms, rep.p95_ms, rep.p99_ms,
             snap.queue_depths,
         );

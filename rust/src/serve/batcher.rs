@@ -66,6 +66,30 @@ impl<T> DynamicBatcher<T> {
         }
         Some(batch)
     }
+
+    /// Like [`next_batch`](Self::next_batch), but splits the checked-out
+    /// batch into `(live, expired)` by the given predicate. This is the
+    /// deadline checkout point of the serving tier: the flush loop
+    /// answers the expired side immediately (`DeadlineExceeded`) and
+    /// only carries the live side into the guarded flush, so one slow
+    /// flush cannot stall jobs that have already missed their deadline.
+    pub fn next_batch_partition<F>(&self, expired: F)
+                                   -> Option<(Vec<T>, Vec<T>)>
+    where
+        F: Fn(&T) -> bool,
+    {
+        let batch = self.next_batch()?;
+        let mut live = Vec::with_capacity(batch.len());
+        let mut dead = Vec::new();
+        for item in batch {
+            if expired(&item) {
+                dead.push(item);
+            } else {
+                live.push(item);
+            }
+        }
+        Some((live, dead))
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +146,24 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_millis(50));
         tx.send(9).unwrap();
         assert_eq!(b.next_batch().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn partition_splits_expired_from_live_at_checkout() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::ZERO,
+        });
+        let (live, dead) =
+            b.next_batch_partition(|v| v % 2 == 0).unwrap();
+        assert_eq!(live, vec![1, 3, 5]);
+        assert_eq!(dead, vec![0, 2, 4]);
+        drop(tx);
+        assert_eq!(b.next_batch_partition(|_| true), None);
     }
 
     #[test]

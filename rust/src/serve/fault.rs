@@ -1,0 +1,403 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of failures the replica flush
+//! loops and the swap path consult at fixed sites: whether iteration
+//! `t` of replica `r` panics is a pure function of
+//! `(seed, site, replica, tick)` through splitmix64 — no RNG state, no
+//! wall clock — so a chaos run replays identically under the same plan
+//! and the same traffic. Injection is **off by default**: a server
+//! without a plan installed never pays more than one atomic load per
+//! flush, and with `BLOOMREC_FAULT` unset every bit-parity serving test
+//! runs unchanged.
+//!
+//! Three failure classes, matching the failure domains the supervisor
+//! (`serve/router.rs`) defends:
+//!
+//! * **caught panics** (`panic:R`) fire *inside* the per-flush
+//!   `catch_unwind` region, after jobs are checked out — the loop
+//!   answers the checked-out jobs with `ServeError::ReplicaPanicked`
+//!   and keeps serving;
+//! * **fatal panics** (`fatal:R`) fire *outside* that region, before
+//!   the next checkout — they escape the flush loop and exercise the
+//!   supervisor's respawn path (`replica_restarts`);
+//! * **flush delays** (`delay:DUR:R`) sleep the flush before it serves,
+//!   pushing queued jobs toward their deadlines (tail-latency chaos);
+//! * **forced swap failures** (`swap_fail:K`) make the next K
+//!   `swap_artifact` validations fail with a transient (retryable)
+//!   error, exercising the backoff/circuit-breaker path.
+//!
+//! Grammar (comma-separated clauses, e.g.
+//! `BLOOMREC_FAULT=panic:0.01,delay:5ms:0.05,swap_fail:3`):
+//!
+//! ```text
+//! panic:R          caught-panic rate per flush, 0.0..=1.0
+//! fatal:R          fatal-panic rate per loop iteration, 0.0..=1.0
+//! delay:DUR:R      sleep DUR (e.g. 5ms, 250us, 1s) at rate R
+//! swap_fail:K      fail the next K swap validations (transient)
+//! seed:N           schedule seed (default 0x5EED)
+//! panic_budget:K   cap total caught panics at K (default unlimited)
+//! fatal_budget:K   cap total fatal panics at K (default unlimited)
+//! ```
+//!
+//! Budgets make exact-count chaos tests deterministic regardless of
+//! traffic shape: `fatal:1.0,fatal_budget:2` restarts a replica exactly
+//! twice and then serves cleanly forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Draw-site tags: distinct sites at the same `(replica, tick)` see
+/// independent draws.
+const SITE_FATAL: u64 = 0x01;
+const SITE_PANIC: u64 = 0x02;
+const SITE_DELAY: u64 = 0x03;
+
+/// splitmix64 finalizer — the same mixer the session-affinity hash
+/// uses; full-period and well-distributed for counter inputs.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A seeded, budgeted fault schedule. Share it as an `Arc` between the
+/// router (which hands it to every replica) and the test/harness that
+/// wants to assert against it.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// schedule seed: same seed + same traffic -> same failures
+    pub seed: u64,
+    /// per-flush caught-panic probability (inside `catch_unwind`)
+    pub panic_rate: f64,
+    /// per-iteration fatal-panic probability (escapes the flush loop)
+    pub fatal_rate: f64,
+    /// injected flush delay duration
+    pub delay: Duration,
+    /// per-flush delay probability
+    pub delay_rate: f64,
+    /// remaining caught panics (`u64::MAX` = unlimited)
+    panic_budget: AtomicU64,
+    /// remaining fatal panics (`u64::MAX` = unlimited)
+    fatal_budget: AtomicU64,
+    /// remaining forced swap-validation failures (0 = none)
+    swap_fails: AtomicU64,
+}
+
+impl Default for FaultPlan {
+    /// An inert plan: every rate zero, no swap failures. Useful as a
+    /// builder base (`FaultPlan { panic_rate: 1.0, ..Default::default() }`).
+    fn default() -> Self {
+        Self {
+            seed: 0x5EED,
+            panic_rate: 0.0,
+            fatal_rate: 0.0,
+            delay: Duration::ZERO,
+            delay_rate: 0.0,
+            panic_budget: AtomicU64::new(u64::MAX),
+            fatal_budget: AtomicU64::new(u64::MAX),
+            swap_fails: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Spend one unit of a budget; `false` once exhausted. (`u64::MAX`
+/// decrements too, but ~2^64 draws exhaust no practical run.)
+fn spend(budget: &AtomicU64) -> bool {
+    budget
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |b| {
+            b.checked_sub(1)
+        })
+        .is_ok()
+}
+
+impl FaultPlan {
+    /// Build a plan with explicit caps on the injected-failure counts
+    /// (`None` = unlimited).
+    pub fn with_budgets(mut self, panics: Option<u64>, fatals: Option<u64>)
+        -> Self {
+        if let Some(p) = panics {
+            self.panic_budget = AtomicU64::new(p);
+        }
+        if let Some(f) = fatals {
+            self.fatal_budget = AtomicU64::new(f);
+        }
+        self
+    }
+
+    /// Arm `k` forced swap-validation failures.
+    pub fn with_swap_fails(self, k: u64) -> Self {
+        self.swap_fails.store(k, Ordering::SeqCst);
+        self
+    }
+
+    /// The uniform draw in `[0, 1)` for a site: a pure function of
+    /// `(seed, site, replica, tick)` — replayable by construction.
+    fn draw(&self, site: u64, replica: u64, tick: u64) -> f64 {
+        let z = splitmix64(
+            self.seed ^ (site << 56) ^ (replica << 40) ^ tick);
+        // top 53 bits -> f64 mantissa: uniform on [0, 1)
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Should iteration `tick` of replica `replica` die fatally
+    /// (escaping the flush loop into the supervisor)? Consumes one
+    /// unit of the fatal budget when it fires.
+    pub fn should_fatal(&self, replica: usize, tick: u64) -> bool {
+        self.fatal_rate > 0.0
+            && self.draw(SITE_FATAL, replica as u64, tick)
+                < self.fatal_rate
+            && spend(&self.fatal_budget)
+    }
+
+    /// Should this flush panic inside the guarded region (answered as
+    /// `ReplicaPanicked`, loop keeps serving)? Consumes one unit of
+    /// the panic budget when it fires.
+    pub fn should_panic(&self, replica: usize, tick: u64) -> bool {
+        self.panic_rate > 0.0
+            && self.draw(SITE_PANIC, replica as u64, tick)
+                < self.panic_rate
+            && spend(&self.panic_budget)
+    }
+
+    /// The artificial delay (if any) this flush sleeps before serving.
+    pub fn flush_delay(&self, replica: usize, tick: u64)
+        -> Option<Duration> {
+        (self.delay_rate > 0.0
+            && !self.delay.is_zero()
+            && self.draw(SITE_DELAY, replica as u64, tick)
+                < self.delay_rate)
+            .then_some(self.delay)
+    }
+
+    /// Consume one forced swap failure; `true` means the caller must
+    /// fail this swap validation with a transient error.
+    pub fn take_swap_failure(&self) -> bool {
+        self.swap_fails
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |k| {
+                (k > 0).then(|| k - 1)
+            })
+            .is_ok()
+    }
+
+    /// Forced swap failures still armed.
+    pub fn swap_fails_remaining(&self) -> u64 {
+        self.swap_fails.load(Ordering::SeqCst)
+    }
+
+    /// Parse the `BLOOMREC_FAULT` clause grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let mut parts = clause.split(':');
+            let key = parts.next().unwrap_or("");
+            match key {
+                "panic" => plan.panic_rate = rate(&mut parts, clause)?,
+                "fatal" => plan.fatal_rate = rate(&mut parts, clause)?,
+                "delay" => {
+                    let dur = parts.next().ok_or_else(|| {
+                        anyhow!("delay clause '{clause}' needs \
+                                 delay:DUR:R")
+                    })?;
+                    plan.delay = parse_duration(dur)?;
+                    plan.delay_rate = rate(&mut parts, clause)?;
+                }
+                "swap_fail" => {
+                    plan.swap_fails =
+                        AtomicU64::new(count(&mut parts, clause)?);
+                }
+                "seed" => plan.seed = count(&mut parts, clause)?,
+                "panic_budget" => {
+                    plan.panic_budget =
+                        AtomicU64::new(count(&mut parts, clause)?);
+                }
+                "fatal_budget" => {
+                    plan.fatal_budget =
+                        AtomicU64::new(count(&mut parts, clause)?);
+                }
+                other => bail!(
+                    "unknown fault clause '{other}' in '{spec}' (want \
+                     panic:R, fatal:R, delay:DUR:R, swap_fail:K, \
+                     seed:N, panic_budget:K, fatal_budget:K)"),
+            }
+            if let Some(extra) = parts.next() {
+                bail!("trailing ':{extra}' in fault clause '{clause}'");
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan `BLOOMREC_FAULT` describes, if any. A malformed value
+    /// is *ignored with a warning* rather than failing server startup —
+    /// fault injection must never be the fault.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var("BLOOMREC_FAULT").ok()?;
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "0" || spec == "off" {
+            return None;
+        }
+        match FaultPlan::parse(spec) {
+            Ok(plan) => Some(Arc::new(plan)),
+            Err(e) => {
+                crate::warn_!("ignoring BLOOMREC_FAULT='{spec}': {e}");
+                None
+            }
+        }
+    }
+}
+
+fn rate<'a, I: Iterator<Item = &'a str>>(parts: &mut I, clause: &str)
+    -> Result<f64> {
+    let v = parts
+        .next()
+        .ok_or_else(|| anyhow!("fault clause '{clause}' needs a rate"))?;
+    let r: f64 = v
+        .parse()
+        .map_err(|e| anyhow!("bad rate '{v}' in '{clause}': {e}"))?;
+    if !(0.0..=1.0).contains(&r) {
+        bail!("rate {r} in '{clause}' outside 0.0..=1.0");
+    }
+    Ok(r)
+}
+
+fn count<'a, I: Iterator<Item = &'a str>>(parts: &mut I, clause: &str)
+    -> Result<u64> {
+    let v = parts
+        .next()
+        .ok_or_else(|| anyhow!("fault clause '{clause}' needs a count"))?;
+    v.parse()
+        .map_err(|e| anyhow!("bad count '{v}' in '{clause}': {e}"))
+}
+
+/// `5ms`, `250us`, `1s`, or a bare number (milliseconds).
+fn parse_duration(s: &str) -> Result<Duration> {
+    let (num, scale_us) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000.0)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1.0)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000.0)
+    } else {
+        (s, 1_000.0)
+    };
+    let v: f64 = num
+        .parse()
+        .map_err(|e| anyhow!("bad duration '{s}': {e}"))?;
+    if v < 0.0 {
+        bail!("negative duration '{s}'");
+    }
+    Ok(Duration::from_micros((v * scale_us) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_all_clauses() {
+        let p = FaultPlan::parse(
+            "panic:0.01, delay:5ms:0.05, swap_fail:3, fatal:0.5, \
+             seed:42, panic_budget:7, fatal_budget:2")
+            .unwrap();
+        assert_eq!(p.panic_rate, 0.01);
+        assert_eq!(p.fatal_rate, 0.5);
+        assert_eq!(p.delay, Duration::from_millis(5));
+        assert_eq!(p.delay_rate, 0.05);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.swap_fails_remaining(), 3);
+        assert_eq!(p.panic_budget.load(Ordering::SeqCst), 7);
+        assert_eq!(p.fatal_budget.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn grammar_rejects_garbage() {
+        assert!(FaultPlan::parse("explode:1.0").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic:1.5").is_err());
+        assert!(FaultPlan::parse("panic:-0.1").is_err());
+        assert!(FaultPlan::parse("delay:5ms").is_err());
+        assert!(FaultPlan::parse("delay:-2ms:0.5").is_err());
+        assert!(FaultPlan::parse("swap_fail:many").is_err());
+        assert!(FaultPlan::parse("panic:0.1:extra").is_err());
+        // empty spec is a valid no-op plan
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p.panic_rate, 0.0);
+        assert_eq!(p.swap_fails_remaining(), 0);
+    }
+
+    #[test]
+    fn durations_parse_with_unit_suffixes() {
+        assert_eq!(parse_duration("5ms").unwrap(),
+                   Duration::from_millis(5));
+        assert_eq!(parse_duration("250us").unwrap(),
+                   Duration::from_micros(250));
+        assert_eq!(parse_duration("1s").unwrap(),
+                   Duration::from_secs(1));
+        assert_eq!(parse_duration("2.5").unwrap(),
+                   Duration::from_micros(2500));
+        assert!(parse_duration("fast").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_site_independent() {
+        let a = FaultPlan::parse("panic:0.5,seed:7").unwrap();
+        let b = FaultPlan::parse("panic:0.5,seed:7").unwrap();
+        // same seed -> identical schedule
+        for tick in 0..200 {
+            assert_eq!(a.should_panic(0, tick), b.should_panic(0, tick));
+        }
+        // distinct sites at the same (replica, tick) draw independently
+        let c = FaultPlan::parse("panic:0.5,fatal:0.5,seed:7").unwrap();
+        let mut differ = false;
+        for tick in 0..200 {
+            if c.should_panic(1, tick) != c.should_fatal(1, tick) {
+                differ = true;
+            }
+        }
+        assert!(differ, "sites should not be perfectly correlated");
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let p = FaultPlan::parse("panic:0.25,seed:3").unwrap();
+        let fired = (0..10_000)
+            .filter(|&t| p.should_panic(0, t))
+            .count();
+        assert!((2000..3000).contains(&fired),
+                "panic:0.25 fired {fired}/10000");
+        // rate 0 never fires, rate 1 always fires
+        let zero = FaultPlan::default();
+        assert!(!(0..100).any(|t| zero.should_panic(0, t)));
+        let one = FaultPlan::parse("fatal:1.0").unwrap();
+        assert!((0..100).all(|t| one.should_fatal(0, t)));
+    }
+
+    #[test]
+    fn budgets_cap_exact_counts() {
+        let p = FaultPlan::parse("fatal:1.0,fatal_budget:2").unwrap();
+        let fired = (0..1000)
+            .filter(|&t| p.should_fatal(0, t))
+            .count();
+        assert_eq!(fired, 2, "budget must cap fatal panics exactly");
+        // exhausted budget stays exhausted
+        assert!(!p.should_fatal(0, 99_999));
+    }
+
+    #[test]
+    fn swap_failures_burn_down() {
+        let p = FaultPlan::default().with_swap_fails(2);
+        assert!(p.take_swap_failure());
+        assert!(p.take_swap_failure());
+        assert!(!p.take_swap_failure(), "only K swaps fail");
+        assert_eq!(p.swap_fails_remaining(), 0);
+        // default plan injects nothing
+        assert!(!FaultPlan::default().take_swap_failure());
+    }
+}

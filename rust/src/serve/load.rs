@@ -23,14 +23,22 @@
 //! next click, so offered load is `concurrency / (latency + think)` —
 //! the classic saturation-throughput harness.
 //!
-//! Every client counts sent/completed/failed from the responses it
-//! receives; under the serving tier's zero-drop contract
-//! `completed == sent` and `failed == 0` unless flushes error.
+//! Every client buckets each response into exactly one of
+//! completed / timed-out / failed, so the tier's zero-drop contract is
+//! directly checkable from the report:
+//! `completed + timed_out + failed == sent` always, and in a healthy
+//! run without deadlines `completed == sent`. [`LoadConfig::faults`]
+//! arms a deterministic [`FaultPlan`] for the duration of the run —
+//! the chaos legs drive injected flush panics, delays, and replica
+//! restarts through the same counters ([`LoadReport::replica_restarts`]
+//! reports the restarts the run provoked).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::server::{RecRequest, Server};
+use super::fault::FaultPlan;
+use super::server::{RecRequest, ServeError, Server};
 use crate::data::zipf::ZipfStream;
 use crate::util::rng::Rng;
 
@@ -55,6 +63,10 @@ pub struct LoadConfig {
     pub seed: u64,
     /// emit a JSON-line metrics snapshot to stdout at this interval
     pub snapshot_every: Option<Duration>,
+    /// fault plan installed on the server for the duration of the run
+    /// (chaos legs); `None` leaves whatever the server already has —
+    /// `Some` is installed at start and *cleared* when the run ends
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for LoadConfig {
@@ -69,21 +81,31 @@ impl Default for LoadConfig {
             top_n: 10,
             seed: 1,
             snapshot_every: None,
+            faults: None,
         }
     }
 }
 
 /// What the harness measured, combining client-side counts with the
-/// server's histogram percentiles.
+/// server's histogram percentiles. The first four counters are
+/// disjoint: `completed + timed_out + failed == sent`.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     pub sent: u64,
+    /// responses that arrived without an error
     pub completed: u64,
-    /// responses carrying a [`super::ServeError`] (flush failures) or
-    /// dropped channels — zero in a healthy run
+    /// responses answered [`ServeError::DeadlineExceeded`]
+    pub timed_out: u64,
+    /// responses carrying any other [`super::ServeError`] (flush
+    /// failures, caught panics, shutdown refusals) or a dropped
+    /// channel — zero in a healthy run
     pub failed: u64,
-    /// responses flagged degraded by admission control
+    /// responses flagged degraded by admission control (overlaps the
+    /// buckets above: a degraded request still completes or fails)
     pub degraded: u64,
+    /// replica flush-loop restarts provoked during this run (delta of
+    /// the server's `replica_restarts` counter)
+    pub replica_restarts: u64,
     pub elapsed: Duration,
     /// completed requests per second over the measured window
     pub qps: f64,
@@ -99,8 +121,13 @@ pub struct LoadReport {
 pub fn run_load(server: &Server, pool: &[Vec<u32>], cfg: &LoadConfig)
     -> LoadReport {
     assert!(!pool.is_empty(), "load harness needs a session pool");
+    if let Some(plan) = &cfg.faults {
+        server.install_faults(Some(Arc::clone(plan)));
+    }
+    let restarts0 = server.metrics.snapshot().replica_restarts;
     let sent = AtomicU64::new(0);
     let completed = AtomicU64::new(0);
+    let timed_out = AtomicU64::new(0);
     let failed = AtomicU64::new(0);
     let degraded = AtomicU64::new(0);
     let t0 = Instant::now();
@@ -108,8 +135,8 @@ pub fn run_load(server: &Server, pool: &[Vec<u32>], cfg: &LoadConfig)
     let users = ZipfStream::new(cfg.users.max(1), cfg.zipf_s);
     std::thread::scope(|s| {
         for c in 0..cfg.concurrency.max(1) {
-            let (sent, completed, failed, degraded) =
-                (&sent, &completed, &failed, &degraded);
+            let (sent, completed, timed_out, failed, degraded) =
+                (&sent, &completed, &timed_out, &failed, &degraded);
             s.spawn(move || {
                 let mut rng = Rng::new(
                     cfg.seed ^ (c as u64 + 1)
@@ -117,14 +144,26 @@ pub fn run_load(server: &Server, pool: &[Vec<u32>], cfg: &LoadConfig)
                 let mut roundtrip = |req: RecRequest| {
                     sent.fetch_add(1, Ordering::Relaxed);
                     match server.submit(req).recv() {
+                        // exactly one bucket per response — the report
+                        // invariant the chaos legs assert
                         Ok(resp) => {
-                            completed.fetch_add(1, Ordering::Relaxed);
                             if resp.degraded {
                                 degraded.fetch_add(1,
                                                    Ordering::Relaxed);
                             }
-                            if !resp.is_ok() {
-                                failed.fetch_add(1, Ordering::Relaxed);
+                            match &resp.error {
+                                None => {
+                                    completed.fetch_add(
+                                        1, Ordering::Relaxed);
+                                }
+                                Some(ServeError::DeadlineExceeded) => {
+                                    timed_out.fetch_add(
+                                        1, Ordering::Relaxed);
+                                }
+                                Some(_) => {
+                                    failed.fetch_add(
+                                        1, Ordering::Relaxed);
+                                }
                             }
                         }
                         // a dropped response channel would break the
@@ -170,14 +209,20 @@ pub fn run_load(server: &Server, pool: &[Vec<u32>], cfg: &LoadConfig)
             });
         }
     });
+    if cfg.faults.is_some() {
+        // the plan was scoped to this run; hand the server back clean
+        server.install_faults(None);
+    }
     let elapsed = t0.elapsed();
     let snap = server.metrics.snapshot();
     let completed = completed.into_inner();
     LoadReport {
         sent: sent.into_inner(),
         completed,
+        timed_out: timed_out.into_inner(),
         failed: failed.into_inner(),
         degraded: degraded.into_inner(),
+        replica_restarts: snap.replica_restarts - restarts0,
         elapsed,
         qps: completed as f64 / elapsed.as_secs_f64().max(1e-9),
         p50_ms: snap.p50_ms,

@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use super::lock_ok;
 use crate::util::json::{obj, Json};
 
 /// Number of histogram buckets: with four buckets per octave the top
@@ -166,6 +167,13 @@ struct Inner {
     swaps_applied: u64,
     swaps_rejected: u64,
     sessions_drained: u64,
+    // fault-tolerance counters (supervision / deadline / breaker
+    // observability)
+    replica_restarts: u64,
+    deadline_expired: u64,
+    swap_retries: u64,
+    breaker_trips: u64,
+    queue_full_rejections: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -205,8 +213,26 @@ pub struct MetricsSnapshot {
     pub swaps_rejected: u64,
     /// recurrent session states dropped at swap points, summed over
     /// all applied swaps (each drained session reopens fresh on the
-    /// new model at its next click)
+    /// new model at its next click) — replica restarts drain their
+    /// shard too and count here as well
     pub sessions_drained: u64,
+    /// replica flush loops respawned by the supervisor after a fatal
+    /// (escaped) panic; each restart reinstalls the replica's
+    /// last-installed generation under a fresh session epoch
+    pub replica_restarts: u64,
+    /// requests answered `ServeError::DeadlineExceeded` because their
+    /// deadline passed before their batch was checked out (answered,
+    /// never dropped; disjoint from `failed_responses`)
+    pub deadline_expired: u64,
+    /// transient swap-validation failures retried with backoff (one
+    /// tick per extra attempt inside a `swap_artifact` call)
+    pub swap_retries: u64,
+    /// times the swap circuit breaker tripped after K consecutive
+    /// failed swap calls, pinning the serving generation
+    pub breaker_trips: u64,
+    /// `try_submit` admissions shed with `ServeError::QueueFull`
+    /// (bounded backpressure — these requests were never admitted)
+    pub queue_full_rejections: u64,
 }
 
 impl ServeMetrics {
@@ -229,7 +255,7 @@ impl ServeMetrics {
     /// fill fraction. Called once per flush (latencies are recorded
     /// per job via [`ServeMetrics::record_latency_us`]).
     pub fn record_flush(&self, n_jobs: usize, fill: f64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_ok(&self.inner);
         inner.requests += n_jobs as u64;
         inner.batches += 1;
         inner.batch_fill += fill;
@@ -238,17 +264,48 @@ impl ServeMetrics {
     /// Count stateful requests degraded to the stateless path by the
     /// router's admission control.
     pub fn record_degraded(&self, n: u64) {
-        self.inner.lock().unwrap().degraded_responses += n;
+        lock_ok(&self.inner).degraded_responses += n;
     }
 
-    /// Count requests answered with an error response (flush failure).
+    /// Count requests answered with an error response (flush failure
+    /// or caught replica panic).
     pub fn record_failed(&self, n: u64) {
-        self.inner.lock().unwrap().failed_responses += n;
+        lock_ok(&self.inner).failed_responses += n;
+    }
+
+    /// Count requests answered `DeadlineExceeded` at batch checkout.
+    pub fn record_deadline_expired(&self, n: u64) {
+        lock_ok(&self.inner).deadline_expired += n;
+    }
+
+    /// Count one supervisor respawn of a replica flush loop; the
+    /// restart drained `drained` recurrent sessions from its shard.
+    pub fn record_restart(&self, drained: usize) {
+        let mut inner = lock_ok(&self.inner);
+        inner.replica_restarts += 1;
+        inner.sessions_drained += drained as u64;
+    }
+
+    /// Count one retried swap-validation attempt (transient failure,
+    /// backed off and reattempted inside the same `swap_artifact`).
+    pub fn record_swap_retry(&self) {
+        lock_ok(&self.inner).swap_retries += 1;
+    }
+
+    /// Count one circuit-breaker trip (K consecutive failed swap
+    /// calls; the serving generation is pinned until a reset).
+    pub fn record_breaker_trip(&self) {
+        lock_ok(&self.inner).breaker_trips += 1;
+    }
+
+    /// Count one `try_submit` rejection (`ServeError::QueueFull`).
+    pub fn record_queue_full(&self) {
+        lock_ok(&self.inner).queue_full_rejections += 1;
     }
 
     /// Register the per-replica queue-depth gauges (router startup).
     pub fn register_queue_gauges(&self, gauges: Vec<Arc<AtomicUsize>>) {
-        *self.gauges.lock().unwrap() = gauges;
+        *lock_ok(&self.gauges) = gauges;
     }
 
     /// Record one flush's decode work: `scored` items evaluated out of
@@ -257,7 +314,7 @@ impl ServeMetrics {
     /// of those degenerated back to the exhaustive sweep.
     pub fn record_decode(&self, scored: u64, catalog: u64, pruned: u64,
                          fallbacks: u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_ok(&self.inner);
         inner.decode_scored += scored;
         inner.decode_catalog += catalog;
         inner.pruned_requests += pruned;
@@ -268,7 +325,7 @@ impl ServeMetrics {
     /// sessions they drained; rejected swaps only bump the rejection
     /// counter (nothing was installed, nothing drained).
     pub fn record_swap(&self, applied: bool, drained: usize) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_ok(&self.inner);
         if applied {
             inner.swaps_applied += 1;
             inner.sessions_drained += drained as u64;
@@ -278,12 +335,9 @@ impl ServeMetrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_ok(&self.inner);
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
-        let queue_depths: Vec<usize> = self
-            .gauges
-            .lock()
-            .unwrap()
+        let queue_depths: Vec<usize> = lock_ok(&self.gauges)
             .iter()
             .map(|g| g.load(Ordering::SeqCst))
             .collect();
@@ -311,6 +365,11 @@ impl ServeMetrics {
             swaps_applied: inner.swaps_applied,
             swaps_rejected: inner.swaps_rejected,
             sessions_drained: inner.sessions_drained,
+            replica_restarts: inner.replica_restarts,
+            deadline_expired: inner.deadline_expired,
+            swap_retries: inner.swap_retries,
+            breaker_trips: inner.breaker_trips,
+            queue_full_rejections: inner.queue_full_rejections,
         }
     }
 }
@@ -343,6 +402,14 @@ impl MetricsSnapshot {
             ("swaps_rejected", Json::from(self.swaps_rejected as usize)),
             ("sessions_drained",
              Json::from(self.sessions_drained as usize)),
+            ("replica_restarts",
+             Json::from(self.replica_restarts as usize)),
+            ("deadline_expired",
+             Json::from(self.deadline_expired as usize)),
+            ("swap_retries", Json::from(self.swap_retries as usize)),
+            ("breaker_trips", Json::from(self.breaker_trips as usize)),
+            ("queue_full_rejections",
+             Json::from(self.queue_full_rejections as usize)),
         ])
     }
 
@@ -472,6 +539,53 @@ mod tests {
     }
 
     #[test]
+    fn fault_counters_accumulate() {
+        let m = ServeMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.replica_restarts, s.deadline_expired, s.swap_retries,
+             s.breaker_trips, s.queue_full_rejections),
+            (0, 0, 0, 0, 0));
+        m.record_restart(3);
+        m.record_restart(0);
+        m.record_deadline_expired(5);
+        m.record_swap_retry();
+        m.record_swap_retry();
+        m.record_breaker_trip();
+        m.record_queue_full();
+        let s = m.snapshot();
+        assert_eq!(s.replica_restarts, 2);
+        // restarts drain their shard into the shared drain counter
+        assert_eq!(s.sessions_drained, 3);
+        assert_eq!(s.deadline_expired, 5);
+        assert_eq!(s.swap_retries, 2);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.queue_full_rejections, 1);
+        // deadline expiries are disjoint from flush failures
+        assert_eq!(s.failed_responses, 0);
+    }
+
+    #[test]
+    fn poisoned_metrics_lock_recovers() {
+        // a replica panic can poison the counter mutex mid-increment;
+        // recording and snapshots must keep working (counters are
+        // plain u64 adds — no invariant spans the poisoned section)
+        let m = Arc::new(ServeMetrics::new());
+        m.record_failed(1);
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.inner.lock().unwrap();
+            panic!("poison the metrics lock");
+        })
+        .join();
+        m.record_failed(2);
+        m.record_restart(0);
+        let s = m.snapshot();
+        assert_eq!(s.failed_responses, 3);
+        assert_eq!(s.replica_restarts, 1);
+    }
+
+    #[test]
     fn snapshot_json_line_round_trips() {
         let m = ServeMetrics::new();
         m.record_latency_us(1500.0);
@@ -487,5 +601,12 @@ mod tests {
         assert_eq!(
             v.get("queue_depths").unwrap().as_arr().unwrap().len(), 1);
         assert!(v.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        // the fault-tolerance counters ride the same line
+        for key in ["replica_restarts", "deadline_expired",
+                    "swap_retries", "breaker_trips",
+                    "queue_full_rejections"] {
+            assert_eq!(v.get(key).unwrap().as_usize().unwrap(), 0,
+                       "{key} missing or nonzero");
+        }
     }
 }

@@ -44,18 +44,70 @@
 //! Models roll without downtime: [`Server::swap_artifact`] installs a
 //! validated `bloomrec pack` artifact across every replica (see the
 //! [`server`] and [`router`] module docs), with swap counters in
-//! [`ServeMetrics`]. The [`load`] module drives the whole tier with
-//! Zipf think-time click traffic at configurable concurrency.
+//! [`ServeMetrics`]. Swap validation failures retry with exponential
+//! backoff when transient, and a trip-after-K circuit breaker pins the
+//! old generation instead of wedging on a persistently bad artifact.
+//! The [`load`] module drives the whole tier with Zipf think-time
+//! click traffic at configurable concurrency.
+//!
+//! The tier is *supervised*: each replica's per-flush work runs under
+//! `std::panic::catch_unwind` (a caught panic answers the flush's jobs
+//! with [`ServeError::ReplicaPanicked`] and the loop keeps serving),
+//! and a panic that escapes the flush loop is respawned in place from
+//! the replica's last-installed generation (`replica_restarts`).
+//! Requests may carry a deadline ([`RecRequest::with_timeout`] /
+//! `ServeConfig::default_deadline` / `BLOOMREC_DEADLINE_MS`): jobs
+//! past their deadline at batch checkout are answered immediately with
+//! [`ServeError::DeadlineExceeded`] instead of stalling the flush —
+//! zero-drop either way. The [`fault`] module injects deterministic
+//! failures (seeded panics, delays, forced swap failures; off unless
+//! `BLOOMREC_FAULT` or [`LoadConfig::faults`] arms a plan) so chaos
+//! tests can assert all of the above with exact counters.
 
 pub mod batcher;
+pub mod fault;
 pub mod load;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use fault::FaultPlan;
 pub use load::{run_load, LoadConfig, LoadReport};
 pub use metrics::{LatencyHistogram, MetricsSnapshot, ServeMetrics};
 pub use router::Router;
 pub use server::{RecRequest, RecResponse, ServeConfig, ServeError,
                  Server, SwapReport};
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock,
+                RwLockReadGuard, RwLockWriteGuard};
+
+// Poison-tolerant lock acquisition for the serving tier. A panic on a
+// replica thread (real or fault-injected) poisons any lock it held;
+// with a supervisor that *keeps serving* after panics, the standard
+// `unwrap()` would turn one caught panic into a permanent outage.
+// Recovering the guard is safe for every lock in this tier:
+//
+// * generation slots hold an immutable `Arc<ModelGeneration>` — the
+//   install is a single pointer store, so a panicked writer cannot
+//   leave a half-written generation behind;
+// * session caches are HashMap insert/remove with no cross-entry
+//   invariant — the worst case is a checked-out entry that never came
+//   back, and the restart path bumps the epoch anyway, dropping
+//   anything stale;
+// * metrics are plain counter increments.
+
+/// `lock()` that survives poisoning (see the note above).
+pub(crate) fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `read()` that survives poisoning (see the note above).
+pub(crate) fn read_ok<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `write()` that survives poisoning (see the note above).
+pub(crate) fn write_ok<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}

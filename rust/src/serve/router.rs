@@ -26,8 +26,9 @@
 //!   `degraded_responses` counter ticks. Overload bends latency and
 //!   freshness (one windowed prediction instead of a session resume);
 //!   it never loses a request. The hard reject path
-//!   ([`Router::try_submit`] against `ServeConfig::queue_cap`) stays
-//!   opt-in for callers that prefer backpressure.
+//!   ([`Router::try_submit`] against `ServeConfig::queue_cap`) answers
+//!   [`super::ServeError::QueueFull`] for callers that prefer
+//!   backpressure.
 //!
 //! Hot swaps roll through the router: one
 //! [`Router::swap_artifact`] call validates and compiles the packed
@@ -36,22 +37,73 @@
 //! locks). Every flush pins one generation, so no response ever mixes
 //! weights; during the roll different replicas may briefly serve
 //! different generations — a rolling deploy in one call, reported as
-//! one aggregated [`SwapReport`].
+//! one aggregated [`SwapReport`]. Transient validation failures retry
+//! with exponential backoff; K consecutive failed calls trip a circuit
+//! breaker that pins the old generation (`SwapReport::tripped`) until
+//! `Router::reset_swap_breaker` ([`super::Server::reset_swap_breaker`]
+//! on the façade).
+//!
+//! # Supervision
+//!
+//! Each replica worker is a two-ring supervisor around the flush work
+//! (the tier's failure-domain state machine):
+//!
+//! ```text
+//!  worker thread ──▶ outer catch_unwind(flush_loop) ── Ok ──▶ join
+//!        ▲                     │ panic escaped
+//!        │                     ▼
+//!        │          restart_replica: bump session epoch, reinstall
+//!        └────────── last generation under the new epoch,
+//!                    count replica_restarts, loop again
+//!
+//!  flush_loop, per tick:
+//!    1. fault site FATAL  (before checkout — no jobs are lost)
+//!    2. checkout: next_batch_partition(expired)
+//!       └─ expired side answered DeadlineExceeded immediately
+//!    3. pin generation; fault site DELAY
+//!    4. inner catch_unwind { fault site PANIC; serve_flush }
+//!       ├─ Ok(Ok)   responses sent
+//!       ├─ Ok(Err)  jobs answered BatchFailed
+//!       └─ panic    jobs answered ReplicaPanicked, loop continues
+//! ```
+//!
+//! A panic caught by the *inner* ring answers exactly the jobs that
+//! were checked out and keeps the loop serving. A panic that escapes
+//! the inner ring (the fault-injected "fatal" site, or a defect in the
+//! answer path itself) unwinds to the outer ring, which respawns the
+//! flush loop *in place*: the replica's last-installed
+//! `ModelGeneration` is reinstalled under a bumped session epoch —
+//! the epoch bump drains the shard's session states (a state that was
+//! checked out when the loop died must never be resumed) and, crucially,
+//! the *reinstall* keeps future put-backs passing the epoch check; a
+//! restart that only bumped the epoch would silently stop session
+//! caching forever. Queue and channel survive the restart, so queued
+//! jobs are served by the respawned loop — zero-drop holds across
+//! restarts. All supervisor-side locks go through the poison-tolerant
+//! helpers in [`super`] (`lock_ok`/`read_ok`/`write_ok`): the panic
+//! that killed the loop may have poisoned them, and the safety argument
+//! for recovering the guards is documented on those helpers.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize,
+                        Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::batcher::DynamicBatcher;
+use super::fault::FaultPlan;
 use super::metrics::ServeMetrics;
-use super::server::{fail_jobs, serve_flush, Job, ModelGeneration,
-                    RecRequest, RecResponse, ServeConfig, SessionCache,
+use super::server::{expire_jobs, fail_jobs, panic_jobs, refuse_job,
+                    serve_flush, Job, ModelGeneration, RecRequest,
+                    RecResponse, ServeConfig, ServeError, SessionCache,
                     SwapReport};
+use super::{lock_ok, read_ok, write_ok};
+use crate::bloom::DecodeStrategy;
 use crate::embedding::Embedding;
 use crate::linalg::Precision;
 use crate::model::ModelState;
@@ -96,16 +148,178 @@ fn hash_session(id: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Render a panic payload for logs and `ReplicaPanicked` responses.
+/// `panic!` with a literal carries `&str`; with formatting, `String`;
+/// anything else gets a placeholder.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// One serving replica: its queue, flush-loop thread, session-cache
-/// shard, queue-depth gauge, and model-generation slot.
+/// shard, queue-depth gauge, and model-generation slot. The sender and
+/// join handle sit behind mutexes so [`Router::shutdown_now`] works
+/// through a shared reference (clients, swappers, and shutdown may
+/// race from different threads).
 struct Replica {
-    tx: Option<Sender<Job>>,
-    worker: Option<JoinHandle<()>>,
+    tx: Mutex<Option<Sender<Job>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
     sessions: Arc<Mutex<SessionCache>>,
     /// jobs queued or in flight on this replica (gauge, registered
     /// with [`ServeMetrics`]; also the admission-control signal)
     depth: Arc<AtomicUsize>,
     current: Arc<RwLock<Arc<ModelGeneration>>>,
+}
+
+/// Everything a replica worker needs across restarts — shared with the
+/// router so swaps, fault installs, and shutdown reach a live loop.
+struct ReplicaCtx {
+    idx: usize,
+    current: Arc<RwLock<Arc<ModelGeneration>>>,
+    sessions: Arc<Mutex<SessionCache>>,
+    depth: Arc<AtomicUsize>,
+    in_flight: Arc<AtomicUsize>,
+    metrics: Arc<ServeMetrics>,
+    faults: Arc<RwLock<Option<Arc<FaultPlan>>>>,
+    /// set by shutdown before the queues close; injection sites check
+    /// it so a rate-1.0 fault plan cannot livelock the drain
+    draining: Arc<AtomicBool>,
+    decode: Option<DecodeStrategy>,
+    /// monotone flush-tick counter, the fault schedule's time axis;
+    /// survives restarts so injected schedules never repeat a tick
+    ticks: AtomicU64,
+}
+
+/// Decrements the depth gauge and the global in-flight count when the
+/// checked-out jobs leave the flush — on success, failure, *or* a
+/// panic unwinding past the flush (the drop runs during unwind, so
+/// accounting and `try_submit` admission stay exact across restarts).
+struct AcctGuard<'a> {
+    depth: &'a AtomicUsize,
+    in_flight: &'a AtomicUsize,
+    n: usize,
+}
+
+impl Drop for AcctGuard<'_> {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(self.n, Ordering::SeqCst);
+        self.in_flight.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// The flush loop proper: runs until the replica's queue is closed and
+/// drained. Runs under the worker's outer `catch_unwind`; a panic that
+/// escapes this function is a *fatal* replica fault and goes through
+/// [`restart_replica`].
+fn flush_loop(ctx: &ReplicaCtx, batcher: &DynamicBatcher<Job>) {
+    loop {
+        let tick = ctx.ticks.fetch_add(1, Ordering::Relaxed);
+        let plan = read_ok(&ctx.faults).clone();
+        let draining = ctx.draining.load(Ordering::SeqCst);
+        // fault site FATAL: before checkout, so the panic escapes with
+        // no jobs in hand — nothing to answer, nothing lost
+        if !draining {
+            if let Some(p) = &plan {
+                if p.should_fatal(ctx.idx, tick) {
+                    panic!("injected fatal replica fault (replica {}, \
+                            tick {tick})", ctx.idx);
+                }
+            }
+        }
+        let Some((live, expired)) =
+            batcher.next_batch_partition(Job::expired)
+        else {
+            return; // queue closed and drained: clean exit
+        };
+        let _acct = AcctGuard {
+            depth: &ctx.depth,
+            in_flight: &ctx.in_flight,
+            n: live.len() + expired.len(),
+        };
+        // the deadline checkout point: jobs that missed their deadline
+        // while queued are answered now instead of riding the flush
+        if !expired.is_empty() {
+            expire_jobs(&expired, &ctx.metrics);
+        }
+        if live.is_empty() {
+            continue;
+        }
+        // pin the model generation ONCE for the whole flush (the read
+        // guard is held only for this Arc clone): every job below runs
+        // on the pinned generation, and a concurrent swap takes effect
+        // at the next flush boundary
+        let model_gen = Arc::clone(&*read_ok(&ctx.current));
+        // fault site DELAY: models a slow flush (GC pause, page fault
+        // storm) so deadline expiry has something to observe
+        if !draining {
+            if let Some(p) = &plan {
+                if let Some(d) = p.flush_delay(ctx.idx, tick) {
+                    std::thread::sleep(d);
+                }
+            }
+        }
+        // inner supervision ring: the flush work itself. A panic here
+        // answers exactly the checked-out jobs and the loop keeps
+        // serving — one bad batch is not a replica outage.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if !draining {
+                if let Some(p) = &plan {
+                    if p.should_panic(ctx.idx, tick) {
+                        panic!("injected flush panic (replica {}, \
+                                tick {tick})", ctx.idx);
+                    }
+                }
+            }
+            serve_flush(&model_gen, &live, &ctx.metrics, &ctx.sessions,
+                        ctx.decode)
+        }));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                crate::error!("replica {} flush failed: {e}", ctx.idx);
+                // zero-drop contract: every admitted job still gets a
+                // response
+                fail_jobs(&live, &ctx.metrics, &e);
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                crate::error!(
+                    "replica {} flush panicked (caught): {msg}",
+                    ctx.idx);
+                panic_jobs(&live, &ctx.metrics, &msg);
+            }
+        }
+    }
+}
+
+/// Respawn path for a panic that escaped the flush loop. Takes the
+/// same locks in the same order as the swap roll (generation write
+/// lock, then session lock) so a restart racing a rolling swap cannot
+/// deadlock; both sites use poison-tolerant acquisition because the
+/// dead loop may have poisoned either lock on its way down.
+fn restart_replica(ctx: &ReplicaCtx, msg: &str) {
+    let mut slot = write_ok(&ctx.current);
+    let mut cache = lock_ok(&ctx.sessions);
+    // drain the shard: a hidden state checked out by the dead loop
+    // must never be resumed (epoch check fences stragglers too)
+    let (epoch, drained) = cache.advance_epoch();
+    // reinstall the last-installed generation UNDER THE NEW EPOCH.
+    // Bumping the epoch without reinstalling would leave the slot's
+    // generation writing under a dead epoch — every future session
+    // put-back would fail the epoch check and the shard would silently
+    // never cache again.
+    let fresh = Arc::new(slot.with_epoch(epoch));
+    *slot = fresh;
+    ctx.metrics.record_restart(drained);
+    crate::warn_!(
+        "replica {} flush loop died ({msg}); respawned on generation \
+         '{}' at epoch {epoch} ({drained} sessions drained)",
+        ctx.idx, slot.spec.name);
 }
 
 /// Replica-sharded dispatch: owns the replicas, routes requests,
@@ -128,6 +342,18 @@ pub struct Router {
     /// serving precision tier; swapped-in generations are built at the
     /// same tier the server started with
     precision: Precision,
+    /// deadline stamped onto requests that do not carry their own
+    default_deadline: Option<Duration>,
+    /// live fault-injection plan (shared with every replica worker and
+    /// consulted by the swap path); `None` injects nothing
+    faults: Arc<RwLock<Option<Arc<FaultPlan>>>>,
+    draining: Arc<AtomicBool>,
+    swap_retries: usize,
+    swap_backoff: Duration,
+    breaker_threshold: u32,
+    /// consecutive failed `swap_artifact` calls; at `breaker_threshold`
+    /// the breaker opens and calls pin the current generation
+    breaker_fails: AtomicU32,
 }
 
 impl Router {
@@ -142,6 +368,8 @@ impl Router {
         let state = Arc::new(state);
         let metrics = Arc::new(ServeMetrics::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let faults = Arc::new(RwLock::new(cfg.faults.clone()));
+        let draining = Arc::new(AtomicBool::new(false));
         let n = cfg.replicas.max(1);
         let mut replicas = Vec::with_capacity(n);
         let mut gauges = Vec::with_capacity(n);
@@ -159,51 +387,41 @@ impl Router {
                     epoch: 0,
                 })));
             gauges.push(Arc::clone(&depth));
-            let worker = {
-                let current = Arc::clone(&current);
-                let metrics = Arc::clone(&metrics);
-                let in_flight = Arc::clone(&in_flight);
-                let sessions = Arc::clone(&sessions);
-                let depth = Arc::clone(&depth);
-                let batcher_cfg = cfg.batcher;
-                let decode = cfg.decode;
-                std::thread::Builder::new()
-                    .name(format!("bloomrec-replica-{r}"))
-                    .spawn(move || {
-                        // the batcher is owned by this thread — no
-                        // shared receiver lock on the flush path
-                        let batcher =
-                            DynamicBatcher::new(rx, batcher_cfg);
-                        while let Some(jobs) = batcher.next_batch() {
-                            // pin the model generation ONCE for the
-                            // whole flush (the read guard is held only
-                            // for this Arc clone): every job below
-                            // runs on the pinned generation, and a
-                            // concurrent swap takes effect at the next
-                            // flush boundary
-                            let model_gen =
-                                Arc::clone(&*current.read().unwrap());
-                            if let Err(e) = serve_flush(
-                                &model_gen, &jobs, &metrics, &sessions,
-                                decode)
-                            {
-                                crate::error!(
-                                    "replica {r} flush failed: {e}");
-                                // zero-drop contract: every admitted
-                                // job still gets a response
-                                fail_jobs(&jobs, &metrics, &e);
-                            }
-                            depth.fetch_sub(jobs.len(),
-                                            Ordering::SeqCst);
-                            in_flight.fetch_sub(jobs.len(),
-                                                Ordering::SeqCst);
-                        }
-                    })
-                    .expect("spawn replica worker")
+            let ctx = ReplicaCtx {
+                idx: r,
+                current: Arc::clone(&current),
+                sessions: Arc::clone(&sessions),
+                depth: Arc::clone(&depth),
+                in_flight: Arc::clone(&in_flight),
+                metrics: Arc::clone(&metrics),
+                faults: Arc::clone(&faults),
+                draining: Arc::clone(&draining),
+                decode: cfg.decode,
+                ticks: AtomicU64::new(0),
             };
+            let batcher_cfg = cfg.batcher;
+            let worker = std::thread::Builder::new()
+                .name(format!("bloomrec-replica-{r}"))
+                .spawn(move || {
+                    // the batcher is owned by this thread — no shared
+                    // receiver lock on the flush path. The outer
+                    // supervision ring: respawn the flush loop in
+                    // place until it exits cleanly (queue closed).
+                    let batcher = DynamicBatcher::new(rx, batcher_cfg);
+                    loop {
+                        match catch_unwind(AssertUnwindSafe(
+                            || flush_loop(&ctx, &batcher)))
+                        {
+                            Ok(()) => break,
+                            Err(payload) => restart_replica(
+                                &ctx, &panic_message(payload.as_ref())),
+                        }
+                    }
+                })
+                .expect("spawn replica worker");
             replicas.push(Replica {
-                tx: Some(tx),
-                worker: Some(worker),
+                tx: Mutex::new(Some(tx)),
+                worker: Mutex::new(Some(worker)),
                 sessions,
                 depth,
                 current,
@@ -219,6 +437,13 @@ impl Router {
             rr: AtomicUsize::new(0),
             rt,
             precision: cfg.precision,
+            default_deadline: cfg.default_deadline,
+            faults,
+            draining,
+            swap_retries: cfg.swap_retries,
+            swap_backoff: cfg.swap_backoff,
+            breaker_threshold: cfg.breaker_threshold,
+            breaker_fails: AtomicU32::new(0),
         })
     }
 
@@ -249,7 +474,7 @@ impl Router {
     pub fn session_counts(&self) -> Vec<usize> {
         self.replicas
             .iter()
-            .map(|r| r.sessions.lock().unwrap().len())
+            .map(|r| lock_ok(&r.sessions).len())
             .collect()
     }
 
@@ -259,7 +484,7 @@ impl Router {
     pub fn session_replica(&self, id: u64) -> Option<usize> {
         self.replicas
             .iter()
-            .position(|r| r.sessions.lock().unwrap().contains(id))
+            .position(|r| lock_ok(&r.sessions).contains(id))
     }
 
     pub fn pending(&self) -> usize {
@@ -268,6 +493,19 @@ impl Router {
 
     pub fn session_count(&self) -> usize {
         self.session_counts().iter().sum()
+    }
+
+    /// Install (or clear, with `None`) the fault-injection plan every
+    /// replica and the swap path consult. Takes effect from the next
+    /// flush tick / swap call.
+    pub(crate) fn install_faults(&self, plan: Option<Arc<FaultPlan>>) {
+        *write_ok(&self.faults) = plan;
+    }
+
+    /// Re-arm the swap circuit breaker (see
+    /// `ServeConfig::breaker_threshold`).
+    pub(crate) fn reset_swap_breaker(&self) {
+        self.breaker_fails.store(0, Ordering::SeqCst);
     }
 
     /// Shortest-queue scan with a rotating start offset: equal depths
@@ -313,19 +551,34 @@ impl Router {
         if degraded {
             self.metrics.record_degraded(1);
         }
+        // answer-by deadline, resolved at admission: the request's own
+        // beats the server default
+        let deadline = request.deadline.or_else(
+            || self.default_deadline.map(|d| Instant::now() + d));
         let rep = &self.replicas[idx];
         rep.depth.fetch_add(1, Ordering::SeqCst);
         let (respond, rx) = mpsc::channel();
-        rep.tx
-            .as_ref()
-            .expect("router running")
-            .send(Job {
-                request,
-                enqueued: Instant::now(),
-                respond,
-                degraded,
-            })
-            .expect("replica worker alive");
+        let job = Job {
+            request,
+            enqueued: Instant::now(),
+            respond,
+            degraded,
+            deadline,
+        };
+        let refused = {
+            let tx = lock_ok(&rep.tx);
+            match tx.as_ref() {
+                Some(tx) => tx.send(job).err().map(|e| e.0),
+                None => Some(job),
+            }
+        };
+        if let Some(job) = refused {
+            // admissions closed (shutdown raced this submit): undo the
+            // accounting and answer immediately — zero-drop either way
+            rep.depth.fetch_sub(1, Ordering::SeqCst);
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            refuse_job(job, &self.metrics);
+        }
         rx
     }
 
@@ -340,40 +593,106 @@ impl Router {
     /// [`super::Server::try_submit`]): optimistic admission — reserve
     /// a slot, back out if over the cap.
     pub fn try_submit(&self, request: RecRequest)
-        -> Option<Receiver<RecResponse>> {
+        -> Result<Receiver<RecResponse>, ServeError> {
         if self.in_flight.fetch_add(1, Ordering::SeqCst)
             >= self.queue_cap
         {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
-            return None;
+            self.metrics.record_queue_full();
+            return Err(ServeError::QueueFull);
         }
-        Some(self.enqueue(request))
+        Ok(self.enqueue(request))
     }
 
     /// Validate once, then roll the new generation across every
     /// replica (see [`super::Server::swap_artifact`] for the full
-    /// contract).
+    /// contract). Transient validation failures (I/O-level — see
+    /// `crate::artifact::is_transient_error`) retry up to
+    /// `swap_retries` times with exponential backoff from
+    /// `swap_backoff`; `breaker_threshold` consecutive failed *calls*
+    /// open the circuit breaker, after which calls pin the current
+    /// generation and report `tripped` without attempting.
     pub fn swap_artifact(&self, dir: &Path) -> Result<SwapReport> {
-        match self.validate_and_swap(dir) {
-            Ok(report) => {
-                self.metrics.record_swap(true, report.sessions_drained);
-                crate::info!(
-                    "hot-swapped artifact {} in across {} replicas \
-                     ({}; {} sessions drained)",
-                    dir.display(), self.replicas.len(),
-                    report.spec_name, report.sessions_drained);
-                Ok(report)
-            }
-            Err(e) => {
-                self.metrics.record_swap(false, 0);
-                crate::warn_!("rejected artifact swap from {}: {e}",
-                              dir.display());
-                Err(e)
+        if self.breaker_threshold > 0
+            && self.breaker_fails.load(Ordering::SeqCst)
+                >= self.breaker_threshold
+        {
+            // breaker open: the safe generation stays pinned. Replica 0
+            // speaks for the fleet (outside a mid-roll instant all
+            // replicas serve the same generation).
+            let cur =
+                Arc::clone(&*read_ok(&self.replicas[0].current));
+            crate::warn_!(
+                "swap breaker open ({} consecutive failures): pinning \
+                 generation '{}', ignoring artifact {}",
+                self.breaker_fails.load(Ordering::SeqCst),
+                cur.spec.name, dir.display());
+            return Ok(SwapReport {
+                spec_name: cur.spec.name.clone(),
+                sessions_drained: 0,
+                git_sha: String::new(),
+                tripped: true,
+            });
+        }
+        let mut attempt = 0usize;
+        loop {
+            match self.validate_and_swap(dir) {
+                Ok(report) => {
+                    self.breaker_fails.store(0, Ordering::SeqCst);
+                    self.metrics
+                        .record_swap(true, report.sessions_drained);
+                    crate::info!(
+                        "hot-swapped artifact {} in across {} replicas \
+                         ({}; {} sessions drained)",
+                        dir.display(), self.replicas.len(),
+                        report.spec_name, report.sessions_drained);
+                    return Ok(report);
+                }
+                Err(e) if attempt < self.swap_retries
+                    && crate::artifact::is_transient_error(&e) =>
+                {
+                    attempt += 1;
+                    self.metrics.record_swap_retry();
+                    let backoff = self.swap_backoff
+                        * (1u32 << (attempt - 1).min(16));
+                    crate::warn_!(
+                        "transient swap failure from {} (attempt \
+                         {attempt}/{}): {e:#}; retrying in {backoff:?}",
+                        dir.display(), self.swap_retries);
+                    std::thread::sleep(backoff);
+                }
+                Err(e) => {
+                    // one rejection per failed CALL, however many
+                    // retries it burned
+                    self.metrics.record_swap(false, 0);
+                    let fails = self.breaker_fails
+                        .fetch_add(1, Ordering::SeqCst) + 1;
+                    if self.breaker_threshold > 0
+                        && fails == self.breaker_threshold
+                    {
+                        self.metrics.record_breaker_trip();
+                        crate::warn_!(
+                            "swap circuit breaker tripped after \
+                             {fails} consecutive failed swap calls");
+                    }
+                    crate::warn_!(
+                        "rejected artifact swap from {}: {e}",
+                        dir.display());
+                    return Err(e);
+                }
             }
         }
     }
 
     fn validate_and_swap(&self, dir: &Path) -> Result<SwapReport> {
+        // fault site SWAP_FAIL: a forced validation failure, tagged
+        // transient so the retry/breaker machinery is what gets tested
+        if let Some(plan) = read_ok(&self.faults).as_ref() {
+            if plan.take_swap_failure() {
+                bail!("[transient] injected swap-validation failure \
+                       for {}", dir.display());
+            }
+        }
         let loaded = crate::artifact::load(dir)?;
         let exe = self.rt.load_spec(&loaded.spec)?;
         let emb = match loaded.embedding() {
@@ -384,7 +703,7 @@ impl Router {
                 // replicas share one embedding, so replica 0 speaks
                 // for the fleet)
                 let cur = Arc::clone(
-                    &*self.replicas[0].current.read().unwrap());
+                    &*read_ok(&self.replicas[0].current));
                 if cur.emb.m_in() != loaded.spec.m_in
                     || cur.emb.m_out() != loaded.spec.m_out
                 {
@@ -413,13 +732,16 @@ impl Router {
         // write lock, then session lock) cannot deadlock with its
         // flush loop: the loop holds the generation read guard only
         // for the per-flush Arc clone and takes the session lock
-        // separately, never both at once. Each replica's install is
-        // atomic at its flush boundary; the roll across replicas is
-        // sequential (a one-call rolling deploy).
+        // separately, never both at once — and the restart path takes
+        // the same two locks in the same order as this roll, so a swap
+        // racing a replica restart serializes instead of deadlocking.
+        // Each replica's install is atomic at its flush boundary; the
+        // roll across replicas is sequential (a one-call rolling
+        // deploy).
         let mut drained = 0usize;
         for rep in &self.replicas {
-            let mut slot = rep.current.write().unwrap();
-            let mut cache = rep.sessions.lock().unwrap();
+            let mut slot = write_ok(&rep.current);
+            let mut cache = lock_ok(&rep.sessions);
             let (epoch, n) = cache.advance_epoch();
             drained += n;
             *slot = Arc::new(ModelGeneration {
@@ -431,19 +753,30 @@ impl Router {
                 epoch,
             });
         }
-        Ok(SwapReport { spec_name, sessions_drained: drained, git_sha })
+        Ok(SwapReport {
+            spec_name,
+            sessions_drained: drained,
+            git_sha,
+            tripped: false,
+        })
     }
 
     /// Close every replica's queue and join the flush loops. Workers
     /// drain their queues on the way out — every job admitted before
     /// this call is answered (normally, or error-marked if its flush
-    /// fails) before its worker joins. Idempotent.
-    pub(crate) fn shutdown_now(&mut self) {
-        for rep in &mut self.replicas {
-            drop(rep.tx.take());
+    /// fails) before its worker joins; anything racing past the close
+    /// is answered `ShuttingDown` at submit. Sets the draining flag
+    /// first so fault injection stands down (a rate-1.0 plan must not
+    /// livelock the drain). Idempotent, and callable through a shared
+    /// reference so shutdown can race swaps and submits.
+    pub(crate) fn shutdown_now(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        for rep in &self.replicas {
+            drop(lock_ok(&rep.tx).take());
         }
-        for rep in &mut self.replicas {
-            if let Some(w) = rep.worker.take() {
+        for rep in &self.replicas {
+            let worker = lock_ok(&rep.worker).take();
+            if let Some(w) = worker {
                 let _ = w.join();
             }
         }
@@ -480,5 +813,16 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn panic_payloads_render() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("literal");
+        assert_eq!(panic_message(p.as_ref()), "literal");
+        let p: Box<dyn std::any::Any + Send> =
+            Box::new(String::from("formatted"));
+        assert_eq!(panic_message(p.as_ref()), "formatted");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
     }
 }

@@ -36,7 +36,11 @@
 //! serving — parallelism only moves wall-clock.
 //!
 //! Every admitted request is answered: a flush that fails sends each of
-//! its jobs an error-marked [`RecResponse`] (see [`ServeError`]), and
+//! its jobs an error-marked [`RecResponse`] (see [`ServeError`]), a
+//! flush that *panics* answers its checked-out jobs with
+//! [`ServeError::ReplicaPanicked`] (the replica keeps serving — see the
+//! supervision notes in `serve/router.rs`), a job whose deadline passed
+//! before checkout is answered [`ServeError::DeadlineExceeded`], and
 //! [`Server::shutdown`] drains the queues — workers answer everything
 //! still enqueued before they join.
 //!
@@ -60,6 +64,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::batcher::BatcherConfig;
+use super::fault::FaultPlan;
+use super::lock_ok;
 use super::metrics::ServeMetrics;
 use super::router::Router;
 use crate::bloom::{DecodeScratch, DecodeStrategy, HashMatrix};
@@ -83,12 +89,18 @@ pub struct RecRequest {
     /// session must be submitted sequentially — the state is checked out
     /// while a request is in flight.
     pub session: Option<u64>,
+    /// Answer-by deadline: a job still queued when its deadline passes
+    /// is answered [`ServeError::DeadlineExceeded`] at the next batch
+    /// checkout instead of stalling behind a slow flush (answered,
+    /// never dropped). `None` falls back to
+    /// `ServeConfig::default_deadline` (itself `None` = no deadline).
+    pub deadline: Option<Instant>,
 }
 
 impl RecRequest {
     /// Stateless request over a full item set / click history.
     pub fn new(user_items: Vec<u32>, top_n: usize) -> RecRequest {
-        RecRequest { user_items, top_n, session: None }
+        RecRequest { user_items, top_n, session: None, deadline: None }
     }
 
     /// Session-continuation request (recurrent serving): `new_items`
@@ -97,7 +109,23 @@ impl RecRequest {
     /// clicks stay excluded from the top-N as well.
     pub fn session(id: u64, new_items: Vec<u32>, top_n: usize)
         -> RecRequest {
-        RecRequest { user_items: new_items, top_n, session: Some(id) }
+        RecRequest {
+            user_items: new_items,
+            top_n,
+            session: Some(id),
+            deadline: None,
+        }
+    }
+
+    /// Set an absolute answer-by deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> RecRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set a deadline relative to now (the usual client spelling).
+    pub fn with_timeout(self, timeout: Duration) -> RecRequest {
+        self.with_deadline(Instant::now() + timeout)
     }
 }
 
@@ -110,6 +138,19 @@ pub enum ServeError {
     /// The flush this request was batched into failed; the message is
     /// the underlying serve error.
     BatchFailed(String),
+    /// The flush this request was batched into *panicked*; the
+    /// replica caught the panic, answered the flush's jobs with this,
+    /// and kept serving. The message is the panic payload.
+    ReplicaPanicked(String),
+    /// The request's deadline passed before its batch was checked
+    /// out; it was answered immediately instead of being served late.
+    DeadlineExceeded,
+    /// `try_submit` rejection: the tier already has
+    /// `ServeConfig::queue_cap` requests in flight. The request was
+    /// never admitted — retry, shed, or fall back to `submit`.
+    QueueFull,
+    /// The request arrived after `shutdown()` closed admissions.
+    ShuttingDown,
 }
 
 impl std::fmt::Display for ServeError {
@@ -117,6 +158,18 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::BatchFailed(msg) => {
                 write!(f, "serve batch failed: {msg}")
+            }
+            ServeError::ReplicaPanicked(msg) => {
+                write!(f, "serving replica panicked: {msg}")
+            }
+            ServeError::DeadlineExceeded => {
+                write!(f, "request deadline exceeded before serving")
+            }
+            ServeError::QueueFull => {
+                write!(f, "admission queue full (queue_cap reached)")
+            }
+            ServeError::ShuttingDown => {
+                write!(f, "server is shutting down")
             }
         }
     }
@@ -174,6 +227,25 @@ pub struct ServeConfig {
     /// property-tested error bound; families without a quantized tier
     /// (recurrent) fall back to f32 with a warning.
     pub precision: Precision,
+    /// Deadline stamped onto requests that do not carry their own
+    /// (`BLOOMREC_DEADLINE_MS` / `--deadline-ms` set the default;
+    /// `None` = requests wait indefinitely). Measured from admission.
+    pub default_deadline: Option<Duration>,
+    /// Extra [`Server::swap_artifact`] attempts after a *transient*
+    /// validation failure (I/O-level errors — see
+    /// `crate::artifact::is_transient_error`). Permanent failures
+    /// (checksum, schema, shape) never retry.
+    pub swap_retries: usize,
+    /// Backoff before the first swap retry; doubles per attempt.
+    pub swap_backoff: Duration,
+    /// Consecutive failed `swap_artifact` *calls* that trip the swap
+    /// circuit breaker: further calls pin the current generation and
+    /// return `SwapReport { tripped: true, .. }` without attempting,
+    /// until [`Server::reset_swap_breaker`]. `0` disables the breaker.
+    pub breaker_threshold: u32,
+    /// Deterministic fault-injection plan (`BLOOMREC_FAULT` sets the
+    /// default; `None` — the production state — injects nothing).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -181,6 +253,13 @@ fn env_usize(name: &str, default: usize) -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// `Some(Duration)` from a fractional-milliseconds env var; unset,
+/// unparsable, or non-positive values mean "no deadline".
+fn env_deadline(name: &str) -> Option<Duration> {
+    let ms: f64 = std::env::var(name).ok()?.trim().parse().ok()?;
+    (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1000.0))
 }
 
 impl Default for ServeConfig {
@@ -192,6 +271,11 @@ impl Default for ServeConfig {
             batcher: BatcherConfig::default(),
             decode: None,
             precision: Precision::from_env(),
+            default_deadline: env_deadline("BLOOMREC_DEADLINE_MS"),
+            swap_retries: 2,
+            swap_backoff: Duration::from_millis(25),
+            breaker_threshold: 3,
+            faults: FaultPlan::from_env(),
         }
     }
 }
@@ -203,6 +287,17 @@ pub(crate) struct Job {
     /// set by the router when admission control stripped this
     /// request's session id (stateful -> stateless downgrade)
     pub(crate) degraded: bool,
+    /// answer-by deadline resolved at admission (the request's own, or
+    /// `ServeConfig::default_deadline` from the enqueue instant)
+    pub(crate) deadline: Option<Instant>,
+}
+
+impl Job {
+    /// Past its deadline? (The checkout test — evaluated when the
+    /// batcher hands the flush loop a batch.)
+    pub(crate) fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
 }
 
 /// One immutable model generation: everything a flush needs — the
@@ -227,6 +322,23 @@ pub(crate) struct ModelGeneration {
     pub(crate) epoch: u64,
 }
 
+impl ModelGeneration {
+    /// The same generation under a new session epoch — what the
+    /// supervisor reinstalls when it respawns a replica (weights
+    /// unchanged; put-backs from the flush that died are fenced off by
+    /// the epoch check).
+    pub(crate) fn with_epoch(&self, epoch: u64) -> ModelGeneration {
+        ModelGeneration {
+            exe: Arc::clone(&self.exe),
+            spec: self.spec.clone(),
+            state: Arc::clone(&self.state),
+            emb: Arc::clone(&self.emb),
+            quant: self.quant.clone(),
+            epoch,
+        }
+    }
+}
+
 /// Report returned by a successful [`Server::swap_artifact`].
 #[derive(Clone, Debug)]
 pub struct SwapReport {
@@ -238,6 +350,12 @@ pub struct SwapReport {
     pub sessions_drained: usize,
     /// git sha stamped into the artifact at pack time
     pub git_sha: String,
+    /// `true` when the swap circuit breaker is tripped: nothing was
+    /// attempted or installed — `spec_name`/`git_sha` describe the
+    /// *pinned* generation still serving. Reset with
+    /// [`Server::reset_swap_breaker`] once the artifact source is
+    /// healthy again.
+    pub tripped: bool,
 }
 
 /// One live session: its recurrent hidden state plus the items clicked
@@ -398,10 +516,12 @@ impl Server {
     }
 
     /// Bounded submit: admit the request only while fewer than
-    /// `ServeConfig::queue_cap` requests are in flight; returns `None`
-    /// (shed load, caller retries or degrades) when the queue is full.
+    /// `ServeConfig::queue_cap` requests are in flight; returns
+    /// `Err(ServeError::QueueFull)` (shed load, counted in
+    /// `queue_full_rejections` — caller retries or degrades) when the
+    /// queue is full.
     pub fn try_submit(&self, request: RecRequest)
-        -> Option<mpsc::Receiver<RecResponse>> {
+        -> Result<mpsc::Receiver<RecResponse>, ServeError> {
         self.router.try_submit(request)
     }
 
@@ -450,11 +570,29 @@ impl Server {
         self.router.swap_artifact(dir)
     }
 
+    /// Re-arm the swap circuit breaker after it tripped (K consecutive
+    /// failed swap calls — see `ServeConfig::breaker_threshold`). The
+    /// next `swap_artifact` attempts validation again.
+    pub fn reset_swap_breaker(&self) {
+        self.router.reset_swap_breaker();
+    }
+
+    /// Install (or clear, with `None`) the deterministic
+    /// fault-injection plan the replicas and the swap path consult.
+    /// Takes effect from the next flush/swap; `None` restores the
+    /// production no-injection state.
+    pub fn install_faults(&self, plan: Option<Arc<FaultPlan>>) {
+        self.router.install_faults(plan);
+    }
+
     /// Stop accepting requests and join the replicas. The queues drain
     /// first: every request admitted before shutdown receives its
     /// response (computed, or error-marked if its flush fails) before
-    /// the workers join.
-    pub fn shutdown(mut self) {
+    /// the workers join. Idempotent, and callable through a shared
+    /// reference so concurrent clients/swappers can race it safely —
+    /// anything submitted after admissions close is answered
+    /// immediately with [`ServeError::ShuttingDown`].
+    pub fn shutdown(&self) {
         self.router.shutdown_now();
     }
 }
@@ -513,6 +651,58 @@ pub(crate) fn fail_jobs(jobs: &[Job], metrics: &ServeMetrics,
     metrics.record_failed(jobs.len() as u64);
 }
 
+/// Answer every job of a flush that *panicked* (caught at the flush
+/// boundary by the replica's `catch_unwind`) — same zero-drop shape as
+/// [`fail_jobs`], but typed so clients can tell a panic from an error
+/// return. Counted into `failed_responses`.
+pub(crate) fn panic_jobs(jobs: &[Job], metrics: &ServeMetrics,
+                         panic_msg: &str) {
+    for job in jobs {
+        let latency = job.enqueued.elapsed();
+        metrics.record_latency_us(latency.as_micros() as f64);
+        let _ = job.respond.send(RecResponse {
+            items: Vec::new(),
+            latency,
+            degraded: job.degraded,
+            error: Some(ServeError::ReplicaPanicked(
+                panic_msg.to_string())),
+        });
+    }
+    metrics.record_failed(jobs.len() as u64);
+}
+
+/// Answer every past-deadline job dropped at batch checkout with an
+/// immediate [`ServeError::DeadlineExceeded`] response. Counted into
+/// `deadline_expired` (disjoint from `failed_responses`: the tier
+/// worked, the request just waited too long).
+pub(crate) fn expire_jobs(jobs: &[Job], metrics: &ServeMetrics) {
+    for job in jobs {
+        let latency = job.enqueued.elapsed();
+        metrics.record_latency_us(latency.as_micros() as f64);
+        let _ = job.respond.send(RecResponse {
+            items: Vec::new(),
+            latency,
+            degraded: job.degraded,
+            error: Some(ServeError::DeadlineExceeded),
+        });
+    }
+    metrics.record_deadline_expired(jobs.len() as u64);
+}
+
+/// Answer a request that could not be admitted because the tier is
+/// shutting down (admissions closed between routing and enqueue).
+pub(crate) fn refuse_job(job: Job, metrics: &ServeMetrics) {
+    let latency = job.enqueued.elapsed();
+    metrics.record_latency_us(latency.as_micros() as f64);
+    let _ = job.respond.send(RecResponse {
+        items: Vec::new(),
+        latency,
+        degraded: job.degraded,
+        error: Some(ServeError::ShuttingDown),
+    });
+    metrics.record_failed(1);
+}
+
 /// Check each job's session out of the cache (or open a fresh one).
 /// Callers guarantee the flush holds at most one job per session id
 /// (duplicates are rerouted to the sequential path, which chains
@@ -525,7 +715,7 @@ fn checkout_sessions(exe: &dyn Execution, jobs: &[Job],
         let entry = match job
             .request
             .session
-            .and_then(|id| sessions.lock().unwrap().take(id))
+            .and_then(|id| lock_ok(sessions).take(id))
         {
             Some(entry) => entry,
             None => SessionEntry {
@@ -633,10 +823,7 @@ fn serve_flush_recurrent(model_gen: &ModelGeneration, jobs: &[Job],
         entries.iter().map(|e| e.seen.clone()).collect();
     for (job, entry) in jobs.iter().zip(entries) {
         if let Some(id) = job.request.session {
-            sessions
-                .lock()
-                .unwrap()
-                .put(id, entry, model_gen.epoch);
+            lock_ok(sessions).put(id, entry, model_gen.epoch);
         }
     }
     respond(jobs, &out.data, spec, emb, metrics,
@@ -667,7 +854,7 @@ fn serve_flush_recurrent_sequential(
         let mut entry = match job
             .request
             .session
-            .and_then(|id| sessions.lock().unwrap().take(id))
+            .and_then(|id| lock_ok(sessions).take(id))
         {
             Some(entry) => entry,
             None => SessionEntry {
@@ -696,10 +883,7 @@ fn serve_flush_recurrent_sequential(
             .copy_from_slice(&out.data[..m_out]);
         excludes.push(entry.seen.clone());
         if let Some(id) = job.request.session {
-            sessions
-                .lock()
-                .unwrap()
-                .put(id, entry, model_gen.epoch);
+            lock_ok(sessions).put(id, entry, model_gen.epoch);
         }
     }
     respond(jobs, &probs, spec, emb, metrics,
